@@ -1,0 +1,94 @@
+"""AOT compiler: lower every Layer-2 entry point to HLO text + a manifest.
+
+Run once at build time (``make artifacts``); the rust coordinator loads the
+results via PJRT and never imports Python.
+
+Interchange format is **HLO text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+    artifacts/<preset>_<entry>_b<batch>.hlo.txt
+    artifacts/manifest.json   — entry/preset/batch → file, arg shapes/dtypes,
+                                output shapes, plus the preset hyperparameters
+                                (the rust config system reads these back).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(fn, arg_specs) -> tuple[str, list]:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    out_tree = jax.eval_shape(fn, *arg_specs)
+    outs = jax.tree_util.tree_leaves(out_tree)
+    return to_hlo_text(lowered), [_spec_json(o) for o in outs]
+
+
+def build(out_dir: str, presets=None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "presets": {}, "entries": []}
+    for pname, p in model.PRESETS.items():
+        if presets and pname not in presets:
+            continue
+        manifest["presets"][pname] = {
+            "channels": p.channels, "kernel": p.kernel, "pad": p.pad,
+            "height": p.height, "width": p.width, "n_res": p.n_res,
+            "block": p.block, "t_final": p.t_final, "h": p.h,
+            "n_classes": p.n_classes, "fc_in": p.fc_in,
+            "batches": list(p.batches),
+        }
+        for batch in p.batches:
+            for ename, (fn, specs) in model.entry_specs(p, batch).items():
+                fname = f"{pname}_{ename}_b{batch}.hlo.txt"
+                text, outs = lower_entry(fn, specs)
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                manifest["entries"].append({
+                    "preset": pname, "entry": ename, "batch": batch,
+                    "file": fname,
+                    "inputs": [_spec_json(s) for s in specs],
+                    "outputs": outs,
+                })
+                if verbose:
+                    print(f"  lowered {fname}  ({len(text) // 1024} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--preset", action="append", help="limit to preset(s)")
+    args = ap.parse_args()
+    build(args.out, presets=args.preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracle.
+
+Public surface:
+- ``fused_matmul``: tiled MXU matmul with fused bias/ReLU/residual epilogue.
+- ``conv``: conv layers as im2col + fused_matmul (residual_step, block_fwd).
+- ``softmax_xent``: fused classifier-head loss.
+- ``ref``: the correctness contract every kernel is tested against.
+"""
+
+from . import conv, fused_matmul, ref, softmax_xent  # noqa: F401

@@ -1,0 +1,102 @@
+"""Convolution layers as im2col + the fused MXU matmul kernel.
+
+The paper computes each residual layer with a CuDNN convolution kernel; on TPU
+the same computation is a patch-matrix product (DESIGN.md §Hardware-Adaptation):
+
+    conv(u, W)[b, o, y, x] = patches[b·H·W + y·W + x, :] @ W_mat[:, o]
+
+``patches`` is the im2col matrix [B·H·W, Cin·k·k] extracted with
+``lax.conv_general_dilated_patches`` (channel-major (C, k, k) flattening — the
+ordering matches ``W.reshape(Cout, Cin·k·k)``, verified by the kernel tests),
+and the product + bias + ReLU + residual skip all execute inside
+``fused_matmul``'s epilogue, in VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import fused_matmul as fm
+
+
+def _im2col(u: jax.Array, k: int, pad: int) -> jax.Array:
+    """[B, C, H, W] → patch matrix [B·Ho·Wo, C·k·k] (unit stride)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        u, (k, k), (1, 1), [(pad, pad), (pad, pad)]
+    )  # [B, C*k*k, Ho, Wo]
+    b, ckk, ho, wo = patches.shape
+    return patches.transpose(0, 2, 3, 1).reshape(b * ho * wo, ckk), (b, ho, wo)
+
+
+def _w_mat(w: jax.Array) -> jax.Array:
+    """[Cout, Cin, k, k] → [Cin·k·k, Cout]."""
+    cout = w.shape[0]
+    return w.reshape(cout, -1).T
+
+
+def conv2d(u: jax.Array, w: jax.Array, b: jax.Array, pad: int, *, epilogue: str) -> jax.Array:
+    """conv + bias with a fused epilogue (linear or relu). NCHW → NCHW."""
+    k = w.shape[-1]
+    pm, (bsz, ho, wo) = _im2col(u, k, pad)
+    out = fm.fused_matmul(pm, _w_mat(w), b, epilogue=epilogue)
+    return out.reshape(bsz, ho, wo, w.shape[0]).transpose(0, 3, 1, 2)
+
+
+def conv_bias_relu(u: jax.Array, w: jax.Array, b: jax.Array, pad: int) -> jax.Array:
+    """F(u) = relu(conv(u, w) + b) via the Pallas kernel."""
+    return conv2d(u, w, b, pad, epilogue=fm.EPILOGUE_RELU)
+
+
+def residual_step(
+    u: jax.Array, w: jax.Array, b: jax.Array, h: jax.Array, pad: int
+) -> jax.Array:
+    """One residual layer step u + h·relu(conv(u,W)+b), fully fused.
+
+    The skip connection and the h-scaling ride in the matmul epilogue, so the
+    whole step is a single kernel after im2col — the Layer-1 hot path.
+    """
+    k = w.shape[-1]
+    pm, (bsz, ho, wo) = _im2col(u, k, pad)
+    if (ho, wo) != u.shape[2:]:
+        raise ValueError(
+            f"residual step needs shape-preserving padding: in {u.shape[2:]}, out {(ho, wo)}"
+        )
+    skip = u.transpose(0, 2, 3, 1).reshape(bsz * ho * wo, u.shape[1])
+    out = fm.fused_matmul(
+        pm, _w_mat(w), b, epilogue=fm.EPILOGUE_RESIDUAL, skip=skip, h=h
+    )
+    return out.reshape(bsz, ho, wo, w.shape[0]).transpose(0, 3, 1, 2)
+
+
+def block_fwd(
+    u0: jax.Array, ws: jax.Array, bs: jax.Array, h: jax.Array, pad: int
+) -> jax.Array:
+    """F-relaxation unit: propagate sequentially through a block of c layers.
+
+    Returns stacked states [c, B, C, H, W]. Lowered with ``lax.scan`` so the
+    HLO stays O(1) in block size (a while loop over the layer axis) — the AOT
+    artifact for c=4 is a few hundred KiB instead of an unrolled graph.
+    """
+
+    def step(u, wb):
+        w, b = wb
+        nxt = residual_step(u, w, b, h, pad)
+        return nxt, nxt
+
+    _, states = jax.lax.scan(step, u0, (ws, bs))
+    return states
+
+
+def step_residual(
+    u_prev: jax.Array,
+    u_cur: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    h: jax.Array,
+    pad: int,
+) -> jax.Array:
+    """MGRIT layer residual r = Φ(u_prev) − u_cur (paper eq. 19 component)."""
+    return residual_step(u_prev, w, b, h, pad) - u_cur

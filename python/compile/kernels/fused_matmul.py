@@ -1,0 +1,165 @@
+"""Layer-1 Pallas kernel: tiled MXU matmul with a fused residual epilogue.
+
+This is the compute hot-spot of the paper's system: every residual layer step
+``u + h * relu(conv(u, W) + b)`` is lowered to an im2col matrix product (see
+``conv.py``) whose inner loop is this kernel. The GPU paper realizes the step
+as CuDNN conv + activation kernels launched on a CUDA stream; the TPU rethink
+(DESIGN.md §Hardware-Adaptation) maps it onto the MXU systolic array:
+
+- grid = (M/TM, N/TN, K/TK); the K axis is the innermost (fastest) grid
+  dimension, so each (i, j) output tile accumulates over K sub-tiles in a
+  float32 VMEM scratch accumulator — the canonical MXU matmul schedule.
+- the epilogue (bias add, ReLU, residual skip-add scaled by the ODE step h)
+  executes in VMEM on the final K step — one HBM round-trip per layer instead
+  of CuDNN's separate conv/bias/activation kernel launches.
+- BlockSpecs express the HBM→VMEM streaming schedule the CUDA implementation
+  expressed with threadblocks; independent layer blocks (the paper's streams)
+  become independent grid slices.
+
+The kernel always runs with ``interpret=True`` here: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The structure (tiling,
+scratch accumulation, fused epilogue) is the TPU-ready part; interpret mode
+gives bit-accurate numerics for the AOT artifacts.
+
+VMEM budget per grid step (fp32): TM·TK + TK·TN + 2·TM·TN + TN floats.
+With the default TM=TN=TK=128 that is 3·128² + 128 ≈ 196 KiB, far below the
+≈16 MiB/core budget, leaving room for the pipelined double-buffering the
+Mosaic compiler inserts for the streaming operands.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-shaped tiles. Shapes smaller than a tile are padded up by the
+# wrappers below; pad cells multiply to zero so numerics are unaffected.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+# Epilogue modes (baked at trace time — each variant is its own artifact).
+EPILOGUE_LINEAR = "linear"  # o = acc + b                  (FC head)
+EPILOGUE_RELU = "relu"  # o = relu(acc + b)                (opening layer)
+EPILOGUE_RESIDUAL = "residual"  # o = skip + h*relu(acc+b) (residual step)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, *rest, epilogue: str):
+    """Grid (i, j, k): accumulate x[i,k] @ w[k,j] into VMEM scratch; fused
+    epilogue on the last k step."""
+    if epilogue == EPILOGUE_RESIDUAL:
+        skip_ref, h_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...]
+        if epilogue == EPILOGUE_LINEAR:
+            o_ref[...] = acc
+        elif epilogue == EPILOGUE_RELU:
+            o_ref[...] = jnp.maximum(acc, 0.0)
+        else:  # EPILOGUE_RESIDUAL
+            o_ref[...] = skip_ref[...] + h_ref[0, 0] * jnp.maximum(acc, 0.0)
+
+
+def fused_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    epilogue: str = EPILOGUE_LINEAR,
+    skip: Optional[jax.Array] = None,
+    h: Optional[jax.Array] = None,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+    tile_k: int = TILE_K,
+) -> jax.Array:
+    """o = epilogue(x @ w + b) with optional fused residual skip.
+
+    x: [M, K], w: [K, N], b: [N]; skip: [M, N] and h: scalar () for the
+    residual epilogue. Inputs are zero-padded to tile multiples and the
+    result sliced back, so arbitrary shapes are accepted.
+    """
+    if epilogue not in (EPILOGUE_LINEAR, EPILOGUE_RELU, EPILOGUE_RESIDUAL):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    if (epilogue == EPILOGUE_RESIDUAL) != (skip is not None and h is not None):
+        raise ValueError("residual epilogue requires skip and h (and only it does)")
+
+    m, kdim = x.shape
+    k2, n = w.shape
+    if kdim != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    tm, tn, tk = min(tile_m, _ceil_to(m, 8)), min(tile_n, _ceil_to(n, 8)), min(
+        tile_k, _ceil_to(kdim, 8)
+    )
+    mp, np_, kp = _ceil_to(m, tm), _ceil_to(n, tn), _ceil_to(kdim, tk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - kdim)))
+    wp = jnp.pad(w, ((0, kp - kdim), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))[None, :]  # [1, Np] — broadcast over rows
+
+    grid = (mp // tm, np_ // tn, kp // tk)
+    in_specs = [
+        pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((1, tn), lambda i, j, k: (0, j)),
+    ]
+    operands = [xp, wp, bp]
+    if epilogue == EPILOGUE_RESIDUAL:
+        skipp = jnp.pad(skip, ((0, mp - m), (0, np_ - n)))
+        in_specs.append(pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)))
+        # scalar h lives in a (1, 1) block broadcast to every grid step
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)))
+        operands.extend([skipp, jnp.asarray(h, jnp.float32).reshape(1, 1)])
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, epilogue=epilogue),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(*operands)
+    return out[:m, :n]
+
+
+def vmem_bytes(tile_m: int = TILE_M, tile_n: int = TILE_N, tile_k: int = TILE_K) -> int:
+    """Static VMEM footprint estimate of one grid step (fp32, incl. the
+    double-buffered copy Mosaic keeps for the streaming x/w operands)."""
+    x_tile = tile_m * tile_k
+    w_tile = tile_k * tile_n
+    out_tile = tile_m * tile_n
+    acc = tile_m * tile_n
+    bias = tile_n
+    return 4 * (2 * (x_tile + w_tile) + out_tile + acc + bias)
+
+
+def mxu_utilization_estimate(
+    m: int, n: int, k: int, tile_m: int = TILE_M, tile_n: int = TILE_N, tile_k: int = TILE_K
+) -> float:
+    """Fraction of MXU issue slots doing useful work: real FLOPs over FLOPs of
+    the padded tile grid (the MXU runs full 128×128 passes regardless)."""
+    mp, np_, kp = _ceil_to(m, tile_m), _ceil_to(n, tile_n), _ceil_to(k, tile_k)
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+These implementations are the correctness contract: each Pallas kernel in this
+package must match its `*_ref` counterpart to float32 tolerance (enforced by
+``python/tests/test_kernels.py``). They are also the building blocks for the
+backward/VJP artifact entry points (we differentiate the reference path with
+``jax.grad``; forward artifacts use the Pallas path, and the equality of the
+two is what makes the gradients consistent).
+
+All tensors are NCHW float32. Weights are ``[Cout, Cin, k, k]``; FC weights are
+``[In, Out]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(u: jax.Array, w: jax.Array, pad: int) -> jax.Array:
+    """Plain 2-D convolution, NCHW / OIHW, unit stride, symmetric padding."""
+    return jax.lax.conv_general_dilated(
+        u,
+        w,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv_bias_relu_ref(u: jax.Array, w: jax.Array, b: jax.Array, pad: int) -> jax.Array:
+    """F(u) = relu(conv(u, w) + b) — the paper's feature transformation."""
+    return jax.nn.relu(conv2d_ref(u, w, pad) + b[None, :, None, None])
+
+
+def residual_step_ref(
+    u: jax.Array, w: jax.Array, b: jax.Array, h: jax.Array, pad: int
+) -> jax.Array:
+    """One residual block step: u + h * F(u; θ)   (paper eq. 1)."""
+    return u + h * conv_bias_relu_ref(u, w, b, pad)
+
+
+def block_fwd_ref(
+    u0: jax.Array, ws: jax.Array, bs: jax.Array, h: jax.Array, pad: int
+) -> jax.Array:
+    """Sequential forward propagation through a block of ``c`` residual layers.
+
+    ``ws``: [c, C, C, k, k], ``bs``: [c, C]. Returns the stacked states
+    [c, B, C, H, W] — state ``i`` is the output of layer ``i`` of the block.
+    """
+
+    def step(u, wb):
+        w, b = wb
+        nxt = residual_step_ref(u, w, b, h, pad)
+        return nxt, nxt
+
+    _, states = jax.lax.scan(step, u0, (ws, bs))
+    return states
+
+
+def step_residual_ref(
+    u_prev: jax.Array, u_cur: jax.Array, w: jax.Array, b: jax.Array, h: jax.Array, pad: int
+) -> jax.Array:
+    """MGRIT residual at one layer: r = Φ(u_prev) - u_cur  (paper eq. 19).
+
+    With f_h = 0 away from the input layer, R = f - L(U) has components
+    Φ(u^{n-1}) - u^n; we return that sign convention.
+    """
+    return residual_step_ref(u_prev, w, b, h, pad) - u_cur
+
+
+def fc_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully connected layer on flattened input: x @ w + b."""
+    return x.reshape(x.shape[0], -1) @ w + b
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy of softmax(logits) against integer labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def head_fwd_ref(
+    u: jax.Array, wfc: jax.Array, bfc: jax.Array, labels: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Classifier head: flatten → FC → softmax cross-entropy. Returns (logits, loss)."""
+    logits = fc_ref(u, wfc, bfc)
+    return logits, softmax_xent_ref(logits, labels)
+
+
+def adjoint_step_ref(
+    u: jax.Array, w: jax.Array, b: jax.Array, h: jax.Array, pad: int, lam_next: jax.Array
+) -> jax.Array:
+    """One step of the adjoint (backward) recurrence.
+
+    λ^n = λ^{n+1} + h · (∂F/∂u(u^n))ᵀ λ^{n+1}, i.e. the VJP of the residual
+    step at state u applied to λ^{n+1}. This is itself a (linear, reversed)
+    residual network — the same MGRIT machinery applies to it.
+    """
+    _, vjp = jax.vjp(lambda uu: residual_step_ref(uu, w, b, h, pad), u)
+    return vjp(lam_next)[0]
+
+
+def step_param_grad_ref(
+    u: jax.Array, w: jax.Array, b: jax.Array, h: jax.Array, pad: int, lam_next: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Per-layer parameter gradient: (∂(u + hF)/∂θ)ᵀ λ^{n+1} — local to a layer."""
+    _, vjp = jax.vjp(lambda ww, bb: residual_step_ref(u, ww, bb, h, pad), w, b)
+    return vjp(lam_next)

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: fused row-wise softmax cross-entropy.
+
+The classifier head's loss is a single VMEM-resident kernel: per row of
+logits, compute a numerically-stable log-sum-exp and pick the label logit via
+an iota comparison (one-hot matmul-free). Grid is 1-D over row tiles; the
+class axis always fits one tile (10 classes here; pad to the 128-lane width).
+
+Returns the per-row loss; the mean reduction happens in the caller so the
+kernel stays shape-polymorphic over the batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref, *, n_classes: int):
+    logits = logits_ref[...]  # [TR, Cp]
+    labels = labels_ref[...]  # [TR, 1]
+    # mask the class-padding lanes out of the reduction
+    lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    neg_inf = jnp.full_like(logits, -jnp.inf)
+    masked = jnp.where(lane < n_classes, logits, neg_inf)
+    row_max = jnp.max(masked, axis=1, keepdims=True)
+    shifted = jnp.where(lane < n_classes, masked - row_max, neg_inf)
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=1, keepdims=True)) + row_max
+    picked = jnp.sum(jnp.where(lane == labels, logits, 0.0), axis=1, keepdims=True)
+    loss_ref[...] = logz - picked
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy over the batch. logits [B, C], labels [B] i32."""
+    bsz, n_classes = logits.shape
+    tr = min(TILE_ROWS, _ceil_to(bsz, 8))
+    bp = _ceil_to(bsz, tr)
+    cp = _ceil_to(n_classes, 128)
+
+    lp = jnp.pad(logits, ((0, bp - bsz), (0, cp - n_classes)))
+    # pad labels with -1 so padded rows pick nothing (their loss is discarded)
+    labp = jnp.pad(labels.astype(jnp.int32), (0, bp - bsz), constant_values=-1)[:, None]
+
+    per_row = pl.pallas_call(
+        functools.partial(_xent_kernel, n_classes=n_classes),
+        grid=(bp // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, cp), lambda i: (i, 0)),
+            pl.BlockSpec((tr, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=True,
+    )(lp, labp)
+    return jnp.mean(per_row[:bsz, 0])

@@ -1,0 +1,232 @@
+"""Layer-2: the JAX residual network and the MGRIT building-block entry points.
+
+The rust coordinator never traces JAX — it executes a fixed menu of AOT-lowered
+functions (one HLO artifact per entry × preset × batch size, see ``aot.py``).
+This module defines that menu:
+
+forward (Pallas hot path):
+- ``opening_fwd``   input layer: conv(1→C) + bias + ReLU
+- ``step_fwd``      one residual layer step u + h·F(u;θ)   (C-relaxation unit)
+- ``block_fwd``     c sequential steps, states stacked      (F-relaxation unit)
+- ``step_residual`` MGRIT layer residual Φ(u_prev) − u_cur  (eq. 19)
+- ``head_fwd``      FC → fused softmax cross-entropy        (logits, loss)
+- ``serial_fwd``    whole-network forward — the sequential baseline
+
+backward (jnp reference path, differentiated with jax.vjp — consistent with
+the Pallas forward because the kernel tests pin them together):
+- ``head_vjp``        d(loss)/d(u, wfc, bfc)
+- ``adjoint_step``    λ ← λ + h·(∂F/∂u)ᵀλ        (adjoint-MGRIT C-relaxation)
+- ``adjoint_block``   c adjoint steps through a block (adjoint F-relaxation)
+- ``step_param_grad`` per-layer (dW, db) from (u, λ_next) — layer-local
+- ``block_vjp``       exact VJP through a block (PM/serial baseline training)
+
+Every entry takes the ODE step ``h`` as a runtime scalar so a single artifact
+serves every MG level (coarse levels use H = c·h).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import fused_matmul as fm
+from .kernels import ref as kref
+from .kernels import softmax_xent as kxent
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    """Hyperparameters of one exported network configuration.
+
+    Mirrors ``rust/src/model/spec.rs`` — the manifest carries these values so
+    the rust side never hard-codes them.
+    """
+
+    name: str
+    channels: int  # residual trunk width C
+    kernel: int  # conv kernel size k (shape-preserving pad = k//2)
+    height: int
+    width: int
+    n_res: int  # number of residual layers
+    block: int  # MGRIT coarsening factor c == layers per block
+    t_final: float  # ODE horizon T; fine-level h = T / n_res
+    n_classes: int = 10
+    batches: tuple = (1, 16)
+
+    @property
+    def pad(self) -> int:
+        return self.kernel // 2
+
+    @property
+    def h(self) -> float:
+        return self.t_final / self.n_res
+
+    @property
+    def fc_in(self) -> int:
+        return self.channels * self.height * self.width
+
+
+# The presets actually exported to artifacts/. `mnist` is the end-to-end
+# training network; `micro` keeps rust integration tests fast. The fig6/fig7
+# scaling presets exist only in the rust cost model (DESIGN.md §4) — their
+# 4k-layer numerics would be identical per-layer artifacts at larger shapes.
+PRESETS = {
+    "mnist": Preset("mnist", channels=8, kernel=3, height=28, width=28,
+                    n_res=32, block=4, t_final=2.0, batches=(1, 16)),
+    "micro": Preset("micro", channels=2, kernel=3, height=6, width=6,
+                    n_res=4, block=2, t_final=1.0, batches=(2,)),
+}
+
+
+# --------------------------------------------------------------------------
+# forward entries (Pallas hot path)
+# --------------------------------------------------------------------------
+
+def opening_fwd(p: Preset, y, w, b):
+    """Input layer: y [B,1,H,W] → u0 [B,C,H,W] = relu(conv(y,w)+b)."""
+    return (kconv.conv2d(y, w, b, p.pad, epilogue=fm.EPILOGUE_RELU),)
+
+
+def step_fwd(p: Preset, u, w, b, h):
+    """One residual layer step (the C-relaxation unit)."""
+    return (kconv.residual_step(u, w, b, h, p.pad),)
+
+
+def block_fwd(p: Preset, u0, ws, bs, h):
+    """F-relaxation unit: c steps, returns states [c,B,C,H,W]."""
+    return (kconv.block_fwd(u0, ws, bs, h, p.pad),)
+
+
+def step_residual(p: Preset, u_prev, u_cur, w, b, h):
+    """MGRIT residual component r = Φ(u_prev) − u_cur."""
+    return (kconv.step_residual(u_prev, u_cur, w, b, h, p.pad),)
+
+
+def head_fwd(p: Preset, u, wfc, bfc, labels):
+    """Classifier head: (logits [B,10], mean loss [])."""
+    flat = u.reshape(u.shape[0], -1)
+    logits = fm.fused_matmul(flat, wfc, bfc, epilogue=fm.EPILOGUE_LINEAR)
+    return logits, kxent.softmax_xent(logits, labels)
+
+
+def serial_fwd(p: Preset, y, wo, bo, ws, bs, wfc, bfc, labels):
+    """Whole-network sequential forward — the paper's serial baseline.
+
+    Returns (logits, loss, u_final). Uses the same Pallas kernels as the MG
+    path so serial-vs-MG comparisons isolate the algorithm, not the kernels.
+    """
+    u0 = kconv.conv2d(y, wo, bo, p.pad, epilogue=fm.EPILOGUE_RELU)
+    h = jnp.float32(p.h)
+    states = kconv.block_fwd(u0, ws, bs, h, p.pad)
+    u_final = states[-1]
+    logits, loss = head_fwd(p, u_final, wfc, bfc, labels)
+    return logits, loss, u_final
+
+
+# --------------------------------------------------------------------------
+# backward entries (reference path + jax.vjp)
+# --------------------------------------------------------------------------
+
+def head_vjp(p: Preset, u, wfc, bfc, labels):
+    """Gradient of the head loss wrt (u, wfc, bfc); seeds the adjoint solve."""
+    def loss_fn(uu, ww, bb):
+        _, loss = kref.head_fwd_ref(uu, ww, bb, labels)
+        return loss
+
+    return jax.grad(loss_fn, argnums=(0, 1, 2))(u, wfc, bfc)
+
+
+def adjoint_step(p: Preset, u, w, b, h, lam):
+    """One adjoint step λ ← λ + h·(∂F/∂u(u))ᵀ λ."""
+    return (kref.adjoint_step_ref(u, w, b, h, p.pad, lam),)
+
+
+def adjoint_block(p: Preset, us, ws, bs, h, lam):
+    """Adjoint F-relaxation through one block, reversed layer order.
+
+    ``us`` [c,B,C,H,W] are the *input* states of layers c-1..0's steps (i.e.
+    us[i] is the state the i-th layer consumed). Returns stacked adjoints
+    [c,B,C,H,W] where out[i] = λ at the input of layer i, plus λ at block in.
+    """
+
+    def step(lam_next, xwb):
+        u, w, b = xwb
+        lam_prev = kref.adjoint_step_ref(u, w, b, h, p.pad, lam_next)
+        return lam_prev, lam_prev
+
+    lam0, lams = jax.lax.scan(step, lam, (us, ws, bs), reverse=True)
+    return lam0, lams
+
+
+def step_param_grad(p: Preset, u, w, b, h, lam):
+    """Layer-local parameter gradient (dW, db) — embarrassingly parallel."""
+    return kref.step_param_grad_ref(u, w, b, h, p.pad, lam)
+
+
+def block_vjp(p: Preset, u0, ws, bs, h, lam):
+    """Exact VJP through a block: (λ at block input, dWs, dbs).
+
+    Used by the serial / model-partitioned training baselines; MG training
+    uses adjoint_block + step_param_grad on MG-approximate states instead.
+    """
+
+    def f(uu, wws, bbs):
+        states = kref.block_fwd_ref(uu, wws, bbs, h, p.pad)
+        return states[-1]
+
+    _, vjp = jax.vjp(f, u0, ws, bs)
+    return vjp(lam)
+
+
+# --------------------------------------------------------------------------
+# entry registry: name → (fn, example-arg builder)
+# --------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_specs(p: Preset, batch: int) -> dict[str, tuple[Callable, list]]:
+    """The AOT menu: entry name → (python callable, example argument specs)."""
+    c_, k, hh, ww = p.channels, p.kernel, p.height, p.width
+    cb = p.block
+    u = _f32(batch, c_, hh, ww)
+    wconv = _f32(c_, c_, k, k)
+    bconv = _f32(c_)
+    ws = _f32(cb, c_, c_, k, k)
+    bs = _f32(cb, c_)
+    ws_all = _f32(p.n_res, c_, c_, k, k)
+    bs_all = _f32(p.n_res, c_)
+    hscalar = _f32()
+    y = _f32(batch, 1, hh, ww)
+    wo = _f32(c_, 1, k, k)
+    wfc = _f32(p.fc_in, p.n_classes)
+    bfc = _f32(p.n_classes)
+    labels = _i32(batch)
+    lam = u
+    states = _f32(cb, batch, c_, hh, ww)
+
+    def bind(fn):
+        return lambda *args: fn(p, *args)
+
+    return {
+        "opening_fwd": (bind(opening_fwd), [y, wo, bconv]),
+        "step_fwd": (bind(step_fwd), [u, wconv, bconv, hscalar]),
+        "block_fwd": (bind(block_fwd), [u, ws, bs, hscalar]),
+        "step_residual": (bind(step_residual), [u, u, wconv, bconv, hscalar]),
+        "head_fwd": (bind(head_fwd), [u, wfc, bfc, labels]),
+        "serial_fwd": (bind(serial_fwd), [y, wo, bconv, ws_all, bs_all, wfc, bfc, labels]),
+        "head_vjp": (bind(head_vjp), [u, wfc, bfc, labels]),
+        "adjoint_step": (bind(adjoint_step), [u, wconv, bconv, hscalar, lam]),
+        "adjoint_block": (bind(adjoint_block), [states, ws, bs, hscalar, lam]),
+        "step_param_grad": (bind(step_param_grad), [u, wconv, bconv, hscalar, lam]),
+        "block_vjp": (bind(block_vjp), [u, ws, bs, hscalar, lam]),
+    }

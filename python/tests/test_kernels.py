@@ -1,0 +1,240 @@
+"""Pallas kernel vs pure-jnp reference — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (batch, channels, spatial, kernel size, tile sizes)
+so padding/tiling edge cases in the fused matmul are exercised, not just the
+preset shapes that get AOT-exported.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import conv as kconv
+from compile.kernels import fused_matmul as fm
+from compile.kernels import ref as kref
+from compile.kernels import softmax_xent as kxent
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# fused_matmul
+# --------------------------------------------------------------------------
+
+class TestFusedMatmul:
+    def test_linear_exact_tiles(self):
+        x, w, b = rand(0, 256, 128), rand(1, 128, 128), rand(2, 128)
+        out = fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_LINEAR)
+        np.testing.assert_allclose(out, x @ w + b, **TOL)
+
+    def test_relu_epilogue(self):
+        x, w, b = rand(3, 64, 32), rand(4, 32, 16), rand(5, 16)
+        out = fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_RELU)
+        np.testing.assert_allclose(out, jnp.maximum(x @ w + b, 0), **TOL)
+
+    def test_residual_epilogue(self):
+        x, w, b = rand(6, 40, 24), rand(7, 24, 8), rand(8, 8)
+        skip = rand(9, 40, 8)
+        h = jnp.float32(0.125)
+        out = fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_RESIDUAL, skip=skip, h=h)
+        np.testing.assert_allclose(out, skip + h * jnp.maximum(x @ w + b, 0), **TOL)
+
+    def test_ragged_shapes_pad_correctly(self):
+        # deliberately prime-ish dims — nothing divides the tile sizes
+        x, w, b = rand(10, 97, 53), rand(11, 53, 11), rand(12, 11)
+        out = fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_LINEAR)
+        np.testing.assert_allclose(out, x @ w + b, **TOL)
+
+    def test_multi_k_tiles_accumulate(self):
+        # K spans several tiles: exercises the scratch accumulator path
+        x, w, b = rand(13, 32, 300), rand(14, 300, 8), rand(15, 8)
+        out = fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_LINEAR, tile_k=64)
+        np.testing.assert_allclose(out, x @ w + b, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_epilogue_combo(self):
+        x, w, b = rand(16, 8, 8), rand(17, 8, 8), rand(18, 8)
+        with pytest.raises(ValueError):
+            fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_RESIDUAL)  # no skip/h
+        with pytest.raises(ValueError):
+            fm.fused_matmul(x, w, b, epilogue="nonsense")
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 40),
+        tile=st.sampled_from([8, 16, 32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_linear(self, m, k, n, tile, seed):
+        kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32)
+        b = jax.random.normal(kb, (n,), jnp.float32)
+        out = fm.fused_matmul(x, w, b, epilogue=fm.EPILOGUE_LINEAR,
+                              tile_m=tile, tile_n=tile, tile_k=tile)
+        np.testing.assert_allclose(out, x @ w + b, rtol=1e-4, atol=1e-4)
+
+    def test_vmem_budget_default_tiles(self):
+        # the DESIGN.md §Perf claim: default tiles fit well under 16 MiB VMEM
+        assert fm.vmem_bytes() < 8 * 1024 * 1024
+
+    def test_mxu_utilization_estimate(self):
+        assert fm.mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert fm.mxu_utilization_estimate(1, 1, 1) == pytest.approx(1 / 128**3)
+
+
+# --------------------------------------------------------------------------
+# conv / residual step
+# --------------------------------------------------------------------------
+
+class TestConv:
+    def test_conv_relu_vs_ref(self):
+        u, w, b = rand(20, 2, 8, 5, 5), rand(21, 4, 8, 3, 3), rand(22, 4)
+        out = kconv.conv2d(u, w, b, pad=1, epilogue=fm.EPILOGUE_RELU)
+        np.testing.assert_allclose(out, kref.conv_bias_relu_ref(u, w, b, 1), **TOL)
+
+    def test_conv_7x7_shape_preserving(self):
+        u, w, b = rand(23, 1, 4, 12, 12), rand(24, 4, 4, 7, 7), rand(25, 4)
+        out = kconv.conv2d(u, w, b, pad=3, epilogue=fm.EPILOGUE_LINEAR)
+        assert out.shape == (1, 4, 12, 12)
+        np.testing.assert_allclose(out, kref.conv2d_ref(u, w, 3) + b[None, :, None, None], **TOL)
+
+    def test_residual_step_vs_ref(self):
+        u, w, b = rand(26, 2, 8, 7, 7), rand(27, 8, 8, 3, 3), rand(28, 8)
+        h = jnp.float32(0.0625)
+        out = kconv.residual_step(u, w, b, h, pad=1)
+        np.testing.assert_allclose(out, kref.residual_step_ref(u, w, b, h, 1), **TOL)
+
+    def test_residual_step_rejects_shrinking_pad(self):
+        u, w, b = rand(29, 1, 4, 8, 8), rand(30, 4, 4, 7, 7), rand(31, 4)
+        with pytest.raises(ValueError):
+            kconv.residual_step(u, w, b, jnp.float32(0.1), pad=1)  # 7x7 pad1 shrinks
+
+    def test_block_fwd_matches_repeated_steps(self):
+        u0 = rand(32, 2, 4, 6, 6)
+        ws, bs = rand(33, 3, 4, 4, 3, 3), rand(34, 3, 4)
+        h = jnp.float32(0.25)
+        states = kconv.block_fwd(u0, ws, bs, h, pad=1)
+        u = u0
+        for i in range(3):
+            u = kref.residual_step_ref(u, ws[i], bs[i], h, 1)
+            np.testing.assert_allclose(states[i], u, **TOL)
+
+    def test_block_fwd_vs_ref(self):
+        u0 = rand(35, 1, 8, 28, 28)
+        ws, bs = rand(36, 4, 8, 8, 3, 3) * 0.1, rand(37, 4, 8)
+        h = jnp.float32(0.0625)
+        np.testing.assert_allclose(
+            kconv.block_fwd(u0, ws, bs, h, pad=1),
+            kref.block_fwd_ref(u0, ws, bs, h, 1), **TOL)
+
+    def test_step_residual_zero_at_exact_state(self):
+        u, w, b = rand(38, 2, 4, 6, 6), rand(39, 4, 4, 3, 3), rand(40, 4)
+        h = jnp.float32(0.125)
+        u_next = kref.residual_step_ref(u, w, b, h, 1)
+        r = kconv.step_residual(u, u_next, w, b, h, pad=1)
+        np.testing.assert_allclose(r, jnp.zeros_like(r), atol=2e-5)
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        b=st.integers(1, 3),
+        c=st.integers(1, 10),
+        hw=st.integers(3, 12),
+        k=st.sampled_from([1, 3, 5]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_residual_step(self, b, c, hw, k, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        u = jax.random.normal(ks[0], (b, c, hw, hw), jnp.float32)
+        w = jax.random.normal(ks[1], (c, c, k, k), jnp.float32) * 0.2
+        bias = jax.random.normal(ks[2], (c,), jnp.float32)
+        h = jnp.float32(0.1)
+        out = kconv.residual_step(u, w, bias, h, pad=k // 2)
+        np.testing.assert_allclose(
+            out, kref.residual_step_ref(u, w, bias, h, k // 2), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# softmax cross-entropy
+# --------------------------------------------------------------------------
+
+class TestSoftmaxXent:
+    def test_vs_ref(self):
+        logits = rand(50, 16, 10)
+        labels = jnp.arange(16, dtype=jnp.int32) % 10
+        np.testing.assert_allclose(
+            kxent.softmax_xent(logits, labels),
+            kref.softmax_xent_ref(logits, labels), **TOL)
+
+    def test_single_row(self):
+        logits = rand(51, 1, 10)
+        labels = jnp.array([7], jnp.int32)
+        np.testing.assert_allclose(
+            kxent.softmax_xent(logits, labels),
+            kref.softmax_xent_ref(logits, labels), **TOL)
+
+    def test_large_logits_stable(self):
+        logits = rand(52, 8, 10) * 1e4
+        labels = jnp.zeros(8, jnp.int32)
+        out = kxent.softmax_xent(logits, labels)
+        ref = kref.softmax_xent_ref(logits, labels)
+        assert jnp.isfinite(out)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-2)
+
+    def test_uniform_logits_log_nclasses(self):
+        logits = jnp.zeros((4, 10), jnp.float32)
+        labels = jnp.array([0, 3, 5, 9], jnp.int32)
+        np.testing.assert_allclose(
+            kxent.softmax_xent(logits, labels), np.log(10.0), rtol=1e-6)
+
+    @settings(deadline=None, max_examples=20)
+    @given(b=st.integers(1, 150), ncls=st.integers(2, 20), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis(self, b, ncls, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        logits = jax.random.normal(k1, (b, ncls), jnp.float32) * 3
+        labels = jax.random.randint(k2, (b,), 0, ncls, jnp.int32)
+        np.testing.assert_allclose(
+            kxent.softmax_xent(logits, labels),
+            kref.softmax_xent_ref(logits, labels), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# reference self-consistency (the oracle itself has invariants)
+# --------------------------------------------------------------------------
+
+class TestRefInvariants:
+    def test_adjoint_step_matches_full_vjp(self):
+        u, w, b = rand(60, 2, 4, 6, 6), rand(61, 4, 4, 3, 3), rand(62, 4)
+        h = jnp.float32(0.125)
+        lam = rand(63, 2, 4, 6, 6)
+        # contract λᵀ(∂Φ/∂u)v against finite differences of λᵀΦ(u+εv)
+        v = rand(64, 2, 4, 6, 6)
+        lam_prev = kref.adjoint_step_ref(u, w, b, h, 1, lam)
+        eps = 1e-3
+        f = lambda uu: jnp.vdot(lam, kref.residual_step_ref(uu, w, b, h, 1))
+        fd = (f(u + eps * v) - f(u - eps * v)) / (2 * eps)
+        np.testing.assert_allclose(jnp.vdot(lam_prev, v), fd, rtol=2e-2, atol=2e-2)
+
+    def test_param_grad_matches_finite_difference(self):
+        u, w, b = rand(65, 1, 2, 4, 4), rand(66, 2, 2, 3, 3), rand(67, 2)
+        h = jnp.float32(0.25)
+        lam = rand(68, 1, 2, 4, 4)
+        dw, db = kref.step_param_grad_ref(u, w, b, h, 1, lam)
+        eps = 1e-3
+        g = lambda bb: jnp.vdot(lam, kref.residual_step_ref(u, w, bb, h, 1))
+        fd0 = (g(b.at[0].add(eps)) - g(b.at[0].add(-eps))) / (2 * eps)
+        np.testing.assert_allclose(db[0], fd0, rtol=2e-2, atol=2e-2)
+        gw = lambda ww: jnp.vdot(lam, kref.residual_step_ref(u, ww, b, h, 1))
+        fdw = (gw(w.at[0, 0, 1, 1].add(eps)) - gw(w.at[0, 0, 1, 1].add(-eps))) / (2 * eps)
+        np.testing.assert_allclose(dw[0, 0, 1, 1], fdw, rtol=2e-2, atol=2e-2)

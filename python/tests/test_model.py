@@ -1,0 +1,186 @@
+"""Layer-2 model entry-point tests: shapes, numerics, and MG-relevant algebra.
+
+These tests validate the exact functions that get AOT-lowered — if they pass
+here, the HLO artifacts compute the same thing (lowering is semantics-
+preserving; the rust integration tests then check the PJRT round-trip).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+P = model.PRESETS["micro"]  # small and fast: C=2, 6x6, n_res=4, c=2
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def micro_params(scale=0.3):
+    wo = rand(1, P.channels, 1, P.kernel, P.kernel) * scale
+    bo = rand(2, P.channels) * scale
+    ws = rand(3, P.n_res, P.channels, P.channels, P.kernel, P.kernel) * scale
+    bs = rand(4, P.n_res, P.channels) * scale
+    wfc = rand(5, P.fc_in, P.n_classes) * scale
+    bfc = rand(6, P.n_classes) * scale
+    return wo, bo, ws, bs, wfc, bfc
+
+
+class TestPresets:
+    def test_registry_contains_exported_presets(self):
+        assert {"mnist", "micro"} <= set(model.PRESETS)
+
+    def test_h_is_t_over_n(self):
+        p = model.PRESETS["mnist"]
+        assert p.h == pytest.approx(p.t_final / p.n_res)
+
+    def test_pad_preserves_shape(self):
+        for p in model.PRESETS.values():
+            assert 2 * p.pad + 1 == p.kernel  # shape-preserving
+
+    def test_fc_in(self):
+        p = model.PRESETS["mnist"]
+        assert p.fc_in == p.channels * p.height * p.width
+
+    def test_entry_specs_complete(self):
+        entries = model.entry_specs(P, 2)
+        expected = {
+            "opening_fwd", "step_fwd", "block_fwd", "step_residual",
+            "head_fwd", "serial_fwd", "head_vjp", "adjoint_step",
+            "adjoint_block", "step_param_grad", "block_vjp",
+        }
+        assert set(entries) == expected
+
+
+class TestForwardEntries:
+    def test_opening_shape(self):
+        y = rand(10, 2, 1, P.height, P.width)
+        wo, bo, *_ = micro_params()
+        (u0,) = model.opening_fwd(P, y, wo, bo)
+        assert u0.shape == (2, P.channels, P.height, P.width)
+        assert bool(jnp.all(u0 >= 0))  # ReLU output
+
+    def test_serial_fwd_equals_unrolled_ref(self):
+        y = rand(11, 2, 1, P.height, P.width)
+        wo, bo, ws, bs, wfc, bfc = micro_params()
+        labels = jnp.array([3, 7], jnp.int32)
+        logits, loss, u_final = model.serial_fwd(P, y, wo, bo, ws, bs, wfc, bfc, labels)
+
+        u = kref.conv_bias_relu_ref(y, wo, bo, P.pad)
+        for i in range(P.n_res):
+            u = kref.residual_step_ref(u, ws[i], bs[i], jnp.float32(P.h), P.pad)
+        ref_logits, ref_loss = kref.head_fwd_ref(u, wfc, bfc, labels)
+        np.testing.assert_allclose(u_final, u, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(logits, ref_logits, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(loss, ref_loss, rtol=1e-4, atol=1e-4)
+
+    def test_block_fwd_composes_to_serial(self):
+        # propagating block-by-block with block_fwd == whole-trunk propagation
+        wo, bo, ws, bs, *_ = micro_params()
+        u = rand(12, 2, P.channels, P.height, P.width)
+        h = jnp.float32(P.h)
+        via_blocks = u
+        for blk in range(P.n_res // P.block):
+            s = slice(blk * P.block, (blk + 1) * P.block)
+            (states,) = model.block_fwd(P, via_blocks, ws[s], bs[s], h)
+            via_blocks = states[-1]
+        whole = kref.block_fwd_ref(u, ws, bs, h, P.pad)[-1]
+        np.testing.assert_allclose(via_blocks, whole, rtol=1e-4, atol=1e-4)
+
+
+class TestBackwardEntries:
+    def test_head_vjp_matches_jax_grad(self):
+        u = rand(20, 2, P.channels, P.height, P.width)
+        *_, wfc, bfc = micro_params()
+        labels = jnp.array([1, 2], jnp.int32)
+        du, dwfc, dbfc = model.head_vjp(P, u, wfc, bfc, labels)
+        assert du.shape == u.shape and dwfc.shape == wfc.shape and dbfc.shape == bfc.shape
+        # loss decreases along -grad (first-order check)
+        _, loss0 = kref.head_fwd_ref(u, wfc, bfc, labels)
+        _, loss1 = kref.head_fwd_ref(u - 1e-2 * du, wfc, bfc, labels)
+        assert loss1 < loss0
+
+    def test_block_vjp_matches_autodiff_through_serial(self):
+        u0 = rand(21, 1, P.channels, P.height, P.width)
+        _, _, ws, bs, *_ = micro_params()
+        wsb, bsb = ws[: P.block], bs[: P.block]
+        h = jnp.float32(P.h)
+        lam = rand(22, 1, P.channels, P.height, P.width)
+
+        got_du0, got_dws, got_dbs = model.block_vjp(P, u0, wsb, bsb, h, lam)
+
+        def f(uu, wws, bbs):
+            return kref.block_fwd_ref(uu, wws, bbs, h, P.pad)[-1]
+
+        _, vjp = jax.vjp(f, u0, wsb, bsb)
+        ref_du0, ref_dws, ref_dbs = vjp(lam)
+        np.testing.assert_allclose(got_du0, ref_du0, **TOL)
+        np.testing.assert_allclose(got_dws, ref_dws, **TOL)
+        np.testing.assert_allclose(got_dbs, ref_dbs, **TOL)
+
+    def test_adjoint_block_equals_block_vjp_state_grad(self):
+        """Adjoint recurrence through a block == VJP wrt the block input."""
+        u0 = rand(23, 1, P.channels, P.height, P.width)
+        _, _, ws, bs, *_ = micro_params()
+        wsb, bsb = ws[: P.block], bs[: P.block]
+        h = jnp.float32(P.h)
+        lam = rand(24, 1, P.channels, P.height, P.width)
+
+        # input states of each layer: u0, u1, ..., u_{c-1}
+        states = kref.block_fwd_ref(u0, wsb, bsb, h, P.pad)
+        us = jnp.concatenate([u0[None], states[:-1]], axis=0)
+        lam0, lams = model.adjoint_block(P, us, wsb, bsb, h, lam)
+
+        ref_du0, _, _ = model.block_vjp(P, u0, wsb, bsb, h, lam)
+        np.testing.assert_allclose(lam0, ref_du0, **TOL)
+        assert lams.shape == us.shape
+
+    def test_param_grads_compose_block_vjp(self):
+        """Layer-local param grads on exact states == block VJP param grads."""
+        u0 = rand(25, 1, P.channels, P.height, P.width)
+        _, _, ws, bs, *_ = micro_params()
+        wsb, bsb = ws[: P.block], bs[: P.block]
+        h = jnp.float32(P.h)
+        lam = rand(26, 1, P.channels, P.height, P.width)
+
+        states = kref.block_fwd_ref(u0, wsb, bsb, h, P.pad)
+        us = jnp.concatenate([u0[None], states[:-1]], axis=0)
+        # adjoints at the *output* of each layer i (= input adjoint of i+1)
+        _, lams = model.adjoint_block(P, us, wsb, bsb, h, lam)
+        lam_out = jnp.concatenate([lams[1:], lam[None]], axis=0)
+
+        _, ref_dws, ref_dbs = model.block_vjp(P, u0, wsb, bsb, h, lam)
+        for i in range(P.block):
+            dw, db = model.step_param_grad(P, us[i], wsb[i], bsb[i], h, lam_out[i])
+            np.testing.assert_allclose(dw, ref_dws[i], rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(db, ref_dbs[i], rtol=1e-4, atol=1e-4)
+
+
+class TestMgAlgebra:
+    """Sanity checks of the FAS identities the rust engine relies on."""
+
+    def test_residual_vanishes_on_exact_trajectory(self):
+        _, _, ws, bs, *_ = micro_params()
+        u = rand(30, 1, P.channels, P.height, P.width)
+        h = jnp.float32(P.h)
+        traj = [u]
+        for i in range(4):
+            traj.append(kref.residual_step_ref(traj[-1], ws[i], bs[i], h, P.pad))
+        for i in range(4):
+            (r,) = model.step_residual(P, traj[i], traj[i + 1], ws[i], bs[i], h)
+            np.testing.assert_allclose(r, jnp.zeros_like(r), atol=1e-4)
+
+    def test_residual_detects_perturbation(self):
+        _, _, ws, bs, *_ = micro_params()
+        u = rand(31, 1, P.channels, P.height, P.width)
+        h = jnp.float32(P.h)
+        u1 = kref.residual_step_ref(u, ws[0], bs[0], h, P.pad)
+        (r,) = model.step_residual(P, u, u1 + 0.1, ws[0], bs[0], h)
+        assert float(jnp.abs(r).max()) > 0.05

@@ -1,0 +1,24 @@
+//! Bench: the design-choice ablations DESIGN.md calls out — cycle count ×
+//! relaxation kind (accuracy/work trade-off), coarsening factor, hierarchy
+//! depth — real numerics + simulated cost.
+
+use resnet_mgrit::experiments::ablations;
+use resnet_mgrit::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::new("ablations");
+
+    let t = ablations::cycles_and_relax(20).expect("cycles/relax");
+    println!("{}", t.render());
+    suite.table("cycles_relax_rows", t.to_json_rows());
+
+    let t = ablations::coarsening(21).expect("coarsening");
+    println!("{}", t.render());
+    suite.table("coarsening_rows", t.to_json_rows());
+
+    let t = ablations::hierarchy_depth(16).expect("hierarchy");
+    println!("{}", t.render());
+    suite.table("hierarchy_rows", t.to_json_rows());
+
+    suite.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 4 — residual convergence histories across depths
+//! (real numerics, HostSolver), plus the timing of one MGRIT cycle per depth.
+//! Run with `--quick` (or BENCH_QUICK=1) for the short sweep.
+
+use resnet_mgrit::experiments::fig4;
+use resnet_mgrit::util::bench::Suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let mut suite = Suite::new("fig4_convergence");
+    let depths: &[usize] = if quick { &[64, 128, 256] } else { &[128, 512, 2048] };
+    let cycles = if quick { 4 } else { 8 };
+
+    // the figure data
+    let table = fig4::run(depths, cycles, 11).expect("fig4");
+    println!("{}", table.render());
+    suite.table("fig4_rows", table.to_json_rows());
+
+    // cycle cost per depth (wall time of the real solve)
+    for &d in depths {
+        suite.bench(&format!("mgrit_solve_depth_{d}_x{cycles}cycles"), || {
+            let _ = fig4::histories(&[d], cycles, 11).unwrap();
+        });
+    }
+    suite.finish();
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig 5 — the kernel-concurrency timeline within one
+//! device, and the simulator's event throughput on that schedule.
+
+use resnet_mgrit::experiments::fig5;
+use resnet_mgrit::util::bench::Suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let mut suite = Suite::new("fig5_concurrency");
+    let depth = if quick { 256 } else { 0 }; // 0 = full fig6 depth
+
+    let (table, ascii) = fig5::run(depth).expect("fig5");
+    println!("{}", table.render());
+    println!("{ascii}");
+    suite.table("fig5_rows", table.to_json_rows());
+
+    suite.bench("simulate_one_mg_cycle_with_trace", || {
+        let _ = fig5::simulate_timeline(depth).unwrap();
+    });
+    suite.finish();
+}

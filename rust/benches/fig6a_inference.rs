@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig 6a — inference strong scaling of the 4,096-layer /
+//! 3.25M-param network, serial vs MG over GPU counts (simulated TX-GAIA).
+
+use resnet_mgrit::experiments::fig6;
+use resnet_mgrit::util::bench::Suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let mut suite = Suite::new("fig6a_inference");
+    let gpus: &[usize] = if quick { &[1, 4, 24] } else { &fig6::GPU_COUNTS };
+
+    let table = fig6::fig6a(gpus).expect("fig6a");
+    println!("{}", table.render());
+    suite.table("fig6a_rows", table.to_json_rows());
+
+    suite.bench("simulate_mg_24gpu_inference", || {
+        let spec = resnet_mgrit::model::NetSpec::fig6();
+        let _ = fig6::simulate_mg(&spec, 24, 1, false).unwrap();
+    });
+    suite.finish();
+}

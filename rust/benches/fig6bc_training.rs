@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 6b (training-phase fwd prop: serial vs PM vs MG)
+//! and Fig 6c (compute/communication decomposition) on the simulated
+//! TX-GAIA cluster.
+
+use resnet_mgrit::experiments::fig6;
+use resnet_mgrit::util::bench::Suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let mut suite = Suite::new("fig6bc_training");
+    let gpus: &[usize] = if quick { &[1, 4, 24] } else { &fig6::GPU_COUNTS };
+
+    let b = fig6::fig6b(gpus).expect("fig6b");
+    println!("{}", b.render());
+    suite.table("fig6b_rows", b.to_json_rows());
+
+    let c = fig6::fig6c(gpus).expect("fig6c");
+    println!("{}", c.render());
+    suite.table("fig6c_rows", c.to_json_rows());
+
+    suite.bench("simulate_mg_training_fwd_24gpu", || {
+        let spec = resnet_mgrit::model::NetSpec::fig6();
+        let _ = fig6::simulate_mg(&spec, 24, 2, false).unwrap();
+    });
+    suite.finish();
+}

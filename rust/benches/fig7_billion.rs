@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig 7 — the 2.07B-parameter network, MG vs
+//! Model-Partitioned over 1..64 GPUs (simulated; the preset is
+//! cost-model-only), with the paper's compute-ratio trend.
+
+use resnet_mgrit::experiments::fig7;
+use resnet_mgrit::util::bench::Suite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let mut suite = Suite::new("fig7_billion");
+    let gpus: &[usize] = if quick { &[1, 4, 64] } else { &fig7::GPU_COUNTS };
+
+    let table = fig7::run(gpus).expect("fig7");
+    println!("{}", table.render());
+    suite.table("fig7_rows", table.to_json_rows());
+
+    suite.bench("simulate_fig7_mg_64gpu", || {
+        let spec = resnet_mgrit::model::NetSpec::fig7();
+        let _ = resnet_mgrit::experiments::fig6::simulate_mg(&spec, 64, 2, false).unwrap();
+    });
+    suite.finish();
+}

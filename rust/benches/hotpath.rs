@@ -1,0 +1,75 @@
+//! Bench: the L3 hot paths (EXPERIMENTS.md §Perf) — host conv kernels,
+//! residual-step + VJP, one MGRIT cycle, simulator event throughput, and
+//! PJRT artifact execution overhead. These are the before/after numbers for
+//! the optimization log.
+
+use std::sync::Arc;
+
+use resnet_mgrit::coordinator::Partition;
+use resnet_mgrit::mgrit::{self, hierarchy::Hierarchy, taskgraph, MgritOptions};
+use resnet_mgrit::model::{NetParams, NetSpec};
+use resnet_mgrit::perfmodel::ClusterModel;
+use resnet_mgrit::solver::host::HostSolver;
+use resnet_mgrit::solver::BlockSolver;
+use resnet_mgrit::tensor::{ops, vjp, Tensor};
+use resnet_mgrit::util::bench::{black_box, Suite};
+use resnet_mgrit::util::prng::Rng;
+
+fn main() {
+    let mut suite = Suite::new("hotpath");
+    let mut rng = Rng::new(1);
+
+    // L3 kernel: conv2d at the mnist preset shape (8ch 28x28 k3)
+    let u = Tensor::randn(&[16, 8, 28, 28], 1.0, &mut rng);
+    let w = Tensor::randn(&[8, 8, 3, 3], 0.2, &mut rng);
+    let b = Tensor::randn(&[8], 0.2, &mut rng);
+    suite.bench("conv2d_b16_c8_28x28_k3", || {
+        black_box(ops::conv2d(&u, &w, 1).unwrap());
+    });
+    suite.bench("residual_step_b16_c8_28x28", || {
+        black_box(ops::residual_step(&u, &w, &b, 0.0625, 1).unwrap());
+    });
+    let lam = Tensor::randn(&[16, 8, 28, 28], 1.0, &mut rng);
+    suite.bench("residual_step_vjp_b16_c8_28x28", || {
+        black_box(vjp::residual_step_vjp(&u, &w, &b, 0.0625, 1, &lam).unwrap());
+    });
+
+    // fig6 preset shape (4ch 24x24 k7)
+    let u6 = Tensor::randn(&[1, 4, 24, 24], 1.0, &mut rng);
+    let w6 = Tensor::randn(&[4, 4, 7, 7], 0.1, &mut rng);
+    suite.bench("conv2d_b1_c4_24x24_k7", || {
+        black_box(ops::conv2d(&u6, &w6, 3).unwrap());
+    });
+
+    // one full MGRIT cycle on the mnist preset (host numerics)
+    let spec = Arc::new(NetSpec::mnist());
+    let params = Arc::new(NetParams::init(&spec, 2).unwrap());
+    let solver = HostSolver::new(spec.clone(), params).unwrap();
+    let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let opts = MgritOptions { max_cycles: 1, tol: 0.0, ..Default::default() };
+    suite.bench("mgrit_cycle_mnist_b1", || {
+        black_box(mgrit::solve_forward(&solver, 32, spec.h(), &u0, &opts).unwrap());
+    });
+    suite.bench("serial_fprop_mnist_b1", || {
+        black_box(solver.block_fprop(0, 1, 32, spec.h(), &u0).unwrap());
+    });
+
+    // simulator throughput on the fig6 2-cycle schedule at 24 GPUs
+    let fig6 = NetSpec::fig6();
+    let hier = Hierarchy::build(fig6.n_res(), fig6.h(), 4, 8, 8).unwrap();
+    let part = Partition::contiguous(hier.fine().blocks(4).len(), 24).unwrap();
+    let g = taskgraph::mg_forward(&fig6, &hier, &part, 1, 2);
+    println!("  (fig6 schedule: {} tasks)", g.n_tasks());
+    suite.bench("simulate_fig6_24gpu_2cycles", || {
+        black_box(
+            resnet_mgrit::sim::simulate(&g, &ClusterModel::tx_gaia(24), false).unwrap(),
+        );
+    });
+
+    // taskgraph generation itself
+    suite.bench("build_fig6_taskgraph_2cycles", || {
+        black_box(taskgraph::mg_forward(&fig6, &hier, &part, 1, 2));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,213 @@
+//! Layered run configuration: defaults ← optional config file ← CLI flags.
+//!
+//! The config file format is a minimal `key = value` per line (`#` comments),
+//! covering exactly the knobs the CLI exposes, so runs are reproducible from
+//! a checked-in file (`mgrit train --config runs/mnist.cfg --lr 0.1`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::mgrit::{MgritOptions, RelaxKind};
+use crate::util::args::Args;
+use crate::Result;
+
+/// Everything a run needs; sub-structs are derived views.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub preset: String,
+    pub batch: usize,
+    pub cycles: usize,
+    pub devices: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub tol: f64,
+    pub max_levels: usize,
+    pub relax: RelaxKind,
+    pub data_dir: String,
+    pub artifacts_dir: String,
+    /// Execution backend: "host" (pure rust) or "pjrt" (AOT artifacts).
+    pub backend: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            preset: "mnist".into(),
+            batch: 16,
+            cycles: 2,
+            devices: 4,
+            steps: 200,
+            lr: 0.05,
+            seed: 7,
+            tol: 1e-9,
+            max_levels: 2,
+            relax: RelaxKind::FCF,
+            data_dir: "data".into(),
+            artifacts_dir: "artifacts".into(),
+            backend: "host".into(),
+        }
+    }
+}
+
+fn parse_relax(s: &str) -> Result<RelaxKind> {
+    Ok(match s.to_ascii_uppercase().as_str() {
+        "F" => RelaxKind::F,
+        "FC" => RelaxKind::FC,
+        "FCF" => RelaxKind::FCF,
+        _ => bail!("unknown relaxation {s:?} (F|FC|FCF)"),
+    })
+}
+
+/// Parse a `key = value` config file into a map.
+pub fn parse_config_file(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+impl RunConfig {
+    /// Defaults ← config file (if `--config`) ← CLI flags.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(Path::new(path))
+                .with_context(|| format!("reading config {path}"))?;
+            let map = parse_config_file(&text)?;
+            cfg.apply(&map)?;
+        }
+        // CLI flags override
+        let mut cli = BTreeMap::new();
+        for key in [
+            "preset", "batch", "cycles", "devices", "steps", "lr", "seed", "tol",
+            "max-levels", "relax", "data-dir", "artifacts-dir", "backend",
+        ] {
+            if let Some(v) = args.get(key) {
+                cli.insert(key.replace('-', "_"), v.to_string());
+            }
+        }
+        cfg.apply(&cli)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, map: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in map {
+            match k.as_str() {
+                "preset" => self.preset = v.clone(),
+                "batch" => self.batch = v.parse().with_context(|| format!("batch={v}"))?,
+                "cycles" => self.cycles = v.parse().with_context(|| format!("cycles={v}"))?,
+                "devices" => self.devices = v.parse().with_context(|| format!("devices={v}"))?,
+                "steps" => self.steps = v.parse().with_context(|| format!("steps={v}"))?,
+                "lr" => self.lr = v.parse().with_context(|| format!("lr={v}"))?,
+                "seed" => self.seed = v.parse().with_context(|| format!("seed={v}"))?,
+                "tol" => self.tol = v.parse().with_context(|| format!("tol={v}"))?,
+                "max_levels" => {
+                    self.max_levels = v.parse().with_context(|| format!("max_levels={v}"))?
+                }
+                "relax" => self.relax = parse_relax(v)?,
+                "data_dir" => self.data_dir = v.clone(),
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                "backend" => self.backend = v.clone(),
+                _ => bail!("unknown config key {k:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.devices == 0 || self.cycles == 0 {
+            bail!("batch/devices/cycles must be positive");
+        }
+        if !matches!(self.backend.as_str(), "host" | "pjrt") {
+            bail!("backend must be host|pjrt, got {:?}", self.backend);
+        }
+        crate::model::NetSpec::by_name(&self.preset)?;
+        Ok(())
+    }
+
+    /// MGRIT options implied by this config.
+    pub fn mgrit_options(&self) -> MgritOptions {
+        MgritOptions {
+            max_cycles: self.cycles,
+            tol: self.tol,
+            relax: self.relax,
+            max_levels: self.max_levels,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let a = args(&["train", "--preset", "micro", "--lr", "0.1", "--relax", "FC"]);
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.preset, "micro");
+        assert_eq!(cfg.lr, 0.1);
+        assert_eq!(cfg.relax, RelaxKind::FC);
+        assert_eq!(cfg.batch, 16); // default preserved
+    }
+
+    #[test]
+    fn config_file_then_cli() {
+        let dir = std::env::temp_dir().join("mgrit_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(&path, "# a run\npreset = micro\nlr = 0.2\nbatch = 4\n").unwrap();
+        let a = args(&["train", "--config", path.to_str().unwrap(), "--lr", "0.3"]);
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.preset, "micro");
+        assert_eq!(cfg.batch, 4); // from file
+        assert_eq!(cfg.lr, 0.3); // CLI wins
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_args(&args(&["x", "--preset", "nope"])).is_err());
+        assert!(RunConfig::from_args(&args(&["x", "--batch", "0"])).is_err());
+        assert!(RunConfig::from_args(&args(&["x", "--relax", "XYZ"])).is_err());
+        assert!(RunConfig::from_args(&args(&["x", "--backend", "cuda"])).is_err());
+    }
+
+    #[test]
+    fn file_parser_handles_comments_and_errors() {
+        let m = parse_config_file("a = 1\n# comment\n\nb = two # trailing\n").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "two");
+        assert!(parse_config_file("not-a-pair\n").is_err());
+    }
+
+    #[test]
+    fn mgrit_options_derived() {
+        let a = args(&["x", "--cycles", "3", "--tol", "1e-6", "--max-levels", "4"]);
+        let cfg = RunConfig::from_args(&a).unwrap();
+        let o = cfg.mgrit_options();
+        assert_eq!(o.max_cycles, 3);
+        assert_eq!(o.tol, 1e-6);
+        assert_eq!(o.max_levels, 4);
+    }
+}

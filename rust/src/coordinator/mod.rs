@@ -1,0 +1,24 @@
+//! The layer-parallel coordinator — the paper's systems contribution.
+//!
+//! The MGRIT engine exposes its work as independent per-block primitives
+//! (F-relaxation per block, C-relaxation per C-point, residual/restriction
+//! per C-point, layer-local parameter gradients). This module executes them
+//! concurrently:
+//!
+//! - [`streams::StreamPool`] — long-lived worker threads, one per *stream*
+//!   (the CUDA-stream analogue). Each worker owns a private `BlockSolver`
+//!   built by a [`crate::solver::SolverFactory`] (PJRT contexts are not
+//!   `Send`, same as per-rank CuDNN handles).
+//! - [`partition::Partition`] — contiguous layer-block → device assignment
+//!   (the paper's MPI model partitioning).
+//! - [`driver::ParallelMgrit`] — the phase-parallel FCF/FAS cycle, with
+//!   per-phase barriers, boundary-state "communication" accounting, and a
+//!   kernel-event trace (the real-run analogue of the paper's nvprof Fig 5).
+
+pub mod driver;
+pub mod partition;
+pub mod streams;
+
+pub use driver::{ParallelMgrit, RunMetrics};
+pub use partition::Partition;
+pub use streams::{StreamPool, TraceEvent};

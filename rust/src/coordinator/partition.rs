@@ -1,0 +1,139 @@
+//! Layer-block → device partitioning (the paper's contiguous MPI model
+//! partitions: "layer blocks are distributed into contiguous model
+//! partitions across GPUs").
+
+use anyhow::{bail, Result};
+
+/// A contiguous assignment of `n_blocks` layer blocks to `n_devices`
+/// devices: device d owns blocks `bounds[d]..bounds[d+1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Balanced contiguous partition: every device gets ⌊n/p⌋ or ⌈n/p⌉
+    /// blocks, the larger shares first.
+    pub fn contiguous(n_blocks: usize, n_devices: usize) -> Result<Partition> {
+        if n_devices == 0 {
+            bail!("need at least one device");
+        }
+        if n_blocks == 0 {
+            bail!("need at least one block");
+        }
+        let p = n_devices.min(n_blocks);
+        let base = n_blocks / p;
+        let extra = n_blocks % p;
+        let mut bounds = Vec::with_capacity(p + 1);
+        bounds.push(0);
+        for d in 0..p {
+            let take = base + usize::from(d < extra);
+            bounds.push(bounds[d] + take);
+        }
+        Ok(Partition { bounds })
+    }
+
+    /// Number of devices actually used (≤ requested when blocks < devices).
+    pub fn n_devices(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Owning device of a block.
+    pub fn device_of(&self, block: usize) -> usize {
+        debug_assert!(block < self.n_blocks());
+        // bounds is sorted; partition_point returns the first d with
+        // bounds[d] > block, so the owner is d - 1
+        self.bounds.partition_point(|&b| b <= block) - 1
+    }
+
+    /// Blocks owned by device d.
+    pub fn blocks_of(&self, d: usize) -> std::ops::Range<usize> {
+        self.bounds[d]..self.bounds[d + 1]
+    }
+
+    /// Number of device-boundary crossings between consecutive blocks —
+    /// each is one activation transfer during C-relaxation.
+    pub fn n_boundaries(&self) -> usize {
+        self.n_devices() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite as pt;
+
+    #[test]
+    fn balanced_exact_division() {
+        let p = Partition::contiguous(8, 4).unwrap();
+        assert_eq!(p.n_devices(), 4);
+        for d in 0..4 {
+            assert_eq!(p.blocks_of(d).len(), 2);
+        }
+    }
+
+    #[test]
+    fn balanced_with_remainder() {
+        let p = Partition::contiguous(10, 4).unwrap();
+        let sizes: Vec<usize> = (0..4).map(|d| p.blocks_of(d).len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn more_devices_than_blocks() {
+        let p = Partition::contiguous(3, 8).unwrap();
+        assert_eq!(p.n_devices(), 3);
+        assert_eq!(p.n_blocks(), 3);
+    }
+
+    #[test]
+    fn device_of_consistent_with_blocks_of() {
+        let p = Partition::contiguous(11, 3).unwrap();
+        for d in 0..p.n_devices() {
+            for b in p.blocks_of(d) {
+                assert_eq!(p.device_of(b), d);
+            }
+        }
+    }
+
+    #[test]
+    fn single_device() {
+        let p = Partition::contiguous(5, 1).unwrap();
+        assert_eq!(p.n_devices(), 1);
+        assert_eq!(p.n_boundaries(), 0);
+        assert_eq!(p.device_of(4), 0);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(Partition::contiguous(0, 2).is_err());
+        assert!(Partition::contiguous(2, 0).is_err());
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        pt::check("partition-invariants", |rng| {
+            let n = pt::gen_usize(rng, 1, 500);
+            let p_req = pt::gen_usize(rng, 1, 64);
+            let p = Partition::contiguous(n, p_req).unwrap();
+            // full coverage, contiguous, balanced within 1
+            assert_eq!(p.n_blocks(), n);
+            let sizes: Vec<usize> = (0..p.n_devices()).map(|d| p.blocks_of(d).len()).collect();
+            let mn = *sizes.iter().min().unwrap();
+            let mx = *sizes.iter().max().unwrap();
+            assert!(mx - mn <= 1, "unbalanced: {sizes:?}");
+            assert!(sizes.iter().all(|&s| s >= 1));
+            let total: usize = sizes.iter().sum();
+            assert_eq!(total, n);
+            // ownership is monotone non-decreasing over blocks
+            let owners: Vec<usize> = (0..n).map(|b| p.device_of(b)).collect();
+            for w in owners.windows(2) {
+                assert!(w[1] == w[0] || w[1] == w[0] + 1);
+            }
+        });
+    }
+}

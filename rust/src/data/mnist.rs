@@ -1,0 +1,302 @@
+//! MNIST loading (LeCun idx format) + the procedural digit synthesizer.
+//!
+//! The synthesizer renders each class from a fixed 7×5 glyph bitmap (a
+//! blocky seven-segment-style font), upscales it, applies per-sample random
+//! translation, intensity scaling, and pixel noise — a 10-class 28×28 image
+//! stream with enough structure that a small ResNet separates it well, and
+//! hard enough that training dynamics are non-trivial.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// A labelled image set: images `[N, 1, 28, 28]` in [0, 1], labels 0..10.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<Tensor>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Assemble a batch tensor `[B, 1, 28, 28]` + labels from indices.
+    pub fn batch(&self, idx: &[usize]) -> Result<(Tensor, Vec<i32>)> {
+        if idx.is_empty() {
+            bail!("empty batch");
+        }
+        let per = self.images[0].len();
+        let mut data = Vec::with_capacity(idx.len() * per);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            if i >= self.len() {
+                bail!("index {i} out of range ({})", self.len());
+            }
+            data.extend_from_slice(self.images[i].data());
+            labels.push(self.labels[i]);
+        }
+        let dims = self.images[0].dims();
+        let t = Tensor::new(
+            std::iter::once(idx.len()).chain(dims[1..].iter().copied()).collect(),
+            data,
+        )?;
+        Ok((t, labels))
+    }
+
+    /// Random batch.
+    pub fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Result<(Tensor, Vec<i32>)> {
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(self.len())).collect();
+        self.batch(&idx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// idx format (real MNIST, when files are present)
+// ---------------------------------------------------------------------------
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Load idx-format images + labels (e.g. train-images-idx3-ubyte).
+pub fn load_idx(images_path: &Path, labels_path: &Path, limit: usize) -> Result<Dataset> {
+    let mut imf = std::fs::File::open(images_path)
+        .with_context(|| format!("opening {}", images_path.display()))?;
+    if read_u32(&mut imf)? != 0x0000_0803 {
+        bail!("bad idx3 magic in {}", images_path.display());
+    }
+    let n = read_u32(&mut imf)? as usize;
+    let rows = read_u32(&mut imf)? as usize;
+    let cols = read_u32(&mut imf)? as usize;
+    if rows != 28 || cols != 28 {
+        bail!("expected 28x28 images, got {rows}x{cols}");
+    }
+    let mut lbf = std::fs::File::open(labels_path)
+        .with_context(|| format!("opening {}", labels_path.display()))?;
+    if read_u32(&mut lbf)? != 0x0000_0801 {
+        bail!("bad idx1 magic in {}", labels_path.display());
+    }
+    let n_lab = read_u32(&mut lbf)? as usize;
+    if n_lab != n {
+        bail!("image/label count mismatch: {n} vs {n_lab}");
+    }
+    let take = n.min(limit.max(1));
+    let mut images = Vec::with_capacity(take);
+    let mut labels = Vec::with_capacity(take);
+    let mut buf = vec![0u8; 28 * 28];
+    let mut lab = [0u8; 1];
+    for _ in 0..take {
+        imf.read_exact(&mut buf)?;
+        lbf.read_exact(&mut lab)?;
+        let data: Vec<f32> = buf.iter().map(|&p| p as f32 / 255.0).collect();
+        images.push(Tensor::new(vec![1, 1, 28, 28], data)?);
+        labels.push(lab[0] as i32);
+    }
+    Ok(Dataset { images, labels })
+}
+
+// ---------------------------------------------------------------------------
+// synthetic digits
+// ---------------------------------------------------------------------------
+
+/// 7 rows × 5 cols glyphs for digits 0–9.
+const GLYPHS: [[u8; 7]; 10] = [
+    // each u8 encodes 5 pixels (bit 4 = leftmost)
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111], // 2
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// Procedural 28×28 digit generator (deterministic per seed).
+pub struct SyntheticDigits {
+    rng: Rng,
+    noise: f32,
+}
+
+impl SyntheticDigits {
+    pub fn new(seed: u64) -> SyntheticDigits {
+        SyntheticDigits { rng: Rng::new(seed), noise: 0.15 }
+    }
+
+    pub fn with_noise(seed: u64, noise: f32) -> SyntheticDigits {
+        SyntheticDigits { rng: Rng::new(seed), noise }
+    }
+
+    /// Render one sample of class `digit`.
+    pub fn render(&mut self, digit: usize) -> Tensor {
+        assert!(digit < 10);
+        let glyph = &GLYPHS[digit];
+        let mut img = vec![0.0f32; 28 * 28];
+        // glyph cell size ~3x upscale → 21x15 body; random top-left offset
+        let scale = 3usize;
+        let body_h = 7 * scale;
+        let body_w = 5 * scale;
+        let oy = 2 + self.rng.below(28 - body_h - 3);
+        let ox = 3 + self.rng.below(28 - body_w - 5);
+        let intensity = self.rng.range(0.7, 1.0);
+        for (r, bits) in glyph.iter().enumerate() {
+            for c in 0..5 {
+                if bits & (1 << (4 - c)) != 0 {
+                    for dy in 0..scale {
+                        for dx in 0..scale {
+                            let y = oy + r * scale + dy;
+                            let x = ox + c * scale + dx;
+                            img[y * 28 + x] = intensity;
+                        }
+                    }
+                }
+            }
+        }
+        // blur-ish smoothing: one box pass to soften edges
+        let mut smooth = img.clone();
+        for y in 1..27 {
+            for x in 1..27 {
+                let s: f32 = [
+                    img[(y - 1) * 28 + x],
+                    img[(y + 1) * 28 + x],
+                    img[y * 28 + x - 1],
+                    img[y * 28 + x + 1],
+                    4.0 * img[y * 28 + x],
+                ]
+                .iter()
+                .sum();
+                smooth[y * 28 + x] = s / 8.0;
+            }
+        }
+        // pixel noise
+        for v in smooth.iter_mut() {
+            *v = (*v + self.noise * self.rng.normal()).clamp(0.0, 1.0);
+        }
+        Tensor::new(vec![1, 1, 28, 28], smooth).unwrap()
+    }
+
+    /// A balanced dataset of `n` samples (classes round-robin).
+    pub fn dataset(&mut self, n: usize) -> Dataset {
+        let mut images = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let d = i % 10;
+            images.push(self.render(d));
+            labels.push(d as i32);
+        }
+        Dataset { images, labels }
+    }
+}
+
+/// MNIST if the idx files exist under `dir`, otherwise synthetic digits.
+pub fn load_or_synthesize(dir: &Path, n: usize, seed: u64) -> Result<(Dataset, &'static str)> {
+    let im = dir.join("train-images-idx3-ubyte");
+    let lb = dir.join("train-labels-idx1-ubyte");
+    if im.exists() && lb.exists() {
+        Ok((load_idx(&im, &lb, n)?, "mnist-idx"))
+    } else {
+        Ok((SyntheticDigits::new(seed).dataset(n), "synthetic"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_shapes_and_range() {
+        let mut g = SyntheticDigits::new(1);
+        for d in 0..10 {
+            let img = g.render(d);
+            assert_eq!(img.dims(), &[1, 1, 28, 28]);
+            for &v in img.data() {
+                assert!((0.0..=1.0).contains(&v));
+            }
+            // the digit body must have substantial ink
+            let ink: f32 = img.data().iter().sum();
+            assert!(ink > 10.0, "digit {d} too faint: {ink}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean images of different classes must differ substantially
+        let mut g = SyntheticDigits::with_noise(2, 0.0);
+        let mean = |d: usize, g: &mut SyntheticDigits| -> Vec<f32> {
+            let mut acc = vec![0.0f32; 784];
+            for _ in 0..8 {
+                for (a, v) in acc.iter_mut().zip(g.render(d).data()) {
+                    *a += v / 8.0;
+                }
+            }
+            acc
+        };
+        let m0 = mean(0, &mut g);
+        let m1 = mean(1, &mut g);
+        let diff: f32 = m0.iter().zip(&m1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 5.0, "class means too close: {diff}");
+    }
+
+    #[test]
+    fn dataset_balanced_and_batchable() {
+        let ds = SyntheticDigits::new(3).dataset(40);
+        assert_eq!(ds.len(), 40);
+        for d in 0..10 {
+            assert_eq!(ds.labels.iter().filter(|&&l| l == d).count(), 4);
+        }
+        let (batch, labels) = ds.batch(&[0, 11, 22]).unwrap();
+        assert_eq!(batch.dims(), &[3, 1, 28, 28]);
+        assert_eq!(labels, vec![0, 1, 2]);
+        assert!(ds.batch(&[999]).is_err());
+        assert!(ds.batch(&[]).is_err());
+    }
+
+    #[test]
+    fn generator_deterministic() {
+        let a = SyntheticDigits::new(7).render(5);
+        let b = SyntheticDigits::new(7).render(5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sample_batch_sizes() {
+        let ds = SyntheticDigits::new(4).dataset(30);
+        let mut rng = Rng::new(5);
+        let (b, l) = ds.sample_batch(16, &mut rng).unwrap();
+        assert_eq!(b.dims()[0], 16);
+        assert_eq!(l.len(), 16);
+    }
+
+    #[test]
+    fn load_idx_rejects_garbage() {
+        let dir = std::env::temp_dir().join("mgrit_idx_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let im = dir.join("im");
+        let lb = dir.join("lb");
+        std::fs::write(&im, [0u8; 16]).unwrap();
+        std::fs::write(&lb, [0u8; 8]).unwrap();
+        assert!(load_idx(&im, &lb, 10).is_err());
+    }
+
+    #[test]
+    fn load_or_synthesize_falls_back() {
+        let (ds, src) = load_or_synthesize(Path::new("/nonexistent"), 20, 1).unwrap();
+        assert_eq!(src, "synthetic");
+        assert_eq!(ds.len(), 20);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data pipeline: MNIST idx files when available, and a procedural
+//! synthetic-digit generator as the offline substitute (DESIGN.md §3).
+//! The accuracy-parity experiment compares MG-vs-serial training on
+//! *identical* data, so the generator substitution cancels out.
+
+pub mod mnist;
+
+pub use mnist::{Dataset, SyntheticDigits};

@@ -1,0 +1,172 @@
+//! Ablations over the design choices DESIGN.md calls out: MG cycle count,
+//! coarsening factor c, relaxation pattern, and hierarchy depth. Real
+//! numerics (HostSolver) for convergence quality, the simulator for cost —
+//! together they expose the accuracy/throughput trade-off behind the
+//! paper's "two cycles suffice".
+
+use std::sync::Arc;
+
+use crate::coordinator::Partition;
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::{self, taskgraph, MgritOptions, RelaxKind};
+use crate::model::{NetParams, NetSpec};
+use crate::perfmodel::ClusterModel;
+use crate::sim;
+use crate::solver::host::HostSolver;
+use crate::solver::BlockSolver;
+use crate::tensor::Tensor;
+use crate::util::json::{num, s};
+use crate::util::prng::Rng;
+use crate::Result;
+
+use super::Table;
+
+fn state_error_after(
+    solver: &HostSolver,
+    u0: &Tensor,
+    n: usize,
+    opts: &MgritOptions,
+) -> Result<(f64, usize)> {
+    let h = solver.spec().h();
+    let (mg, stats) = mgrit::solve_forward(solver, n, h, u0, opts)?;
+    let serial = solver.block_fprop(0, 1, n, h, u0)?;
+    let err = crate::util::stats::rel_l2_err(
+        mg.last().unwrap().data(),
+        serial.last().unwrap().data(),
+    );
+    Ok((err, stats.phi_evals))
+}
+
+/// Accuracy-vs-work ablation over cycle count and relaxation kind.
+pub fn cycles_and_relax(seed: u64) -> Result<Table> {
+    let spec = Arc::new(NetSpec::mnist());
+    let params = Arc::new(NetParams::init(&spec, seed)?);
+    let solver = HostSolver::new(spec.clone(), params)?;
+    let mut rng = Rng::new(seed + 1);
+    let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let n = spec.n_res();
+
+    let mut t = Table::new(
+        "Ablation: cycles × relaxation — final-state error vs Φ-evaluations",
+        &["cycles", "relax", "state_rel_err", "phi_evals", "work_vs_serial"],
+    );
+    for cycles in [1usize, 2, 3] {
+        for (relax, name) in [(RelaxKind::F, "F"), (RelaxKind::FC, "FC"), (RelaxKind::FCF, "FCF")]
+        {
+            let opts = MgritOptions { max_cycles: cycles, tol: 0.0, relax, ..Default::default() };
+            let (err, evals) = state_error_after(&solver, &u0, n, &opts)?;
+            t.row(vec![
+                num(cycles as f64),
+                s(name),
+                num(err),
+                num(evals as f64),
+                num(evals as f64 / n as f64),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Coarsening-factor ablation: convergence per cycle vs c.
+pub fn coarsening(seed: u64) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation: coarsening factor c — contraction per cycle (depth 64)",
+        &["c", "cycle1_norm", "cycle3_norm", "contraction_per_cycle"],
+    );
+    for c in [2usize, 4, 8, 16] {
+        let mut spec = NetSpec::fig6_depth(64);
+        spec.coarsen = c;
+        let spec = Arc::new(spec);
+        let params = Arc::new(NetParams::init(&spec, seed)?);
+        let solver = HostSolver::new(spec.clone(), params)?;
+        let mut rng = Rng::new(seed + c as u64);
+        let u0 = Tensor::randn(&[1, 4, 24, 24], 0.5, &mut rng);
+        let hier = Hierarchy::two_level(64, spec.h(), c)?;
+        let opts = MgritOptions { max_cycles: 3, tol: 0.0, ..Default::default() };
+        let (_, stats) = mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts)?;
+        let n1 = stats.residual_norms[0];
+        let n3 = stats.residual_norms[2];
+        t.row(vec![num(c as f64), num(n1), num(n3), num((n3 / n1).sqrt())]);
+    }
+    Ok(t)
+}
+
+/// Two-level vs multilevel hierarchy: simulated makespan at scale.
+pub fn hierarchy_depth(gpus: usize) -> Result<Table> {
+    let spec = NetSpec::fig6();
+    let mut t = Table::new(
+        "Ablation: hierarchy depth — simulated MG time (fig6 preset)",
+        &["max_levels", "n_levels", "makespan_ms", "comm_ms"],
+    );
+    for max_levels in [2usize, 3, 5, 8] {
+        let hier = Hierarchy::build(spec.n_res(), spec.h(), spec.coarsen, max_levels, 8)?;
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let part = Partition::contiguous(n_blocks, gpus)?;
+        let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 2);
+        let rep = sim::simulate(&g, &ClusterModel::tx_gaia(gpus), false)?;
+        t.row(vec![
+            num(max_levels as f64),
+            num(hier.n_levels() as f64),
+            num(rep.makespan_s * 1e3),
+            num(rep.comm_total_s * 1e3),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_cycles_reduce_state_error() {
+        let t = cycles_and_relax(20).unwrap();
+        // FCF rows at cycles 1, 2, 3
+        let fcf: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[1].as_str().unwrap() == "FCF")
+            .map(|r| r[2].as_f64().unwrap())
+            .collect();
+        assert_eq!(fcf.len(), 3);
+        assert!(fcf[1] < fcf[0]);
+        assert!(fcf[2] <= fcf[1] * 1.5);
+        // the paper's early-stopping claim: 2 FCF cycles give a few-percent
+        // state error — accurate enough for training gradients
+        assert!(fcf[1] < 5e-2, "2-cycle error {}", fcf[1]);
+    }
+
+    #[test]
+    fn fcf_stronger_than_f_per_cycle() {
+        let t = cycles_and_relax(21).unwrap();
+        let get = |cycles: f64, relax: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0].as_f64().unwrap() == cycles && r[1].as_str().unwrap() == relax)
+                .unwrap()[2]
+                .as_f64()
+                .unwrap()
+        };
+        assert!(get(2.0, "FCF") <= get(2.0, "F"));
+    }
+
+    #[test]
+    fn multilevel_faster_than_two_level_at_scale() {
+        let t = hierarchy_depth(16).unwrap();
+        let two = t.rows[0][2].as_f64().unwrap();
+        let deep = t.rows.last().unwrap()[2].as_f64().unwrap();
+        assert!(
+            deep < two,
+            "multilevel should beat two-level at 16 GPUs: {deep} vs {two}"
+        );
+    }
+
+    #[test]
+    fn coarsening_table_complete() {
+        let t = coarsening(22).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for r in &t.rows {
+            assert!(r[3].as_f64().unwrap() < 1.0, "no contraction: {r:?}");
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Extension (paper §V): MG layer-parallelism *combined* with data
+//! parallelism — "multiplicative-compounding parallelism".
+//!
+//! R model replicas each run the MG training-phase forward over G GPUs
+//! (R·G devices total); replicas are embarrassingly parallel during the
+//! solve and synchronize gradients with a ring all-reduce at the end of the
+//! step. The experiment sweeps (R, G) splits of a fixed device budget and
+//! reports which split wins — the compounding claim is that the best split
+//! uses *both* axes once either one saturates.
+
+use crate::coordinator::Partition;
+use crate::mgrit::taskgraph;
+use crate::model::{cost, NetSpec};
+use crate::perfmodel::ClusterModel;
+use crate::sim;
+use crate::util::json::num;
+use crate::Result;
+
+use super::fig6::sim_hierarchy;
+use super::Table;
+
+/// Ring all-reduce time for `bytes` of gradients over `r` replicas:
+/// 2·(r−1)/r · bytes / bandwidth + 2·(r−1)·latency.
+fn allreduce_s(cluster: &ClusterModel, r: usize, bytes: f64) -> f64 {
+    if r <= 1 {
+        return 0.0;
+    }
+    let n = &cluster.net;
+    2.0 * (r as f64 - 1.0) / r as f64 * bytes / n.bandwidth_bps
+        + 2.0 * (r as f64 - 1.0) * n.latency_s
+}
+
+/// Simulated time of one data×layer-parallel training-phase forward step:
+/// max over replicas (identical) + gradient all-reduce across replicas.
+pub fn step_time(spec: &NetSpec, replicas: usize, gpus_per_replica: usize) -> Result<f64> {
+    let hier = sim_hierarchy(spec)?;
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let part = Partition::contiguous(n_blocks, gpus_per_replica)?;
+    let g = taskgraph::mg_forward(spec, &hier, &part, 1, 2);
+    let rep = sim::simulate(&g, &ClusterModel::tx_gaia(gpus_per_replica), false)?;
+    // gradient volume: the parameters each replica's partition owns are
+    // reduced with the peers holding the same shard → bytes per device is
+    // params/gpus_per_replica; the ring runs across replicas
+    let cluster = ClusterModel::tx_gaia(replicas * gpus_per_replica);
+    let grad_bytes = 4.0 * spec.param_count() as f64 / gpus_per_replica as f64;
+    Ok(rep.makespan_s + allreduce_s(&cluster, replicas, grad_bytes))
+}
+
+/// Sweep all (R, G) factorizations of a device budget.
+pub fn run(spec_name: &str, total_devices: usize) -> Result<Table> {
+    let spec = NetSpec::by_name(spec_name)?;
+    let mut t = Table::new(
+        &format!(
+            "Compound parallelism ({spec_name}, {total_devices} devices): data replicas × MG GPUs"
+        ),
+        &["replicas", "gpus_per_replica", "step_ms", "throughput_steps_per_s"],
+    );
+    let mut g = 1;
+    while g <= total_devices {
+        if total_devices % g == 0 {
+            let r = total_devices / g;
+            let s = step_time(&spec, r, g)?;
+            // data parallelism multiplies per-step samples by R: report
+            // sample-normalized throughput (steps/s × replicas)
+            t.row(vec![
+                num(r as f64),
+                num(g as f64),
+                num(s * 1e3),
+                num(r as f64 / s),
+            ]);
+        }
+        g *= 2;
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_zero_for_one_replica() {
+        let c = ClusterModel::tx_gaia(8);
+        assert_eq!(allreduce_s(&c, 1, 1e9), 0.0);
+        assert!(allreduce_s(&c, 4, 1e9) > 0.0);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_bounded() {
+        // the ring moves < 2x the buffer regardless of replica count
+        let c = ClusterModel::tx_gaia(64);
+        let t8 = allreduce_s(&c, 8, 1e9);
+        let t64 = allreduce_s(&c, 64, 1e9);
+        let wire = 2.0 * 1e9 / c.net.bandwidth_bps;
+        assert!(t8 < wire + 8.0 * 2.0 * c.net.latency_s);
+        assert!(t64 < wire + 64.0 * 2.0 * c.net.latency_s);
+    }
+
+    #[test]
+    fn compounding_beats_pure_layer_parallelism_at_scale() {
+        // at 64 devices on the fig6 net, pure layer parallelism (1×64) has
+        // saturated; some mixed split must give higher sample throughput
+        let t = run("fig6", 64).unwrap();
+        let pure_lp = t
+            .rows
+            .iter()
+            .find(|r| r[1].as_f64().unwrap() == 64.0)
+            .unwrap()[3]
+            .as_f64()
+            .unwrap();
+        let best = t
+            .rows
+            .iter()
+            .map(|r| r[3].as_f64().unwrap())
+            .fold(0.0, f64::max);
+        assert!(
+            best > 1.2 * pure_lp,
+            "no compounding win: best {best} vs pure-LP {pure_lp}"
+        );
+    }
+
+    #[test]
+    fn sweep_covers_all_factorizations() {
+        let t = run("fig6", 16).unwrap();
+        // 1x16, 2x8, 4x4, 8x2, 16x1
+        assert_eq!(t.rows.len(), 5);
+        for r in &t.rows {
+            let reps = r[0].as_f64().unwrap();
+            let gpus = r[1].as_f64().unwrap();
+            assert_eq!(reps * gpus, 16.0);
+        }
+    }
+}

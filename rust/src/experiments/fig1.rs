@@ -1,0 +1,49 @@
+//! Fig 1 — ILSVRC winners, 2010–2017: Top-5 error vs network depth (the
+//! paper's motivation figure). Static survey data from the ILSVRC records
+//! cited by the paper [4].
+
+use crate::util::json::{num, s};
+
+use super::Table;
+
+/// (year, winning entry, layers, top-5 error %)
+const WINNERS: [(u32, &str, u32, f64); 8] = [
+    (2010, "NEC (shallow)", 1, 28.2),
+    (2011, "XRCE (shallow)", 1, 25.8),
+    (2012, "AlexNet", 8, 16.4),
+    (2013, "ZFNet", 8, 11.7),
+    (2014, "GoogLeNet", 22, 6.7),
+    (2015, "ResNet", 152, 3.57),
+    (2016, "CUImage (ensemble)", 152, 2.99),
+    (2017, "SENet", 152, 2.25),
+];
+
+/// The depth-vs-error trend table.
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Fig 1: ILSVRC winners — deeper networks, lower top-5 error",
+        &["year", "entry", "layers", "top5_err_pct"],
+    );
+    for (year, entry, layers, err) in WINNERS {
+        t.row(vec![num(year as f64), s(entry), num(layers as f64), num(err)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn trend_is_monotone() {
+        let t = super::run();
+        assert_eq!(t.rows.len(), 8);
+        // error decreases year over year while depth never decreases
+        for w in t.rows.windows(2) {
+            let e0 = w[0][3].as_f64().unwrap();
+            let e1 = w[1][3].as_f64().unwrap();
+            assert!(e1 < e0);
+            let d0 = w[0][2].as_f64().unwrap();
+            let d1 = w[1][2].as_f64().unwrap();
+            assert!(d1 >= d0);
+        }
+    }
+}

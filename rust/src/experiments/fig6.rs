@@ -1,0 +1,173 @@
+//! Fig 6 — strong scaling of the 4,096-layer / 3.25 M-parameter network
+//! (the `fig6` preset, parameter count reproduced exactly):
+//!
+//! - (a) single-image inference: serial vs MG over GPU counts;
+//! - (b) training step: serial vs PM (model-partitioned) vs MG;
+//! - (c) compute/communication decomposition of the MG and PM runs.
+//!
+//! All runs execute the real coordinator schedule in the cluster simulator
+//! (V100 + 25 GbE model). Inference uses 1 V-cycle, training 2 (the paper's
+//! early stopping); hierarchy is multilevel (the paper notes the coarsening
+//! "can be applied repeatedly" — a two-level hierarchy leaves an O(N/c)
+//! sequential coarse solve that caps scaling well below the paper's curves).
+
+use crate::coordinator::Partition;
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::taskgraph;
+use crate::model::NetSpec;
+use crate::perfmodel::ClusterModel;
+use crate::sim;
+use crate::util::json::{num, s};
+use crate::Result;
+
+use super::Table;
+
+/// The hierarchy used for all simulated scaling figures.
+pub fn sim_hierarchy(spec: &NetSpec) -> Result<Hierarchy> {
+    Hierarchy::build(spec.n_res(), spec.h(), spec.coarsen, 8, spec.coarsen * 2)
+}
+
+/// One simulated MG run at `gpus` devices; returns the report.
+pub fn simulate_mg(
+    spec: &NetSpec,
+    gpus: usize,
+    cycles: usize,
+    training: bool,
+) -> Result<sim::SimReport> {
+    let hier = sim_hierarchy(spec)?;
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let part = Partition::contiguous(n_blocks, gpus)?;
+    let g = if training {
+        taskgraph::mg_training(spec, &hier, &part, 1, cycles)
+    } else {
+        taskgraph::mg_forward(spec, &hier, &part, 1, cycles)
+    };
+    sim::simulate(&g, &ClusterModel::tx_gaia(gpus), false)
+}
+
+/// One simulated serial/PM run at `gpus` devices.
+pub fn simulate_pm(spec: &NetSpec, gpus: usize, training: bool) -> Result<sim::SimReport> {
+    let g = if training {
+        taskgraph::serial_training(spec, gpus, 1)
+    } else {
+        taskgraph::serial_forward(spec, gpus, 1)
+    };
+    sim::simulate(&g, &ClusterModel::tx_gaia(gpus), false)
+}
+
+/// Fig 6a: inference scaling (serial baseline vs MG, 1 cycle).
+pub fn fig6a(gpu_counts: &[usize]) -> Result<Table> {
+    let spec = NetSpec::fig6();
+    let serial = simulate_pm(&spec, 1, false)?.makespan_s;
+    let mut t = Table::new(
+        "Fig 6a: single-image inference, 4096-layer/3.25M net (serial vs MG)",
+        &["gpus", "serial_ms", "mg_ms", "speedup_vs_serial"],
+    );
+    for &g in gpu_counts {
+        let mg = simulate_mg(&spec, g, 1, false)?.makespan_s;
+        t.row(vec![
+            num(g as f64),
+            num(serial * 1e3),
+            num(mg * 1e3),
+            num(serial / mg),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig 6b: training-phase forward propagation (serial vs PM vs MG, 2
+/// cycles — the paper's early-stopping count; both Fig 6 and Fig 7 captions
+/// measure "strong scaling of forward propagation").
+pub fn fig6b(gpu_counts: &[usize]) -> Result<Table> {
+    let spec = NetSpec::fig6();
+    let serial = simulate_pm(&spec, 1, false)?.makespan_s;
+    let mut t = Table::new(
+        "Fig 6b: training-phase fwd prop, 4096-layer/3.25M net (serial vs PM vs MG)",
+        &["gpus", "serial_ms", "pm_ms", "mg_ms", "mg_speedup_vs_serial", "mg_speedup_vs_pm"],
+    );
+    for &g in gpu_counts {
+        let pm = simulate_pm(&spec, g, false)?.makespan_s;
+        let mg = simulate_mg(&spec, g, 2, false)?.makespan_s;
+        t.row(vec![
+            num(g as f64),
+            num(serial * 1e3),
+            num(pm * 1e3),
+            num(mg * 1e3),
+            num(serial / mg),
+            num(pm / mg),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig 6c: timing decomposition — device compute occupancy vs stall
+/// (communication + dependency wait) for the MG and PM training runs.
+pub fn fig6c(gpu_counts: &[usize]) -> Result<Table> {
+    let spec = NetSpec::fig6();
+    let mut t = Table::new(
+        "Fig 6c: compute vs communication/stall decomposition (training fwd prop)",
+        &["gpus", "algo", "compute_fraction", "stall_fraction", "comm_total_ms"],
+    );
+    for &g in gpu_counts {
+        let mg = simulate_mg(&spec, g, 2, false)?;
+        t.row(vec![
+            num(g as f64),
+            s("mg"),
+            num(mg.compute_fraction()),
+            num(mg.stall_fraction()),
+            num(mg.comm_total_s * 1e3),
+        ]);
+        let pm = simulate_pm(&spec, g, false)?;
+        t.row(vec![
+            num(g as f64),
+            s("pm"),
+            num(pm.compute_fraction()),
+            num(pm.stall_fraction()),
+            num(pm.comm_total_s * 1e3),
+        ]);
+    }
+    Ok(t)
+}
+
+/// The paper's sampled GPU counts for Fig 6.
+pub const GPU_COUNTS: [usize; 8] = [1, 2, 3, 4, 8, 12, 16, 24];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_shape_matches_paper() {
+        // paper: MG ~4x slower on 1 GPU; faster than serial by ≥1.25x at 4
+        // GPUs; ~4x at 24 GPUs
+        let t = fig6a(&[1, 4, 8, 24]).unwrap();
+        let speedup = |i: usize| t.rows[i][3].as_f64().unwrap();
+        assert!(speedup(0) < 0.5, "1 GPU: MG must be slower ({})", speedup(0));
+        assert!(speedup(1) > 0.7, "4 GPUs: MG near crossover ({})", speedup(1));
+        assert!(speedup(2) > 1.0, "8 GPUs: MG must win ({})", speedup(2));
+        assert!(speedup(3) > 2.5, "24 GPUs: MG must win big ({})", speedup(3));
+        assert!(speedup(3) > speedup(2) && speedup(2) > speedup(1));
+    }
+
+    #[test]
+    fn fig6b_mg_beats_pm_at_four_gpus() {
+        let t = fig6b(&[4, 16]).unwrap();
+        let vs_pm = |i: usize| t.rows[i][5].as_f64().unwrap();
+        assert!(vs_pm(1) > 1.0, "16 GPUs: MG must beat PM ({})", vs_pm(1));
+        assert!(vs_pm(1) > vs_pm(0), "PM gap must widen with GPUs");
+    }
+
+    #[test]
+    fn fig6c_stall_grows_with_gpus() {
+        let t = fig6c(&[2, 16]).unwrap();
+        let pm_stall: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[1].as_str().unwrap() == "pm")
+            .map(|r| r[3].as_f64().unwrap())
+            .collect();
+        assert!(pm_stall[1] > pm_stall[0], "PM stall fraction must grow: {pm_stall:?}");
+        // PM at 16 GPUs is almost entirely stalled (the paper's 97 % at 64)
+        assert!(pm_stall[1] > 0.85, "{pm_stall:?}");
+    }
+}

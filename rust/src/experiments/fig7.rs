@@ -1,0 +1,66 @@
+//! Fig 7 — the 2.07 B-parameter, 4,115-layer network (`fig7` preset,
+//! parameter count reproduced exactly): MG vs the traditional layer-wise
+//! "Model Partitioned" parallelism over 1–64 GPUs, plus the compute:total
+//! ratio the paper quotes (92.8 % at 4 GPUs → 34.5 % at 64).
+//!
+//! This preset is cost-model-only (8 GiB of parameters); the simulator runs
+//! the same schedules the coordinator would execute.
+
+use crate::model::NetSpec;
+use crate::util::json::num;
+use crate::Result;
+
+use super::fig6::{simulate_mg, simulate_pm};
+use super::Table;
+
+/// Fig 7 main curve: PM vs MG training-step time + MG compute ratio.
+pub fn run(gpu_counts: &[usize]) -> Result<Table> {
+    let spec = NetSpec::fig7();
+    let mut t = Table::new(
+        "Fig 7: 4115-layer / 2.07B-param net — MG vs Model-Partitioned (fwd prop)",
+        &["gpus", "pm_ms", "mg_ms", "mg_speedup_vs_pm", "mg_compute_fraction"],
+    );
+    for &g in gpu_counts {
+        // both curves measure forward propagation (the figure captions'
+        // quantity); MG uses the paper's 2 early-stopping cycles
+        let pm = simulate_pm(&spec, g, false)?;
+        let mg = simulate_mg(&spec, g, 2, false)?;
+        t.row(vec![
+            num(g as f64),
+            num(pm.makespan_s * 1e3),
+            num(mg.makespan_s * 1e3),
+            num(pm.makespan_s / mg.makespan_s),
+            num(mg.compute_fraction()),
+        ]);
+    }
+    Ok(t)
+}
+
+/// The paper's sampled GPU counts for Fig 7.
+pub const GPU_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mg_wins_from_four_gpus_and_gap_widens() {
+        let t = run(&[1, 16, 64]).unwrap();
+        let speedup = |i: usize| t.rows[i][3].as_f64().unwrap();
+        assert!(speedup(0) < 1.0, "1 GPU: MG slower ({})", speedup(0));
+        assert!(speedup(1) > 1.0, "16 GPUs: MG must win ({})", speedup(1));
+        assert!(speedup(2) > 3.5, "64 GPUs: MG must win big ({})", speedup(2));
+        assert!(speedup(2) > speedup(1));
+    }
+
+    #[test]
+    fn compute_ratio_declines_with_gpus() {
+        // the paper's 92.8 % (4 GPUs) → 34.5 % (64 GPUs) trend
+        let t = run(&[4, 64]).unwrap();
+        let f4 = t.rows[0][4].as_f64().unwrap();
+        let f64_ = t.rows[1][4].as_f64().unwrap();
+        assert!(f4 > f64_, "compute fraction must decline: {f4} vs {f64_}");
+        assert!(f4 > 0.5, "4 GPUs should be compute-dominated: {f4}");
+        assert!(f64_ < 0.65, "64 GPUs should be comm-affected: {f64_}");
+    }
+}

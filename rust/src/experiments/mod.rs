@@ -1,0 +1,122 @@
+//! One module per paper figure/table. Each experiment returns structured
+//! rows (printed as a table and embeddable in bench JSON reports) so the
+//! benches under `rust/benches/` and the `mgrit experiment <id>` CLI share
+//! one implementation.
+
+pub mod ablations;
+pub mod compound;
+pub mod fig1;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+
+use crate::util::json::Json;
+
+/// A labelled table of rows (column names + row values).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Json>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, values: Vec<Json>) {
+        assert_eq!(values.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(values);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut cells: Vec<Vec<String>> = vec![self.columns.clone()];
+        for r in &self.rows {
+            cells.push(r.iter().map(fmt_json).collect());
+        }
+        let n_cols = self.columns.len();
+        let widths: Vec<usize> = (0..n_cols)
+            .map(|c| cells.iter().map(|r| r[c].len()).max().unwrap_or(0))
+            .collect();
+        let mut out = format!("== {} ==\n", self.title);
+        for (i, r) in cells.iter().enumerate() {
+            let line: Vec<String> =
+                r.iter().zip(&widths).map(|(v, w)| format!("{v:>w$}")).collect();
+            out.push_str("  ");
+            out.push_str(&line.join("  "));
+            out.push('\n');
+            if i == 0 {
+                out.push_str("  ");
+                out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Rows as JSON objects (column name → value).
+    pub fn to_json_rows(&self) -> Vec<Json> {
+        self.rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.columns
+                        .iter()
+                        .cloned()
+                        .zip(r.iter().cloned())
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+}
+
+fn fmt_json(j: &Json) -> String {
+    match j {
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e12 {
+                format!("{}", *n as i64)
+            } else if n.abs() >= 0.01 && n.abs() < 1e6 {
+                format!("{n:.3}")
+            } else {
+                format!("{n:.3e}")
+            }
+        }
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, s};
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["gpus", "time_s", "algo"]);
+        t.row(vec![num(1.0), num(0.0123), s("serial")]);
+        t.row(vec![num(64.0), num(1.5e-7), s("mg")]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("gpus"));
+        assert!(r.contains("serial"));
+        let json = t.to_json_rows();
+        assert_eq!(json.len(), 2);
+        assert_eq!(json[0].get("algo").unwrap().as_str().unwrap(), "serial");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec![num(1.0)]);
+    }
+}

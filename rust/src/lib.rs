@@ -1,0 +1,54 @@
+//! # resnet-mgrit — layer-parallel ResNet training via nonlinear multigrid
+//!
+//! A reproduction of *"Layer-Parallel Training with GPU Concurrency of Deep
+//! Residual Neural Networks via Nonlinear Multigrid"* (Kirby, Samsi, Jones,
+//! Reuther, Kepner, Gadepally — MIT LL, IEEE HPEC 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1/2 (build time)**: the network's compute kernels are Pallas
+//!   (fused im2col-MXU residual step) wrapped in JAX entry points, AOT-lowered
+//!   to HLO text under `artifacts/` (`make artifacts`).
+//! - **Layer 3 (this crate)**: the paper's contribution — the MGRIT/FAS
+//!   layer-parallel solver, the layer-block coordinator (streams ≈ worker
+//!   threads, devices ≈ partitions), the PJRT runtime that executes the AOT
+//!   artifacts, and the discrete-event cluster simulator that reproduces the
+//!   paper's scaling figures on V100/25GbE cost models.
+//!
+//! Entry points: the `mgrit` CLI (`rust/src/main.rs`), the examples under
+//! `examples/`, and one bench per paper figure under `rust/benches/`.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | NCHW f32 tensors + conv/matmul/activation ops and VJPs |
+//! | [`model`] | network specs (paper presets with exact param counts), params, cost model |
+//! | [`mgrit`] | the FAS/MGRIT engine: hierarchy, relaxation, cycles, adjoint |
+//! | [`solver`] | `BlockSolver` implementations: host, PJRT, analytic-cost |
+//! | [`runtime`] | PJRT client wrapper + artifact manifest |
+//! | [`coordinator`] | stream pool, device partitions, parallel cycle driver |
+//! | [`sim`] | discrete-event multi-GPU cluster simulator |
+//! | [`perfmodel`] | V100 + 25 GbE analytic cost model |
+//! | [`data`] | MNIST idx loader + synthetic digit generator |
+//! | [`train`] | SGD training loops (serial, model-partitioned, MG) |
+//! | [`experiments`] | one module per paper figure (benches + CLI call these) |
+//! | [`util`] | JSON, PRNG, CLI args, stats, bench harness, proptest-lite |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod mgrit;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use tensor::Tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

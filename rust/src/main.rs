@@ -1,0 +1,290 @@
+//! `mgrit` — the layer-parallel ResNet coordinator CLI.
+//!
+//! Subcommands:
+//!   forward     MG vs serial forward propagation on real numerics
+//!   train       SGD training (serial | MG layer-parallel), host or PJRT
+//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|ablations
+//!   sim         one simulated MG/PM run at a given GPU count
+//!   artifacts   check the AOT artifact manifest against the rust presets
+//!   help        this text
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use resnet_mgrit::config::RunConfig;
+use resnet_mgrit::coordinator::ParallelMgrit;
+use resnet_mgrit::data::mnist;
+use resnet_mgrit::experiments as exp;
+use resnet_mgrit::mgrit::hierarchy::Hierarchy;
+use resnet_mgrit::model::{NetParams, NetSpec};
+use resnet_mgrit::solver::host::HostSolver;
+use resnet_mgrit::solver::BlockSolver;
+use resnet_mgrit::tensor::Tensor;
+use resnet_mgrit::train;
+use resnet_mgrit::util::args::Args;
+use resnet_mgrit::util::prng::Rng;
+use resnet_mgrit::util::Timer;
+use resnet_mgrit::Result;
+
+const HELP: &str = "mgrit — layer-parallel ResNet training via nonlinear multigrid
+
+USAGE: mgrit <subcommand> [options]
+
+  forward     --preset P --batch B --cycles C --devices D --tol T [--backend host|pjrt]
+  train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
+  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|compound|ablations> [--quick]
+  sim         --preset P --gpus G [--training] [--cycles C]
+  artifacts   [--artifacts-dir DIR]
+  help
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("forward") => cmd_forward(args),
+        Some("train") => cmd_train(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("sim") => cmd_sim(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+/// MG vs serial forward propagation (host backend, parallel coordinator).
+fn cmd_forward(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let spec = Arc::new(NetSpec::by_name(&cfg.preset)?);
+    let params = Arc::new(NetParams::init(&spec, cfg.seed)?);
+    let n = spec.n_res();
+    let h = spec.h();
+
+    let mut rng = Rng::new(cfg.seed + 1);
+    let (hh, ww) = spec.hw();
+    let u0 = Tensor::randn(&[cfg.batch, spec.channels(), hh, ww], 0.5, &mut rng);
+
+    // serial baseline
+    let host = HostSolver::new(spec.clone(), params.clone())?;
+    let t = Timer::start();
+    let serial = host.block_fprop(0, 1, n, h, &u0)?;
+    let serial_s = t.elapsed_s();
+
+    // parallel MG
+    let hier = Hierarchy::build(n, h, spec.coarsen, cfg.max_levels, 8)?;
+    let spec2 = spec.clone();
+    let params2 = params.clone();
+    let factory = move |_w: usize| HostSolver::new(spec2.clone(), params2.clone());
+    let state_bytes = (cfg.batch * spec.state_elems() * 4) as u64;
+    let driver = ParallelMgrit::new(factory, hier, cfg.devices, state_bytes)?;
+    let t = Timer::start();
+    let (mg, stats, metrics) = driver.solve(&u0, &cfg.mgrit_options())?;
+    let mg_s = t.elapsed_s();
+
+    let err = resnet_mgrit::util::stats::rel_l2_err(
+        mg.last().unwrap().data(),
+        serial.last().unwrap().data(),
+    );
+    println!("preset={} n_res={n} batch={} devices={}", spec.name, cfg.batch, cfg.devices);
+    println!("serial forward     : {:.1} ms", serial_s * 1e3);
+    println!(
+        "MG forward         : {:.1} ms  ({} cycles, converged={}, ‖R‖={:.3e})",
+        mg_s * 1e3,
+        metrics.cycles,
+        stats.converged,
+        stats.residual_norms.last().copied().unwrap_or(f64::NAN)
+    );
+    println!("final-state rel err: {err:.3e}");
+    println!(
+        "comm: {} transfers, {} bytes (local run: accounting only)",
+        metrics.comm_events, metrics.comm_bytes
+    );
+    for (label, secs) in &metrics.phases {
+        println!("  phase {label:<14} {:.2} ms", secs * 1e3);
+    }
+    Ok(())
+}
+
+/// SGD training on synthetic MNIST (or idx files in --data-dir).
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let spec = Arc::new(NetSpec::by_name(&cfg.preset)?);
+    let mut params = NetParams::init(&spec, cfg.seed)?;
+    let (data, source) =
+        mnist::load_or_synthesize(std::path::Path::new(&cfg.data_dir), 512, cfg.seed)?;
+    let method = if args.flag("serial") {
+        train::Method::Serial
+    } else {
+        train::Method::Mgrit { cycles: cfg.cycles }
+    };
+    println!(
+        "training preset={} steps={} batch={} lr={} method={method:?} data={source} backend={}",
+        spec.name, cfg.steps, cfg.batch, cfg.lr, cfg.backend
+    );
+    let tc = train::TrainConfig {
+        steps: cfg.steps,
+        batch: cfg.batch,
+        lr: cfg.lr as f32,
+        method,
+        seed: cfg.seed,
+    };
+    let logs = match cfg.backend.as_str() {
+        "host" => {
+            let spec2 = spec.clone();
+            train::train(&spec, &mut params, &data, &tc, move |p| {
+                HostSolver::new(spec2.clone(), Arc::new(p.clone()))
+            })?
+        }
+        "pjrt" => {
+            let store = std::rc::Rc::new(resnet_mgrit::runtime::ArtifactStore::open(
+                &cfg.artifacts_dir,
+            )?);
+            let spec2 = spec.clone();
+            let batch = cfg.batch;
+            train::train(&spec, &mut params, &data, &tc, move |p| {
+                resnet_mgrit::solver::pjrt::PjrtSolver::new(
+                    store.clone(),
+                    spec2.clone(),
+                    Arc::new(p.clone()),
+                    batch,
+                )
+            })?
+        }
+        other => bail!("unknown backend {other}"),
+    };
+    for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
+        println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
+    }
+    let exec = HostSolver::new(spec.clone(), Arc::new(params.clone()))?;
+    let err = train::top1_error(&spec, &exec, &data, cfg.batch, 8)?;
+    println!("final top-1 error: {:.1}%", err * 100.0);
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = args.flag("quick");
+    let run_one = |name: &str| -> Result<()> {
+        match name {
+            "fig1" => println!("{}", exp::fig1::run().render()),
+            "fig4" => {
+                let depths: &[usize] =
+                    if quick { &[64, 128, 256] } else { &[128, 512, 2048, 4096] };
+                let cycles = if quick { 6 } else { 10 };
+                println!("{}", exp::fig4::run(depths, cycles, 11)?.render());
+            }
+            "fig5" => {
+                let (t, ascii) = exp::fig5::run(if quick { 256 } else { 0 })?;
+                println!("{}", t.render());
+                println!("{ascii}");
+            }
+            "fig6a" => {
+                let gpus: &[usize] = if quick { &[1, 4, 24] } else { &exp::fig6::GPU_COUNTS };
+                println!("{}", exp::fig6::fig6a(gpus)?.render());
+            }
+            "fig6b" => {
+                let gpus: &[usize] = if quick { &[1, 4, 24] } else { &exp::fig6::GPU_COUNTS };
+                println!("{}", exp::fig6::fig6b(gpus)?.render());
+            }
+            "fig6c" => {
+                let gpus: &[usize] = if quick { &[4, 24] } else { &exp::fig6::GPU_COUNTS };
+                println!("{}", exp::fig6::fig6c(gpus)?.render());
+            }
+            "fig7" => {
+                let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
+                println!("{}", exp::fig7::run(gpus)?.render());
+            }
+            "compound" => {
+                let devices = if quick { 16 } else { 64 };
+                println!("{}", exp::compound::run("fig6", devices)?.render());
+            }
+            "ablations" => {
+                println!("{}", exp::ablations::cycles_and_relax(20)?.render());
+                println!("{}", exp::ablations::coarsening(21)?.render());
+                println!("{}", exp::ablations::hierarchy_depth(16)?.render());
+            }
+            other => bail!("unknown experiment {other:?}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig7", "compound", "ablations"] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let gpus = args.usize_or("gpus", cfg.devices)?;
+    let training = args.flag("training");
+    let spec = NetSpec::by_name(&cfg.preset)?;
+    let mg = exp::fig6::simulate_mg(&spec, gpus, cfg.cycles, training)?;
+    let pm = exp::fig6::simulate_pm(&spec, gpus, training)?;
+    println!(
+        "preset={} gpus={gpus} training={training} cycles={}",
+        spec.name, cfg.cycles
+    );
+    println!(
+        "MG : {:>10.3} ms  kernels={} comms={} compute_frac={:.3}",
+        mg.makespan_s * 1e3,
+        mg.n_kernels,
+        mg.n_comms,
+        mg.compute_fraction()
+    );
+    println!(
+        "PM : {:>10.3} ms  kernels={} comms={} compute_frac={:.3}",
+        pm.makespan_s * 1e3,
+        pm.n_kernels,
+        pm.n_comms,
+        pm.compute_fraction()
+    );
+    println!("MG speedup vs PM: {:.2}x", pm.makespan_s / mg.makespan_s);
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts-dir", "artifacts");
+    let manifest = resnet_mgrit::runtime::Manifest::load(dir)?;
+    println!("manifest: {} entries, {} presets", manifest.entries.len(), manifest.presets.len());
+    for (name, info) in &manifest.presets {
+        match NetSpec::by_name(name) {
+            Ok(spec) => {
+                manifest.check_spec(&spec)?;
+                println!(
+                    "  preset {name}: OK (C={} N={} c={} batches {:?})",
+                    info.channels, info.n_res, info.block, info.batches
+                );
+            }
+            Err(_) => println!("  preset {name}: no rust-side spec (skipped)"),
+        }
+    }
+    Ok(())
+}

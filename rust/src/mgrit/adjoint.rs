@@ -1,0 +1,261 @@
+//! The backward pass as MGRIT on the adjoint ODE (following Günther et al.,
+//! SIMODS 2020 — ref [14] of the paper, which delegates training details
+//! there).
+//!
+//! The adjoint recurrence λ^n = λ^{n+1} + h·(∂F/∂u(u^n; θ^n))ᵀ λ^{n+1} is
+//! itself a residual network running in reversed layer order, with the
+//! *linear* propagator Ψ_n(λ) = λ + h·Jᵀ_n λ. Substituting μ^m := λ^{N−m}
+//! turns it into a forward system over m = 0..N, so the exact same FAS/MGRIT
+//! machinery applies. Once λ is known, per-layer parameter gradients
+//! g^n = h·(∂F/∂θ^n)ᵀ λ^{n+1} are layer-local and embarrassingly parallel.
+
+use anyhow::bail;
+
+use super::fas::{self, CycleStats, MgritOptions};
+use super::hierarchy::Hierarchy;
+use crate::solver::BlockSolver;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Wraps a forward solver + forward trajectory as the *adjoint* system:
+/// `step(m, h, μ)` applies Ψ at reversed layer index n = N−1−m, linearized
+/// around the forward state u^n (the input of layer n).
+pub struct AdjointSystem<'a, S: BlockSolver> {
+    solver: &'a S,
+    /// Forward states u^0..u^N (length N+1); u[n] is layer n's input.
+    states: &'a [Tensor],
+    n_layers: usize,
+}
+
+impl<'a, S: BlockSolver> AdjointSystem<'a, S> {
+    pub fn new(solver: &'a S, states: &'a [Tensor]) -> Result<Self> {
+        if states.len() < 2 {
+            bail!("adjoint system needs at least 2 forward states");
+        }
+        Ok(AdjointSystem { solver, states, n_layers: states.len() - 1 })
+    }
+
+    /// Reversed layer index for adjoint step m.
+    fn rev(&self, m: usize) -> usize {
+        self.n_layers - 1 - m
+    }
+}
+
+impl<'a, S: BlockSolver> BlockSolver for AdjointSystem<'a, S> {
+    fn step(&self, fine_idx: usize, h: f32, lam: &Tensor) -> Result<Tensor> {
+        let n = self.rev(fine_idx);
+        self.solver.adjoint_step(n, h, &self.states[n], lam)
+    }
+
+    fn adjoint_step(&self, _: usize, _: f32, _: &Tensor, _: &Tensor) -> Result<Tensor> {
+        bail!("second-order adjoint not supported")
+    }
+
+    fn param_grad(&self, _: usize, _: f32, _: &Tensor, _: &Tensor) -> Result<(Tensor, Tensor)> {
+        bail!("adjoint system has no parameters")
+    }
+}
+
+/// Solve the adjoint system with MGRIT. `lam_final` is ∂loss/∂u^N (the head
+/// gradient); returns λ^0..λ^N (forward layer indexing) and cycle stats.
+pub fn solve_adjoint<S: BlockSolver>(
+    solver: &S,
+    states: &[Tensor],
+    h: f32,
+    lam_final: &Tensor,
+    opts: &MgritOptions,
+) -> Result<(Vec<Tensor>, CycleStats)> {
+    let sys = AdjointSystem::new(solver, states)?;
+    let n = sys.n_layers;
+    let (mu, stats) = fas::solve_forward(&sys, n, h, lam_final, opts)?;
+    // μ^m = λ^{N−m} → reverse back to forward indexing
+    let mut lam = mu;
+    lam.reverse();
+    Ok((lam, stats))
+}
+
+/// As [`solve_adjoint`] with an explicit hierarchy.
+pub fn solve_adjoint_with<S: BlockSolver>(
+    solver: &S,
+    states: &[Tensor],
+    hier: &Hierarchy,
+    lam_final: &Tensor,
+    opts: &MgritOptions,
+) -> Result<(Vec<Tensor>, CycleStats)> {
+    let sys = AdjointSystem::new(solver, states)?;
+    let (mu, stats) = fas::solve_forward_with(&sys, hier, lam_final, opts)?;
+    let mut lam = mu;
+    lam.reverse();
+    Ok((lam, stats))
+}
+
+/// Serial adjoint sweep (the exact-backprop baseline): λ^N = lam_final,
+/// λ^n = Ψ_n(λ^{n+1}).
+pub fn serial_adjoint<S: BlockSolver>(
+    solver: &S,
+    states: &[Tensor],
+    h: f32,
+    lam_final: &Tensor,
+) -> Result<Vec<Tensor>> {
+    let n = states.len() - 1;
+    let mut lam = vec![lam_final.clone()];
+    for i in (0..n).rev() {
+        let prev = solver.adjoint_step(i, h, &states[i], lam.last().unwrap())?;
+        lam.push(prev);
+    }
+    lam.reverse();
+    Ok(lam)
+}
+
+/// Per-layer parameter gradients from forward states + adjoints:
+/// (dWᵢ, dbᵢ) = param_grad(uⁱ, λ^{i+1}). Layer-local — the coordinator
+/// fans this out across all devices at once.
+pub fn param_grads<S: BlockSolver>(
+    solver: &S,
+    states: &[Tensor],
+    lams: &[Tensor],
+    h: f32,
+) -> Result<Vec<(Tensor, Tensor)>> {
+    if states.len() != lams.len() {
+        bail!("states/adjoints length mismatch: {} vs {}", states.len(), lams.len());
+    }
+    let n = states.len() - 1;
+    (0..n).map(|i| solver.param_grad(i, h, &states[i], &lams[i + 1])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NetParams, NetSpec};
+    use crate::solver::host::HostSolver;
+    use crate::tensor::ops;
+    use crate::util::prng::Rng;
+    use std::sync::Arc;
+
+    fn setup(seed: u64) -> (HostSolver, Vec<Tensor>, Tensor) {
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, seed).unwrap());
+        let s = HostSolver::new(spec, params).unwrap();
+        let mut rng = Rng::new(seed + 100);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 0.8, &mut rng);
+        let mut states = vec![u0.clone()];
+        states.extend(s.block_fprop(0, 1, 4, s.spec().h(), &u0).unwrap());
+        let lam_final = Tensor::randn(&[1, 2, 6, 6], 1.0, &mut rng);
+        (s, states, lam_final)
+    }
+
+    #[test]
+    fn serial_adjoint_matches_chained_vjp() {
+        let (s, states, lam_final) = setup(21);
+        let h = s.spec().h();
+        let lams = serial_adjoint(&s, &states, h, &lam_final).unwrap();
+        assert_eq!(lams.len(), states.len());
+        // chain VJPs manually
+        let mut lam = lam_final.clone();
+        for i in (0..4).rev() {
+            let (w, b) = &s.params().trunk[i];
+            let (l, _, _) =
+                crate::tensor::vjp::residual_step_vjp(&states[i], w, b, h, 1, &lam).unwrap();
+            lam = l;
+            assert_eq!(&lams[i], &lam);
+        }
+    }
+
+    #[test]
+    fn mgrit_adjoint_converges_to_serial_adjoint() {
+        let (s, states, lam_final) = setup(22);
+        let h = s.spec().h();
+        let opts = MgritOptions { tol: 1e-6, max_cycles: 40, ..Default::default() };
+        let (mg, stats) = solve_adjoint(&s, &states, h, &lam_final, &opts).unwrap();
+        assert!(stats.converged);
+        let serial = serial_adjoint(&s, &states, h, &lam_final).unwrap();
+        for (a, b) in mg.iter().zip(&serial) {
+            assert!(crate::util::stats::rel_l2_err(a.data(), b.data()) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn adjoint_gradient_matches_loss_finite_difference() {
+        // end-to-end: d loss / d u0 via adjoint == finite differences
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, 23).unwrap());
+        let s = HostSolver::new(spec.clone(), params).unwrap();
+        let mut rng = Rng::new(24);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 0.8, &mut rng);
+        let labels = [3i32];
+        let h = spec.h();
+
+        let fwd = |u0: &Tensor| -> f64 {
+            let un = s.block_fprop(0, 1, 4, h, u0).unwrap().pop().unwrap();
+            s.head(&un, &labels).unwrap().1
+        };
+
+        let mut states = vec![u0.clone()];
+        states.extend(s.block_fprop(0, 1, 4, h, &u0).unwrap());
+        let (du_n, _, _) = s.head_vjp(states.last().unwrap(), &labels).unwrap();
+        let lams = serial_adjoint(&s, &states, h, &du_n).unwrap();
+
+        for i in [0usize, 17, 40, 71] {
+            let eps = 1e-2f32;
+            let mut up = u0.clone();
+            up.data_mut()[i] += eps;
+            let mut um = u0.clone();
+            um.data_mut()[i] -= eps;
+            let fd = (fwd(&up) - fwd(&um)) / (2.0 * eps as f64);
+            let got = lams[0].data()[i] as f64;
+            assert!((got - fd).abs() < 2e-2, "i={i}: adjoint {got} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn param_grads_match_block_vjp_composition() {
+        let (s, states, lam_final) = setup(25);
+        let h = s.spec().h();
+        let lams = serial_adjoint(&s, &states, h, &lam_final).unwrap();
+        let grads = param_grads(&s, &states, &lams, h).unwrap();
+        assert_eq!(grads.len(), 4);
+        // validate one layer against an independent FD of ⟨λ_final, u^N⟩
+        let i = 2usize;
+        let (w, b) = &s.params().trunk[i];
+        let f = |ww: &Tensor| {
+            // propagate 4 layers with layer i's weight replaced
+            let mut u = states[0].clone();
+            for j in 0..4 {
+                let (wj, bj) = &s.params().trunk[j];
+                let wj = if j == i { ww } else { wj };
+                u = ops::residual_step(&u, wj, bj, h, 1).unwrap();
+            }
+            Tensor::dot(&u, &lam_final).unwrap()
+        };
+        let eps = 1e-2f32;
+        for idx in [0usize, 9, 20] {
+            let mut wp = w.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = w.clone();
+            wm.data_mut()[idx] -= eps;
+            let fd = (f(&wp) - f(&wm)) / (2.0 * eps as f64);
+            let got = grads[i].0.data()[idx] as f64;
+            assert!((got - fd).abs() < 3e-2, "idx={idx}: {got} vs {fd}");
+        }
+        let _ = b;
+    }
+
+    #[test]
+    fn early_stopped_adjoint_close_to_exact() {
+        let (s, states, lam_final) = setup(26);
+        let h = s.spec().h();
+        let opts = MgritOptions::early_stopping(2);
+        let (mg, _) = solve_adjoint(&s, &states, h, &lam_final, &opts).unwrap();
+        let serial = serial_adjoint(&s, &states, h, &lam_final).unwrap();
+        let err =
+            crate::util::stats::rel_l2_err(mg[0].data(), serial[0].data());
+        assert!(err < 5e-2, "2-cycle adjoint error {err}");
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let (s, states, lam) = setup(27);
+        assert!(param_grads(&s, &states[1..], &vec![lam.clone(); states.len()], 0.1).is_err());
+        assert!(AdjointSystem::new(&s, &states[..1]).is_err());
+    }
+}

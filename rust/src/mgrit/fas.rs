@@ -1,0 +1,534 @@
+//! The FAS/MGRIT cycle: relaxation, restriction, coarse solve, correction
+//! (the paper's Algorithm 1, generalized to multilevel V-cycles).
+//!
+//! Everything here is expressed block-wise so the serial driver (this file)
+//! and the parallel coordinator (`coordinator::driver`) share one
+//! implementation of the algebra — the coordinator only changes *where*
+//! each block primitive runs.
+
+use anyhow::{bail, Result};
+
+use super::hierarchy::{Hierarchy, Level};
+use crate::solver::BlockSolver;
+use crate::tensor::Tensor;
+
+/// Relaxation sweep pattern. The paper uses FCF.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelaxKind {
+    /// F-relaxation only.
+    F,
+    /// F then C.
+    FC,
+    /// F, C, F — the paper's Algorithm 1 step 1.
+    FCF,
+}
+
+/// Options for an MGRIT solve.
+#[derive(Debug, Clone)]
+pub struct MgritOptions {
+    /// Maximum MG cycles; training uses the paper's early stopping (2).
+    pub max_cycles: usize,
+    /// Convergence tolerance on ‖R_h‖_{L2} (Fig 4 runs to 1e-9).
+    pub tol: f64,
+    pub relax: RelaxKind,
+    /// Maximum levels in the hierarchy (2 = the paper's Algorithm 1).
+    pub max_levels: usize,
+    /// Stop coarsening at this many points; the coarsest level is solved
+    /// exactly by forward substitution.
+    pub min_coarse_points: usize,
+}
+
+impl Default for MgritOptions {
+    fn default() -> Self {
+        MgritOptions { max_cycles: 20, tol: 1e-9, relax: RelaxKind::FCF, max_levels: 2, min_coarse_points: 8 }
+    }
+}
+
+impl MgritOptions {
+    /// The paper's training configuration: 2 cycles, no tolerance exit.
+    pub fn early_stopping(cycles: usize) -> Self {
+        MgritOptions { max_cycles: cycles, tol: 0.0, ..Default::default() }
+    }
+}
+
+/// Per-solve convergence record (Fig 4's data).
+#[derive(Debug, Clone)]
+pub struct CycleStats {
+    /// ‖R_h‖ after each cycle.
+    pub residual_norms: Vec<f64>,
+    pub converged: bool,
+    /// Number of Φ applications performed (the solve's work measure).
+    pub phi_evals: usize,
+}
+
+/// The unknowns of one level: layer states `u[0..n_points]` plus the FAS
+/// right-hand side `g` (None on the finest level, where g ≡ 0 for all
+/// points except the fixed input u[0]).
+#[derive(Debug, Clone)]
+pub struct LevelState {
+    pub u: Vec<Tensor>,
+    pub g: Option<Vec<Tensor>>,
+}
+
+impl LevelState {
+    /// Initial fine-level state: u[0] = u0, all other points seeded with u0
+    /// (a constant-in-depth initial guess — any guess converges, this one
+    /// makes cycle-1 residuals well-scaled).
+    pub fn initial(u0: &Tensor, n_points: usize) -> LevelState {
+        LevelState { u: vec![u0.clone(); n_points], g: None }
+    }
+
+    fn rhs(&self, j: usize) -> Option<&Tensor> {
+        self.g.as_ref().map(|g| &g[j])
+    }
+}
+
+/// u[j] = Φ(u[j−1]) + g[j] — the elementary update of every relaxation.
+fn point_update<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    st: &mut LevelState,
+    j: usize,
+    phi_evals: &mut usize,
+) -> Result<()> {
+    debug_assert!(j >= 1 && j < lvl.n_points);
+    let mut v = solver.step(lvl.theta_idx(j - 1), lvl.h, &st.u[j - 1])?;
+    *phi_evals += 1;
+    if let Some(gj) = st.rhs(j) {
+        v.axpy(1.0, gj)?;
+    }
+    st.u[j] = v;
+    Ok(())
+}
+
+/// F-relaxation of one block: from its C-point, recompute the F-points
+/// sequentially (the paper's Fig 3, right). Independent across blocks —
+/// the unit of layer parallelism.
+pub fn f_relax_block<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    st: &mut LevelState,
+    block: super::hierarchy::Block,
+    phi_evals: &mut usize,
+) -> Result<()> {
+    for j in block.cpoint + 1..=block.f_end {
+        point_update(solver, lvl, st, j, phi_evals)?;
+    }
+    Ok(())
+}
+
+/// F-relaxation over all blocks (serial reference; the coordinator fans the
+/// per-block calls out to streams/devices).
+pub fn f_relax<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    coarsen: usize,
+    st: &mut LevelState,
+    phi_evals: &mut usize,
+) -> Result<()> {
+    for b in lvl.blocks(coarsen) {
+        f_relax_block(solver, lvl, st, b, phi_evals)?;
+    }
+    Ok(())
+}
+
+/// C-relaxation: update every C-point from the preceding F-point (the
+/// paper's Fig 3, left). Independent across C-points given current states.
+pub fn c_relax<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    coarsen: usize,
+    st: &mut LevelState,
+    phi_evals: &mut usize,
+) -> Result<()> {
+    for cp in lvl.cpoints(coarsen) {
+        if cp > 0 {
+            point_update(solver, lvl, st, cp, phi_evals)?;
+        }
+    }
+    Ok(())
+}
+
+/// The residual r[j] = g[j] + Φ(u[j−1]) − u[j] at one point (paper eq. 19
+/// with our sign convention; zero iff the step equation holds at j).
+pub fn residual_at<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    st: &LevelState,
+    j: usize,
+    phi_evals: &mut usize,
+) -> Result<Tensor> {
+    debug_assert!(j >= 1);
+    let mut r = solver.step(lvl.theta_idx(j - 1), lvl.h, &st.u[j - 1])?;
+    *phi_evals += 1;
+    if let Some(gj) = st.rhs(j) {
+        r.axpy(1.0, gj)?;
+    }
+    r.axpy(-1.0, &st.u[j])?;
+    Ok(r)
+}
+
+/// ‖R‖_{L2} over all C-points (the convergence functional of Fig 4).
+/// After F-relaxation the F-point residuals vanish identically, so the
+/// C-point residual is the whole residual.
+pub fn residual_norm<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    coarsen: usize,
+    st: &LevelState,
+    phi_evals: &mut usize,
+) -> Result<f64> {
+    let mut acc = 0.0f64;
+    for cp in lvl.cpoints(coarsen) {
+        if cp > 0 {
+            let r = residual_at(solver, lvl, st, cp, phi_evals)?;
+            let n = r.l2_norm();
+            acc += n * n;
+        }
+    }
+    Ok(acc.sqrt())
+}
+
+/// FAS restriction (paper Algorithm 1 step 2 + eq. 24): inject the C-point
+/// states to the coarse level and build the coarse right-hand side
+/// S_H[j] = (ū_H[j] − Φ_H(ū_H[j−1])) + r_h[jc].
+///
+/// Returns the coarse state (initial guess = injection) and a copy of the
+/// injected values (needed for the correction step).
+pub fn restrict<S: BlockSolver>(
+    solver: &S,
+    fine: &Level,
+    coarse: &Level,
+    coarsen: usize,
+    st: &LevelState,
+    phi_evals: &mut usize,
+) -> Result<(LevelState, Vec<Tensor>)> {
+    let injected: Vec<Tensor> =
+        (0..coarse.n_points).map(|j| st.u[j * coarsen].clone()).collect();
+    let mut g = Vec::with_capacity(coarse.n_points);
+    g.push(Tensor::zeros(injected[0].dims())); // g[0] unused (u[0] fixed)
+    for j in 1..coarse.n_points {
+        // fine residual at the C-point
+        let mut gj = residual_at(solver, fine, st, j * coarsen, phi_evals)?;
+        // + τ-term: ū_H[j] − Φ_H(ū_H[j−1])
+        let phi_h = solver.step(coarse.theta_idx(j - 1), coarse.h, &injected[j - 1])?;
+        *phi_evals += 1;
+        gj.axpy(1.0, &injected[j])?;
+        gj.axpy(-1.0, &phi_h)?;
+        g.push(gj);
+    }
+    let coarse_st = LevelState { u: injected.clone(), g: Some(g) };
+    Ok((coarse_st, injected))
+}
+
+/// Exact solve of L(V) = g on a level by forward substitution — O(n) serial,
+/// used on the coarsest level where n is small.
+pub fn solve_exact<S: BlockSolver>(
+    solver: &S,
+    lvl: &Level,
+    st: &mut LevelState,
+    phi_evals: &mut usize,
+) -> Result<()> {
+    for j in 1..lvl.n_points {
+        point_update(solver, lvl, st, j, phi_evals)?;
+    }
+    Ok(())
+}
+
+/// FAS correction (Algorithm 1 step 5): u_h[jc] += v_H[j] − ū_H[j].
+pub fn correct(
+    fine_st: &mut LevelState,
+    coarse_st: &LevelState,
+    injected_old: &[Tensor],
+    coarsen: usize,
+) -> Result<()> {
+    if coarse_st.u.len() != injected_old.len() {
+        bail!("correction size mismatch");
+    }
+    for j in 1..coarse_st.u.len() {
+        let mut delta = Tensor::sub(&coarse_st.u[j], &injected_old[j])?;
+        std::mem::swap(&mut delta, &mut fine_st.u[j * coarsen]);
+        fine_st.u[j * coarsen].axpy(1.0, &delta)?;
+    }
+    Ok(())
+}
+
+/// One multigrid cycle on `level` (recursive V-cycle; at the coarsest level,
+/// exact forward substitution).
+pub fn vcycle<S: BlockSolver>(
+    solver: &S,
+    hier: &Hierarchy,
+    level: usize,
+    st: &mut LevelState,
+    opts: &MgritOptions,
+    phi_evals: &mut usize,
+) -> Result<()> {
+    let lvl = &hier.levels[level];
+    if level == hier.n_levels() - 1 {
+        return solve_exact(solver, lvl, st, phi_evals);
+    }
+    let c = hier.coarsen;
+    // step 1: relaxation
+    match opts.relax {
+        RelaxKind::F => f_relax(solver, lvl, c, st, phi_evals)?,
+        RelaxKind::FC => {
+            f_relax(solver, lvl, c, st, phi_evals)?;
+            c_relax(solver, lvl, c, st, phi_evals)?;
+        }
+        RelaxKind::FCF => {
+            f_relax(solver, lvl, c, st, phi_evals)?;
+            c_relax(solver, lvl, c, st, phi_evals)?;
+            f_relax(solver, lvl, c, st, phi_evals)?;
+        }
+    }
+    // steps 2–4: restrict, coarse solve (recursively), correct
+    let coarse = &hier.levels[level + 1];
+    let (mut coarse_st, injected) = restrict(solver, lvl, coarse, c, st, phi_evals)?;
+    vcycle(solver, hier, level + 1, &mut coarse_st, opts, phi_evals)?;
+    correct(st, &coarse_st, &injected, c)?;
+    // step 5 epilogue: refresh F-points from the corrected C-points
+    f_relax(solver, lvl, c, st, phi_evals)?;
+    Ok(())
+}
+
+/// Full MGRIT solve of the forward propagation: returns the layer states
+/// `u[0..=N]` and the per-cycle residual history.
+///
+/// `u0` is the trunk input (the opening layer's output). The serial
+/// equivalent is `solver.block_fprop(0, 1, N, h, u0)`.
+pub fn solve_forward<S: BlockSolver>(
+    solver: &S,
+    n_layers: usize,
+    h: f32,
+    u0: &Tensor,
+    opts: &MgritOptions,
+) -> Result<(Vec<Tensor>, CycleStats)> {
+    let hier = Hierarchy::build(
+        n_layers,
+        h,
+        coarsen_for(n_layers),
+        opts.max_levels,
+        opts.min_coarse_points,
+    )?;
+    solve_forward_with(solver, &hier, u0, opts)
+}
+
+/// As [`solve_forward`] with an explicit hierarchy (choose your own c).
+pub fn solve_forward_with<S: BlockSolver>(
+    solver: &S,
+    hier: &Hierarchy,
+    u0: &Tensor,
+    opts: &MgritOptions,
+) -> Result<(Vec<Tensor>, CycleStats)> {
+    let fine = hier.fine().clone();
+    let mut st = LevelState::initial(u0, fine.n_points);
+    let mut stats = CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
+    for _cycle in 0..opts.max_cycles {
+        vcycle(solver, hier, 0, &mut st, opts, &mut stats.phi_evals)?;
+        let norm = residual_norm(solver, &fine, hier.coarsen, &st, &mut stats.phi_evals)?;
+        stats.residual_norms.push(norm);
+        if norm <= opts.tol {
+            stats.converged = true;
+            break;
+        }
+    }
+    Ok((st.u, stats))
+}
+
+/// Default coarsening factor when the caller doesn't pin one (the paper's
+/// figures use c = 4).
+pub fn coarsen_for(_n_layers: usize) -> usize {
+    4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NetParams, NetSpec};
+    use crate::solver::host::HostSolver;
+    use crate::util::prng::Rng;
+    use std::sync::Arc;
+
+    fn solver_for(spec: NetSpec, seed: u64) -> HostSolver {
+        let spec = Arc::new(spec);
+        let params = Arc::new(NetParams::init(&spec, seed).unwrap());
+        HostSolver::new(spec, params).unwrap()
+    }
+
+    fn serial_states(s: &HostSolver, u0: &Tensor) -> Vec<Tensor> {
+        let n = s.spec().n_res();
+        let mut out = vec![u0.clone()];
+        out.extend(s.block_fprop(0, 1, n, s.spec().h(), u0).unwrap());
+        out
+    }
+
+    #[test]
+    fn converged_solve_matches_serial_forward() {
+        let s = solver_for(NetSpec::micro(), 5);
+        let mut rng = Rng::new(6);
+        let u0 = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+        let opts = MgritOptions { tol: 1e-6, max_cycles: 30, ..Default::default() };
+        let (mg, stats) = solve_forward(&s, 4, s.spec().h(), &u0, &opts).unwrap();
+        assert!(stats.converged, "norms: {:?}", stats.residual_norms);
+        let serial = serial_states(&s, &u0);
+        for (a, b) in mg.iter().zip(&serial) {
+            assert!(
+                crate::util::stats::rel_l2_err(a.data(), b.data()) < 1e-5,
+                "MG != serial"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_decreases_monotonically() {
+        let spec = NetSpec::mnist();
+        let s = solver_for(spec, 7);
+        let mut rng = Rng::new(8);
+        let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+        let opts = MgritOptions { tol: 0.0, max_cycles: 6, ..Default::default() };
+        let (_, stats) = solve_forward(&s, 32, s.spec().h(), &u0, &opts).unwrap();
+        for w in stats.residual_norms.windows(2) {
+            assert!(w[1] <= w[0] * 1.01, "residual grew: {:?}", stats.residual_norms);
+        }
+        // FCF + coarse correction should contract strongly on a smooth net
+        assert!(
+            stats.residual_norms.last().unwrap() < &(stats.residual_norms[0] * 1e-3),
+            "{:?}",
+            stats.residual_norms
+        );
+    }
+
+    #[test]
+    fn exact_trajectory_has_zero_residual() {
+        let s = solver_for(NetSpec::micro(), 9);
+        let mut rng = Rng::new(10);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 1.0, &mut rng);
+        let serial = serial_states(&s, &u0);
+        let st = LevelState { u: serial, g: None };
+        let lvl = Level { stride: 1, h: s.spec().h(), n_points: 5 };
+        let mut evals = 0;
+        let norm = residual_norm(&s, &lvl, 2, &st, &mut evals).unwrap();
+        assert!(norm < 1e-5, "norm {norm}");
+    }
+
+    #[test]
+    fn f_relax_zeroes_fpoint_residuals() {
+        let s = solver_for(NetSpec::micro(), 11);
+        let mut rng = Rng::new(12);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 1.0, &mut rng);
+        let lvl = Level { stride: 1, h: s.spec().h(), n_points: 5 };
+        let mut st = LevelState::initial(&u0, 5);
+        let mut evals = 0;
+        f_relax(&s, &lvl, 2, &mut st, &mut evals).unwrap();
+        // F-points are 1, 3 with c=2: their residuals must vanish
+        for j in [1usize, 3] {
+            let r = residual_at(&s, &lvl, &st, j, &mut evals).unwrap();
+            assert!(r.l2_norm() < 1e-5, "F-point {j} residual {}", r.l2_norm());
+        }
+    }
+
+    #[test]
+    fn two_cycles_give_good_early_stopped_estimate() {
+        // the paper's training mode: 2 cycles ≈ exact states
+        let s = solver_for(NetSpec::mnist(), 13);
+        let mut rng = Rng::new(14);
+        let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+        let opts = MgritOptions::early_stopping(2);
+        let (mg, _) = solve_forward(&s, 32, s.spec().h(), &u0, &opts).unwrap();
+        let serial = serial_states(&s, &u0);
+        let err = crate::util::stats::rel_l2_err(
+            mg.last().unwrap().data(),
+            serial.last().unwrap().data(),
+        );
+        assert!(err < 5e-2, "final-state error after 2 cycles: {err}");
+    }
+
+    #[test]
+    fn multilevel_matches_two_level_solution() {
+        let spec = NetSpec::fig6_depth(32);
+        let s = solver_for(spec, 15);
+        let mut rng = Rng::new(16);
+        let u0 = Tensor::randn(&[1, 4, 24, 24], 0.5, &mut rng);
+        let two = MgritOptions { max_levels: 2, tol: 1e-5, max_cycles: 40, ..Default::default() };
+        let multi = MgritOptions { max_levels: 4, tol: 1e-5, max_cycles: 40, min_coarse_points: 3, ..Default::default() };
+        let (a, sa) = solve_forward(&s, 32, s.spec().h(), &u0, &two).unwrap();
+        let (b, sb) = solve_forward(&s, 32, s.spec().h(), &u0, &multi).unwrap();
+        // both must contract far below the initial residual (absolute tol is
+        // limited by the f32 state magnitude, so assert relative drop)
+        for st in [&sa, &sb] {
+            let drop = st.residual_norms.last().unwrap() / st.residual_norms[0];
+            assert!(st.converged || drop < 1e-4, "norms {:?}", st.residual_norms);
+        }
+        let err = crate::util::stats::rel_l2_err(
+            a.last().unwrap().data(),
+            b.last().unwrap().data(),
+        );
+        assert!(err < 1e-5, "two-level vs V-cycle differ: {err}");
+    }
+
+    #[test]
+    fn relax_kind_f_converges_slower_than_fcf() {
+        let s = solver_for(NetSpec::mnist(), 17);
+        let mut rng = Rng::new(18);
+        let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+        let mk = |relax| MgritOptions { relax, tol: 0.0, max_cycles: 3, ..Default::default() };
+        let (_, f) = solve_forward(&s, 32, s.spec().h(), &u0, &mk(RelaxKind::F)).unwrap();
+        let (_, fcf) = solve_forward(&s, 32, s.spec().h(), &u0, &mk(RelaxKind::FCF)).unwrap();
+        assert!(
+            fcf.residual_norms.last().unwrap() <= f.residual_norms.last().unwrap(),
+            "F {:?} vs FCF {:?}",
+            f.residual_norms,
+            fcf.residual_norms
+        );
+    }
+
+    #[test]
+    fn non_divisible_depth_converges() {
+        // N = 7 with c = 4 exercises the trailing partial block
+        let spec = NetSpec::fig6_depth(7);
+        let s = solver_for(spec, 19);
+        let mut rng = Rng::new(20);
+        let u0 = Tensor::randn(&[1, 4, 24, 24], 0.5, &mut rng);
+        let opts = MgritOptions { tol: 1e-6, max_cycles: 30, ..Default::default() };
+        let (mg, stats) = solve_forward(&s, 7, s.spec().h(), &u0, &opts).unwrap();
+        assert!(stats.converged);
+        let serial = serial_states(&s, &u0);
+        let err = crate::util::stats::rel_l2_err(
+            mg.last().unwrap().data(),
+            serial.last().unwrap().data(),
+        );
+        assert!(err < 1e-5, "{err}");
+    }
+
+    #[test]
+    fn prop_converged_mg_equals_serial() {
+        use crate::util::proptest_lite as pt;
+        pt::check_with(
+            pt::Config { cases: 6, ..Default::default() },
+            "mg-equals-serial",
+            |rng| {
+                let n = pt::gen_usize(rng, 2, 12);
+                let spec = NetSpec {
+                    name: "prop".into(),
+                    trunk: vec![
+                        crate::model::LayerKind::Conv { channels: 2, kernel: 3 };
+                        n
+                    ],
+                    ..NetSpec::micro()
+                };
+                let s = solver_for(spec, rng.next_u64());
+                let mut r2 = rng.split();
+                let u0 = Tensor::randn(&[1, 2, 6, 6], 0.8, &mut r2);
+                let opts = MgritOptions { tol: 1e-6, max_cycles: 50, ..Default::default() };
+                let (mg, stats) = solve_forward(&s, n, s.spec().h(), &u0, &opts).unwrap();
+                assert!(stats.converged, "n={n} norms {:?}", stats.residual_norms);
+                let serial = serial_states(&s, &u0);
+                let err = crate::util::stats::rel_l2_err(
+                    mg.last().unwrap().data(),
+                    serial.last().unwrap().data(),
+                );
+                assert!(err < 1e-4, "n={n} err={err}");
+            },
+        );
+    }
+}

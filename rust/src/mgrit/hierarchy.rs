@@ -1,0 +1,229 @@
+//! MGRIT level hierarchy: which layer-grid points live on which level,
+//! which are C-points (shared with the next-coarser level) and which are
+//! F-points, and how point indices map back to fine-level layer indices.
+
+use anyhow::{bail, Result};
+
+/// One level of the layer-grid hierarchy. Points 0..n_points are layer
+/// *states*; the step from point j to j+1 applies the propagator with the
+/// parameters of fine layer `j·stride` and step size `h` (coarse levels use
+/// the same injected θ with h scaled by the coarsening factor — paper eq. 25).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Level {
+    /// Fine layers spanned by one step on this level (c^level).
+    pub stride: usize,
+    /// ODE step size on this level (h_fine · stride).
+    pub h: f32,
+    /// Number of layer states on this level (fine level: N + 1).
+    pub n_points: usize,
+}
+
+impl Level {
+    /// Fine-level layer index whose parameters the step j → j+1 uses.
+    pub fn theta_idx(&self, j: usize) -> usize {
+        j * self.stride
+    }
+
+    /// Is point `j` a C-point (member of the next-coarser level)?
+    pub fn is_cpoint(&self, j: usize, coarsen: usize) -> bool {
+        j % coarsen == 0
+    }
+
+    /// C-point indices on this level.
+    pub fn cpoints(&self, coarsen: usize) -> Vec<usize> {
+        (0..self.n_points).step_by(coarsen).collect()
+    }
+
+    /// F-point index ranges per block: for each C-point, the run of F-points
+    /// that F-relaxation updates from it, `(cp, cp+1 ..= end)` with
+    /// `end = min(cp + coarsen − 1, n_points − 1)`. Blocks at the tail may be
+    /// shorter (N need not divide by c — fig6's N = 4,093 doesn't).
+    pub fn blocks(&self, coarsen: usize) -> Vec<Block> {
+        self.cpoints(coarsen)
+            .into_iter()
+            .map(|cp| Block {
+                cpoint: cp,
+                f_end: (cp + coarsen - 1).min(self.n_points - 1),
+            })
+            .collect()
+    }
+}
+
+/// One layer block: a C-point and the F-points that follow it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block {
+    /// The block's owning C-point.
+    pub cpoint: usize,
+    /// Last F-point of the block (inclusive); == cpoint when the block has
+    /// no F-points (possible only for the final C-point).
+    pub f_end: usize,
+}
+
+impl Block {
+    /// Number of F-points this block updates.
+    pub fn n_fpoints(&self) -> usize {
+        self.f_end - self.cpoint
+    }
+}
+
+/// The full multilevel hierarchy.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub coarsen: usize,
+    pub levels: Vec<Level>,
+}
+
+impl Hierarchy {
+    /// Build a hierarchy for `n_layers` residual layers with fine step
+    /// `h_fine`, coarsening by `coarsen` per level, at most `max_levels`
+    /// levels, stopping once a level has ≤ `min_points` points (the coarsest
+    /// level is solved exactly by forward substitution).
+    pub fn build(
+        n_layers: usize,
+        h_fine: f32,
+        coarsen: usize,
+        max_levels: usize,
+        min_points: usize,
+    ) -> Result<Hierarchy> {
+        if coarsen < 2 {
+            bail!("coarsening factor must be ≥ 2, got {coarsen}");
+        }
+        if n_layers < 1 {
+            bail!("need at least one layer");
+        }
+        if max_levels < 1 {
+            bail!("need at least one level");
+        }
+        let mut levels = vec![Level { stride: 1, h: h_fine, n_points: n_layers + 1 }];
+        while levels.len() < max_levels {
+            let last = levels.last().unwrap();
+            if last.n_points <= min_points.max(2) {
+                break;
+            }
+            let n_coarse = (last.n_points - 1) / coarsen + 1;
+            if n_coarse < 2 || n_coarse == last.n_points {
+                break;
+            }
+            levels.push(Level {
+                stride: last.stride * coarsen,
+                h: last.h * coarsen as f32,
+                n_points: n_coarse,
+            });
+        }
+        Ok(Hierarchy { coarsen, levels })
+    }
+
+    /// Two-level hierarchy (the paper's Algorithm 1 configuration).
+    pub fn two_level(n_layers: usize, h_fine: f32, coarsen: usize) -> Result<Hierarchy> {
+        Self::build(n_layers, h_fine, coarsen, 2, 2)
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn fine(&self) -> &Level {
+        &self.levels[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite as pt;
+
+    #[test]
+    fn two_level_basic() {
+        // 8 layers, c=4: fine 9 points, coarse 3 points (0,4,8)
+        let h = Hierarchy::two_level(8, 0.1, 4).unwrap();
+        assert_eq!(h.n_levels(), 2);
+        assert_eq!(h.levels[0].n_points, 9);
+        assert_eq!(h.levels[1].n_points, 3);
+        assert_eq!(h.levels[1].stride, 4);
+        assert!((h.levels[1].h - 0.4).abs() < 1e-7);
+    }
+
+    #[test]
+    fn non_divisible_depth() {
+        // 10 layers, c=4: fine 11 points; C-points 0,4,8 → coarse 3 points,
+        // trailing F-points 9, 10 belong to the last block
+        let h = Hierarchy::two_level(10, 0.1, 4).unwrap();
+        assert_eq!(h.levels[1].n_points, 3);
+        let blocks = h.levels[0].blocks(4);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[2], Block { cpoint: 8, f_end: 10 });
+        assert_eq!(blocks[2].n_fpoints(), 2);
+    }
+
+    #[test]
+    fn multilevel_build() {
+        // 64 layers, c=4: 65 → 17 → 5 → 2 points
+        let h = Hierarchy::build(64, 0.05, 4, 10, 2).unwrap();
+        let pts: Vec<usize> = h.levels.iter().map(|l| l.n_points).collect();
+        assert_eq!(pts, vec![65, 17, 5, 2]);
+        assert_eq!(h.levels[3].stride, 64);
+    }
+
+    #[test]
+    fn theta_idx_in_bounds_on_all_levels() {
+        let n_layers = 37;
+        let h = Hierarchy::build(n_layers, 0.1, 3, 8, 2).unwrap();
+        for lvl in &h.levels {
+            for j in 0..lvl.n_points - 1 {
+                assert!(lvl.theta_idx(j) < n_layers, "level stride {}", lvl.stride);
+            }
+        }
+    }
+
+    #[test]
+    fn cpoints_and_blocks_consistent() {
+        let lvl = Level { stride: 1, h: 0.1, n_points: 11 };
+        assert_eq!(lvl.cpoints(4), vec![0, 4, 8]);
+        assert!(lvl.is_cpoint(8, 4));
+        assert!(!lvl.is_cpoint(3, 4));
+        let blocks = lvl.blocks(4);
+        // every non-C point is an F-point of exactly one block
+        let mut covered = vec![0usize; 11];
+        for b in &blocks {
+            for j in b.cpoint + 1..=b.f_end {
+                covered[j] += 1;
+            }
+        }
+        for j in 0..11 {
+            let expect = if j % 4 == 0 { 0 } else { 1 };
+            assert_eq!(covered[j], expect, "point {j}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(Hierarchy::build(8, 0.1, 1, 2, 2).is_err());
+        assert!(Hierarchy::build(0, 0.1, 2, 2, 2).is_err());
+        assert!(Hierarchy::build(8, 0.1, 2, 0, 2).is_err());
+    }
+
+    #[test]
+    fn prop_hierarchy_invariants() {
+        pt::check("hierarchy-invariants", |rng| {
+            let n_layers = pt::gen_usize(rng, 1, 200);
+            let c = pt::gen_usize(rng, 2, 8);
+            let max_levels = pt::gen_usize(rng, 1, 6);
+            let h = Hierarchy::build(n_layers, 0.1, c, max_levels, 2).unwrap();
+            assert!(h.n_levels() >= 1 && h.n_levels() <= max_levels);
+            assert_eq!(h.levels[0].n_points, n_layers + 1);
+            for w in h.levels.windows(2) {
+                // each coarse level is strictly smaller and stride-consistent
+                assert!(w[1].n_points < w[0].n_points);
+                assert_eq!(w[1].stride, w[0].stride * c);
+                assert_eq!(w[1].n_points, (w[0].n_points - 1) / c + 1);
+                // coarse points exist on the fine level
+                assert!((w[1].n_points - 1) * c <= w[0].n_points - 1);
+            }
+            // θ indices stay in range everywhere
+            for lvl in &h.levels {
+                assert!(lvl.n_points >= 2);
+                assert!(lvl.theta_idx(lvl.n_points - 2) < n_layers);
+            }
+        });
+    }
+}

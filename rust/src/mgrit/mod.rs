@@ -1,0 +1,23 @@
+//! The paper's algorithmic contribution: nonlinear multigrid (FAS / MGRIT)
+//! applied to the layer dimension of a residual network.
+//!
+//! The forward propagation u^{n+1} = u^n + h·F(u^n; θ^n) is a lower-
+//! bidiagonal nonlinear system L_h(U) = f (paper eq. 18). Instead of the
+//! O(N)-sequential forward substitution, MGRIT relaxes all layer blocks
+//! concurrently (F-/C-relaxation), restricts the residual to a coarser layer
+//! grid (every c-th layer), solves the FAS-corrected coarse system there, and
+//! prolongates the correction back (Algorithm 1 of the paper).
+//!
+//! Submodules:
+//! - [`hierarchy`] — the level structure (strides, step sizes, C/F points)
+//! - [`fas`]       — relaxation, restriction, coarse solve, correction, cycles
+//! - [`adjoint`]   — the backward pass as MGRIT on the adjoint ODE
+//! - [`taskgraph`] — the schedule DAG consumed by the cluster simulator
+
+pub mod adjoint;
+pub mod fas;
+pub mod hierarchy;
+pub mod taskgraph;
+
+pub use fas::{solve_forward, CycleStats, LevelState, MgritOptions, RelaxKind};
+pub use hierarchy::{Hierarchy, Level};

@@ -1,0 +1,591 @@
+//! Schedule DAGs: the exact task structure the coordinator executes, in a
+//! form the discrete-event cluster simulator can run at paper scale
+//! (fig6/fig7 presets, 1–64 devices) without touching tensors.
+//!
+//! One generator per algorithm under study:
+//! - [`mg_forward`] / [`mg_training`] — the paper's MGRIT layer-parallelism
+//! - [`serial_forward`] / [`serial_training`] — single-stream sequential
+//!   baseline (distributed = the paper's "Model Partitioned" / PM method)
+//!
+//! The MG generators mirror `coordinator::driver` phase-for-phase (F-relax
+//! blocks, C-relax points, residual, restrict, coarse substitution, correct,
+//! final F-relax), so simulated scaling reflects the implemented schedule,
+//! not an idealized one.
+
+use crate::coordinator::Partition;
+use crate::model::cost::{layer_bwd_cost, layer_cost, state_bytes};
+use crate::model::NetSpec;
+use crate::Result;
+
+use super::hierarchy::Hierarchy;
+
+/// What a task occupies while it runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    /// GPU kernel work: `flops` of the given class on `device`.
+    Kernel { label: &'static str, class: KernelClass, flops: f64 },
+    /// A point-to-point activation transfer.
+    Comm { src: usize, dst: usize, bytes: f64 },
+}
+
+/// Kernel efficiency class (convolutions and GEMMs achieve very different
+/// fractions of peak; the perfmodel assigns rates per class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    Conv,
+    Gemm,
+    /// Elementwise / reduction epilogues.
+    Light,
+}
+
+/// One node of the schedule DAG.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: usize,
+    /// Executing device (for Comm: the destination device).
+    pub device: usize,
+    pub kind: TaskKind,
+    pub deps: Vec<usize>,
+}
+
+/// A schedule DAG plus bookkeeping to attach dependencies incrementally.
+#[derive(Debug, Default)]
+pub struct TaskGraph {
+    pub tasks: Vec<Task>,
+}
+
+impl TaskGraph {
+    fn push(&mut self, device: usize, kind: TaskKind, deps: Vec<usize>) -> usize {
+        let id = self.tasks.len();
+        self.tasks.push(Task { id, device, kind, deps });
+        id
+    }
+
+    /// Kernel task helper.
+    fn kernel(
+        &mut self,
+        device: usize,
+        label: &'static str,
+        class: KernelClass,
+        flops: f64,
+        deps: Vec<usize>,
+    ) -> usize {
+        self.push(device, TaskKind::Kernel { label, class, flops }, deps)
+    }
+
+    /// Transfer `bytes` from src to dst (no task if same device).
+    fn comm(&mut self, src: usize, dst: usize, bytes: f64, deps: Vec<usize>) -> Option<usize> {
+        if src == dst {
+            None
+        } else {
+            Some(self.push(dst, TaskKind::Comm { src, dst, bytes }, deps))
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| match &t.kind {
+                TaskKind::Kernel { flops, .. } => *flops,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    pub fn total_comm_bytes(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| match &t.kind {
+                TaskKind::Comm { bytes, .. } => *bytes,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    /// Verify the graph is a DAG with in-range dependencies (deps always
+    /// point backwards by construction; this asserts it).
+    pub fn validate(&self) -> Result<()> {
+        for t in &self.tasks {
+            for &d in &t.deps {
+                if d >= t.id {
+                    anyhow::bail!("task {} depends on non-earlier task {}", t.id, d);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Maps MGRIT points to devices (same rule as the parallel driver).
+struct PointMap<'a> {
+    hier: &'a Hierarchy,
+    partition: &'a Partition,
+}
+
+impl<'a> PointMap<'a> {
+    fn device_of_point(&self, level: usize, j: usize) -> usize {
+        let fine_idx = j * self.hier.levels[level].stride;
+        let block = (fine_idx / self.hier.coarsen).min(self.partition.n_blocks() - 1);
+        self.partition.device_of(block)
+    }
+}
+
+/// Builder state for the MG schedule: the task that last wrote each point of
+/// each level (the dependency frontier).
+struct MgBuilder<'a> {
+    g: TaskGraph,
+    spec: &'a NetSpec,
+    batch: usize,
+    pm: PointMap<'a>,
+    /// Cost multiplier for Φ applications (1 for forward, ~2 for adjoint).
+    flop_scale: f64,
+    /// last_writer[level][j] — None means "initial state, no producer".
+    last_writer: Vec<Vec<Option<usize>>>,
+}
+
+impl<'a> MgBuilder<'a> {
+    fn new(spec: &'a NetSpec, hier: &'a Hierarchy, partition: &'a Partition, batch: usize) -> Self {
+        let last_writer = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
+        MgBuilder {
+            g: TaskGraph::default(),
+            spec,
+            batch,
+            pm: PointMap { hier, partition },
+            flop_scale: 1.0,
+            last_writer,
+        }
+    }
+
+    fn class_of(&self, fine_idx: usize) -> KernelClass {
+        match self.spec.trunk[fine_idx.min(self.spec.n_res() - 1)] {
+            crate::model::LayerKind::Conv { .. } => KernelClass::Conv,
+            crate::model::LayerKind::Fc { .. } => KernelClass::Gemm,
+        }
+    }
+
+    fn step_flops(&self, fine_idx: usize) -> f64 {
+        self.flop_scale * layer_cost(self.spec, fine_idx.min(self.spec.n_res() - 1), self.batch).flops
+    }
+
+    fn dep_of(&self, level: usize, j: usize) -> Vec<usize> {
+        self.last_writer[level][j].into_iter().collect()
+    }
+
+    /// Φ-apply at point j−1 → j, with boundary comm if the producer of
+    /// u[j−1] lives on another device. Returns the new writer of point j.
+    fn point_update(&mut self, level: usize, j: usize, label: &'static str) -> usize {
+        let lvl = &self.pm.hier.levels[level];
+        let dst = self.pm.device_of_point(level, j);
+        let src = self.pm.device_of_point(level, j - 1);
+        let mut deps = self.dep_of(level, j - 1);
+        if let Some(c) = self.g.comm(src, dst, state_bytes(self.spec, self.batch), deps.clone())
+        {
+            deps = vec![c];
+        }
+        let fine_idx = lvl.theta_idx(j - 1);
+        let t = self.g.kernel(dst, label, self.class_of(fine_idx), self.step_flops(fine_idx), deps);
+        self.last_writer[level][j] = Some(t);
+        t
+    }
+
+    fn f_relax(&mut self, level: usize) {
+        let lvl = self.pm.hier.levels[level].clone();
+        for b in lvl.blocks(self.pm.hier.coarsen) {
+            for j in b.cpoint + 1..=b.f_end {
+                self.point_update(level, j, "f_relax");
+            }
+        }
+    }
+
+    fn c_relax(&mut self, level: usize) {
+        let lvl = self.pm.hier.levels[level].clone();
+        for cp in lvl.cpoints(self.pm.hier.coarsen) {
+            if cp > 0 {
+                self.point_update(level, cp, "c_relax");
+            }
+        }
+    }
+
+    /// Residual at C-points; returns the residual tasks (producers of r).
+    fn residual(&mut self, level: usize) -> Vec<usize> {
+        let lvl = self.pm.hier.levels[level].clone();
+        let mut out = Vec::new();
+        for cp in lvl.cpoints(self.pm.hier.coarsen) {
+            if cp == 0 {
+                continue;
+            }
+            let dst = self.pm.device_of_point(level, cp);
+            let src = self.pm.device_of_point(level, cp - 1);
+            let mut deps = self.dep_of(level, cp - 1);
+            deps.extend(self.dep_of(level, cp));
+            if let Some(c) =
+                self.g.comm(src, dst, state_bytes(self.spec, self.batch), deps.clone())
+            {
+                deps = vec![c];
+            }
+            let fine_idx = lvl.theta_idx(cp - 1);
+            let t = self.g.kernel(
+                dst,
+                "residual",
+                self.class_of(fine_idx),
+                self.step_flops(fine_idx),
+                deps,
+            );
+            out.push(t);
+        }
+        out
+    }
+
+    /// Restriction to level+1: τ-term Φ_H per coarse point + residual dep.
+    fn restrict(&mut self, level: usize, residual_tasks: &[usize]) {
+        let coarse = self.pm.hier.levels[level + 1].clone();
+        let c = self.pm.hier.coarsen;
+        for j in 1..coarse.n_points {
+            let dst = self.pm.device_of_point(level + 1, j);
+            let src = self.pm.device_of_point(level + 1, j - 1);
+            let mut deps = self.dep_of(level, (j - 1) * c);
+            deps.push(residual_tasks[j - 1]);
+            if let Some(cm) =
+                self.g.comm(src, dst, state_bytes(self.spec, self.batch), deps.clone())
+            {
+                deps = vec![cm];
+            }
+            let fine_idx = coarse.theta_idx(j - 1);
+            let t = self.g.kernel(
+                dst,
+                "restrict",
+                self.class_of(fine_idx),
+                self.step_flops(fine_idx),
+                deps,
+            );
+            self.last_writer[level + 1][j] = Some(t);
+            if self.last_writer[level + 1][j - 1].is_none() {
+                self.last_writer[level + 1][j - 1] = self.last_writer[level][(j - 1) * c];
+            }
+        }
+    }
+
+    /// Sequential exact solve on the coarsest level, *in place*: the forward
+    /// substitution pipelines across the devices that own the points, with
+    /// one boundary transfer per partition crossing (the paper's MPI
+    /// C-relaxation pattern) — NOT a gather to one device, which would
+    /// serialize O(n_points) messages through a single NIC.
+    fn coarse_solve(&mut self, level: usize) {
+        let lvl = self.pm.hier.levels[level].clone();
+        let bytes = state_bytes(self.spec, self.batch);
+        for j in 1..lvl.n_points {
+            let dst = self.pm.device_of_point(level, j);
+            let src = self.pm.device_of_point(level, j - 1);
+            let mut deps = self.dep_of(level, j - 1);
+            deps.extend(self.dep_of(level, j));
+            if let Some(c) = self.g.comm(src, dst, bytes, deps.clone()) {
+                deps = vec![c];
+            }
+            let fine_idx = lvl.theta_idx(j - 1);
+            let t = self.g.kernel(
+                dst,
+                "coarse_solve",
+                self.class_of(fine_idx),
+                self.step_flops(fine_idx),
+                deps,
+            );
+            self.last_writer[level][j] = Some(t);
+        }
+    }
+
+    /// Correction: elementwise C-point update after the coarse solve (the
+    /// coarse point is co-located with its fine C-point by construction).
+    fn correct(&mut self, level: usize) {
+        let coarse_n = self.pm.hier.levels[level + 1].n_points;
+        let act = state_bytes(self.spec, self.batch) / 4.0; // elements
+        for j in 1..coarse_n {
+            let fine_j = j * self.pm.hier.coarsen;
+            let dev = self.pm.device_of_point(level, fine_j);
+            let mut deps = self.dep_of(level + 1, j);
+            deps.extend(self.dep_of(level, fine_j));
+            let t = self.g.kernel(dev, "correct", KernelClass::Light, 2.0 * act, deps);
+            self.last_writer[level][fine_j] = Some(t);
+        }
+    }
+
+    fn vcycle(&mut self, level: usize) {
+        if level == self.pm.hier.n_levels() - 1 {
+            self.coarse_solve(level);
+            return;
+        }
+        // FCF relaxation (the paper's configuration)
+        self.f_relax(level);
+        self.c_relax(level);
+        self.f_relax(level);
+        let rs = self.residual(level);
+        self.restrict(level, &rs);
+        self.vcycle(level + 1);
+        self.correct(level);
+        self.f_relax(level);
+    }
+}
+
+/// MG forward propagation schedule: `cycles` V-cycles.
+pub fn mg_forward(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    cycles: usize,
+) -> TaskGraph {
+    let mut b = MgBuilder::new(spec, hier, partition, batch);
+    for _ in 0..cycles {
+        b.vcycle(0);
+    }
+    b.g
+}
+
+/// MG training step: forward MG, head fwd+vjp, adjoint MG (same cycle count,
+/// VJP steps ≈ 2× forward cost), then layer-local parameter gradients fanned
+/// out across all devices.
+pub fn mg_training(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    cycles: usize,
+) -> TaskGraph {
+    let mut b = MgBuilder::new(spec, hier, partition, batch);
+    for _ in 0..cycles {
+        b.vcycle(0);
+    }
+    // head on the device owning the last point
+    let n_fine = b.pm.hier.fine().n_points;
+    let last_dev = b.pm.device_of_point(0, n_fine - 1);
+    let head = crate::model::cost::head_cost(spec, batch);
+    let deps = b.dep_of(0, n_fine - 1);
+    let h1 = b.g.kernel(last_dev, "head", KernelClass::Gemm, head.flops, deps);
+    let h2 = b.g.kernel(last_dev, "head_vjp", KernelClass::Gemm, 2.0 * head.flops, vec![h1]);
+    // adjoint MG: structurally identical cycles over the reversed system,
+    // each Φ replaced by its VJP (≈ 2× flops)
+    b.last_writer[0][n_fine - 1] = Some(h2);
+    b.flop_scale = 2.0;
+    for _ in 0..cycles {
+        b.vcycle(0);
+    }
+    // layer-local parameter gradients (no communication)
+    b.flop_scale = 1.0;
+    for i in 0..spec.n_res() {
+        let j = (i + 1).min(n_fine - 1);
+        let dev = b.pm.device_of_point(0, j);
+        let deps = b.dep_of(0, j);
+        let c = layer_bwd_cost(spec, i, batch);
+        b.g.kernel(dev, "param_grad", b.class_of(i), c.flops, deps);
+    }
+    b.g
+}
+
+/// Sequential forward propagation partitioned across devices — one long
+/// dependency chain with a transfer at every partition boundary. With
+/// n_devices == 1 this is the pure serial baseline; with > 1 it is the
+/// paper's "Model Partitioned" (PM) layer-wise parallelism.
+pub fn serial_forward(spec: &NetSpec, n_devices: usize, batch: usize) -> TaskGraph {
+    let mut g = TaskGraph::default();
+    let n = spec.n_res();
+    let part = Partition::contiguous(n, n_devices).expect("partition");
+    let mut prev: Option<usize> = None;
+    let mut prev_dev = part.device_of(0);
+    for i in 0..n {
+        let dev = part.device_of(i);
+        let mut deps: Vec<usize> = prev.into_iter().collect();
+        if dev != prev_dev {
+            if let Some(c) = g.comm(prev_dev, dev, state_bytes(spec, batch), deps.clone()) {
+                deps = vec![c];
+            }
+        }
+        let cost = layer_cost(spec, i, batch);
+        let class = match spec.trunk[i] {
+            crate::model::LayerKind::Conv { .. } => KernelClass::Conv,
+            crate::model::LayerKind::Fc { .. } => KernelClass::Gemm,
+        };
+        prev = Some(g.kernel(dev, "serial_fwd", class, cost.flops, deps));
+        prev_dev = dev;
+    }
+    g
+}
+
+/// Sequential training step (forward + backward chains) across devices —
+/// the PM training baseline of Fig 6b.
+pub fn serial_training(spec: &NetSpec, n_devices: usize, batch: usize) -> TaskGraph {
+    let mut g = TaskGraph::default();
+    let n = spec.n_res();
+    let part = Partition::contiguous(n, n_devices).expect("partition");
+    let bytes = state_bytes(spec, batch);
+    let class_of = |i: usize| match spec.trunk[i] {
+        crate::model::LayerKind::Conv { .. } => KernelClass::Conv,
+        crate::model::LayerKind::Fc { .. } => KernelClass::Gemm,
+    };
+    // forward chain
+    let mut prev: Option<usize> = None;
+    let mut prev_dev = part.device_of(0);
+    for i in 0..n {
+        let dev = part.device_of(i);
+        let mut deps: Vec<usize> = prev.into_iter().collect();
+        if dev != prev_dev {
+            if let Some(c) = g.comm(prev_dev, dev, bytes, deps.clone()) {
+                deps = vec![c];
+            }
+        }
+        prev = Some(g.kernel(dev, "fwd", class_of(i), layer_cost(spec, i, batch).flops, deps));
+        prev_dev = dev;
+    }
+    // head (fwd + vjp)
+    let head = crate::model::cost::head_cost(spec, batch);
+    let last_dev = part.device_of(n - 1);
+    let h1 =
+        g.kernel(last_dev, "head", KernelClass::Gemm, 3.0 * head.flops, prev.into_iter().collect());
+    // backward chain
+    let mut prev = h1;
+    let mut prev_dev = last_dev;
+    for i in (0..n).rev() {
+        let dev = part.device_of(i);
+        let mut deps = vec![prev];
+        if dev != prev_dev {
+            if let Some(c) = g.comm(prev_dev, dev, bytes, deps.clone()) {
+                deps = vec![c];
+            }
+        }
+        prev = g.kernel(dev, "bwd", class_of(i), layer_bwd_cost(spec, i, batch).flops, deps);
+        prev_dev = dev;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n_res: usize, n_dev: usize) -> (NetSpec, Hierarchy, Partition) {
+        let spec = NetSpec::fig6_depth(n_res);
+        let hier = Hierarchy::two_level(n_res, spec.h(), spec.coarsen).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let partition = Partition::contiguous(n_blocks, n_dev).unwrap();
+        (spec, hier, partition)
+    }
+
+    #[test]
+    fn mg_forward_is_valid_dag() {
+        let (spec, hier, part) = setup(64, 4);
+        let g = mg_forward(&spec, &hier, &part, 1, 2);
+        g.validate().unwrap();
+        assert!(g.n_tasks() > 0);
+        assert!(g.total_flops() > 0.0);
+    }
+
+    #[test]
+    fn single_device_mg_has_no_comm() {
+        let (spec, hier, part) = setup(64, 1);
+        let g = mg_forward(&spec, &hier, &part, 1, 2);
+        assert_eq!(g.total_comm_bytes(), 0.0);
+    }
+
+    #[test]
+    fn multi_device_mg_comm_grows_with_devices() {
+        let (spec, hier, _) = setup(256, 1);
+        let mut prev = 0.0;
+        for n_dev in [2usize, 4, 8, 16] {
+            let n_blocks = hier.fine().blocks(hier.coarsen).len();
+            let part = Partition::contiguous(n_blocks, n_dev).unwrap();
+            let g = mg_forward(&spec, &hier, &part, 1, 2);
+            let bytes = g.total_comm_bytes();
+            assert!(bytes > prev, "n_dev={n_dev}: {bytes} <= {prev}");
+            prev = bytes;
+        }
+    }
+
+    #[test]
+    fn mg_work_is_cycles_times_sweep_work() {
+        let (spec, hier, part) = setup(64, 2);
+        let g1 = mg_forward(&spec, &hier, &part, 1, 1);
+        let g2 = mg_forward(&spec, &hier, &part, 1, 2);
+        assert!((g2.total_flops() / g1.total_flops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_forward_flops_match_trunk() {
+        let spec = NetSpec::fig6_depth(64);
+        let g = serial_forward(&spec, 1, 1);
+        let want = crate::model::cost::trunk_flops(&spec, 1);
+        assert!((g.total_flops() - want).abs() / want < 1e-12);
+        assert_eq!(g.total_comm_bytes(), 0.0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn pm_partitioned_has_boundary_comms() {
+        let spec = NetSpec::fig6_depth(64);
+        let g = serial_forward(&spec, 8, 1);
+        let n_comms = g.tasks.iter().filter(|t| matches!(t.kind, TaskKind::Comm { .. })).count();
+        assert_eq!(n_comms, 7); // 7 partition boundaries
+    }
+
+    #[test]
+    fn mg_does_more_flops_than_serial() {
+        // MG is iterative: with 2 cycles it performs > 2x the serial work
+        // (the paper's "4x slower on one GPU" effect)
+        let (spec, hier, part) = setup(64, 1);
+        let mg = mg_forward(&spec, &hier, &part, 1, 2);
+        let serial = serial_forward(&spec, 1, 1);
+        let ratio = mg.total_flops() / serial.total_flops();
+        assert!(ratio > 2.0 && ratio < 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn training_graph_has_param_grads_on_all_layers() {
+        let (spec, hier, part) = setup(32, 2);
+        let g = mg_training(&spec, &hier, &part, 1, 2);
+        g.validate().unwrap();
+        let n_pg = g
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Kernel { label: "param_grad", .. }))
+            .count();
+        assert_eq!(n_pg, 32);
+    }
+
+    #[test]
+    fn serial_training_fwd_bwd_chain() {
+        let spec = NetSpec::fig6_depth(16);
+        let g = serial_training(&spec, 2, 1);
+        g.validate().unwrap();
+        let fwd: f64 = g
+            .tasks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TaskKind::Kernel { label: "fwd", flops, .. } => Some(*flops),
+                _ => None,
+            })
+            .sum();
+        let bwd: f64 = g
+            .tasks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TaskKind::Kernel { label: "bwd", flops, .. } => Some(*flops),
+                _ => None,
+            })
+            .sum();
+        assert!((bwd / fwd - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig7_schedule_scales() {
+        // the 2B-param preset: schedule generation must handle 4k+ layers
+        let spec = NetSpec::fig7();
+        let hier = Hierarchy::two_level(spec.n_res(), spec.h(), spec.coarsen).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let part = Partition::contiguous(n_blocks, 64).unwrap();
+        let g = mg_forward(&spec, &hier, &part, 1, 2);
+        g.validate().unwrap();
+        assert!(g.n_tasks() > 10_000);
+        assert!(g.total_comm_bytes() > 0.0);
+    }
+}

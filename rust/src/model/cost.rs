@@ -1,0 +1,161 @@
+//! Per-layer FLOP / byte cost model — the bridge between a [`NetSpec`] and
+//! the cluster simulator. Counts follow the standard conv/GEMM conventions
+//! (one multiply-add = 2 FLOPs); activation and parameter traffic are f32.
+
+use super::spec::{LayerKind, NetSpec};
+
+/// Cost of evaluating one trunk layer's residual step at a given batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    pub flops: f64,
+    /// Bytes of parameters streamed (weights + bias).
+    pub param_bytes: f64,
+    /// Bytes of one activation (input or output state — symmetric here).
+    pub act_bytes: f64,
+}
+
+/// Forward-evaluation cost of trunk layer `i` of `spec` at batch size `b`.
+pub fn layer_cost(spec: &NetSpec, i: usize, batch: usize) -> LayerCost {
+    let (h, w) = spec.hw();
+    let act_elems = (batch * spec.channels() * h * w) as f64;
+    match &spec.trunk[i] {
+        LayerKind::Conv { channels, kernel } => {
+            let c = *channels as f64;
+            let k = *kernel as f64;
+            // conv MACs: B·C_out·H·W·C_in·k² ; epilogue (bias/relu/axpy) ~ 3 ops/elem
+            let flops = 2.0 * batch as f64 * c * (h * w) as f64 * c * k * k + 3.0 * act_elems;
+            LayerCost {
+                flops,
+                param_bytes: 4.0 * (c * c * k * k + c),
+                act_bytes: 4.0 * act_elems,
+            }
+        }
+        LayerKind::Fc { dim } => {
+            let d = *dim as f64;
+            let flops = 2.0 * batch as f64 * d * d + 3.0 * act_elems;
+            LayerCost { flops, param_bytes: 4.0 * (d * d + d), act_bytes: 4.0 * act_elems }
+        }
+    }
+}
+
+/// Backward (VJP) cost of trunk layer `i`: data-grad + weight-grad convs make
+/// the canonical 2× forward, plus epilogue traffic.
+pub fn layer_bwd_cost(spec: &NetSpec, i: usize, batch: usize) -> LayerCost {
+    let f = layer_cost(spec, i, batch);
+    LayerCost { flops: 2.0 * f.flops, param_bytes: f.param_bytes, act_bytes: 2.0 * f.act_bytes }
+}
+
+/// Opening-layer forward cost.
+pub fn opening_cost(spec: &NetSpec, batch: usize) -> LayerCost {
+    let o = &spec.opening;
+    let (oh, ow) = o.out_hw();
+    let macs = batch * o.out_channels * oh * ow * o.in_channels * o.kernel * o.kernel;
+    LayerCost {
+        flops: 2.0 * macs as f64,
+        param_bytes: 4.0 * o.param_count() as f64,
+        act_bytes: 4.0 * (batch * o.out_channels * oh * ow) as f64,
+    }
+}
+
+/// Head (FC + softmax-xent) forward cost.
+pub fn head_cost(spec: &NetSpec, batch: usize) -> LayerCost {
+    let flops = 2.0 * (batch * spec.fc_in() * spec.n_classes) as f64;
+    LayerCost {
+        flops,
+        param_bytes: 4.0 * (spec.fc_in() * spec.n_classes + spec.n_classes) as f64,
+        act_bytes: 4.0 * (batch * spec.n_classes) as f64,
+    }
+}
+
+/// Total forward FLOPs of the whole trunk.
+pub fn trunk_flops(spec: &NetSpec, batch: usize) -> f64 {
+    (0..spec.n_res()).map(|i| layer_cost(spec, i, batch).flops).sum()
+}
+
+/// Bytes of one trunk activation state (what C-relaxation ships across
+/// device boundaries).
+pub fn state_bytes(spec: &NetSpec, batch: usize) -> f64 {
+    4.0 * (batch * spec.state_elems()) as f64
+}
+
+/// Arithmetic intensity (FLOPs per byte moved) of trunk layer `i` — the
+/// quantity the paper's §IV-E argues drives the MG-vs-PM crossover.
+pub fn arithmetic_intensity(spec: &NetSpec, i: usize, batch: usize) -> f64 {
+    let c = layer_cost(spec, i, batch);
+    c.flops / (c.param_bytes + 2.0 * c.act_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_layer_cost_formula() {
+        let spec = NetSpec::micro(); // C=2, 6x6, k=3
+        let c = layer_cost(&spec, 0, 1);
+        let macs = 2.0 * 1.0 * 2.0 * 36.0 * 2.0 * 9.0;
+        assert!((c.flops - (macs + 3.0 * 72.0)).abs() < 1e-9);
+        assert_eq!(c.param_bytes, 4.0 * (2.0 * 2.0 * 9.0 + 2.0));
+        assert_eq!(c.act_bytes, 4.0 * 72.0);
+    }
+
+    #[test]
+    fn fc_layer_cost() {
+        let spec = NetSpec::fig7();
+        // find an FC layer
+        let i = spec.trunk.iter().position(|l| matches!(l, LayerKind::Fc { .. })).unwrap();
+        let c = layer_cost(&spec, i, 1);
+        let d = 11520.0f64;
+        assert!((c.flops - (2.0 * d * d + 3.0 * d)).abs() < 1.0);
+        assert!((c.param_bytes - 4.0 * (d * d + d)).abs() < 1.0);
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd_flops() {
+        let spec = NetSpec::mnist();
+        let f = layer_cost(&spec, 0, 4);
+        let b = layer_bwd_cost(&spec, 0, 4);
+        assert_eq!(b.flops, 2.0 * f.flops);
+    }
+
+    #[test]
+    fn batch_scales_flops_linearly() {
+        let spec = NetSpec::mnist();
+        let c1 = layer_cost(&spec, 0, 1).flops;
+        let c8 = layer_cost(&spec, 0, 8).flops;
+        assert!((c8 / c1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig7_fc_dominates_intensity() {
+        // the paper's §IV-E argument: FC layers push arithmetic intensity up
+        let spec = NetSpec::fig7();
+        let conv_i = spec.trunk.iter().position(|l| matches!(l, LayerKind::Conv { .. })).unwrap();
+        let fc_i = spec.trunk.iter().position(|l| matches!(l, LayerKind::Fc { .. })).unwrap();
+        let conv_cost = layer_cost(&spec, conv_i, 1);
+        let fc_cost = layer_cost(&spec, fc_i, 1);
+        assert!(fc_cost.flops > 5.0 * conv_cost.flops);
+    }
+
+    #[test]
+    fn state_bytes_matches_spec() {
+        let spec = NetSpec::mnist();
+        assert_eq!(state_bytes(&spec, 1), 4.0 * 6272.0);
+        assert_eq!(state_bytes(&spec, 16), 16.0 * 4.0 * 6272.0);
+    }
+
+    #[test]
+    fn trunk_flops_sums_layers() {
+        let spec = NetSpec::micro();
+        let per = layer_cost(&spec, 0, 1).flops;
+        assert!((trunk_flops(&spec, 1) - 4.0 * per).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opening_and_head_costs_positive() {
+        let spec = NetSpec::fig6();
+        assert!(opening_cost(&spec, 1).flops > 0.0);
+        assert!(head_cost(&spec, 1).flops > 0.0);
+        assert!(arithmetic_intensity(&spec, 0, 1) > 0.0);
+    }
+}

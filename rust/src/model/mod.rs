@@ -1,0 +1,10 @@
+//! Network model: architecture specs (with the paper presets reverse-
+//! engineered to exact parameter counts), parameter storage/initialization,
+//! and the per-layer FLOP/byte cost model that feeds the cluster simulator.
+
+pub mod cost;
+pub mod params;
+pub mod spec;
+
+pub use params::NetParams;
+pub use spec::{LayerKind, NetSpec, OpeningSpec};

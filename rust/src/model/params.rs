@@ -1,0 +1,208 @@
+//! Parameter storage and initialization for networks we run numerically
+//! (micro/mnist/fig6-family; fig7's 2B parameters exist only in the cost
+//! model — instantiating them would need ≈8 GiB and is rejected explicitly).
+
+use anyhow::{bail, Result};
+
+use super::spec::{LayerKind, NetSpec};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// All learnable parameters of one network.
+#[derive(Debug, Clone)]
+pub struct NetParams {
+    pub w_open: Tensor,
+    pub b_open: Tensor,
+    /// (weight, bias) per trunk layer; weight layout depends on LayerKind.
+    pub trunk: Vec<(Tensor, Tensor)>,
+    pub w_fc: Tensor,
+    pub b_fc: Tensor,
+}
+
+/// Refuse to allocate parameter sets above this size (the fig7 preset is
+/// cost-model-only; see DESIGN.md §4).
+const MAX_PARAM_ELEMS: u64 = 200_000_000;
+
+impl NetParams {
+    /// He-style initialization: conv weights N(0, √(2/fan_in)), biases zero
+    /// except a small positive bias so ReLU units start active.
+    pub fn init(spec: &NetSpec, seed: u64) -> Result<NetParams> {
+        spec.validate()?;
+        if spec.param_count() > MAX_PARAM_ELEMS {
+            bail!(
+                "refusing to allocate {} parameters for preset {:?} (cost-model-only preset)",
+                spec.param_count(),
+                spec.name
+            );
+        }
+        let mut rng = Rng::new(seed);
+        let o = &spec.opening;
+        let fan_in_open = (o.in_channels * o.kernel * o.kernel) as f32;
+        let w_open = Tensor::randn(
+            &[o.out_channels, o.in_channels, o.kernel, o.kernel],
+            (2.0 / fan_in_open).sqrt(),
+            &mut rng,
+        );
+        let b_open = Tensor::full(&[o.out_channels], 0.01);
+
+        let mut trunk = Vec::with_capacity(spec.n_res());
+        for l in &spec.trunk {
+            match l {
+                LayerKind::Conv { channels, kernel } => {
+                    let fan_in = (channels * kernel * kernel) as f32;
+                    let w = Tensor::randn(
+                        &[*channels, *channels, *kernel, *kernel],
+                        (2.0 / fan_in).sqrt(),
+                        &mut rng,
+                    );
+                    let b = Tensor::zeros(&[*channels]);
+                    trunk.push((w, b));
+                }
+                LayerKind::Fc { dim } => {
+                    let w = Tensor::randn(&[*dim, *dim], (2.0 / *dim as f32).sqrt(), &mut rng);
+                    let b = Tensor::zeros(&[*dim]);
+                    trunk.push((w, b));
+                }
+            }
+        }
+
+        let w_fc = Tensor::randn(
+            &[spec.fc_in(), spec.n_classes],
+            (1.0 / spec.fc_in() as f32).sqrt(),
+            &mut rng,
+        );
+        let b_fc = Tensor::zeros(&[spec.n_classes]);
+        Ok(NetParams { w_open, b_open, trunk, w_fc, b_fc })
+    }
+
+    /// Total element count across all tensors.
+    pub fn n_elems(&self) -> usize {
+        self.w_open.len()
+            + self.b_open.len()
+            + self.trunk.iter().map(|(w, b)| w.len() + b.len()).sum::<usize>()
+            + self.w_fc.len()
+            + self.b_fc.len()
+    }
+
+    /// SGD update: θ ← θ − lr·g for every tensor pair in `grads`.
+    pub fn sgd_step(&mut self, grads: &NetGrads, lr: f32) -> Result<()> {
+        self.w_open.axpy(-lr, &grads.w_open)?;
+        self.b_open.axpy(-lr, &grads.b_open)?;
+        if grads.trunk.len() != self.trunk.len() {
+            bail!("grad trunk len {} != param trunk len {}", grads.trunk.len(), self.trunk.len());
+        }
+        for ((w, b), (gw, gb)) in self.trunk.iter_mut().zip(&grads.trunk) {
+            w.axpy(-lr, gw)?;
+            b.axpy(-lr, gb)?;
+        }
+        self.w_fc.axpy(-lr, &grads.w_fc)?;
+        self.b_fc.axpy(-lr, &grads.b_fc)?;
+        Ok(())
+    }
+}
+
+/// Gradients, same structure as the parameters.
+#[derive(Debug, Clone)]
+pub struct NetGrads {
+    pub w_open: Tensor,
+    pub b_open: Tensor,
+    pub trunk: Vec<(Tensor, Tensor)>,
+    pub w_fc: Tensor,
+    pub b_fc: Tensor,
+}
+
+impl NetGrads {
+    /// Zero gradients matching a parameter set.
+    pub fn zeros_like(p: &NetParams) -> NetGrads {
+        NetGrads {
+            w_open: Tensor::zeros(p.w_open.dims()),
+            b_open: Tensor::zeros(p.b_open.dims()),
+            trunk: p
+                .trunk
+                .iter()
+                .map(|(w, b)| (Tensor::zeros(w.dims()), Tensor::zeros(b.dims())))
+                .collect(),
+            w_fc: Tensor::zeros(p.w_fc.dims()),
+            b_fc: Tensor::zeros(p.b_fc.dims()),
+        }
+    }
+
+    /// Global L2 norm over all gradient tensors (for logging/clipping).
+    pub fn global_norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        let mut add = |t: &Tensor| {
+            let n = t.l2_norm();
+            acc += n * n;
+        };
+        add(&self.w_open);
+        add(&self.b_open);
+        for (w, b) in &self.trunk {
+            add(w);
+            add(b);
+        }
+        add(&self.w_fc);
+        add(&self.b_fc);
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_match_spec() {
+        let spec = NetSpec::micro();
+        let p = NetParams::init(&spec, 1).unwrap();
+        assert_eq!(p.w_open.dims(), &[2, 1, 3, 3]);
+        assert_eq!(p.trunk.len(), 4);
+        assert_eq!(p.trunk[0].0.dims(), &[2, 2, 3, 3]);
+        assert_eq!(p.w_fc.dims(), &[72, 10]);
+        assert_eq!(p.n_elems() as u64, spec.param_count());
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let spec = NetSpec::micro();
+        let a = NetParams::init(&spec, 42).unwrap();
+        let b = NetParams::init(&spec, 42).unwrap();
+        let c = NetParams::init(&spec, 43).unwrap();
+        assert_eq!(a.w_open, b.w_open);
+        assert_ne!(a.w_open, c.w_open);
+    }
+
+    #[test]
+    fn fig7_refused() {
+        let err = NetParams::init(&NetSpec::fig7(), 1).unwrap_err();
+        assert!(err.to_string().contains("cost-model-only"));
+    }
+
+    #[test]
+    fn fig6_instantiable_and_counts_match() {
+        let spec = NetSpec::fig6();
+        let p = NetParams::init(&spec, 7).unwrap();
+        assert_eq!(p.n_elems() as u64, 3_248_534);
+    }
+
+    #[test]
+    fn sgd_step_moves_params() {
+        let spec = NetSpec::micro();
+        let mut p = NetParams::init(&spec, 1).unwrap();
+        let before = p.w_fc.clone();
+        let mut g = NetGrads::zeros_like(&p);
+        g.w_fc = Tensor::full(p.w_fc.dims(), 1.0);
+        p.sgd_step(&g, 0.1).unwrap();
+        let diff = crate::util::stats::max_abs_diff(p.w_fc.data(), before.data());
+        assert!((diff - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grads_zeros_and_norm() {
+        let spec = NetSpec::micro();
+        let p = NetParams::init(&spec, 1).unwrap();
+        let mut g = NetGrads::zeros_like(&p);
+        assert_eq!(g.global_norm(), 0.0);
+        g.b_fc = Tensor::full(&[10], 3.0);
+        assert!((g.global_norm() - 3.0 * (10f64).sqrt()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,336 @@
+//! Architecture specifications and the paper's network presets.
+//!
+//! The paper's stated hyperparameters are internally inconsistent (e.g. a
+//! 7×7/50-channel conv layer alone has 122,550 parameters, so 4,092 of them
+//! cannot total 3.25 M). We reverse-engineered configurations that reproduce
+//! the paper's parameter counts **exactly**:
+//!
+//! - `fig6` (Fig 6 caption: 3,248,534): opening conv 7×7 1→4 pad 1 on 28×28
+//!   (→ 24×24, 200 params) + **4,093** residual conv layers 7×7/4-ch/pad 3
+//!   (788 each) + head FC 2,304→10 (23,050). 200 + 4,093·788 + 23,050 =
+//!   3,248,534. The text's "50 output channels"/"3,248,524" are typos.
+//! - `fig7` (§IV-E: 2,071,328,150): opening conv 7×7 1→20 pad 1 (1,000) +
+//!   trunk of **4,097** residual conv layers 7×7/20-ch/pad 3 (19,620 each)
+//!   interleaved with **15** residual FC layers 11,520×11,520 (132,721,920
+//!   each) + head FC 11,520→10 (115,210). 1,000 + 4,097·19,620 +
+//!   15·132,721,920 + 115,210 = 2,071,328,150 — exact. (The text says "16
+//!   repeated sequence blocks"; 15 interleaved FCs + one trailing conv is
+//!   the unique layout consistent with the stated total.)
+//!
+//! Both equalities are asserted by unit tests below.
+
+use anyhow::{bail, Result};
+
+/// One residual trunk layer. All trunk layers are shape-preserving
+/// (`u + h·F(u)` requires it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Residual conv layer: C→C channels, k×k kernel, pad = k/2.
+    Conv { channels: usize, kernel: usize },
+    /// Residual fully-connected layer on the flattened activation.
+    Fc { dim: usize },
+}
+
+/// The non-residual input layer (may change channel count and spatial size).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpeningSpec {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub kernel: usize,
+    pub pad: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+}
+
+impl OpeningSpec {
+    /// Output spatial size: H + 2·pad − k + 1 (unit stride).
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            self.in_h + 2 * self.pad + 1 - self.kernel,
+            self.in_w + 2 * self.pad + 1 - self.kernel,
+        )
+    }
+
+    pub fn param_count(&self) -> u64 {
+        (self.out_channels * self.in_channels * self.kernel * self.kernel + self.out_channels)
+            as u64
+    }
+}
+
+/// A full network: opening layer, residual trunk, classifier head, plus the
+/// ODE horizon and MGRIT coarsening factor.
+#[derive(Debug, Clone)]
+pub struct NetSpec {
+    pub name: String,
+    pub opening: OpeningSpec,
+    pub trunk: Vec<LayerKind>,
+    pub n_classes: usize,
+    /// ODE horizon T; the fine-level step is h = T / n_res.
+    pub t_final: f64,
+    /// MGRIT coarsening factor c (layers per block).
+    pub coarsen: usize,
+}
+
+impl NetSpec {
+    pub fn n_res(&self) -> usize {
+        self.trunk.len()
+    }
+
+    /// Fine-level ODE step h = T / N.
+    pub fn h(&self) -> f32 {
+        (self.t_final / self.n_res() as f64) as f32
+    }
+
+    /// Trunk activation spatial size (constant across the trunk).
+    pub fn hw(&self) -> (usize, usize) {
+        self.opening.out_hw()
+    }
+
+    pub fn channels(&self) -> usize {
+        self.opening.out_channels
+    }
+
+    /// Flattened feature size entering the head FC.
+    pub fn fc_in(&self) -> usize {
+        let (h, w) = self.hw();
+        self.channels() * h * w
+    }
+
+    /// Activation element count for batch size 1 (one layer state).
+    pub fn state_elems(&self) -> usize {
+        self.fc_in()
+    }
+
+    /// Parameter count of trunk layer `i`.
+    pub fn layer_param_count(&self, i: usize) -> u64 {
+        match &self.trunk[i] {
+            LayerKind::Conv { channels, kernel } => {
+                (channels * channels * kernel * kernel + channels) as u64
+            }
+            LayerKind::Fc { dim } => (dim * dim + dim) as u64,
+        }
+    }
+
+    /// Total parameter count (opening + trunk + head).
+    pub fn param_count(&self) -> u64 {
+        let head = (self.fc_in() * self.n_classes + self.n_classes) as u64;
+        self.opening.param_count()
+            + (0..self.n_res()).map(|i| self.layer_param_count(i)).sum::<u64>()
+            + head
+    }
+
+    /// Validate invariants (shape preservation, coarsening sanity).
+    pub fn validate(&self) -> Result<()> {
+        if self.coarsen < 2 {
+            bail!("coarsening factor must be ≥ 2, got {}", self.coarsen);
+        }
+        if self.trunk.is_empty() {
+            bail!("trunk must have at least one layer");
+        }
+        let c = self.channels();
+        let feat = self.fc_in();
+        for (i, l) in self.trunk.iter().enumerate() {
+            match l {
+                LayerKind::Conv { channels, kernel } => {
+                    if *channels != c {
+                        bail!("trunk layer {i}: channels {channels} != trunk width {c}");
+                    }
+                    if kernel % 2 == 0 {
+                        bail!("trunk layer {i}: even kernel {kernel} cannot be shape-preserving");
+                    }
+                }
+                LayerKind::Fc { dim } => {
+                    if *dim != feat {
+                        bail!("trunk layer {i}: FC dim {dim} != flattened feature size {feat}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // presets
+    // ------------------------------------------------------------------
+
+    /// Tiny test network (matches the python `micro` preset / artifacts).
+    pub fn micro() -> NetSpec {
+        NetSpec {
+            name: "micro".into(),
+            opening: OpeningSpec {
+                in_channels: 1, out_channels: 2, kernel: 3, pad: 1, in_h: 6, in_w: 6,
+            },
+            trunk: vec![LayerKind::Conv { channels: 2, kernel: 3 }; 4],
+            n_classes: 10,
+            t_final: 1.0,
+            coarsen: 2,
+        }
+    }
+
+    /// End-to-end training network (matches the python `mnist` preset).
+    pub fn mnist() -> NetSpec {
+        NetSpec {
+            name: "mnist".into(),
+            opening: OpeningSpec {
+                in_channels: 1, out_channels: 8, kernel: 3, pad: 1, in_h: 28, in_w: 28,
+            },
+            trunk: vec![LayerKind::Conv { channels: 8, kernel: 3 }; 32],
+            n_classes: 10,
+            t_final: 2.0,
+            coarsen: 4,
+        }
+    }
+
+    /// The paper's 3.25 M-parameter / 4,096-layer network (Fig 6).
+    pub fn fig6() -> NetSpec {
+        NetSpec {
+            name: "fig6".into(),
+            opening: OpeningSpec {
+                in_channels: 1, out_channels: 4, kernel: 7, pad: 1, in_h: 28, in_w: 28,
+            },
+            trunk: vec![LayerKind::Conv { channels: 4, kernel: 7 }; 4093],
+            n_classes: 10,
+            t_final: 4.0,
+            coarsen: 4,
+        }
+    }
+
+    /// The paper's 2.07 B-parameter / 4,115-layer network (Fig 7):
+    /// 16 groups of 256 convs with FC layers between groups (15 FCs), plus
+    /// one trailing conv.
+    pub fn fig7() -> NetSpec {
+        let channels = 20usize;
+        let opening = OpeningSpec {
+            in_channels: 1, out_channels: channels, kernel: 7, pad: 1, in_h: 28, in_w: 28,
+        };
+        let (oh, ow) = opening.out_hw();
+        let dim = channels * oh * ow; // 20·24·24 = 11,520
+        let mut trunk = Vec::with_capacity(4112);
+        for group in 0..16 {
+            if group > 0 {
+                trunk.push(LayerKind::Fc { dim });
+            }
+            for _ in 0..256 {
+                trunk.push(LayerKind::Conv { channels, kernel: 7 });
+            }
+        }
+        trunk.push(LayerKind::Conv { channels, kernel: 7 }); // 4,097th conv
+        NetSpec {
+            name: "fig7".into(),
+            opening,
+            trunk,
+            n_classes: 10,
+            t_final: 4.0,
+            coarsen: 4,
+        }
+    }
+
+    /// A fig6-family network at arbitrary depth — the Fig 4 convergence
+    /// study sweeps this over N.
+    pub fn fig6_depth(n_res: usize) -> NetSpec {
+        let mut s = Self::fig6();
+        s.name = format!("fig6x{n_res}");
+        s.trunk = vec![LayerKind::Conv { channels: 4, kernel: 7 }; n_res];
+        s
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Result<NetSpec> {
+        Ok(match name {
+            "micro" => Self::micro(),
+            "mnist" => Self::mnist(),
+            "fig6" => Self::fig6(),
+            "fig7" => Self::fig7(),
+            _ => bail!("unknown preset {name:?} (micro|mnist|fig6|fig7)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for name in ["micro", "mnist", "fig6", "fig7"] {
+            NetSpec::by_name(name).unwrap().validate().unwrap();
+        }
+        assert!(NetSpec::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn fig6_param_count_exact() {
+        // the Fig 6 caption value, reproduced exactly
+        assert_eq!(NetSpec::fig6().param_count(), 3_248_534);
+    }
+
+    #[test]
+    fn fig7_param_count_exact() {
+        // the §IV-E text value, reproduced exactly
+        assert_eq!(NetSpec::fig7().param_count(), 2_071_328_150);
+    }
+
+    #[test]
+    fn fig7_layer_totals() {
+        let s = NetSpec::fig7();
+        let n_fc = s.trunk.iter().filter(|l| matches!(l, LayerKind::Fc { .. })).count();
+        let n_conv = s.trunk.iter().filter(|l| matches!(l, LayerKind::Conv { .. })).count();
+        assert_eq!(n_fc, 15);
+        assert_eq!(n_conv, 4097);
+        // opening + trunk + head FC = 4,114 weight layers (+softmax = 4,115)
+        assert_eq!(1 + s.trunk.len() + 1, 4114);
+    }
+
+    #[test]
+    fn fig6_geometry() {
+        let s = NetSpec::fig6();
+        assert_eq!(s.hw(), (24, 24));
+        assert_eq!(s.fc_in(), 4 * 24 * 24);
+        assert_eq!(s.opening.param_count(), 200);
+        assert_eq!(s.layer_param_count(0), 788);
+    }
+
+    #[test]
+    fn mnist_matches_python_manifest_values() {
+        let s = NetSpec::mnist();
+        assert_eq!(s.channels(), 8);
+        assert_eq!(s.n_res(), 32);
+        assert_eq!(s.coarsen, 4);
+        assert_eq!(s.fc_in(), 6272);
+        assert!((s.h() - 0.0625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_bad_specs() {
+        let mut s = NetSpec::micro();
+        s.coarsen = 1;
+        assert!(s.validate().is_err());
+
+        let mut s = NetSpec::micro();
+        s.trunk.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = NetSpec::micro();
+        s.trunk[0] = LayerKind::Conv { channels: 5, kernel: 3 };
+        assert!(s.validate().is_err());
+
+        let mut s = NetSpec::micro();
+        s.trunk[1] = LayerKind::Fc { dim: 3 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn depth_sweep_spec() {
+        let s = NetSpec::fig6_depth(256);
+        assert_eq!(s.n_res(), 256);
+        assert_eq!(s.channels(), 4);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn h_scales_with_depth() {
+        let a = NetSpec::fig6_depth(100);
+        let b = NetSpec::fig6_depth(200);
+        assert!((a.h() - 2.0 * b.h()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,253 @@
+//! The artifact manifest: what `python/compile/aot.py` exported, with shapes
+//! and preset hyperparameters. The rust side treats the manifest as the
+//! single source of truth and cross-checks it against its own `NetSpec`
+//! presets at load time (so a stale `artifacts/` directory fails loudly).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Identifies one AOT entry: (preset, entry name, batch size).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EntryKey {
+    pub preset: String,
+    pub entry: String,
+    pub batch: usize,
+}
+
+impl EntryKey {
+    pub fn new(preset: &str, entry: &str, batch: usize) -> EntryKey {
+        EntryKey { preset: preset.into(), entry: entry.into(), batch }
+    }
+}
+
+/// Tensor signature recorded in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported artifact.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub key: EntryKey,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Preset hyperparameters as exported by python (mirrors `model.Preset`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PresetInfo {
+    pub channels: usize,
+    pub kernel: usize,
+    pub pad: usize,
+    pub height: usize,
+    pub width: usize,
+    pub n_res: usize,
+    pub block: usize,
+    pub h: f64,
+    pub n_classes: usize,
+    pub fc_in: usize,
+    pub batches: Vec<usize>,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub entries: BTreeMap<EntryKey, Entry>,
+}
+
+fn sig_from_json(j: &Json) -> Result<TensorSig> {
+    let shape = j
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|s| s.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSig { shape, dtype: j.get("dtype")?.as_str()?.to_string() })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        if root.get("format")?.as_usize()? != 1 {
+            bail!("unsupported manifest format");
+        }
+
+        let mut presets = BTreeMap::new();
+        for (name, p) in root.get("presets")?.as_obj()? {
+            presets.insert(
+                name.clone(),
+                PresetInfo {
+                    channels: p.get("channels")?.as_usize()?,
+                    kernel: p.get("kernel")?.as_usize()?,
+                    pad: p.get("pad")?.as_usize()?,
+                    height: p.get("height")?.as_usize()?,
+                    width: p.get("width")?.as_usize()?,
+                    n_res: p.get("n_res")?.as_usize()?,
+                    block: p.get("block")?.as_usize()?,
+                    h: p.get("h")?.as_f64()?,
+                    n_classes: p.get("n_classes")?.as_usize()?,
+                    fc_in: p.get("fc_in")?.as_usize()?,
+                    batches: p
+                        .get("batches")?
+                        .as_arr()?
+                        .iter()
+                        .map(|b| b.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let mut entries = BTreeMap::new();
+        for e in root.get("entries")?.as_arr()? {
+            let key = EntryKey {
+                preset: e.get("preset")?.as_str()?.to_string(),
+                entry: e.get("entry")?.as_str()?.to_string(),
+                batch: e.get("batch")?.as_usize()?,
+            };
+            let file = dir.join(e.get("file")?.as_str()?);
+            if !file.exists() {
+                bail!("manifest references missing artifact {}", file.display());
+            }
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(sig_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(sig_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(key.clone(), Entry { key, file, inputs, outputs });
+        }
+        Ok(Manifest { dir, presets, entries })
+    }
+
+    pub fn entry(&self, key: &EntryKey) -> Result<&Entry> {
+        self.entries.get(key).ok_or_else(|| {
+            anyhow!(
+                "artifact {}/{} (batch {}) not in manifest — re-run `make artifacts`",
+                key.preset,
+                key.entry,
+                key.batch
+            )
+        })
+    }
+
+    /// Check a rust-side NetSpec against the exported preset hyperparameters.
+    pub fn check_spec(&self, spec: &crate::model::NetSpec) -> Result<&PresetInfo> {
+        let info = self
+            .presets
+            .get(&spec.name)
+            .ok_or_else(|| anyhow!("preset {:?} has no exported artifacts", spec.name))?;
+        let (h, w) = spec.hw();
+        if info.channels != spec.channels()
+            || info.n_res != spec.n_res()
+            || info.block != spec.coarsen
+            || info.height != h
+            || info.width != w
+            || info.fc_in != spec.fc_in()
+            || (info.h - spec.h() as f64).abs() > 1e-9
+        {
+            bail!(
+                "preset {:?} mismatch between rust spec and artifacts: \
+                 rust (C={} N={} c={} hw={}x{} fc={} h={}) vs manifest {:?}",
+                spec.name, spec.channels(), spec.n_res(), spec.coarsen, h, w,
+                spec.fc_in(), spec.h(), info
+            );
+        }
+        Ok(info)
+    }
+}
+
+/// An [`ArtifactStore`] couples a manifest with lazily compiled executables.
+/// (Defined here; execution lives in [`super::client`].)
+pub struct ArtifactStore {
+    pub manifest: Manifest,
+    pub runtime: super::client::Runtime,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        Ok(ArtifactStore { manifest: Manifest::load(dir)?, runtime: super::client::Runtime::new()? })
+    }
+
+    /// Compile (or fetch from cache) and execute one entry.
+    pub fn run(&self, key: &EntryKey, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self.manifest.entry(key)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{}/{}: expected {} inputs, got {}",
+                key.preset, key.entry, entry.inputs.len(), inputs.len()
+            );
+        }
+        self.runtime.run_file(&entry.file, inputs, entry.outputs.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_has_presets() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.presets.contains_key("micro"));
+        assert!(m.presets.contains_key("mnist"));
+        let micro = &m.presets["micro"];
+        assert_eq!(micro.channels, 2);
+        assert_eq!(micro.n_res, 4);
+    }
+
+    #[test]
+    fn manifest_entries_reference_real_files() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let key = EntryKey::new("micro", "step_fwd", 2);
+        let e = m.entry(&key).unwrap();
+        assert!(e.file.exists());
+        // step_fwd(u, w, b, h): 4 inputs, 1 output
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.outputs.len(), 1);
+        assert_eq!(e.inputs[0].shape, vec![2, 2, 6, 6]);
+        assert_eq!(e.outputs[0].shape, vec![2, 2, 6, 6]);
+    }
+
+    #[test]
+    fn missing_entry_is_helpful_error() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let err = m.entry(&EntryKey::new("micro", "nonexistent", 2)).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn check_spec_accepts_matching_and_rejects_mismatch() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        m.check_spec(&crate::model::NetSpec::micro()).unwrap();
+        m.check_spec(&crate::model::NetSpec::mnist()).unwrap();
+        let mut bad = crate::model::NetSpec::micro();
+        bad.coarsen = 4;
+        assert!(m.check_spec(&bad).is_err());
+        assert!(m.check_spec(&crate::model::NetSpec::fig6()).is_err());
+    }
+}

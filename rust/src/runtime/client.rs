@@ -1,0 +1,159 @@
+//! PJRT client wrapper: HLO-text → compiled executable (cached) → execution,
+//! plus Tensor ↔ Literal conversion. This is the only module that touches
+//! the `xla` crate directly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail};
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by artifact
+/// path. Compilation happens once per artifact per process; execution is
+/// thread-safe behind the cache lock handed out as `Arc`-like references.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact (or fetch the cached executable).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        // HLO *text*: the crate's text parser reassigns instruction ids, so
+        // jax ≥ 0.5 modules load despite the 64-bit-id proto incompatibility.
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; unpack the (always-tupled)
+    /// result into `n_outputs` literals.
+    pub fn run_file(
+        &self,
+        path: &Path,
+        inputs: &[xla::Literal],
+        n_outputs: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(path)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", path.display()))?;
+        let buf = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer from {}", path.display()))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", path.display()))?;
+        // aot.py lowers with return_tuple=True → output is always a tuple
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", path.display()))?;
+        if parts.len() != n_outputs {
+            bail!(
+                "{}: expected {n_outputs} outputs, got {}",
+                path.display(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Number of artifacts compiled so far (metrics / tests).
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor ↔ Literal conversion
+// ---------------------------------------------------------------------------
+
+/// Tensor → f32 literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.dims()))
+}
+
+/// f32 scalar literal (the runtime `h` argument of the artifacts).
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// i32 label vector literal.
+pub fn labels_to_literal(labels: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(labels)
+}
+
+/// f32 literal → Tensor (shape read from the literal).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32 vec (dtype {:?}): {e}", shape.ty()))?;
+    Tensor::new(dims, data)
+}
+
+/// Scalar f32 literal → f64 (loss outputs).
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar literal: {e}"))?;
+    match v.as_slice() {
+        [x] => Ok(*x as f64),
+        _ => bail!("expected scalar literal, got {} elements", v.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_literal(0.25);
+        assert_eq!(literal_to_scalar(&lit).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn labels_literal_has_right_len() {
+        let lit = labels_to_literal(&[1, 2, 3]);
+        assert_eq!(lit.element_count(), 3);
+    }
+
+    // Runtime-dependent tests (PJRT client creation, artifact execution)
+    // live in tests/pjrt_roundtrip.rs so the unit suite stays hermetic.
+}

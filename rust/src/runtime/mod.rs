@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` + manifest)
+//! produced by `make artifacts` and executes them on the PJRT CPU client.
+//! Python never runs here — the HLO text is the only thing that crosses the
+//! build/runtime boundary.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactStore, EntryKey, Manifest, PresetInfo};
+pub use client::Runtime;

@@ -1,0 +1,573 @@
+//! The event loop: executes a [`TaskGraph`] in virtual time on a
+//! [`ClusterModel`].
+
+use std::collections::VecDeque;
+
+use anyhow::bail;
+
+use crate::mgrit::taskgraph::{TaskGraph, TaskKind};
+use crate::perfmodel::ClusterModel;
+use crate::Result;
+
+/// One executed kernel or transfer (virtual-time nvprof line).
+#[derive(Debug, Clone)]
+pub struct SimTraceEvent {
+    pub device: usize,
+    /// Stream slot on the device (0..max_concurrency); comms use slot 0.
+    pub slot: usize,
+    pub label: &'static str,
+    pub is_comm: bool,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end virtual time (seconds).
+    pub makespan_s: f64,
+    /// Per-device union-of-kernel-intervals (compute-occupied seconds).
+    pub device_busy_s: Vec<f64>,
+    /// Sum of transfer durations (seconds of NIC occupancy, one-sided).
+    pub comm_total_s: f64,
+    pub n_kernels: usize,
+    pub n_comms: usize,
+    /// Kernel/transfer timeline (only if `record_trace` was set).
+    pub trace: Vec<SimTraceEvent>,
+}
+
+impl SimReport {
+    /// Mean device compute occupancy in [0, 1].
+    pub fn compute_fraction(&self) -> f64 {
+        if self.makespan_s <= 0.0 || self.device_busy_s.is_empty() {
+            return 0.0;
+        }
+        let mean_busy: f64 =
+            self.device_busy_s.iter().sum::<f64>() / self.device_busy_s.len() as f64;
+        mean_busy / self.makespan_s
+    }
+
+    /// 1 − compute fraction: the share of wall time a mean device spends
+    /// stalled (communication + dependency waits) — the quantity behind the
+    /// paper's "97 % of evaluation time consumed by communication" (Fig 6c).
+    pub fn stall_fraction(&self) -> f64 {
+        1.0 - self.compute_fraction()
+    }
+
+    /// Peak kernel concurrency observed on one device (Fig 5's "5-way").
+    pub fn peak_concurrency(&self, device: usize) -> usize {
+        let mut edges: Vec<(f64, i64)> = Vec::new();
+        for e in self.trace.iter().filter(|e| !e.is_comm && e.device == device) {
+            edges.push((e.t_start, 1));
+            edges.push((e.t_end, -1));
+        }
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut cur = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in edges {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak as usize
+    }
+}
+
+struct RunningKernel {
+    task: usize,
+    /// Remaining launch/driver overhead (seconds). Launches on different
+    /// stream slots proceed concurrently — the latency hiding that CUDA
+    /// streams provide and the paper's concurrency argument relies on.
+    launch_rem: f64,
+    /// Remaining compute (exclusive-execution seconds); co-resident kernels
+    /// in their compute phase share the device throughput (the paper's
+    /// register-pressure serialization of convolutions).
+    compute_rem: f64,
+    slot: usize,
+    trace_idx: Option<usize>,
+}
+
+impl RunningKernel {
+    fn done(&self) -> bool {
+        self.launch_rem <= 1e-12 && self.compute_rem <= 1e-12
+    }
+}
+
+struct Device {
+    running: Vec<RunningKernel>,
+    ready: VecDeque<usize>,
+    slots: Vec<bool>,
+    last_update: f64,
+    busy_s: f64,
+    busy_since: f64,
+}
+
+impl Device {
+    fn new(max_conc: usize) -> Device {
+        Device {
+            running: Vec::new(),
+            ready: VecDeque::new(),
+            slots: vec![false; max_conc],
+            last_update: 0.0,
+            busy_s: 0.0,
+            busy_since: 0.0,
+        }
+    }
+
+    /// Advance progress to time `t`: launch phases elapse concurrently;
+    /// kernels past their launch share the compute throughput.
+    fn advance(&mut self, t: f64) {
+        let dt = (t - self.last_update).max(0.0);
+        if dt > 0.0 && !self.running.is_empty() {
+            let n_compute = self.running.iter().filter(|k| k.launch_rem <= 1e-12).count();
+            for k in &mut self.running {
+                if k.launch_rem > 1e-12 {
+                    k.launch_rem -= dt;
+                } else if n_compute > 0 {
+                    k.compute_rem -= dt / n_compute as f64;
+                }
+            }
+        }
+        self.last_update = t;
+    }
+
+    /// Predicted time of this device's next state change (a launch phase
+    /// ending, or a kernel completing its compute).
+    fn next_completion(&self) -> f64 {
+        if self.running.is_empty() {
+            return f64::INFINITY;
+        }
+        let n_compute = self.running.iter().filter(|k| k.launch_rem <= 1e-12).count();
+        let mut t = f64::INFINITY;
+        for k in &self.running {
+            let cand = if k.launch_rem > 1e-12 {
+                k.launch_rem
+            } else {
+                k.compute_rem.max(0.0) * n_compute as f64
+            };
+            t = t.min(cand);
+        }
+        self.last_update + t
+    }
+}
+
+/// Execute `graph` on `cluster` in virtual time.
+pub fn simulate(graph: &TaskGraph, cluster: &ClusterModel, record_trace: bool) -> Result<SimReport> {
+    let n = graph.tasks.len();
+    if n == 0 {
+        return Ok(SimReport {
+            makespan_s: 0.0,
+            device_busy_s: vec![0.0; cluster.n_devices],
+            comm_total_s: 0.0,
+            n_kernels: 0,
+            n_comms: 0,
+            trace: Vec::new(),
+        });
+    }
+    // dependency bookkeeping
+    let mut indeg = vec![0usize; n];
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for t in &graph.tasks {
+        if t.device >= cluster.n_devices {
+            bail!("task {} targets device {} ≥ n_devices {}", t.id, t.device, cluster.n_devices);
+        }
+        indeg[t.id] = t.deps.len();
+        for &d in &t.deps {
+            dependents[d].push(t.id);
+        }
+    }
+
+    let max_conc = cluster.device.max_concurrency;
+    let mut devices: Vec<Device> = (0..cluster.n_devices).map(|_| Device::new(max_conc)).collect();
+    let mut nic_free = vec![0.0f64; cluster.n_devices];
+    // in-flight comms: (t_end, task id)
+    let mut comms: Vec<(f64, usize)> = Vec::new();
+    let mut trace: Vec<SimTraceEvent> = Vec::new();
+    let mut comm_total_s = 0.0;
+    let mut n_kernels = 0usize;
+    let mut n_comms = 0usize;
+    let mut done = 0usize;
+    let mut now = 0.0f64;
+
+    // schedule one task whose deps are all satisfied
+    fn dispatch(
+        task_id: usize,
+        t: f64,
+        graph: &TaskGraph,
+        cluster: &ClusterModel,
+        devices: &mut [Device],
+        nic_free: &mut [f64],
+        comms: &mut Vec<(f64, usize)>,
+        trace: &mut Vec<SimTraceEvent>,
+        comm_total_s: &mut f64,
+        n_comms: &mut usize,
+        record_trace: bool,
+    ) {
+        let task = &graph.tasks[task_id];
+        match &task.kind {
+            TaskKind::Kernel { .. } => {
+                devices[task.device].ready.push_back(task_id);
+            }
+            TaskKind::Comm { src, dst, bytes } => {
+                let start = t.max(nic_free[*src]).max(nic_free[*dst]);
+                let dur = cluster.net.message_time(*bytes);
+                nic_free[*src] = start + dur;
+                nic_free[*dst] = start + dur;
+                comms.push((start + dur, task_id));
+                *comm_total_s += dur;
+                *n_comms += 1;
+                if record_trace {
+                    trace.push(SimTraceEvent {
+                        device: *dst,
+                        slot: 0,
+                        label: "comm",
+                        is_comm: true,
+                        t_start: start,
+                        t_end: start + dur,
+                    });
+                }
+            }
+        }
+    }
+
+    // start ready kernels on a device (after advancing it to `t`)
+    fn fill_slots(
+        d: usize,
+        t: f64,
+        graph: &TaskGraph,
+        cluster: &ClusterModel,
+        devices: &mut [Device],
+        trace: &mut Vec<SimTraceEvent>,
+        n_kernels: &mut usize,
+        record_trace: bool,
+    ) {
+        let dev = &mut devices[d];
+        while dev.running.len() < dev.slots.len() && !dev.ready.is_empty() {
+            dev.advance(t);
+            let task_id = dev.ready.pop_front().unwrap();
+            let TaskKind::Kernel { label, class, flops } = &graph.tasks[task_id].kind else {
+                unreachable!("ready queue holds kernels only");
+            };
+            let slot = dev.slots.iter().position(|s| !s).unwrap();
+            dev.slots[slot] = true;
+            if dev.running.is_empty() {
+                dev.busy_since = t;
+            }
+            let trace_idx = if record_trace {
+                trace.push(SimTraceEvent {
+                    device: d,
+                    slot,
+                    label,
+                    is_comm: false,
+                    t_start: t,
+                    t_end: f64::NAN,
+                });
+                Some(trace.len() - 1)
+            } else {
+                None
+            };
+            let (launch, compute) = cluster.device.kernel_phases(*class, *flops);
+            dev.running.push(RunningKernel { task: task_id, launch_rem: launch, compute_rem: compute, slot, trace_idx });
+            *n_kernels += 1;
+        }
+    }
+
+    // initial dispatch
+    for t in &graph.tasks {
+        if indeg[t.id] == 0 {
+            dispatch(
+                t.id, 0.0, graph, cluster, &mut devices, &mut nic_free, &mut comms, &mut trace,
+                &mut comm_total_s, &mut n_comms, record_trace,
+            );
+        }
+    }
+    for d in 0..devices.len() {
+        fill_slots(d, 0.0, graph, cluster, &mut devices, &mut trace, &mut n_kernels, record_trace);
+    }
+
+    while done < n {
+        // next event: earliest comm completion or device kernel completion
+        let mut t_next = f64::INFINITY;
+        let mut which: Option<usize> = None; // Some(device) or None => comm
+        for (d, dev) in devices.iter().enumerate() {
+            let t = dev.next_completion();
+            if t < t_next {
+                t_next = t;
+                which = Some(d);
+            }
+        }
+        let mut comm_idx: Option<usize> = None;
+        for (i, (t, _)) in comms.iter().enumerate() {
+            if *t < t_next {
+                t_next = *t;
+                which = None;
+                comm_idx = Some(i);
+            }
+        }
+        if !t_next.is_finite() {
+            bail!("simulation deadlock: {done}/{n} tasks done, nothing runnable (cyclic deps?)");
+        }
+        now = t_next;
+
+        let mut completed_tasks: Vec<usize> = Vec::new();
+        match which {
+            None => {
+                let (_, task_id) = comms.swap_remove(comm_idx.unwrap());
+                completed_tasks.push(task_id);
+            }
+            Some(d) => {
+                let dev = &mut devices[d];
+                dev.advance(now);
+                // the event may be a launch-phase end (sharing change only)
+                // or one or more kernel completions
+                let mut i = 0;
+                while i < dev.running.len() {
+                    if dev.running[i].done() {
+                        let k = dev.running.swap_remove(i);
+                        dev.slots[k.slot] = false;
+                        if let Some(ti) = k.trace_idx {
+                            trace[ti].t_end = now;
+                        }
+                        completed_tasks.push(k.task);
+                    } else {
+                        i += 1;
+                    }
+                }
+                if dev.running.is_empty() {
+                    dev.busy_s += now - dev.busy_since;
+                }
+            }
+        }
+
+        for task_id in completed_tasks {
+            done += 1;
+            for &dep in &dependents[task_id] {
+                indeg[dep] -= 1;
+                if indeg[dep] == 0 {
+                    dispatch(
+                        dep, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
+                        &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                    );
+                }
+            }
+        }
+        for d in 0..devices.len() {
+            fill_slots(d, now, graph, cluster, &mut devices, &mut trace, &mut n_kernels, record_trace);
+        }
+    }
+
+    // close busy intervals (all devices idle at the end by construction)
+    let device_busy_s = devices.iter().map(|d| d.busy_s).collect();
+    Ok(SimReport {
+        makespan_s: now,
+        device_busy_s,
+        comm_total_s,
+        n_kernels,
+        n_comms,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Partition;
+    use crate::mgrit::hierarchy::Hierarchy;
+    use crate::mgrit::taskgraph;
+    use crate::model::NetSpec;
+    use crate::perfmodel::{ClusterModel, DeviceModel, NetworkModel};
+
+    fn cluster(n: usize) -> ClusterModel {
+        ClusterModel::tx_gaia(n)
+    }
+
+    #[test]
+    fn serial_chain_time_is_sum_of_kernels() {
+        let spec = NetSpec::fig6_depth(16);
+        let g = taskgraph::serial_forward(&spec, 1, 1);
+        let c = cluster(1);
+        let rep = simulate(&g, &c, false).unwrap();
+        // single chain, one device: makespan = Σ kernel times
+        let expect: f64 = g
+            .tasks
+            .iter()
+            .map(|t| match &t.kind {
+                taskgraph::TaskKind::Kernel { class, flops, .. } => {
+                    c.device.kernel_time(*class, *flops)
+                }
+                _ => 0.0,
+            })
+            .sum();
+        assert!((rep.makespan_s - expect).abs() / expect < 1e-9);
+        assert_eq!(rep.n_kernels, 16);
+        assert_eq!(rep.n_comms, 0);
+    }
+
+    #[test]
+    fn pm_adds_comm_time() {
+        let spec = NetSpec::fig6_depth(64);
+        let g1 = taskgraph::serial_forward(&spec, 1, 1);
+        let g8 = taskgraph::serial_forward(&spec, 8, 1);
+        let r1 = simulate(&g1, &cluster(1), false).unwrap();
+        let r8 = simulate(&g8, &cluster(8), false).unwrap();
+        // PM with 8 devices is *slower* than serial for inference: same
+        // serial chain plus 7 transfers (the paper's PM pathology)
+        assert!(r8.makespan_s > r1.makespan_s);
+        assert_eq!(r8.n_comms, 7);
+    }
+
+    #[test]
+    fn mg_scales_with_devices() {
+        // at the paper's depth (fig6: N = 4,093) MG keeps speeding up well
+        // past 4 devices; small depths saturate earlier (launch-bound layers)
+        let spec = NetSpec::fig6();
+        let n = spec.n_res();
+        let hier = Hierarchy::two_level(n, spec.h(), 4).unwrap();
+        let n_blocks = hier.fine().blocks(4).len();
+        let mut prev = f64::INFINITY;
+        for n_dev in [1usize, 4, 16] {
+            let part = Partition::contiguous(n_blocks, n_dev).unwrap();
+            let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 2);
+            let rep = simulate(&g, &cluster(n_dev), false).unwrap();
+            assert!(
+                rep.makespan_s < prev,
+                "MG should speed up with devices: {n_dev} gpus {} s vs {prev} s",
+                rep.makespan_s
+            );
+            prev = rep.makespan_s;
+        }
+    }
+
+    #[test]
+    fn concurrency_cap_respected_and_reached() {
+        // one device, many independent kernels → peak concurrency == cap
+        let spec = NetSpec::fig6_depth(64);
+        let hier = Hierarchy::two_level(64, spec.h(), 4).unwrap();
+        let part = Partition::contiguous(hier.fine().blocks(4).len(), 1).unwrap();
+        let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 1);
+        let c = cluster(1);
+        let rep = simulate(&g, &c, true).unwrap();
+        let peak = rep.peak_concurrency(0);
+        assert_eq!(peak, c.device.max_concurrency, "peak {peak}");
+    }
+
+    #[test]
+    fn compute_shares_but_launches_overlap() {
+        // two equal kernels on one device, independent: launches overlap
+        // (CUDA-stream latency hiding), compute is processor-shared, so the
+        // makespan is launch + 2×compute — strictly between 1× and 2× solo
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind, KernelClass};
+        let mk = |id| Task {
+            id,
+            device: 0,
+            kind: TaskKind::Kernel { label: "k", class: KernelClass::Gemm, flops: 1e9 },
+            deps: vec![],
+        };
+        let g = TaskGraph { tasks: vec![mk(0), mk(1)] };
+        let c = cluster(1);
+        let (launch, compute) = c.device.kernel_phases(KernelClass::Gemm, 1e9);
+        let rep = simulate(&g, &c, false).unwrap();
+        let want = launch + 2.0 * compute;
+        assert!(
+            (rep.makespan_s - want).abs() / want < 1e-6,
+            "{} vs {}",
+            rep.makespan_s,
+            want
+        );
+    }
+
+    #[test]
+    fn launch_bound_gemms_gain_from_concurrency() {
+        // five tiny GEMMs: launches overlap (stream latency hiding), so
+        // five concurrent kernels cost barely more than one solo
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind, KernelClass};
+        let mk = |id| Task {
+            id,
+            device: 0,
+            kind: TaskKind::Kernel { label: "k", class: KernelClass::Gemm, flops: 1e3 },
+            deps: vec![],
+        };
+        let g = TaskGraph { tasks: (0..5).map(mk).collect() };
+        let c = cluster(1);
+        let solo = c.device.kernel_time(KernelClass::Gemm, 1e3);
+        let rep = simulate(&g, &c, false).unwrap();
+        assert!(rep.makespan_s < 1.5 * solo, "{} vs solo {}", rep.makespan_s, solo);
+    }
+
+    #[test]
+    fn conv_kernels_serialize() {
+        // the paper's register-pressure observation: concurrent convolution
+        // kernels do NOT speed up — five convs take 5× one conv
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind, KernelClass};
+        let mk = |id| Task {
+            id,
+            device: 0,
+            kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e3 },
+            deps: vec![],
+        };
+        let g = TaskGraph { tasks: (0..5).map(mk).collect() };
+        let c = cluster(1);
+        let solo = c.device.kernel_time(KernelClass::Conv, 1e3);
+        let rep = simulate(&g, &c, false).unwrap();
+        assert!(
+            (rep.makespan_s - 5.0 * solo).abs() / solo < 1e-6,
+            "{} vs {}",
+            rep.makespan_s,
+            5.0 * solo
+        );
+    }
+
+    #[test]
+    fn nic_serializes_messages() {
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind};
+        // two messages from device 0 → 1, no deps: must serialize on the NICs
+        let mk = |id| Task {
+            id,
+            device: 1,
+            kind: TaskKind::Comm { src: 0, dst: 1, bytes: 3.125e6 },
+            deps: vec![],
+        };
+        let g = TaskGraph { tasks: vec![mk(0), mk(1)] };
+        let c = ClusterModel {
+            n_devices: 2,
+            device: DeviceModel::v100(),
+            net: NetworkModel::ethernet_25g(),
+        };
+        let one = c.net.message_time(3.125e6);
+        let rep = simulate(&g, &c, false).unwrap();
+        assert!((rep.makespan_s - 2.0 * one).abs() / one < 1e-6);
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind, KernelClass};
+        // a task depending on itself can never run
+        let g = TaskGraph {
+            tasks: vec![Task {
+                id: 0,
+                device: 0,
+                kind: TaskKind::Kernel { label: "k", class: KernelClass::Gemm, flops: 1.0 },
+                deps: vec![0],
+            }],
+        };
+        assert!(simulate(&g, &cluster(1), false).is_err());
+    }
+
+    #[test]
+    fn busy_fraction_bounded() {
+        let spec = NetSpec::fig6_depth(128);
+        let hier = Hierarchy::two_level(128, spec.h(), 4).unwrap();
+        let part = Partition::contiguous(hier.fine().blocks(4).len(), 4).unwrap();
+        let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 2);
+        let rep = simulate(&g, &cluster(4), false).unwrap();
+        let f = rep.compute_fraction();
+        assert!(f > 0.0 && f <= 1.0, "compute fraction {f}");
+        assert!((rep.stall_fraction() + f - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = taskgraph::TaskGraph::default();
+        let rep = simulate(&g, &cluster(1), false).unwrap();
+        assert_eq!(rep.makespan_s, 0.0);
+    }
+}

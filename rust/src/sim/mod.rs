@@ -1,0 +1,19 @@
+//! Discrete-event multi-GPU cluster simulator — the substitute substrate for
+//! the paper's TX-GAIA testbed. It executes the *real* schedule DAGs emitted
+//! by `mgrit::taskgraph` (the same phase structure the live coordinator
+//! runs) against the `perfmodel` device/network costs:
+//!
+//! - each device runs up to `max_concurrency` kernels at once (CUDA-stream
+//!   concurrency, Fig 5) under processor sharing — co-resident kernels split
+//!   the device's throughput, which is exactly the register-pressure
+//!   serialization the paper observes for convolutions;
+//! - each transfer occupies the source and destination NICs for
+//!   latency + bytes/bandwidth (host-staged MPI over 25 GbE).
+//!
+//! Outputs: makespan, per-device busy time, total comm time, and a kernel
+//! timeline trace (the nvprof analogue used for Fig 5).
+
+pub mod engine;
+pub mod timeline;
+
+pub use engine::{simulate, SimReport, SimTraceEvent};

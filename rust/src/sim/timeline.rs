@@ -1,0 +1,117 @@
+//! Render a simulated (or live) kernel trace as an ASCII timeline — the
+//! repo's answer to the paper's nvprof screenshot (Fig 5). Also exports the
+//! trace as CSV for plotting.
+
+use std::fmt::Write as _;
+
+use super::engine::SimTraceEvent;
+
+/// ASCII timeline of one device's kernel slots over `[t0, t1]`, one row per
+/// stream slot, `width` characters wide. `#` marks kernel occupancy, `.`
+/// idle; a final row marks comm activity touching the device.
+pub fn ascii_timeline(
+    trace: &[SimTraceEvent],
+    device: usize,
+    t0: f64,
+    t1: f64,
+    width: usize,
+) -> String {
+    assert!(t1 > t0 && width > 0);
+    let n_slots = trace
+        .iter()
+        .filter(|e| e.device == device && !e.is_comm)
+        .map(|e| e.slot + 1)
+        .max()
+        .unwrap_or(1);
+    let mut rows = vec![vec![b'.'; width]; n_slots + 1];
+    let col = |t: f64| -> usize {
+        (((t - t0) / (t1 - t0) * width as f64).floor() as isize).clamp(0, width as isize - 1)
+            as usize
+    };
+    for e in trace.iter().filter(|e| e.device == device) {
+        if e.t_end < t0 || e.t_start > t1 || e.t_end.is_nan() {
+            continue;
+        }
+        let (a, b) = (col(e.t_start.max(t0)), col(e.t_end.min(t1)));
+        let row = if e.is_comm { n_slots } else { e.slot };
+        let ch = if e.is_comm { b'~' } else { b'#' };
+        for c in &mut rows[row][a..=b] {
+            *c = ch;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "device {device}  t = [{:.3} ms, {:.3} ms]",
+        t0 * 1e3,
+        t1 * 1e3
+    );
+    for (i, row) in rows.iter().enumerate() {
+        let label = if i < n_slots { format!("stream {i}") } else { "comm    ".into() };
+        let _ = writeln!(out, "  {label} |{}|", String::from_utf8_lossy(row));
+    }
+    out
+}
+
+/// CSV export: device,slot,label,is_comm,t_start,t_end.
+pub fn trace_csv(trace: &[SimTraceEvent]) -> String {
+    let mut out = String::from("device,slot,label,is_comm,t_start_s,t_end_s\n");
+    for e in trace {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{:.9},{:.9}",
+            e.device, e.slot, e.label, e.is_comm as u8, e.t_start, e.t_end
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(device: usize, slot: usize, t0: f64, t1: f64, is_comm: bool) -> SimTraceEvent {
+        SimTraceEvent {
+            device,
+            slot,
+            label: if is_comm { "comm" } else { "k" },
+            is_comm,
+            t_start: t0,
+            t_end: t1,
+        }
+    }
+
+    #[test]
+    fn ascii_shows_occupancy() {
+        let trace = vec![ev(0, 0, 0.0, 0.5, false), ev(0, 1, 0.25, 0.75, false)];
+        let s = ascii_timeline(&trace, 0, 0.0, 1.0, 20);
+        assert!(s.contains("stream 0 |##########"));
+        assert!(s.contains("stream 1"));
+        // slot 1 row: starts idle then kernels
+        let line1 = s.lines().find(|l| l.contains("stream 1")).unwrap();
+        assert!(line1.contains(".####"));
+    }
+
+    #[test]
+    fn comm_row_uses_tilde() {
+        let trace = vec![ev(0, 0, 0.0, 0.2, false), ev(0, 0, 0.4, 0.6, true)];
+        let s = ascii_timeline(&trace, 0, 0.0, 1.0, 10);
+        assert!(s.contains('~'));
+    }
+
+    #[test]
+    fn other_devices_filtered() {
+        let trace = vec![ev(1, 0, 0.0, 1.0, false)];
+        let s = ascii_timeline(&trace, 0, 0.0, 1.0, 10);
+        assert!(!s.contains('#'));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let trace = vec![ev(0, 2, 0.1, 0.2, false)];
+        let csv = trace_csv(&trace);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "device,slot,label,is_comm,t_start_s,t_end_s");
+        assert!(lines.next().unwrap().starts_with("0,2,k,0,"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Pure-rust `BlockSolver`: applies layer propagators with the `tensor::ops`
+//! kernels. This is the CPU-numerics reference path — the PJRT path is
+//! required to agree with it to float tolerance (tests/pjrt_roundtrip.rs).
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use super::BlockSolver;
+use crate::model::spec::{LayerKind, NetSpec};
+use crate::model::NetParams;
+use crate::tensor::{ops, vjp, Tensor};
+use crate::Result;
+
+/// Host solver: owns (a shared handle to) the spec and parameters.
+#[derive(Clone)]
+pub struct HostSolver {
+    spec: Arc<NetSpec>,
+    params: Arc<NetParams>,
+}
+
+impl HostSolver {
+    pub fn new(spec: Arc<NetSpec>, params: Arc<NetParams>) -> Result<HostSolver> {
+        if params.trunk.len() != spec.n_res() {
+            bail!(
+                "params have {} trunk layers, spec {:?} has {}",
+                params.trunk.len(),
+                spec.name,
+                spec.n_res()
+            );
+        }
+        Ok(HostSolver { spec, params })
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn params(&self) -> &NetParams {
+        &self.params
+    }
+
+    fn layer(&self, i: usize) -> Result<(&LayerKind, &Tensor, &Tensor)> {
+        if i >= self.spec.n_res() {
+            bail!("layer index {i} out of range (n_res {})", self.spec.n_res());
+        }
+        let (w, b) = &self.params.trunk[i];
+        Ok((&self.spec.trunk[i], w, b))
+    }
+
+    /// Opening layer: y [B,1,H,W] → u0 (not part of the MGRIT system).
+    pub fn opening(&self, y: &Tensor) -> Result<Tensor> {
+        let o = &self.spec.opening;
+        let mut u = ops::conv2d(y, &self.params.w_open, o.pad)?;
+        ops::add_bias(&mut u, &self.params.b_open)?;
+        ops::relu(&mut u);
+        Ok(u)
+    }
+
+    /// Classifier head: (logits, loss).
+    pub fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
+        ops::head_fwd(u, &self.params.w_fc, &self.params.b_fc, labels)
+    }
+
+    /// Head gradient: (du, dwfc, dbfc).
+    pub fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        vjp::head_vjp(u, &self.params.w_fc, &self.params.b_fc, labels)
+    }
+}
+
+impl BlockSolver for HostSolver {
+    fn step(&self, fine_idx: usize, h: f32, u: &Tensor) -> Result<Tensor> {
+        let (kind, w, b) = self.layer(fine_idx)?;
+        match kind {
+            LayerKind::Conv { kernel, .. } => ops::residual_step(u, w, b, h, kernel / 2),
+            LayerKind::Fc { .. } => ops::residual_fc_step(u, w, b, h),
+        }
+    }
+
+    fn adjoint_step(&self, fine_idx: usize, h: f32, u: &Tensor, lam: &Tensor) -> Result<Tensor> {
+        let (kind, w, b) = self.layer(fine_idx)?;
+        match kind {
+            LayerKind::Conv { kernel, .. } => vjp::adjoint_step(u, w, b, h, kernel / 2, lam),
+            LayerKind::Fc { .. } => Ok(vjp::residual_fc_step_vjp(u, w, b, h, lam)?.0),
+        }
+    }
+
+    fn param_grad(
+        &self,
+        fine_idx: usize,
+        h: f32,
+        u: &Tensor,
+        lam: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        let (kind, w, b) = self.layer(fine_idx)?;
+        match kind {
+            LayerKind::Conv { kernel, .. } => {
+                let (_, dw, db) = vjp::residual_step_vjp(u, w, b, h, kernel / 2, lam)?;
+                Ok((dw, db))
+            }
+            LayerKind::Fc { .. } => {
+                let (_, dw, db) = vjp::residual_fc_step_vjp(u, w, b, h, lam)?;
+                Ok((dw, db))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn micro_solver() -> HostSolver {
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, 3).unwrap());
+        HostSolver::new(spec, params).unwrap()
+    }
+
+    #[test]
+    fn step_matches_direct_ops() {
+        let s = micro_solver();
+        let mut rng = Rng::new(1);
+        let u = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+        let got = s.step(1, 0.25, &u).unwrap();
+        let (w, b) = &s.params().trunk[1];
+        let want = ops::residual_step(&u, w, b, 0.25, 1).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn block_fprop_default_matches_repeated_step() {
+        let s = micro_solver();
+        let mut rng = Rng::new(2);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 1.0, &mut rng);
+        let states = s.block_fprop(0, 1, 3, 0.25, &u0).unwrap();
+        let mut u = u0;
+        for (j, st) in states.iter().enumerate() {
+            u = s.step(j, 0.25, &u).unwrap();
+            assert_eq!(st, &u);
+        }
+    }
+
+    #[test]
+    fn block_fprop_with_stride_skips_layers() {
+        let s = micro_solver();
+        let mut rng = Rng::new(3);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 1.0, &mut rng);
+        let states = s.block_fprop(0, 2, 2, 0.5, &u0).unwrap();
+        let u1 = s.step(0, 0.5, &u0).unwrap();
+        let u2 = s.step(2, 0.5, &u1).unwrap();
+        assert_eq!(states, vec![u1, u2]);
+    }
+
+    #[test]
+    fn out_of_range_layer_errors() {
+        let s = micro_solver();
+        let u = Tensor::zeros(&[1, 2, 6, 6]);
+        assert!(s.step(99, 0.1, &u).is_err());
+    }
+
+    #[test]
+    fn opening_and_head_shapes() {
+        let s = micro_solver();
+        let mut rng = Rng::new(4);
+        let y = Tensor::randn(&[2, 1, 6, 6], 1.0, &mut rng);
+        let u0 = s.opening(&y).unwrap();
+        assert_eq!(u0.dims(), &[2, 2, 6, 6]);
+        let (logits, loss) = s.head(&u0, &[0, 1]).unwrap();
+        assert_eq!(logits.dims(), &[2, 10]);
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn param_mismatch_rejected() {
+        let spec = Arc::new(NetSpec::micro());
+        let mnist_params = Arc::new(NetParams::init(&NetSpec::mnist(), 1).unwrap());
+        assert!(HostSolver::new(spec, mnist_params).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! `BlockSolver` — the numerics boundary of the MGRIT engine.
+//!
+//! The engine (mgrit/) is pure coordination algebra: it never computes a
+//! convolution itself, it asks a solver to apply the layer propagator
+//! Φ(u) = u + h·F(u; θ_i) (and its adjoint). Three implementations:
+//!
+//! - [`host::HostSolver`] — pure-rust tensor ops; the CPU-numerics path and
+//!   the oracle the artifact path is tested against.
+//! - [`pjrt::PjrtSolver`] — executes the AOT JAX/Pallas artifacts through the
+//!   PJRT C API; the production path (Python never runs at request time).
+//! - cost-only evaluation for the 2B-parameter scaling studies lives in the
+//!   simulator (`sim::run`), which consumes task graphs instead of tensors —
+//!   no solver needed there.
+
+pub mod host;
+pub mod pjrt;
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Applies residual-layer propagators by fine-level layer index. `h` is
+/// passed per call because coarse MGRIT levels rescale it (H = c·h).
+///
+/// Deliberately NOT `Send`/`Sync`: the PJRT client types are single-threaded
+/// (`Rc` + raw pointers). The parallel coordinator gives each worker thread
+/// its *own* solver instance via a [`SolverFactory`] — exactly how the
+/// paper's MPI implementation gives each rank its own CuDNN context.
+pub trait BlockSolver {
+    /// Φ_i(u) = u + h·F(u; θ_i).
+    fn step(&self, fine_idx: usize, h: f32, u: &Tensor) -> Result<Tensor>;
+
+    /// Propagate `count` consecutive layers starting at `start` with stride
+    /// `stride` (coarse levels use stride = cˡ), returning every intermediate
+    /// state (length `count`). Implementations may batch this (the PJRT
+    /// solver executes a whole block artifact in one call).
+    fn block_fprop(
+        &self,
+        start: usize,
+        stride: usize,
+        count: usize,
+        h: f32,
+        u0: &Tensor,
+    ) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(count);
+        let mut u = u0.clone();
+        for j in 0..count {
+            u = self.step(start + j * stride, h, &u)?;
+            out.push(u.clone());
+        }
+        Ok(out)
+    }
+
+    /// Adjoint propagator: λ + h·(∂F/∂u(u; θ_i))ᵀ λ, where `u` is the
+    /// forward state at the *input* of layer i.
+    fn adjoint_step(&self, fine_idx: usize, h: f32, u: &Tensor, lam: &Tensor) -> Result<Tensor>;
+
+    /// Layer-local parameter gradient: ∂⟨λ, Φ_i(u)⟩/∂θ_i as (dW, db).
+    fn param_grad(
+        &self,
+        fine_idx: usize,
+        h: f32,
+        u: &Tensor,
+        lam: &Tensor,
+    ) -> Result<(Tensor, Tensor)>;
+}
+
+/// Builds one solver per worker thread (PJRT contexts are not `Send`, so
+/// each worker constructs its own inside the thread — the moral equivalent
+/// of the paper's per-MPI-rank CuDNN handle).
+pub trait SolverFactory: Send + Clone + 'static {
+    type Solver: BlockSolver;
+    fn build(&self, worker: usize) -> Result<Self::Solver>;
+}
+
+/// Factory from a plain closure.
+impl<S, F> SolverFactory for F
+where
+    S: BlockSolver,
+    F: Fn(usize) -> Result<S> + Send + Clone + 'static,
+{
+    type Solver = S;
+    fn build(&self, worker: usize) -> Result<S> {
+        self(worker)
+    }
+}

@@ -1,0 +1,296 @@
+//! `BlockSolver` over the AOT JAX/Pallas artifacts, executed through PJRT.
+//!
+//! This is the production numerics path: every Φ application, adjoint step
+//! and parameter gradient is an HLO executable compiled once from the
+//! Pallas-kernel lowering (`python/compile/`), fed with parameter literals
+//! packed on the rust side. Numerical agreement with [`super::host`] is
+//! asserted by `tests/pjrt_roundtrip.rs`.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail};
+
+use super::BlockSolver;
+use crate::model::spec::{LayerKind, NetSpec};
+use crate::model::NetParams;
+use crate::runtime::client::{
+    labels_to_literal, literal_to_scalar, literal_to_tensor, scalar_literal, tensor_to_literal,
+};
+use crate::runtime::{ArtifactStore, EntryKey};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Executes layer propagators via the AOT artifacts of one preset at one
+/// batch size.
+pub struct PjrtSolver {
+    store: Rc<ArtifactStore>,
+    spec: Arc<NetSpec>,
+    params: Arc<NetParams>,
+    batch: usize,
+    /// Cache of stacked block weights keyed by (start, stride): the block
+    /// artifact takes θ for its c layers as one [c, C, C, k, k] tensor.
+    packed: Mutex<HashMap<(usize, usize), (Tensor, Tensor)>>,
+}
+
+impl PjrtSolver {
+    pub fn new(
+        store: Rc<ArtifactStore>,
+        spec: Arc<NetSpec>,
+        params: Arc<NetParams>,
+        batch: usize,
+    ) -> Result<PjrtSolver> {
+        let info = store.manifest.check_spec(&spec)?;
+        if !info.batches.contains(&batch) {
+            bail!(
+                "preset {:?} exported for batches {:?}, not {batch}",
+                spec.name,
+                info.batches
+            );
+        }
+        if spec.trunk.iter().any(|l| matches!(l, LayerKind::Fc { .. })) {
+            bail!("PJRT solver supports conv trunks only (preset {:?})", spec.name);
+        }
+        if params.trunk.len() != spec.n_res() {
+            bail!("params/spec trunk mismatch");
+        }
+        Ok(PjrtSolver { store, spec, params, batch, packed: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn params(&self) -> &NetParams {
+        &self.params
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn key(&self, entry: &str) -> EntryKey {
+        EntryKey::new(&self.spec.name, entry, self.batch)
+    }
+
+    fn check_batch(&self, u: &Tensor) -> Result<()> {
+        if u.dims().first() != Some(&self.batch) {
+            bail!("tensor batch {:?} != solver batch {}", u.dims().first(), self.batch);
+        }
+        Ok(())
+    }
+
+    /// Stack θ for a block's layers into the artifact's [c, …] layout.
+    fn packed_block(&self, start: usize, stride: usize, count: usize) -> Result<(Tensor, Tensor)> {
+        if let Some(p) = self.packed.lock().unwrap().get(&(start, stride)) {
+            return Ok(p.clone());
+        }
+        let c = self.spec.channels();
+        let k = match self.spec.trunk[start] {
+            LayerKind::Conv { kernel, .. } => kernel,
+            LayerKind::Fc { .. } => bail!("FC layer in conv trunk"),
+        };
+        let mut wdata = Vec::with_capacity(count * c * c * k * k);
+        let mut bdata = Vec::with_capacity(count * c);
+        for j in 0..count {
+            let idx = start + j * stride;
+            let (w, b) = self
+                .params
+                .trunk
+                .get(idx)
+                .ok_or_else(|| anyhow!("layer {idx} out of range"))?;
+            wdata.extend_from_slice(w.data());
+            bdata.extend_from_slice(b.data());
+        }
+        let ws = Tensor::new(vec![count, c, c, k, k], wdata)?;
+        let bs = Tensor::new(vec![count, c], bdata)?;
+        self.packed
+            .lock()
+            .unwrap()
+            .insert((start, stride), (ws.clone(), bs.clone()));
+        Ok((ws, bs))
+    }
+
+    // ------------------------------------------------------------------
+    // non-trunk entry points (opening, head, serial baseline)
+    // ------------------------------------------------------------------
+
+    /// Opening layer via the `opening_fwd` artifact.
+    pub fn opening(&self, y: &Tensor) -> Result<Tensor> {
+        self.check_batch(y)?;
+        let out = self.store.run(
+            &self.key("opening_fwd"),
+            &[
+                tensor_to_literal(y)?,
+                tensor_to_literal(&self.params.w_open)?,
+                tensor_to_literal(&self.params.b_open)?,
+            ],
+        )?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// Classifier head via the `head_fwd` artifact: (logits, loss).
+    pub fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
+        self.check_batch(u)?;
+        let out = self.store.run(
+            &self.key("head_fwd"),
+            &[
+                tensor_to_literal(u)?,
+                tensor_to_literal(&self.params.w_fc)?,
+                tensor_to_literal(&self.params.b_fc)?,
+                labels_to_literal(labels),
+            ],
+        )?;
+        Ok((literal_to_tensor(&out[0])?, literal_to_scalar(&out[1])?))
+    }
+
+    /// Head gradient via the `head_vjp` artifact: (du, dwfc, dbfc).
+    pub fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        self.check_batch(u)?;
+        let out = self.store.run(
+            &self.key("head_vjp"),
+            &[
+                tensor_to_literal(u)?,
+                tensor_to_literal(&self.params.w_fc)?,
+                tensor_to_literal(&self.params.b_fc)?,
+                labels_to_literal(labels),
+            ],
+        )?;
+        Ok((
+            literal_to_tensor(&out[0])?,
+            literal_to_tensor(&out[1])?,
+            literal_to_tensor(&out[2])?,
+        ))
+    }
+
+    /// Whole-network serial forward via the `serial_fwd` artifact
+    /// (the sequential baseline): (logits, loss, u_final).
+    pub fn serial_fwd(&self, y: &Tensor, labels: &[i32]) -> Result<(Tensor, f64, Tensor)> {
+        self.check_batch(y)?;
+        let n = self.spec.n_res();
+        let (ws, bs) = self.packed_block(0, 1, n)?;
+        let out = self.store.run(
+            &self.key("serial_fwd"),
+            &[
+                tensor_to_literal(y)?,
+                tensor_to_literal(&self.params.w_open)?,
+                tensor_to_literal(&self.params.b_open)?,
+                tensor_to_literal(&ws)?,
+                tensor_to_literal(&bs)?,
+                tensor_to_literal(&self.params.w_fc)?,
+                tensor_to_literal(&self.params.b_fc)?,
+                labels_to_literal(labels),
+            ],
+        )?;
+        Ok((
+            literal_to_tensor(&out[0])?,
+            literal_to_scalar(&out[1])?,
+            literal_to_tensor(&out[2])?,
+        ))
+    }
+}
+
+impl BlockSolver for PjrtSolver {
+    fn step(&self, fine_idx: usize, h: f32, u: &Tensor) -> Result<Tensor> {
+        self.check_batch(u)?;
+        let (w, b) = self
+            .params
+            .trunk
+            .get(fine_idx)
+            .ok_or_else(|| anyhow!("layer {fine_idx} out of range"))?;
+        let out = self.store.run(
+            &self.key("step_fwd"),
+            &[
+                tensor_to_literal(u)?,
+                tensor_to_literal(w)?,
+                tensor_to_literal(b)?,
+                scalar_literal(h),
+            ],
+        )?;
+        literal_to_tensor(&out[0])
+    }
+
+    fn block_fprop(
+        &self,
+        start: usize,
+        stride: usize,
+        count: usize,
+        h: f32,
+        u0: &Tensor,
+    ) -> Result<Vec<Tensor>> {
+        self.check_batch(u0)?;
+        // the block artifact is specialized for count == c (the coarsening
+        // factor); other counts fall back to repeated single steps
+        if count != self.spec.coarsen {
+            let mut out = Vec::with_capacity(count);
+            let mut u = u0.clone();
+            for j in 0..count {
+                u = self.step(start + j * stride, h, &u)?;
+                out.push(u.clone());
+            }
+            return Ok(out);
+        }
+        let (ws, bs) = self.packed_block(start, stride, count)?;
+        let out = self.store.run(
+            &self.key("block_fwd"),
+            &[
+                tensor_to_literal(u0)?,
+                tensor_to_literal(&ws)?,
+                tensor_to_literal(&bs)?,
+                scalar_literal(h),
+            ],
+        )?;
+        // result is [c, B, C, H, W] — split along the leading axis
+        let stacked = literal_to_tensor(&out[0])?;
+        let inner: Vec<usize> = stacked.dims()[1..].to_vec();
+        let stride_elems: usize = inner.iter().product();
+        let mut states = Vec::with_capacity(count);
+        for j in 0..count {
+            let slice = &stacked.data()[j * stride_elems..(j + 1) * stride_elems];
+            states.push(Tensor::new(inner.clone(), slice.to_vec())?);
+        }
+        Ok(states)
+    }
+
+    fn adjoint_step(&self, fine_idx: usize, h: f32, u: &Tensor, lam: &Tensor) -> Result<Tensor> {
+        self.check_batch(u)?;
+        let (w, b) = &self.params.trunk[fine_idx];
+        let out = self.store.run(
+            &self.key("adjoint_step"),
+            &[
+                tensor_to_literal(u)?,
+                tensor_to_literal(w)?,
+                tensor_to_literal(b)?,
+                scalar_literal(h),
+                tensor_to_literal(lam)?,
+            ],
+        )?;
+        literal_to_tensor(&out[0])
+    }
+
+    fn param_grad(
+        &self,
+        fine_idx: usize,
+        h: f32,
+        u: &Tensor,
+        lam: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        self.check_batch(u)?;
+        let (w, b) = &self.params.trunk[fine_idx];
+        let out = self.store.run(
+            &self.key("step_param_grad"),
+            &[
+                tensor_to_literal(u)?,
+                tensor_to_literal(w)?,
+                tensor_to_literal(b)?,
+                scalar_literal(h),
+                tensor_to_literal(lam)?,
+            ],
+        )?;
+        Ok((literal_to_tensor(&out[0])?, literal_to_tensor(&out[1])?))
+    }
+}
+
+// PjrtSolver construction-validation tests are in tests/pjrt_roundtrip.rs
+// (they need a live PJRT client and the artifacts directory).

@@ -1,0 +1,186 @@
+//! Dense f32 tensors (NCHW) and the host-side compute ops the MGRIT engine
+//! needs when running numerics without PJRT (the `HostSolver` path, the test
+//! oracle for the artifact path, and all restriction/prolongation algebra).
+
+pub mod ops;
+pub mod vjp;
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor. Layouts by convention:
+/// activations `[B, C, H, W]`, conv weights `[Cout, Cin, k, k]`,
+/// FC weights `[In, Out]`, biases `[C]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("dims {:?} (={} elems) do not match data len {}", dims, n, data.len());
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![v; n] }
+    }
+
+    /// N(0, scale²) initialization from the crate PRNG.
+    pub fn randn(dims: &[usize], scale: f32, rng: &mut crate::util::prng::Rng) -> Tensor {
+        let mut t = Tensor::zeros(dims);
+        rng.fill_normal(&mut t.data, scale);
+        t
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with new dims (same element count).
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.dims, dims);
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Elementwise a += alpha * b (axpy), shape-checked.
+    pub fn axpy(&mut self, alpha: f32, b: &Tensor) -> Result<()> {
+        if self.dims != b.dims {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.dims, b.dims);
+        }
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += alpha * y;
+        }
+        Ok(())
+    }
+
+    /// Elementwise self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for x in self.data.iter_mut() {
+            *x *= alpha;
+        }
+    }
+
+    /// c = a - b.
+    pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        if a.dims != b.dims {
+            bail!("sub shape mismatch {:?} vs {:?}", a.dims, b.dims);
+        }
+        let data = a.data.iter().zip(&b.data).map(|(x, y)| x - y).collect();
+        Ok(Tensor { dims: a.dims.clone(), data })
+    }
+
+    /// c = a + b.
+    pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        if a.dims != b.dims {
+            bail!("add shape mismatch {:?} vs {:?}", a.dims, b.dims);
+        }
+        let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+        Ok(Tensor { dims: a.dims.clone(), data })
+    }
+
+    /// L2 norm (f64 accumulation).
+    pub fn l2_norm(&self) -> f64 {
+        crate::util::stats::l2_norm(&self.data)
+    }
+
+    /// Frobenius inner product ⟨a, b⟩.
+    pub fn dot(a: &Tensor, b: &Tensor) -> Result<f64> {
+        if a.dims != b.dims {
+            bail!("dot shape mismatch {:?} vs {:?}", a.dims, b.dims);
+        }
+        Ok(a.data.iter().zip(&b.data).map(|(x, y)| (*x as f64) * (*y as f64)).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_full() {
+        let z = Tensor::zeros(&[2, 2]);
+        assert_eq!(z.data(), &[0.0; 4]);
+        let f = Tensor::full(&[3], 2.5);
+        assert_eq!(f.data(), &[2.5, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::full(&[3], 1.0);
+        let b = Tensor::full(&[3], 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[2.0, 2.0, 2.0]);
+        a.scale(0.25);
+        assert_eq!(a.data(), &[0.5, 0.5, 0.5]);
+        let bad = Tensor::zeros(&[4]);
+        assert!(a.axpy(1.0, &bad).is_err());
+    }
+
+    #[test]
+    fn add_sub_dot_norm() {
+        let a = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.0, 1.0]).unwrap();
+        assert_eq!(Tensor::sub(&a, &b).unwrap().data(), &[2.0, 3.0]);
+        assert_eq!(Tensor::add(&a, &b).unwrap().data(), &[4.0, 5.0]);
+        assert_eq!(a.l2_norm(), 5.0);
+        assert_eq!(Tensor::dot(&a, &b).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.dims(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = Tensor::randn(&[16], 1.0, &mut r1);
+        let b = Tensor::randn(&[16], 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,443 @@
+//! Forward compute ops: conv2d, matmul, activations, the residual step, and
+//! the classifier head. These mirror the JAX/Pallas kernels bit-for-bit in
+//! semantics (same layouts, same padding convention) so the `HostSolver` and
+//! `PjrtSolver` are interchangeable — asserted by `tests/pjrt_roundtrip.rs`.
+//!
+//! The conv inner loop is the L3 hot path for real numerics; it is written
+//! as an im2col-free direct convolution with the `x`-contiguous inner loop
+//! so the compiler can vectorize it (see EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// 2-D convolution, NCHW × OIHW → NCHW, unit stride, symmetric zero padding.
+///
+/// The input is staged per (batch, channel) into a zero-padded row buffer so
+/// the inner loop is a full-width, bounds-free FMA strip the compiler
+/// vectorizes (see EXPERIMENTS.md §Perf for the before/after).
+pub fn conv2d(u: &Tensor, w: &Tensor, pad: usize) -> Result<Tensor> {
+    let (b, cin, h, ww) = dims4(u, "activations")?;
+    let (cout, cin_w, kh, kw) = dims4(w, "weights")?;
+    if cin != cin_w {
+        bail!("conv2d channel mismatch: input {cin}, weight {cin_w}");
+    }
+    let ho = h + 2 * pad + 1 - kh;
+    let wo = ww + 2 * pad + 1 - kw;
+    let mut out = Tensor::zeros(&[b, cout, ho, wo]);
+    let ud = u.data();
+    let wd = w.data();
+    let od = out.data_mut();
+
+    // padded staging buffer for one input plane
+    let hp = h + 2 * pad;
+    let wp = ww + 2 * pad;
+    let mut padded = vec![0.0f32; hp * wp];
+
+    for bi in 0..b {
+        for ci in 0..cin {
+            // stage u[bi, ci] with the zero border
+            let ubase = (bi * cin + ci) * h * ww;
+            if pad == 0 {
+                padded.copy_from_slice(&ud[ubase..ubase + h * ww]);
+            } else {
+                for y in 0..h {
+                    let src = &ud[ubase + y * ww..ubase + (y + 1) * ww];
+                    padded[(y + pad) * wp + pad..(y + pad) * wp + pad + ww]
+                        .copy_from_slice(src);
+                }
+            }
+            for co in 0..cout {
+                let obase = (bi * cout + co) * ho * wo;
+                let wbase = (co * cin + ci) * kh * kw;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let wv = wd[wbase + ky * kw + kx];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        for y in 0..ho {
+                            let prow = (y + ky) * wp + kx;
+                            let orow = obase + y * wo;
+                            let in_slice = &padded[prow..prow + wo];
+                            let out_slice = &mut od[orow..orow + wo];
+                            for (o, i) in out_slice.iter_mut().zip(in_slice) {
+                                *o += wv * i;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Add a per-channel bias in place: u[b,c,·,·] += bias[c].
+pub fn add_bias(u: &mut Tensor, bias: &Tensor) -> Result<()> {
+    let (b, c, h, w) = dims4(u, "activations")?;
+    if bias.dims() != [c] {
+        bail!("bias dims {:?} != [{c}]", bias.dims());
+    }
+    let bd = bias.data().to_vec();
+    let ud = u.data_mut();
+    for bi in 0..b {
+        for ci in 0..c {
+            let base = (bi * c + ci) * h * w;
+            let bv = bd[ci];
+            for v in &mut ud[base..base + h * w] {
+                *v += bv;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// ReLU in place.
+pub fn relu(u: &mut Tensor) {
+    for v in u.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// F(u; θ) = relu(conv(u, w) + b) — the paper's feature transformation.
+pub fn conv_bias_relu(u: &Tensor, w: &Tensor, b: &Tensor, pad: usize) -> Result<Tensor> {
+    let mut f = conv2d(u, w, pad)?;
+    add_bias(&mut f, b)?;
+    relu(&mut f);
+    Ok(f)
+}
+
+/// One residual layer step u + h·F(u; θ) (paper eq. 1).
+///
+/// The epilogue (bias, ReLU, skip-add, h-scaling) is fused into a single
+/// pass over the conv output — the host-side mirror of the Pallas kernel's
+/// fused epilogue (EXPERIMENTS.md §Perf).
+pub fn residual_step(u: &Tensor, w: &Tensor, b: &Tensor, h: f32, pad: usize) -> Result<Tensor> {
+    let conv = conv2d(u, w, pad)?;
+    if conv.dims() != u.dims() {
+        bail!(
+            "residual step requires shape-preserving conv: u {:?} vs F(u) {:?}",
+            u.dims(),
+            conv.dims()
+        );
+    }
+    let (bsz, c, hh, ww) = dims4(u, "activations")?;
+    if b.dims() != [c] {
+        bail!("bias dims {:?} != [{c}]", b.dims());
+    }
+    let mut out = conv;
+    let plane = hh * ww;
+    let bd = b.data();
+    let ud = u.data();
+    let od = out.data_mut();
+    for bi in 0..bsz {
+        for ci in 0..c {
+            let base = (bi * c + ci) * plane;
+            let bv = bd[ci];
+            for (o, &uv) in od[base..base + plane].iter_mut().zip(&ud[base..base + plane]) {
+                let f = (*o + bv).max(0.0);
+                *o = uv + h * f;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Residual FC layer step u + h·relu(flatten(u)·W + b), reshaped back — the
+/// fig7 preset's interleaved fully-connected trunk layers.
+pub fn residual_fc_step(u: &Tensor, w: &Tensor, b: &Tensor, h: f32) -> Result<Tensor> {
+    let bsz = u.dims()[0];
+    let feat = u.len() / bsz;
+    let flat = u.reshape(&[bsz, feat])?;
+    let mut f = matmul(&flat, w)?;
+    add_bias_rowwise(&mut f, b)?;
+    relu(&mut f);
+    let mut out = u.clone();
+    out.axpy(h, &f.reshape(u.dims())?)?;
+    Ok(out)
+}
+
+/// Row-major matmul: [M, K] × [K, N] → [M, N].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = dims2(a)?;
+    let (k2, n) = dims2(b)?;
+    if k != k2 {
+        bail!("matmul inner-dim mismatch: {k} vs {k2}");
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    // ikj loop order: inner loop streams contiguous rows of b and out
+    for i in 0..m {
+        for kk in 0..k {
+            let av = ad[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for (o, bb) in orow.iter_mut().zip(brow) {
+                *o += av * bb;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// out[m, n] += bias[n] for a [M, N] matrix.
+pub fn add_bias_rowwise(x: &mut Tensor, bias: &Tensor) -> Result<()> {
+    let (m, n) = dims2(x)?;
+    if bias.dims() != [n] {
+        bail!("row bias dims {:?} != [{n}]", bias.dims());
+    }
+    let bd = bias.data().to_vec();
+    let xd = x.data_mut();
+    for i in 0..m {
+        for (v, b) in xd[i * n..(i + 1) * n].iter_mut().zip(&bd) {
+            *v += b;
+        }
+    }
+    Ok(())
+}
+
+/// Classifier head forward: flatten → FC → (logits, mean softmax-xent loss).
+pub fn head_fwd(
+    u: &Tensor,
+    wfc: &Tensor,
+    bfc: &Tensor,
+    labels: &[i32],
+) -> Result<(Tensor, f64)> {
+    let bsz = u.dims()[0];
+    if labels.len() != bsz {
+        bail!("labels len {} != batch {bsz}", labels.len());
+    }
+    let feat = u.len() / bsz;
+    let flat = u.reshape(&[bsz, feat])?;
+    let mut logits = matmul(&flat, wfc)?;
+    add_bias_rowwise(&mut logits, bfc)?;
+    let loss = softmax_xent(&logits, labels)?;
+    Ok((logits, loss))
+}
+
+/// Mean softmax cross-entropy of [B, C] logits against integer labels.
+pub fn softmax_xent(logits: &Tensor, labels: &[i32]) -> Result<f64> {
+    let (b, c) = dims2(logits)?;
+    if labels.len() != b {
+        bail!("labels len {} != batch {b}", labels.len());
+    }
+    let ld = logits.data();
+    let mut total = 0.0f64;
+    for i in 0..b {
+        let row = &ld[i * c..(i + 1) * c];
+        let lab = labels[i] as usize;
+        if lab >= c {
+            bail!("label {lab} out of range (C={c})");
+        }
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let logz = mx
+            + row
+                .iter()
+                .map(|&v| ((v as f64) - mx).exp())
+                .sum::<f64>()
+                .ln();
+        total += logz - row[lab] as f64;
+    }
+    Ok(total / b as f64)
+}
+
+/// argmax per row of [B, C] logits — Top-1 predictions.
+pub fn argmax_rows(logits: &Tensor) -> Result<Vec<usize>> {
+    let (b, c) = dims2(logits)?;
+    let ld = logits.data();
+    Ok((0..b)
+        .map(|i| {
+            let row = &ld[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap()
+        })
+        .collect())
+}
+
+pub(crate) fn dims4(t: &Tensor, what: &str) -> Result<(usize, usize, usize, usize)> {
+    match t.dims() {
+        [a, b, c, d] => Ok((*a, *b, *c, *d)),
+        d => bail!("{what} must be rank 4, got {d:?}"),
+    }
+}
+
+pub(crate) fn dims2(t: &Tensor) -> Result<(usize, usize)> {
+    match t.dims() {
+        [a, b] => Ok((*a, *b)),
+        d => bail!("expected rank-2 tensor, got {d:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Naive O(everything) conv used only to validate the optimized kernel.
+    fn conv2d_naive(u: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+        let (b, cin, h, ww) = dims4(u, "u").unwrap();
+        let (cout, _, kh, kw) = dims4(w, "w").unwrap();
+        let ho = h + 2 * pad + 1 - kh;
+        let wo = ww + 2 * pad + 1 - kw;
+        let mut out = Tensor::zeros(&[b, cout, ho, wo]);
+        for bi in 0..b {
+            for co in 0..cout {
+                for y in 0..ho {
+                    for x in 0..wo {
+                        let mut acc = 0.0;
+                        for ci in 0..cin {
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let iy = y + ky;
+                                    let ix = x + kx;
+                                    if iy < pad || ix < pad || iy >= h + pad || ix >= ww + pad {
+                                        continue;
+                                    }
+                                    acc += u.data()[((bi * cin + ci) * h + iy - pad) * ww + ix - pad]
+                                        * w.data()[((co * cin + ci) * kh + ky) * kw + kx];
+                                }
+                            }
+                        }
+                        out.data_mut()[((bi * cout + co) * ho + y) * wo + x] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1 is the identity
+        let mut rng = Rng::new(1);
+        let u = Tensor::randn(&[2, 3, 5, 5], 1.0, &mut rng);
+        let mut w = Tensor::zeros(&[3, 3, 1, 1]);
+        for c in 0..3 {
+            w.data_mut()[c * 3 + c] = 1.0;
+        }
+        let out = conv2d(&u, &w, 0).unwrap();
+        assert_eq!(out.data(), u.data());
+    }
+
+    #[test]
+    fn conv_matches_naive_padded() {
+        let mut rng = Rng::new(2);
+        for (pad, k) in [(0usize, 1usize), (1, 3), (2, 5), (3, 7)] {
+            let u = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+            let w = Tensor::randn(&[4, 3, k, k], 0.3, &mut rng);
+            let fast = conv2d(&u, &w, pad).unwrap();
+            let slow = conv2d_naive(&u, &w, pad);
+            assert_eq!(fast.dims(), slow.dims());
+            let err = crate::util::stats::max_abs_diff(fast.data(), slow.data());
+            assert!(err < 1e-4, "pad={pad} k={k}: err {err}");
+        }
+    }
+
+    #[test]
+    fn conv_shrinking_shape() {
+        // 7x7 pad 1 on 28x28 → 24x24 (the paper's opening layer)
+        let u = Tensor::zeros(&[1, 1, 28, 28]);
+        let w = Tensor::zeros(&[4, 1, 7, 7]);
+        let out = conv2d(&u, &w, 1).unwrap();
+        assert_eq!(out.dims(), &[1, 4, 24, 24]);
+    }
+
+    #[test]
+    fn conv_channel_mismatch_errors() {
+        let u = Tensor::zeros(&[1, 3, 4, 4]);
+        let w = Tensor::zeros(&[2, 4, 3, 3]);
+        assert!(conv2d(&u, &w, 1).is_err());
+    }
+
+    #[test]
+    fn bias_and_relu() {
+        let mut u = Tensor::new(vec![1, 2, 1, 2], vec![-1.0, 1.0, -2.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![0.5, -0.5]).unwrap();
+        add_bias(&mut u, &b).unwrap();
+        assert_eq!(u.data(), &[-0.5, 1.5, -2.5, 1.5]);
+        relu(&mut u);
+        assert_eq!(u.data(), &[0.0, 1.5, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn residual_step_zero_weights_is_identity_plus_bias_relu() {
+        let mut rng = Rng::new(3);
+        let u = Tensor::randn(&[1, 2, 4, 4], 1.0, &mut rng);
+        let w = Tensor::zeros(&[2, 2, 3, 3]);
+        let b = Tensor::new(vec![2], vec![1.0, -1.0]).unwrap();
+        // F(u) = relu(0 + b): channel 0 adds h*1, channel 1 adds h*0
+        let out = residual_step(&u, &w, &b, 0.5, 1).unwrap();
+        for i in 0..16 {
+            assert!((out.data()[i] - (u.data()[i] + 0.5)).abs() < 1e-6);
+            assert!((out.data()[16 + i] - u.data()[16 + i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn residual_step_rejects_shrinking() {
+        let u = Tensor::zeros(&[1, 2, 8, 8]);
+        let w = Tensor::zeros(&[2, 2, 7, 7]);
+        let b = Tensor::zeros(&[2]);
+        assert!(residual_step(&u, &w, &b, 0.1, 1).is_err());
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+        assert!(matmul(&a, &Tensor::zeros(&[3, 2])).is_err());
+    }
+
+    #[test]
+    fn residual_fc_step_matches_manual() {
+        let u = Tensor::new(vec![1, 1, 1, 2], vec![1.0, -1.0]).unwrap();
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![0.0, 0.0]).unwrap();
+        // F = relu([1, -1]) = [1, 0]; u + 0.5 F = [1.5, -1]
+        let out = residual_fc_step(&u, &w, &b, 0.5).unwrap();
+        assert_eq!(out.data(), &[1.5, -1.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_is_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let loss = softmax_xent(&logits, &[0, 3, 5, 9]).unwrap();
+        assert!((loss - (10.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_xent_stable_large_logits() {
+        let logits = Tensor::new(vec![1, 3], vec![1e4, 0.0, -1e4]).unwrap();
+        let loss = softmax_xent(&logits, &[0]).unwrap();
+        assert!(loss.is_finite() && loss < 1e-3);
+    }
+
+    #[test]
+    fn softmax_xent_label_out_of_range() {
+        let logits = Tensor::zeros(&[1, 3]);
+        assert!(softmax_xent(&logits, &[3]).is_err());
+    }
+
+    #[test]
+    fn head_and_argmax() {
+        let u = Tensor::new(vec![2, 1, 1, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let wfc = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let bfc = Tensor::zeros(&[2]);
+        let (logits, loss) = head_fwd(&u, &wfc, &bfc, &[0, 1]).unwrap();
+        assert_eq!(argmax_rows(&logits).unwrap(), vec![0, 1]);
+        assert!(loss > 0.0 && loss < (2.0f64).ln());
+    }
+}

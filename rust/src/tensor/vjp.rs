@@ -1,0 +1,480 @@
+//! Backward (VJP) ops for the host path: conv data/weight gradients, the
+//! residual-step VJP that powers the adjoint MGRIT solve, and the classifier
+//! head gradient. Validated against finite differences in the tests and
+//! against the JAX artifacts in `tests/pjrt_roundtrip.rs`.
+
+use anyhow::{bail, Result};
+
+use super::ops::{self, dims2, dims4};
+use super::Tensor;
+
+/// ∂L/∂u for y = conv2d(u, w, pad): "full" correlation of grad_y with the
+/// kernel flipped in both spatial axes (transposed convolution).
+pub fn conv2d_bwd_data(grad_y: &Tensor, w: &Tensor, pad: usize, u_dims: &[usize]) -> Result<Tensor> {
+    let (b, cout, ho, wo) = dims4(grad_y, "grad_y")?;
+    let (cout_w, cin, kh, kw) = dims4(w, "weights")?;
+    if cout != cout_w {
+        bail!("bwd_data cout mismatch {cout} vs {cout_w}");
+    }
+    let [bu, cu, h, ww] = *u_dims else { bail!("u_dims must be rank 4") };
+    if bu != b || cu != cin {
+        bail!("bwd_data u_dims {u_dims:?} inconsistent with grad/wt");
+    }
+    let mut gu = Tensor::zeros(u_dims);
+    let gy = grad_y.data();
+    let wd = w.data();
+    let gud = gu.data_mut();
+    // scatter: gu[iy, ix] += gy[y, x] * w[ky, kx] with iy = y + ky - pad
+    for bi in 0..b {
+        for co in 0..cout {
+            let ybase = (bi * cout + co) * ho * wo;
+            for ci in 0..cin {
+                let ubase = (bi * cin + ci) * h * ww;
+                let wbase = (co * cin + ci) * kh * kw;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let wv = wd[wbase + ky * kw + kx];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        for y in 0..ho {
+                            let iy = y + ky;
+                            if iy < pad || iy >= h + pad {
+                                continue;
+                            }
+                            let iy = iy - pad;
+                            let x_lo = pad.saturating_sub(kx);
+                            let x_hi = (ww + pad - kx).min(wo);
+                            if x_lo >= x_hi {
+                                continue;
+                            }
+                            let yrow = ybase + y * wo;
+                            let urow = ubase + iy * ww + x_lo + kx - pad;
+                            let gu_slice = &mut gud[urow..urow + (x_hi - x_lo)];
+                            let gy_slice = &gy[yrow + x_lo..yrow + x_hi];
+                            for (g, q) in gu_slice.iter_mut().zip(gy_slice) {
+                                *g += wv * q;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(gu)
+}
+
+/// ∂L/∂w for y = conv2d(u, w, pad): correlation of the input with grad_y.
+pub fn conv2d_bwd_weight(u: &Tensor, grad_y: &Tensor, pad: usize, w_dims: &[usize]) -> Result<Tensor> {
+    let (b, cin, h, ww) = dims4(u, "u")?;
+    let (b2, cout, ho, wo) = dims4(grad_y, "grad_y")?;
+    if b != b2 {
+        bail!("bwd_weight batch mismatch {b} vs {b2}");
+    }
+    let [cout_w, cin_w, kh, kw] = *w_dims else { bail!("w_dims must be rank 4") };
+    if cout_w != cout || cin_w != cin {
+        bail!("bwd_weight w_dims {w_dims:?} inconsistent");
+    }
+    let mut gw = Tensor::zeros(w_dims);
+    let ud = u.data();
+    let gy = grad_y.data();
+    let gwd = gw.data_mut();
+    for bi in 0..b {
+        for co in 0..cout {
+            let ybase = (bi * cout + co) * ho * wo;
+            for ci in 0..cin {
+                let ubase = (bi * cin + ci) * h * ww;
+                let wbase = (co * cin + ci) * kh * kw;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let mut acc = 0.0f32;
+                        for y in 0..ho {
+                            let iy = y + ky;
+                            if iy < pad || iy >= h + pad {
+                                continue;
+                            }
+                            let iy = iy - pad;
+                            let x_lo = pad.saturating_sub(kx);
+                            let x_hi = (ww + pad - kx).min(wo);
+                            if x_lo >= x_hi {
+                                continue;
+                            }
+                            let yrow = ybase + y * wo;
+                            let urow = ubase + iy * ww + x_lo + kx - pad;
+                            let gy_slice = &gy[yrow + x_lo..yrow + x_hi];
+                            let u_slice = &ud[urow..urow + (x_hi - x_lo)];
+                            for (q, uu) in gy_slice.iter_zip_checked(u_slice) {
+                                acc += q * uu;
+                            }
+                        }
+                        gwd[wbase + ky * kw + kx] += acc;
+                    }
+                }
+            }
+        }
+    }
+    Ok(gw)
+}
+
+// small private ext-trait so the inner loop reads cleanly without index math
+trait ZipChecked<'a> {
+    fn iter_zip_checked(&'a self, other: &'a [f32]) -> std::iter::Zip<std::slice::Iter<'a, f32>, std::slice::Iter<'a, f32>>;
+}
+impl<'a> ZipChecked<'a> for [f32] {
+    #[inline]
+    fn iter_zip_checked(&'a self, other: &'a [f32]) -> std::iter::Zip<std::slice::Iter<'a, f32>, std::slice::Iter<'a, f32>> {
+        debug_assert_eq!(self.len(), other.len());
+        self.iter().zip(other.iter())
+    }
+}
+
+/// Per-channel bias gradient: sum of grad_y over batch and spatial dims.
+pub fn bias_grad(grad_y: &Tensor) -> Result<Tensor> {
+    let (b, c, h, w) = dims4(grad_y, "grad_y")?;
+    let mut gb = Tensor::zeros(&[c]);
+    let gy = grad_y.data();
+    let gbd = gb.data_mut();
+    for bi in 0..b {
+        for ci in 0..c {
+            let base = (bi * c + ci) * h * w;
+            gbd[ci] += gy[base..base + h * w].iter().sum::<f32>();
+        }
+    }
+    Ok(gb)
+}
+
+/// Full VJP of the residual step y = u + h·relu(conv(u,w)+b).
+///
+/// Returns (λ_in = ∂/∂u, dW, db) given λ_out = ∂L/∂y. The ReLU mask is
+/// recomputed from the forward pre-activation (same recompute-vs-store choice
+/// as the JAX artifacts, keeping the two paths numerically identical).
+pub fn residual_step_vjp(
+    u: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    h: f32,
+    pad: usize,
+    lam_out: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let mut pre = ops::conv2d(u, w, pad)?;
+    ops::add_bias(&mut pre, b)?;
+    // g = h · λ_out ⊙ 1[pre > 0]  (gradient at the conv+bias output)
+    let mut g = lam_out.clone();
+    for (gv, pv) in g.data_mut().iter_mut().zip(pre.data()) {
+        *gv = if *pv > 0.0 { *gv * h } else { 0.0 };
+    }
+    let mut lam_in = conv2d_bwd_data(&g, w, pad, u.dims())?;
+    lam_in.axpy(1.0, lam_out)?; // skip connection
+    let dw = conv2d_bwd_weight(u, &g, pad, w.dims())?;
+    let db = bias_grad(&g)?;
+    Ok((lam_in, dw, db))
+}
+
+/// State-only adjoint step λ ← λ + h·(∂F/∂u)ᵀλ (no parameter gradients) —
+/// the unit of the adjoint MGRIT solve.
+pub fn adjoint_step(
+    u: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    h: f32,
+    pad: usize,
+    lam: &Tensor,
+) -> Result<Tensor> {
+    let (lam_in, _, _) = residual_step_vjp(u, w, b, h, pad, lam)?;
+    Ok(lam_in)
+}
+
+/// VJP of the FC residual step (fig7's interleaved trunk layers).
+pub fn residual_fc_step_vjp(
+    u: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    h: f32,
+    lam_out: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let bsz = u.dims()[0];
+    let feat = u.len() / bsz;
+    let flat = u.reshape(&[bsz, feat])?;
+    let mut pre = ops::matmul(&flat, w)?;
+    ops::add_bias_rowwise(&mut pre, b)?;
+    let lam_flat = lam_out.reshape(&[bsz, feat])?;
+    let mut g = lam_flat.clone();
+    for (gv, pv) in g.data_mut().iter_mut().zip(pre.data()) {
+        *gv = if *pv > 0.0 { *gv * h } else { 0.0 };
+    }
+    let lam_in_flat = matmul_a_bt(&g, w)?; // g · Wᵀ
+    let mut lam_in = lam_in_flat.reshape(u.dims())?;
+    lam_in.axpy(1.0, lam_out)?;
+    let dw = matmul_at_b(&flat, &g)?; // flatᵀ · g
+    let db = col_sums(&g)?;
+    Ok((lam_in, dw, db))
+}
+
+/// Gradient of the classifier head loss wrt (u, wfc, bfc).
+pub fn head_vjp(
+    u: &Tensor,
+    wfc: &Tensor,
+    bfc: &Tensor,
+    labels: &[i32],
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let bsz = u.dims()[0];
+    let feat = u.len() / bsz;
+    let flat = u.reshape(&[bsz, feat])?;
+    let mut logits = ops::matmul(&flat, wfc)?;
+    ops::add_bias_rowwise(&mut logits, bfc)?;
+    let (b, c) = dims2(&logits)?;
+    // dlogits = (softmax(logits) − onehot(labels)) / B
+    let mut dlogits = Tensor::zeros(&[b, c]);
+    {
+        let ld = logits.data();
+        let dd = dlogits.data_mut();
+        for i in 0..b {
+            let row = &ld[i * c..(i + 1) * c];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = row.iter().map(|&v| ((v - mx) as f64).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            for j in 0..c {
+                let sm = (exps[j] / z) as f32;
+                let onehot = if labels[i] as usize == j { 1.0 } else { 0.0 };
+                dd[i * c + j] = (sm - onehot) / b as f32;
+            }
+        }
+    }
+    let du = matmul_a_bt(&dlogits, wfc)?.reshape(u.dims())?;
+    let dwfc = matmul_at_b(&flat, &dlogits)?;
+    let dbfc = col_sums(&dlogits)?;
+    Ok((du, dwfc, dbfc))
+}
+
+/// aᵀ·b: [M, K]ᵀ × [M, N] → [K, N].
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = dims2(a)?;
+    let (m2, n) = dims2(b)?;
+    if m != m2 {
+        bail!("at_b outer-dim mismatch {m} vs {m2}");
+    }
+    let mut out = Tensor::zeros(&[k, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        for kk in 0..k {
+            let av = ad[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[i * n..(i + 1) * n];
+            let orow = &mut od[kk * n..(kk + 1) * n];
+            for (o, bb) in orow.iter_mut().zip(brow) {
+                *o += av * bb;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// a·bᵀ: [M, K] × [N, K]ᵀ → [M, N].
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = dims2(a)?;
+    let (n, k2) = dims2(b)?;
+    if k != k2 {
+        bail!("a_bt inner-dim mismatch {k} vs {k2}");
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            od[i * n + j] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+    Ok(out)
+}
+
+/// Column sums of a [M, N] matrix → [N].
+pub fn col_sums(x: &Tensor) -> Result<Tensor> {
+    let (m, n) = dims2(x)?;
+    let mut out = Tensor::zeros(&[n]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        for (o, v) in od.iter_mut().zip(&xd[i * n..(i + 1) * n]) {
+            *o += v;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// central finite difference of scalar function f at x[i]
+    fn fd<F: Fn(&Tensor) -> f64>(f: &F, x: &Tensor, i: usize, eps: f32) -> f64 {
+        let mut xp = x.clone();
+        xp.data_mut()[i] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[i] -= eps;
+        (f(&xp) - f(&xm)) / (2.0 * eps as f64)
+    }
+
+    #[test]
+    fn conv_bwd_data_matches_fd() {
+        let mut rng = Rng::new(10);
+        let u = Tensor::randn(&[1, 2, 5, 5], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 2, 3, 3], 0.5, &mut rng);
+        let lam = Tensor::randn(&[1, 3, 5, 5], 1.0, &mut rng);
+        let gu = conv2d_bwd_data(&lam, &w, 1, u.dims()).unwrap();
+        let f = |uu: &Tensor| {
+            Tensor::dot(&ops::conv2d(uu, &w, 1).unwrap(), &lam).unwrap()
+        };
+        for i in [0usize, 7, 24, 49] {
+            let want = fd(&f, &u, i, 1e-2);
+            assert!((gu.data()[i] as f64 - want).abs() < 2e-2, "i={i}: {} vs {want}", gu.data()[i]);
+        }
+    }
+
+    #[test]
+    fn conv_bwd_weight_matches_fd() {
+        let mut rng = Rng::new(11);
+        let u = Tensor::randn(&[2, 2, 4, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 2, 3, 3], 0.5, &mut rng);
+        let lam = Tensor::randn(&[2, 2, 4, 4], 1.0, &mut rng);
+        let gw = conv2d_bwd_weight(&u, &lam, 1, w.dims()).unwrap();
+        let f = |ww: &Tensor| {
+            Tensor::dot(&ops::conv2d(&u, ww, 1).unwrap(), &lam).unwrap()
+        };
+        for i in [0usize, 5, 17, 35] {
+            let want = fd(&f, &w, i, 1e-2);
+            assert!((gw.data()[i] as f64 - want).abs() < 2e-2, "i={i}");
+        }
+    }
+
+    #[test]
+    fn bias_grad_sums() {
+        let g = Tensor::new(vec![2, 2, 1, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let gb = bias_grad(&g).unwrap();
+        assert_eq!(gb.data(), &[1. + 2. + 5. + 6., 3. + 4. + 7. + 8.]);
+    }
+
+    #[test]
+    fn residual_step_vjp_matches_fd() {
+        let mut rng = Rng::new(12);
+        let u = Tensor::randn(&[1, 2, 4, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 2, 3, 3], 0.4, &mut rng);
+        let b = Tensor::randn(&[2], 0.4, &mut rng);
+        let lam = Tensor::randn(&[1, 2, 4, 4], 1.0, &mut rng);
+        let h = 0.25f32;
+        let (lam_in, dw, db) = residual_step_vjp(&u, &w, &b, h, 1, &lam).unwrap();
+
+        let fu = |uu: &Tensor| {
+            Tensor::dot(&ops::residual_step(uu, &w, &b, h, 1).unwrap(), &lam).unwrap()
+        };
+        for i in [0usize, 9, 21, 31] {
+            let want = fd(&fu, &u, i, 1e-2);
+            assert!((lam_in.data()[i] as f64 - want).abs() < 3e-2, "u i={i}");
+        }
+        let fw = |ww: &Tensor| {
+            Tensor::dot(&ops::residual_step(&u, ww, &b, h, 1).unwrap(), &lam).unwrap()
+        };
+        for i in [0usize, 13, 26] {
+            let want = fd(&fw, &w, i, 1e-2);
+            assert!((dw.data()[i] as f64 - want).abs() < 3e-2, "w i={i}");
+        }
+        let fb = |bb: &Tensor| {
+            Tensor::dot(&ops::residual_step(&u, &w, bb, h, 1).unwrap(), &lam).unwrap()
+        };
+        for i in 0..2 {
+            let want = fd(&fb, &b, i, 1e-2);
+            assert!((db.data()[i] as f64 - want).abs() < 3e-2, "b i={i}");
+        }
+    }
+
+    #[test]
+    fn fc_step_vjp_matches_fd() {
+        let mut rng = Rng::new(13);
+        let u = Tensor::randn(&[2, 1, 1, 3], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 3], 0.5, &mut rng);
+        let b = Tensor::randn(&[3], 0.5, &mut rng);
+        let lam = Tensor::randn(&[2, 1, 1, 3], 1.0, &mut rng);
+        let h = 0.5f32;
+        let (lam_in, dw, db) = residual_fc_step_vjp(&u, &w, &b, h, &lam).unwrap();
+        let fu = |uu: &Tensor| {
+            Tensor::dot(&ops::residual_fc_step(uu, &w, &b, h).unwrap(), &lam).unwrap()
+        };
+        for i in 0..6 {
+            let want = fd(&fu, &u, i, 1e-2);
+            assert!((lam_in.data()[i] as f64 - want).abs() < 3e-2, "u i={i}");
+        }
+        let fw = |ww: &Tensor| {
+            Tensor::dot(&ops::residual_fc_step(&u, ww, &b, h).unwrap(), &lam).unwrap()
+        };
+        for i in 0..9 {
+            let want = fd(&fw, &w, i, 1e-2);
+            assert!((dw.data()[i] as f64 - want).abs() < 3e-2, "w i={i}");
+        }
+        let fb = |bb: &Tensor| {
+            Tensor::dot(&ops::residual_fc_step(&u, &w, bb, h).unwrap(), &lam).unwrap()
+        };
+        for i in 0..3 {
+            let want = fd(&fb, &b, i, 1e-2);
+            assert!((db.data()[i] as f64 - want).abs() < 3e-2, "b i={i}");
+        }
+    }
+
+    #[test]
+    fn head_vjp_matches_fd() {
+        let mut rng = Rng::new(14);
+        let u = Tensor::randn(&[2, 1, 2, 2], 1.0, &mut rng);
+        let wfc = Tensor::randn(&[4, 3], 0.5, &mut rng);
+        let bfc = Tensor::randn(&[3], 0.5, &mut rng);
+        let labels = [1i32, 2];
+        let (du, dwfc, dbfc) = head_vjp(&u, &wfc, &bfc, &labels).unwrap();
+        let fu = |uu: &Tensor| ops::head_fwd(uu, &wfc, &bfc, &labels).unwrap().1;
+        for i in 0..8 {
+            let want = fd(&fu, &u, i, 1e-2);
+            assert!((du.data()[i] as f64 - want).abs() < 2e-2, "u i={i}");
+        }
+        let fw = |ww: &Tensor| ops::head_fwd(&u, ww, &bfc, &labels).unwrap().1;
+        for i in 0..12 {
+            let want = fd(&fw, &wfc, i, 1e-2);
+            assert!((dwfc.data()[i] as f64 - want).abs() < 2e-2, "w i={i}");
+        }
+        let fb = |bb: &Tensor| ops::head_fwd(&u, &wfc, bb, &labels).unwrap().1;
+        for i in 0..3 {
+            let want = fd(&fb, &bfc, i, 1e-2);
+            assert!((dbfc.data()[i] as f64 - want).abs() < 2e-2, "b i={i}");
+        }
+    }
+
+    #[test]
+    fn adjoint_step_is_state_part_of_vjp() {
+        let mut rng = Rng::new(15);
+        let u = Tensor::randn(&[1, 2, 3, 3], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 2, 3, 3], 0.4, &mut rng);
+        let b = Tensor::randn(&[2], 0.3, &mut rng);
+        let lam = Tensor::randn(&[1, 2, 3, 3], 1.0, &mut rng);
+        let a = adjoint_step(&u, &w, &b, 0.3, 1, &lam).unwrap();
+        let (lam_in, _, _) = residual_step_vjp(&u, &w, &b, 0.3, 1, &lam).unwrap();
+        assert_eq!(a, lam_in);
+    }
+
+    #[test]
+    fn matmul_transpose_helpers() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]).unwrap();
+        // aᵀ·b: [3,2]
+        let atb = matmul_at_b(&a, &b).unwrap();
+        assert_eq!(atb.dims(), &[3, 2]);
+        assert_eq!(atb.data(), &[1., 4., 2., 5., 3., 6.]);
+        // a·bᵀ with b as [N,K]=[2,3]
+        let c = Tensor::new(vec![2, 3], vec![1., 0., 0., 0., 1., 0.]).unwrap();
+        let abt = matmul_a_bt(&a, &c).unwrap();
+        assert_eq!(abt.data(), &[1., 2., 4., 5.]);
+        assert_eq!(col_sums(&a).unwrap().data(), &[5., 7., 9.]);
+    }
+}

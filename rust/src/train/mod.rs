@@ -1,0 +1,363 @@
+//! Training loops: serial exact backprop (baseline) vs the paper's
+//! layer-parallel training — MG forward with early stopping (2 cycles) for
+//! the states, adjoint-MGRIT for λ, layer-local parameter gradients, SGD.
+//!
+//! Generic over [`NetExecutor`] so the same loop runs on the host path and
+//! the PJRT/Pallas artifact path.
+
+use anyhow::bail;
+
+use crate::data::Dataset;
+use crate::mgrit::{self, MgritOptions};
+use crate::model::params::NetGrads;
+use crate::model::{NetParams, NetSpec};
+use crate::solver::BlockSolver;
+use crate::tensor::{ops, vjp, Tensor};
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// A solver that also evaluates the non-trunk layers (opening, head).
+/// Implemented by `HostSolver` and `PjrtSolver`.
+pub trait NetExecutor: BlockSolver {
+    fn opening(&self, y: &Tensor) -> Result<Tensor>;
+    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)>;
+    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)>;
+}
+
+impl NetExecutor for crate::solver::host::HostSolver {
+    fn opening(&self, y: &Tensor) -> Result<Tensor> {
+        crate::solver::host::HostSolver::opening(self, y)
+    }
+    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
+        crate::solver::host::HostSolver::head(self, u, labels)
+    }
+    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        crate::solver::host::HostSolver::head_vjp(self, u, labels)
+    }
+}
+
+impl NetExecutor for crate::solver::pjrt::PjrtSolver {
+    fn opening(&self, y: &Tensor) -> Result<Tensor> {
+        crate::solver::pjrt::PjrtSolver::opening(self, y)
+    }
+    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
+        crate::solver::pjrt::PjrtSolver::head(self, u, labels)
+    }
+    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        crate::solver::pjrt::PjrtSolver::head_vjp(self, u, labels)
+    }
+}
+
+/// How states/adjoints are solved in a training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Exact sequential forward + backward (classic backprop).
+    Serial,
+    /// The paper's layer-parallel training: MG forward/adjoint with early
+    /// stopping after this many cycles (paper: 2).
+    Mgrit { cycles: usize },
+}
+
+/// Gradient of the opening layer u0 = relu(conv(y, w) + b) given λ at u0.
+/// Host-side (parameters live on the host in both execution paths).
+pub fn opening_vjp(
+    y: &Tensor,
+    w_open: &Tensor,
+    b_open: &Tensor,
+    pad: usize,
+    lam0: &Tensor,
+) -> Result<(Tensor, Tensor)> {
+    let mut pre = ops::conv2d(y, w_open, pad)?;
+    ops::add_bias(&mut pre, b_open)?;
+    let mut g = lam0.clone();
+    for (gv, pv) in g.data_mut().iter_mut().zip(pre.data()) {
+        if *pv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+    let dw = vjp::conv2d_bwd_weight(y, &g, pad, w_open.dims())?;
+    let db = vjp::bias_grad(&g)?;
+    Ok((dw, db))
+}
+
+/// One forward+backward pass: returns (loss, grads, final-state logits).
+pub fn loss_and_grads<E: NetExecutor>(
+    spec: &NetSpec,
+    params: &NetParams,
+    exec: &E,
+    y: &Tensor,
+    labels: &[i32],
+    method: Method,
+) -> Result<(f64, NetGrads, Tensor)> {
+    let n = spec.n_res();
+    let h = spec.h();
+    let u0 = exec.opening(y)?;
+
+    // states u^0..u^N
+    let states: Vec<Tensor> = match method {
+        Method::Serial => {
+            let mut s = vec![u0.clone()];
+            s.extend(exec.block_fprop(0, 1, n, h, &u0)?);
+            s
+        }
+        Method::Mgrit { cycles } => {
+            let opts = MgritOptions::early_stopping(cycles);
+            let (s, _) = mgrit::solve_forward(exec, n, h, &u0, &opts)?;
+            s
+        }
+    };
+
+    let (logits, loss) = exec.head(states.last().unwrap(), labels)?;
+    let (du_n, dwfc, dbfc) = exec.head_vjp(states.last().unwrap(), labels)?;
+
+    // adjoints λ^0..λ^N
+    let lams = match method {
+        Method::Serial => mgrit::adjoint::serial_adjoint(exec, &states, h, &du_n)?,
+        Method::Mgrit { cycles } => {
+            let opts = MgritOptions::early_stopping(cycles);
+            let (l, _) = mgrit::adjoint::solve_adjoint(exec, &states, h, &du_n, &opts)?;
+            l
+        }
+    };
+
+    // layer-local parameter gradients (the embarrassingly parallel stage)
+    let trunk = mgrit::adjoint::param_grads(exec, &states, &lams, h)?;
+    let (dw_open, db_open) =
+        opening_vjp(y, &params.w_open, &params.b_open, spec.opening.pad, &lams[0])?;
+
+    let grads = NetGrads {
+        w_open: dw_open,
+        b_open: db_open,
+        trunk,
+        w_fc: dwfc,
+        b_fc: dbfc,
+    };
+    Ok((loss, grads, logits))
+}
+
+/// Per-step log record.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub method: Method,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 100, batch: 16, lr: 0.05, method: Method::Mgrit { cycles: 2 }, seed: 7 }
+    }
+}
+
+/// SGD training loop. `mk_exec` rebuilds the executor after each parameter
+/// update (solvers hold immutable parameter snapshots — same pattern as
+/// re-uploading weights to a device).
+pub fn train<E: NetExecutor, F>(
+    spec: &NetSpec,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    mut mk_exec: F,
+) -> Result<Vec<StepLog>>
+where
+    F: FnMut(&NetParams) -> Result<E>,
+{
+    if data.is_empty() {
+        bail!("empty dataset");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut logs = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let (y, labels) = data.sample_batch(cfg.batch, &mut rng)?;
+        let exec = mk_exec(params)?;
+        let (loss, grads, _) = loss_and_grads(spec, params, &exec, &y, &labels, cfg.method)?;
+        let grad_norm = grads.global_norm();
+        params.sgd_step(&grads, cfg.lr)?;
+        logs.push(StepLog { step, loss, grad_norm });
+    }
+    Ok(logs)
+}
+
+/// Top-1 error on (a prefix of) a dataset, evaluated with serial forward.
+pub fn top1_error<E: NetExecutor>(
+    spec: &NetSpec,
+    exec: &E,
+    data: &Dataset,
+    batch: usize,
+    max_batches: usize,
+) -> Result<f64> {
+    let n = spec.n_res();
+    let h = spec.h();
+    let mut wrong = 0usize;
+    let mut total = 0usize;
+    let mut i = 0usize;
+    let mut batches = 0usize;
+    while i + batch <= data.len() && batches < max_batches {
+        let idx: Vec<usize> = (i..i + batch).collect();
+        let (y, labels) = data.batch(&idx)?;
+        let u0 = exec.opening(&y)?;
+        let un = exec.block_fprop(0, 1, n, h, &u0)?.pop().unwrap();
+        let (logits, _) = exec.head(&un, &labels)?;
+        for (pred, &lab) in ops::argmax_rows(&logits)?.iter().zip(&labels) {
+            if *pred != lab as usize {
+                wrong += 1;
+            }
+            total += 1;
+        }
+        i += batch;
+        batches += 1;
+    }
+    if total == 0 {
+        bail!("no evaluation batches (dataset {} < batch {batch})", data.len());
+    }
+    Ok(wrong as f64 / total as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticDigits;
+    use crate::solver::host::HostSolver;
+    use std::sync::Arc;
+
+    fn mk_host(spec: &Arc<NetSpec>) -> impl FnMut(&NetParams) -> Result<HostSolver> + '_ {
+        move |p: &NetParams| HostSolver::new(spec.clone(), Arc::new(p.clone()))
+    }
+
+    fn tiny_spec() -> Arc<NetSpec> {
+        // mnist geometry but a short trunk to keep tests quick
+        let mut s = NetSpec::mnist();
+        s.trunk.truncate(8);
+        s.t_final = 0.5;
+        Arc::new(s)
+    }
+
+    #[test]
+    fn mgrit_grads_match_serial_grads_closely() {
+        let spec = tiny_spec();
+        let params = NetParams::init(&spec, 60).unwrap();
+        let exec = HostSolver::new(spec.clone(), Arc::new(params.clone())).unwrap();
+        let ds = SyntheticDigits::new(61).dataset(20);
+        let (y, labels) = ds.batch(&[0, 1, 2, 3]).unwrap();
+
+        let (loss_s, g_s, _) =
+            loss_and_grads(&spec, &params, &exec, &y, &labels, Method::Serial).unwrap();
+        let (loss_m, g_m, _) =
+            loss_and_grads(&spec, &params, &exec, &y, &labels, Method::Mgrit { cycles: 2 })
+                .unwrap();
+        assert!((loss_s - loss_m).abs() < 1e-3, "{loss_s} vs {loss_m}");
+        let rel = (g_s.global_norm() - g_m.global_norm()).abs() / g_s.global_norm();
+        assert!(rel < 0.05, "grad norm gap {rel}");
+        // per-tensor agreement on the head (most sensitive to state error)
+        let err = crate::util::stats::rel_l2_err(g_m.w_fc.data(), g_s.w_fc.data());
+        assert!(err < 0.02, "head grad err {err}");
+    }
+
+    #[test]
+    fn serial_training_reduces_loss() {
+        let spec = tiny_spec();
+        let mut params = NetParams::init(&spec, 62).unwrap();
+        let ds = SyntheticDigits::new(63).dataset(60);
+        let cfg = TrainConfig { steps: 12, batch: 8, lr: 0.05, method: Method::Serial, seed: 1 };
+        let logs = train(&spec, &mut params, &ds, &cfg, mk_host(&spec)).unwrap();
+        let first: f64 = logs[..3].iter().map(|l| l.loss).sum::<f64>() / 3.0;
+        let last: f64 = logs[logs.len() - 3..].iter().map(|l| l.loss).sum::<f64>() / 3.0;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn mgrit_training_reduces_loss() {
+        let spec = tiny_spec();
+        let mut params = NetParams::init(&spec, 64).unwrap();
+        let ds = SyntheticDigits::new(65).dataset(60);
+        let cfg = TrainConfig {
+            steps: 12,
+            batch: 8,
+            lr: 0.05,
+            method: Method::Mgrit { cycles: 2 },
+            seed: 2,
+        };
+        let logs = train(&spec, &mut params, &ds, &cfg, mk_host(&spec)).unwrap();
+        let first: f64 = logs[..3].iter().map(|l| l.loss).sum::<f64>() / 3.0;
+        let last: f64 = logs[logs.len() - 3..].iter().map(|l| l.loss).sum::<f64>() / 3.0;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn top1_error_sane() {
+        let spec = tiny_spec();
+        let params = NetParams::init(&spec, 66).unwrap();
+        let exec = HostSolver::new(spec.clone(), Arc::new(params.clone())).unwrap();
+        let ds = SyntheticDigits::new(67).dataset(40);
+        let err = top1_error(&spec, &exec, &ds, 8, 4).unwrap();
+        assert!((0.0..=1.0).contains(&err));
+        // untrained net ≈ chance level
+        assert!(err > 0.5, "untrained error suspiciously low: {err}");
+    }
+
+    #[test]
+    fn opening_vjp_matches_fd() {
+        let spec = tiny_spec();
+        let mut params = NetParams::init(&spec, 68).unwrap();
+        // push every pre-activation far above the ReLU kink so the central
+        // finite difference is exact (the masked branch is tested below)
+        params.b_open = Tensor::full(&[8], 100.0);
+        let mut rng = Rng::new(69);
+        let y = Tensor::randn(&[1, 1, 28, 28], 1.0, &mut rng);
+        let lam = Tensor::randn(&[1, 8, 28, 28], 1.0, &mut rng);
+        let (dw, db) = opening_vjp(&y, &params.w_open, &params.b_open, 1, &lam).unwrap();
+        let f = |w: &Tensor, b: &Tensor| -> f64 {
+            let mut pre = ops::conv2d(&y, w, 1).unwrap();
+            ops::add_bias(&mut pre, b).unwrap();
+            ops::relu(&mut pre);
+            Tensor::dot(&pre, &lam).unwrap()
+        };
+        let eps = 1e-2f32;
+        for i in [0usize, 5, 40] {
+            let mut wp = params.w_open.clone();
+            wp.data_mut()[i] += eps;
+            let mut wm = params.w_open.clone();
+            wm.data_mut()[i] -= eps;
+            let fd = (f(&wp, &params.b_open) - f(&wm, &params.b_open)) / (2.0 * eps as f64);
+            assert!((dw.data()[i] as f64 - fd).abs() < 3e-2, "w i={i}");
+        }
+        let mut bp = params.b_open.clone();
+        bp.data_mut()[0] += eps;
+        let mut bm = params.b_open.clone();
+        bm.data_mut()[0] -= eps;
+        let fd = (f(&params.w_open, &bp) - f(&params.w_open, &bm)) / (2.0 * eps as f64);
+        assert!((db.data()[0] as f64 - fd).abs() < 3e-2);
+    }
+
+    #[test]
+    fn opening_vjp_masked_when_units_dead() {
+        // all pre-activations negative → ReLU kills every gradient
+        let mut rng = Rng::new(71);
+        let y = Tensor::randn(&[1, 1, 6, 6], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 1, 3, 3], 0.1, &mut rng);
+        let b = Tensor::full(&[2], -100.0);
+        let lam = Tensor::randn(&[1, 2, 6, 6], 1.0, &mut rng);
+        let (dw, db) = opening_vjp(&y, &w, &b, 1, &lam).unwrap();
+        assert_eq!(dw.l2_norm(), 0.0);
+        assert_eq!(db.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let spec = tiny_spec();
+        let mut params = NetParams::init(&spec, 70).unwrap();
+        let ds = Dataset { images: vec![], labels: vec![] };
+        let cfg = TrainConfig::default();
+        assert!(train(&spec, &mut params, &ds, &cfg, mk_host(&spec)).is_err());
+    }
+}

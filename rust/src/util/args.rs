@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Grammar: `mgrit <subcommand> [--flag] [--key value]... [positional]...`
+//! Flags may also be written `--key=value`. Unknown keys are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand, key→value options, bare flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse::<usize>().map_err(|e| anyhow!("--{name} {t:?}: {e}")))
+                .collect(),
+        }
+    }
+
+    /// Reject any option/flag not in `allowed` (typo guard).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown option --{k} (allowed: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--preset", "mnist", "--steps", "100"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("preset"), Some("mnist"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&["sim", "--gpus=8", "--verbose"]);
+        assert_eq!(a.usize_or("gpus", 1).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        // a flag followed by another option must not swallow it
+        let a = parse(&["x", "--verbose", "--n", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["run", "file1", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["x", "--gpus", "1,2,4"]);
+        assert_eq!(a.usize_list_or("gpus", &[9]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("other", &[9]).unwrap(), vec![9]);
+        assert_eq!(a.f64_or("tol", 1e-9).unwrap(), 1e-9);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--stepz", "5"]);
+        assert!(a.check_known(&["steps"]).is_err());
+        let b = parse(&["x", "--steps", "5"]);
+        assert!(b.check_known(&["steps"]).is_ok());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Benchmark harness (offline substitute for criterion).
+//!
+//! Every file under `rust/benches/` is a `harness = false` binary that calls
+//! into this module. The harness does warmup, adaptive iteration counts,
+//! outlier-robust statistics, and writes one JSON line per benchmark to
+//! `target/bench-results/<suite>.json` so EXPERIMENTS.md numbers are
+//! regenerable.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::json::{arr, num, obj, s, Json};
+use super::stats;
+
+/// One measured benchmark: name → robust timing statistics (seconds).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+/// Collects measurements for one bench suite and renders a report.
+pub struct Suite {
+    name: String,
+    target_time_s: f64,
+    measurements: Vec<Measurement>,
+    /// extra experiment rows (figure tables) to embed in the JSON output
+    tables: Vec<(String, Json)>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Self {
+        // `--quick` on the command line (or BENCH_QUICK=1) shortens runs for CI
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("BENCH_QUICK").is_ok();
+        Self {
+            name: name.to_string(),
+            target_time_s: if quick { 0.2 } else { 1.0 },
+            measurements: Vec::new(),
+            tables: Vec::new(),
+        }
+    }
+
+    /// Time `f`, choosing the iteration count so total time ≈ target_time.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_time_s / once).ceil() as usize).clamp(3, 10_000);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_s: stats::mean(&samples),
+            median_s: stats::median(&samples),
+            stddev_s: stats::stddev(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!(
+            "  {:<44} {:>12} median  {:>12} mean  ±{:<10} ({} iters)",
+            m.name,
+            super::human_time(m.median_s),
+            super::human_time(m.mean_s),
+            super::human_time(m.stddev_s),
+            m.iters
+        );
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Record a pre-computed table (e.g. a simulated scaling sweep) so the
+    /// bench's JSON output carries the figure data, not just timings.
+    pub fn table(&mut self, name: &str, rows: Vec<Json>) {
+        println!("  table {name}: {} rows", rows.len());
+        self.tables.push((name.to_string(), arr(rows)));
+    }
+
+    /// Write the JSON report; call at the end of the bench main().
+    pub fn finish(self) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        let ms: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                obj(vec![
+                    ("name", s(&m.name)),
+                    ("iters", num(m.iters as f64)),
+                    ("mean_s", num(m.mean_s)),
+                    ("median_s", num(m.median_s)),
+                    ("stddev_s", num(m.stddev_s)),
+                    ("min_s", num(m.min_s)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![("suite", s(&self.name)), ("measurements", arr(ms))];
+        for (k, v) in &self.tables {
+            fields.push((k.as_str(), v.clone()));
+        }
+        let json = obj(fields).to_string();
+        match std::fs::File::create(&path) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{json}");
+                println!("  report → {}", path.display());
+            }
+            Err(e) => eprintln!("  could not write {}: {e}", path.display()),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut suite = Suite::new("selftest");
+        let m = suite
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..10_000 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+                black_box(acc);
+            })
+            .clone();
+        assert!(m.mean_s > 0.0);
+        assert!(m.iters >= 3);
+        assert!(m.min_s <= m.median_s);
+    }
+}

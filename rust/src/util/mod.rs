@@ -1,0 +1,91 @@
+//! Offline-environment substrates: JSON, PRNG, CLI parsing, statistics, a
+//! bench harness, and a minimal property-testing framework.
+//!
+//! These replace crates (serde_json, rand, clap, criterion, proptest) that
+//! are unavailable in this offline build; each is scoped to exactly what the
+//! rest of the crate needs and is unit-tested in place.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod proptest_lite;
+pub mod stats;
+
+/// Wall-clock timer with split support, used across experiments and benches.
+#[derive(Debug)]
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    /// Seconds elapsed since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since construction.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(0.5e-9 * 2.0), "1.0 ns");
+        assert!(human_time(1.5e-4).ends_with("µs"));
+        assert!(human_time(0.25).ends_with("ms"));
+        assert!(human_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

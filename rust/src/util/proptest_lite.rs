@@ -1,0 +1,136 @@
+//! Minimal property-based testing framework (offline substitute for proptest).
+//!
+//! A property is a closure over a seeded [`super::prng::Rng`]; the runner
+//! executes it for many seeds and, on failure, reports the failing seed so
+//! the case is replayable (`PROPTEST_SEED=<n> cargo test <name>`). There is
+//! no shrinking — failing inputs are reconstructible from the seed, and our
+//! generators are parameterized small enough to debug directly.
+
+use super::prng::Rng;
+
+/// Configuration for one property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let base_seed = std::env::var("PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5eed);
+        Self { cases: 32, base_seed }
+    }
+}
+
+/// Run `prop` for `cfg.cases` distinct seeds; panic with the failing seed on
+/// the first failure (assert inside the property as usual).
+pub fn check_with<F: FnMut(&mut Rng)>(cfg: Config, name: &str, mut prop: F) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at case {case} (replay with PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default config (32 cases, env-overridable seed).
+pub fn check<F: FnMut(&mut Rng)>(name: &str, prop: F) {
+    check_with(Config::default(), name, prop);
+}
+
+// ---------------------------------------------------------------------------
+// common generators
+// ---------------------------------------------------------------------------
+
+/// Uniform integer in [lo, hi] inclusive.
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(hi >= lo);
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Vector of standard-normal f32 scaled by `scale`.
+pub fn gen_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0; len];
+    rng.fill_normal(&mut v, scale);
+    v
+}
+
+/// Random subset partition of `n` items into `k` non-empty contiguous chunks;
+/// returns the chunk boundaries (k+1 entries, first 0, last n).
+pub fn gen_partition(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1 && k <= n);
+    // choose k-1 distinct cut points in 1..n
+    let mut cuts: Vec<usize> = Vec::with_capacity(k - 1);
+    while cuts.len() < k - 1 {
+        let c = 1 + rng.below(n - 1);
+        if !cuts.contains(&c) {
+            cuts.push(c);
+        }
+    }
+    cuts.sort_unstable();
+    let mut bounds = vec![0];
+    bounds.extend(cuts);
+    bounds.push(n);
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", |rng| {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROPTEST_SEED=")]
+    fn failing_property_reports_seed() {
+        check_with(Config { cases: 8, base_seed: 1 }, "always-fails", |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_usize_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = gen_usize(&mut rng, 3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gen_partition_valid() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let n = gen_usize(&mut rng, 2, 40);
+            let k = gen_usize(&mut rng, 1, n);
+            let b = gen_partition(&mut rng, n, k);
+            assert_eq!(b.len(), k + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), n);
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "chunks must be non-empty: {b:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration: the python-AOT → HLO-text → PJRT execution path agrees with
+//! the pure-rust host solver — the contract that makes the two `BlockSolver`
+//! implementations interchangeable under the MGRIT engine.
+//!
+//! Requires `artifacts/` (run `make artifacts`); all tests share one PJRT
+//! client because CPU-client creation is expensive.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use resnet_mgrit::mgrit::{self, MgritOptions};
+use resnet_mgrit::model::{NetParams, NetSpec};
+use resnet_mgrit::solver::host::HostSolver;
+use resnet_mgrit::solver::pjrt::PjrtSolver;
+use resnet_mgrit::solver::BlockSolver;
+use resnet_mgrit::runtime::ArtifactStore;
+use resnet_mgrit::tensor::Tensor;
+use resnet_mgrit::util::prng::Rng;
+use resnet_mgrit::util::stats::rel_l2_err;
+
+fn store() -> Rc<ArtifactStore> {
+    // PJRT types are single-threaded (Rc inside), so the shared store is
+    // per-test-thread; executable caching still amortizes within each test.
+    thread_local! {
+        static STORE: Rc<ArtifactStore> = {
+            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Rc::new(ArtifactStore::open(dir).expect("run `make artifacts` first"))
+        };
+    }
+    STORE.with(|s| s.clone())
+}
+
+fn solvers(seed: u64) -> (HostSolver, PjrtSolver) {
+    let spec = Arc::new(NetSpec::micro());
+    let params = Arc::new(NetParams::init(&spec, seed).unwrap());
+    let host = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let pjrt = PjrtSolver::new(store(), spec, params, 2).unwrap();
+    (host, pjrt)
+}
+
+const TOL: f64 = 2e-5;
+
+#[test]
+fn step_fwd_matches_host() {
+    let (host, pjrt) = solvers(31);
+    let mut rng = Rng::new(32);
+    let u = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+    for idx in 0..4 {
+        let a = host.step(idx, 0.25, &u).unwrap();
+        let b = pjrt.step(idx, 0.25, &u).unwrap();
+        assert_eq!(a.dims(), b.dims());
+        assert!(rel_l2_err(b.data(), a.data()) < TOL, "layer {idx}");
+    }
+}
+
+#[test]
+fn block_fwd_matches_host() {
+    let (host, pjrt) = solvers(33);
+    let mut rng = Rng::new(34);
+    let u0 = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+    // count == coarsen (2): exercises the block artifact
+    let a = host.block_fprop(0, 1, 2, 0.25, &u0).unwrap();
+    let b = pjrt.block_fprop(0, 1, 2, 0.25, &u0).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!(rel_l2_err(y.data(), x.data()) < TOL);
+    }
+    // strided block (coarse level θ injection)
+    let a = host.block_fprop(0, 2, 2, 0.5, &u0).unwrap();
+    let b = pjrt.block_fprop(0, 2, 2, 0.5, &u0).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!(rel_l2_err(y.data(), x.data()) < TOL);
+    }
+    // count != coarsen: exercises the single-step fallback
+    let a = host.block_fprop(1, 1, 3, 0.25, &u0).unwrap();
+    let b = pjrt.block_fprop(1, 1, 3, 0.25, &u0).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!(rel_l2_err(y.data(), x.data()) < TOL);
+    }
+}
+
+#[test]
+fn adjoint_and_param_grad_match_host() {
+    let (host, pjrt) = solvers(35);
+    let mut rng = Rng::new(36);
+    let u = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+    let lam = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+    let a = host.adjoint_step(1, 0.25, &u, &lam).unwrap();
+    let b = pjrt.adjoint_step(1, 0.25, &u, &lam).unwrap();
+    assert!(rel_l2_err(b.data(), a.data()) < TOL);
+
+    let (dw_h, db_h) = host.param_grad(2, 0.25, &u, &lam).unwrap();
+    let (dw_p, db_p) = pjrt.param_grad(2, 0.25, &u, &lam).unwrap();
+    assert!(rel_l2_err(dw_p.data(), dw_h.data()) < TOL);
+    assert!(rel_l2_err(db_p.data(), db_h.data()) < TOL);
+}
+
+#[test]
+fn opening_head_and_serial_match_host() {
+    let (host, pjrt) = solvers(37);
+    let mut rng = Rng::new(38);
+    let y = Tensor::randn(&[2, 1, 6, 6], 1.0, &mut rng);
+    let labels = [3i32, 7];
+
+    let u0_h = host.opening(&y).unwrap();
+    let u0_p = pjrt.opening(&y).unwrap();
+    assert!(rel_l2_err(u0_p.data(), u0_h.data()) < TOL);
+
+    let (lg_h, loss_h) = host.head(&u0_h, &labels).unwrap();
+    let (lg_p, loss_p) = pjrt.head(&u0_h, &labels).unwrap();
+    assert!(rel_l2_err(lg_p.data(), lg_h.data()) < TOL);
+    assert!((loss_p - loss_h).abs() < 1e-5);
+
+    let (du_h, dw_h, db_h) = host.head_vjp(&u0_h, &labels).unwrap();
+    let (du_p, dw_p, db_p) = pjrt.head_vjp(&u0_h, &labels).unwrap();
+    assert!(rel_l2_err(du_p.data(), du_h.data()) < 1e-4);
+    assert!(rel_l2_err(dw_p.data(), dw_h.data()) < 1e-4);
+    assert!(rel_l2_err(db_p.data(), db_h.data()) < 1e-4);
+
+    // serial whole-net forward: PJRT artifact vs host composition
+    let (_, loss_p, ufin_p) = pjrt.serial_fwd(&y, &labels).unwrap();
+    let states = host.block_fprop(0, 1, 4, host.spec().h(), &u0_h).unwrap();
+    let ufin_h = states.last().unwrap();
+    let (_, loss_h2) = host.head(ufin_h, &labels).unwrap();
+    assert!(rel_l2_err(ufin_p.data(), ufin_h.data()) < 1e-4);
+    assert!((loss_p - loss_h2).abs() < 1e-4);
+}
+
+#[test]
+fn mgrit_over_pjrt_solver_converges_to_serial() {
+    // the headline integration: the MGRIT engine running entirely on AOT
+    // artifacts reproduces the serial forward propagation
+    let (host, pjrt) = solvers(39);
+    let mut rng = Rng::new(40);
+    let u0 = Tensor::randn(&[2, 2, 6, 6], 0.8, &mut rng);
+    let opts = MgritOptions { tol: 1e-6, max_cycles: 30, ..Default::default() };
+    let (mg, stats) = mgrit::solve_forward(&pjrt, 4, host.spec().h(), &u0, &opts).unwrap();
+    assert!(stats.converged, "norms {:?}", stats.residual_norms);
+    let serial = host.block_fprop(0, 1, 4, host.spec().h(), &u0).unwrap();
+    let err = rel_l2_err(mg.last().unwrap().data(), serial.last().unwrap().data());
+    assert!(err < 1e-4, "MG-over-PJRT vs host serial: {err}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let (_, pjrt) = solvers(41);
+    let mut rng = Rng::new(42);
+    let u = Tensor::randn(&[2, 2, 6, 6], 1.0, &mut rng);
+    let before = store().runtime.cached_executables();
+    for _ in 0..3 {
+        pjrt.step(0, 0.1, &u).unwrap();
+    }
+    let after = store().runtime.cached_executables();
+    assert!(after <= before + 1, "step_fwd must compile at most once");
+}
+
+#[test]
+fn solver_construction_validates() {
+    let spec = Arc::new(NetSpec::micro());
+    let params = Arc::new(NetParams::init(&spec, 1).unwrap());
+    // wrong batch size
+    assert!(PjrtSolver::new(store(), spec.clone(), params.clone(), 7).is_err());
+    // preset without artifacts
+    let fig6 = Arc::new(NetSpec::fig6_depth(4));
+    let p6 = Arc::new(NetParams::init(&fig6, 1).unwrap());
+    assert!(PjrtSolver::new(store(), fig6, p6, 2).is_err());
+}
+
+#[test]
+fn batch_mismatch_rejected_at_call_time() {
+    let (_, pjrt) = solvers(43);
+    let u_wrong = Tensor::zeros(&[1, 2, 6, 6]);
+    assert!(pjrt.step(0, 0.1, &u_wrong).is_err());
+}

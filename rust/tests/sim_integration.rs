@@ -1,0 +1,119 @@
+//! Simulator integration: closed-form cross-checks at the scale of the
+//! paper's experiments, and consistency between the simulated schedules and
+//! analytic expectations.
+
+use resnet_mgrit::coordinator::Partition;
+use resnet_mgrit::mgrit::hierarchy::Hierarchy;
+use resnet_mgrit::mgrit::taskgraph::{self, KernelClass};
+use resnet_mgrit::model::{cost, NetSpec};
+use resnet_mgrit::perfmodel::ClusterModel;
+use resnet_mgrit::sim;
+
+#[test]
+fn serial_fig6_time_matches_closed_form() {
+    // one device, one chain: makespan == N · kernel_time(conv layer)
+    let spec = NetSpec::fig6();
+    let g = taskgraph::serial_forward(&spec, 1, 1);
+    let c = ClusterModel::tx_gaia(1);
+    let per = c.device.kernel_time(KernelClass::Conv, cost::layer_cost(&spec, 0, 1).flops);
+    let rep = sim::simulate(&g, &c, false).unwrap();
+    let want = per * spec.n_res() as f64;
+    assert!((rep.makespan_s - want).abs() / want < 1e-9);
+}
+
+#[test]
+fn pm_chain_adds_exactly_the_boundary_messages() {
+    let spec = NetSpec::fig6();
+    let c8 = ClusterModel::tx_gaia(8);
+    let g1 = taskgraph::serial_forward(&spec, 1, 1);
+    let g8 = taskgraph::serial_forward(&spec, 8, 1);
+    let r1 = sim::simulate(&g1, &ClusterModel::tx_gaia(1), false).unwrap();
+    let r8 = sim::simulate(&g8, &c8, false).unwrap();
+    let msg = c8.net.message_time(cost::state_bytes(&spec, 1));
+    let want = r1.makespan_s + 7.0 * msg;
+    assert!(
+        (r8.makespan_s - want).abs() / want < 1e-9,
+        "{} vs {}",
+        r8.makespan_s,
+        want
+    );
+}
+
+#[test]
+fn mg_fig6_faster_than_serial_beyond_crossover_slower_before() {
+    let spec = NetSpec::fig6();
+    let hier = Hierarchy::build(spec.n_res(), spec.h(), 4, 8, 8).unwrap();
+    let n_blocks = hier.fine().blocks(4).len();
+    let serial = sim::simulate(
+        &taskgraph::serial_forward(&spec, 1, 1),
+        &ClusterModel::tx_gaia(1),
+        false,
+    )
+    .unwrap()
+    .makespan_s;
+
+    let mg_at = |gpus: usize| {
+        let part = Partition::contiguous(n_blocks, gpus).unwrap();
+        let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 1);
+        sim::simulate(&g, &ClusterModel::tx_gaia(gpus), false).unwrap().makespan_s
+    };
+    assert!(mg_at(1) > serial, "MG@1 must be slower (iterative method)");
+    assert!(mg_at(24) < serial, "MG@24 must beat serial");
+    // monotone improvement across the sweep
+    let times: Vec<f64> = [1usize, 4, 8, 24].iter().map(|&g| mg_at(g)).collect();
+    for w in times.windows(2) {
+        assert!(w[1] < w[0], "{times:?}");
+    }
+}
+
+#[test]
+fn device_busy_times_balanced_for_mg() {
+    // contiguous partitions balance blocks, so device busy times should be
+    // within ~3x of each other mid-sweep (device 0 also runs coarse chains)
+    let spec = NetSpec::fig6_depth(1024);
+    let hier = Hierarchy::build(1024, spec.h(), 4, 8, 8).unwrap();
+    let part = Partition::contiguous(hier.fine().blocks(4).len(), 8).unwrap();
+    let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 2);
+    let rep = sim::simulate(&g, &ClusterModel::tx_gaia(8), false).unwrap();
+    let mx = rep.device_busy_s.iter().cloned().fold(0.0, f64::max);
+    let mn = rep.device_busy_s.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(mx / mn < 3.0, "busy imbalance: {:?}", rep.device_busy_s);
+}
+
+#[test]
+fn fig7_fc_layers_dominate_flops_but_not_count() {
+    let spec = NetSpec::fig7();
+    let g = taskgraph::serial_forward(&spec, 1, 1);
+    let (mut fc_flops, mut conv_flops) = (0.0f64, 0.0f64);
+    for t in &g.tasks {
+        if let taskgraph::TaskKind::Kernel { class, flops, .. } = &t.kind {
+            match class {
+                KernelClass::Gemm => fc_flops += flops,
+                KernelClass::Conv => conv_flops += flops,
+                _ => {}
+            }
+        }
+    }
+    // per-layer, one FC carries ~12x a conv's FLOPs (the paper's "greatly
+    // increase the FLOP counts" is a per-layer statement: 15 FCs vs 4,097
+    // convs still leaves convs dominating the total)
+    let fc_per = fc_flops / 15.0;
+    let conv_per = conv_flops / 4097.0;
+    assert!(fc_per > 10.0 * conv_per, "fc/layer {fc_per} conv/layer {conv_per}");
+    assert!(conv_flops > fc_flops, "totals: conv {conv_flops} fc {fc_flops}");
+}
+
+#[test]
+fn trace_timeline_renders_for_fig5_window() {
+    let spec = NetSpec::fig6_depth(256);
+    let hier = Hierarchy::two_level(256, spec.h(), 4).unwrap();
+    let part = Partition::contiguous(hier.fine().blocks(4).len(), 1).unwrap();
+    let g = taskgraph::mg_forward(&spec, &hier, &part, 1, 1);
+    let rep = sim::simulate(&g, &ClusterModel::tx_gaia(1), true).unwrap();
+    assert!(!rep.trace.is_empty());
+    let ascii =
+        sim::timeline::ascii_timeline(&rep.trace, 0, 0.0, rep.makespan_s * 0.05, 80);
+    assert!(ascii.contains('#'));
+    let csv = sim::timeline::trace_csv(&rep.trace);
+    assert!(csv.lines().count() > 100);
+}

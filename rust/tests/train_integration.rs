@@ -1,0 +1,127 @@
+//! End-to-end training integration: the paper's accuracy-parity claim
+//! ("two cycles suffice — approximately the same Top-1 error per epoch") on
+//! the host path, and MG training through the PJRT/Pallas artifact path.
+
+use std::sync::Arc;
+
+use resnet_mgrit::data::SyntheticDigits;
+use resnet_mgrit::model::{NetParams, NetSpec};
+use resnet_mgrit::solver::host::HostSolver;
+use resnet_mgrit::train::{self, Method, TrainConfig};
+
+fn small_mnist_spec() -> Arc<NetSpec> {
+    // mnist geometry, 16 layers: deep enough for MG structure (4 blocks),
+    // fast enough for CI
+    let mut s = NetSpec::mnist();
+    s.trunk.truncate(16);
+    s.t_final = 1.0;
+    Arc::new(s)
+}
+
+#[test]
+fn mg_training_matches_serial_training_accuracy() {
+    let spec = small_mnist_spec();
+    let data = SyntheticDigits::new(90).dataset(240);
+    let steps = 60;
+
+    let run = |method: Method, seed: u64| -> (f64, Vec<f64>) {
+        let mut params = NetParams::init(&spec, seed).unwrap();
+        let cfg = TrainConfig { steps, batch: 16, lr: 0.08, method, seed: 91 };
+        let spec2 = spec.clone();
+        let logs = train::train(&spec, &mut params, &data, &cfg, move |p| {
+            HostSolver::new(spec2.clone(), Arc::new(p.clone()))
+        })
+        .unwrap();
+        let exec = HostSolver::new(spec.clone(), Arc::new(params)).unwrap();
+        let err = train::top1_error(&spec, &exec, &data, 16, 10).unwrap();
+        (err, logs.iter().map(|l| l.loss).collect())
+    };
+
+    let (serial_err, serial_losses) = run(Method::Serial, 92);
+    let (mg_err, mg_losses) = run(Method::Mgrit { cycles: 2 }, 92);
+
+    // both must actually learn
+    assert!(serial_err < 0.30, "serial top-1 error {serial_err}");
+    assert!(mg_err < 0.30, "MG top-1 error {mg_err}");
+    // the paper's parity claim: approximately the same error
+    assert!(
+        (serial_err - mg_err).abs() < 0.12,
+        "accuracy parity violated: serial {serial_err} vs MG {mg_err}"
+    );
+    // loss curves track each other from identical init/seeds
+    let last_serial = serial_losses.last().unwrap();
+    let last_mg = mg_losses.last().unwrap();
+    assert!(
+        (last_serial - last_mg).abs() < 0.5,
+        "final losses diverged: {last_serial} vs {last_mg}"
+    );
+}
+
+#[test]
+fn one_cycle_training_degrades_gracefully() {
+    // fewer cycles → worse state estimates → training still works but the
+    // gradient error is visibly larger (ablation of the early-stopping knob)
+    let spec = small_mnist_spec();
+    let data = SyntheticDigits::new(93).dataset(120);
+    let params = NetParams::init(&spec, 94).unwrap();
+    let exec = HostSolver::new(spec.clone(), Arc::new(params.clone())).unwrap();
+    let (y, labels) = data.batch(&(0..8).collect::<Vec<_>>()).unwrap();
+
+    let (_, g_exact, _) =
+        train::loss_and_grads(&spec, &params, &exec, &y, &labels, Method::Serial).unwrap();
+    let (_, g1, _) =
+        train::loss_and_grads(&spec, &params, &exec, &y, &labels, Method::Mgrit { cycles: 1 })
+            .unwrap();
+    let (_, g2, _) =
+        train::loss_and_grads(&spec, &params, &exec, &y, &labels, Method::Mgrit { cycles: 2 })
+            .unwrap();
+
+    let err = |g: &resnet_mgrit::model::params::NetGrads| {
+        resnet_mgrit::util::stats::rel_l2_err(g.w_fc.data(), g_exact.w_fc.data())
+    };
+    assert!(err(&g2) <= err(&g1), "2 cycles must beat 1: {} vs {}", err(&g2), err(&g1));
+    assert!(err(&g2) < 0.05, "2-cycle head grad error {}", err(&g2));
+}
+
+#[test]
+fn pjrt_backend_trains() {
+    // the full three-layer stack: Pallas-kernel artifacts under the MG
+    // training loop (micro preset, a few steps)
+    let spec = Arc::new(NetSpec::micro());
+    let mut params = NetParams::init(&spec, 95).unwrap();
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let store = std::rc::Rc::new(
+        resnet_mgrit::runtime::ArtifactStore::open(dir).expect("run `make artifacts`"),
+    );
+    // micro images are 6x6: render 28x28 digits downscaled by stride-sampling
+    let big = SyntheticDigits::new(96).dataset(40);
+    let mut images = Vec::new();
+    for img in &big.images {
+        let mut small = vec![0.0f32; 36];
+        for y in 0..6 {
+            for x in 0..6 {
+                small[y * 6 + x] = img.data()[(y * 4 + 2) * 28 + (x * 4 + 2)];
+            }
+        }
+        images.push(resnet_mgrit::tensor::Tensor::new(vec![1, 1, 6, 6], small).unwrap());
+    }
+    let data = resnet_mgrit::data::Dataset { images, labels: big.labels.clone() };
+
+    let cfg = TrainConfig { steps: 4, batch: 2, lr: 0.05, method: Method::Mgrit { cycles: 2 }, seed: 97 };
+    let spec2 = spec.clone();
+    let store2 = store.clone();
+    let logs = train::train(&spec, &mut params, &data, &cfg, move |p| {
+        resnet_mgrit::solver::pjrt::PjrtSolver::new(
+            store2.clone(),
+            spec2.clone(),
+            Arc::new(p.clone()),
+            2,
+        )
+    })
+    .unwrap();
+    assert_eq!(logs.len(), 4);
+    for l in &logs {
+        assert!(l.loss.is_finite() && l.loss > 0.0);
+        assert!(l.grad_norm.is_finite() && l.grad_norm > 0.0);
+    }
+}
