@@ -50,7 +50,7 @@ fn main() -> resnet_mgrit::Result<()> {
         let spec2 = spec.clone();
         let params2 = params.clone();
         let factory = move |_w: usize| HostSolver::new(spec2.clone(), params2.clone());
-        let driver = ParallelMgrit::new(factory, hier.clone(), n_dev, 1)?;
+        let driver = ParallelMgrit::new(factory, spec.clone(), hier.clone(), n_dev, 1)?;
         let opts = MgritOptions { max_cycles: 2, tol: 0.0, ..Default::default() };
         let t = Timer::start();
         let (mg, _, _) = driver.solve(&u0, &opts)?;

@@ -24,9 +24,23 @@ fn main() -> resnet_mgrit::Result<()> {
     let steps = args.usize_or("steps", 200)?;
     let batch = args.usize_or("batch", 16)?;
     let lr = args.f64_or("lr", 0.05)? as f32;
-    let backend = args.get_or("backend", "pjrt").to_string();
+    let mut backend = args.get_or("backend", "pjrt").to_string();
     let epochs = 4usize;
     let steps_per_epoch = steps / epochs;
+
+    // PJRT store is created once and shared across both runs; when the
+    // artifacts were never exported (or no PJRT runtime is linked) this
+    // degrades gracefully to the host solver with a warning
+    let store = if backend == "pjrt" {
+        let s = resnet_mgrit::runtime::ArtifactStore::open_or_fallback("artifacts")
+            .map(std::rc::Rc::new);
+        if s.is_none() {
+            backend = "host".to_string();
+        }
+        s
+    } else {
+        None
+    };
 
     let spec = Arc::new(NetSpec::mnist());
     let (data, source) = mnist::load_or_synthesize(std::path::Path::new("data"), 600, 7)?;
@@ -37,13 +51,6 @@ fn main() -> resnet_mgrit::Result<()> {
         data.len()
     );
     println!("{steps} steps = {epochs} epochs × {steps_per_epoch}, batch {batch}, lr {lr}\n");
-
-    // PJRT store is created once and shared across both runs
-    let store = if backend == "pjrt" {
-        Some(std::rc::Rc::new(resnet_mgrit::runtime::ArtifactStore::open("artifacts")?))
-    } else {
-        None
-    };
 
     let run = |label: &str, method: Method| -> resnet_mgrit::Result<Vec<(usize, f64, f64)>> {
         let mut params = NetParams::init(&spec, 123)?; // same init for both

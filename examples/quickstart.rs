@@ -57,7 +57,7 @@ fn main() -> resnet_mgrit::Result<()> {
     let hier = Hierarchy::two_level(n, h, spec.coarsen)?;
     let spec2 = spec.clone();
     let factory = move |_w: usize| HostSolver::new(spec2.clone(), params.clone());
-    let driver = ParallelMgrit::new(factory, hier, 4, (spec.state_elems() * 4) as u64)?;
+    let driver = ParallelMgrit::new(factory, spec.clone(), hier, 4, 1)?;
     let opts = MgritOptions { max_cycles: 3, tol: 0.0, ..Default::default() };
     let (par, _, metrics) = driver.solve(&u0, &opts)?;
     let err = rel_l2_err(par.last().unwrap().data(), serial.last().unwrap().data());

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use resnet_mgrit::coordinator::Partition;
+use resnet_mgrit::coordinator::{ParallelMgrit, Partition};
 use resnet_mgrit::mgrit::{self, hierarchy::Hierarchy, taskgraph, MgritOptions};
 use resnet_mgrit::model::{NetParams, NetSpec};
 use resnet_mgrit::perfmodel::ClusterModel;
@@ -53,6 +53,24 @@ fn main() {
     suite.bench("serial_fprop_mnist_b1", || {
         black_box(solver.block_fprop(0, 1, 32, spec.h(), &u0).unwrap());
     });
+
+    // the dependency-driven DAG executor: one MGRIT cycle fanned out over
+    // 4 worker threads (barrier-free schedule, bit-identical numerics)
+    {
+        let spec2 = Arc::new(NetSpec::mnist());
+        let params2 = Arc::new(NetParams::init(&spec2, 2).unwrap());
+        let sp = spec2.clone();
+        let factory = move |_w: usize| HostSolver::new(sp.clone(), params2.clone());
+        let hier = Hierarchy::two_level(32, spec2.h(), 4).unwrap();
+        let driver = ParallelMgrit::new(factory, spec2, hier, 4, 1).unwrap();
+        suite.bench("dag_executor_cycle_mnist_b1_4dev", || {
+            black_box(driver.solve(&u0, &opts).unwrap());
+        });
+        // graph construction itself (built once per solve)
+        suite.bench("build_mnist_vcycle_graph", || {
+            black_box(driver.cycle_graph(&opts));
+        });
+    }
 
     // simulator throughput on the fig6 2-cycle schedule at 24 GPUs
     let fig6 = NetSpec::fig6();

@@ -1,30 +1,37 @@
-//! The phase-parallel MGRIT driver: executes the FAS cycle with every
-//! per-block primitive fanned out to the stream pool, per-phase barriers
-//! (the CUDA-stream-sync analogue), and explicit accounting of the
-//! activation traffic that crosses device partitions (the paper's MPI
-//! communication during C-relaxation).
+//! The dependency-driven MGRIT driver: builds the executable schedule DAG
+//! (`mgrit::taskgraph::mg_vcycle`) once per solve and runs it per cycle on
+//! the [`executor`](super::executor) — tasks dispatch to `StreamPool` workers
+//! the moment their dependencies retire, with **no per-phase barriers**:
+//! C-relaxation and residual work of one partition overlap F-relaxation of
+//! another (the paper's kernel-concurrency property, Fig 5), and the
+//! simulator (`sim::engine`) consumes the *identical* graph, so simulated
+//! and real schedules cannot drift.
 //!
-//! The driver produces *numerically identical* results to the serial engine
-//! in `mgrit::fas` — asserted by `tests/mgrit_integration.rs` — because each
-//! point update performs the same operations on the same inputs; only the
-//! execution order across independent blocks differs.
+//! The driver produces *bit-identical* results to the serial engine in
+//! `mgrit::fas` — asserted by `tests/mgrit_integration.rs` — because each
+//! task performs the same f32 operations in the same order on the same
+//! inputs, and the graph encodes every read/write hazard; only the execution
+//! order across independent tasks differs. Activation traffic that crosses
+//! device partitions (the paper's MPI communication during C-relaxation) is
+//! accounted through the graph's Comm tasks.
 
-use std::sync::mpsc::channel;
+use std::sync::Arc;
 
-use anyhow::anyhow;
-
+use super::executor::{self, ExecState};
 use super::partition::Partition;
 use super::streams::StreamPool;
-use crate::mgrit::fas::{CycleStats, LevelState, MgritOptions, RelaxKind};
+use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::solver::{BlockSolver, SolverFactory};
+use crate::mgrit::taskgraph;
+use crate::model::NetSpec;
+use crate::solver::SolverFactory;
 use crate::tensor::Tensor;
 use crate::Result;
 
 /// Metrics of one parallel solve (feeds Fig 5/6-style reporting for real runs).
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
-    /// (phase label, wall seconds) in execution order.
+    /// (task label, accumulated worker-busy seconds).
     pub phases: Vec<(&'static str, f64)>,
     /// Activation bytes that crossed a device boundary.
     pub comm_bytes: u64,
@@ -37,7 +44,7 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
-    /// Total seconds across phases.
+    /// Total busy seconds across phases.
     pub fn total_s(&self) -> f64 {
         self.phases.iter().map(|(_, s)| s).sum()
     }
@@ -48,27 +55,31 @@ impl RunMetrics {
     }
 }
 
-/// Phase-parallel MGRIT over a stream pool.
+/// Dependency-driven parallel MGRIT over a stream pool.
 pub struct ParallelMgrit<F: SolverFactory> {
     pool: StreamPool<F>,
+    spec: Arc<NetSpec>,
+    batch: usize,
     hier: Hierarchy,
     partition: Partition,
-    /// Bytes of one layer state (for comm accounting).
-    state_bytes: u64,
 }
 
 impl<F: SolverFactory> ParallelMgrit<F> {
-    /// `n_devices` workers over the hierarchy's fine-level blocks.
+    /// `n_devices` workers over the hierarchy's fine-level blocks. `spec`
+    /// provides the cost/traffic annotations of the schedule DAG (shared
+    /// with the simulator); `batch` is the leading dimension of the states
+    /// this driver will solve for.
     pub fn new(
         factory: F,
+        spec: Arc<NetSpec>,
         hier: Hierarchy,
         n_devices: usize,
-        state_bytes: u64,
+        batch: usize,
     ) -> Result<ParallelMgrit<F>> {
         let n_blocks = hier.fine().blocks(hier.coarsen).len();
         let partition = Partition::contiguous(n_blocks, n_devices)?;
         let pool = StreamPool::new(partition.n_devices(), factory)?;
-        Ok(ParallelMgrit { pool, hier, partition, state_bytes })
+        Ok(ParallelMgrit { pool, spec, batch, hier, partition })
     }
 
     pub fn partition(&self) -> &Partition {
@@ -83,332 +94,64 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         &self.hier
     }
 
-    /// Device owning point `j` of level `level` (via its fine-level block).
-    fn device_of_point(&self, level: usize, j: usize) -> usize {
-        let fine_idx = j * self.hier.levels[level].stride;
-        let block = (fine_idx / self.hier.coarsen).min(self.partition.n_blocks() - 1);
-        self.partition.device_of(block)
+    /// The executable V-cycle schedule this driver runs each MG iteration —
+    /// the same graph `sim::simulate` scores (Fig 5/6 consistency).
+    pub fn cycle_graph(&self, opts: &MgritOptions) -> taskgraph::TaskGraph {
+        taskgraph::mg_vcycle(&self.spec, &self.hier, &self.partition, self.batch, opts.relax)
     }
 
-    /// Record a transfer if `src` and `dst` devices differ.
-    fn account_comm(&self, m: &mut RunMetrics, src: usize, dst: usize) {
-        if src != dst {
-            m.comm_bytes += self.state_bytes;
-            m.comm_events += 1;
-        }
-    }
-
-    /// Fan a set of jobs out to the pool and gather results in input order.
-    /// Each job is (worker, closure). A barrier: returns when all complete.
-    fn run_jobs<T: Send + 'static>(
-        &self,
-        label: &'static str,
-        jobs: Vec<(usize, Box<dyn FnOnce(&F::Solver) -> Result<T> + Send>)>,
-    ) -> Result<Vec<T>> {
-        let n = jobs.len();
-        let (tx, rx) = channel::<(usize, Result<T>)>();
-        for (idx, (worker, job)) in jobs.into_iter().enumerate() {
-            let tx = tx.clone();
-            self.pool.submit(worker, label, move |solver| {
-                let _ = tx.send((idx, job(solver)));
-            })?;
-        }
-        drop(tx);
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        for (idx, res) in rx.iter().take(n) {
-            out[idx] = Some(res?);
-        }
-        out.into_iter()
-            .enumerate()
-            .map(|(i, v)| v.ok_or_else(|| anyhow!("job {i} of phase {label} never reported")))
-            .collect()
-    }
-
-    /// Parallel F-relaxation on one level: every block's F-point run is one
-    /// job on the block's device.
-    fn f_relax_phase(
-        &self,
-        level: usize,
-        st: &mut LevelState,
+    /// Fold one execution report into the run metrics. `state_bytes` is the
+    /// size of one layer state actually being solved for (from `u0`), so the
+    /// traffic ledger reflects the real tensors, not the construction-time
+    /// batch hint.
+    fn absorb(
         m: &mut RunMetrics,
-    ) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let lvl = self.hier.levels[level].clone();
-        let c = self.hier.coarsen;
-        let mut jobs: Vec<(usize, Box<dyn FnOnce(&F::Solver) -> Result<Vec<Tensor>> + Send>)> =
-            Vec::new();
-        let mut spans = Vec::new();
-        for b in lvl.blocks(c) {
-            if b.n_fpoints() == 0 {
-                continue;
-            }
-            let worker = self.device_of_point(level, b.cpoint);
-            let u0 = st.u[b.cpoint].clone();
-            let g: Option<Vec<Tensor>> =
-                st.g.as_ref().map(|g| g[b.cpoint + 1..=b.f_end].to_vec());
-            let lvl2 = lvl.clone();
-            let count = b.n_fpoints();
-            let start_theta = lvl.theta_idx(b.cpoint);
-            let stride = lvl.stride;
-            spans.push(b);
-            jobs.push((
-                worker,
-                Box::new(move |solver: &F::Solver| {
-                    match g {
-                        // fine level (g ≡ 0): the block artifact fast-path
-                        None => solver.block_fprop(start_theta, stride, count, lvl2.h, &u0),
-                        // FAS levels: per-point update u = Φ(u_prev) + g
-                        Some(g) => {
-                            let mut states = Vec::with_capacity(count);
-                            let mut u = u0;
-                            for (j, gj) in g.iter().enumerate() {
-                                let mut v =
-                                    solver.step(start_theta + j * stride, lvl2.h, &u)?;
-                                v.axpy(1.0, gj)?;
-                                states.push(v.clone());
-                                u = v;
-                            }
-                            Ok(states)
-                        }
-                    }
-                }),
-            ));
-        }
-        let results = self.run_jobs("f_relax", jobs)?;
-        for (b, states) in spans.into_iter().zip(results) {
-            for (off, v) in states.into_iter().enumerate() {
-                st.u[b.cpoint + 1 + off] = v;
-            }
-        }
-        m.phases.push(("f_relax", t0.elapsed().as_secs_f64()));
-        Ok(())
+        rep: &executor::ExecReport,
+        stats: &mut CycleStats,
+        state_bytes: u64,
+    ) {
+        m.comm_events += rep.comm_events;
+        m.comm_bytes += rep.comm_events as u64 * state_bytes;
+        stats.phi_evals += rep.phi_evals;
+        executor::merge_phases(&mut m.phases, &rep.phase_s);
     }
 
-    /// Parallel C-relaxation: each C-point updates from the preceding
-    /// F-point, which lives on the *previous* block — the phase that incurs
-    /// boundary communication in the paper's MPI implementation.
-    fn c_relax_phase(
-        &self,
-        level: usize,
-        st: &mut LevelState,
-        m: &mut RunMetrics,
-    ) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let lvl = self.hier.levels[level].clone();
-        let c = self.hier.coarsen;
-        let mut jobs: Vec<(usize, Box<dyn FnOnce(&F::Solver) -> Result<Tensor> + Send>)> =
-            Vec::new();
-        let mut points = Vec::new();
-        for cp in lvl.cpoints(c) {
-            if cp == 0 {
-                continue;
-            }
-            let dst = self.device_of_point(level, cp);
-            let src = self.device_of_point(level, cp - 1);
-            self.account_comm(m, src, dst);
-            let u_prev = st.u[cp - 1].clone();
-            let g = st.g.as_ref().map(|g| g[cp].clone());
-            let theta = lvl.theta_idx(cp - 1);
-            let h = lvl.h;
-            points.push(cp);
-            jobs.push((
-                dst,
-                Box::new(move |solver: &F::Solver| {
-                    let mut v = solver.step(theta, h, &u_prev)?;
-                    if let Some(gj) = g {
-                        v.axpy(1.0, &gj)?;
-                    }
-                    Ok(v)
-                }),
-            ));
-        }
-        let results = self.run_jobs("c_relax", jobs)?;
-        for (cp, v) in points.into_iter().zip(results) {
-            st.u[cp] = v;
-        }
-        m.phases.push(("c_relax", t0.elapsed().as_secs_f64()));
-        Ok(())
-    }
-
-    /// Parallel residual computation at all C-points > 0.
-    fn residual_phase(
-        &self,
-        level: usize,
-        st: &LevelState,
-        m: &mut RunMetrics,
-    ) -> Result<Vec<Tensor>> {
-        let t0 = std::time::Instant::now();
-        let lvl = self.hier.levels[level].clone();
-        let c = self.hier.coarsen;
-        let mut jobs: Vec<(usize, Box<dyn FnOnce(&F::Solver) -> Result<Tensor> + Send>)> =
-            Vec::new();
-        for cp in lvl.cpoints(c) {
-            if cp == 0 {
-                continue;
-            }
-            let dst = self.device_of_point(level, cp);
-            let src = self.device_of_point(level, cp - 1);
-            self.account_comm(m, src, dst);
-            let u_prev = st.u[cp - 1].clone();
-            let u_cur = st.u[cp].clone();
-            let g = st.g.as_ref().map(|g| g[cp].clone());
-            let theta = lvl.theta_idx(cp - 1);
-            let h = lvl.h;
-            jobs.push((
-                dst,
-                Box::new(move |solver: &F::Solver| {
-                    let mut r = solver.step(theta, h, &u_prev)?;
-                    if let Some(gj) = g {
-                        r.axpy(1.0, &gj)?;
-                    }
-                    r.axpy(-1.0, &u_cur)?;
-                    Ok(r)
-                }),
-            ));
-        }
-        let res = self.run_jobs("residual", jobs)?;
-        m.phases.push(("residual", t0.elapsed().as_secs_f64()));
-        Ok(res)
-    }
-
-    /// Parallel restriction: build the coarse FAS right-hand side from the
-    /// residuals (already computed) and the injected C-point states.
-    fn restrict_phase(
-        &self,
-        level: usize,
-        st: &LevelState,
-        residuals: Vec<Tensor>,
-        m: &mut RunMetrics,
-    ) -> Result<(LevelState, Vec<Tensor>)> {
-        let t0 = std::time::Instant::now();
-        let c = self.hier.coarsen;
-        let coarse = self.hier.levels[level + 1].clone();
-        let injected: Vec<Tensor> =
-            (0..coarse.n_points).map(|j| st.u[j * c].clone()).collect();
-        let mut jobs: Vec<(usize, Box<dyn FnOnce(&F::Solver) -> Result<Tensor> + Send>)> =
-            Vec::new();
-        for j in 1..coarse.n_points {
-            let dst = self.device_of_point(level + 1, j);
-            let src = self.device_of_point(level + 1, j - 1);
-            self.account_comm(m, src, dst);
-            let inj_prev = injected[j - 1].clone();
-            let inj_cur = injected[j].clone();
-            let mut r = residuals[j - 1].clone(); // residual at fine point j·c
-            let theta = coarse.theta_idx(j - 1);
-            let h = coarse.h;
-            jobs.push((
-                dst,
-                Box::new(move |solver: &F::Solver| {
-                    let phi = solver.step(theta, h, &inj_prev)?;
-                    r.axpy(1.0, &inj_cur)?;
-                    r.axpy(-1.0, &phi)?;
-                    Ok(r)
-                }),
-            ));
-        }
-        let mut g = vec![Tensor::zeros(injected[0].dims())];
-        g.extend(self.run_jobs("restrict", jobs)?);
-        m.phases.push(("restrict", t0.elapsed().as_secs_f64()));
-        Ok((LevelState { u: injected.clone(), g: Some(g) }, injected))
-    }
-
-    /// Exact coarsest-level solve: sequential forward substitution. In the
-    /// distributed schedule this pipelines device-to-device in place (one
-    /// boundary transfer per partition crossing); the local execution runs
-    /// it on worker 0, and the comm ledger records the pipeline crossings.
-    fn coarse_solve_phase(
-        &self,
-        level: usize,
-        st: &mut LevelState,
-        m: &mut RunMetrics,
-    ) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let lvl = self.hier.levels[level].clone();
-        // pipeline crossings: one transfer per device boundary in the chain
-        for j in 1..lvl.n_points {
-            let src = self.device_of_point(level, j - 1);
-            let dst = self.device_of_point(level, j);
-            self.account_comm(m, src, dst);
-        }
-        let u0 = st.u[0].clone();
-        let g = st.g.clone();
-        let n = lvl.n_points;
-        let mut results = self.run_jobs(
-            "coarse_solve",
-            vec![(
-                0usize,
-                Box::new(move |solver: &F::Solver| {
-                    let mut u = vec![u0];
-                    for j in 1..n {
-                        let mut v = solver.step(lvl.theta_idx(j - 1), lvl.h, &u[j - 1])?;
-                        if let Some(g) = &g {
-                            v.axpy(1.0, &g[j])?;
-                        }
-                        u.push(v);
-                    }
-                    Ok(u)
-                }) as Box<dyn FnOnce(&F::Solver) -> Result<Vec<Tensor>> + Send>,
-            )],
-        )?;
-        st.u = results.pop().unwrap();
-        m.phases.push(("coarse_solve", t0.elapsed().as_secs_f64()));
-        Ok(())
-    }
-
-    /// One parallel V-cycle on `level` (recursive).
-    fn vcycle(
-        &self,
-        level: usize,
-        st: &mut LevelState,
-        opts: &MgritOptions,
-        m: &mut RunMetrics,
-    ) -> Result<()> {
-        if level == self.hier.n_levels() - 1 {
-            return self.coarse_solve_phase(level, st, m);
-        }
-        match opts.relax {
-            RelaxKind::F => self.f_relax_phase(level, st, m)?,
-            RelaxKind::FC => {
-                self.f_relax_phase(level, st, m)?;
-                self.c_relax_phase(level, st, m)?;
-            }
-            RelaxKind::FCF => {
-                self.f_relax_phase(level, st, m)?;
-                self.c_relax_phase(level, st, m)?;
-                self.f_relax_phase(level, st, m)?;
-            }
-        }
-        let residuals = self.residual_phase(level, st, m)?;
-        let (mut coarse_st, injected) = self.restrict_phase(level, st, residuals, m)?;
-        self.vcycle(level + 1, &mut coarse_st, opts, m)?;
-        // correction is element-wise on C-points — negligible, done inline
-        crate::mgrit::fas::correct(st, &coarse_st, &injected, self.hier.coarsen)?;
-        self.f_relax_phase(level, st, m)?;
-        Ok(())
-    }
-
-    /// Full parallel MGRIT solve (same contract as `mgrit::solve_forward`).
+    /// Full parallel MGRIT solve (same contract as `mgrit::solve_forward`):
+    /// V-cycles until `opts.tol` or `opts.max_cycles`, convergence measured
+    /// as ‖R_h‖ over the fine C-points.
     pub fn solve(
         &self,
         u0: &Tensor,
         opts: &MgritOptions,
     ) -> Result<(Vec<Tensor>, CycleStats, RunMetrics)> {
-        let fine_points = self.hier.fine().n_points;
-        let mut st = LevelState::initial(u0, fine_points);
+        let cycle = self.cycle_graph(opts);
+        let check =
+            taskgraph::residual_check(&self.spec, &self.hier, &self.partition, self.batch);
+        let state_bytes = 4 * u0.len() as u64;
+        let mut st = ExecState::initial(&self.hier, u0);
         let mut metrics = RunMetrics::default();
-        let mut stats = CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
+        let mut stats =
+            CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
         for _ in 0..opts.max_cycles {
-            self.vcycle(0, &mut st, opts, &mut metrics)?;
+            let rep = executor::execute(&self.pool, &self.hier, &cycle, &mut st)?;
+            Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
             metrics.cycles += 1;
-            let rs = self.residual_phase(0, &st, &mut metrics)?;
-            let norm = {
-                let mut acc = 0.0;
-                for r in &rs {
-                    let n = r.l2_norm();
-                    acc += n * n;
+            // convergence check: residual at every fine C-point (same
+            // arithmetic + accumulation order as the serial engine)
+            let rep = executor::execute(&self.pool, &self.hier, &check, &mut st)?;
+            Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
+            let mut acc = 0.0f64;
+            for cp in self.hier.fine().cpoints(self.hier.coarsen) {
+                if cp == 0 {
+                    continue;
                 }
-                acc.sqrt()
-            };
+                let r = st
+                    .residual(0, cp)
+                    .ok_or_else(|| anyhow::anyhow!("residual at C-point {cp} missing"))?;
+                let n = r.l2_norm();
+                acc += n * n;
+            }
+            let norm = acc.sqrt();
             stats.residual_norms.push(norm);
             metrics.residual_norms.push(norm);
             if norm <= opts.tol {
@@ -416,7 +159,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
                 break;
             }
         }
-        Ok((st.u, stats, metrics))
+        Ok((st.into_fine_states(), stats, metrics))
     }
 }
 
@@ -427,15 +170,14 @@ mod tests {
     use crate::solver::host::HostSolver;
     use std::sync::Arc;
 
-    fn factory(spec: NetSpec, seed: u64) -> impl SolverFactory<Solver = HostSolver> {
-        let spec = Arc::new(spec);
+    fn factory(spec: Arc<NetSpec>, seed: u64) -> impl SolverFactory<Solver = HostSolver> {
         let params = Arc::new(NetParams::init(&spec, seed).unwrap());
         move |_w: usize| HostSolver::new(spec.clone(), params.clone())
     }
 
     #[test]
     fn parallel_equals_serial_engine() {
-        let spec = NetSpec::mnist();
+        let spec = Arc::new(NetSpec::mnist());
         let h = spec.h();
         let f = factory(spec.clone(), 50);
         let solver = f.build(0).unwrap();
@@ -448,7 +190,8 @@ mod tests {
             crate::mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts).unwrap();
 
         for n_dev in [1usize, 2, 4] {
-            let drv = ParallelMgrit::new(f.clone(), hier.clone(), n_dev, 4 * 6272).unwrap();
+            let drv =
+                ParallelMgrit::new(f.clone(), spec.clone(), hier.clone(), n_dev, 1).unwrap();
             let (par, _, metrics) = drv.solve(&u0, &opts).unwrap();
             assert_eq!(par.len(), serial.len());
             for (a, b) in par.iter().zip(&serial) {
@@ -465,16 +208,17 @@ mod tests {
 
     #[test]
     fn comm_scales_with_devices() {
-        let spec = NetSpec::mnist();
+        let spec = Arc::new(NetSpec::mnist());
         let h = spec.h();
-        let f = factory(spec, 52);
+        let f = factory(spec.clone(), 52);
         let mut rng = crate::util::prng::Rng::new(53);
         let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
         let opts = MgritOptions { tol: 0.0, max_cycles: 1, ..Default::default() };
         let hier = Hierarchy::two_level(32, h, 4).unwrap();
         let mut prev = 0u64;
         for n_dev in [2usize, 4, 8] {
-            let drv = ParallelMgrit::new(f.clone(), hier.clone(), n_dev, 100).unwrap();
+            let drv =
+                ParallelMgrit::new(f.clone(), spec.clone(), hier.clone(), n_dev, 1).unwrap();
             let (_, _, m) = drv.solve(&u0, &opts).unwrap();
             assert!(m.comm_bytes >= prev, "comm should grow with devices");
             prev = m.comm_bytes;
@@ -483,19 +227,20 @@ mod tests {
 
     #[test]
     fn metrics_record_phases() {
-        let spec = NetSpec::micro();
+        let spec = Arc::new(NetSpec::micro());
         let h = spec.h();
-        let f = factory(spec, 54);
+        let f = factory(spec.clone(), 54);
         let mut rng = crate::util::prng::Rng::new(55);
         let u0 = Tensor::randn(&[1, 2, 6, 6], 0.5, &mut rng);
         let hier = Hierarchy::two_level(4, h, 2).unwrap();
-        let drv = ParallelMgrit::new(f, hier, 2, 10).unwrap();
+        let drv = ParallelMgrit::new(f, spec, hier, 2, 1).unwrap();
         let opts = MgritOptions { tol: 0.0, max_cycles: 2, ..Default::default() };
         let (_, _, m) = drv.solve(&u0, &opts).unwrap();
         assert_eq!(m.cycles, 2);
         assert!(m.phase_s("f_relax") > 0.0);
         assert!(m.phase_s("c_relax") > 0.0);
         assert!(m.phase_s("coarse_solve") > 0.0);
+        assert!(m.phase_s("residual") > 0.0);
         assert!(m.total_s() > 0.0);
         assert_eq!(m.residual_norms.len(), 2);
     }
@@ -504,13 +249,13 @@ mod tests {
     fn trace_shows_concurrent_blocks() {
         // with ≥2 devices the pool trace must contain f_relax events from
         // different workers (the Fig 5 concurrency property on a real run)
-        let spec = NetSpec::mnist();
+        let spec = Arc::new(NetSpec::mnist());
         let h = spec.h();
-        let f = factory(spec, 56);
+        let f = factory(spec.clone(), 56);
         let mut rng = crate::util::prng::Rng::new(57);
         let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
         let hier = Hierarchy::two_level(32, h, 4).unwrap();
-        let drv = ParallelMgrit::new(f, hier, 4, 10).unwrap();
+        let drv = ParallelMgrit::new(f, spec, hier, 4, 1).unwrap();
         let opts = MgritOptions { tol: 0.0, max_cycles: 1, ..Default::default() };
         drv.solve(&u0, &opts).unwrap();
         let trace = drv.pool().trace();
@@ -520,5 +265,39 @@ mod tests {
             .map(|e| e.worker)
             .collect();
         assert!(workers.len() >= 2, "expected multi-worker f_relax, got {workers:?}");
+    }
+
+    #[test]
+    fn dag_executor_overlaps_phases() {
+        // the tentpole property: no per-phase barrier — some C-relax or
+        // residual task must START before the last F-relax task of another
+        // partition ENDS (cross-phase, cross-device overlap)
+        let spec = Arc::new(NetSpec::fig6_depth(64));
+        let h = spec.h();
+        let f = factory(spec.clone(), 58);
+        let mut rng = crate::util::prng::Rng::new(59);
+        let u0 = Tensor::randn(&[1, 4, 24, 24], 0.5, &mut rng);
+        let hier = Hierarchy::two_level(64, h, 4).unwrap();
+        let drv = ParallelMgrit::new(f, spec, hier, 4, 1).unwrap();
+        let opts = MgritOptions { tol: 0.0, max_cycles: 1, ..Default::default() };
+        drv.solve(&u0, &opts).unwrap();
+        let trace = drv.pool().trace();
+        // an f_relax task must be IN FLIGHT (started before, ended after) on
+        // another worker at the moment a c_relax/residual task starts — a
+        // barriered executor can never produce this pair, because barriers
+        // force every f_relax of a sweep to finish before c_relax begins and
+        // the cycle-final f_relax to start only after the residuals end
+        let overlap = trace
+            .iter()
+            .filter(|c| c.label == "c_relax" || c.label == "residual")
+            .any(|c| {
+                trace.iter().any(|fr| {
+                    fr.label == "f_relax"
+                        && fr.worker != c.worker
+                        && fr.t_start < c.t_start
+                        && fr.t_end > c.t_start
+                })
+            });
+        assert!(overlap, "no cross-phase overlap observed in the stream trace");
     }
 }

@@ -1,0 +1,377 @@
+//! The dependency-driven task-graph executor: runs an executable
+//! [`TaskGraph`] on real tensors over a [`StreamPool`], dispatching each task
+//! to its device's worker the moment its dependencies retire.
+//!
+//! This replaces the old per-phase barriers: C-relaxation and residual work
+//! of one partition overlap F-relaxation of another, exactly as in the
+//! simulated schedule (the paper's kernel-concurrency argument, Fig 5).
+//!
+//! ## Dependency-retirement protocol
+//!
+//! 1. in-degrees are counted per task; zero-degree tasks enter the ready set;
+//! 2. ready **Comm** tasks retire immediately on the scheduler thread (local
+//!    execution only *accounts* the transfer — the tensors share memory);
+//! 3. ready **Kernel** tasks clone their input slots out of [`ExecState`]
+//!    (the scheduler thread is the only state owner, so no locks), and are
+//!    submitted to the worker owning `task.device`;
+//! 4. each completion ([`JobDone`]) writes the task's single output slot
+//!    back, decrements its dependents' counters, and pushes newly-ready
+//!    tasks — completion order is irrelevant because the graph carries
+//!    RAW/WAR/WAW edges for every slot (see `mgrit::taskgraph`);
+//! 5. the run ends when every task has retired; a non-executable task
+//!    (`op == None`) or an exhausted ready set with nothing in flight is an
+//!    error, not a hang.
+//!
+//! Because each op performs the same f32 arithmetic in the same order as the
+//! serial engine (`mgrit::fas`), any topological execution is bit-identical
+//! to the serial solve — asserted by `tests/mgrit_integration.rs`.
+
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, bail};
+
+use super::streams::{JobDone, StreamPool};
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind, TaskOp};
+use crate::solver::{BlockSolver, SolverFactory};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// The live MGRIT state the executor reads and writes: per level, the layer
+/// states `u`, the FAS right-hand sides `g`, the C-point residuals `r`, and
+/// the injection snapshots the correction consumes.
+#[derive(Debug)]
+pub struct ExecState {
+    pub u: Vec<Vec<Tensor>>,
+    g: Vec<Option<Vec<Tensor>>>,
+    r: Vec<Vec<Option<Tensor>>>,
+    inj: Vec<Vec<Option<Tensor>>>,
+}
+
+impl ExecState {
+    /// Initial fine-level guess: every point of every level seeded with `u0`
+    /// (same constant-in-depth guess as `LevelState::initial`); coarse
+    /// right-hand sides start at zero.
+    pub fn initial(hier: &Hierarchy, u0: &Tensor) -> ExecState {
+        let u: Vec<Vec<Tensor>> =
+            hier.levels.iter().map(|l| vec![u0.clone(); l.n_points]).collect();
+        let g = hier
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if i == 0 {
+                    None
+                } else {
+                    Some(vec![Tensor::zeros(u0.dims()); l.n_points])
+                }
+            })
+            .collect();
+        let r = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
+        let inj = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
+        ExecState { u, g, r, inj }
+    }
+
+    /// Residual tensor at `(level, j)` if computed this run.
+    pub fn residual(&self, level: usize, j: usize) -> Option<&Tensor> {
+        self.r[level][j].as_ref()
+    }
+
+    /// Consume the state, returning the fine-level trajectory.
+    pub fn into_fine_states(mut self) -> Vec<Tensor> {
+        self.u.swap_remove(0)
+    }
+}
+
+/// Aggregate record of one graph execution.
+#[derive(Debug, Default, Clone)]
+pub struct ExecReport {
+    /// Boundary transfers retired (each is one activation crossing devices).
+    pub comm_events: usize,
+    /// Kernel tasks executed.
+    pub kernels: usize,
+    /// Φ applications performed (the solve's work measure).
+    pub phi_evals: usize,
+    /// Per-label worker-busy seconds, in first-seen order.
+    pub phase_s: Vec<(&'static str, f64)>,
+}
+
+impl ExecReport {
+    fn add_phase(&mut self, label: &'static str, secs: f64) {
+        merge_phases(&mut self.phase_s, &[(label, secs)]);
+    }
+}
+
+/// Execute `graph` on `pool`, mutating `st` in place.
+pub fn execute<F: SolverFactory>(
+    pool: &StreamPool<F>,
+    hier: &Hierarchy,
+    graph: &TaskGraph,
+    st: &mut ExecState,
+) -> Result<ExecReport> {
+    let n = graph.tasks.len();
+    let mut report = ExecReport::default();
+    if n == 0 {
+        return Ok(report);
+    }
+    let mut indeg = vec![0usize; n];
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for t in &graph.tasks {
+        indeg[t.id] = t.deps.len();
+        for &d in &t.deps {
+            dependents[d].push(t.id);
+        }
+    }
+    let (tx, rx) = channel::<JobDone<Tensor>>();
+    let mut ready: Vec<usize> =
+        graph.tasks.iter().filter(|t| t.deps.is_empty()).map(|t| t.id).collect();
+    let mut in_flight = 0usize;
+    let mut retired = 0usize;
+
+    while retired < n {
+        // dispatch everything currently ready; Comm tasks retire inline
+        while let Some(id) = ready.pop() {
+            let task = &graph.tasks[id];
+            match &task.kind {
+                TaskKind::Comm { .. } => {
+                    report.comm_events += 1;
+                    retired += 1;
+                    for &d in &dependents[id] {
+                        indeg[d] -= 1;
+                        if indeg[d] == 0 {
+                            ready.push(d);
+                        }
+                    }
+                }
+                TaskKind::Kernel { label, .. } => {
+                    dispatch_kernel(pool, hier, st, task, *label, &tx)?;
+                    in_flight += 1;
+                }
+            }
+        }
+        if retired == n {
+            break;
+        }
+        if in_flight == 0 {
+            bail!("executor stalled with {retired}/{n} tasks retired (cyclic dependencies?)");
+        }
+        let done = rx
+            .recv()
+            .map_err(|_| anyhow!("stream pool shut down with tasks in flight"))?;
+        in_flight -= 1;
+        let out = done
+            .result
+            .map_err(|e| anyhow!("task {} ({}): {e:#}", done.id, done.label))?;
+        let op = graph.tasks[done.id]
+            .op
+            .ok_or_else(|| anyhow!("completed task {} has no payload", done.id))?;
+        apply_output(hier, st, op, out)?;
+        match op {
+            TaskOp::PointUpdate { .. } | TaskOp::Residual { .. } | TaskOp::Restrict { .. } => {
+                report.phi_evals += 1;
+            }
+            _ => {}
+        }
+        report.kernels += 1;
+        report.add_phase(done.label, done.t_end - done.t_start);
+        retired += 1;
+        for &d in &dependents[done.id] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                ready.push(d);
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Clone a kernel task's inputs out of the state and submit it to its
+/// device's worker. For `Restrict`, the injection (coarse initial guess +
+/// correction snapshot) is applied at dispatch time: the graph's WAR edges
+/// guarantee every reader of the old coarse slots has already completed.
+fn dispatch_kernel<F: SolverFactory>(
+    pool: &StreamPool<F>,
+    hier: &Hierarchy,
+    st: &mut ExecState,
+    task: &Task,
+    label: &'static str,
+    tx: &Sender<JobDone<Tensor>>,
+) -> Result<()> {
+    let op = task
+        .op
+        .ok_or_else(|| anyhow!("task {} is not executable (op=None); this graph is cost-model-only", task.id))?;
+    match op {
+        TaskOp::PointUpdate { level, j } => {
+            let lvl = &hier.levels[level];
+            let theta = lvl.theta_idx(j - 1);
+            let h = lvl.h;
+            let u_prev = st.u[level][j - 1].clone();
+            let gj = st.g[level].as_ref().map(|g| g[j].clone());
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                let mut v = s.step(theta, h, &u_prev)?;
+                if let Some(g) = &gj {
+                    v.axpy(1.0, g)?;
+                }
+                Ok(v)
+            })
+        }
+        TaskOp::Residual { level, j } => {
+            let lvl = &hier.levels[level];
+            let theta = lvl.theta_idx(j - 1);
+            let h = lvl.h;
+            let u_prev = st.u[level][j - 1].clone();
+            let u_cur = st.u[level][j].clone();
+            let gj = st.g[level].as_ref().map(|g| g[j].clone());
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                let mut r = s.step(theta, h, &u_prev)?;
+                if let Some(g) = &gj {
+                    r.axpy(1.0, g)?;
+                }
+                r.axpy(-1.0, &u_cur)?;
+                Ok(r)
+            })
+        }
+        TaskOp::Restrict { level, j } => {
+            let c = hier.coarsen;
+            let coarse = &hier.levels[level + 1];
+            let theta = coarse.theta_idx(j - 1);
+            let h = coarse.h;
+            let r = st.r[level][j * c]
+                .clone()
+                .ok_or_else(|| anyhow!("restrict({level},{j}): residual at point {} missing", j * c))?;
+            let inj_prev = st.u[level][(j - 1) * c].clone();
+            let inj_cur = st.u[level][j * c].clone();
+            // inject the coarse initial guess + correction snapshot now —
+            // safe because this task's WAR deps have already retired
+            st.u[level + 1][j] = inj_cur.clone();
+            st.inj[level + 1][j] = Some(inj_cur.clone());
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                let phi = s.step(theta, h, &inj_prev)?;
+                let mut out = r;
+                out.axpy(1.0, &inj_cur)?;
+                out.axpy(-1.0, &phi)?;
+                Ok(out)
+            })
+        }
+        TaskOp::Correct { level, j } => {
+            let c = hier.coarsen;
+            let u_fine = st.u[level][j * c].clone();
+            let u_coarse = st.u[level + 1][j].clone();
+            let inj = st.inj[level + 1][j]
+                .clone()
+                .ok_or_else(|| anyhow!("correct({level},{j}): injection snapshot missing"))?;
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                let delta = Tensor::sub(&u_coarse, &inj)?;
+                let mut out = u_fine;
+                out.axpy(1.0, &delta)?;
+                Ok(out)
+            })
+        }
+        TaskOp::Xfer => bail!("Xfer payload on a kernel task (graph bug)"),
+    }
+}
+
+/// Write one completed kernel's output into its slot.
+fn apply_output(hier: &Hierarchy, st: &mut ExecState, op: TaskOp, out: Tensor) -> Result<()> {
+    match op {
+        TaskOp::PointUpdate { level, j } => st.u[level][j] = out,
+        TaskOp::Residual { level, j } => st.r[level][j] = Some(out),
+        TaskOp::Restrict { level, j } => {
+            match &mut st.g[level + 1] {
+                Some(g) => g[j] = out,
+                None => bail!("restrict into level {} with no rhs storage", level + 1),
+            }
+        }
+        TaskOp::Correct { level, j } => st.u[level][j * hier.coarsen] = out,
+        TaskOp::Xfer => bail!("Xfer payload completed as a kernel (graph bug)"),
+    }
+    Ok(())
+}
+
+/// Merge a per-label phase ledger into a cumulative one (driver helper);
+/// same accumulate-by-label rule as [`ExecReport::add_phase`].
+pub(crate) fn merge_phases(
+    into: &mut Vec<(&'static str, f64)>,
+    phases: &[(&'static str, f64)],
+) {
+    for &(label, secs) in phases {
+        if let Some(e) = into.iter_mut().find(|(l, _)| *l == label) {
+            e.1 += secs;
+        } else {
+            into.push((label, secs));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Partition;
+    use crate::mgrit::fas::RelaxKind;
+    use crate::mgrit::taskgraph;
+    use crate::model::{NetParams, NetSpec};
+    use crate::solver::host::HostSolver;
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<NetSpec>, Hierarchy, Partition, StreamPool<impl SolverFactory<Solver = HostSolver>>, Tensor)
+    {
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let spec2 = spec.clone();
+        let factory = move |_w: usize| HostSolver::new(spec2.clone(), params.clone());
+        let hier = Hierarchy::two_level(4, spec.h(), 2).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let partition = Partition::contiguous(n_blocks, 2).unwrap();
+        let pool = StreamPool::new(partition.n_devices(), factory).unwrap();
+        let mut rng = crate::util::prng::Rng::new(31);
+        let u0 = Tensor::randn(&[1, 2, 6, 6], 0.8, &mut rng);
+        (spec, hier, partition, pool, u0)
+    }
+
+    #[test]
+    fn vcycle_graph_executes_and_counts_work() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let g = taskgraph::mg_vcycle(&spec, &hier, &partition, 1, RelaxKind::FCF);
+        let mut st = ExecState::initial(&hier, &u0);
+        let rep = execute(&pool, &hier, &g, &mut st).unwrap();
+        assert!(rep.kernels > 0);
+        assert!(rep.phi_evals > 0);
+        assert!(rep.phase_s.iter().any(|(l, _)| *l == "f_relax"));
+        assert!(rep.phase_s.iter().any(|(l, _)| *l == "coarse_solve"));
+        // states moved away from the constant initial guess
+        let moved = st.u[0][1..]
+            .iter()
+            .any(|u| crate::util::stats::rel_l2_err(u.data(), u0.data()) > 1e-6);
+        assert!(moved, "executor did not update any state");
+    }
+
+    #[test]
+    fn residual_check_fills_residual_slots() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let g = taskgraph::residual_check(&spec, &hier, &partition, 1);
+        let mut st = ExecState::initial(&hier, &u0);
+        execute(&pool, &hier, &g, &mut st).unwrap();
+        for cp in hier.fine().cpoints(hier.coarsen) {
+            if cp > 0 {
+                assert!(st.residual(0, cp).is_some(), "residual at {cp} missing");
+            }
+        }
+    }
+
+    #[test]
+    fn non_executable_graph_is_rejected() {
+        let (spec, hier, _partition, pool, u0) = setup();
+        // serial_forward carries no payloads
+        let g = taskgraph::serial_forward(&spec, 1, 1);
+        let mut st = ExecState::initial(&hier, &u0);
+        assert!(execute(&pool, &hier, &g, &mut st).is_err());
+    }
+
+    #[test]
+    fn merge_phases_accumulates_by_label() {
+        let mut acc: Vec<(&'static str, f64)> = vec![("a", 1.0)];
+        merge_phases(&mut acc, &[("a", 2.0), ("b", 3.0)]);
+        merge_phases(&mut acc, &[("b", 1.0)]);
+        assert_eq!(acc, vec![("a", 3.0), ("b", 4.0)]);
+    }
+}

@@ -1,24 +1,31 @@
 //! The layer-parallel coordinator — the paper's systems contribution.
 //!
-//! The MGRIT engine exposes its work as independent per-block primitives
-//! (F-relaxation per block, C-relaxation per C-point, residual/restriction
-//! per C-point, layer-local parameter gradients). This module executes them
-//! concurrently:
+//! The MGRIT engine exposes its work as a dependency DAG of per-point
+//! primitives (F-relaxation updates, C-relaxation updates, residuals,
+//! restriction, coarse substitution, correction — see `mgrit::taskgraph`).
+//! This module executes that DAG concurrently:
 //!
 //! - [`streams::StreamPool`] — long-lived worker threads, one per *stream*
 //!   (the CUDA-stream analogue). Each worker owns a private `BlockSolver`
 //!   built by a [`crate::solver::SolverFactory`] (PJRT contexts are not
-//!   `Send`, same as per-rank CuDNN handles).
+//!   `Send`, same as per-rank CuDNN handles). `submit_job` delivers typed
+//!   completions — the event/callback primitive the executor retires on.
 //! - [`partition::Partition`] — contiguous layer-block → device assignment
 //!   (the paper's MPI model partitioning).
-//! - [`driver::ParallelMgrit`] — the phase-parallel FCF/FAS cycle, with
-//!   per-phase barriers, boundary-state "communication" accounting, and a
-//!   kernel-event trace (the real-run analogue of the paper's nvprof Fig 5).
+//! - [`executor`] — the dependency-counting event-driven executor: clones a
+//!   task's input slots, ships it to its device's worker, and retires it on
+//!   completion, releasing dependents immediately. No per-phase barriers.
+//! - [`driver::ParallelMgrit`] — builds the executable V-cycle graph (the
+//!   same graph the simulator scores), runs it per MG iteration, keeps the
+//!   boundary-traffic ledger, and exposes the kernel-event trace (the
+//!   real-run analogue of the paper's nvprof Fig 5).
 
 pub mod driver;
+pub mod executor;
 pub mod partition;
 pub mod streams;
 
 pub use driver::{ParallelMgrit, RunMetrics};
+pub use executor::{ExecReport, ExecState};
 pub use partition::Partition;
-pub use streams::{StreamPool, TraceEvent};
+pub use streams::{JobDone, StreamPool, TraceEvent};

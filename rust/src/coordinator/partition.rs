@@ -109,6 +109,48 @@ mod tests {
     }
 
     #[test]
+    fn single_block_many_devices() {
+        // one block: exactly one device used, owning everything
+        let p = Partition::contiguous(1, 16).unwrap();
+        assert_eq!(p.n_devices(), 1);
+        assert_eq!(p.n_blocks(), 1);
+        assert_eq!(p.n_boundaries(), 0);
+        assert_eq!(p.device_of(0), 0);
+        assert_eq!(p.blocks_of(0), 0..1);
+    }
+
+    #[test]
+    fn more_devices_than_blocks_each_device_owns_one() {
+        // requested devices clamp to the block count; every used device owns
+        // exactly one block and ownership stays contiguous
+        for (n_blocks, n_req) in [(3usize, 8usize), (5, 64), (2, 3)] {
+            let p = Partition::contiguous(n_blocks, n_req).unwrap();
+            assert_eq!(p.n_devices(), n_blocks, "{n_blocks} blocks / {n_req} devices");
+            assert_eq!(p.n_boundaries(), n_blocks - 1);
+            for b in 0..n_blocks {
+                assert_eq!(p.device_of(b), b);
+                assert_eq!(p.blocks_of(b), b..b + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn non_divisible_split_is_contiguous_and_covers() {
+        // 7 blocks over 3 devices: 3/2/2, larger shares first
+        let p = Partition::contiguous(7, 3).unwrap();
+        let sizes: Vec<usize> = (0..3).map(|d| p.blocks_of(d).len()).collect();
+        assert_eq!(sizes, vec![3, 2, 2]);
+        // coverage without gaps or overlap
+        let mut covered = vec![0usize; 7];
+        for d in 0..p.n_devices() {
+            for b in p.blocks_of(d) {
+                covered[b] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
+    }
+
+    #[test]
     fn rejects_degenerate() {
         assert!(Partition::contiguous(0, 2).is_err());
         assert!(Partition::contiguous(2, 0).is_err());

@@ -23,6 +23,19 @@ pub struct TraceEvent {
     pub t_end: f64,
 }
 
+/// Completion record of one [`StreamPool::submit_job`] call: the job's id,
+/// label, begin/end timestamps (pool clock) and its result — the signaling
+/// primitive the dependency-driven executor retires tasks on.
+#[derive(Debug)]
+pub struct JobDone<T> {
+    pub id: usize,
+    pub label: &'static str,
+    /// Seconds since pool creation (same clock as the trace).
+    pub t_start: f64,
+    pub t_end: f64,
+    pub result: Result<T>,
+}
+
 type Job<S> = Box<dyn FnOnce(&S) + Send>;
 
 enum Msg<S> {
@@ -113,6 +126,39 @@ impl<F: SolverFactory> StreamPool<F> {
             .ok_or_else(|| anyhow!("worker {worker} out of range"))?
             .send(Msg::Run { label, job: Box::new(job) })
             .map_err(|_| anyhow!("worker {worker} has shut down"))
+    }
+
+    /// Submit a value-returning job whose completion (result + timestamps)
+    /// is delivered on `tx` tagged with `id`. This is the primitive the DAG
+    /// executor uses to retire tasks as they finish, in completion order —
+    /// the CPU analogue of a CUDA stream callback / event.
+    ///
+    /// A panicking job is caught and delivered as an `Err` completion, so a
+    /// scheduler blocked on the channel always wakes up instead of hanging.
+    pub fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()> {
+        let epoch = self.epoch;
+        self.submit(worker, label, move |solver| {
+            let t_start = epoch.elapsed().as_secs_f64();
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(solver)))
+                    .unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        Err(anyhow!("job {id} ({label}) panicked: {msg}"))
+                    });
+            let t_end = epoch.elapsed().as_secs_f64();
+            let _ = tx.send(JobDone { id, label, t_start, t_end, result });
+        })
     }
 
     /// Snapshot of the trace so far.
@@ -217,6 +263,63 @@ mod tests {
             }
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn submit_job_delivers_results_and_timestamps() {
+        let pool = StreamPool::new(2, host_factory()).unwrap();
+        let (tx, rx) = channel::<JobDone<usize>>();
+        for (id, w) in [(10usize, 0usize), (11, 1)] {
+            pool.submit_job(w, "job", id, tx.clone(), move |s: &HostSolver| {
+                let u = Tensor::zeros(&[1, 2, 6, 6]);
+                let v = s.step(0, 0.1, &u)?;
+                Ok(v.len())
+            })
+            .unwrap();
+        }
+        let mut got: Vec<JobDone<usize>> = rx.iter().take(2).collect();
+        got.sort_by_key(|d| d.id);
+        assert_eq!(got.len(), 2);
+        for (d, want_id) in got.iter().zip([10usize, 11]) {
+            assert_eq!(d.id, want_id);
+            assert_eq!(d.label, "job");
+            assert_eq!(*d.result.as_ref().unwrap(), 72);
+            assert!(d.t_end >= d.t_start);
+        }
+    }
+
+    #[test]
+    fn submit_job_converts_panics_to_errors() {
+        // a panicking job must still deliver a completion (Err), not hang
+        // the scheduler waiting on the channel
+        let pool = StreamPool::new(1, host_factory()).unwrap();
+        let (tx, rx) = channel::<JobDone<usize>>();
+        pool.submit_job(0, "boom", 3, tx.clone(), move |_s: &HostSolver| {
+            panic!("intentional panic");
+        })
+        .unwrap();
+        let done = rx.iter().next().unwrap();
+        assert_eq!(done.id, 3);
+        let err = done.result.unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        // the worker survives and keeps serving jobs
+        pool.submit_job(0, "after", 4, tx, move |_s: &HostSolver| Ok(7usize)).unwrap();
+        let done = rx.iter().next().unwrap();
+        assert_eq!(done.id, 4);
+        assert_eq!(*done.result.as_ref().unwrap(), 7);
+    }
+
+    #[test]
+    fn submit_job_propagates_errors() {
+        let pool = StreamPool::new(1, host_factory()).unwrap();
+        let (tx, rx) = channel::<JobDone<usize>>();
+        pool.submit_job(0, "fail", 7, tx, move |_s: &HostSolver| {
+            Err(anyhow!("intentional failure"))
+        })
+        .unwrap();
+        let done = rx.iter().next().unwrap();
+        assert_eq!(done.id, 7);
+        assert!(done.result.is_err());
     }
 
     #[test]

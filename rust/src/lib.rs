@@ -23,11 +23,11 @@
 //! |---|---|
 //! | [`tensor`] | NCHW f32 tensors + conv/matmul/activation ops and VJPs |
 //! | [`model`] | network specs (paper presets with exact param counts), params, cost model |
-//! | [`mgrit`] | the FAS/MGRIT engine: hierarchy, relaxation, cycles, adjoint |
+//! | [`mgrit`] | the FAS/MGRIT engine: hierarchy, relaxation, cycles, adjoint, schedule DAGs |
 //! | [`solver`] | `BlockSolver` implementations: host, PJRT, analytic-cost |
-//! | [`runtime`] | PJRT client wrapper + artifact manifest |
-//! | [`coordinator`] | stream pool, device partitions, parallel cycle driver |
-//! | [`sim`] | discrete-event multi-GPU cluster simulator |
+//! | [`runtime`] | PJRT client wrapper + artifact manifest (host fallback when absent) |
+//! | [`coordinator`] | stream pool, device partitions, dependency-driven DAG executor + driver |
+//! | [`sim`] | discrete-event multi-GPU cluster simulator (runs the same DAGs) |
 //! | [`perfmodel`] | V100 + 25 GbE analytic cost model |
 //! | [`data`] | MNIST idx loader + synthetic digit generator |
 //! | [`train`] | SGD training loops (serial, model-partitioned, MG) |

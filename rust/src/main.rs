@@ -90,13 +90,12 @@ fn cmd_forward(args: &Args) -> Result<()> {
     let serial = host.block_fprop(0, 1, n, h, &u0)?;
     let serial_s = t.elapsed_s();
 
-    // parallel MG
+    // parallel MG over the dependency-driven DAG executor
     let hier = Hierarchy::build(n, h, spec.coarsen, cfg.max_levels, 8)?;
     let spec2 = spec.clone();
     let params2 = params.clone();
     let factory = move |_w: usize| HostSolver::new(spec2.clone(), params2.clone());
-    let state_bytes = (cfg.batch * spec.state_elems() * 4) as u64;
-    let driver = ParallelMgrit::new(factory, hier, cfg.devices, state_bytes)?;
+    let driver = ParallelMgrit::new(factory, spec.clone(), hier, cfg.devices, cfg.batch)?;
     let t = Timer::start();
     let (mg, stats, metrics) = driver.solve(&u0, &cfg.mgrit_options())?;
     let mg_s = t.elapsed_s();
@@ -148,17 +147,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         method,
         seed: cfg.seed,
     };
-    let logs = match cfg.backend.as_str() {
-        "host" => {
-            let spec2 = spec.clone();
-            train::train(&spec, &mut params, &data, &tc, move |p| {
-                HostSolver::new(spec2.clone(), Arc::new(p.clone()))
-            })?
-        }
-        "pjrt" => {
-            let store = std::rc::Rc::new(resnet_mgrit::runtime::ArtifactStore::open(
-                &cfg.artifacts_dir,
-            )?);
+    // the pjrt backend degrades gracefully (warning + host solver) when
+    // artifacts/ was never exported or no PJRT runtime is linked
+    let pjrt_store = match cfg.backend.as_str() {
+        "host" => None,
+        "pjrt" => resnet_mgrit::runtime::ArtifactStore::open_or_fallback(&cfg.artifacts_dir)
+            .map(std::rc::Rc::new),
+        other => bail!("unknown backend {other}"),
+    };
+    let logs = match pjrt_store {
+        Some(store) => {
             let spec2 = spec.clone();
             let batch = cfg.batch;
             train::train(&spec, &mut params, &data, &tc, move |p| {
@@ -170,7 +168,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 )
             })?
         }
-        other => bail!("unknown backend {other}"),
+        None => {
+            let spec2 = spec.clone();
+            train::train(&spec, &mut params, &data, &tc, move |p| {
+                HostSolver::new(spec2.clone(), Arc::new(p.clone()))
+            })?
+        }
     };
     for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
         println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
@@ -272,6 +275,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
 
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts-dir", "artifacts");
+    if !resnet_mgrit::runtime::Manifest::present_in(dir) {
+        println!(
+            "no AOT artifacts at {dir:?} — run `make artifacts` to export them. \
+             The pjrt backend falls back to the host solver without them."
+        );
+        return Ok(());
+    }
     let manifest = resnet_mgrit::runtime::Manifest::load(dir)?;
     println!("manifest: {} entries, {} presets", manifest.entries.len(), manifest.presets.len());
     for (name, info) in &manifest.presets {

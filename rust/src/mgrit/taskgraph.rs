@@ -1,22 +1,39 @@
-//! Schedule DAGs: the exact task structure the coordinator executes, in a
-//! form the discrete-event cluster simulator can run at paper scale
-//! (fig6/fig7 presets, 1–64 devices) without touching tensors.
+//! Schedule DAGs: the *single source of truth* for MGRIT execution order.
 //!
-//! One generator per algorithm under study:
-//! - [`mg_forward`] / [`mg_training`] — the paper's MGRIT layer-parallelism
+//! One graph serves two consumers:
+//! - the discrete-event cluster simulator (`sim::engine`) runs it in virtual
+//!   time at paper scale (fig6/fig7 presets, 1–64 devices) using the cost
+//!   annotations (`TaskKind`), and
+//! - the live DAG executor (`coordinator::executor`) runs it on real tensors
+//!   using the executable payloads (`TaskOp`), dispatching each task to a
+//!   `StreamPool` worker the moment its dependencies retire — no per-phase
+//!   barriers.
+//!
+//! Because both consume the *identical* graph, the simulated schedule and the
+//! real schedule cannot drift.
+//!
+//! Dependencies encode every hazard, not just read-after-write: a task that
+//! overwrites a state the previous phase still reads carries write-after-read
+//! edges to those readers, so any topological execution order produces
+//! bit-identical results to the serial engine in `mgrit::fas`.
+//!
+//! Generators:
+//! - [`mg_vcycle`] — one executable V-cycle (what `ParallelMgrit` runs per
+//!   MG iteration)
+//! - [`residual_check`] — the fine-level residual evaluation used for the
+//!   convergence test between cycles
+//! - [`mg_forward`] / [`mg_training`] — multi-cycle schedules for the
+//!   simulator (training adds head + adjoint + parameter-gradient stages,
+//!   cost-only)
 //! - [`serial_forward`] / [`serial_training`] — single-stream sequential
 //!   baseline (distributed = the paper's "Model Partitioned" / PM method)
-//!
-//! The MG generators mirror `coordinator::driver` phase-for-phase (F-relax
-//! blocks, C-relax points, residual, restrict, coarse substitution, correct,
-//! final F-relax), so simulated scaling reflects the implemented schedule,
-//! not an idealized one.
 
 use crate::coordinator::Partition;
 use crate::model::cost::{layer_bwd_cost, layer_cost, state_bytes};
 use crate::model::NetSpec;
 use crate::Result;
 
+use super::fas::RelaxKind;
 use super::hierarchy::Hierarchy;
 
 /// What a task occupies while it runs.
@@ -38,6 +55,27 @@ pub enum KernelClass {
     Light,
 }
 
+/// Executable payload: which state slots a task reads and writes. `level`
+/// indexes the MGRIT hierarchy; `j` is a point index on that level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOp {
+    /// `u[level][j] = Φ_{θ(j−1)}(u[level][j−1]) + g[level][j]` — the
+    /// elementary update of F-relaxation, C-relaxation, and the coarse
+    /// forward substitution.
+    PointUpdate { level: usize, j: usize },
+    /// `r[level][j] = Φ_{θ(j−1)}(u[level][j−1]) + g[level][j] − u[level][j]`.
+    Residual { level: usize, j: usize },
+    /// FAS restriction to `level+1`:
+    /// `g[level+1][j] = r[level][j·c] + ū_H[j] − Φ_H(ū_H[j−1])` with
+    /// `ū_H[j] = u[level][j·c]`; also injects `u[level+1][j] = ū_H[j]` and
+    /// snapshots it for the later correction.
+    Restrict { level: usize, j: usize },
+    /// FAS correction: `u[level][j·c] += u[level+1][j] − ū_H[j]`.
+    Correct { level: usize, j: usize },
+    /// Boundary transfer (accounting only in local execution).
+    Xfer,
+}
+
 /// One node of the schedule DAG.
 #[derive(Debug, Clone)]
 pub struct Task {
@@ -46,6 +84,9 @@ pub struct Task {
     pub device: usize,
     pub kind: TaskKind,
     pub deps: Vec<usize>,
+    /// Executable payload; `None` for cost-model-only tasks (training-step
+    /// stages the live executor does not run).
+    pub op: Option<TaskOp>,
 }
 
 /// A schedule DAG plus bookkeeping to attach dependencies incrementally.
@@ -55,9 +96,15 @@ pub struct TaskGraph {
 }
 
 impl TaskGraph {
-    fn push(&mut self, device: usize, kind: TaskKind, deps: Vec<usize>) -> usize {
+    fn push(
+        &mut self,
+        device: usize,
+        kind: TaskKind,
+        deps: Vec<usize>,
+        op: Option<TaskOp>,
+    ) -> usize {
         let id = self.tasks.len();
-        self.tasks.push(Task { id, device, kind, deps });
+        self.tasks.push(Task { id, device, kind, deps, op });
         id
     }
 
@@ -69,16 +116,24 @@ impl TaskGraph {
         class: KernelClass,
         flops: f64,
         deps: Vec<usize>,
+        op: Option<TaskOp>,
     ) -> usize {
-        self.push(device, TaskKind::Kernel { label, class, flops }, deps)
+        self.push(device, TaskKind::Kernel { label, class, flops }, deps, op)
     }
 
     /// Transfer `bytes` from src to dst (no task if same device).
-    fn comm(&mut self, src: usize, dst: usize, bytes: f64, deps: Vec<usize>) -> Option<usize> {
+    fn comm(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        deps: Vec<usize>,
+        op: Option<TaskOp>,
+    ) -> Option<usize> {
         if src == dst {
             None
         } else {
-            Some(self.push(dst, TaskKind::Comm { src, dst, bytes }, deps))
+            Some(self.push(dst, TaskKind::Comm { src, dst, bytes }, deps, op))
         }
     }
 
@@ -104,6 +159,11 @@ impl TaskGraph {
                 _ => 0.0,
             })
             .sum()
+    }
+
+    /// Number of Comm tasks.
+    pub fn n_comms(&self) -> usize {
+        self.tasks.iter().filter(|t| matches!(t.kind, TaskKind::Comm { .. })).count()
     }
 
     /// Verify the graph is a DAG with in-range dependencies (deps always
@@ -134,8 +194,35 @@ impl<'a> PointMap<'a> {
     }
 }
 
-/// Builder state for the MG schedule: the task that last wrote each point of
-/// each level (the dependency frontier).
+/// The dependency frontier of one state slot: its last writer plus every
+/// reader since that write. A new writer depends on all of them (RAW + WAR +
+/// WAW), which is what makes any topological order bit-equivalent to serial.
+#[derive(Debug, Clone, Default)]
+struct Frontier {
+    writer: Option<usize>,
+    readers: Vec<usize>,
+}
+
+impl Frontier {
+    /// Dependencies a writer of this slot must carry; resets the frontier to
+    /// the new writer.
+    fn begin_write(&mut self, deps: &mut Vec<usize>) {
+        deps.append(&mut self.readers);
+        if let Some(w) = self.writer {
+            deps.push(w);
+        }
+    }
+}
+
+fn dedup(mut deps: Vec<usize>) -> Vec<usize> {
+    deps.sort_unstable();
+    deps.dedup();
+    deps
+}
+
+/// Builder state for the MG schedule: per-slot dependency frontiers for the
+/// layer states `u`, the FAS right-hand sides `g`, the C-point residuals `r`
+/// and the injection snapshots used by the correction.
 struct MgBuilder<'a> {
     g: TaskGraph,
     spec: &'a NetSpec,
@@ -143,20 +230,38 @@ struct MgBuilder<'a> {
     pm: PointMap<'a>,
     /// Cost multiplier for Φ applications (1 for forward, ~2 for adjoint).
     flop_scale: f64,
-    /// last_writer[level][j] — None means "initial state, no producer".
-    last_writer: Vec<Vec<Option<usize>>>,
+    /// Attach executable payloads? (false for cost-model-only stages)
+    executable: bool,
+    u: Vec<Vec<Frontier>>,
+    rhs: Vec<Vec<Frontier>>,
+    res: Vec<Vec<Frontier>>,
+    inj: Vec<Vec<Frontier>>,
 }
 
 impl<'a> MgBuilder<'a> {
     fn new(spec: &'a NetSpec, hier: &'a Hierarchy, partition: &'a Partition, batch: usize) -> Self {
-        let last_writer = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
+        let slots = |hier: &Hierarchy| -> Vec<Vec<Frontier>> {
+            hier.levels.iter().map(|l| vec![Frontier::default(); l.n_points]).collect()
+        };
         MgBuilder {
             g: TaskGraph::default(),
             spec,
             batch,
             pm: PointMap { hier, partition },
             flop_scale: 1.0,
-            last_writer,
+            executable: true,
+            u: slots(hier),
+            rhs: slots(hier),
+            res: slots(hier),
+            inj: slots(hier),
+        }
+    }
+
+    fn op(&self, op: TaskOp) -> Option<TaskOp> {
+        if self.executable {
+            Some(op)
+        } else {
+            None
         }
     }
 
@@ -171,24 +276,47 @@ impl<'a> MgBuilder<'a> {
         self.flop_scale * layer_cost(self.spec, fine_idx.min(self.spec.n_res() - 1), self.batch).flops
     }
 
-    fn dep_of(&self, level: usize, j: usize) -> Vec<usize> {
-        self.last_writer[level][j].into_iter().collect()
+    fn bytes(&self) -> f64 {
+        state_bytes(self.spec, self.batch)
     }
 
     /// Φ-apply at point j−1 → j, with boundary comm if the producer of
     /// u[j−1] lives on another device. Returns the new writer of point j.
     fn point_update(&mut self, level: usize, j: usize, label: &'static str) -> usize {
-        let lvl = &self.pm.hier.levels[level];
         let dst = self.pm.device_of_point(level, j);
         let src = self.pm.device_of_point(level, j - 1);
-        let mut deps = self.dep_of(level, j - 1);
-        if let Some(c) = self.g.comm(src, dst, state_bytes(self.spec, self.batch), deps.clone())
-        {
+        // data dependencies: u[level][j−1] and (FAS levels) g[level][j]
+        let mut deps: Vec<usize> = Vec::new();
+        if let Some(w) = self.u[level][j - 1].writer {
+            deps.push(w);
+        }
+        if level > 0 {
+            if let Some(w) = self.rhs[level][j].writer {
+                deps.push(w);
+            }
+        }
+        let comm =
+            self.g.comm(src, dst, self.bytes(), dedup(deps.clone()), self.op(TaskOp::Xfer));
+        if let Some(c) = comm {
+            self.u[level][j - 1].readers.push(c);
             deps = vec![c];
         }
-        let fine_idx = lvl.theta_idx(j - 1);
-        let t = self.g.kernel(dst, label, self.class_of(fine_idx), self.step_flops(fine_idx), deps);
-        self.last_writer[level][j] = Some(t);
+        // write hazards on the target slot u[level][j]
+        self.u[level][j].begin_write(&mut deps);
+        let fine_idx = self.pm.hier.levels[level].theta_idx(j - 1);
+        let t = self.g.kernel(
+            dst,
+            label,
+            self.class_of(fine_idx),
+            self.step_flops(fine_idx),
+            dedup(deps),
+            self.op(TaskOp::PointUpdate { level, j }),
+        );
+        self.u[level][j].writer = Some(t);
+        self.u[level][j - 1].readers.push(t);
+        if level > 0 {
+            self.rhs[level][j].readers.push(t);
+        }
         t
     }
 
@@ -210,62 +338,98 @@ impl<'a> MgBuilder<'a> {
         }
     }
 
-    /// Residual at C-points; returns the residual tasks (producers of r).
-    fn residual(&mut self, level: usize) -> Vec<usize> {
+    /// Residual at C-points > 0 into the per-point residual slots.
+    fn residual(&mut self, level: usize) {
         let lvl = self.pm.hier.levels[level].clone();
-        let mut out = Vec::new();
         for cp in lvl.cpoints(self.pm.hier.coarsen) {
             if cp == 0 {
                 continue;
             }
             let dst = self.pm.device_of_point(level, cp);
             let src = self.pm.device_of_point(level, cp - 1);
-            let mut deps = self.dep_of(level, cp - 1);
-            deps.extend(self.dep_of(level, cp));
-            if let Some(c) =
-                self.g.comm(src, dst, state_bytes(self.spec, self.batch), deps.clone())
-            {
+            let mut deps: Vec<usize> = Vec::new();
+            if let Some(w) = self.u[level][cp - 1].writer {
+                deps.push(w);
+            }
+            if let Some(w) = self.u[level][cp].writer {
+                deps.push(w);
+            }
+            if level > 0 {
+                if let Some(w) = self.rhs[level][cp].writer {
+                    deps.push(w);
+                }
+            }
+            let comm =
+                self.g.comm(src, dst, self.bytes(), dedup(deps.clone()), self.op(TaskOp::Xfer));
+            if let Some(c) = comm {
+                self.u[level][cp - 1].readers.push(c);
                 deps = vec![c];
             }
+            self.res[level][cp].begin_write(&mut deps);
             let fine_idx = lvl.theta_idx(cp - 1);
             let t = self.g.kernel(
                 dst,
                 "residual",
                 self.class_of(fine_idx),
                 self.step_flops(fine_idx),
-                deps,
+                dedup(deps),
+                self.op(TaskOp::Residual { level, j: cp }),
             );
-            out.push(t);
+            self.res[level][cp].writer = Some(t);
+            self.u[level][cp - 1].readers.push(t);
+            self.u[level][cp].readers.push(t);
+            if level > 0 {
+                self.rhs[level][cp].readers.push(t);
+            }
         }
-        out
     }
 
-    /// Restriction to level+1: τ-term Φ_H per coarse point + residual dep.
-    fn restrict(&mut self, level: usize, residual_tasks: &[usize]) {
-        let coarse = self.pm.hier.levels[level + 1].clone();
+    /// FAS restriction to level+1: builds the coarse right-hand side from the
+    /// residual slots and injects the C-point states as the coarse initial
+    /// guess (+ snapshot for the correction).
+    fn restrict(&mut self, level: usize) {
         let c = self.pm.hier.coarsen;
+        let coarse = self.pm.hier.levels[level + 1].clone();
         for j in 1..coarse.n_points {
+            let fine_j = j * c;
+            let prev_fine = (j - 1) * c;
             let dst = self.pm.device_of_point(level + 1, j);
             let src = self.pm.device_of_point(level + 1, j - 1);
-            let mut deps = self.dep_of(level, (j - 1) * c);
-            deps.push(residual_tasks[j - 1]);
-            if let Some(cm) =
-                self.g.comm(src, dst, state_bytes(self.spec, self.batch), deps.clone())
-            {
+            let mut deps: Vec<usize> = Vec::new();
+            if let Some(w) = self.res[level][fine_j].writer {
+                deps.push(w);
+            }
+            if let Some(w) = self.u[level][fine_j].writer {
+                deps.push(w);
+            }
+            if let Some(w) = self.u[level][prev_fine].writer {
+                deps.push(w);
+            }
+            let comm =
+                self.g.comm(src, dst, self.bytes(), dedup(deps.clone()), self.op(TaskOp::Xfer));
+            if let Some(cm) = comm {
+                self.u[level][prev_fine].readers.push(cm);
                 deps = vec![cm];
             }
+            // write hazards on the three coarse slots this task produces
+            self.rhs[level + 1][j].begin_write(&mut deps);
+            self.u[level + 1][j].begin_write(&mut deps);
+            self.inj[level + 1][j].begin_write(&mut deps);
             let fine_idx = coarse.theta_idx(j - 1);
             let t = self.g.kernel(
                 dst,
                 "restrict",
                 self.class_of(fine_idx),
                 self.step_flops(fine_idx),
-                deps,
+                dedup(deps),
+                self.op(TaskOp::Restrict { level, j }),
             );
-            self.last_writer[level + 1][j] = Some(t);
-            if self.last_writer[level + 1][j - 1].is_none() {
-                self.last_writer[level + 1][j - 1] = self.last_writer[level][(j - 1) * c];
-            }
+            self.rhs[level + 1][j].writer = Some(t);
+            self.u[level + 1][j].writer = Some(t);
+            self.inj[level + 1][j].writer = Some(t);
+            self.res[level][fine_j].readers.push(t);
+            self.u[level][fine_j].readers.push(t);
+            self.u[level][prev_fine].readers.push(t);
         }
     }
 
@@ -275,61 +439,99 @@ impl<'a> MgBuilder<'a> {
     /// C-relaxation pattern) — NOT a gather to one device, which would
     /// serialize O(n_points) messages through a single NIC.
     fn coarse_solve(&mut self, level: usize) {
-        let lvl = self.pm.hier.levels[level].clone();
-        let bytes = state_bytes(self.spec, self.batch);
-        for j in 1..lvl.n_points {
-            let dst = self.pm.device_of_point(level, j);
-            let src = self.pm.device_of_point(level, j - 1);
-            let mut deps = self.dep_of(level, j - 1);
-            deps.extend(self.dep_of(level, j));
-            if let Some(c) = self.g.comm(src, dst, bytes, deps.clone()) {
-                deps = vec![c];
-            }
-            let fine_idx = lvl.theta_idx(j - 1);
-            let t = self.g.kernel(
-                dst,
-                "coarse_solve",
-                self.class_of(fine_idx),
-                self.step_flops(fine_idx),
-                deps,
-            );
-            self.last_writer[level][j] = Some(t);
+        let n = self.pm.hier.levels[level].n_points;
+        for j in 1..n {
+            self.point_update(level, j, "coarse_solve");
         }
     }
 
     /// Correction: elementwise C-point update after the coarse solve (the
     /// coarse point is co-located with its fine C-point by construction).
     fn correct(&mut self, level: usize) {
+        let c = self.pm.hier.coarsen;
         let coarse_n = self.pm.hier.levels[level + 1].n_points;
-        let act = state_bytes(self.spec, self.batch) / 4.0; // elements
+        let act = self.bytes() / 4.0; // elements
         for j in 1..coarse_n {
-            let fine_j = j * self.pm.hier.coarsen;
+            let fine_j = j * c;
             let dev = self.pm.device_of_point(level, fine_j);
-            let mut deps = self.dep_of(level + 1, j);
-            deps.extend(self.dep_of(level, fine_j));
-            let t = self.g.kernel(dev, "correct", KernelClass::Light, 2.0 * act, deps);
-            self.last_writer[level][fine_j] = Some(t);
+            let mut deps: Vec<usize> = Vec::new();
+            if let Some(w) = self.u[level + 1][j].writer {
+                deps.push(w);
+            }
+            if let Some(w) = self.inj[level + 1][j].writer {
+                deps.push(w);
+            }
+            self.u[level][fine_j].begin_write(&mut deps);
+            let t = self.g.kernel(
+                dev,
+                "correct",
+                KernelClass::Light,
+                2.0 * act,
+                dedup(deps),
+                self.op(TaskOp::Correct { level, j }),
+            );
+            self.u[level][fine_j].writer = Some(t);
+            self.u[level + 1][j].readers.push(t);
+            self.inj[level + 1][j].readers.push(t);
         }
     }
 
-    fn vcycle(&mut self, level: usize) {
+    fn vcycle(&mut self, level: usize, relax: RelaxKind) {
         if level == self.pm.hier.n_levels() - 1 {
             self.coarse_solve(level);
             return;
         }
-        // FCF relaxation (the paper's configuration)
-        self.f_relax(level);
-        self.c_relax(level);
-        self.f_relax(level);
-        let rs = self.residual(level);
-        self.restrict(level, &rs);
-        self.vcycle(level + 1);
+        match relax {
+            RelaxKind::F => self.f_relax(level),
+            RelaxKind::FC => {
+                self.f_relax(level);
+                self.c_relax(level);
+            }
+            RelaxKind::FCF => {
+                self.f_relax(level);
+                self.c_relax(level);
+                self.f_relax(level);
+            }
+        }
+        self.residual(level);
+        self.restrict(level);
+        self.vcycle(level + 1, relax);
         self.correct(level);
         self.f_relax(level);
     }
 }
 
-/// MG forward propagation schedule: `cycles` V-cycles.
+/// One executable V-cycle (level 0 downwards) with the given relaxation
+/// pattern — the graph `ParallelMgrit` executes per MG iteration and the
+/// building block of [`mg_forward`].
+pub fn mg_vcycle(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    relax: RelaxKind,
+) -> TaskGraph {
+    let mut b = MgBuilder::new(spec, hier, partition, batch);
+    b.vcycle(0, relax);
+    b.g
+}
+
+/// The fine-level residual evaluation (all C-points > 0) used for the
+/// convergence check between cycles. Comm-accounting tasks are included so
+/// the live driver's traffic ledger matches the paper's MPI pattern.
+pub fn residual_check(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+) -> TaskGraph {
+    let mut b = MgBuilder::new(spec, hier, partition, batch);
+    b.residual(0);
+    b.g
+}
+
+/// MG forward propagation schedule: `cycles` V-cycles (the paper's FCF
+/// configuration).
 pub fn mg_forward(
     spec: &NetSpec,
     hier: &Hierarchy,
@@ -339,14 +541,15 @@ pub fn mg_forward(
 ) -> TaskGraph {
     let mut b = MgBuilder::new(spec, hier, partition, batch);
     for _ in 0..cycles {
-        b.vcycle(0);
+        b.vcycle(0, RelaxKind::FCF);
     }
     b.g
 }
 
 /// MG training step: forward MG, head fwd+vjp, adjoint MG (same cycle count,
 /// VJP steps ≈ 2× forward cost), then layer-local parameter gradients fanned
-/// out across all devices.
+/// out across all devices. Cost-model-only (`op == None`): the live executor
+/// runs forward solves; training runs through `train::` on the solver path.
 pub fn mg_training(
     spec: &NetSpec,
     hier: &Hierarchy,
@@ -355,31 +558,33 @@ pub fn mg_training(
     cycles: usize,
 ) -> TaskGraph {
     let mut b = MgBuilder::new(spec, hier, partition, batch);
+    b.executable = false;
     for _ in 0..cycles {
-        b.vcycle(0);
+        b.vcycle(0, RelaxKind::FCF);
     }
     // head on the device owning the last point
     let n_fine = b.pm.hier.fine().n_points;
     let last_dev = b.pm.device_of_point(0, n_fine - 1);
     let head = crate::model::cost::head_cost(spec, batch);
-    let deps = b.dep_of(0, n_fine - 1);
-    let h1 = b.g.kernel(last_dev, "head", KernelClass::Gemm, head.flops, deps);
-    let h2 = b.g.kernel(last_dev, "head_vjp", KernelClass::Gemm, 2.0 * head.flops, vec![h1]);
+    let deps: Vec<usize> = b.u[0][n_fine - 1].writer.into_iter().collect();
+    let h1 = b.g.kernel(last_dev, "head", KernelClass::Gemm, head.flops, deps, None);
+    let h2 =
+        b.g.kernel(last_dev, "head_vjp", KernelClass::Gemm, 2.0 * head.flops, vec![h1], None);
     // adjoint MG: structurally identical cycles over the reversed system,
     // each Φ replaced by its VJP (≈ 2× flops)
-    b.last_writer[0][n_fine - 1] = Some(h2);
+    b.u[0][n_fine - 1] = Frontier { writer: Some(h2), readers: Vec::new() };
     b.flop_scale = 2.0;
     for _ in 0..cycles {
-        b.vcycle(0);
+        b.vcycle(0, RelaxKind::FCF);
     }
     // layer-local parameter gradients (no communication)
     b.flop_scale = 1.0;
     for i in 0..spec.n_res() {
         let j = (i + 1).min(n_fine - 1);
         let dev = b.pm.device_of_point(0, j);
-        let deps = b.dep_of(0, j);
+        let deps: Vec<usize> = b.u[0][j].writer.into_iter().collect();
         let c = layer_bwd_cost(spec, i, batch);
-        b.g.kernel(dev, "param_grad", b.class_of(i), c.flops, deps);
+        b.g.kernel(dev, "param_grad", b.class_of(i), c.flops, deps, None);
     }
     b.g
 }
@@ -398,7 +603,7 @@ pub fn serial_forward(spec: &NetSpec, n_devices: usize, batch: usize) -> TaskGra
         let dev = part.device_of(i);
         let mut deps: Vec<usize> = prev.into_iter().collect();
         if dev != prev_dev {
-            if let Some(c) = g.comm(prev_dev, dev, state_bytes(spec, batch), deps.clone()) {
+            if let Some(c) = g.comm(prev_dev, dev, state_bytes(spec, batch), deps.clone(), None) {
                 deps = vec![c];
             }
         }
@@ -407,7 +612,7 @@ pub fn serial_forward(spec: &NetSpec, n_devices: usize, batch: usize) -> TaskGra
             crate::model::LayerKind::Conv { .. } => KernelClass::Conv,
             crate::model::LayerKind::Fc { .. } => KernelClass::Gemm,
         };
-        prev = Some(g.kernel(dev, "serial_fwd", class, cost.flops, deps));
+        prev = Some(g.kernel(dev, "serial_fwd", class, cost.flops, deps, None));
         prev_dev = dev;
     }
     g
@@ -431,18 +636,24 @@ pub fn serial_training(spec: &NetSpec, n_devices: usize, batch: usize) -> TaskGr
         let dev = part.device_of(i);
         let mut deps: Vec<usize> = prev.into_iter().collect();
         if dev != prev_dev {
-            if let Some(c) = g.comm(prev_dev, dev, bytes, deps.clone()) {
+            if let Some(c) = g.comm(prev_dev, dev, bytes, deps.clone(), None) {
                 deps = vec![c];
             }
         }
-        prev = Some(g.kernel(dev, "fwd", class_of(i), layer_cost(spec, i, batch).flops, deps));
+        prev = Some(g.kernel(dev, "fwd", class_of(i), layer_cost(spec, i, batch).flops, deps, None));
         prev_dev = dev;
     }
     // head (fwd + vjp)
     let head = crate::model::cost::head_cost(spec, batch);
     let last_dev = part.device_of(n - 1);
-    let h1 =
-        g.kernel(last_dev, "head", KernelClass::Gemm, 3.0 * head.flops, prev.into_iter().collect());
+    let h1 = g.kernel(
+        last_dev,
+        "head",
+        KernelClass::Gemm,
+        3.0 * head.flops,
+        prev.into_iter().collect(),
+        None,
+    );
     // backward chain
     let mut prev = h1;
     let mut prev_dev = last_dev;
@@ -450,11 +661,11 @@ pub fn serial_training(spec: &NetSpec, n_devices: usize, batch: usize) -> TaskGr
         let dev = part.device_of(i);
         let mut deps = vec![prev];
         if dev != prev_dev {
-            if let Some(c) = g.comm(prev_dev, dev, bytes, deps.clone()) {
+            if let Some(c) = g.comm(prev_dev, dev, bytes, deps.clone(), None) {
                 deps = vec![c];
             }
         }
-        prev = g.kernel(dev, "bwd", class_of(i), layer_bwd_cost(spec, i, batch).flops, deps);
+        prev = g.kernel(dev, "bwd", class_of(i), layer_bwd_cost(spec, i, batch).flops, deps, None);
         prev_dev = dev;
     }
     g
@@ -511,6 +722,62 @@ mod tests {
     }
 
     #[test]
+    fn forward_cycles_equal_repeated_vcycles() {
+        // mg_forward is exactly `cycles` × mg_vcycle in work and traffic —
+        // the invariant the per-cycle live driver relies on
+        let (spec, hier, part) = setup(64, 4);
+        let v = mg_vcycle(&spec, &hier, &part, 1, RelaxKind::FCF);
+        let f2 = mg_forward(&spec, &hier, &part, 1, 2);
+        assert_eq!(f2.n_tasks(), 2 * v.n_tasks());
+        assert_eq!(f2.n_comms(), 2 * v.n_comms());
+        assert!((f2.total_flops() - 2.0 * v.total_flops()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn executable_graphs_carry_payloads() {
+        let (spec, hier, part) = setup(32, 2);
+        let v = mg_vcycle(&spec, &hier, &part, 1, RelaxKind::FCF);
+        v.validate().unwrap();
+        assert!(v.tasks.iter().all(|t| t.op.is_some()), "every task needs a payload");
+        // kernels and comms get the right payload kinds
+        for t in &v.tasks {
+            match (&t.kind, t.op.unwrap()) {
+                (TaskKind::Comm { .. }, TaskOp::Xfer) => {}
+                (TaskKind::Kernel { .. }, TaskOp::Xfer) => panic!("kernel with Xfer payload"),
+                (TaskKind::Comm { .. }, _) => panic!("comm with kernel payload"),
+                _ => {}
+            }
+        }
+        let r = residual_check(&spec, &hier, &part, 1);
+        assert!(r
+            .tasks
+            .iter()
+            .all(|t| matches!(t.op, Some(TaskOp::Residual { .. }) | Some(TaskOp::Xfer))));
+    }
+
+    #[test]
+    fn war_hazards_are_encoded() {
+        // the final f_relax of a cycle rewrites F-points that the residual
+        // phase reads: the writer must depend on the reader (WAR), or a
+        // dependency-driven executor could corrupt the residual inputs
+        let (spec, hier, part) = setup(16, 2);
+        let g = mg_vcycle(&spec, &hier, &part, 1, RelaxKind::FCF);
+        let residual_ids: Vec<usize> = g
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Kernel { label: "residual", .. }))
+            .map(|t| t.id)
+            .collect();
+        assert!(!residual_ids.is_empty());
+        // some later f_relax task must list a residual task as a dep
+        let war = g.tasks.iter().any(|t| {
+            matches!(t.kind, TaskKind::Kernel { label: "f_relax", .. })
+                && t.deps.iter().any(|d| residual_ids.contains(d))
+        });
+        assert!(war, "no WAR edge from final f_relax to the residual readers");
+    }
+
+    #[test]
     fn serial_forward_flops_match_trunk() {
         let spec = NetSpec::fig6_depth(64);
         let g = serial_forward(&spec, 1, 1);
@@ -524,8 +791,7 @@ mod tests {
     fn pm_partitioned_has_boundary_comms() {
         let spec = NetSpec::fig6_depth(64);
         let g = serial_forward(&spec, 8, 1);
-        let n_comms = g.tasks.iter().filter(|t| matches!(t.kind, TaskKind::Comm { .. })).count();
-        assert_eq!(n_comms, 7); // 7 partition boundaries
+        assert_eq!(g.n_comms(), 7); // 7 partition boundaries
     }
 
     #[test]

@@ -76,6 +76,14 @@ fn sig_from_json(j: &Json) -> Result<TensorSig> {
 }
 
 impl Manifest {
+    /// Were artifacts ever exported to `dir`? Callers that can fall back to
+    /// the host solver should check this (or match on [`Manifest::load`] /
+    /// [`ArtifactStore::open`] errors) instead of failing loudly in
+    /// environments that never ran `make artifacts`.
+    pub fn present_in(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").is_file()
+    }
+
     /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -185,8 +193,37 @@ pub struct ArtifactStore {
 }
 
 impl ArtifactStore {
+    /// Open the artifact store: manifest + PJRT runtime. Errors when the
+    /// artifacts were never exported (`make artifacts`) or no PJRT runtime
+    /// is linked (the offline `xla` stub); callers with a host-numerics
+    /// fallback should degrade gracefully — see [`ArtifactStore::open_or_fallback`].
     pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
         Ok(ArtifactStore { manifest: Manifest::load(dir)?, runtime: super::client::Runtime::new()? })
+    }
+
+    /// As [`ArtifactStore::open`], but on failure prints a clear warning and
+    /// returns `None` so the caller can fall back to the host solver — the
+    /// behaviour every CLI/example entry point uses for the `pjrt` backend.
+    pub fn open_or_fallback(dir: impl AsRef<Path>) -> Option<ArtifactStore> {
+        let dir = dir.as_ref();
+        if !Manifest::present_in(dir) {
+            eprintln!(
+                "warning: no AOT artifacts at {} (run `make artifacts`); \
+                 falling back to the host solver",
+                dir.display()
+            );
+            return None;
+        }
+        match Self::open(dir) {
+            Ok(store) => Some(store),
+            Err(e) => {
+                eprintln!(
+                    "warning: PJRT backend unavailable ({e:#}); \
+                     falling back to the host solver"
+                );
+                None
+            }
+        }
     }
 
     /// Compile (or fetch from cache) and execute one entry.
@@ -210,9 +247,30 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Manifest tests need `make artifacts` output; skip (don't fail) when
+    /// the build environment never exported it.
+    fn artifacts_or_skip() -> Option<PathBuf> {
+        let dir = artifacts_dir();
+        if Manifest::present_in(&dir) {
+            Some(dir)
+        } else {
+            eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+            None
+        }
+    }
+
+    #[test]
+    fn absent_artifacts_detected_and_fallback_is_quiet() {
+        let missing = std::env::temp_dir().join("resnet-mgrit-no-artifacts");
+        assert!(!Manifest::present_in(&missing));
+        assert!(ArtifactStore::open_or_fallback(&missing).is_none());
+        assert!(Manifest::load(&missing).is_err());
+    }
+
     #[test]
     fn manifest_loads_and_has_presets() {
-        let m = Manifest::load(artifacts_dir()).unwrap();
+        let Some(dir) = artifacts_or_skip() else { return };
+        let m = Manifest::load(dir).unwrap();
         assert!(m.presets.contains_key("micro"));
         assert!(m.presets.contains_key("mnist"));
         let micro = &m.presets["micro"];
@@ -222,7 +280,8 @@ mod tests {
 
     #[test]
     fn manifest_entries_reference_real_files() {
-        let m = Manifest::load(artifacts_dir()).unwrap();
+        let Some(dir) = artifacts_or_skip() else { return };
+        let m = Manifest::load(dir).unwrap();
         let key = EntryKey::new("micro", "step_fwd", 2);
         let e = m.entry(&key).unwrap();
         assert!(e.file.exists());
@@ -235,14 +294,16 @@ mod tests {
 
     #[test]
     fn missing_entry_is_helpful_error() {
-        let m = Manifest::load(artifacts_dir()).unwrap();
+        let Some(dir) = artifacts_or_skip() else { return };
+        let m = Manifest::load(dir).unwrap();
         let err = m.entry(&EntryKey::new("micro", "nonexistent", 2)).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
     }
 
     #[test]
     fn check_spec_accepts_matching_and_rejects_mismatch() {
-        let m = Manifest::load(artifacts_dir()).unwrap();
+        let Some(dir) = artifacts_or_skip() else { return };
+        let m = Manifest::load(dir).unwrap();
         m.check_spec(&crate::model::NetSpec::micro()).unwrap();
         m.check_spec(&crate::model::NetSpec::mnist()).unwrap();
         let mut bad = crate::model::NetSpec::micro();

@@ -461,6 +461,7 @@ mod tests {
             device: 0,
             kind: TaskKind::Kernel { label: "k", class: KernelClass::Gemm, flops: 1e9 },
             deps: vec![],
+            op: None,
         };
         let g = TaskGraph { tasks: vec![mk(0), mk(1)] };
         let c = cluster(1);
@@ -485,6 +486,7 @@ mod tests {
             device: 0,
             kind: TaskKind::Kernel { label: "k", class: KernelClass::Gemm, flops: 1e3 },
             deps: vec![],
+            op: None,
         };
         let g = TaskGraph { tasks: (0..5).map(mk).collect() };
         let c = cluster(1);
@@ -503,6 +505,7 @@ mod tests {
             device: 0,
             kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e3 },
             deps: vec![],
+            op: None,
         };
         let g = TaskGraph { tasks: (0..5).map(mk).collect() };
         let c = cluster(1);
@@ -525,6 +528,7 @@ mod tests {
             device: 1,
             kind: TaskKind::Comm { src: 0, dst: 1, bytes: 3.125e6 },
             deps: vec![],
+            op: None,
         };
         let g = TaskGraph { tasks: vec![mk(0), mk(1)] };
         let c = ClusterModel {
@@ -547,6 +551,7 @@ mod tests {
                 device: 0,
                 kind: TaskKind::Kernel { label: "k", class: KernelClass::Gemm, flops: 1.0 },
                 deps: vec![0],
+                op: None,
             }],
         };
         assert!(simulate(&g, &cluster(1), false).is_err());

@@ -32,7 +32,7 @@ fn parallel_mgrit_converges_like_serial_over_many_device_counts() {
     let (serial, sstats) = mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts).unwrap();
 
     for n_dev in [1usize, 3, 8] {
-        let drv = ParallelMgrit::new(f.clone(), hier.clone(), n_dev, 1).unwrap();
+        let drv = ParallelMgrit::new(f.clone(), spec.clone(), hier.clone(), n_dev, 2).unwrap();
         let (par, pstats, _) = drv.solve(&u0, &opts).unwrap();
         assert_eq!(pstats.residual_norms.len(), sstats.residual_norms.len());
         for (a, b) in par.iter().zip(&serial) {
@@ -43,6 +43,57 @@ fn parallel_mgrit_converges_like_serial_over_many_device_counts() {
             assert!((x - y).abs() / y.max(1e-30) < 1e-3, "{x} vs {y}");
         }
     }
+}
+
+#[test]
+fn dag_executor_bit_identical_to_serial_fas() {
+    // the executor-equivalence contract: the dependency-driven DAG executor
+    // must produce BIT-IDENTICAL states, residual norms, and Φ-evaluation
+    // counts to the serial engine — the graph's hazard edges make any
+    // topological execution order equivalent to the serial order
+    let spec = Arc::new(NetSpec::mnist());
+    let f = factory(spec.clone(), 86);
+    let solver = f.build(0).unwrap();
+    let mut rng = Rng::new(87);
+    let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let opts = MgritOptions { tol: 0.0, max_cycles: 3, ..Default::default() };
+    let hier = Hierarchy::two_level(32, spec.h(), 4).unwrap();
+    let (serial, sstats) = mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts).unwrap();
+
+    for n_dev in [1usize, 2, 4, 8] {
+        let drv = ParallelMgrit::new(f.clone(), spec.clone(), hier.clone(), n_dev, 1).unwrap();
+        let (par, pstats, _) = drv.solve(&u0, &opts).unwrap();
+        assert_eq!(par.len(), serial.len());
+        for (j, (a, b)) in par.iter().zip(&serial).enumerate() {
+            assert!(a.data() == b.data(), "n_dev={n_dev}: state {j} differs bitwise");
+        }
+        assert_eq!(
+            pstats.residual_norms, sstats.residual_norms,
+            "n_dev={n_dev}: residual norms not bit-identical"
+        );
+        assert_eq!(pstats.phi_evals, sstats.phi_evals, "n_dev={n_dev}: work count differs");
+    }
+}
+
+#[test]
+fn dag_executor_bit_identical_on_multilevel_hierarchy() {
+    // same contract on a >2-level hierarchy (recursive V-cycle path)
+    let spec = Arc::new(NetSpec::mnist());
+    let f = factory(spec.clone(), 88);
+    let solver = f.build(0).unwrap();
+    let mut rng = Rng::new(89);
+    let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let opts = MgritOptions { tol: 0.0, max_cycles: 2, ..Default::default() };
+    let hier = Hierarchy::build(32, spec.h(), 4, 3, 2).unwrap();
+    assert!(hier.n_levels() >= 3);
+    let (serial, sstats) = mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts).unwrap();
+    let drv = ParallelMgrit::new(f, spec, hier, 3, 1).unwrap();
+    let (par, pstats, _) = drv.solve(&u0, &opts).unwrap();
+    for (a, b) in par.iter().zip(&serial) {
+        assert!(a.data() == b.data(), "multilevel state differs bitwise");
+    }
+    assert_eq!(pstats.residual_norms, sstats.residual_norms);
+    assert_eq!(pstats.phi_evals, sstats.phi_evals);
 }
 
 #[test]
@@ -106,7 +157,7 @@ fn taskgraph_comm_matches_live_coordinator_accounting() {
     let opts = MgritOptions { tol: 0.0, max_cycles: 2, ..Default::default() };
 
     for n_dev in [2usize, 4] {
-        let drv = ParallelMgrit::new(f.clone(), hier.clone(), n_dev, 1).unwrap();
+        let drv = ParallelMgrit::new(f.clone(), spec.clone(), hier.clone(), n_dev, 1).unwrap();
         let (_, _, metrics) = drv.solve(&u0, &opts).unwrap();
 
         let part = drv.partition().clone();
@@ -150,7 +201,7 @@ fn prop_parallel_equals_serial_for_random_configs() {
             let hier = Hierarchy::two_level(n, spec.h(), c).unwrap();
             let (serial, _) =
                 mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts).unwrap();
-            let drv = ParallelMgrit::new(f, hier, n_dev, 1).unwrap();
+            let drv = ParallelMgrit::new(f, spec.clone(), hier, n_dev, 1).unwrap();
             let (par, _, _) = drv.solve(&u0, &opts).unwrap();
             for (a, b) in par.iter().zip(&serial) {
                 assert!(rel_l2_err(a.data(), b.data()) < 1e-5, "n={n} c={c} dev={n_dev}");

@@ -1,0 +1,298 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real crate links the PJRT C API shared library, which is not available
+//! in this build environment. This stub reproduces exactly the API surface
+//! `resnet-mgrit` uses so the crate always compiles and the pure-host paths
+//! run untouched:
+//!
+//! - [`Literal`] is fully functional (an in-memory typed array) — the
+//!   Tensor ↔ Literal conversion helpers and their tests work as-is;
+//! - [`PjRtClient::cpu`] (and everything downstream of it) returns a clear
+//!   "PJRT unavailable" error, which `resnet_mgrit::runtime` surfaces as the
+//!   host-solver fallback.
+//!
+//! Replace the `xla = { path = "xla-stub" }` dependency with the real crate
+//! to light up the AOT-artifact execution path; no call-site changes needed.
+
+use std::path::Path;
+
+/// Stub error type (the real crate's errors are also displayed as strings).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built with the in-tree `xla` stub; \
+         link the real `xla` crate to execute AOT artifacts)"
+    ))
+}
+
+/// Element types the stub can carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Tuple,
+}
+
+mod private {
+    /// Typed storage of one literal.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Data {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+        Tuple(Vec<super::Literal>),
+    }
+
+    pub trait Native: Copy {
+        fn wrap(v: Vec<Self>) -> Data
+        where
+            Self: Sized;
+        fn unwrap(d: &Data) -> Option<Vec<Self>>
+        where
+            Self: Sized;
+        fn ty() -> super::ElementType;
+    }
+
+    impl Native for f32 {
+        fn wrap(v: Vec<f32>) -> Data {
+            Data::F32(v)
+        }
+        fn unwrap(d: &Data) -> Option<Vec<f32>> {
+            match d {
+                Data::F32(v) => Some(v.clone()),
+                _ => None,
+            }
+        }
+        fn ty() -> super::ElementType {
+            super::ElementType::F32
+        }
+    }
+
+    impl Native for i32 {
+        fn wrap(v: Vec<i32>) -> Data {
+            Data::I32(v)
+        }
+        fn unwrap(d: &Data) -> Option<Vec<i32>> {
+            match d {
+                Data::I32(v) => Some(v.clone()),
+                _ => None,
+            }
+        }
+        fn ty() -> super::ElementType {
+            super::ElementType::S32
+        }
+    }
+}
+
+/// Rust scalar types a [`Literal`] can hold (f32 and i32 here).
+pub trait NativeType: private::Native {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A typed, shaped array value — fully functional in the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: private::Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![v]) }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy the elements out as `Vec<T>`; errors on a dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error(format!("literal dtype mismatch (have {:?})", self.ty())))
+    }
+
+    /// Shape of a non-tuple literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            private::Data::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty() }),
+        }
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            private::Data::Tuple(v) => Ok(v),
+            _ => Err(Error("not a tuple literal".into())),
+        }
+    }
+
+    /// Build a tuple literal (test/interop helper; mirrors the real crate).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: private::Data::Tuple(parts) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            private::Data::F32(v) => v.len(),
+            private::Data::I32(v) => v.len(),
+            private::Data::Tuple(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match &self.data {
+            private::Data::F32(_) => ElementType::F32,
+            private::Data::I32(_) => ElementType::S32,
+            private::Data::Tuple(_) => ElementType::Tuple,
+        }
+    }
+}
+
+/// Shape (dims + element type) of a non-tuple literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Stub PJRT client: construction always fails with a clear message.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub compiled executable (unreachable: the client cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub device buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub HLO module handle.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "cannot parse {}: HLO parsing requires the real `xla` crate (stub build)",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Stub computation handle.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(r.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_i32() {
+        let s = Literal::scalar(0.25f32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.25]);
+        let labels = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(labels.element_count(), 3);
+        assert_eq!(labels.array_shape().unwrap().ty(), ElementType::S32);
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(1.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_client_unavailable_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("x.hlo.txt"));
+    }
+}
