@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §6): train the `mnist` preset through the
+//! End-to-end driver (DESIGN.md §7): train the `mnist` preset through the
 //! full three-layer stack and reproduce the paper's accuracy-parity claim —
 //! MG layer-parallel training with 2 early-stopped cycles matches serial
 //! backprop Top-1 error, epoch for epoch.
@@ -13,6 +13,7 @@
 use std::sync::Arc;
 
 use resnet_mgrit::data::mnist;
+use resnet_mgrit::mgrit::Granularity;
 use resnet_mgrit::model::{NetParams, NetSpec};
 use resnet_mgrit::solver::host::HostSolver;
 use resnet_mgrit::train::{self, Method, TrainConfig};
@@ -25,6 +26,16 @@ fn main() -> resnet_mgrit::Result<()> {
     let batch = args.usize_or("batch", 16)?;
     let lr = args.f64_or("lr", 0.05)? as f32;
     let mut backend = args.get_or("backend", "pjrt").to_string();
+    // --parallel N routes the MG run through the whole-training-step task
+    // graph (ParallelMgrit::train_step) over N worker streams — host
+    // numerics only (PJRT contexts are per-thread), so say so up front
+    // instead of silently dropping a requested pjrt backend
+    let parallel = args.usize_or("parallel", 0)?;
+    let granularity = Granularity::parse(args.get_or("granularity", "per_step"))?;
+    if parallel > 0 && backend == "pjrt" {
+        println!("--parallel runs on the host backend; overriding --backend pjrt");
+        backend = "host".to_string();
+    }
     let epochs = 4usize;
     let steps_per_epoch = steps / epochs;
 
@@ -52,7 +63,10 @@ fn main() -> resnet_mgrit::Result<()> {
     );
     println!("{steps} steps = {epochs} epochs × {steps_per_epoch}, batch {batch}, lr {lr}\n");
 
-    let run = |label: &str, method: Method| -> resnet_mgrit::Result<Vec<(usize, f64, f64)>> {
+    let run = |label: &str,
+               method: Method,
+               par: usize|
+     -> resnet_mgrit::Result<Vec<(usize, f64, f64)>> {
         let mut params = NetParams::init(&spec, 123)?; // same init for both
         let mut rows = Vec::new();
         let timer = Timer::start();
@@ -64,8 +78,12 @@ fn main() -> resnet_mgrit::Result<()> {
                 method,
                 seed: 1000 + epoch as u64, // same batch schedule for both runs
             };
-            let logs = match (&store, backend.as_str()) {
-                (Some(st), "pjrt") => {
+            let logs = match (&store, backend.as_str(), par) {
+                // the whole-training-step task graph over `par` streams
+                (_, _, p) if p > 0 => {
+                    train::train_parallel(&spec, &mut params, &data, &cfg, p, granularity)?
+                }
+                (Some(st), "pjrt", _) => {
                     let spec2 = spec.clone();
                     let st2 = st.clone();
                     train::train(&spec, &mut params, &data, &cfg, move |p| {
@@ -99,9 +117,16 @@ fn main() -> resnet_mgrit::Result<()> {
     };
 
     println!("— serial backprop (baseline) —");
-    let serial = run("serial", Method::Serial)?;
-    println!("\n— MG layer-parallel, 2 early-stopped cycles (the paper's config) —");
-    let mg = run("mgrit-2", Method::Mgrit { cycles: 2 })?;
+    let serial = run("serial", Method::Serial, 0)?;
+    if parallel > 0 {
+        println!(
+            "\n— MG layer-parallel via the whole-training-step task graph \
+             ({parallel} devices, {granularity:?}) —"
+        );
+    } else {
+        println!("\n— MG layer-parallel, 2 early-stopped cycles (the paper's config) —");
+    }
+    let mg = run("mgrit-2", Method::Mgrit { cycles: 2 }, parallel)?;
 
     println!("\naccuracy parity (paper §IV-A: 'approximately the same Top-1 error'):");
     println!("  epoch   serial top-1   MG top-1   gap");
@@ -111,6 +136,13 @@ fn main() -> resnet_mgrit::Result<()> {
             s * 100.0,
             m * 100.0,
             (m - s) * 100.0
+        );
+    }
+    if parallel > 0 {
+        let params = NetParams::init(&spec, 123)?;
+        println!(
+            "\n{}",
+            train::parity_report(&spec, &params, &data, batch, 2, lr, parallel, granularity)?
         );
     }
     Ok(())

@@ -1,6 +1,7 @@
 //! Bench: regenerate Fig 6b (training-phase fwd prop: serial vs PM vs MG)
 //! and Fig 6c (compute/communication decomposition) on the simulated
-//! TX-GAIA cluster.
+//! TX-GAIA cluster, plus the training-step timeline — the whole-training-step
+//! graph scored by the simulator *and* observed on the live DAG executor.
 
 use resnet_mgrit::experiments::fig6;
 use resnet_mgrit::util::bench::Suite;
@@ -18,9 +19,19 @@ fn main() {
     println!("{}", c.render());
     suite.table("fig6c_rows", c.to_json_rows());
 
-    suite.bench("simulate_mg_training_fwd_24gpu", || {
+    // the training-step timeline: simulated and observed on one graph
+    let (depth, devices) = if quick { (32, 2) } else { (64, 4) };
+    let (t, ascii) = fig6::training_timeline(depth, devices).expect("training timeline");
+    println!("{}", t.render());
+    println!("{ascii}");
+    suite.table("training_timeline_rows", t.to_json_rows());
+
+    suite.bench("simulate_mg_training_step_24gpu", || {
         let spec = resnet_mgrit::model::NetSpec::fig6();
-        let _ = fig6::simulate_mg(&spec, 24, 2, false).unwrap();
+        let _ = fig6::simulate_mg(&spec, 24, 2, true).unwrap();
+    });
+    suite.bench("live_train_step_depth32_2dev", || {
+        let _ = fig6::live_training_timeline(32, 2, 2).unwrap();
     });
     suite.finish();
 }

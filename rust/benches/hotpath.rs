@@ -62,13 +62,33 @@ fn main() {
         let sp = spec2.clone();
         let factory = move |_w: usize| HostSolver::new(sp.clone(), params2.clone());
         let hier = Hierarchy::two_level(32, spec2.h(), 4).unwrap();
-        let driver = ParallelMgrit::new(factory, spec2, hier, 4, 1).unwrap();
+        let mut driver = ParallelMgrit::new(factory, spec2.clone(), hier, 4, 1).unwrap();
+        // clear the pool trace each iteration — it is an unbounded append-only
+        // Vec, and thousands of timed iterations would skew the medians
         suite.bench("dag_executor_cycle_mnist_b1_4dev", || {
+            driver.pool().clear_trace();
             black_box(driver.solve(&u0, &opts).unwrap());
         });
         // graph construction itself (built once per solve)
         suite.bench("build_mnist_vcycle_graph", || {
             black_box(driver.cycle_graph(&opts));
+        });
+        // the whole-training-step graph on the live executor (fwd + head +
+        // adjoint + grads + SGD in one DAG), per-step and fused granularity
+        let y = Tensor::randn(&[1, 1, 28, 28], 0.5, &mut rng);
+        let labels = [3i32];
+        let topts = MgritOptions::early_stopping(2);
+        suite.bench("dag_executor_train_step_mnist_b1_4dev", || {
+            driver.pool().clear_trace();
+            black_box(driver.train_step(&y, &labels, &topts, 0.05).unwrap());
+        });
+        driver.set_granularity(resnet_mgrit::mgrit::Granularity::PerBlock);
+        suite.bench("dag_executor_train_step_mnist_b1_4dev_per_block", || {
+            driver.pool().clear_trace();
+            black_box(driver.train_step(&y, &labels, &topts, 0.05).unwrap());
+        });
+        suite.bench("build_mnist_train_step_graph", || {
+            black_box(driver.train_graph(&topts));
         });
     }
 

@@ -22,9 +22,10 @@ use super::partition::Partition;
 use super::streams::StreamPool;
 use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph;
-use crate::model::NetSpec;
-use crate::solver::SolverFactory;
+use crate::mgrit::taskgraph::{self, Granularity};
+use crate::model::params::NetGrads;
+use crate::model::{NetParams, NetSpec};
+use crate::solver::{NetExecutor, SolverFactory};
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -55,13 +56,33 @@ impl RunMetrics {
     }
 }
 
+/// Output of one whole-training-step graph execution (see
+/// [`ParallelMgrit::train_step`]): bit-identical to the serial reference
+/// `train::mg_step_serial` on the same hierarchy.
+#[derive(Debug)]
+pub struct TrainStepOutput {
+    pub loss: f64,
+    /// Full gradient set (trunk from the graph's `GradAccum` tasks; opening
+    /// and head computed host-side exactly as in the serial step).
+    pub grads: NetGrads,
+    /// Post-SGD parameters (trunk from the graph's `ParamUpdate` tasks).
+    pub params: NetParams,
+    /// Fine-level forward trajectory u^0..u^N.
+    pub states: Vec<Tensor>,
+    /// Adjoints λ^0..λ^N.
+    pub lams: Vec<Tensor>,
+    pub metrics: RunMetrics,
+}
+
 /// Dependency-driven parallel MGRIT over a stream pool.
 pub struct ParallelMgrit<F: SolverFactory> {
     pool: StreamPool<F>,
+    factory: F,
     spec: Arc<NetSpec>,
     batch: usize,
     hier: Hierarchy,
     partition: Partition,
+    granularity: Granularity,
 }
 
 impl<F: SolverFactory> ParallelMgrit<F> {
@@ -78,8 +99,16 @@ impl<F: SolverFactory> ParallelMgrit<F> {
     ) -> Result<ParallelMgrit<F>> {
         let n_blocks = hier.fine().blocks(hier.coarsen).len();
         let partition = Partition::contiguous(n_blocks, n_devices)?;
-        let pool = StreamPool::new(partition.n_devices(), factory)?;
-        Ok(ParallelMgrit { pool, spec, batch, hier, partition })
+        let pool = StreamPool::new(partition.n_devices(), factory.clone())?;
+        Ok(ParallelMgrit {
+            pool,
+            factory,
+            spec,
+            batch,
+            hier,
+            partition,
+            granularity: Granularity::PerStep,
+        })
     }
 
     pub fn partition(&self) -> &Partition {
@@ -94,12 +123,52 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         &self.hier
     }
 
+    /// F-relaxation task granularity (`PerStep` default; `PerBlock` fuses
+    /// each block's F-span into one task, reaching the solver's fused
+    /// `block_fprop` fast path). Bit-identical either way.
+    pub fn set_granularity(&mut self, g: Granularity) {
+        self.granularity = g;
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        self.granularity
+    }
+
     /// The executable V-cycle schedule this driver runs each MG iteration —
     /// the same graph `sim::simulate` scores (Fig 5/6 consistency).
     pub fn cycle_graph(&self, opts: &MgritOptions) -> taskgraph::TaskGraph {
-        taskgraph::mg_vcycle(&self.spec, &self.hier, &self.partition, self.batch, opts.relax)
+        taskgraph::mg_vcycle_with(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            self.batch,
+            opts.relax,
+            self.granularity,
+        )
     }
 
+    /// The whole-training-step schedule (forward cycles → head → adjoint
+    /// cycles → per-layer gradients → per-layer SGD updates) — one graph,
+    /// no inter-phase barriers; identical for the simulator and the live
+    /// executor.
+    pub fn train_graph(&self, opts: &MgritOptions) -> taskgraph::TaskGraph {
+        taskgraph::mg_train_step(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            self.batch,
+            opts.max_cycles,
+            opts.relax,
+            self.granularity,
+        )
+    }
+
+}
+
+impl<F: SolverFactory> ParallelMgrit<F>
+where
+    F::Solver: NetExecutor,
+{
     /// Fold one execution report into the run metrics. `state_bytes` is the
     /// size of one layer state actually being solved for (from `u0`), so the
     /// traffic ledger reflects the real tensors, not the construction-time
@@ -160,6 +229,75 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             }
         }
         Ok((st.into_fine_states(), stats, metrics))
+    }
+
+    /// One whole training step executed as a single task graph: forward
+    /// MGRIT (fixed `opts.max_cycles` early-stopped cycles — the paper's
+    /// training mode, so no mid-graph convergence exit), head, adjoint
+    /// MGRIT, per-layer gradients, per-layer SGD — with no inter-phase
+    /// barriers. The opening layer and its VJP, and the head/opening SGD
+    /// updates, run host-side exactly as in the serial step (parameters
+    /// live on the host in both execution paths).
+    ///
+    /// Bit-identical to `train::mg_step_serial` on the same hierarchy —
+    /// asserted by `tests/mgrit_integration.rs`.
+    pub fn train_step(
+        &self,
+        y: &Tensor,
+        labels: &[i32],
+        opts: &MgritOptions,
+        lr: f32,
+    ) -> Result<TrainStepOutput> {
+        // a scheduler-side executor for the host-side stages; its parameter
+        // snapshot is the one the workers share (same factory, worker 0's
+        // view — factories may key device selection off the index)
+        let exec = self.factory.build(0)?;
+        let params = Arc::new(exec.net_params().clone());
+        let u0 = exec.opening(y)?;
+        let graph = self.train_graph(opts);
+        let state_bytes = 4 * u0.len() as u64;
+        let mut st = ExecState::initial_train(&self.hier, &u0, labels, params.clone(), lr);
+        let mut metrics = RunMetrics::default();
+        let mut stats =
+            CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
+        let rep = executor::execute(&self.pool, &self.hier, &graph, &mut st)?;
+        Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
+        metrics.cycles = opts.max_cycles;
+        let out = st.into_training_outputs()?;
+        // host-side epilogue — the same arithmetic as the serial step
+        let (dw_open, db_open) = crate::train::opening_vjp(
+            y,
+            &params.w_open,
+            &params.b_open,
+            self.spec.opening.pad,
+            &out.lams[0],
+        )?;
+        let grads = NetGrads {
+            w_open: dw_open,
+            b_open: db_open,
+            trunk: out.trunk_grads,
+            w_fc: out.dw_fc,
+            b_fc: out.db_fc,
+        };
+        let mut new_params = NetParams {
+            w_open: params.w_open.clone(),
+            b_open: params.b_open.clone(),
+            trunk: out.new_trunk,
+            w_fc: params.w_fc.clone(),
+            b_fc: params.b_fc.clone(),
+        };
+        new_params.w_open.axpy(-lr, &grads.w_open)?;
+        new_params.b_open.axpy(-lr, &grads.b_open)?;
+        new_params.w_fc.axpy(-lr, &grads.w_fc)?;
+        new_params.b_fc.axpy(-lr, &grads.b_fc)?;
+        Ok(TrainStepOutput {
+            loss: out.loss,
+            grads,
+            params: new_params,
+            states: out.states,
+            lams: out.lams,
+            metrics,
+        })
     }
 }
 

@@ -4,7 +4,9 @@
 //!
 //! This replaces the old per-phase barriers: C-relaxation and residual work
 //! of one partition overlap F-relaxation of another, exactly as in the
-//! simulated schedule (the paper's kernel-concurrency argument, Fig 5).
+//! simulated schedule (the paper's kernel-concurrency argument, Fig 5) —
+//! and, for the training graph, adjoint relaxation on early layers overlaps
+//! parameter-gradient work on late layers.
 //!
 //! ## Dependency-retirement protocol
 //!
@@ -14,47 +16,56 @@
 //! 3. ready **Kernel** tasks clone their input slots out of [`ExecState`]
 //!    (the scheduler thread is the only state owner, so no locks), and are
 //!    submitted to the worker owning `task.device`;
-//! 4. each completion ([`JobDone`]) writes the task's single output slot
-//!    back, decrements its dependents' counters, and pushes newly-ready
-//!    tasks — completion order is irrelevant because the graph carries
-//!    RAW/WAR/WAW edges for every slot (see `mgrit::taskgraph`);
+//! 4. each completion ([`JobDone`]) writes the task's output slot(s) back,
+//!    decrements its dependents' counters, and pushes newly-ready tasks —
+//!    completion order is irrelevant because the graph carries RAW/WAR/WAW
+//!    edges for every slot (see `mgrit::taskgraph`);
 //! 5. the run ends when every task has retired; a non-executable task
 //!    (`op == None`) or an exhausted ready set with nothing in flight is an
 //!    error, not a hang.
 //!
+//! The training ops extend the same protocol: `Head` seeds the whole adjoint
+//! slot set when it retires (every adjoint frontier starts at the head task,
+//! so no adjoint work can observe unseeded state); `GradAccum` fills one
+//! layer's sharded gradient slot; `ParamUpdate` writes the layer's fresh
+//! parameters.
+//!
 //! Because each op performs the same f32 arithmetic in the same order as the
-//! serial engine (`mgrit::fas`), any topological execution is bit-identical
-//! to the serial solve — asserted by `tests/mgrit_integration.rs`.
+//! serial engines (`mgrit::fas` / `train::mg_step_serial`), any topological
+//! execution is bit-identical to the serial solve — asserted by
+//! `tests/mgrit_integration.rs`.
 
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail};
 
 use super::streams::{JobDone, StreamPool};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind, TaskOp};
-use crate::solver::{BlockSolver, SolverFactory};
+use crate::mgrit::taskgraph::{Sys, Task, TaskGraph, TaskKind, TaskOp};
+use crate::model::params::TrunkGradSlots;
+use crate::model::NetParams;
+use crate::solver::{BlockSolver, NetExecutor, SolverFactory};
 use crate::tensor::Tensor;
 use crate::Result;
 
-/// The live MGRIT state the executor reads and writes: per level, the layer
-/// states `u`, the FAS right-hand sides `g`, the C-point residuals `r`, and
-/// the injection snapshots the correction consumes.
+/// The state slots of one MGRIT system (primal or adjoint): per level, the
+/// point states `u`, the FAS right-hand sides `g`, the C-point residuals `r`,
+/// and the injection snapshots the correction consumes.
 #[derive(Debug)]
-pub struct ExecState {
+pub struct SysState {
     pub u: Vec<Vec<Tensor>>,
     g: Vec<Option<Vec<Tensor>>>,
     r: Vec<Vec<Option<Tensor>>>,
     inj: Vec<Vec<Option<Tensor>>>,
 }
 
-impl ExecState {
-    /// Initial fine-level guess: every point of every level seeded with `u0`
-    /// (same constant-in-depth guess as `LevelState::initial`); coarse
-    /// right-hand sides start at zero.
-    pub fn initial(hier: &Hierarchy, u0: &Tensor) -> ExecState {
+impl SysState {
+    /// Every point of every level seeded with `seed` (the constant-in-depth
+    /// initial guess of `LevelState::initial`); coarse right-hand sides zero.
+    fn seeded(hier: &Hierarchy, seed: &Tensor) -> SysState {
         let u: Vec<Vec<Tensor>> =
-            hier.levels.iter().map(|l| vec![u0.clone(); l.n_points]).collect();
+            hier.levels.iter().map(|l| vec![seed.clone(); l.n_points]).collect();
         let g = hier
             .levels
             .iter()
@@ -63,24 +74,174 @@ impl ExecState {
                 if i == 0 {
                     None
                 } else {
-                    Some(vec![Tensor::zeros(u0.dims()); l.n_points])
+                    Some(vec![Tensor::zeros(seed.dims()); l.n_points])
                 }
             })
             .collect();
         let r = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
         let inj = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
-        ExecState { u, g, r, inj }
+        SysState { u, g, r, inj }
+    }
+}
+
+/// Training-only state: the batch labels, the parameter snapshot the step
+/// linearizes around, and the sharded per-layer output slots the fan-out
+/// tasks fill independently.
+#[derive(Debug)]
+struct TrainState {
+    labels: Vec<i32>,
+    lr: f32,
+    params: Arc<NetParams>,
+    grads: TrunkGradSlots,
+    new_trunk: TrunkGradSlots,
+    head: Option<HeadOut>,
+}
+
+/// What the head task leaves behind on the scheduler side.
+#[derive(Debug)]
+struct HeadOut {
+    loss: f64,
+    dw_fc: Tensor,
+    db_fc: Tensor,
+}
+
+/// The live state the executor reads and writes: the primal system, the
+/// adjoint system (seeded by the `Head` task mid-graph), and the training
+/// bookkeeping.
+#[derive(Debug)]
+pub struct ExecState {
+    pri: SysState,
+    adj: Option<SysState>,
+    train: Option<TrainState>,
+}
+
+/// Everything a completed training graph produced, extracted from the state.
+#[derive(Debug)]
+pub struct TrainingOutputs {
+    pub loss: f64,
+    /// Fine-level forward trajectory u^0..u^N.
+    pub states: Vec<Tensor>,
+    /// Adjoints λ^0..λ^N (forward layer indexing).
+    pub lams: Vec<Tensor>,
+    /// Per-layer (dW, db) trunk gradients.
+    pub trunk_grads: Vec<(Tensor, Tensor)>,
+    /// Per-layer post-SGD trunk parameters.
+    pub new_trunk: Vec<(Tensor, Tensor)>,
+    pub dw_fc: Tensor,
+    pub db_fc: Tensor,
+}
+
+impl ExecState {
+    /// Forward-solve state: primal system seeded with `u0`, no training
+    /// bookkeeping (graphs with training ops will be rejected at dispatch).
+    pub fn initial(hier: &Hierarchy, u0: &Tensor) -> ExecState {
+        ExecState { pri: SysState::seeded(hier, u0), adj: None, train: None }
     }
 
-    /// Residual tensor at `(level, j)` if computed this run.
+    /// Training-step state: as [`ExecState::initial`] plus the labels, the
+    /// learning rate, and the parameter snapshot the `ParamUpdate` tasks
+    /// update. The adjoint system is seeded by the `Head` task at runtime.
+    pub fn initial_train(
+        hier: &Hierarchy,
+        u0: &Tensor,
+        labels: &[i32],
+        params: Arc<NetParams>,
+        lr: f32,
+    ) -> ExecState {
+        let n_layers = hier.fine().n_points - 1;
+        ExecState {
+            pri: SysState::seeded(hier, u0),
+            adj: None,
+            train: Some(TrainState {
+                labels: labels.to_vec(),
+                lr,
+                params,
+                grads: TrunkGradSlots::new(n_layers),
+                new_trunk: TrunkGradSlots::new(n_layers),
+                head: None,
+            }),
+        }
+    }
+
+    fn sys(&self, s: Sys) -> Result<&SysState> {
+        match s {
+            Sys::Primal => Ok(&self.pri),
+            Sys::Adjoint => self
+                .adj
+                .as_ref()
+                .ok_or_else(|| anyhow!("adjoint state missing (Head task has not retired)")),
+        }
+    }
+
+    fn sys_mut(&mut self, s: Sys) -> Result<&mut SysState> {
+        match s {
+            Sys::Primal => Ok(&mut self.pri),
+            Sys::Adjoint => self
+                .adj
+                .as_mut()
+                .ok_or_else(|| anyhow!("adjoint state missing (Head task has not retired)")),
+        }
+    }
+
+    fn train(&self) -> Result<&TrainState> {
+        self.train.as_ref().ok_or_else(|| {
+            anyhow!("training op in a non-training run (use ExecState::initial_train)")
+        })
+    }
+
+    fn train_mut(&mut self) -> Result<&mut TrainState> {
+        self.train.as_mut().ok_or_else(|| {
+            anyhow!("training op in a non-training run (use ExecState::initial_train)")
+        })
+    }
+
+    /// Residual tensor at `(level, j)` of the primal system, if computed.
     pub fn residual(&self, level: usize, j: usize) -> Option<&Tensor> {
-        self.r[level][j].as_ref()
+        self.pri.r[level][j].as_ref()
     }
 
     /// Consume the state, returning the fine-level trajectory.
     pub fn into_fine_states(mut self) -> Vec<Tensor> {
-        self.u.swap_remove(0)
+        self.pri.u.swap_remove(0)
     }
+
+    /// Consume a completed training run into its outputs. Errors if the head
+    /// never retired or any sharded slot is unfilled.
+    pub fn into_training_outputs(self) -> Result<TrainingOutputs> {
+        let adj = self.adj.ok_or_else(|| anyhow!("training run never seeded the adjoint"))?;
+        let train = self
+            .train
+            .ok_or_else(|| anyhow!("not a training run (use ExecState::initial_train)"))?;
+        let head = train.head.ok_or_else(|| anyhow!("head task never retired"))?;
+        let mut pri = self.pri;
+        let states = pri.u.swap_remove(0);
+        let mut adj = adj;
+        // μ^m = λ^{N−m} → reverse back to forward indexing
+        let mut lams = adj.u.swap_remove(0);
+        lams.reverse();
+        Ok(TrainingOutputs {
+            loss: head.loss,
+            states,
+            lams,
+            trunk_grads: train.grads.into_pairs()?,
+            new_trunk: train.new_trunk.into_pairs()?,
+            dw_fc: head.dw_fc,
+            db_fc: head.db_fc,
+        })
+    }
+}
+
+/// Typed result of one kernel task (the payload of [`JobDone`]).
+#[derive(Debug)]
+pub enum TaskOut {
+    /// A single state/residual/rhs tensor.
+    State(Tensor),
+    /// The states of a fused F-span (`BlockRun`), in point order.
+    States(Vec<Tensor>),
+    /// A (weight, bias)-shaped pair: a layer gradient or updated parameters.
+    Pair(Tensor, Tensor),
+    /// Head forward + VJP output.
+    Head { loss: f64, du: Tensor, dw_fc: Tensor, db_fc: Tensor },
 }
 
 /// Aggregate record of one graph execution.
@@ -90,7 +251,7 @@ pub struct ExecReport {
     pub comm_events: usize,
     /// Kernel tasks executed.
     pub kernels: usize,
-    /// Φ applications performed (the solve's work measure).
+    /// Φ/Ψ applications performed (the solve's work measure).
     pub phi_evals: usize,
     /// Per-label worker-busy seconds, in first-seen order.
     pub phase_s: Vec<(&'static str, f64)>,
@@ -108,7 +269,10 @@ pub fn execute<F: SolverFactory>(
     hier: &Hierarchy,
     graph: &TaskGraph,
     st: &mut ExecState,
-) -> Result<ExecReport> {
+) -> Result<ExecReport>
+where
+    F::Solver: NetExecutor,
+{
     let n = graph.tasks.len();
     let mut report = ExecReport::default();
     if n == 0 {
@@ -122,7 +286,7 @@ pub fn execute<F: SolverFactory>(
             dependents[d].push(t.id);
         }
     }
-    let (tx, rx) = channel::<JobDone<Tensor>>();
+    let (tx, rx) = channel::<JobDone<TaskOut>>();
     let mut ready: Vec<usize> =
         graph.tasks.iter().filter(|t| t.deps.is_empty()).map(|t| t.id).collect();
     let mut in_flight = 0usize;
@@ -170,6 +334,9 @@ pub fn execute<F: SolverFactory>(
             TaskOp::PointUpdate { .. } | TaskOp::Residual { .. } | TaskOp::Restrict { .. } => {
                 report.phi_evals += 1;
             }
+            TaskOp::BlockRun { j_first, j_last, .. } => {
+                report.phi_evals += j_last - j_first + 1;
+            }
             _ => {}
         }
         report.kernels += 1;
@@ -185,104 +352,294 @@ pub fn execute<F: SolverFactory>(
     Ok(report)
 }
 
+/// Forward fine state a Ψ application at (level, j−1 → j) linearizes around
+/// — the same formula the graph builder used for the matching RAW edge.
+fn rev_layer(hier: &Hierarchy, level: usize, j: usize) -> usize {
+    hier.adjoint_state_index(level, j)
+}
+
 /// Clone a kernel task's inputs out of the state and submit it to its
 /// device's worker. For `Restrict`, the injection (coarse initial guess +
 /// correction snapshot) is applied at dispatch time: the graph's WAR edges
 /// guarantee every reader of the old coarse slots has already completed.
+/// Adjoint ops additionally clone the forward fine state they linearize
+/// around (their RAW edges guarantee it is final).
 fn dispatch_kernel<F: SolverFactory>(
     pool: &StreamPool<F>,
     hier: &Hierarchy,
     st: &mut ExecState,
     task: &Task,
     label: &'static str,
-    tx: &Sender<JobDone<Tensor>>,
-) -> Result<()> {
+    tx: &Sender<JobDone<TaskOut>>,
+) -> Result<()>
+where
+    F::Solver: NetExecutor,
+{
     let op = task
         .op
         .ok_or_else(|| anyhow!("task {} is not executable (op=None); this graph is cost-model-only", task.id))?;
     match op {
-        TaskOp::PointUpdate { level, j } => {
+        TaskOp::PointUpdate { sys, level, j } => {
             let lvl = &hier.levels[level];
             let theta = lvl.theta_idx(j - 1);
             let h = lvl.h;
-            let u_prev = st.u[level][j - 1].clone();
-            let gj = st.g[level].as_ref().map(|g| g[j].clone());
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let mut v = s.step(theta, h, &u_prev)?;
-                if let Some(g) = &gj {
-                    v.axpy(1.0, g)?;
+            let ss = st.sys(sys)?;
+            let u_prev = ss.u[level][j - 1].clone();
+            let gj = ss.g[level].as_ref().map(|g| g[j].clone());
+            match sys {
+                Sys::Primal => {
+                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        let mut v = s.step(theta, h, &u_prev)?;
+                        if let Some(g) = &gj {
+                            v.axpy(1.0, g)?;
+                        }
+                        Ok(TaskOut::State(v))
+                    })
                 }
-                Ok(v)
-            })
+                Sys::Adjoint => {
+                    let rev = rev_layer(hier, level, j);
+                    let fwd = st.pri.u[0][rev].clone();
+                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        let mut v = s.adjoint_step(rev, h, &fwd, &u_prev)?;
+                        if let Some(g) = &gj {
+                            v.axpy(1.0, g)?;
+                        }
+                        Ok(TaskOut::State(v))
+                    })
+                }
+            }
         }
-        TaskOp::Residual { level, j } => {
+        TaskOp::BlockRun { sys, level, j_first, j_last } => {
+            let lvl = &hier.levels[level];
+            let h = lvl.h;
+            let stride = lvl.stride;
+            let start_theta = lvl.theta_idx(j_first - 1);
+            let count = j_last - j_first + 1;
+            let ss = st.sys(sys)?;
+            if ss.g[level].is_some() {
+                bail!("BlockRun on a level with a right-hand side (graph bug)");
+            }
+            let u_prev = ss.u[level][j_first - 1].clone();
+            match sys {
+                Sys::Primal => {
+                    // the solver's fused block path (one PJRT block artifact)
+                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        Ok(TaskOut::States(s.block_fprop(start_theta, stride, count, h, &u_prev)?))
+                    })
+                }
+                Sys::Adjoint => {
+                    let steps: Vec<(usize, Tensor)> = (j_first..=j_last)
+                        .map(|j| {
+                            let rev = rev_layer(hier, level, j);
+                            (rev, st.pri.u[0][rev].clone())
+                        })
+                        .collect();
+                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        let mut out = Vec::with_capacity(steps.len());
+                        let mut mu = u_prev;
+                        for (rev, fwd) in &steps {
+                            mu = s.adjoint_step(*rev, h, fwd, &mu)?;
+                            out.push(mu.clone());
+                        }
+                        Ok(TaskOut::States(out))
+                    })
+                }
+            }
+        }
+        TaskOp::Residual { sys, level, j } => {
             let lvl = &hier.levels[level];
             let theta = lvl.theta_idx(j - 1);
             let h = lvl.h;
-            let u_prev = st.u[level][j - 1].clone();
-            let u_cur = st.u[level][j].clone();
-            let gj = st.g[level].as_ref().map(|g| g[j].clone());
+            let ss = st.sys(sys)?;
+            let u_prev = ss.u[level][j - 1].clone();
+            let u_cur = ss.u[level][j].clone();
+            let gj = ss.g[level].as_ref().map(|g| g[j].clone());
+            let fwd = match sys {
+                Sys::Primal => None,
+                Sys::Adjoint => Some((rev_layer(hier, level, j), st.pri.u[0][rev_layer(hier, level, j)].clone())),
+            };
             pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let mut r = s.step(theta, h, &u_prev)?;
+                let mut r = match &fwd {
+                    None => s.step(theta, h, &u_prev)?,
+                    Some((rev, f)) => s.adjoint_step(*rev, h, f, &u_prev)?,
+                };
                 if let Some(g) = &gj {
                     r.axpy(1.0, g)?;
                 }
                 r.axpy(-1.0, &u_cur)?;
-                Ok(r)
+                Ok(TaskOut::State(r))
             })
         }
-        TaskOp::Restrict { level, j } => {
+        TaskOp::Restrict { sys, level, j } => {
             let c = hier.coarsen;
             let coarse = &hier.levels[level + 1];
             let theta = coarse.theta_idx(j - 1);
             let h = coarse.h;
-            let r = st.r[level][j * c]
-                .clone()
-                .ok_or_else(|| anyhow!("restrict({level},{j}): residual at point {} missing", j * c))?;
-            let inj_prev = st.u[level][(j - 1) * c].clone();
-            let inj_cur = st.u[level][j * c].clone();
+            let (r, inj_prev, inj_cur) = {
+                let ss = st.sys(sys)?;
+                (
+                    ss.r[level][j * c].clone().ok_or_else(|| {
+                        anyhow!("restrict({level},{j}): residual at point {} missing", j * c)
+                    })?,
+                    ss.u[level][(j - 1) * c].clone(),
+                    ss.u[level][j * c].clone(),
+                )
+            };
+            let fwd = match sys {
+                Sys::Primal => None,
+                Sys::Adjoint => {
+                    let rev = rev_layer(hier, level + 1, j);
+                    Some((rev, st.pri.u[0][rev].clone()))
+                }
+            };
             // inject the coarse initial guess + correction snapshot now —
             // safe because this task's WAR deps have already retired
-            st.u[level + 1][j] = inj_cur.clone();
-            st.inj[level + 1][j] = Some(inj_cur.clone());
+            {
+                let sm = st.sys_mut(sys)?;
+                sm.u[level + 1][j] = inj_cur.clone();
+                sm.inj[level + 1][j] = Some(inj_cur.clone());
+            }
             pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let phi = s.step(theta, h, &inj_prev)?;
+                let phi = match &fwd {
+                    None => s.step(theta, h, &inj_prev)?,
+                    Some((rev, f)) => s.adjoint_step(*rev, h, f, &inj_prev)?,
+                };
                 let mut out = r;
                 out.axpy(1.0, &inj_cur)?;
                 out.axpy(-1.0, &phi)?;
-                Ok(out)
+                Ok(TaskOut::State(out))
             })
         }
-        TaskOp::Correct { level, j } => {
+        TaskOp::Correct { sys, level, j } => {
             let c = hier.coarsen;
-            let u_fine = st.u[level][j * c].clone();
-            let u_coarse = st.u[level + 1][j].clone();
-            let inj = st.inj[level + 1][j]
+            let ss = st.sys(sys)?;
+            let u_fine = ss.u[level][j * c].clone();
+            let u_coarse = ss.u[level + 1][j].clone();
+            let inj = ss.inj[level + 1][j]
                 .clone()
                 .ok_or_else(|| anyhow!("correct({level},{j}): injection snapshot missing"))?;
             pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let delta = Tensor::sub(&u_coarse, &inj)?;
                 let mut out = u_fine;
                 out.axpy(1.0, &delta)?;
-                Ok(out)
+                Ok(TaskOut::State(out))
+            })
+        }
+        TaskOp::Head => {
+            let n_last = hier.fine().n_points - 1;
+            let u = st.pri.u[0][n_last].clone();
+            let labels = st.train()?.labels.clone();
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                let (_logits, loss) = s.head(&u, &labels)?;
+                let (du, dw_fc, db_fc) = s.head_vjp(&u, &labels)?;
+                Ok(TaskOut::Head { loss, du, dw_fc, db_fc })
+            })
+        }
+        TaskOp::GradAccum { layer } => {
+            let h = hier.fine().h;
+            let n_layers = hier.fine().n_points - 1;
+            let u = st.pri.u[0][layer].clone();
+            // λ^{layer+1} = μ^{N−1−layer}
+            let lam = st.sys(Sys::Adjoint)?.u[0][n_layers - 1 - layer].clone();
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                let (dw, db) = s.param_grad(layer, h, &u, &lam)?;
+                Ok(TaskOut::Pair(dw, db))
+            })
+        }
+        TaskOp::ParamUpdate { layer } => {
+            let tr = st.train()?;
+            let (dw, db) = tr
+                .grads
+                .get(layer)
+                .ok_or_else(|| anyhow!("param_update({layer}): gradient slot empty"))?
+                .clone();
+            let (w, b) = tr.params.trunk[layer].clone();
+            let lr = tr.lr;
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                let mut w2 = w;
+                w2.axpy(-lr, &dw)?;
+                let mut b2 = b;
+                b2.axpy(-lr, &db)?;
+                Ok(TaskOut::Pair(w2, b2))
             })
         }
         TaskOp::Xfer => bail!("Xfer payload on a kernel task (graph bug)"),
     }
 }
 
-/// Write one completed kernel's output into its slot.
-fn apply_output(hier: &Hierarchy, st: &mut ExecState, op: TaskOp, out: Tensor) -> Result<()> {
+impl TaskOut {
+    /// Compact variant name for error messages (derived Debug would dump
+    /// whole tensors).
+    fn kind(&self) -> &'static str {
+        match self {
+            TaskOut::State(_) => "State",
+            TaskOut::States(_) => "States",
+            TaskOut::Pair(..) => "Pair",
+            TaskOut::Head { .. } => "Head",
+        }
+    }
+}
+
+fn expect_state(out: TaskOut, what: &str) -> Result<Tensor> {
+    match out {
+        TaskOut::State(t) => Ok(t),
+        other => bail!("{what}: expected a single state, got {}", other.kind()),
+    }
+}
+
+/// Write one completed kernel's output into its slot(s).
+fn apply_output(hier: &Hierarchy, st: &mut ExecState, op: TaskOp, out: TaskOut) -> Result<()> {
     match op {
-        TaskOp::PointUpdate { level, j } => st.u[level][j] = out,
-        TaskOp::Residual { level, j } => st.r[level][j] = Some(out),
-        TaskOp::Restrict { level, j } => {
-            match &mut st.g[level + 1] {
-                Some(g) => g[j] = out,
+        TaskOp::PointUpdate { sys, level, j } => {
+            st.sys_mut(sys)?.u[level][j] = expect_state(out, "point_update")?;
+        }
+        TaskOp::BlockRun { sys, level, j_first, j_last } => {
+            let kind = out.kind();
+            let TaskOut::States(v) = out else {
+                bail!("block_run: expected a state span, got {kind}");
+            };
+            if v.len() != j_last - j_first + 1 {
+                bail!("block_run: span length {} != {}", v.len(), j_last - j_first + 1);
+            }
+            let ss = st.sys_mut(sys)?;
+            for (k, t) in v.into_iter().enumerate() {
+                ss.u[level][j_first + k] = t;
+            }
+        }
+        TaskOp::Residual { sys, level, j } => {
+            st.sys_mut(sys)?.r[level][j] = Some(expect_state(out, "residual")?);
+        }
+        TaskOp::Restrict { sys, level, j } => {
+            let t = expect_state(out, "restrict")?;
+            match &mut st.sys_mut(sys)?.g[level + 1] {
+                Some(g) => g[j] = t,
                 None => bail!("restrict into level {} with no rhs storage", level + 1),
             }
         }
-        TaskOp::Correct { level, j } => st.u[level][j * hier.coarsen] = out,
+        TaskOp::Correct { sys, level, j } => {
+            st.sys_mut(sys)?.u[level][j * hier.coarsen] = expect_state(out, "correct")?;
+        }
+        TaskOp::Head => {
+            let TaskOut::Head { loss, du, dw_fc, db_fc } = out else {
+                bail!("head: wrong output kind");
+            };
+            // ∂loss/∂u^N seeds every adjoint slot (the constant-in-depth
+            // initial guess of the adjoint MGRIT solve)
+            st.adj = Some(SysState::seeded(hier, &du));
+            st.train_mut()?.head = Some(HeadOut { loss, dw_fc, db_fc });
+        }
+        TaskOp::GradAccum { layer } => {
+            let TaskOut::Pair(dw, db) = out else {
+                bail!("param_grad: wrong output kind");
+            };
+            st.train_mut()?.grads.set(layer, dw, db)?;
+        }
+        TaskOp::ParamUpdate { layer } => {
+            let TaskOut::Pair(w, b) = out else {
+                bail!("param_update: wrong output kind");
+            };
+            st.train_mut()?.new_trunk.set(layer, w, b)?;
+        }
         TaskOp::Xfer => bail!("Xfer payload completed as a kernel (graph bug)"),
     }
     Ok(())
@@ -308,7 +665,7 @@ mod tests {
     use super::*;
     use crate::coordinator::Partition;
     use crate::mgrit::fas::RelaxKind;
-    use crate::mgrit::taskgraph;
+    use crate::mgrit::taskgraph::{self, Granularity};
     use crate::model::{NetParams, NetSpec};
     use crate::solver::host::HostSolver;
     use std::sync::Arc;
@@ -339,10 +696,28 @@ mod tests {
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "f_relax"));
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "coarse_solve"));
         // states moved away from the constant initial guess
-        let moved = st.u[0][1..]
+        let moved = st.pri.u[0][1..]
             .iter()
             .any(|u| crate::util::stats::rel_l2_err(u.data(), u0.data()) > 1e-6);
         assert!(moved, "executor did not update any state");
+    }
+
+    #[test]
+    fn per_block_vcycle_bit_matches_per_step() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let gs = taskgraph::mg_vcycle_with(&spec, &hier, &partition, 1, RelaxKind::FCF, Granularity::PerStep);
+        let gb = taskgraph::mg_vcycle_with(&spec, &hier, &partition, 1, RelaxKind::FCF, Granularity::PerBlock);
+        let mut st_s = ExecState::initial(&hier, &u0);
+        let mut st_b = ExecState::initial(&hier, &u0);
+        let rep_s = execute(&pool, &hier, &gs, &mut st_s).unwrap();
+        let rep_b = execute(&pool, &hier, &gb, &mut st_b).unwrap();
+        // fused F-spans perform the identical arithmetic in the same order
+        assert_eq!(rep_s.phi_evals, rep_b.phi_evals);
+        let a = st_s.into_fine_states();
+        let b = st_b.into_fine_states();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.data() == y.data(), "per-block state differs bitwise");
+        }
     }
 
     #[test]
@@ -365,6 +740,46 @@ mod tests {
         let g = taskgraph::serial_forward(&spec, 1, 1);
         let mut st = ExecState::initial(&hier, &u0);
         assert!(execute(&pool, &hier, &g, &mut st).is_err());
+    }
+
+    #[test]
+    fn training_graph_without_train_state_is_rejected() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let g = taskgraph::mg_train_step(
+            &spec, &hier, &partition, 1, 1, RelaxKind::FCF, Granularity::PerStep,
+        );
+        let mut st = ExecState::initial(&hier, &u0);
+        let err = execute(&pool, &hier, &g, &mut st).unwrap_err().to_string();
+        assert!(err.contains("training"), "{err}");
+    }
+
+    #[test]
+    fn training_graph_fills_all_sharded_slots() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let g = taskgraph::mg_train_step(
+            &spec, &hier, &partition, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+        );
+        let labels = [3i32];
+        let mut st = ExecState::initial_train(&hier, &u0, &labels, params.clone(), 0.05);
+        let rep = execute(&pool, &hier, &g, &mut st).unwrap();
+        assert!(rep.phase_s.iter().any(|(l, _)| *l == "adj_f_relax"));
+        assert!(rep.phase_s.iter().any(|(l, _)| *l == "param_grad"));
+        assert!(rep.phase_s.iter().any(|(l, _)| *l == "param_update"));
+        let out = st.into_training_outputs().unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.states.len(), hier.fine().n_points);
+        assert_eq!(out.lams.len(), hier.fine().n_points);
+        assert_eq!(out.trunk_grads.len(), spec.n_res());
+        assert_eq!(out.new_trunk.len(), spec.n_res());
+        // updated params moved against the gradient direction
+        for ((w_new, _), ((w_old, _), (dw, _))) in
+            out.new_trunk.iter().zip(params.trunk.iter().zip(&out.trunk_grads))
+        {
+            let mut want = w_old.clone();
+            want.axpy(-0.05, dw).unwrap();
+            assert!(w_new.data() == want.data(), "param update is not θ − lr·g");
+        }
     }
 
     #[test]

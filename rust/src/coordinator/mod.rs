@@ -25,7 +25,7 @@ pub mod executor;
 pub mod partition;
 pub mod streams;
 
-pub use driver::{ParallelMgrit, RunMetrics};
-pub use executor::{ExecReport, ExecState};
+pub use driver::{ParallelMgrit, RunMetrics, TrainStepOutput};
+pub use executor::{ExecReport, ExecState, TaskOut, TrainingOutputs};
 pub use partition::Partition;
 pub use streams::{JobDone, StreamPool, TraceEvent};

@@ -55,6 +55,13 @@ impl Partition {
         self.bounds[d]..self.bounds[d + 1]
     }
 
+    /// The contiguous block span of every device, in device order — what
+    /// graph builders expand into a block → device map once, instead of
+    /// re-deriving partition bounds point by point.
+    pub fn spans(&self) -> Vec<std::ops::Range<usize>> {
+        (0..self.n_devices()).map(|d| self.blocks_of(d)).collect()
+    }
+
     /// Number of device-boundary crossings between consecutive blocks —
     /// each is one activation transfer during C-relaxation.
     pub fn n_boundaries(&self) -> usize {
@@ -148,6 +155,22 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
+    }
+
+    #[test]
+    fn spans_cover_all_blocks_in_device_order() {
+        let p = Partition::contiguous(11, 3).unwrap();
+        let spans = p.spans();
+        assert_eq!(spans.len(), p.n_devices());
+        let mut next = 0usize;
+        for (d, span) in spans.iter().enumerate() {
+            assert_eq!(span.start, next, "device {d} span not contiguous");
+            for b in span.clone() {
+                assert_eq!(p.device_of(b), d);
+            }
+            next = span.end;
+        }
+        assert_eq!(next, p.n_blocks());
     }
 
     #[test]

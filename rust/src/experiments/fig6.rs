@@ -11,12 +11,17 @@
 //! "can be applied repeatedly" — a two-level hierarchy leaves an O(N/c)
 //! sequential coarse solve that caps scaling well below the paper's curves).
 
-use crate::coordinator::Partition;
+use std::sync::Arc;
+
+use crate::coordinator::{ParallelMgrit, Partition, RunMetrics, TraceEvent};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph;
-use crate::model::NetSpec;
+use crate::mgrit::taskgraph::{self, Granularity};
+use crate::mgrit::{MgritOptions, RelaxKind};
+use crate::model::{NetParams, NetSpec};
 use crate::perfmodel::ClusterModel;
 use crate::sim;
+use crate::solver::host::HostSolver;
+use crate::tensor::Tensor;
 use crate::util::json::{num, s};
 use crate::Result;
 
@@ -38,7 +43,17 @@ pub fn simulate_mg(
     let n_blocks = hier.fine().blocks(hier.coarsen).len();
     let part = Partition::contiguous(n_blocks, gpus)?;
     let g = if training {
-        taskgraph::mg_training(spec, &hier, &part, 1, cycles)
+        // the executable whole-training-step graph — identical to what the
+        // live executor runs (forward + head + adjoint + grads + updates)
+        taskgraph::mg_train_step(
+            spec,
+            &hier,
+            &part,
+            1,
+            cycles,
+            RelaxKind::FCF,
+            Granularity::PerStep,
+        )
     } else {
         taskgraph::mg_forward(spec, &hier, &part, 1, cycles)
     };
@@ -129,6 +144,94 @@ pub fn fig6c(gpu_counts: &[usize]) -> Result<Table> {
     Ok(t)
 }
 
+/// Build a live fig6-family training driver over `devices` host workers.
+fn training_driver(
+    depth: usize,
+    devices: usize,
+) -> Result<ParallelMgrit<impl crate::solver::SolverFactory<Solver = HostSolver>>> {
+    let spec = Arc::new(NetSpec::fig6_depth(depth));
+    let params = Arc::new(NetParams::init(&spec, 7)?);
+    let spec2 = spec.clone();
+    let factory = move |_w: usize| HostSolver::new(spec2.clone(), params.clone());
+    let hier = Hierarchy::two_level(depth, spec.h(), spec.coarsen)?;
+    ParallelMgrit::new(factory, spec, hier, devices, 1)
+}
+
+/// One real training-step input batch for a fig6-family spec.
+fn training_batch(spec: &NetSpec) -> (Tensor, Vec<i32>) {
+    let mut rng = crate::util::prng::Rng::new(8);
+    let o = &spec.opening;
+    let y = Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    (y, vec![1i32])
+}
+
+/// Execute one real whole-training-step graph (forward + head + adjoint +
+/// gradients + SGD updates, one DAG) through the live executor on host
+/// numerics; returns the loss, the run metrics, and the stream-pool trace.
+pub fn live_training_timeline(
+    depth: usize,
+    devices: usize,
+    cycles: usize,
+) -> Result<(f64, RunMetrics, Vec<TraceEvent>)> {
+    let drv = training_driver(depth, devices)?;
+    let (y, labels) = training_batch(&NetSpec::fig6_depth(depth));
+    let opts = MgritOptions::early_stopping(cycles);
+    let out = drv.train_step(&y, &labels, &opts, 0.05)?;
+    Ok((out.loss, out.metrics, drv.pool().trace()))
+}
+
+/// The training-step timeline, both ways: the schedule simulated on the
+/// TX-GAIA model and the *observed* live-executor run — by construction the
+/// *identical* graph (`drv.train_graph` feeds the simulator, the same
+/// driver's `train_step` executes it) — including whether adjoint relaxation
+/// and parameter-gradient work of different partitions overlapped (the
+/// no-barrier property).
+pub fn training_timeline(depth: usize, devices: usize) -> Result<(Table, String)> {
+    let drv = training_driver(depth, devices)?;
+    let opts = MgritOptions::early_stopping(2);
+    let g = drv.train_graph(&opts);
+    let rep =
+        sim::simulate(&g, &ClusterModel::tx_gaia(drv.partition().n_devices()), true)?;
+    let (y, labels) = training_batch(&NetSpec::fig6_depth(depth));
+    let out = drv.train_step(&y, &labels, &opts, 0.05)?;
+    let (loss, metrics, live) = (out.loss, out.metrics, drv.pool().trace());
+    // adjoint/gradient cross-partition overlap on the observed trace
+    let overlap = live
+        .iter()
+        .filter(|e| e.label == "param_grad")
+        .any(|pg| {
+            live.iter().any(|a| {
+                a.label.starts_with("adj_") && a.worker != pg.worker && a.t_end > pg.t_start
+            })
+        });
+    let mut t = Table::new(
+        "Fig 6 training-step timeline: simulated vs observed (one graph, no phase barriers)",
+        &[
+            "depth",
+            "devices",
+            "sim_makespan_ms",
+            "sim_kernels",
+            "observed_busy_ms",
+            "observed_comms",
+            "adj_grad_overlap",
+            "loss",
+        ],
+    );
+    t.row(vec![
+        num(depth as f64),
+        num(devices as f64),
+        num(rep.makespan_s * 1e3),
+        num(rep.n_kernels as f64),
+        num(metrics.total_s() * 1e3),
+        num(metrics.comm_events as f64),
+        s(if overlap { "yes" } else { "no" }),
+        num(loss),
+    ]);
+    let mut ascii = String::from("observed (live DAG executor, whole training step):\n");
+    ascii.push_str(&super::fig5::live_ascii(&live, 96));
+    Ok((t, ascii))
+}
+
 /// The paper's sampled GPU counts for Fig 6.
 pub const GPU_COUNTS: [usize; 8] = [1, 2, 3, 4, 8, 12, 16, 24];
 
@@ -155,6 +258,26 @@ mod tests {
         let vs_pm = |i: usize| t.rows[i][5].as_f64().unwrap();
         assert!(vs_pm(1) > 1.0, "16 GPUs: MG must beat PM ({})", vs_pm(1));
         assert!(vs_pm(1) > vs_pm(0), "PM gap must widen with GPUs");
+    }
+
+    #[test]
+    fn training_sim_includes_adjoint_and_grads() {
+        // the simulated training run scores the same whole-step graph the
+        // live executor runs: more kernels and flops than the forward run
+        let spec = NetSpec::fig6_depth(64);
+        let fwd = simulate_mg(&spec, 4, 2, false).unwrap();
+        let trn = simulate_mg(&spec, 4, 2, true).unwrap();
+        assert!(trn.n_kernels > 2 * fwd.n_kernels, "{} vs {}", trn.n_kernels, fwd.n_kernels);
+        assert!(trn.makespan_s > fwd.makespan_s);
+    }
+
+    #[test]
+    fn training_timeline_renders_and_overlaps() {
+        let (t, ascii) = training_timeline(32, 2).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert!(ascii.contains('#'));
+        // loss is finite
+        assert!(t.rows[0][7].as_f64().unwrap().is_finite());
     }
 
     #[test]

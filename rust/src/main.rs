@@ -17,6 +17,7 @@ use resnet_mgrit::coordinator::ParallelMgrit;
 use resnet_mgrit::data::mnist;
 use resnet_mgrit::experiments as exp;
 use resnet_mgrit::mgrit::hierarchy::Hierarchy;
+use resnet_mgrit::mgrit::Granularity;
 use resnet_mgrit::model::{NetParams, NetSpec};
 use resnet_mgrit::solver::host::HostSolver;
 use resnet_mgrit::solver::BlockSolver;
@@ -33,7 +34,11 @@ USAGE: mgrit <subcommand> [options]
 
   forward     --preset P --batch B --cycles C --devices D --tol T [--backend host|pjrt]
   train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
-  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|compound|ablations> [--quick]
+              [--parallel N_DEVICES] [--granularity per_step|per_block]
+                --parallel routes every step through the whole-training-step
+                task graph (ParallelMgrit::train_step, host backend) and
+                prints a one-line speed/parity report vs the serial MG step
+  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|compound|ablations> [--quick]
   sim         --preset P --gpus G [--training] [--cycles C]
   artifacts   [--artifacts-dir DIR]
   help
@@ -131,6 +136,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut params = NetParams::init(&spec, cfg.seed)?;
     let (data, source) =
         mnist::load_or_synthesize(std::path::Path::new(&cfg.data_dir), 512, cfg.seed)?;
+    let parallel = args.usize_or("parallel", 0)?;
+    let granularity = Granularity::parse(args.get_or("granularity", "per_step"))?;
     let method = if args.flag("serial") {
         train::Method::Serial
     } else {
@@ -147,6 +154,32 @@ fn cmd_train(args: &Args) -> Result<()> {
         method,
         seed: cfg.seed,
     };
+    if parallel > 0 {
+        // the layer-parallel path: every step is one whole-training-step
+        // task graph over `parallel` worker streams (host numerics)
+        if args.flag("serial") {
+            bail!("--parallel requires the MG method (drop --serial)");
+        }
+        if cfg.backend != "host" {
+            bail!("--parallel runs on the host backend (PJRT contexts are per-thread)");
+        }
+        println!("parallel training: {parallel} devices, granularity {granularity:?}");
+        let logs = train::train_parallel(&spec, &mut params, &data, &tc, parallel, granularity)?;
+        for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
+            println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
+        }
+        println!(
+            "{}",
+            train::parity_report(
+                &spec, &params, &data, cfg.batch, cfg.cycles, cfg.lr as f32, parallel,
+                granularity,
+            )?
+        );
+        let exec = HostSolver::new(spec.clone(), Arc::new(params.clone()))?;
+        let err = train::top1_error(&spec, &exec, &data, cfg.batch, 8)?;
+        println!("final top-1 error: {:.1}%", err * 100.0);
+        return Ok(());
+    }
     // the pjrt backend degrades gracefully (warning + host solver) when
     // artifacts/ was never exported or no PJRT runtime is linked
     let pjrt_store = match cfg.backend.as_str() {
@@ -217,6 +250,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 let gpus: &[usize] = if quick { &[4, 24] } else { &exp::fig6::GPU_COUNTS };
                 println!("{}", exp::fig6::fig6c(gpus)?.render());
             }
+            "fig6t" => {
+                let (depth, devices) = if quick { (32, 2) } else { (64, 4) };
+                let (t, ascii) = exp::fig6::training_timeline(depth, devices)?;
+                println!("{}", t.render());
+                println!("{ascii}");
+            }
             "fig7" => {
                 let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
                 println!("{}", exp::fig7::run(gpus)?.render());
@@ -235,7 +274,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig7", "compound", "ablations"] {
+        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "compound", "ablations"] {
             run_one(name)?;
         }
         Ok(())

@@ -125,6 +125,17 @@ impl Hierarchy {
     pub fn fine(&self) -> &Level {
         &self.levels[0]
     }
+
+    /// Forward fine-state index an *adjoint* step at (level, j−1 → j)
+    /// linearizes around: the μ-system step applies the VJP of fine layer
+    /// N−1−θ(j−1), whose input is the forward state u[0][N−1−θ(j−1)].
+    /// Shared by the graph builder (which emits the matching RAW edge) and
+    /// the live executor (which reads the state at dispatch) — one formula,
+    /// so edge and read cannot drift apart.
+    pub fn adjoint_state_index(&self, level: usize, j: usize) -> usize {
+        let n_layers = self.fine().n_points - 1;
+        n_layers - 1 - self.levels[level].theta_idx(j - 1)
+    }
 }
 
 #[cfg(test)]

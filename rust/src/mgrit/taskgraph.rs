@@ -10,26 +10,29 @@
 //!   barriers.
 //!
 //! Because both consume the *identical* graph, the simulated schedule and the
-//! real schedule cannot drift.
+//! real schedule cannot drift. This holds for the forward solve **and for the
+//! whole training step**: [`mg_train_step`] chains forward V-cycles → head →
+//! adjoint V-cycles (the reversed linear propagator Ψᵀ of Günther et al.) →
+//! per-layer parameter gradients → per-layer SGD updates in *one* DAG.
 //!
 //! Dependencies encode every hazard, not just read-after-write: a task that
 //! overwrites a state the previous phase still reads carries write-after-read
 //! edges to those readers, so any topological execution order produces
-//! bit-identical results to the serial engine in `mgrit::fas`.
+//! bit-identical results to the serial engine in `mgrit::fas` (and, for the
+//! training graph, to the serial step in `train::mg_step_serial`).
 //!
 //! Generators:
-//! - [`mg_vcycle`] — one executable V-cycle (what `ParallelMgrit` runs per
-//!   MG iteration)
+//! - [`mg_vcycle`] / [`mg_vcycle_with`] — one executable V-cycle (what
+//!   `ParallelMgrit` runs per MG iteration)
 //! - [`residual_check`] — the fine-level residual evaluation used for the
 //!   convergence test between cycles
-//! - [`mg_forward`] / [`mg_training`] — multi-cycle schedules for the
-//!   simulator (training adds head + adjoint + parameter-gradient stages,
-//!   cost-only)
+//! - [`mg_forward`] — multi-cycle forward schedule
+//! - [`mg_train_step`] — the whole training step as one executable graph
 //! - [`serial_forward`] / [`serial_training`] — single-stream sequential
 //!   baseline (distributed = the paper's "Model Partitioned" / PM method)
 
 use crate::coordinator::Partition;
-use crate::model::cost::{layer_bwd_cost, layer_cost, state_bytes};
+use crate::model::cost::{head_cost, layer_bwd_cost, layer_cost, state_bytes};
 use crate::model::NetSpec;
 use crate::Result;
 
@@ -55,23 +58,71 @@ pub enum KernelClass {
     Light,
 }
 
+/// Which linear system a task belongs to: the forward propagation (Φ) or the
+/// adjoint propagation (Ψ — each Φ replaced by its VJP, layers reversed via
+/// μ^m := λ^{N−m} so the same FAS machinery applies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sys {
+    Primal,
+    Adjoint,
+}
+
+/// F-relaxation task granularity. `PerStep` emits one task per F-point (the
+/// kernel-per-layer granularity of the paper's Fig 5 nvprof timeline);
+/// `PerBlock` fuses each block's contiguous F-span into one [`TaskOp::BlockRun`]
+/// task, which lets the live executor reach the solver's fused
+/// `block_fprop` fast path (one PJRT block artifact instead of per-step
+/// artifacts) at the cost of coarser scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    PerStep,
+    PerBlock,
+}
+
+impl Granularity {
+    /// Parse a CLI spelling (`per_step` | `per_block`).
+    pub fn parse(s: &str) -> Result<Granularity> {
+        match s {
+            "per_step" | "per-step" | "step" => Ok(Granularity::PerStep),
+            "per_block" | "per-block" | "block" => Ok(Granularity::PerBlock),
+            other => anyhow::bail!("unknown granularity {other:?} (per_step|per_block)"),
+        }
+    }
+}
+
 /// Executable payload: which state slots a task reads and writes. `level`
-/// indexes the MGRIT hierarchy; `j` is a point index on that level.
+/// indexes the MGRIT hierarchy; `j` is a point index on that level; `sys`
+/// selects the forward (`u`) or adjoint (`μ`) slot set. Adjoint tasks apply
+/// Ψ at the reversed fine layer index and additionally read the forward fine
+/// state they linearize around.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskOp {
     /// `u[level][j] = Φ_{θ(j−1)}(u[level][j−1]) + g[level][j]` — the
     /// elementary update of F-relaxation, C-relaxation, and the coarse
-    /// forward substitution.
-    PointUpdate { level: usize, j: usize },
+    /// forward substitution (Ψ instead of Φ for the adjoint system).
+    PointUpdate { sys: Sys, level: usize, j: usize },
+    /// The fused F-span update of one block: points `j_first..=j_last` from
+    /// point `j_first − 1` in one task (level 0 only, where the FAS
+    /// right-hand side vanishes and the solver's `block_fprop` applies).
+    BlockRun { sys: Sys, level: usize, j_first: usize, j_last: usize },
     /// `r[level][j] = Φ_{θ(j−1)}(u[level][j−1]) + g[level][j] − u[level][j]`.
-    Residual { level: usize, j: usize },
+    Residual { sys: Sys, level: usize, j: usize },
     /// FAS restriction to `level+1`:
     /// `g[level+1][j] = r[level][j·c] + ū_H[j] − Φ_H(ū_H[j−1])` with
     /// `ū_H[j] = u[level][j·c]`; also injects `u[level+1][j] = ū_H[j]` and
     /// snapshots it for the later correction.
-    Restrict { level: usize, j: usize },
+    Restrict { sys: Sys, level: usize, j: usize },
     /// FAS correction: `u[level][j·c] += u[level+1][j] − ū_H[j]`.
-    Correct { level: usize, j: usize },
+    Correct { sys: Sys, level: usize, j: usize },
+    /// Head forward + VJP at the last fine state: produces the loss, the
+    /// head parameter gradients, and ∂loss/∂u^N — which seeds *every* slot
+    /// of the adjoint system (the constant-in-depth initial guess).
+    Head,
+    /// Layer-local parameter gradient `gⁿ = h·(∂F/∂θⁿ)ᵀ λ^{n+1}` — fans out
+    /// the moment its λ slot retires; embarrassingly parallel.
+    GradAccum { layer: usize },
+    /// Per-layer SGD update `θⁿ ← θⁿ − lr·gⁿ` into the fresh parameter slot.
+    ParamUpdate { layer: usize },
     /// Boundary transfer (accounting only in local execution).
     Xfer,
 }
@@ -84,8 +135,8 @@ pub struct Task {
     pub device: usize,
     pub kind: TaskKind,
     pub deps: Vec<usize>,
-    /// Executable payload; `None` for cost-model-only tasks (training-step
-    /// stages the live executor does not run).
+    /// Executable payload; `None` for cost-model-only tasks (baseline
+    /// schedules the live executor does not run).
     pub op: Option<TaskOp>,
 }
 
@@ -166,6 +217,14 @@ impl TaskGraph {
         self.tasks.iter().filter(|t| matches!(t.kind, TaskKind::Comm { .. })).count()
     }
 
+    /// Number of Kernel tasks with the given label.
+    pub fn n_kernels_labeled(&self, label: &str) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::Kernel { label: l, .. } if l == label))
+            .count()
+    }
+
     /// Verify the graph is a DAG with in-range dependencies (deps always
     /// point backwards by construction; this asserts it).
     pub fn validate(&self) -> Result<()> {
@@ -180,17 +239,35 @@ impl TaskGraph {
     }
 }
 
-/// Maps MGRIT points to devices (same rule as the parallel driver).
+/// Maps MGRIT points to devices (same rule as the parallel driver), through
+/// a block → device map expanded once from [`Partition::spans`]. Adjoint
+/// points map through the layer they correspond to (μ^m ↔ λ^{N−m} lives with
+/// fine layer point N−m), so λ stays co-located with the layer whose VJP
+/// produces it and parameter gradients are layer-local.
 struct PointMap<'a> {
     hier: &'a Hierarchy,
-    partition: &'a Partition,
+    block_dev: Vec<usize>,
 }
 
 impl<'a> PointMap<'a> {
-    fn device_of_point(&self, level: usize, j: usize) -> usize {
+    fn new(hier: &'a Hierarchy, partition: &Partition) -> PointMap<'a> {
+        let mut block_dev = vec![0usize; partition.n_blocks()];
+        for (d, span) in partition.spans().iter().enumerate() {
+            for b in span.clone() {
+                block_dev[b] = d;
+            }
+        }
+        PointMap { hier, block_dev }
+    }
+
+    fn device_of(&self, sys: Sys, level: usize, j: usize) -> usize {
         let fine_idx = j * self.hier.levels[level].stride;
-        let block = (fine_idx / self.hier.coarsen).min(self.partition.n_blocks() - 1);
-        self.partition.device_of(block)
+        let fine_idx = match sys {
+            Sys::Primal => fine_idx,
+            Sys::Adjoint => (self.hier.fine().n_points - 1) - fine_idx,
+        };
+        let block = (fine_idx / self.hier.coarsen).min(self.block_dev.len() - 1);
+        self.block_dev[block]
     }
 }
 
@@ -220,9 +297,29 @@ fn dedup(mut deps: Vec<usize>) -> Vec<usize> {
     deps
 }
 
-/// Builder state for the MG schedule: per-slot dependency frontiers for the
-/// layer states `u`, the FAS right-hand sides `g`, the C-point residuals `r`
-/// and the injection snapshots used by the correction.
+/// Per-system dependency frontiers: the layer states `u`, the FAS right-hand
+/// sides `g`, the C-point residuals `r` and the injection snapshots the
+/// correction consumes.
+struct SysSlots {
+    u: Vec<Vec<Frontier>>,
+    rhs: Vec<Vec<Frontier>>,
+    res: Vec<Vec<Frontier>>,
+    inj: Vec<Vec<Frontier>>,
+}
+
+impl SysSlots {
+    fn new(hier: &Hierarchy) -> SysSlots {
+        let mk = || -> Vec<Vec<Frontier>> {
+            hier.levels.iter().map(|l| vec![Frontier::default(); l.n_points]).collect()
+        };
+        SysSlots { u: mk(), rhs: mk(), res: mk(), inj: mk() }
+    }
+}
+
+/// Builder state for the MG schedules. `sys` selects which system (primal or
+/// adjoint) subsequent cycle phases build tasks for; the two systems keep
+/// independent frontier sets, and adjoint tasks additionally carry RAW edges
+/// to the primal fine states they linearize around.
 struct MgBuilder<'a> {
     g: TaskGraph,
     spec: &'a NetSpec,
@@ -232,28 +329,31 @@ struct MgBuilder<'a> {
     flop_scale: f64,
     /// Attach executable payloads? (false for cost-model-only stages)
     executable: bool,
-    u: Vec<Vec<Frontier>>,
-    rhs: Vec<Vec<Frontier>>,
-    res: Vec<Vec<Frontier>>,
-    inj: Vec<Vec<Frontier>>,
+    sys: Sys,
+    gran: Granularity,
+    /// Frontier slots: index 0 = primal, 1 = adjoint.
+    slots: [SysSlots; 2],
 }
 
 impl<'a> MgBuilder<'a> {
     fn new(spec: &'a NetSpec, hier: &'a Hierarchy, partition: &'a Partition, batch: usize) -> Self {
-        let slots = |hier: &Hierarchy| -> Vec<Vec<Frontier>> {
-            hier.levels.iter().map(|l| vec![Frontier::default(); l.n_points]).collect()
-        };
         MgBuilder {
             g: TaskGraph::default(),
             spec,
             batch,
-            pm: PointMap { hier, partition },
+            pm: PointMap::new(hier, partition),
             flop_scale: 1.0,
             executable: true,
-            u: slots(hier),
-            rhs: slots(hier),
-            res: slots(hier),
-            inj: slots(hier),
+            sys: Sys::Primal,
+            gran: Granularity::PerStep,
+            slots: [SysSlots::new(hier), SysSlots::new(hier)],
+        }
+    }
+
+    fn si(&self) -> usize {
+        match self.sys {
+            Sys::Primal => 0,
+            Sys::Adjoint => 1,
         }
     }
 
@@ -262,6 +362,13 @@ impl<'a> MgBuilder<'a> {
             Some(op)
         } else {
             None
+        }
+    }
+
+    fn lbl(&self, primal: &'static str, adjoint: &'static str) -> &'static str {
+        match self.sys {
+            Sys::Primal => primal,
+            Sys::Adjoint => adjoint,
         }
     }
 
@@ -280,51 +387,140 @@ impl<'a> MgBuilder<'a> {
         state_bytes(self.spec, self.batch)
     }
 
-    /// Φ-apply at point j−1 → j, with boundary comm if the producer of
-    /// u[j−1] lives on another device. Returns the new writer of point j.
-    fn point_update(&mut self, level: usize, j: usize, label: &'static str) -> usize {
-        let dst = self.pm.device_of_point(level, j);
-        let src = self.pm.device_of_point(level, j - 1);
+    /// Forward fine state index the adjoint step at (level, j) linearizes
+    /// around (see [`Hierarchy::adjoint_state_index`] — shared with the
+    /// executor's dispatch-time read).
+    fn rev_state(&self, level: usize, j: usize) -> usize {
+        self.pm.hier.adjoint_state_index(level, j)
+    }
+
+    /// Add the adjoint → primal-state RAW edge for a Ψ application at
+    /// (level, j) and return the slot index for reader registration.
+    fn adjoint_state_dep(&mut self, level: usize, j: usize, deps: &mut Vec<usize>) -> Option<usize> {
+        if self.sys != Sys::Adjoint || !self.executable {
+            return None;
+        }
+        let rev = self.rev_state(level, j);
+        if let Some(w) = self.slots[0].u[0][rev].writer {
+            deps.push(w);
+        }
+        Some(rev)
+    }
+
+    /// Φ-apply (Ψ for the adjoint system) at point j−1 → j, with boundary
+    /// comm if the producer of u[j−1] lives on another device. Returns the
+    /// new writer of point j.
+    fn point_update(
+        &mut self,
+        level: usize,
+        j: usize,
+        p_label: &'static str,
+        a_label: &'static str,
+    ) -> usize {
+        let sys = self.sys;
+        let si = self.si();
+        let dst = self.pm.device_of(sys, level, j);
+        let src = self.pm.device_of(sys, level, j - 1);
         // data dependencies: u[level][j−1] and (FAS levels) g[level][j]
         let mut deps: Vec<usize> = Vec::new();
-        if let Some(w) = self.u[level][j - 1].writer {
+        if let Some(w) = self.slots[si].u[level][j - 1].writer {
             deps.push(w);
         }
         if level > 0 {
-            if let Some(w) = self.rhs[level][j].writer {
+            if let Some(w) = self.slots[si].rhs[level][j].writer {
                 deps.push(w);
             }
         }
         let comm =
             self.g.comm(src, dst, self.bytes(), dedup(deps.clone()), self.op(TaskOp::Xfer));
         if let Some(c) = comm {
-            self.u[level][j - 1].readers.push(c);
+            self.slots[si].u[level][j - 1].readers.push(c);
             deps = vec![c];
         }
+        // adjoint: RAW edge to the forward state this Ψ linearizes around
+        let rev = self.adjoint_state_dep(level, j, &mut deps);
         // write hazards on the target slot u[level][j]
-        self.u[level][j].begin_write(&mut deps);
+        self.slots[si].u[level][j].begin_write(&mut deps);
         let fine_idx = self.pm.hier.levels[level].theta_idx(j - 1);
+        let label = self.lbl(p_label, a_label);
         let t = self.g.kernel(
             dst,
             label,
             self.class_of(fine_idx),
             self.step_flops(fine_idx),
             dedup(deps),
-            self.op(TaskOp::PointUpdate { level, j }),
+            self.op(TaskOp::PointUpdate { sys, level, j }),
         );
-        self.u[level][j].writer = Some(t);
-        self.u[level][j - 1].readers.push(t);
+        self.slots[si].u[level][j].writer = Some(t);
+        self.slots[si].u[level][j - 1].readers.push(t);
         if level > 0 {
-            self.rhs[level][j].readers.push(t);
+            self.slots[si].rhs[level][j].readers.push(t);
+        }
+        if let Some(rev) = rev {
+            self.slots[0].u[0][rev].readers.push(t);
         }
         t
     }
 
+    /// Fused F-span of one block: points `j_first..=j_last` from the block's
+    /// C-point in a single task. Level 0 only (no FAS right-hand side), and
+    /// always within one device (a block never crosses a partition).
+    fn block_run(&mut self, level: usize, j_first: usize, j_last: usize) {
+        debug_assert_eq!(level, 0, "BlockRun requires a vanishing right-hand side");
+        let sys = self.sys;
+        let si = self.si();
+        let dev = self.pm.device_of(sys, level, j_first);
+        let mut deps: Vec<usize> = Vec::new();
+        if let Some(w) = self.slots[si].u[level][j_first - 1].writer {
+            deps.push(w);
+        }
+        let mut revs: Vec<usize> = Vec::new();
+        if sys == Sys::Adjoint && self.executable {
+            for j in j_first..=j_last {
+                let rev = self.rev_state(level, j);
+                if let Some(w) = self.slots[0].u[0][rev].writer {
+                    deps.push(w);
+                }
+                revs.push(rev);
+            }
+        }
+        for j in j_first..=j_last {
+            self.slots[si].u[level][j].begin_write(&mut deps);
+        }
+        let lvl = self.pm.hier.levels[level].clone();
+        let flops: f64 = (j_first..=j_last).map(|j| self.step_flops(lvl.theta_idx(j - 1))).sum();
+        let class = self.class_of(lvl.theta_idx(j_first - 1));
+        let label = self.lbl("f_relax", "adj_f_relax");
+        let t = self.g.kernel(
+            dev,
+            label,
+            class,
+            flops,
+            dedup(deps),
+            self.op(TaskOp::BlockRun { sys, level, j_first, j_last }),
+        );
+        self.slots[si].u[level][j_first - 1].readers.push(t);
+        for j in j_first..=j_last {
+            self.slots[si].u[level][j].writer = Some(t);
+        }
+        for rev in revs {
+            self.slots[0].u[0][rev].readers.push(t);
+        }
+    }
+
     fn f_relax(&mut self, level: usize) {
         let lvl = self.pm.hier.levels[level].clone();
+        let fuse = self.gran == Granularity::PerBlock && level == 0;
         for b in lvl.blocks(self.pm.hier.coarsen) {
-            for j in b.cpoint + 1..=b.f_end {
-                self.point_update(level, j, "f_relax");
+            if b.n_fpoints() == 0 {
+                continue;
+            }
+            if fuse {
+                self.block_run(level, b.cpoint + 1, b.f_end);
+            } else {
+                for j in b.cpoint + 1..=b.f_end {
+                    self.point_update(level, j, "f_relax", "adj_f_relax");
+                }
             }
         }
     }
@@ -333,53 +529,60 @@ impl<'a> MgBuilder<'a> {
         let lvl = self.pm.hier.levels[level].clone();
         for cp in lvl.cpoints(self.pm.hier.coarsen) {
             if cp > 0 {
-                self.point_update(level, cp, "c_relax");
+                self.point_update(level, cp, "c_relax", "adj_c_relax");
             }
         }
     }
 
     /// Residual at C-points > 0 into the per-point residual slots.
     fn residual(&mut self, level: usize) {
+        let sys = self.sys;
+        let si = self.si();
         let lvl = self.pm.hier.levels[level].clone();
         for cp in lvl.cpoints(self.pm.hier.coarsen) {
             if cp == 0 {
                 continue;
             }
-            let dst = self.pm.device_of_point(level, cp);
-            let src = self.pm.device_of_point(level, cp - 1);
+            let dst = self.pm.device_of(sys, level, cp);
+            let src = self.pm.device_of(sys, level, cp - 1);
             let mut deps: Vec<usize> = Vec::new();
-            if let Some(w) = self.u[level][cp - 1].writer {
+            if let Some(w) = self.slots[si].u[level][cp - 1].writer {
                 deps.push(w);
             }
-            if let Some(w) = self.u[level][cp].writer {
+            if let Some(w) = self.slots[si].u[level][cp].writer {
                 deps.push(w);
             }
             if level > 0 {
-                if let Some(w) = self.rhs[level][cp].writer {
+                if let Some(w) = self.slots[si].rhs[level][cp].writer {
                     deps.push(w);
                 }
             }
             let comm =
                 self.g.comm(src, dst, self.bytes(), dedup(deps.clone()), self.op(TaskOp::Xfer));
             if let Some(c) = comm {
-                self.u[level][cp - 1].readers.push(c);
+                self.slots[si].u[level][cp - 1].readers.push(c);
                 deps = vec![c];
             }
-            self.res[level][cp].begin_write(&mut deps);
+            let rev = self.adjoint_state_dep(level, cp, &mut deps);
+            self.slots[si].res[level][cp].begin_write(&mut deps);
             let fine_idx = lvl.theta_idx(cp - 1);
+            let label = self.lbl("residual", "adj_residual");
             let t = self.g.kernel(
                 dst,
-                "residual",
+                label,
                 self.class_of(fine_idx),
                 self.step_flops(fine_idx),
                 dedup(deps),
-                self.op(TaskOp::Residual { level, j: cp }),
+                self.op(TaskOp::Residual { sys, level, j: cp }),
             );
-            self.res[level][cp].writer = Some(t);
-            self.u[level][cp - 1].readers.push(t);
-            self.u[level][cp].readers.push(t);
+            self.slots[si].res[level][cp].writer = Some(t);
+            self.slots[si].u[level][cp - 1].readers.push(t);
+            self.slots[si].u[level][cp].readers.push(t);
             if level > 0 {
-                self.rhs[level][cp].readers.push(t);
+                self.slots[si].rhs[level][cp].readers.push(t);
+            }
+            if let Some(rev) = rev {
+                self.slots[0].u[0][rev].readers.push(t);
             }
         }
     }
@@ -388,48 +591,57 @@ impl<'a> MgBuilder<'a> {
     /// residual slots and injects the C-point states as the coarse initial
     /// guess (+ snapshot for the correction).
     fn restrict(&mut self, level: usize) {
+        let sys = self.sys;
+        let si = self.si();
         let c = self.pm.hier.coarsen;
         let coarse = self.pm.hier.levels[level + 1].clone();
         for j in 1..coarse.n_points {
             let fine_j = j * c;
             let prev_fine = (j - 1) * c;
-            let dst = self.pm.device_of_point(level + 1, j);
-            let src = self.pm.device_of_point(level + 1, j - 1);
+            let dst = self.pm.device_of(sys, level + 1, j);
+            let src = self.pm.device_of(sys, level + 1, j - 1);
             let mut deps: Vec<usize> = Vec::new();
-            if let Some(w) = self.res[level][fine_j].writer {
+            if let Some(w) = self.slots[si].res[level][fine_j].writer {
                 deps.push(w);
             }
-            if let Some(w) = self.u[level][fine_j].writer {
+            if let Some(w) = self.slots[si].u[level][fine_j].writer {
                 deps.push(w);
             }
-            if let Some(w) = self.u[level][prev_fine].writer {
+            if let Some(w) = self.slots[si].u[level][prev_fine].writer {
                 deps.push(w);
             }
             let comm =
                 self.g.comm(src, dst, self.bytes(), dedup(deps.clone()), self.op(TaskOp::Xfer));
             if let Some(cm) = comm {
-                self.u[level][prev_fine].readers.push(cm);
+                self.slots[si].u[level][prev_fine].readers.push(cm);
                 deps = vec![cm];
             }
+            // adjoint: the coarse Ψ_H application linearizes around a primal
+            // fine state too
+            let rev = self.adjoint_state_dep(level + 1, j, &mut deps);
             // write hazards on the three coarse slots this task produces
-            self.rhs[level + 1][j].begin_write(&mut deps);
-            self.u[level + 1][j].begin_write(&mut deps);
-            self.inj[level + 1][j].begin_write(&mut deps);
+            self.slots[si].rhs[level + 1][j].begin_write(&mut deps);
+            self.slots[si].u[level + 1][j].begin_write(&mut deps);
+            self.slots[si].inj[level + 1][j].begin_write(&mut deps);
             let fine_idx = coarse.theta_idx(j - 1);
+            let label = self.lbl("restrict", "adj_restrict");
             let t = self.g.kernel(
                 dst,
-                "restrict",
+                label,
                 self.class_of(fine_idx),
                 self.step_flops(fine_idx),
                 dedup(deps),
-                self.op(TaskOp::Restrict { level, j }),
+                self.op(TaskOp::Restrict { sys, level, j }),
             );
-            self.rhs[level + 1][j].writer = Some(t);
-            self.u[level + 1][j].writer = Some(t);
-            self.inj[level + 1][j].writer = Some(t);
-            self.res[level][fine_j].readers.push(t);
-            self.u[level][fine_j].readers.push(t);
-            self.u[level][prev_fine].readers.push(t);
+            self.slots[si].rhs[level + 1][j].writer = Some(t);
+            self.slots[si].u[level + 1][j].writer = Some(t);
+            self.slots[si].inj[level + 1][j].writer = Some(t);
+            self.slots[si].res[level][fine_j].readers.push(t);
+            self.slots[si].u[level][fine_j].readers.push(t);
+            self.slots[si].u[level][prev_fine].readers.push(t);
+            if let Some(rev) = rev {
+                self.slots[0].u[0][rev].readers.push(t);
+            }
         }
     }
 
@@ -441,38 +653,41 @@ impl<'a> MgBuilder<'a> {
     fn coarse_solve(&mut self, level: usize) {
         let n = self.pm.hier.levels[level].n_points;
         for j in 1..n {
-            self.point_update(level, j, "coarse_solve");
+            self.point_update(level, j, "coarse_solve", "adj_coarse_solve");
         }
     }
 
     /// Correction: elementwise C-point update after the coarse solve (the
     /// coarse point is co-located with its fine C-point by construction).
     fn correct(&mut self, level: usize) {
+        let sys = self.sys;
+        let si = self.si();
         let c = self.pm.hier.coarsen;
         let coarse_n = self.pm.hier.levels[level + 1].n_points;
         let act = self.bytes() / 4.0; // elements
         for j in 1..coarse_n {
             let fine_j = j * c;
-            let dev = self.pm.device_of_point(level, fine_j);
+            let dev = self.pm.device_of(sys, level, fine_j);
             let mut deps: Vec<usize> = Vec::new();
-            if let Some(w) = self.u[level + 1][j].writer {
+            if let Some(w) = self.slots[si].u[level + 1][j].writer {
                 deps.push(w);
             }
-            if let Some(w) = self.inj[level + 1][j].writer {
+            if let Some(w) = self.slots[si].inj[level + 1][j].writer {
                 deps.push(w);
             }
-            self.u[level][fine_j].begin_write(&mut deps);
+            self.slots[si].u[level][fine_j].begin_write(&mut deps);
+            let label = self.lbl("correct", "adj_correct");
             let t = self.g.kernel(
                 dev,
-                "correct",
+                label,
                 KernelClass::Light,
                 2.0 * act,
                 dedup(deps),
-                self.op(TaskOp::Correct { level, j }),
+                self.op(TaskOp::Correct { sys, level, j }),
             );
-            self.u[level][fine_j].writer = Some(t);
-            self.u[level + 1][j].readers.push(t);
-            self.inj[level + 1][j].readers.push(t);
+            self.slots[si].u[level][fine_j].writer = Some(t);
+            self.slots[si].u[level + 1][j].readers.push(t);
+            self.slots[si].inj[level + 1][j].readers.push(t);
         }
     }
 
@@ -499,11 +714,78 @@ impl<'a> MgBuilder<'a> {
         self.correct(level);
         self.f_relax(level);
     }
+
+    /// The head task (forward + VJP in one kernel on the device owning the
+    /// last fine point) and the adjoint-system seeding: the head's output
+    /// ∂loss/∂u^N becomes the initial guess of *every* adjoint slot, so every
+    /// adjoint frontier starts at the head task.
+    fn head(&mut self) -> usize {
+        let n_fine = self.pm.hier.fine().n_points;
+        let last_dev = self.pm.device_of(Sys::Primal, 0, n_fine - 1);
+        let hc = head_cost(self.spec, self.batch);
+        let deps: Vec<usize> = self.slots[0].u[0][n_fine - 1].writer.into_iter().collect();
+        let ht = self.g.kernel(
+            last_dev,
+            "head",
+            KernelClass::Gemm,
+            3.0 * hc.flops,
+            deps,
+            self.op(TaskOp::Head),
+        );
+        self.slots[0].u[0][n_fine - 1].readers.push(ht);
+        for l in 0..self.pm.hier.n_levels() {
+            for j in 0..self.pm.hier.levels[l].n_points {
+                self.slots[1].u[l][j].writer = Some(ht);
+                self.slots[1].rhs[l][j].writer = Some(ht);
+            }
+        }
+        ht
+    }
+
+    /// Per-layer gradient + SGD-update tasks. The gradient of layer i needs
+    /// the forward state u[0][i] and λ^{i+1} = μ^{N−1−i}; it becomes ready
+    /// the moment that μ slot's final writer retires — while adjoint
+    /// relaxation of other partitions is still in flight.
+    fn grads_and_updates(&mut self) {
+        let n_fine = self.pm.hier.fine().n_points;
+        let n_layers = n_fine - 1;
+        for i in 0..n_layers {
+            let dev = self.pm.device_of(Sys::Primal, 0, (i + 1).min(n_fine - 1));
+            let mu = n_layers - 1 - i;
+            let mut deps: Vec<usize> = Vec::new();
+            if let Some(w) = self.slots[0].u[0][i].writer {
+                deps.push(w);
+            }
+            if let Some(w) = self.slots[1].u[0][mu].writer {
+                deps.push(w);
+            }
+            let c = layer_bwd_cost(self.spec, i, self.batch);
+            let gt = self.g.kernel(
+                dev,
+                "param_grad",
+                self.class_of(i),
+                c.flops,
+                dedup(deps),
+                self.op(TaskOp::GradAccum { layer: i }),
+            );
+            self.slots[0].u[0][i].readers.push(gt);
+            self.slots[1].u[0][mu].readers.push(gt);
+            let elems = layer_cost(self.spec, i, self.batch).param_bytes / 4.0;
+            self.g.kernel(
+                dev,
+                "param_update",
+                KernelClass::Light,
+                2.0 * elems,
+                vec![gt],
+                self.op(TaskOp::ParamUpdate { layer: i }),
+            );
+        }
+    }
 }
 
 /// One executable V-cycle (level 0 downwards) with the given relaxation
 /// pattern — the graph `ParallelMgrit` executes per MG iteration and the
-/// building block of [`mg_forward`].
+/// building block of [`mg_forward`]. Per-step F-relaxation granularity.
 pub fn mg_vcycle(
     spec: &NetSpec,
     hier: &Hierarchy,
@@ -511,7 +793,20 @@ pub fn mg_vcycle(
     batch: usize,
     relax: RelaxKind,
 ) -> TaskGraph {
+    mg_vcycle_with(spec, hier, partition, batch, relax, Granularity::PerStep)
+}
+
+/// As [`mg_vcycle`] with an explicit F-relaxation granularity.
+pub fn mg_vcycle_with(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+) -> TaskGraph {
     let mut b = MgBuilder::new(spec, hier, partition, batch);
+    b.gran = gran;
     b.vcycle(0, relax);
     b.g
 }
@@ -546,46 +841,46 @@ pub fn mg_forward(
     b.g
 }
 
-/// MG training step: forward MG, head fwd+vjp, adjoint MG (same cycle count,
-/// VJP steps ≈ 2× forward cost), then layer-local parameter gradients fanned
-/// out across all devices. Cost-model-only (`op == None`): the live executor
-/// runs forward solves; training runs through `train::` on the solver path.
-pub fn mg_training(
+/// The whole training step as **one** executable task graph, with no
+/// inter-phase barriers:
+///
+/// 1. `cycles` forward V-cycles over the primal system;
+/// 2. one head task (forward + VJP) on the device owning the last state,
+///    whose output seeds every adjoint slot;
+/// 3. `cycles` adjoint V-cycles over the reversed linear propagator Ψᵀ
+///    (VJP steps ≈ 2× forward flops), each Ψ application carrying a RAW
+///    edge to the forward state it linearizes around — so adjoint work on
+///    late layers starts while early partitions still finish forward work;
+/// 4. one `GradAccum` + one `ParamUpdate` task per layer, released the
+///    moment that layer's λ slot retires — gradient work on late layers
+///    overlaps adjoint relaxation on early layers.
+///
+/// The live executor and `sim::simulate` consume this identical graph.
+/// Executed against `coordinator::ExecState::initial_train`, the result is
+/// bit-identical to the serial step in `train::mg_step_serial`.
+pub fn mg_train_step(
     spec: &NetSpec,
     hier: &Hierarchy,
     partition: &Partition,
     batch: usize,
     cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
 ) -> TaskGraph {
     let mut b = MgBuilder::new(spec, hier, partition, batch);
-    b.executable = false;
+    b.gran = gran;
     for _ in 0..cycles {
-        b.vcycle(0, RelaxKind::FCF);
+        b.vcycle(0, relax);
     }
-    // head on the device owning the last point
-    let n_fine = b.pm.hier.fine().n_points;
-    let last_dev = b.pm.device_of_point(0, n_fine - 1);
-    let head = crate::model::cost::head_cost(spec, batch);
-    let deps: Vec<usize> = b.u[0][n_fine - 1].writer.into_iter().collect();
-    let h1 = b.g.kernel(last_dev, "head", KernelClass::Gemm, head.flops, deps, None);
-    let h2 =
-        b.g.kernel(last_dev, "head_vjp", KernelClass::Gemm, 2.0 * head.flops, vec![h1], None);
-    // adjoint MG: structurally identical cycles over the reversed system,
-    // each Φ replaced by its VJP (≈ 2× flops)
-    b.u[0][n_fine - 1] = Frontier { writer: Some(h2), readers: Vec::new() };
+    b.head();
+    b.sys = Sys::Adjoint;
     b.flop_scale = 2.0;
     for _ in 0..cycles {
-        b.vcycle(0, RelaxKind::FCF);
+        b.vcycle(0, relax);
     }
-    // layer-local parameter gradients (no communication)
+    b.sys = Sys::Primal;
     b.flop_scale = 1.0;
-    for i in 0..spec.n_res() {
-        let j = (i + 1).min(n_fine - 1);
-        let dev = b.pm.device_of_point(0, j);
-        let deps: Vec<usize> = b.u[0][j].writer.into_iter().collect();
-        let c = layer_bwd_cost(spec, i, batch);
-        b.g.kernel(dev, "param_grad", b.class_of(i), c.flops, deps, None);
-    }
+    b.grads_and_updates();
     b.g
 }
 
@@ -778,6 +1073,33 @@ mod tests {
     }
 
     #[test]
+    fn per_block_granularity_fuses_f_spans() {
+        let (spec, hier, part) = setup(64, 4);
+        let per_step = mg_vcycle_with(&spec, &hier, &part, 1, RelaxKind::FCF, Granularity::PerStep);
+        let per_block =
+            mg_vcycle_with(&spec, &hier, &part, 1, RelaxKind::FCF, Granularity::PerBlock);
+        per_block.validate().unwrap();
+        // fused: fewer tasks, same total work (to f64 reassociation) and
+        // identical traffic
+        assert!(per_block.n_tasks() < per_step.n_tasks());
+        let rel =
+            (per_block.total_flops() - per_step.total_flops()).abs() / per_step.total_flops();
+        assert!(rel < 1e-12, "fused flop total drifted: {rel}");
+        assert_eq!(per_block.n_comms(), per_step.n_comms());
+        // fine-level F-relaxation tasks carry BlockRun payloads
+        assert!(per_block
+            .tasks
+            .iter()
+            .any(|t| matches!(t.op, Some(TaskOp::BlockRun { level: 0, .. }))));
+        // a BlockRun covers a whole block's F-span
+        let spans_ok = per_block.tasks.iter().all(|t| match t.op {
+            Some(TaskOp::BlockRun { j_first, j_last, .. }) => j_first <= j_last,
+            _ => true,
+        });
+        assert!(spans_ok);
+    }
+
+    #[test]
     fn serial_forward_flops_match_trunk() {
         let spec = NetSpec::fig6_depth(64);
         let g = serial_forward(&spec, 1, 1);
@@ -808,14 +1130,79 @@ mod tests {
     #[test]
     fn training_graph_has_param_grads_on_all_layers() {
         let (spec, hier, part) = setup(32, 2);
-        let g = mg_training(&spec, &hier, &part, 1, 2);
+        let g = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
         g.validate().unwrap();
-        let n_pg = g
+        assert_eq!(g.n_kernels_labeled("param_grad"), 32);
+        assert_eq!(g.n_kernels_labeled("param_update"), 32);
+        assert_eq!(g.n_kernels_labeled("head"), 1);
+        // fully executable: the live DAG executor runs the whole step
+        assert!(g.tasks.iter().all(|t| t.op.is_some()));
+    }
+
+    #[test]
+    fn training_graph_adjoint_mirrors_forward_structure() {
+        let (spec, hier, part) = setup(32, 2);
+        let g = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
+        // the adjoint system runs the same cycle phases as the forward one
+        for (p, a) in [
+            ("f_relax", "adj_f_relax"),
+            ("c_relax", "adj_c_relax"),
+            ("residual", "adj_residual"),
+            ("restrict", "adj_restrict"),
+            ("correct", "adj_correct"),
+            ("coarse_solve", "adj_coarse_solve"),
+        ] {
+            assert_eq!(
+                g.n_kernels_labeled(p),
+                g.n_kernels_labeled(a),
+                "phase {p} vs {a} task counts differ"
+            );
+        }
+        // adjoint Φ applications cost ~2× their forward counterparts
+        let sum = |label: &str| -> f64 {
+            g.tasks
+                .iter()
+                .filter_map(|t| match &t.kind {
+                    TaskKind::Kernel { label: l, flops, .. } if *l == label => Some(*flops),
+                    _ => None,
+                })
+                .sum()
+        };
+        assert!((sum("adj_f_relax") / sum("f_relax") - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_graph_grads_depend_on_adjoint_not_on_a_barrier() {
+        // every param_grad must depend on (transitively reach) adjoint work,
+        // but NOT on every adjoint task — the no-barrier property at the
+        // graph level: at least one param_grad has an id smaller than the
+        // largest adjoint task id would allow under full serialization
+        let (spec, hier, part) = setup(32, 2);
+        let g = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
+        let adj_ids: Vec<usize> = g
             .tasks
             .iter()
-            .filter(|t| matches!(t.kind, TaskKind::Kernel { label: "param_grad", .. }))
-            .count();
-        assert_eq!(n_pg, 32);
+            .filter(|t| matches!(t.kind, TaskKind::Kernel { label, .. } if label.starts_with("adj_")))
+            .map(|t| t.id)
+            .collect();
+        let max_adj = *adj_ids.iter().max().unwrap();
+        for t in g.tasks.iter().filter(|t| matches!(t.op, Some(TaskOp::GradAccum { .. }))) {
+            // direct deps only; must NOT include every adjoint task
+            assert!(t.deps.len() < adj_ids.len(), "param_grad {} is barrier-like", t.id);
+            assert!(t.id > max_adj, "grads are built after the adjoint phase");
+        }
+    }
+
+    #[test]
+    fn training_graph_per_block_variant_validates() {
+        let (spec, hier, part) = setup(32, 2);
+        let g = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerBlock);
+        g.validate().unwrap();
+        assert!(g.tasks.iter().all(|t| t.op.is_some()));
+        assert!(g
+            .tasks
+            .iter()
+            .any(|t| matches!(t.op, Some(TaskOp::BlockRun { sys: Sys::Adjoint, .. }))));
     }
 
     #[test]
@@ -853,5 +1240,16 @@ mod tests {
         g.validate().unwrap();
         assert!(g.n_tasks() > 10_000);
         assert!(g.total_comm_bytes() > 0.0);
+    }
+
+    #[test]
+    fn fig7_training_schedule_scales() {
+        let spec = NetSpec::fig7();
+        let hier = Hierarchy::two_level(spec.n_res(), spec.h(), spec.coarsen).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let part = Partition::contiguous(n_blocks, 64).unwrap();
+        let g = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
+        g.validate().unwrap();
+        assert_eq!(g.n_kernels_labeled("param_grad"), spec.n_res());
     }
 }

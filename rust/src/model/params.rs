@@ -20,7 +20,7 @@ pub struct NetParams {
 }
 
 /// Refuse to allocate parameter sets above this size (the fig7 preset is
-/// cost-model-only; see DESIGN.md §4).
+/// cost-model-only; see DESIGN.md §6).
 const MAX_PARAM_ELEMS: u64 = 200_000_000;
 
 impl NetParams {
@@ -98,6 +98,67 @@ impl NetParams {
         self.w_fc.axpy(-lr, &grads.w_fc)?;
         self.b_fc.axpy(-lr, &grads.b_fc)?;
         Ok(())
+    }
+}
+
+/// Sharded per-layer (weight, bias) slots, filled independently by the
+/// coordinator's fan-out tasks (`GradAccum` gradients, `ParamUpdate` fresh
+/// parameters). Each slot is written exactly once; assembling a complete
+/// trunk fails loudly if any layer's task never retired.
+#[derive(Debug, Clone)]
+pub struct TrunkGradSlots {
+    slots: Vec<Option<(Tensor, Tensor)>>,
+}
+
+impl TrunkGradSlots {
+    pub fn new(n_layers: usize) -> TrunkGradSlots {
+        TrunkGradSlots { slots: vec![None; n_layers] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn n_filled(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Fill layer `i`'s slot; rejects out-of-range layers and double fills
+    /// (a double fill means the task graph scheduled a layer twice).
+    pub fn set(&mut self, i: usize, w: Tensor, b: Tensor) -> Result<()> {
+        let n = self.slots.len();
+        let slot = self
+            .slots
+            .get_mut(i)
+            .ok_or_else(|| anyhow::anyhow!("layer {i} out of range ({n} slots)"))?;
+        if slot.is_some() {
+            bail!("layer {i} slot filled twice");
+        }
+        *slot = Some((w, b));
+        Ok(())
+    }
+
+    pub fn get(&self, i: usize) -> Option<&(Tensor, Tensor)> {
+        self.slots.get(i).and_then(|s| s.as_ref())
+    }
+
+    /// Consume into the dense per-layer trunk; errors name the missing
+    /// layers (tasks that never retired).
+    pub fn into_pairs(self) -> Result<Vec<(Tensor, Tensor)>> {
+        let missing: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect();
+        if !missing.is_empty() {
+            bail!("trunk slots missing for layers {missing:?}");
+        }
+        Ok(self.slots.into_iter().map(|s| s.unwrap()).collect())
     }
 }
 
@@ -194,6 +255,26 @@ mod tests {
         p.sgd_step(&g, 0.1).unwrap();
         let diff = crate::util::stats::max_abs_diff(p.w_fc.data(), before.data());
         assert!((diff - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trunk_slots_fill_and_assemble() {
+        let mut s = TrunkGradSlots::new(3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.n_filled(), 0);
+        s.set(1, Tensor::zeros(&[2]), Tensor::zeros(&[2])).unwrap();
+        assert!(s.get(1).is_some());
+        assert!(s.get(0).is_none());
+        // double fill and out-of-range rejected
+        assert!(s.set(1, Tensor::zeros(&[2]), Tensor::zeros(&[2])).is_err());
+        assert!(s.set(7, Tensor::zeros(&[2]), Tensor::zeros(&[2])).is_err());
+        // incomplete assembly names the missing layers
+        let err = s.clone().into_pairs().unwrap_err().to_string();
+        assert!(err.contains("[0, 2]"), "{err}");
+        s.set(0, Tensor::zeros(&[1]), Tensor::zeros(&[1])).unwrap();
+        s.set(2, Tensor::zeros(&[1]), Tensor::zeros(&[1])).unwrap();
+        assert_eq!(s.n_filled(), 3);
+        assert_eq!(s.into_pairs().unwrap().len(), 3);
     }
 
     #[test]

@@ -558,6 +558,45 @@ mod tests {
     }
 
     #[test]
+    fn training_graph_simulates_without_phase_barriers() {
+        // the whole-training-step graph (the one the live executor runs)
+        // scores in the simulator, and the virtual-time trace shows a
+        // param_grad kernel starting before the adjoint phase has drained —
+        // impossible under an inter-phase barrier
+        use crate::mgrit::fas::RelaxKind;
+        use crate::mgrit::taskgraph::Granularity;
+        let spec = NetSpec::fig6_depth(64);
+        let hier = Hierarchy::two_level(64, spec.h(), 4).unwrap();
+        let part = Partition::contiguous(hier.fine().blocks(4).len(), 4).unwrap();
+        let g = taskgraph::mg_train_step(
+            &spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+        );
+        g.validate().unwrap();
+        let rep = simulate(&g, &cluster(4), true).unwrap();
+        assert_eq!(
+            rep.n_kernels,
+            g.tasks.iter().filter(|t| matches!(t.kind, TaskKind::Kernel { .. })).count()
+        );
+        let first_grad = rep
+            .trace
+            .iter()
+            .filter(|e| e.label == "param_grad")
+            .map(|e| e.t_start)
+            .fold(f64::INFINITY, f64::min);
+        let last_adj = rep
+            .trace
+            .iter()
+            .filter(|e| e.label.starts_with("adj_"))
+            .map(|e| e.t_end)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(first_grad.is_finite() && last_adj.is_finite());
+        assert!(
+            first_grad < last_adj,
+            "gradients only started after the adjoint drained ({first_grad} vs {last_adj})"
+        );
+    }
+
+    #[test]
     fn busy_fraction_bounded() {
         let spec = NetSpec::fig6_depth(128);
         let hier = Hierarchy::two_level(128, spec.h(), 4).unwrap();

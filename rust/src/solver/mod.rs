@@ -15,6 +15,7 @@
 pub mod host;
 pub mod pjrt;
 
+use crate::model::NetParams;
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -62,6 +63,48 @@ pub trait BlockSolver {
         u: &Tensor,
         lam: &Tensor,
     ) -> Result<(Tensor, Tensor)>;
+}
+
+/// A solver that also evaluates the non-trunk layers (opening, head) and
+/// exposes its parameter snapshot — everything a whole-training-step task
+/// graph needs beyond the trunk propagators. Implemented by `HostSolver`
+/// and `PjrtSolver`; re-exported from `train` for the training loops.
+pub trait NetExecutor: BlockSolver {
+    fn opening(&self, y: &Tensor) -> Result<Tensor>;
+    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)>;
+    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)>;
+    /// The parameter snapshot this executor was built over.
+    fn net_params(&self) -> &NetParams;
+}
+
+impl NetExecutor for host::HostSolver {
+    fn opening(&self, y: &Tensor) -> Result<Tensor> {
+        host::HostSolver::opening(self, y)
+    }
+    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
+        host::HostSolver::head(self, u, labels)
+    }
+    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        host::HostSolver::head_vjp(self, u, labels)
+    }
+    fn net_params(&self) -> &NetParams {
+        self.params()
+    }
+}
+
+impl NetExecutor for pjrt::PjrtSolver {
+    fn opening(&self, y: &Tensor) -> Result<Tensor> {
+        pjrt::PjrtSolver::opening(self, y)
+    }
+    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
+        pjrt::PjrtSolver::head(self, u, labels)
+    }
+    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        pjrt::PjrtSolver::head_vjp(self, u, labels)
+    }
+    fn net_params(&self) -> &NetParams {
+        self.params()
+    }
 }
 
 /// Builds one solver per worker thread (PJRT contexts are not `Send`, so

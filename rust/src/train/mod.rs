@@ -5,10 +5,12 @@
 //! Generic over [`NetExecutor`] so the same loop runs on the host path and
 //! the PJRT/Pallas artifact path.
 
+use std::sync::Arc;
+
 use anyhow::bail;
 
 use crate::data::Dataset;
-use crate::mgrit::{self, MgritOptions};
+use crate::mgrit::{self, Granularity, Hierarchy, MgritOptions};
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
 use crate::solver::BlockSolver;
@@ -17,36 +19,9 @@ use crate::util::prng::Rng;
 use crate::Result;
 
 /// A solver that also evaluates the non-trunk layers (opening, head).
-/// Implemented by `HostSolver` and `PjrtSolver`.
-pub trait NetExecutor: BlockSolver {
-    fn opening(&self, y: &Tensor) -> Result<Tensor>;
-    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)>;
-    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)>;
-}
-
-impl NetExecutor for crate::solver::host::HostSolver {
-    fn opening(&self, y: &Tensor) -> Result<Tensor> {
-        crate::solver::host::HostSolver::opening(self, y)
-    }
-    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
-        crate::solver::host::HostSolver::head(self, u, labels)
-    }
-    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
-        crate::solver::host::HostSolver::head_vjp(self, u, labels)
-    }
-}
-
-impl NetExecutor for crate::solver::pjrt::PjrtSolver {
-    fn opening(&self, y: &Tensor) -> Result<Tensor> {
-        crate::solver::pjrt::PjrtSolver::opening(self, y)
-    }
-    fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)> {
-        crate::solver::pjrt::PjrtSolver::head(self, u, labels)
-    }
-    fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
-        crate::solver::pjrt::PjrtSolver::head_vjp(self, u, labels)
-    }
-}
+/// Defined in [`crate::solver`] (the training-step task graph needs it too);
+/// re-exported here for the training loops.
+pub use crate::solver::NetExecutor;
 
 /// How states/adjoints are solved in a training step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -133,6 +108,173 @@ pub fn loss_and_grads<E: NetExecutor>(
         b_fc: dbfc,
     };
     Ok((loss, grads, logits))
+}
+
+/// One serial MG training step with an explicit hierarchy — the reference
+/// `coordinator::ParallelMgrit::train_step` is asserted *bit-identical* to.
+#[derive(Debug)]
+pub struct SerialStepOutput {
+    pub loss: f64,
+    pub grads: NetGrads,
+    /// Post-SGD parameters.
+    pub params: NetParams,
+    /// Fine-level forward trajectory u^0..u^N.
+    pub states: Vec<Tensor>,
+    /// Adjoints λ^0..λ^N.
+    pub lams: Vec<Tensor>,
+}
+
+/// The serial whole-training-step: forward MGRIT (fixed `opts.max_cycles`
+/// early-stopped cycles; the tolerance exit is disabled, matching the
+/// paper's training mode and the parallel graph, which has no mid-graph
+/// convergence check), head fwd+VJP, adjoint MGRIT, per-layer gradients,
+/// SGD. Same arithmetic in the same order as the parallel task graph.
+pub fn mg_step_serial<E: NetExecutor>(
+    spec: &NetSpec,
+    exec: &E,
+    y: &Tensor,
+    labels: &[i32],
+    hier: &Hierarchy,
+    opts: &MgritOptions,
+    lr: f32,
+) -> Result<SerialStepOutput> {
+    let h = spec.h();
+    // the executor's own snapshot — the one every stage below linearizes
+    // around, so opening grads and SGD cannot diverge from the propagation
+    let params = exec.net_params();
+    let opts = MgritOptions { tol: 0.0, ..opts.clone() };
+    let u0 = exec.opening(y)?;
+    let (states, _) = mgrit::fas::solve_forward_with(exec, hier, &u0, &opts)?;
+    let un = states.last().unwrap();
+    let (_logits, loss) = exec.head(un, labels)?;
+    let (du_n, dwfc, dbfc) = exec.head_vjp(un, labels)?;
+    let (lams, _) = mgrit::adjoint::solve_adjoint_with(exec, &states, hier, &du_n, &opts)?;
+    let trunk = mgrit::adjoint::param_grads(exec, &states, &lams, h)?;
+    let (dw_open, db_open) =
+        opening_vjp(y, &params.w_open, &params.b_open, spec.opening.pad, &lams[0])?;
+    let grads = NetGrads { w_open: dw_open, b_open: db_open, trunk, w_fc: dwfc, b_fc: dbfc };
+    let mut updated = params.clone();
+    updated.sgd_step(&grads, lr)?;
+    Ok(SerialStepOutput { loss, grads, params: updated, states, lams })
+}
+
+/// The training hierarchy `Method::Mgrit` implies (what `solve_forward`
+/// builds internally): coarsening 4, the default level cap and coarse floor.
+pub fn training_hierarchy(spec: &NetSpec) -> Result<Hierarchy> {
+    let n = spec.n_res();
+    let d = MgritOptions::default();
+    Hierarchy::build(n, spec.h(), mgrit::fas::coarsen_for(n), d.max_levels, d.min_coarse_points)
+}
+
+/// Layer-parallel SGD training through `ParallelMgrit::train_step`: every
+/// step executes the whole-training-step task graph over `n_devices` worker
+/// streams (host numerics — each worker builds its own `HostSolver` over the
+/// current parameter snapshot). Batch schedule and arithmetic match
+/// [`train`] with `Method::Mgrit`, so losses are directly comparable.
+pub fn train_parallel(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+) -> Result<Vec<StepLog>> {
+    if data.is_empty() {
+        bail!("empty dataset");
+    }
+    let Method::Mgrit { cycles } = cfg.method else {
+        bail!("train_parallel requires Method::Mgrit");
+    };
+    let hier = training_hierarchy(spec)?;
+    let opts = MgritOptions::early_stopping(cycles);
+    let mut rng = Rng::new(cfg.seed);
+    let mut logs = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let (y, labels) = data.sample_batch(cfg.batch, &mut rng)?;
+        // workers hold immutable parameter snapshots — rebuild the pool per
+        // step (the moral equivalent of re-uploading weights to the devices)
+        let spec2 = spec.clone();
+        let snap = Arc::new(params.clone());
+        let factory =
+            move |_w: usize| crate::solver::host::HostSolver::new(spec2.clone(), snap.clone());
+        let mut drv = crate::coordinator::ParallelMgrit::new(
+            factory,
+            spec.clone(),
+            hier.clone(),
+            n_devices,
+            cfg.batch,
+        )?;
+        drv.set_granularity(granularity);
+        let out = drv.train_step(&y, &labels, &opts, cfg.lr)?;
+        let grad_norm = out.grads.global_norm();
+        *params = out.params;
+        logs.push(StepLog { step, loss: out.loss, grad_norm });
+    }
+    Ok(logs)
+}
+
+/// One-line speed/parity report: runs a single training step both ways (the
+/// serial MG step and the parallel whole-step graph) on one batch from
+/// `data` and reports timings plus the largest relative error across every
+/// post-SGD parameter tensor (expected 0 — the step is bit-identical).
+pub fn parity_report(
+    spec: &Arc<NetSpec>,
+    params: &NetParams,
+    data: &Dataset,
+    batch: usize,
+    cycles: usize,
+    lr: f32,
+    n_devices: usize,
+    granularity: Granularity,
+) -> Result<String> {
+    let mut rng = Rng::new(0xC0FFEE);
+    let (y, labels) = data.sample_batch(batch, &mut rng)?;
+    let hier = training_hierarchy(spec)?;
+    let opts = MgritOptions::early_stopping(cycles);
+    let exec =
+        crate::solver::host::HostSolver::new(spec.clone(), Arc::new(params.clone()))?;
+    let t = crate::util::Timer::start();
+    let serial = mg_step_serial(spec, &exec, &y, &labels, &hier, &opts, lr)?;
+    let serial_s = t.elapsed_s();
+
+    let spec2 = spec.clone();
+    let snap = Arc::new(params.clone());
+    let factory =
+        move |_w: usize| crate::solver::host::HostSolver::new(spec2.clone(), snap.clone());
+    let mut drv = crate::coordinator::ParallelMgrit::new(
+        factory,
+        spec.clone(),
+        hier,
+        n_devices,
+        batch,
+    )?;
+    drv.set_granularity(granularity);
+    let t = crate::util::Timer::start();
+    let par = drv.train_step(&y, &labels, &opts, lr)?;
+    let par_s = t.elapsed_s();
+
+    let mut worst = 0.0f64;
+    let mut cmp = |a: &Tensor, b: &Tensor| {
+        worst = worst.max(crate::util::stats::rel_l2_err(a.data(), b.data()));
+    };
+    cmp(&par.params.w_open, &serial.params.w_open);
+    cmp(&par.params.b_open, &serial.params.b_open);
+    for ((pw, pb), (sw, sb)) in par.params.trunk.iter().zip(&serial.params.trunk) {
+        cmp(pw, sw);
+        cmp(pb, sb);
+    }
+    cmp(&par.params.w_fc, &serial.params.w_fc);
+    cmp(&par.params.b_fc, &serial.params.b_fc);
+    Ok(format!(
+        "parallel train_step parity: max param rel-err {worst:.1e} vs serial MG step \
+         (loss {:.6} vs {:.6}); serial {:.1} ms, parallel {:.1} ms on {} devices ({:?})",
+        par.loss,
+        serial.loss,
+        serial_s * 1e3,
+        par_s * 1e3,
+        n_devices,
+        granularity,
+    ))
 }
 
 /// Per-step log record.
@@ -291,6 +433,37 @@ mod tests {
         let first: f64 = logs[..3].iter().map(|l| l.loss).sum::<f64>() / 3.0;
         let last: f64 = logs[logs.len() - 3..].iter().map(|l| l.loss).sum::<f64>() / 3.0;
         assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn parallel_training_matches_mgrit_training_losses() {
+        // the whole-training-step graph loop reproduces the serial MG loop
+        // exactly: same hierarchy, same batches, bit-identical steps ⇒
+        // identical loss curve and identical final parameters
+        let spec = tiny_spec();
+        let ds = SyntheticDigits::new(75).dataset(40);
+        let cfg = TrainConfig {
+            steps: 3,
+            batch: 4,
+            lr: 0.05,
+            method: Method::Mgrit { cycles: 2 },
+            seed: 5,
+        };
+        let mut p_serial = NetParams::init(&spec, 76).unwrap();
+        let logs_s = train(&spec, &mut p_serial, &ds, &cfg, mk_host(&spec)).unwrap();
+        let mut p_par = NetParams::init(&spec, 76).unwrap();
+        let logs_p =
+            train_parallel(&spec, &mut p_par, &ds, &cfg, 2, Granularity::PerStep).unwrap();
+        assert_eq!(logs_s.len(), logs_p.len());
+        for (a, b) in logs_s.iter().zip(&logs_p) {
+            assert_eq!(a.loss, b.loss, "step {} loss differs", a.step);
+            assert_eq!(a.grad_norm, b.grad_norm, "step {} grad norm differs", a.step);
+        }
+        for ((w, b), (w2, b2)) in p_serial.trunk.iter().zip(&p_par.trunk) {
+            assert!(w.data() == w2.data() && b.data() == b2.data(), "final params differ");
+        }
+        assert!(p_serial.w_fc.data() == p_par.w_fc.data());
+        assert!(p_serial.w_open.data() == p_par.w_open.data());
     }
 
     #[test]

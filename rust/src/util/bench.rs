@@ -86,7 +86,14 @@ impl Suite {
         self.tables.push((name.to_string(), arr(rows)));
     }
 
-    /// Write the JSON report; call at the end of the bench main().
+    /// Write the JSON reports; call at the end of the bench main().
+    ///
+    /// Two files land under `target/bench-results/`:
+    /// - `<suite>.json` — the full human-ish report (all statistics + any
+    ///   embedded figure tables), as before;
+    /// - `BENCH_<suite>.json` — the machine-readable perf-trajectory record
+    ///   (median ns + iteration count per benchmark, tagged with the git
+    ///   revision) that stays diffable across PRs.
     pub fn finish(self) {
         let dir = std::path::Path::new("target/bench-results");
         let _ = std::fs::create_dir_all(dir);
@@ -117,6 +124,58 @@ impl Suite {
             }
             Err(e) => eprintln!("  could not write {}: {e}", path.display()),
         }
+        // the machine-readable perf-trajectory record
+        let rev = git_rev();
+        let rows: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                obj(vec![
+                    ("name", s(&m.name)),
+                    ("median_ns", num((m.median_s * 1e9).round())),
+                    ("iters", num(m.iters as f64)),
+                ])
+            })
+            .collect();
+        let bench_json = obj(vec![
+            ("suite", s(&self.name)),
+            ("git_rev", s(&rev)),
+            ("benches", arr(rows)),
+        ])
+        .to_string();
+        let bench_path = dir.join(format!("BENCH_{}.json", self.name));
+        match std::fs::File::create(&bench_path) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{bench_json}");
+                println!("  perf record → {}", bench_path.display());
+            }
+            Err(e) => eprintln!("  could not write {}: {e}", bench_path.display()),
+        }
+    }
+}
+
+/// The current git revision (short hash, "+dirty" when the tree has local
+/// modifications), or "unknown" outside a git checkout.
+pub fn git_rev() -> String {
+    let run = |args: &[&str]| -> Option<String> {
+        let out = std::process::Command::new("git").args(args).output().ok()?;
+        if !out.status.success() {
+            return None;
+        }
+        Some(String::from_utf8_lossy(&out.stdout).trim().to_string())
+    };
+    match run(&["rev-parse", "--short", "HEAD"]) {
+        Some(rev) if !rev.is_empty() => {
+            let dirty = run(&["status", "--porcelain"])
+                .map(|s| !s.is_empty())
+                .unwrap_or(false);
+            if dirty {
+                format!("{rev}+dirty")
+            } else {
+                rev
+            }
+        }
+        _ => "unknown".to_string(),
     }
 }
 
@@ -146,5 +205,31 @@ mod tests {
         assert!(m.mean_s > 0.0);
         assert!(m.iters >= 3);
         assert!(m.min_s <= m.median_s);
+    }
+
+    #[test]
+    fn git_rev_is_nonempty() {
+        // inside the repo this is a short hash (possibly +dirty); outside,
+        // the "unknown" sentinel — never an empty string either way
+        assert!(!git_rev().is_empty());
+    }
+
+    #[test]
+    fn finish_writes_bench_record() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut suite = Suite::new("selftest_record");
+        suite.bench("noop", || {
+            black_box(1 + 1);
+        });
+        suite.finish();
+        let path = std::path::Path::new("target/bench-results/BENCH_selftest_record.json");
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "selftest_record");
+        assert!(!j.get("git_rev").unwrap().as_str().unwrap().is_empty());
+        let benches = j.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        assert!(benches[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(benches[0].get("iters").unwrap().as_usize().unwrap() >= 3);
     }
 }

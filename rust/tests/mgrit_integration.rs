@@ -6,17 +6,26 @@
 use std::sync::Arc;
 
 use resnet_mgrit::coordinator::ParallelMgrit;
-use resnet_mgrit::mgrit::{self, hierarchy::Hierarchy, taskgraph, MgritOptions};
+use resnet_mgrit::data::SyntheticDigits;
+use resnet_mgrit::mgrit::{self, hierarchy::Hierarchy, taskgraph, Granularity, MgritOptions};
 use resnet_mgrit::model::{NetParams, NetSpec};
 use resnet_mgrit::solver::host::HostSolver;
 use resnet_mgrit::solver::{BlockSolver, SolverFactory};
 use resnet_mgrit::tensor::Tensor;
+use resnet_mgrit::train;
 use resnet_mgrit::util::prng::Rng;
 use resnet_mgrit::util::proptest_lite as pt;
 use resnet_mgrit::util::stats::rel_l2_err;
 
 fn factory(spec: Arc<NetSpec>, seed: u64) -> impl SolverFactory<Solver = HostSolver> {
     let params = Arc::new(NetParams::init(&spec, seed).unwrap());
+    move |_w: usize| HostSolver::new(spec.clone(), params.clone())
+}
+
+fn params_factory(
+    spec: Arc<NetSpec>,
+    params: Arc<NetParams>,
+) -> impl SolverFactory<Solver = HostSolver> {
     move |_w: usize| HostSolver::new(spec.clone(), params.clone())
 }
 
@@ -177,6 +186,190 @@ fn taskgraph_comm_matches_live_coordinator_accounting() {
             metrics.comm_events
         );
     }
+}
+
+#[test]
+fn multilevel_adjoint_gradients_match_exact_backprop() {
+    // satellite: the ≥3-level hierarchy case of the 2-level test above, to
+    // the same tolerance — forward MG + adjoint MG on a recursive V-cycle
+    // hierarchy, layer-local grads vs exact backprop
+    let spec = Arc::new(NetSpec::mnist());
+    let params = Arc::new(NetParams::init(&spec, 92).unwrap());
+    let solver = HostSolver::new(spec.clone(), params).unwrap();
+    let mut rng = Rng::new(93);
+    let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let n = spec.n_res();
+    let h = spec.h();
+    let lam_final = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let hier = Hierarchy::build(n, h, 4, 3, 2).unwrap();
+    assert!(hier.n_levels() >= 3, "need a multilevel hierarchy");
+
+    // exact
+    let mut exact_states = vec![u0.clone()];
+    exact_states.extend(solver.block_fprop(0, 1, n, h, &u0).unwrap());
+    let exact_lams =
+        mgrit::adjoint::serial_adjoint(&solver, &exact_states, h, &lam_final).unwrap();
+    let exact_grads =
+        mgrit::adjoint::param_grads(&solver, &exact_states, &exact_lams, h).unwrap();
+
+    // MG with the paper's 2 early-stopped cycles on the 3-level hierarchy
+    let opts = MgritOptions::early_stopping(2);
+    let (mg_states, _) =
+        mgrit::fas::solve_forward_with(&solver, &hier, &u0, &opts).unwrap();
+    let (mg_lams, _) =
+        mgrit::adjoint::solve_adjoint_with(&solver, &mg_states, &hier, &lam_final, &opts)
+            .unwrap();
+    let mg_grads = mgrit::adjoint::param_grads(&solver, &mg_states, &mg_lams, h).unwrap();
+
+    let mut worst = 0.0f64;
+    for ((ew, eb), (mw, mb)) in exact_grads.iter().zip(&mg_grads) {
+        worst = worst.max(rel_l2_err(mw.data(), ew.data()));
+        worst = worst.max(rel_l2_err(mb.data(), eb.data()));
+    }
+    assert!(worst < 0.25, "worst multilevel per-layer grad error {worst}");
+}
+
+/// One training batch for the mnist-family presets.
+fn train_batch(spec: &NetSpec, batch: usize) -> (Tensor, Vec<i32>) {
+    let ds = SyntheticDigits::new(94).dataset(batch.max(4) * 2);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (y, labels) = ds.batch(&idx).unwrap();
+    let o = &spec.opening;
+    assert_eq!(y.dims(), &[batch, o.in_channels, o.in_h, o.in_w]);
+    (y, labels)
+}
+
+#[test]
+fn parallel_train_step_bit_identical_to_serial_mg_step() {
+    // the tentpole contract: the whole-training-step task graph (forward →
+    // head → adjoint → grads → SGD, one DAG, no phase barriers) produces
+    // BIT-IDENTICAL states, adjoints, gradients, loss, and post-SGD
+    // parameters to the serial MG step, at every device count and at both
+    // F-relaxation granularities
+    let spec = Arc::new(NetSpec::mnist());
+    let params = Arc::new(NetParams::init(&spec, 95).unwrap());
+    let (y, labels) = train_batch(&spec, 2);
+    let lr = 0.05f32;
+    let opts = MgritOptions::early_stopping(2);
+    let hier = train::training_hierarchy(&spec).unwrap();
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let serial =
+        train::mg_step_serial(&spec, &exec, &y, &labels, &hier, &opts, lr).unwrap();
+
+    for n_dev in [1usize, 2, 4] {
+        for gran in [Granularity::PerStep, Granularity::PerBlock] {
+            let mut drv = ParallelMgrit::new(
+                params_factory(spec.clone(), params.clone()),
+                spec.clone(),
+                hier.clone(),
+                n_dev,
+                2,
+            )
+            .unwrap();
+            drv.set_granularity(gran);
+            let par = drv.train_step(&y, &labels, &opts, lr).unwrap();
+            let ctx = format!("n_dev={n_dev} gran={gran:?}");
+
+            assert_eq!(par.loss, serial.loss, "{ctx}: loss differs");
+            assert_eq!(par.states.len(), serial.states.len());
+            for (j, (a, b)) in par.states.iter().zip(&serial.states).enumerate() {
+                assert!(a.data() == b.data(), "{ctx}: state {j} differs bitwise");
+            }
+            assert_eq!(par.lams.len(), serial.lams.len());
+            for (j, (a, b)) in par.lams.iter().zip(&serial.lams).enumerate() {
+                assert!(a.data() == b.data(), "{ctx}: adjoint {j} differs bitwise");
+            }
+            for (i, ((pw, pb), (sw, sb))) in
+                par.grads.trunk.iter().zip(&serial.grads.trunk).enumerate()
+            {
+                assert!(pw.data() == sw.data(), "{ctx}: grad W {i} differs bitwise");
+                assert!(pb.data() == sb.data(), "{ctx}: grad b {i} differs bitwise");
+            }
+            assert!(par.grads.w_open.data() == serial.grads.w_open.data(), "{ctx}: dW_open");
+            assert!(par.grads.b_open.data() == serial.grads.b_open.data(), "{ctx}: db_open");
+            assert!(par.grads.w_fc.data() == serial.grads.w_fc.data(), "{ctx}: dW_fc");
+            assert!(par.grads.b_fc.data() == serial.grads.b_fc.data(), "{ctx}: db_fc");
+            for (i, ((pw, pb), (sw, sb))) in
+                par.params.trunk.iter().zip(&serial.params.trunk).enumerate()
+            {
+                assert!(pw.data() == sw.data(), "{ctx}: post-SGD W {i} differs bitwise");
+                assert!(pb.data() == sb.data(), "{ctx}: post-SGD b {i} differs bitwise");
+            }
+            assert!(par.params.w_open.data() == serial.params.w_open.data(), "{ctx}: W_open");
+            assert!(par.params.b_open.data() == serial.params.b_open.data(), "{ctx}: b_open");
+            assert!(par.params.w_fc.data() == serial.params.w_fc.data(), "{ctx}: W_fc");
+            assert!(par.params.b_fc.data() == serial.params.b_fc.data(), "{ctx}: b_fc");
+        }
+    }
+}
+
+#[test]
+fn parallel_train_step_bit_identical_on_multilevel_hierarchy() {
+    // same contract on a ≥3-level hierarchy (recursive V-cycles in both the
+    // forward and the adjoint halves of the one-graph step)
+    let spec = Arc::new(NetSpec::mnist());
+    let params = Arc::new(NetParams::init(&spec, 96).unwrap());
+    let (y, labels) = train_batch(&spec, 1);
+    let lr = 0.05f32;
+    let opts = MgritOptions::early_stopping(2);
+    let hier = Hierarchy::build(spec.n_res(), spec.h(), 4, 3, 2).unwrap();
+    assert!(hier.n_levels() >= 3);
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let serial =
+        train::mg_step_serial(&spec, &exec, &y, &labels, &hier, &opts, lr).unwrap();
+    let drv = ParallelMgrit::new(
+        params_factory(spec.clone(), params.clone()),
+        spec.clone(),
+        hier,
+        3,
+        1,
+    )
+    .unwrap();
+    let par = drv.train_step(&y, &labels, &opts, lr).unwrap();
+    assert_eq!(par.loss, serial.loss);
+    for (a, b) in par.states.iter().zip(&serial.states) {
+        assert!(a.data() == b.data(), "multilevel state differs bitwise");
+    }
+    for (a, b) in par.lams.iter().zip(&serial.lams) {
+        assert!(a.data() == b.data(), "multilevel adjoint differs bitwise");
+    }
+    for ((pw, pb), (sw, sb)) in par.params.trunk.iter().zip(&serial.params.trunk) {
+        assert!(pw.data() == sw.data() && pb.data() == sb.data(), "multilevel params differ");
+    }
+}
+
+#[test]
+fn train_step_trace_overlaps_adjoint_and_gradient_phases() {
+    // the no-barrier property on the LIVE trace: some parameter-gradient
+    // task must start while adjoint work of ANOTHER partition has not yet
+    // finished. Under an inter-phase barrier every adj_* task would end
+    // before every param_grad starts, making this impossible.
+    let spec = Arc::new(NetSpec::fig6_depth(64));
+    let params = Arc::new(NetParams::init(&spec, 97).unwrap());
+    let hier = Hierarchy::two_level(64, spec.h(), 4).unwrap();
+    let drv = ParallelMgrit::new(
+        params_factory(spec.clone(), params.clone()),
+        spec.clone(),
+        hier,
+        4,
+        1,
+    )
+    .unwrap();
+    let mut rng = Rng::new(98);
+    let o = &spec.opening;
+    let y = Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels = [2i32];
+    let opts = MgritOptions::early_stopping(2);
+    drv.train_step(&y, &labels, &opts, 0.05).unwrap();
+    let trace = drv.pool().trace();
+    assert!(trace.iter().any(|e| e.label.starts_with("adj_")), "no adjoint tasks in trace");
+    assert!(trace.iter().any(|e| e.label == "param_grad"), "no gradient tasks in trace");
+    let overlap = trace.iter().filter(|pg| pg.label == "param_grad").any(|pg| {
+        trace.iter().any(|a| {
+            a.label.starts_with("adj_") && a.worker != pg.worker && a.t_end > pg.t_start
+        })
+    });
+    assert!(overlap, "adjoint and gradient phases never overlapped across partitions");
 }
 
 #[test]
