@@ -32,6 +32,12 @@ fn main() -> resnet_mgrit::Result<()> {
     // instead of silently dropping a requested pjrt backend
     let parallel = args.usize_or("parallel", 0)?;
     let granularity = Granularity::parse(args.get_or("granularity", "per_step"))?;
+    // --micro-batches M pipelines M micro-batch instances through one
+    // composed graph per step (hybrid data×layer parallelism)
+    let micro_batches = args.usize_or("micro-batches", 1)?;
+    if micro_batches != 1 && parallel == 0 {
+        anyhow::bail!("--micro-batches requires --parallel");
+    }
     if parallel > 0 && backend == "pjrt" {
         println!("--parallel runs on the host backend; overriding --backend pjrt");
         backend = "host".to_string();
@@ -80,9 +86,15 @@ fn main() -> resnet_mgrit::Result<()> {
             };
             let logs = match (&store, backend.as_str(), par) {
                 // the whole-training-step task graph over `par` streams
-                (_, _, p) if p > 0 => {
-                    train::train_parallel(&spec, &mut params, &data, &cfg, p, granularity)?
-                }
+                (_, _, p) if p > 0 => train::train_parallel(
+                    &spec,
+                    &mut params,
+                    &data,
+                    &cfg,
+                    p,
+                    granularity,
+                    micro_batches,
+                )?,
                 (Some(st), "pjrt", _) => {
                     let spec2 = spec.clone();
                     let st2 = st.clone();
@@ -121,7 +133,7 @@ fn main() -> resnet_mgrit::Result<()> {
     if parallel > 0 {
         println!(
             "\n— MG layer-parallel via the whole-training-step task graph \
-             ({parallel} devices, {granularity:?}) —"
+             ({parallel} devices, {granularity:?}, {micro_batches} micro-batch(es)) —"
         );
     } else {
         println!("\n— MG layer-parallel, 2 early-stopped cycles (the paper's config) —");

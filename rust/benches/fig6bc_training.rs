@@ -26,6 +26,12 @@ fn main() {
     println!("{ascii}");
     suite.table("training_timeline_rows", t.to_json_rows());
 
+    // hybrid data×layer: M micro-batches pipelined through one graph
+    let micro = if quick { 2 } else { 4 };
+    let h = fig6::hybrid_timeline(depth, devices, micro).expect("hybrid timeline");
+    println!("{}", h.render());
+    suite.table("hybrid_rows", h.to_json_rows());
+
     suite.bench("simulate_mg_training_step_24gpu", || {
         let spec = resnet_mgrit::model::NetSpec::fig6();
         let _ = fig6::simulate_mg(&spec, 24, 2, true).unwrap();

@@ -90,6 +90,18 @@ fn main() {
         suite.bench("build_mnist_train_step_graph", || {
             black_box(driver.train_graph(&topts));
         });
+        // the hybrid data×layer step: 2 micro-batches pipelined through one
+        // composed graph vs 2 sequential single-instance steps
+        driver.set_granularity(resnet_mgrit::mgrit::Granularity::PerStep);
+        let y2 = Tensor::randn(&[2, 1, 28, 28], 0.5, &mut rng);
+        let labels2 = [3i32, 5];
+        suite.bench("dag_executor_train_step_micro2_mnist_b2_4dev", || {
+            driver.pool().clear_trace();
+            black_box(driver.train_step_micro(&y2, &labels2, &topts, 0.05, 2).unwrap());
+        });
+        suite.bench("build_mnist_train_step_graph_micro2", || {
+            black_box(driver.train_graph_micro(&topts, 2).unwrap());
+        });
     }
 
     // simulator throughput on the fig6 2-cycle schedule at 24 GPUs

@@ -17,8 +17,8 @@
 
 use std::sync::Arc;
 
-use super::executor::{self, ExecState};
-use super::partition::Partition;
+use super::executor::{self, ExecEvent, MultiExecState};
+use super::partition::{InstanceGroups, Partition};
 use super::streams::StreamPool;
 use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
@@ -42,6 +42,9 @@ pub struct RunMetrics {
     pub cycles: usize,
     /// ‖R_h‖ after each cycle.
     pub residual_norms: Vec<f64>,
+    /// Instance-tagged kernel completions (pool-clock timestamps) — the
+    /// record the cross-instance pipelining assertions read.
+    pub events: Vec<ExecEvent>,
 }
 
 impl RunMetrics {
@@ -74,6 +77,35 @@ pub struct TrainStepOutput {
     pub metrics: RunMetrics,
 }
 
+/// One micro-batch instance's trajectory out of a hybrid training step.
+#[derive(Debug)]
+pub struct InstanceStep {
+    /// This micro-batch's loss.
+    pub loss: f64,
+    /// Fine-level forward trajectory u^0..u^N.
+    pub states: Vec<Tensor>,
+    /// Adjoints λ^0..λ^N.
+    pub lams: Vec<Tensor>,
+}
+
+/// Output of one hybrid (M micro-batch) training-step graph execution (see
+/// [`ParallelMgrit::train_step_micro`]): bit-identical to the serial
+/// sum-over-micro-batches reference `train::mg_step_serial_micro`.
+#[derive(Debug)]
+pub struct MicroStepOutput {
+    /// Mean loss over micro-batches.
+    pub loss: f64,
+    /// Reduced (micro-batch mean) gradient set — trunk from the graph's
+    /// `ReduceGrad` roots; opening and head reduced host-side with the same
+    /// plan and primitives.
+    pub grads: NetGrads,
+    /// Post-SGD parameters (trunk from the graph's `ParamUpdate` tasks).
+    pub params: NetParams,
+    /// Per-micro-batch trajectories, in instance order.
+    pub per_instance: Vec<InstanceStep>,
+    pub metrics: RunMetrics,
+}
+
 /// Dependency-driven parallel MGRIT over a stream pool.
 pub struct ParallelMgrit<F: SolverFactory> {
     pool: StreamPool<F>,
@@ -83,6 +115,9 @@ pub struct ParallelMgrit<F: SolverFactory> {
     hier: Hierarchy,
     partition: Partition,
     granularity: Granularity,
+    /// Device groups for multi-instance runs: instance k's tasks run on
+    /// device group k mod n_groups (group 0 is the partition itself).
+    n_groups: usize,
 }
 
 impl<F: SolverFactory> ParallelMgrit<F> {
@@ -97,9 +132,26 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         n_devices: usize,
         batch: usize,
     ) -> Result<ParallelMgrit<F>> {
+        Self::new_grouped(factory, spec, hier, n_devices, 1, batch)
+    }
+
+    /// As [`ParallelMgrit::new`] with `n_groups` device groups of
+    /// `devices_per_group` workers each: the layer-block partition lives
+    /// inside one group, and micro-batch instances are spread round-robin
+    /// across groups (`n_groups == 1` — the default — shares every device
+    /// between all instances for maximal cross-instance overlap).
+    pub fn new_grouped(
+        factory: F,
+        spec: Arc<NetSpec>,
+        hier: Hierarchy,
+        devices_per_group: usize,
+        n_groups: usize,
+        batch: usize,
+    ) -> Result<ParallelMgrit<F>> {
+        anyhow::ensure!(n_groups >= 1, "need at least one device group");
         let n_blocks = hier.fine().blocks(hier.coarsen).len();
-        let partition = Partition::contiguous(n_blocks, n_devices)?;
-        let pool = StreamPool::new(partition.n_devices(), factory.clone())?;
+        let partition = Partition::contiguous(n_blocks, devices_per_group)?;
+        let pool = StreamPool::new(partition.n_devices() * n_groups, factory.clone())?;
         Ok(ParallelMgrit {
             pool,
             factory,
@@ -108,6 +160,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             hier,
             partition,
             granularity: Granularity::PerStep,
+            n_groups,
         })
     }
 
@@ -163,6 +216,28 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         )
     }
 
+    /// The hybrid data×layer training schedule: `micro_batches` full
+    /// primal+adjoint instances joined by per-layer `ReduceGrad` trees and a
+    /// single `ParamUpdate` per layer — one composed graph, no inter-instance
+    /// barrier; identical for the simulator and the live executor.
+    pub fn train_graph_micro(
+        &self,
+        opts: &MgritOptions,
+        micro_batches: usize,
+    ) -> Result<taskgraph::TaskGraph> {
+        let groups = InstanceGroups::new(self.n_groups, self.partition.n_devices())?;
+        taskgraph::mg_train_step_multi(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            &groups,
+            (self.batch / micro_batches.max(1)).max(1),
+            opts.max_cycles,
+            opts.relax,
+            self.granularity,
+            micro_batches,
+        )
+    }
 }
 
 impl<F: SolverFactory> ParallelMgrit<F>
@@ -171,8 +246,9 @@ where
 {
     /// Fold one execution report into the run metrics. `state_bytes` is the
     /// size of one layer state actually being solved for (from `u0`), so the
-    /// traffic ledger reflects the real tensors, not the construction-time
-    /// batch hint.
+    /// state-transfer ledger reflects the real tensors, not the
+    /// construction-time batch hint; gradient transfers (reduction-tree
+    /// hops) are parameter-shaped and come pre-priced from the graph.
     fn absorb(
         m: &mut RunMetrics,
         rep: &executor::ExecReport,
@@ -180,9 +256,11 @@ where
         state_bytes: u64,
     ) {
         m.comm_events += rep.comm_events;
-        m.comm_bytes += rep.comm_events as u64 * state_bytes;
+        m.comm_bytes +=
+            rep.comm_state_events as u64 * state_bytes + rep.comm_grad_bytes as u64;
         stats.phi_evals += rep.phi_evals;
         executor::merge_phases(&mut m.phases, &rep.phase_s);
+        m.events.extend(rep.events.iter().cloned());
     }
 
     /// Full parallel MGRIT solve (same contract as `mgrit::solve_forward`):
@@ -197,7 +275,7 @@ where
         let check =
             taskgraph::residual_check(&self.spec, &self.hier, &self.partition, self.batch);
         let state_bytes = 4 * u0.len() as u64;
-        let mut st = ExecState::initial(&self.hier, u0);
+        let mut st = MultiExecState::initial(&self.hier, u0);
         let mut metrics = RunMetrics::default();
         let mut stats =
             CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
@@ -240,7 +318,8 @@ where
     /// live on the host in both execution paths).
     ///
     /// Bit-identical to `train::mg_step_serial` on the same hierarchy —
-    /// asserted by `tests/mgrit_integration.rs`.
+    /// asserted by `tests/mgrit_integration.rs`. This is
+    /// [`ParallelMgrit::train_step_micro`] with one micro-batch.
     pub fn train_step(
         &self,
         y: &Tensor,
@@ -248,15 +327,72 @@ where
         opts: &MgritOptions,
         lr: f32,
     ) -> Result<TrainStepOutput> {
+        let mut out = self.train_step_micro(y, labels, opts, lr, 1)?;
+        let inst = out.per_instance.pop().expect("one instance");
+        Ok(TrainStepOutput {
+            loss: out.loss,
+            grads: out.grads,
+            params: out.params,
+            states: inst.states,
+            lams: inst.lams,
+            metrics: out.metrics,
+        })
+    }
+
+    /// One **hybrid data×layer** training step: the minibatch is split into
+    /// `micro_batches` equal micro-batches, each becomes one primal+adjoint
+    /// graph instance, and all instances execute through the multi-instance
+    /// runtime as ONE composed graph — micro-batch k+1's forward V-cycles
+    /// overlap micro-batch k's adjoint/gradient wave, joined only by the
+    /// per-layer `ReduceGrad` mean and a single SGD update.
+    ///
+    /// The batch must divide evenly by `micro_batches` (a mean of unequal
+    /// micro-batch means would not be the batch mean). Opening layers and
+    /// their VJPs, and the head/opening SGD updates, run host-side per
+    /// micro-batch, reduced with the same plan and primitives as the graph.
+    ///
+    /// Bit-identical (states, λ, gradients, loss, post-SGD parameters) to
+    /// the serial reference `train::mg_step_serial_micro` on the same
+    /// hierarchy — asserted by `tests/hybrid_integration.rs`.
+    pub fn train_step_micro(
+        &self,
+        y: &Tensor,
+        labels: &[i32],
+        opts: &MgritOptions,
+        lr: f32,
+        micro_batches: usize,
+    ) -> Result<MicroStepOutput> {
+        let m = micro_batches;
+        anyhow::ensure!(m >= 1, "need at least one micro-batch");
+        let b = *y
+            .dims()
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("batch tensor has no leading dimension"))?;
+        anyhow::ensure!(labels.len() == b, "labels len {} != batch {b}", labels.len());
+        anyhow::ensure!(
+            b % m == 0,
+            "batch {b} does not divide into {m} micro-batches"
+        );
+        let per = b / m;
         // a scheduler-side executor for the host-side stages; its parameter
         // snapshot is the one the workers share (same factory, worker 0's
         // view — factories may key device selection off the index)
         let exec = self.factory.build(0)?;
         let params = Arc::new(exec.net_params().clone());
-        let u0 = exec.opening(y)?;
-        let graph = self.train_graph(opts);
-        let state_bytes = 4 * u0.len() as u64;
-        let mut st = ExecState::initial_train(&self.hier, &u0, labels, params.clone(), lr);
+        // split + opening per micro-batch, in instance order (the serial
+        // reference does the same, so the inputs are bit-identical)
+        let mut ys = Vec::with_capacity(m);
+        let mut inputs = Vec::with_capacity(m);
+        for k in 0..m {
+            let yk = y.slice_batch(k * per, per)?;
+            let u0 = exec.opening(&yk)?;
+            inputs.push((u0, labels[k * per..(k + 1) * per].to_vec()));
+            ys.push(yk);
+        }
+        let graph = self.train_graph_micro(opts, m)?;
+        let state_bytes = 4 * inputs[0].0.len() as u64;
+        let mut st =
+            MultiExecState::initial_train(&self.hier, &inputs, params.clone(), lr)?;
         let mut metrics = RunMetrics::default();
         let mut stats =
             CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
@@ -264,20 +400,29 @@ where
         Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
         metrics.cycles = opts.max_cycles;
         let out = st.into_training_outputs()?;
-        // host-side epilogue — the same arithmetic as the serial step
-        let (dw_open, db_open) = crate::train::opening_vjp(
-            y,
-            &params.w_open,
-            &params.b_open,
-            self.spec.opening.pad,
-            &out.lams[0],
-        )?;
+        // host-side epilogue — per-micro-batch opening VJPs and head grads,
+        // reduced with the SAME plan/primitives as the graph's ReduceGrad
+        let mut open_leaves = Vec::with_capacity(m);
+        let mut fc_leaves = Vec::with_capacity(m);
+        for (k, inst) in out.instances.iter().enumerate() {
+            let (dw, db) = crate::train::opening_vjp(
+                &ys[k],
+                &params.w_open,
+                &params.b_open,
+                self.spec.opening.pad,
+                &inst.lams[0],
+            )?;
+            open_leaves.push((dw, db));
+            fc_leaves.push((inst.dw_fc.clone(), inst.db_fc.clone()));
+        }
+        let (w_open_g, b_open_g) = crate::train::reduce_micro_grads(&open_leaves)?;
+        let (w_fc_g, b_fc_g) = crate::train::reduce_micro_grads(&fc_leaves)?;
         let grads = NetGrads {
-            w_open: dw_open,
-            b_open: db_open,
+            w_open: w_open_g,
+            b_open: b_open_g,
             trunk: out.trunk_grads,
-            w_fc: out.dw_fc,
-            b_fc: out.db_fc,
+            w_fc: w_fc_g,
+            b_fc: b_fc_g,
         };
         let mut new_params = NetParams {
             w_open: params.w_open.clone(),
@@ -290,12 +435,16 @@ where
         new_params.b_open.axpy(-lr, &grads.b_open)?;
         new_params.w_fc.axpy(-lr, &grads.w_fc)?;
         new_params.b_fc.axpy(-lr, &grads.b_fc)?;
-        Ok(TrainStepOutput {
+        let per_instance = out
+            .instances
+            .into_iter()
+            .map(|i| InstanceStep { loss: i.loss, states: i.states, lams: i.lams })
+            .collect();
+        Ok(MicroStepOutput {
             loss: out.loss,
             grads,
             params: new_params,
-            states: out.states,
-            lams: out.lams,
+            per_instance,
             metrics,
         })
     }

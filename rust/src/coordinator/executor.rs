@@ -8,13 +8,25 @@
 //! and, for the training graph, adjoint relaxation on early layers overlaps
 //! parameter-gradient work on late layers.
 //!
+//! The executor is a **multi-instance runtime**: a graph's tasks are
+//! `(instance, task)` pairs, the live state is one [`ExecState`] per
+//! instance inside a [`MultiExecState`], and a single scheduler drains the
+//! union frontier of all instances over one pool. N concurrent
+//! `mg_train_step` instances (micro-batches) therefore pipeline through the
+//! same workers with no inter-instance barrier — instance k+1's forward
+//! V-cycles fill the device gaps of instance k's adjoint/gradient wave,
+//! joined only at the per-layer `ReduceGrad` tree.
+//!
 //! ## Dependency-retirement protocol
 //!
-//! 1. in-degrees are counted per task; zero-degree tasks enter the ready set;
+//! 1. in-degrees are counted per task; zero-degree tasks enter the ready
+//!    queue (a min-id heap, so earlier instances get queue priority — the
+//!    pipelining skew);
 //! 2. ready **Comm** tasks retire immediately on the scheduler thread (local
 //!    execution only *accounts* the transfer — the tensors share memory);
-//! 3. ready **Kernel** tasks clone their input slots out of [`ExecState`]
-//!    (the scheduler thread is the only state owner, so no locks), and are
+//! 3. ready **Kernel** tasks take `Arc` handles on their input slots out of
+//!    their instance's [`ExecState`] (refcount bumps, not deep copies — the
+//!    scheduler thread is the only state owner, so no locks), and are
 //!    submitted to the worker owning `task.device`;
 //! 4. each completion ([`JobDone`]) writes the task's output slot(s) back,
 //!    decrements its dependents' counters, and pushes newly-ready tasks —
@@ -24,17 +36,20 @@
 //!    (`op == None`) or an exhausted ready set with nothing in flight is an
 //!    error, not a hang.
 //!
-//! The training ops extend the same protocol: `Head` seeds the whole adjoint
-//! slot set when it retires (every adjoint frontier starts at the head task,
-//! so no adjoint work can observe unseeded state); `GradAccum` fills one
-//! layer's sharded gradient slot; `ParamUpdate` writes the layer's fresh
-//! parameters.
+//! The training ops extend the same protocol: `Head` seeds its instance's
+//! adjoint slot set when it retires; `GradAccum` fills one layer's sharded
+//! gradient slot in its instance; `ReduceGrad` folds instance gradients into
+//! the shared per-layer reduction-tree slots (the root applies the 1/M
+//! mean); `ParamUpdate` writes the layer's fresh shared parameters.
 //!
 //! Because each op performs the same f32 arithmetic in the same order as the
-//! serial engines (`mgrit::fas` / `train::mg_step_serial`), any topological
-//! execution is bit-identical to the serial solve — asserted by
-//! `tests/mgrit_integration.rs`.
+//! serial engines (`mgrit::fas` / `train::mg_step_serial` /
+//! `train::mg_step_serial_micro`), any topological execution is bit-identical
+//! to the serial solve — asserted by `tests/mgrit_integration.rs` and
+//! `tests/hybrid_integration.rs`.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
@@ -42,41 +57,41 @@ use anyhow::{anyhow, bail};
 
 use super::streams::{JobDone, StreamPool};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph::{Sys, Task, TaskGraph, TaskKind, TaskOp};
-use crate::model::params::TrunkGradSlots;
+use crate::mgrit::taskgraph::{GradSrc, Sys, Task, TaskGraph, TaskKind, TaskOp};
+use crate::model::params::{pair_scale, pair_sum, TrunkGradSlots};
 use crate::model::NetParams;
 use crate::solver::{BlockSolver, NetExecutor, SolverFactory};
 use crate::tensor::Tensor;
 use crate::Result;
 
 /// The state slots of one MGRIT system (primal or adjoint): per level, the
-/// point states `u`, the FAS right-hand sides `g`, the C-point residuals `r`,
-/// and the injection snapshots the correction consumes.
+/// point states `u`, the FAS right-hand sides `g`, the C-point residuals `r`
+/// and the injection snapshots the correction consumes. Slots hold
+/// `Arc<Tensor>` — tasks read them by refcount bump and every write replaces
+/// the whole slot, so the ~40 defensive deep copies the dispatch path used
+/// to make are gone from the scheduler hot path.
 #[derive(Debug)]
 pub struct SysState {
-    pub u: Vec<Vec<Tensor>>,
-    g: Vec<Option<Vec<Tensor>>>,
-    r: Vec<Vec<Option<Tensor>>>,
-    inj: Vec<Vec<Option<Tensor>>>,
+    pub u: Vec<Vec<Arc<Tensor>>>,
+    g: Vec<Option<Vec<Arc<Tensor>>>>,
+    r: Vec<Vec<Option<Arc<Tensor>>>>,
+    inj: Vec<Vec<Option<Arc<Tensor>>>>,
 }
 
 impl SysState {
     /// Every point of every level seeded with `seed` (the constant-in-depth
     /// initial guess of `LevelState::initial`); coarse right-hand sides zero.
+    /// All points share the seed allocation until first written.
     fn seeded(hier: &Hierarchy, seed: &Tensor) -> SysState {
-        let u: Vec<Vec<Tensor>> =
-            hier.levels.iter().map(|l| vec![seed.clone(); l.n_points]).collect();
+        let s = Arc::new(seed.clone());
+        let u: Vec<Vec<Arc<Tensor>>> =
+            hier.levels.iter().map(|l| vec![s.clone(); l.n_points]).collect();
+        let z = Arc::new(Tensor::zeros(seed.dims()));
         let g = hier
             .levels
             .iter()
             .enumerate()
-            .map(|(i, l)| {
-                if i == 0 {
-                    None
-                } else {
-                    Some(vec![Tensor::zeros(seed.dims()); l.n_points])
-                }
-            })
+            .map(|(i, l)| if i == 0 { None } else { Some(vec![z.clone(); l.n_points]) })
             .collect();
         let r = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
         let inj = hier.levels.iter().map(|l| vec![None; l.n_points]).collect();
@@ -84,20 +99,16 @@ impl SysState {
     }
 }
 
-/// Training-only state: the batch labels, the parameter snapshot the step
-/// linearizes around, and the sharded per-layer output slots the fan-out
-/// tasks fill independently.
+/// Per-instance training state: the micro-batch labels, the head output, and
+/// the sharded per-layer gradient slots this instance's fan-out tasks fill.
 #[derive(Debug)]
 struct TrainState {
     labels: Vec<i32>,
-    lr: f32,
-    params: Arc<NetParams>,
     grads: TrunkGradSlots,
-    new_trunk: TrunkGradSlots,
     head: Option<HeadOut>,
 }
 
-/// What the head task leaves behind on the scheduler side.
+/// What one instance's head task leaves behind on the scheduler side.
 #[derive(Debug)]
 struct HeadOut {
     loss: f64,
@@ -105,9 +116,9 @@ struct HeadOut {
     db_fc: Tensor,
 }
 
-/// The live state the executor reads and writes: the primal system, the
-/// adjoint system (seeded by the `Head` task mid-graph), and the training
-/// bookkeeping.
+/// The live state of ONE graph instance: the primal system, the adjoint
+/// system (seeded by the instance's `Head` task mid-graph), and the
+/// per-instance training bookkeeping.
 #[derive(Debug)]
 pub struct ExecState {
     pri: SysState,
@@ -115,52 +126,9 @@ pub struct ExecState {
     train: Option<TrainState>,
 }
 
-/// Everything a completed training graph produced, extracted from the state.
-#[derive(Debug)]
-pub struct TrainingOutputs {
-    pub loss: f64,
-    /// Fine-level forward trajectory u^0..u^N.
-    pub states: Vec<Tensor>,
-    /// Adjoints λ^0..λ^N (forward layer indexing).
-    pub lams: Vec<Tensor>,
-    /// Per-layer (dW, db) trunk gradients.
-    pub trunk_grads: Vec<(Tensor, Tensor)>,
-    /// Per-layer post-SGD trunk parameters.
-    pub new_trunk: Vec<(Tensor, Tensor)>,
-    pub dw_fc: Tensor,
-    pub db_fc: Tensor,
-}
-
 impl ExecState {
-    /// Forward-solve state: primal system seeded with `u0`, no training
-    /// bookkeeping (graphs with training ops will be rejected at dispatch).
-    pub fn initial(hier: &Hierarchy, u0: &Tensor) -> ExecState {
-        ExecState { pri: SysState::seeded(hier, u0), adj: None, train: None }
-    }
-
-    /// Training-step state: as [`ExecState::initial`] plus the labels, the
-    /// learning rate, and the parameter snapshot the `ParamUpdate` tasks
-    /// update. The adjoint system is seeded by the `Head` task at runtime.
-    pub fn initial_train(
-        hier: &Hierarchy,
-        u0: &Tensor,
-        labels: &[i32],
-        params: Arc<NetParams>,
-        lr: f32,
-    ) -> ExecState {
-        let n_layers = hier.fine().n_points - 1;
-        ExecState {
-            pri: SysState::seeded(hier, u0),
-            adj: None,
-            train: Some(TrainState {
-                labels: labels.to_vec(),
-                lr,
-                params,
-                grads: TrunkGradSlots::new(n_layers),
-                new_trunk: TrunkGradSlots::new(n_layers),
-                head: None,
-            }),
-        }
+    fn new(hier: &Hierarchy, u0: &Tensor, train: Option<TrainState>) -> ExecState {
+        ExecState { pri: SysState::seeded(hier, u0), adj: None, train }
     }
 
     fn sys(&self, s: Sys) -> Result<&SysState> {
@@ -185,48 +153,232 @@ impl ExecState {
 
     fn train(&self) -> Result<&TrainState> {
         self.train.as_ref().ok_or_else(|| {
-            anyhow!("training op in a non-training run (use ExecState::initial_train)")
+            anyhow!("training op in a non-training run (use MultiExecState::initial_train)")
         })
     }
 
     fn train_mut(&mut self) -> Result<&mut TrainState> {
         self.train.as_mut().ok_or_else(|| {
-            anyhow!("training op in a non-training run (use ExecState::initial_train)")
+            anyhow!("training op in a non-training run (use MultiExecState::initial_train)")
+        })
+    }
+}
+
+/// Training state shared across instances: the parameter snapshot, the
+/// per-layer micro-batch gradient reduction-tree slots, the reduced (mean)
+/// gradients, and the post-SGD parameter slots — filled exactly once each by
+/// the joint `ReduceGrad` / `ParamUpdate` tasks.
+#[derive(Debug)]
+struct SharedTrain {
+    params: Arc<NetParams>,
+    lr: f32,
+    /// `nodes[layer][node]` — internal reduction-tree partial sums.
+    nodes: Vec<Vec<Option<(Tensor, Tensor)>>>,
+    /// Per-layer reduced (mean) gradients: the `ReduceGrad` roots.
+    reduced: TrunkGradSlots,
+    /// Per-layer post-SGD trunk parameters.
+    new_trunk: TrunkGradSlots,
+}
+
+/// The live state the multi-instance executor reads and writes: one
+/// [`ExecState`] per graph instance plus the shared training join state.
+#[derive(Debug)]
+pub struct MultiExecState {
+    insts: Vec<ExecState>,
+    shared: Option<SharedTrain>,
+}
+
+/// One instance's share of a completed training run.
+#[derive(Debug)]
+pub struct InstanceOutputs {
+    /// This micro-batch's loss.
+    pub loss: f64,
+    /// Fine-level forward trajectory u^0..u^N.
+    pub states: Vec<Tensor>,
+    /// Adjoints λ^0..λ^N (forward layer indexing).
+    pub lams: Vec<Tensor>,
+    /// This instance's per-layer (dW, db) trunk gradients. For M = 1 the
+    /// instance gradients ARE the reduced gradients, so they are moved into
+    /// [`MultiTrainingOutputs::trunk_grads`] and this field is left empty
+    /// (no per-step full-gradient copy on the default path).
+    pub trunk_grads: Vec<(Tensor, Tensor)>,
+    pub dw_fc: Tensor,
+    pub db_fc: Tensor,
+}
+
+/// Everything a completed (possibly multi-instance) training graph produced.
+#[derive(Debug)]
+pub struct MultiTrainingOutputs {
+    /// Mean loss over instances — identical to the instance loss when M = 1
+    /// and to the serial reference's `Σ lossₖ / M` otherwise.
+    pub loss: f64,
+    pub instances: Vec<InstanceOutputs>,
+    /// Reduced per-layer trunk gradients: the lone instance's gradients when
+    /// M = 1, the `ReduceGrad` roots (micro-batch mean) otherwise.
+    pub trunk_grads: Vec<(Tensor, Tensor)>,
+    /// Per-layer post-SGD trunk parameters.
+    pub new_trunk: Vec<(Tensor, Tensor)>,
+}
+
+fn unwrap_arcs(v: Vec<Arc<Tensor>>) -> Vec<Tensor> {
+    v.into_iter()
+        .map(|a| Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()))
+        .collect()
+}
+
+impl MultiExecState {
+    /// Forward-solve state: one instance, primal system seeded with `u0`, no
+    /// training bookkeeping (graphs with training ops will be rejected at
+    /// dispatch).
+    pub fn initial(hier: &Hierarchy, u0: &Tensor) -> MultiExecState {
+        MultiExecState { insts: vec![ExecState::new(hier, u0, None)], shared: None }
+    }
+
+    /// Training-step state for M instances: `inputs[k]` is instance k's
+    /// opening state u0 and micro-batch labels. The adjoint systems are
+    /// seeded by each instance's `Head` task at runtime; the reduction-tree
+    /// slots are sized for the `reduce_plan(M)` join.
+    pub fn initial_train(
+        hier: &Hierarchy,
+        inputs: &[(Tensor, Vec<i32>)],
+        params: Arc<NetParams>,
+        lr: f32,
+    ) -> Result<MultiExecState> {
+        anyhow::ensure!(!inputs.is_empty(), "need at least one training instance");
+        let n_layers = hier.fine().n_points - 1;
+        let m = inputs.len();
+        let insts = inputs
+            .iter()
+            .map(|(u0, labels)| {
+                ExecState::new(
+                    hier,
+                    u0,
+                    Some(TrainState {
+                        labels: labels.clone(),
+                        grads: TrunkGradSlots::new(n_layers),
+                        head: None,
+                    }),
+                )
+            })
+            .collect();
+        let nodes = vec![vec![None; m.saturating_sub(1)]; n_layers];
+        Ok(MultiExecState {
+            insts,
+            shared: Some(SharedTrain {
+                params,
+                lr,
+                nodes,
+                reduced: TrunkGradSlots::new(n_layers),
+                new_trunk: TrunkGradSlots::new(n_layers),
+            }),
         })
     }
 
-    /// Residual tensor at `(level, j)` of the primal system, if computed.
+    /// Number of graph instances this state serves.
+    pub fn n_instances(&self) -> usize {
+        self.insts.len()
+    }
+
+    fn inst(&self, k: usize) -> Result<&ExecState> {
+        self.insts.get(k).ok_or_else(|| anyhow!("task instance {k} out of range"))
+    }
+
+    fn inst_mut(&mut self, k: usize) -> Result<&mut ExecState> {
+        let n = self.insts.len();
+        self.insts
+            .get_mut(k)
+            .ok_or_else(|| anyhow!("task instance {k} out of range ({n} instances)"))
+    }
+
+    fn shared(&self) -> Result<&SharedTrain> {
+        self.shared.as_ref().ok_or_else(|| {
+            anyhow!("training op in a non-training run (use MultiExecState::initial_train)")
+        })
+    }
+
+    fn shared_mut(&mut self) -> Result<&mut SharedTrain> {
+        self.shared.as_mut().ok_or_else(|| {
+            anyhow!("training op in a non-training run (use MultiExecState::initial_train)")
+        })
+    }
+
+    /// A reduction-tree operand of one layer: an instance's gradient or an
+    /// earlier internal node. Deep-clones the pair (it leaves the scheduler
+    /// for a worker thread).
+    fn grad_src(&self, layer: usize, src: GradSrc) -> Result<(Tensor, Tensor)> {
+        match src {
+            GradSrc::Inst(k) => self
+                .inst(k)?
+                .train()?
+                .grads
+                .get(layer)
+                .cloned()
+                .ok_or_else(|| anyhow!("reduce({layer}): instance {k} gradient slot empty")),
+            GradSrc::Node(n) => self
+                .shared()?
+                .nodes
+                .get(layer)
+                .and_then(|l| l.get(n))
+                .and_then(|s| s.clone())
+                .ok_or_else(|| anyhow!("reduce({layer}): tree node {n} slot empty")),
+        }
+    }
+
+    /// Residual tensor at `(level, j)` of instance 0's primal system, if
+    /// computed (the forward solve's convergence check).
     pub fn residual(&self, level: usize, j: usize) -> Option<&Tensor> {
-        self.pri.r[level][j].as_ref()
+        self.insts[0].pri.r[level][j].as_deref()
     }
 
-    /// Consume the state, returning the fine-level trajectory.
+    /// Consume the state, returning instance 0's fine-level trajectory.
     pub fn into_fine_states(mut self) -> Vec<Tensor> {
-        self.pri.u.swap_remove(0)
+        unwrap_arcs(self.insts.swap_remove(0).pri.u.swap_remove(0))
     }
 
-    /// Consume a completed training run into its outputs. Errors if the head
-    /// never retired or any sharded slot is unfilled.
-    pub fn into_training_outputs(self) -> Result<TrainingOutputs> {
-        let adj = self.adj.ok_or_else(|| anyhow!("training run never seeded the adjoint"))?;
-        let train = self
-            .train
-            .ok_or_else(|| anyhow!("not a training run (use ExecState::initial_train)"))?;
-        let head = train.head.ok_or_else(|| anyhow!("head task never retired"))?;
-        let mut pri = self.pri;
-        let states = pri.u.swap_remove(0);
-        let mut adj = adj;
-        // μ^m = λ^{N−m} → reverse back to forward indexing
-        let mut lams = adj.u.swap_remove(0);
-        lams.reverse();
-        Ok(TrainingOutputs {
-            loss: head.loss,
-            states,
-            lams,
-            trunk_grads: train.grads.into_pairs()?,
-            new_trunk: train.new_trunk.into_pairs()?,
-            dw_fc: head.dw_fc,
-            db_fc: head.db_fc,
+    /// Consume a completed training run into its outputs. Errors if any
+    /// head never retired or any sharded slot is unfilled.
+    pub fn into_training_outputs(self) -> Result<MultiTrainingOutputs> {
+        let shared = self.shared.ok_or_else(|| {
+            anyhow!("not a training run (use MultiExecState::initial_train)")
+        })?;
+        let m = self.insts.len();
+        let mut instances = Vec::with_capacity(m);
+        for (k, inst) in self.insts.into_iter().enumerate() {
+            let mut adj = inst
+                .adj
+                .ok_or_else(|| anyhow!("instance {k}: training run never seeded the adjoint"))?;
+            let train =
+                inst.train.ok_or_else(|| anyhow!("instance {k}: missing training state"))?;
+            let head =
+                train.head.ok_or_else(|| anyhow!("instance {k}: head task never retired"))?;
+            let mut pri = inst.pri;
+            let states = unwrap_arcs(pri.u.swap_remove(0));
+            // μ^m = λ^{N−m} → reverse back to forward indexing
+            let mut lams = unwrap_arcs(adj.u.swap_remove(0));
+            lams.reverse();
+            instances.push(InstanceOutputs {
+                loss: head.loss,
+                states,
+                lams,
+                trunk_grads: train.grads.into_pairs()?,
+                dw_fc: head.dw_fc,
+                db_fc: head.db_fc,
+            });
+        }
+        // the combined loss: mean over instances, in instance order — the
+        // serial reference computes the identical expression
+        let loss = instances.iter().map(|i| i.loss).sum::<f64>() / m as f64;
+        let trunk_grads = if m == 1 {
+            // the instance gradients ARE the reduced set: move, don't copy
+            std::mem::take(&mut instances[0].trunk_grads)
+        } else {
+            shared.reduced.into_pairs()?
+        };
+        Ok(MultiTrainingOutputs {
+            loss,
+            instances,
+            trunk_grads,
+            new_trunk: shared.new_trunk.into_pairs()?,
         })
     }
 }
@@ -238,23 +390,46 @@ pub enum TaskOut {
     State(Tensor),
     /// The states of a fused F-span (`BlockRun`), in point order.
     States(Vec<Tensor>),
-    /// A (weight, bias)-shaped pair: a layer gradient or updated parameters.
+    /// A (weight, bias)-shaped pair: a layer gradient, a reduction-tree
+    /// partial sum, or updated parameters.
     Pair(Tensor, Tensor),
     /// Head forward + VJP output.
     Head { loss: f64, du: Tensor, dw_fc: Tensor, db_fc: Tensor },
 }
 
+/// One retired kernel task on the live executor, tagged with its graph
+/// instance — the record behind the cross-instance overlap assertions
+/// (pool-clock timestamps, same clock as the stream trace).
+#[derive(Debug, Clone)]
+pub struct ExecEvent {
+    pub task: usize,
+    pub instance: usize,
+    pub device: usize,
+    pub label: &'static str,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
 /// Aggregate record of one graph execution.
 #[derive(Debug, Default, Clone)]
 pub struct ExecReport {
-    /// Boundary transfers retired (each is one activation crossing devices).
+    /// Transfers retired (state boundary crossings + gradient hops).
     pub comm_events: usize,
+    /// How many of those carried a layer *state* (their real size is the
+    /// live activation tensor; the driver prices them from `u0`).
+    pub comm_state_events: usize,
+    /// Bytes of *gradient* transfers (reduction-tree hops). Gradients are
+    /// parameter-shaped — batch-independent — so the graph annotation is
+    /// exact and summed here directly.
+    pub comm_grad_bytes: f64,
     /// Kernel tasks executed.
     pub kernels: usize,
     /// Φ/Ψ applications performed (the solve's work measure).
     pub phi_evals: usize,
     /// Per-label worker-busy seconds, in first-seen order.
     pub phase_s: Vec<(&'static str, f64)>,
+    /// Instance-tagged kernel completions, in retirement order.
+    pub events: Vec<ExecEvent>,
 }
 
 impl ExecReport {
@@ -263,12 +438,13 @@ impl ExecReport {
     }
 }
 
-/// Execute `graph` on `pool`, mutating `st` in place.
+/// Execute `graph` on `pool`, mutating `st` in place. `st` must carry at
+/// least as many instances as the graph references.
 pub fn execute<F: SolverFactory>(
     pool: &StreamPool<F>,
     hier: &Hierarchy,
     graph: &TaskGraph,
-    st: &mut ExecState,
+    st: &mut MultiExecState,
 ) -> Result<ExecReport>
 where
     F::Solver: NetExecutor,
@@ -281,29 +457,50 @@ where
     let mut indeg = vec![0usize; n];
     let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
     for t in &graph.tasks {
+        if t.instance >= st.insts.len() {
+            bail!(
+                "task {} targets instance {} but the state has {} instance(s)",
+                t.id,
+                t.instance,
+                st.insts.len()
+            );
+        }
         indeg[t.id] = t.deps.len();
         for &d in &t.deps {
             dependents[d].push(t.id);
         }
     }
     let (tx, rx) = channel::<JobDone<TaskOut>>();
-    let mut ready: Vec<usize> =
-        graph.tasks.iter().filter(|t| t.deps.is_empty()).map(|t| t.id).collect();
+    // min-id heap: ready tasks of earlier instances enter worker queues
+    // first, giving the micro-batch pipeline its forward skew
+    let mut ready: BinaryHeap<Reverse<usize>> =
+        graph.tasks.iter().filter(|t| t.deps.is_empty()).map(|t| Reverse(t.id)).collect();
     let mut in_flight = 0usize;
     let mut retired = 0usize;
 
     while retired < n {
         // dispatch everything currently ready; Comm tasks retire inline
-        while let Some(id) = ready.pop() {
+        while let Some(Reverse(id)) = ready.pop() {
             let task = &graph.tasks[id];
             match &task.kind {
-                TaskKind::Comm { .. } => {
+                TaskKind::Comm { bytes, .. } => {
                     report.comm_events += 1;
+                    // a transfer feeding a ReduceGrad carries a gradient
+                    // (parameter-shaped, graph bytes exact); everything else
+                    // is a layer-state crossing priced by the driver
+                    let feeds_reduce = dependents[id].iter().any(|&d| {
+                        matches!(graph.tasks[d].op, Some(TaskOp::ReduceGrad { .. }))
+                    });
+                    if feeds_reduce {
+                        report.comm_grad_bytes += *bytes;
+                    } else {
+                        report.comm_state_events += 1;
+                    }
                     retired += 1;
                     for &d in &dependents[id] {
                         indeg[d] -= 1;
                         if indeg[d] == 0 {
-                            ready.push(d);
+                            ready.push(Reverse(d));
                         }
                     }
                 }
@@ -326,10 +523,11 @@ where
         let out = done
             .result
             .map_err(|e| anyhow!("task {} ({}): {e:#}", done.id, done.label))?;
-        let op = graph.tasks[done.id]
+        let task = &graph.tasks[done.id];
+        let op = task
             .op
             .ok_or_else(|| anyhow!("completed task {} has no payload", done.id))?;
-        apply_output(hier, st, op, out)?;
+        apply_output(hier, st, task.instance, op, out)?;
         match op {
             TaskOp::PointUpdate { .. } | TaskOp::Residual { .. } | TaskOp::Restrict { .. } => {
                 report.phi_evals += 1;
@@ -341,11 +539,19 @@ where
         }
         report.kernels += 1;
         report.add_phase(done.label, done.t_end - done.t_start);
+        report.events.push(ExecEvent {
+            task: done.id,
+            instance: task.instance,
+            device: task.device,
+            label: done.label,
+            t_start: done.t_start,
+            t_end: done.t_end,
+        });
         retired += 1;
         for &d in &dependents[done.id] {
             indeg[d] -= 1;
             if indeg[d] == 0 {
-                ready.push(d);
+                ready.push(Reverse(d));
             }
         }
     }
@@ -358,16 +564,16 @@ fn rev_layer(hier: &Hierarchy, level: usize, j: usize) -> usize {
     hier.adjoint_state_index(level, j)
 }
 
-/// Clone a kernel task's inputs out of the state and submit it to its
+/// Take `Arc` handles on a kernel task's inputs and submit it to its
 /// device's worker. For `Restrict`, the injection (coarse initial guess +
 /// correction snapshot) is applied at dispatch time: the graph's WAR edges
 /// guarantee every reader of the old coarse slots has already completed.
-/// Adjoint ops additionally clone the forward fine state they linearize
+/// Adjoint ops additionally take the forward fine state they linearize
 /// around (their RAW edges guarantee it is final).
 fn dispatch_kernel<F: SolverFactory>(
     pool: &StreamPool<F>,
     hier: &Hierarchy,
-    st: &mut ExecState,
+    st: &mut MultiExecState,
     task: &Task,
     label: &'static str,
     tx: &Sender<JobDone<TaskOut>>,
@@ -375,15 +581,17 @@ fn dispatch_kernel<F: SolverFactory>(
 where
     F::Solver: NetExecutor,
 {
-    let op = task
-        .op
-        .ok_or_else(|| anyhow!("task {} is not executable (op=None); this graph is cost-model-only", task.id))?;
+    let op = task.op.ok_or_else(|| {
+        anyhow!("task {} is not executable (op=None); this graph is cost-model-only", task.id)
+    })?;
+    let ki = task.instance;
     match op {
         TaskOp::PointUpdate { sys, level, j } => {
             let lvl = &hier.levels[level];
             let theta = lvl.theta_idx(j - 1);
             let h = lvl.h;
-            let ss = st.sys(sys)?;
+            let inst = st.inst(ki)?;
+            let ss = inst.sys(sys)?;
             let u_prev = ss.u[level][j - 1].clone();
             let gj = ss.g[level].as_ref().map(|g| g[j].clone());
             match sys {
@@ -398,7 +606,7 @@ where
                 }
                 Sys::Adjoint => {
                     let rev = rev_layer(hier, level, j);
-                    let fwd = st.pri.u[0][rev].clone();
+                    let fwd = inst.pri.u[0][rev].clone();
                     pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
                         let mut v = s.adjoint_step(rev, h, &fwd, &u_prev)?;
                         if let Some(g) = &gj {
@@ -415,7 +623,8 @@ where
             let stride = lvl.stride;
             let start_theta = lvl.theta_idx(j_first - 1);
             let count = j_last - j_first + 1;
-            let ss = st.sys(sys)?;
+            let inst = st.inst(ki)?;
+            let ss = inst.sys(sys)?;
             if ss.g[level].is_some() {
                 bail!("BlockRun on a level with a right-hand side (graph bug)");
             }
@@ -428,15 +637,15 @@ where
                     })
                 }
                 Sys::Adjoint => {
-                    let steps: Vec<(usize, Tensor)> = (j_first..=j_last)
+                    let steps: Vec<(usize, Arc<Tensor>)> = (j_first..=j_last)
                         .map(|j| {
                             let rev = rev_layer(hier, level, j);
-                            (rev, st.pri.u[0][rev].clone())
+                            (rev, inst.pri.u[0][rev].clone())
                         })
                         .collect();
                     pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
                         let mut out = Vec::with_capacity(steps.len());
-                        let mut mu = u_prev;
+                        let mut mu = (*u_prev).clone();
                         for (rev, fwd) in &steps {
                             mu = s.adjoint_step(*rev, h, fwd, &mu)?;
                             out.push(mu.clone());
@@ -450,13 +659,17 @@ where
             let lvl = &hier.levels[level];
             let theta = lvl.theta_idx(j - 1);
             let h = lvl.h;
-            let ss = st.sys(sys)?;
+            let inst = st.inst(ki)?;
+            let ss = inst.sys(sys)?;
             let u_prev = ss.u[level][j - 1].clone();
             let u_cur = ss.u[level][j].clone();
             let gj = ss.g[level].as_ref().map(|g| g[j].clone());
             let fwd = match sys {
                 Sys::Primal => None,
-                Sys::Adjoint => Some((rev_layer(hier, level, j), st.pri.u[0][rev_layer(hier, level, j)].clone())),
+                Sys::Adjoint => {
+                    let rev = rev_layer(hier, level, j);
+                    Some((rev, inst.pri.u[0][rev].clone()))
+                }
             };
             pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
                 let mut r = match &fwd {
@@ -476,7 +689,7 @@ where
             let theta = coarse.theta_idx(j - 1);
             let h = coarse.h;
             let (r, inj_prev, inj_cur) = {
-                let ss = st.sys(sys)?;
+                let ss = st.inst(ki)?.sys(sys)?;
                 (
                     ss.r[level][j * c].clone().ok_or_else(|| {
                         anyhow!("restrict({level},{j}): residual at point {} missing", j * c)
@@ -489,13 +702,13 @@ where
                 Sys::Primal => None,
                 Sys::Adjoint => {
                     let rev = rev_layer(hier, level + 1, j);
-                    Some((rev, st.pri.u[0][rev].clone()))
+                    Some((rev, st.inst(ki)?.pri.u[0][rev].clone()))
                 }
             };
             // inject the coarse initial guess + correction snapshot now —
             // safe because this task's WAR deps have already retired
             {
-                let sm = st.sys_mut(sys)?;
+                let sm = st.inst_mut(ki)?.sys_mut(sys)?;
                 sm.u[level + 1][j] = inj_cur.clone();
                 sm.inj[level + 1][j] = Some(inj_cur.clone());
             }
@@ -504,7 +717,7 @@ where
                     None => s.step(theta, h, &inj_prev)?,
                     Some((rev, f)) => s.adjoint_step(*rev, h, f, &inj_prev)?,
                 };
-                let mut out = r;
+                let mut out = (*r).clone();
                 out.axpy(1.0, &inj_cur)?;
                 out.axpy(-1.0, &phi)?;
                 Ok(TaskOut::State(out))
@@ -512,7 +725,7 @@ where
         }
         TaskOp::Correct { sys, level, j } => {
             let c = hier.coarsen;
-            let ss = st.sys(sys)?;
+            let ss = st.inst(ki)?.sys(sys)?;
             let u_fine = ss.u[level][j * c].clone();
             let u_coarse = ss.u[level + 1][j].clone();
             let inj = ss.inj[level + 1][j]
@@ -520,15 +733,16 @@ where
                 .ok_or_else(|| anyhow!("correct({level},{j}): injection snapshot missing"))?;
             pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let delta = Tensor::sub(&u_coarse, &inj)?;
-                let mut out = u_fine;
+                let mut out = (*u_fine).clone();
                 out.axpy(1.0, &delta)?;
                 Ok(TaskOut::State(out))
             })
         }
         TaskOp::Head => {
             let n_last = hier.fine().n_points - 1;
-            let u = st.pri.u[0][n_last].clone();
-            let labels = st.train()?.labels.clone();
+            let inst = st.inst(ki)?;
+            let u = inst.pri.u[0][n_last].clone();
+            let labels = inst.train()?.labels.clone();
             pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
                 let (_logits, loss) = s.head(&u, &labels)?;
                 let (du, dw_fc, db_fc) = s.head_vjp(&u, &labels)?;
@@ -538,23 +752,47 @@ where
         TaskOp::GradAccum { layer } => {
             let h = hier.fine().h;
             let n_layers = hier.fine().n_points - 1;
-            let u = st.pri.u[0][layer].clone();
+            let inst = st.inst(ki)?;
+            let u = inst.pri.u[0][layer].clone();
             // λ^{layer+1} = μ^{N−1−layer}
-            let lam = st.sys(Sys::Adjoint)?.u[0][n_layers - 1 - layer].clone();
+            let lam = inst.sys(Sys::Adjoint)?.u[0][n_layers - 1 - layer].clone();
             pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
                 let (dw, db) = s.param_grad(layer, h, &u, &lam)?;
                 Ok(TaskOut::Pair(dw, db))
             })
         }
+        TaskOp::ReduceGrad { layer, lhs, rhs, root, .. } => {
+            let l = st.grad_src(layer, lhs)?;
+            let r = st.grad_src(layer, rhs)?;
+            // the root applies the micro-batch mean — the SAME expression the
+            // serial reference uses (train::reduce_micro_grads)
+            let scale = if root { Some(1.0 / st.insts.len() as f32) } else { None };
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                let mut sum = pair_sum(&l, &r)?;
+                if let Some(sc) = scale {
+                    pair_scale(&mut sum, sc);
+                }
+                Ok(TaskOut::Pair(sum.0, sum.1))
+            })
+        }
         TaskOp::ParamUpdate { layer } => {
-            let tr = st.train()?;
-            let (dw, db) = tr
-                .grads
-                .get(layer)
-                .ok_or_else(|| anyhow!("param_update({layer}): gradient slot empty"))?
-                .clone();
-            let (w, b) = tr.params.trunk[layer].clone();
-            let lr = tr.lr;
+            let sh = st.shared()?;
+            // M = 1: the lone instance's gradient; M > 1: the reduced mean
+            let (dw, db) = if st.insts.len() == 1 {
+                st.insts[0]
+                    .train()?
+                    .grads
+                    .get(layer)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("param_update({layer}): gradient slot empty"))?
+            } else {
+                sh.reduced
+                    .get(layer)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("param_update({layer}): reduced gradient missing"))?
+            };
+            let (w, b) = sh.params.trunk[layer].clone();
+            let lr = sh.lr;
             pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let mut w2 = w;
                 w2.axpy(-lr, &dw)?;
@@ -587,11 +825,19 @@ fn expect_state(out: TaskOut, what: &str) -> Result<Tensor> {
     }
 }
 
-/// Write one completed kernel's output into its slot(s).
-fn apply_output(hier: &Hierarchy, st: &mut ExecState, op: TaskOp, out: TaskOut) -> Result<()> {
+/// Write one completed kernel's output into its instance's (or the shared)
+/// slot(s).
+fn apply_output(
+    hier: &Hierarchy,
+    st: &mut MultiExecState,
+    ki: usize,
+    op: TaskOp,
+    out: TaskOut,
+) -> Result<()> {
     match op {
         TaskOp::PointUpdate { sys, level, j } => {
-            st.sys_mut(sys)?.u[level][j] = expect_state(out, "point_update")?;
+            st.inst_mut(ki)?.sys_mut(sys)?.u[level][j] =
+                Arc::new(expect_state(out, "point_update")?);
         }
         TaskOp::BlockRun { sys, level, j_first, j_last } => {
             let kind = out.kind();
@@ -601,44 +847,66 @@ fn apply_output(hier: &Hierarchy, st: &mut ExecState, op: TaskOp, out: TaskOut) 
             if v.len() != j_last - j_first + 1 {
                 bail!("block_run: span length {} != {}", v.len(), j_last - j_first + 1);
             }
-            let ss = st.sys_mut(sys)?;
+            let ss = st.inst_mut(ki)?.sys_mut(sys)?;
             for (k, t) in v.into_iter().enumerate() {
-                ss.u[level][j_first + k] = t;
+                ss.u[level][j_first + k] = Arc::new(t);
             }
         }
         TaskOp::Residual { sys, level, j } => {
-            st.sys_mut(sys)?.r[level][j] = Some(expect_state(out, "residual")?);
+            st.inst_mut(ki)?.sys_mut(sys)?.r[level][j] =
+                Some(Arc::new(expect_state(out, "residual")?));
         }
         TaskOp::Restrict { sys, level, j } => {
             let t = expect_state(out, "restrict")?;
-            match &mut st.sys_mut(sys)?.g[level + 1] {
-                Some(g) => g[j] = t,
+            match &mut st.inst_mut(ki)?.sys_mut(sys)?.g[level + 1] {
+                Some(g) => g[j] = Arc::new(t),
                 None => bail!("restrict into level {} with no rhs storage", level + 1),
             }
         }
         TaskOp::Correct { sys, level, j } => {
-            st.sys_mut(sys)?.u[level][j * hier.coarsen] = expect_state(out, "correct")?;
+            st.inst_mut(ki)?.sys_mut(sys)?.u[level][j * hier.coarsen] =
+                Arc::new(expect_state(out, "correct")?);
         }
         TaskOp::Head => {
             let TaskOut::Head { loss, du, dw_fc, db_fc } = out else {
                 bail!("head: wrong output kind");
             };
-            // ∂loss/∂u^N seeds every adjoint slot (the constant-in-depth
-            // initial guess of the adjoint MGRIT solve)
-            st.adj = Some(SysState::seeded(hier, &du));
-            st.train_mut()?.head = Some(HeadOut { loss, dw_fc, db_fc });
+            // ∂loss/∂u^N seeds every slot of THIS instance's adjoint system
+            // (the constant-in-depth initial guess of the adjoint MGRIT solve)
+            let inst = st.inst_mut(ki)?;
+            inst.adj = Some(SysState::seeded(hier, &du));
+            inst.train_mut()?.head = Some(HeadOut { loss, dw_fc, db_fc });
         }
         TaskOp::GradAccum { layer } => {
             let TaskOut::Pair(dw, db) = out else {
                 bail!("param_grad: wrong output kind");
             };
-            st.train_mut()?.grads.set(layer, dw, db)?;
+            st.inst_mut(ki)?.train_mut()?.grads.set(layer, dw, db)?;
+        }
+        TaskOp::ReduceGrad { layer, node, root, .. } => {
+            let TaskOut::Pair(w, b) = out else {
+                bail!("reduce_grad: wrong output kind");
+            };
+            let sh = st.shared_mut()?;
+            if root {
+                sh.reduced.set(layer, w, b)?;
+            } else {
+                let slot = sh
+                    .nodes
+                    .get_mut(layer)
+                    .and_then(|l| l.get_mut(node))
+                    .ok_or_else(|| anyhow!("reduce({layer}): node {node} out of range"))?;
+                if slot.is_some() {
+                    bail!("reduce({layer}): node {node} filled twice");
+                }
+                *slot = Some((w, b));
+            }
         }
         TaskOp::ParamUpdate { layer } => {
             let TaskOut::Pair(w, b) = out else {
                 bail!("param_update: wrong output kind");
             };
-            st.train_mut()?.new_trunk.set(layer, w, b)?;
+            st.shared_mut()?.new_trunk.set(layer, w, b)?;
         }
         TaskOp::Xfer => bail!("Xfer payload completed as a kernel (graph bug)"),
     }
@@ -663,7 +931,7 @@ pub(crate) fn merge_phases(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Partition;
+    use crate::coordinator::{InstanceGroups, Partition};
     use crate::mgrit::fas::RelaxKind;
     use crate::mgrit::taskgraph::{self, Granularity};
     use crate::model::{NetParams, NetSpec};
@@ -689,14 +957,17 @@ mod tests {
     fn vcycle_graph_executes_and_counts_work() {
         let (spec, hier, partition, pool, u0) = setup();
         let g = taskgraph::mg_vcycle(&spec, &hier, &partition, 1, RelaxKind::FCF);
-        let mut st = ExecState::initial(&hier, &u0);
+        let mut st = MultiExecState::initial(&hier, &u0);
         let rep = execute(&pool, &hier, &g, &mut st).unwrap();
         assert!(rep.kernels > 0);
         assert!(rep.phi_evals > 0);
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "f_relax"));
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "coarse_solve"));
+        // events are instance-tagged (single-instance graph → all zero)
+        assert_eq!(rep.events.len(), rep.kernels);
+        assert!(rep.events.iter().all(|e| e.instance == 0));
         // states moved away from the constant initial guess
-        let moved = st.pri.u[0][1..]
+        let moved = st.insts[0].pri.u[0][1..]
             .iter()
             .any(|u| crate::util::stats::rel_l2_err(u.data(), u0.data()) > 1e-6);
         assert!(moved, "executor did not update any state");
@@ -707,8 +978,8 @@ mod tests {
         let (spec, hier, partition, pool, u0) = setup();
         let gs = taskgraph::mg_vcycle_with(&spec, &hier, &partition, 1, RelaxKind::FCF, Granularity::PerStep);
         let gb = taskgraph::mg_vcycle_with(&spec, &hier, &partition, 1, RelaxKind::FCF, Granularity::PerBlock);
-        let mut st_s = ExecState::initial(&hier, &u0);
-        let mut st_b = ExecState::initial(&hier, &u0);
+        let mut st_s = MultiExecState::initial(&hier, &u0);
+        let mut st_b = MultiExecState::initial(&hier, &u0);
         let rep_s = execute(&pool, &hier, &gs, &mut st_s).unwrap();
         let rep_b = execute(&pool, &hier, &gb, &mut st_b).unwrap();
         // fused F-spans perform the identical arithmetic in the same order
@@ -724,7 +995,7 @@ mod tests {
     fn residual_check_fills_residual_slots() {
         let (spec, hier, partition, pool, u0) = setup();
         let g = taskgraph::residual_check(&spec, &hier, &partition, 1);
-        let mut st = ExecState::initial(&hier, &u0);
+        let mut st = MultiExecState::initial(&hier, &u0);
         execute(&pool, &hier, &g, &mut st).unwrap();
         for cp in hier.fine().cpoints(hier.coarsen) {
             if cp > 0 {
@@ -738,7 +1009,7 @@ mod tests {
         let (spec, hier, _partition, pool, u0) = setup();
         // serial_forward carries no payloads
         let g = taskgraph::serial_forward(&spec, 1, 1);
-        let mut st = ExecState::initial(&hier, &u0);
+        let mut st = MultiExecState::initial(&hier, &u0);
         assert!(execute(&pool, &hier, &g, &mut st).is_err());
     }
 
@@ -748,9 +1019,30 @@ mod tests {
         let g = taskgraph::mg_train_step(
             &spec, &hier, &partition, 1, 1, RelaxKind::FCF, Granularity::PerStep,
         );
-        let mut st = ExecState::initial(&hier, &u0);
+        let mut st = MultiExecState::initial(&hier, &u0);
         let err = execute(&pool, &hier, &g, &mut st).unwrap_err().to_string();
         assert!(err.contains("training"), "{err}");
+    }
+
+    #[test]
+    fn multi_instance_graph_needs_enough_instances() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let groups = InstanceGroups::new(1, partition.n_devices()).unwrap();
+        let g = taskgraph::mg_train_step_multi(
+            &spec, &hier, &partition, &groups, 1, 1, RelaxKind::FCF, Granularity::PerStep, 2,
+        )
+        .unwrap();
+        // only one instance in the state → rejected up front
+        let mut st = MultiExecState::initial_train(
+            &hier,
+            &[(u0.clone(), vec![3i32])],
+            params,
+            0.05,
+        )
+        .unwrap();
+        let err = execute(&pool, &hier, &g, &mut st).unwrap_err().to_string();
+        assert!(err.contains("instance"), "{err}");
     }
 
     #[test]
@@ -760,16 +1052,24 @@ mod tests {
         let g = taskgraph::mg_train_step(
             &spec, &hier, &partition, 1, 2, RelaxKind::FCF, Granularity::PerStep,
         );
-        let labels = [3i32];
-        let mut st = ExecState::initial_train(&hier, &u0, &labels, params.clone(), 0.05);
+        let mut st = MultiExecState::initial_train(
+            &hier,
+            &[(u0.clone(), vec![3i32])],
+            params.clone(),
+            0.05,
+        )
+        .unwrap();
         let rep = execute(&pool, &hier, &g, &mut st).unwrap();
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "adj_f_relax"));
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "param_grad"));
         assert!(rep.phase_s.iter().any(|(l, _)| *l == "param_update"));
         let out = st.into_training_outputs().unwrap();
         assert!(out.loss.is_finite());
-        assert_eq!(out.states.len(), hier.fine().n_points);
-        assert_eq!(out.lams.len(), hier.fine().n_points);
+        assert_eq!(out.instances.len(), 1);
+        let inst = &out.instances[0];
+        assert_eq!(inst.loss, out.loss);
+        assert_eq!(inst.states.len(), hier.fine().n_points);
+        assert_eq!(inst.lams.len(), hier.fine().n_points);
         assert_eq!(out.trunk_grads.len(), spec.n_res());
         assert_eq!(out.new_trunk.len(), spec.n_res());
         // updated params moved against the gradient direction
@@ -779,6 +1079,57 @@ mod tests {
             let mut want = w_old.clone();
             want.axpy(-0.05, dw).unwrap();
             assert!(w_new.data() == want.data(), "param update is not θ − lr·g");
+        }
+    }
+
+    #[test]
+    fn two_instance_graph_reduces_and_updates_once() {
+        // two micro-batch instances through one graph: per-instance grads,
+        // one reduced (mean) gradient set, one post-SGD trunk
+        let (spec, hier, partition, pool, u0) = setup();
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let groups = InstanceGroups::new(1, partition.n_devices()).unwrap();
+        let g = taskgraph::mg_train_step_multi(
+            &spec, &hier, &partition, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep, 2,
+        )
+        .unwrap();
+        let mut rng = crate::util::prng::Rng::new(32);
+        let u1 = Tensor::randn(&[1, 2, 6, 6], 0.8, &mut rng);
+        let mut st = MultiExecState::initial_train(
+            &hier,
+            &[(u0.clone(), vec![3i32]), (u1, vec![5i32])],
+            params.clone(),
+            0.05,
+        )
+        .unwrap();
+        let rep = execute(&pool, &hier, &g, &mut st).unwrap();
+        assert!(rep.phase_s.iter().any(|(l, _)| *l == "reduce_grad"));
+        // both instances appear in the event stream
+        let insts: std::collections::BTreeSet<usize> =
+            rep.events.iter().map(|e| e.instance).collect();
+        assert_eq!(insts.len(), 2);
+        let out = st.into_training_outputs().unwrap();
+        assert_eq!(out.instances.len(), 2);
+        // combined loss is the instance mean
+        let want = (out.instances[0].loss + out.instances[1].loss) / 2.0;
+        assert_eq!(out.loss, want);
+        // the reduced gradient is the pairwise mean, bit-exactly
+        for (i, (rw, _rb)) in out.trunk_grads.iter().enumerate() {
+            let mut sum = pair_sum(
+                &out.instances[0].trunk_grads[i],
+                &out.instances[1].trunk_grads[i],
+            )
+            .unwrap();
+            pair_scale(&mut sum, 1.0 / 2.0f32);
+            assert!(rw.data() == sum.0.data(), "layer {i} reduced grad differs");
+        }
+        // post-SGD trunk uses the reduced gradient
+        for ((w_new, _), ((w_old, _), (dw, _))) in
+            out.new_trunk.iter().zip(params.trunk.iter().zip(&out.trunk_grads))
+        {
+            let mut want = w_old.clone();
+            want.axpy(-0.05, dw).unwrap();
+            assert!(w_new.data() == want.data(), "param update is not θ − lr·ĝ");
         }
     }
 

@@ -11,21 +11,28 @@
 //!   `Send`, same as per-rank CuDNN handles). `submit_job` delivers typed
 //!   completions — the event/callback primitive the executor retires on.
 //! - [`partition::Partition`] — contiguous layer-block → device assignment
-//!   (the paper's MPI model partitioning).
-//! - [`executor`] — the dependency-counting event-driven executor: clones a
-//!   task's input slots, ships it to its device's worker, and retires it on
-//!   completion, releasing dependents immediately. No per-phase barriers.
+//!   (the paper's MPI model partitioning); [`partition::InstanceGroups`]
+//!   maps micro-batch instances onto device groups.
+//! - [`executor`] — the dependency-counting event-driven **multi-instance**
+//!   executor: takes `Arc` handles on a task's input slots, ships it to its
+//!   device's worker, and retires it on completion, releasing dependents
+//!   immediately. One scheduler drains the union frontier of N concurrent
+//!   graph instances — no per-phase and no inter-instance barriers.
 //! - [`driver::ParallelMgrit`] — builds the executable V-cycle graph (the
 //!   same graph the simulator scores), runs it per MG iteration, keeps the
 //!   boundary-traffic ledger, and exposes the kernel-event trace (the
-//!   real-run analogue of the paper's nvprof Fig 5).
+//!   real-run analogue of the paper's nvprof Fig 5). `train_step_micro`
+//!   pipelines M micro-batches through one composed training graph (hybrid
+//!   data×layer parallelism).
 
 pub mod driver;
 pub mod executor;
 pub mod partition;
 pub mod streams;
 
-pub use driver::{ParallelMgrit, RunMetrics, TrainStepOutput};
-pub use executor::{ExecReport, ExecState, TaskOut, TrainingOutputs};
-pub use partition::Partition;
+pub use driver::{InstanceStep, MicroStepOutput, ParallelMgrit, RunMetrics, TrainStepOutput};
+pub use executor::{
+    ExecEvent, ExecReport, InstanceOutputs, MultiExecState, MultiTrainingOutputs, TaskOut,
+};
+pub use partition::{InstanceGroups, Partition};
 pub use streams::{JobDone, StreamPool, TraceEvent};

@@ -69,6 +69,58 @@ impl Partition {
     }
 }
 
+/// Instance → device-group mapping for the multi-instance graph runtime:
+/// `n_groups` groups of `devices_per_group` devices each. Micro-batch
+/// instance `k` runs its layer-block partition inside group `k mod n_groups`
+/// (every task device id offset by `group · devices_per_group`).
+///
+/// One group — the default — means every instance shares all devices, which
+/// maximizes cross-instance overlap (micro-batch k+1's forward V-cycles fill
+/// the gaps of micro-batch k's adjoint wave). More groups give instances
+/// disjoint device sets: classic data parallelism across groups with
+/// layer parallelism inside each, joined only by the per-layer `ReduceGrad`
+/// tree (whose cross-group hops become explicit Comm tasks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstanceGroups {
+    n_groups: usize,
+    devices_per_group: usize,
+}
+
+impl InstanceGroups {
+    pub fn new(n_groups: usize, devices_per_group: usize) -> Result<InstanceGroups> {
+        if n_groups == 0 {
+            bail!("need at least one device group");
+        }
+        if devices_per_group == 0 {
+            bail!("need at least one device per group");
+        }
+        Ok(InstanceGroups { n_groups, devices_per_group })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    pub fn devices_per_group(&self) -> usize {
+        self.devices_per_group
+    }
+
+    /// Total devices across all groups (the stream-pool size).
+    pub fn n_devices(&self) -> usize {
+        self.n_groups * self.devices_per_group
+    }
+
+    /// Group an instance's tasks run in.
+    pub fn group_of(&self, instance: usize) -> usize {
+        instance % self.n_groups
+    }
+
+    /// Device-id offset of an instance's tasks.
+    pub fn device_offset(&self, instance: usize) -> usize {
+        self.group_of(instance) * self.devices_per_group
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +229,36 @@ mod tests {
     fn rejects_degenerate() {
         assert!(Partition::contiguous(0, 2).is_err());
         assert!(Partition::contiguous(2, 0).is_err());
+    }
+
+    #[test]
+    fn instance_groups_round_robin_offsets() {
+        let g = InstanceGroups::new(2, 3).unwrap();
+        assert_eq!(g.n_devices(), 6);
+        assert_eq!(g.devices_per_group(), 3);
+        // instances alternate groups; offsets step by devices_per_group
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(1), 1);
+        assert_eq!(g.group_of(2), 0);
+        assert_eq!(g.device_offset(0), 0);
+        assert_eq!(g.device_offset(1), 3);
+        assert_eq!(g.device_offset(5), 3);
+    }
+
+    #[test]
+    fn single_group_shares_all_devices() {
+        let g = InstanceGroups::new(1, 4).unwrap();
+        for k in 0..8 {
+            assert_eq!(g.group_of(k), 0);
+            assert_eq!(g.device_offset(k), 0);
+        }
+        assert_eq!(g.n_devices(), 4);
+    }
+
+    #[test]
+    fn instance_groups_reject_degenerate() {
+        assert!(InstanceGroups::new(0, 2).is_err());
+        assert!(InstanceGroups::new(2, 0).is_err());
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub fn live_ascii(trace: &[TraceEvent], width: usize) -> String {
     let evs: Vec<SimTraceEvent> = trace
         .iter()
         .map(|e| SimTraceEvent {
+            task: 0,
             device: 0,
             slot: e.worker,
             label: e.label,

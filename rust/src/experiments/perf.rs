@@ -1,0 +1,120 @@
+//! `cargo bench`-free perf snapshots: the `mgrit bench` subcommand calls
+//! these to emit the machine-readable `BENCH_hotpath.json` /
+//! `BENCH_fig6bc.json` perf-trajectory records (median ns + iteration count
+//! per benchmark, tagged with the git revision) into a chosen directory —
+//! the repo root in CI, so the perf trajectory stays diffable across PRs
+//! without a bench runner.
+//!
+//! These are quick-iteration *companions* to the full suites under
+//! `rust/benches/`, not the same measurements: benchmark names encode their
+//! own input shapes (e.g. `..._b2_4dev` here vs `..._b1_4dev` in the bench
+//! binary), so compare rows within one entry point's trajectory, not across
+//! the two.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::ParallelMgrit;
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::MgritOptions;
+use crate::model::{NetParams, NetSpec};
+use crate::perfmodel::ClusterModel;
+use crate::solver::host::HostSolver;
+use crate::tensor::{ops, Tensor};
+use crate::util::bench::{black_box, Suite};
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// Emit `BENCH_hotpath.json` into `out_dir`: the executor hot paths — the
+/// L3 conv kernel, one DAG-executor V-cycle, the whole-training-step graph
+/// (M = 1) and the pipelined hybrid step (M = 2), plus graph construction.
+pub fn emit_hotpath(out_dir: &Path) -> Result<PathBuf> {
+    let mut suite = Suite::new_quick("hotpath");
+    suite.set_record_dir(out_dir);
+    let mut rng = Rng::new(1);
+
+    let u = Tensor::randn(&[16, 8, 28, 28], 1.0, &mut rng);
+    let w = Tensor::randn(&[8, 8, 3, 3], 0.2, &mut rng);
+    suite.bench("conv2d_b16_c8_28x28_k3", || {
+        black_box(ops::conv2d(&u, &w, 1).unwrap());
+    });
+
+    let spec = Arc::new(NetSpec::mnist());
+    let params = Arc::new(NetParams::init(&spec, 2)?);
+    let sp = spec.clone();
+    let factory = move |_w: usize| HostSolver::new(sp.clone(), params.clone());
+    let hier = Hierarchy::two_level(32, spec.h(), 4)?;
+    let driver = ParallelMgrit::new(factory, spec.clone(), hier, 4, 2)?;
+    let u0 = Tensor::randn(&[1, 8, 28, 28], 0.5, &mut rng);
+    let opts = MgritOptions { max_cycles: 1, tol: 0.0, ..Default::default() };
+    suite.bench("dag_executor_cycle_mnist_b1_4dev", || {
+        driver.pool().clear_trace();
+        black_box(driver.solve(&u0, &opts).unwrap());
+    });
+
+    let y = Tensor::randn(&[2, 1, 28, 28], 0.5, &mut rng);
+    let labels = [3i32, 5];
+    let topts = MgritOptions::early_stopping(2);
+    suite.bench("dag_executor_train_step_mnist_b2_4dev", || {
+        driver.pool().clear_trace();
+        black_box(driver.train_step(&y, &labels, &topts, 0.05).unwrap());
+    });
+    suite.bench("dag_executor_train_step_micro2_mnist_b2_4dev", || {
+        driver.pool().clear_trace();
+        black_box(driver.train_step_micro(&y, &labels, &topts, 0.05, 2).unwrap());
+    });
+    suite.bench("build_mnist_train_step_graph", || {
+        black_box(driver.train_graph(&topts));
+    });
+    suite.bench("build_mnist_train_step_graph_micro2", || {
+        black_box(driver.train_graph_micro(&topts, 2).unwrap());
+    });
+    suite.finish();
+    Ok(out_dir.join("BENCH_hotpath.json"))
+}
+
+/// Emit `BENCH_fig6bc.json` into `out_dir`: the simulated fig6 training
+/// scaling rows plus the hybrid pipelining gain, in quick mode.
+pub fn emit_fig6bc(out_dir: &Path) -> Result<PathBuf> {
+    let mut suite = Suite::new_quick("fig6bc");
+    suite.set_record_dir(out_dir);
+    let gpus: &[usize] = &[1, 4, 24];
+
+    let b = super::fig6::fig6b(gpus)?;
+    suite.table("fig6b_rows", b.to_json_rows());
+    let c = super::fig6::fig6c(gpus)?;
+    suite.table("fig6c_rows", c.to_json_rows());
+    let h = super::fig6::hybrid_timeline(32, 2, 2)?;
+    suite.table("hybrid_rows", h.to_json_rows());
+
+    suite.bench("simulate_mg_training_step_24gpu", || {
+        let spec = NetSpec::fig6();
+        let _ = super::fig6::simulate_mg(&spec, 24, 2, true).unwrap();
+    });
+    suite.bench("simulate_fig6_24gpu_2cycles", || {
+        let spec = NetSpec::fig6();
+        let hier = super::fig6::sim_hierarchy(&spec).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let part = crate::coordinator::Partition::contiguous(n_blocks, 24).unwrap();
+        let g = crate::mgrit::taskgraph::mg_forward(&spec, &hier, &part, 1, 2);
+        black_box(crate::sim::simulate(&g, &ClusterModel::tx_gaia(24), false).unwrap());
+    });
+    suite.finish();
+    Ok(out_dir.join("BENCH_fig6bc.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_hotpath_writes_record() {
+        let dir = std::path::Path::new("target/perf-selftest");
+        let path = emit_hotpath(dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "hotpath");
+        assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

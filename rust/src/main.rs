@@ -2,9 +2,10 @@
 //!
 //! Subcommands:
 //!   forward     MG vs serial forward propagation on real numerics
-//!   train       SGD training (serial | MG layer-parallel), host or PJRT
-//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|ablations
+//!   train       SGD training (serial | MG layer-parallel | hybrid micro-batched), host or PJRT
+//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|ablations
 //!   sim         one simulated MG/PM run at a given GPU count
+//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json
 //!   artifacts   check the AOT artifact manifest against the rust presets
 //!   help        this text
 
@@ -34,12 +35,17 @@ USAGE: mgrit <subcommand> [options]
 
   forward     --preset P --batch B --cycles C --devices D --tol T [--backend host|pjrt]
   train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
-              [--parallel N_DEVICES] [--granularity per_step|per_block]
+              [--parallel N_DEVICES] [--granularity per_step|per_block] [--micro-batches M]
                 --parallel routes every step through the whole-training-step
                 task graph (ParallelMgrit::train_step, host backend) and
-                prints a one-line speed/parity report vs the serial MG step
-  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|compound|ablations> [--quick]
+                prints a one-line speed/parity report vs the serial MG step;
+                --micro-batches M splits each batch into M micro-batches
+                pipelined through ONE composed graph (hybrid data x layer
+                parallelism; batch must divide by M; requires --parallel)
+  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|compound|ablations> [--quick]
   sim         --preset P --gpus G [--training] [--cycles C]
+  bench       [--out DIR] [--full]   quick perf snapshot; writes
+              BENCH_hotpath.json + BENCH_fig6bc.json into DIR (default .)
   artifacts   [--artifacts-dir DIR]
   help
 ";
@@ -68,6 +74,7 @@ fn run(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("experiment") => cmd_experiment(args),
         Some("sim") => cmd_sim(args),
+        Some("bench") => cmd_bench(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("help") | None => {
             print!("{HELP}");
@@ -138,6 +145,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         mnist::load_or_synthesize(std::path::Path::new(&cfg.data_dir), 512, cfg.seed)?;
     let parallel = args.usize_or("parallel", 0)?;
     let granularity = Granularity::parse(args.get_or("granularity", "per_step"))?;
+    let micro_batches = args.usize_or("micro-batches", 1)?;
     let method = if args.flag("serial") {
         train::Method::Serial
     } else {
@@ -154,17 +162,27 @@ fn cmd_train(args: &Args) -> Result<()> {
         method,
         seed: cfg.seed,
     };
+    if micro_batches != 1 && parallel == 0 {
+        bail!("--micro-batches requires --parallel (the multi-instance graph runtime)");
+    }
     if parallel > 0 {
         // the layer-parallel path: every step is one whole-training-step
-        // task graph over `parallel` worker streams (host numerics)
+        // task graph over `parallel` worker streams (host numerics); with
+        // --micro-batches M each step pipelines M micro-batch instances
+        // through that one graph (hybrid data×layer parallelism)
         if args.flag("serial") {
             bail!("--parallel requires the MG method (drop --serial)");
         }
         if cfg.backend != "host" {
             bail!("--parallel runs on the host backend (PJRT contexts are per-thread)");
         }
-        println!("parallel training: {parallel} devices, granularity {granularity:?}");
-        let logs = train::train_parallel(&spec, &mut params, &data, &tc, parallel, granularity)?;
+        println!(
+            "parallel training: {parallel} devices, granularity {granularity:?}, \
+             micro-batches {micro_batches}"
+        );
+        let logs = train::train_parallel(
+            &spec, &mut params, &data, &tc, parallel, granularity, micro_batches,
+        )?;
         for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
             println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
         }
@@ -256,6 +274,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 println!("{}", t.render());
                 println!("{ascii}");
             }
+            "hybrid" => {
+                let (depth, devices, micro) = if quick { (32, 2, 2) } else { (64, 4, 4) };
+                println!("{}", exp::fig6::hybrid_timeline(depth, devices, micro)?.render());
+            }
             "fig7" => {
                 let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
                 println!("{}", exp::fig7::run(gpus)?.render());
@@ -274,13 +296,27 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "compound", "ablations"] {
+        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "compound", "ablations"] {
             run_one(name)?;
         }
         Ok(())
     } else {
         run_one(which)
     }
+}
+
+/// Quick perf snapshot without `cargo bench`: emits the machine-readable
+/// BENCH_hotpath.json / BENCH_fig6bc.json perf-trajectory records into
+/// `--out` (default: the current directory — the repo root in CI).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let out = std::path::PathBuf::from(args.get_or("out", "."));
+    if args.flag("full") {
+        eprintln!("note: `bench` always runs in quick-iteration mode; use `cargo bench` for full runs");
+    }
+    let p1 = exp::perf::emit_hotpath(&out)?;
+    let p2 = exp::perf::emit_fig6bc(&out)?;
+    println!("perf records: {} , {}", p1.display(), p2.display());
+    Ok(())
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {

@@ -21,6 +21,14 @@
 //! bit-identical results to the serial engine in `mgrit::fas` (and, for the
 //! training graph, to the serial step in `train::mg_step_serial`).
 //!
+//! Graphs are **multi-instance**: every task carries an `instance` tag (the
+//! micro-batch it belongs to), and [`mg_train_step_multi`] composes M
+//! independent primal+adjoint training instances into ONE graph joined only
+//! by per-layer [`TaskOp::ReduceGrad`] reduction trees and a single
+//! [`TaskOp::ParamUpdate`] per layer — hybrid data×layer parallelism with no
+//! inter-instance barrier: micro-batch k+1's forward V-cycles overlap
+//! micro-batch k's adjoint/gradient wave on the shared (or grouped) devices.
+//!
 //! Generators:
 //! - [`mg_vcycle`] / [`mg_vcycle_with`] — one executable V-cycle (what
 //!   `ParallelMgrit` runs per MG iteration)
@@ -28,10 +36,12 @@
 //!   convergence test between cycles
 //! - [`mg_forward`] — multi-cycle forward schedule
 //! - [`mg_train_step`] — the whole training step as one executable graph
+//! - [`mg_train_step_multi`] — M micro-batch training instances pipelined
+//!   through one graph (per-layer `ReduceGrad` join, single `ParamUpdate`)
 //! - [`serial_forward`] / [`serial_training`] — single-stream sequential
 //!   baseline (distributed = the paper's "Model Partitioned" / PM method)
 
-use crate::coordinator::Partition;
+use crate::coordinator::{InstanceGroups, Partition};
 use crate::model::cost::{head_cost, layer_bwd_cost, layer_cost, state_bytes};
 use crate::model::NetSpec;
 use crate::Result;
@@ -116,21 +126,45 @@ pub enum TaskOp {
     Correct { sys: Sys, level: usize, j: usize },
     /// Head forward + VJP at the last fine state: produces the loss, the
     /// head parameter gradients, and ∂loss/∂u^N — which seeds *every* slot
-    /// of the adjoint system (the constant-in-depth initial guess).
+    /// of the adjoint system (the constant-in-depth initial guess). Each
+    /// instance has its own head (its own micro-batch loss).
     Head,
     /// Layer-local parameter gradient `gⁿ = h·(∂F/∂θⁿ)ᵀ λ^{n+1}` — fans out
-    /// the moment its λ slot retires; embarrassingly parallel.
+    /// the moment its λ slot retires; embarrassingly parallel. Per instance.
     GradAccum { layer: usize },
-    /// Per-layer SGD update `θⁿ ← θⁿ − lr·gⁿ` into the fresh parameter slot.
+    /// One node of a layer's micro-batch gradient reduction tree:
+    /// `dst = lhs + rhs` over (weight, bias) pairs; the `root` node
+    /// additionally scales by 1/M (the micro-batch mean). Leaves read
+    /// instance `GradAccum` slots, internal nodes read earlier tree nodes —
+    /// the only tasks with cross-instance dependencies, so there is never an
+    /// inter-instance barrier. Executed with the same `model::params`
+    /// primitives as the serial reference → bit-identical reduction.
+    ReduceGrad { layer: usize, lhs: GradSrc, rhs: GradSrc, node: usize, root: bool },
+    /// Per-layer SGD update `θⁿ ← θⁿ − lr·ĝⁿ` into the fresh parameter slot,
+    /// where ĝ is the instance gradient (M = 1) or the `ReduceGrad` root
+    /// (M > 1). Exactly one per layer per composed graph.
     ParamUpdate { layer: usize },
     /// Boundary transfer (accounting only in local execution).
     Xfer,
 }
 
-/// One node of the schedule DAG.
+/// Operand of a [`TaskOp::ReduceGrad`] node: an instance's `GradAccum`
+/// output, or an earlier internal node of the same layer's tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradSrc {
+    Inst(usize),
+    Node(usize),
+}
+
+/// One node of the schedule DAG. Its identity is the `(instance, id)` pair:
+/// `id` is the graph-global topological index, `instance` the micro-batch
+/// whose state slots the payload reads/writes (joint tasks — `ReduceGrad`,
+/// the final `ParamUpdate`s and their transfers — carry instance 0).
 #[derive(Debug, Clone)]
 pub struct Task {
     pub id: usize,
+    /// Graph instance (micro-batch) this task's payload operates on.
+    pub instance: usize,
     /// Executing device (for Comm: the destination device).
     pub device: usize,
     pub kind: TaskKind,
@@ -155,8 +189,29 @@ impl TaskGraph {
         op: Option<TaskOp>,
     ) -> usize {
         let id = self.tasks.len();
-        self.tasks.push(Task { id, device, kind, deps, op });
+        self.tasks.push(Task { id, instance: 0, device, kind, deps, op });
         id
+    }
+
+    /// Splice a single-instance sub-graph into this graph as instance
+    /// `instance`, offsetting task ids, dependency ids and device ids (the
+    /// instance's device-group offset). Returns the id offset.
+    fn append_instance(&mut self, sub: TaskGraph, instance: usize, dev_offset: usize) -> usize {
+        let off = self.tasks.len();
+        for mut t in sub.tasks {
+            t.id += off;
+            t.instance = instance;
+            t.device += dev_offset;
+            if let TaskKind::Comm { src, dst, .. } = &mut t.kind {
+                *src += dev_offset;
+                *dst += dev_offset;
+            }
+            for d in &mut t.deps {
+                *d += off;
+            }
+            self.tasks.push(t);
+        }
+        off
     }
 
     /// Kernel task helper.
@@ -742,11 +797,13 @@ impl<'a> MgBuilder<'a> {
         ht
     }
 
-    /// Per-layer gradient + SGD-update tasks. The gradient of layer i needs
-    /// the forward state u[0][i] and λ^{i+1} = μ^{N−1−i}; it becomes ready
-    /// the moment that μ slot's final writer retires — while adjoint
-    /// relaxation of other partitions is still in flight.
-    fn grads_and_updates(&mut self) {
+    /// Per-layer gradient tasks. The gradient of layer i needs the forward
+    /// state u[0][i] and λ^{i+1} = μ^{N−1−i}; it becomes ready the moment
+    /// that μ slot's final writer retires — while adjoint relaxation of
+    /// other partitions is still in flight. The matching SGD updates are
+    /// emitted by the multi-instance composer (after the micro-batch
+    /// gradient reduction join).
+    fn grads(&mut self) {
         let n_fine = self.pm.hier.fine().n_points;
         let n_layers = n_fine - 1;
         for i in 0..n_layers {
@@ -770,17 +827,71 @@ impl<'a> MgBuilder<'a> {
             );
             self.slots[0].u[0][i].readers.push(gt);
             self.slots[1].u[0][mu].readers.push(gt);
-            let elems = layer_cost(self.spec, i, self.batch).param_bytes / 4.0;
-            self.g.kernel(
-                dev,
-                "param_update",
-                KernelClass::Light,
-                2.0 * elems,
-                vec![gt],
-                self.op(TaskOp::ParamUpdate { layer: i }),
-            );
         }
     }
+}
+
+/// One step of the micro-batch gradient reduction: `node = lhs + rhs`, with
+/// the root additionally scaled by 1/M.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceStep {
+    pub lhs: GradSrc,
+    pub rhs: GradSrc,
+    pub node: usize,
+    pub root: bool,
+}
+
+/// The balanced pairwise reduction plan over `m` instance gradients —
+/// ⌈log₂ m⌉ rounds, m − 1 internal nodes, the last step marked `root`
+/// (where the 1/M mean is applied). The live `ReduceGrad` tasks and the
+/// serial reference `train::reduce_micro_grads` both execute THIS plan with
+/// the same `model::params` primitives, which is what makes the pipelined
+/// hybrid step bit-identical to the serial sum-over-micro-batches. Empty for
+/// m ≤ 1 (nothing to reduce).
+pub fn reduce_plan(m: usize) -> Vec<ReduceStep> {
+    let mut cur: Vec<GradSrc> = (0..m).map(GradSrc::Inst).collect();
+    let mut steps: Vec<ReduceStep> = Vec::new();
+    let mut next_node = 0usize;
+    while cur.len() > 1 {
+        let mut nxt: Vec<GradSrc> = Vec::with_capacity((cur.len() + 1) / 2);
+        for pair in cur.chunks(2) {
+            if let [lhs, rhs] = *pair {
+                let node = next_node;
+                next_node += 1;
+                steps.push(ReduceStep { lhs, rhs, node, root: false });
+                nxt.push(GradSrc::Node(node));
+            } else {
+                // odd leftover carries into the next round
+                nxt.push(pair[0]);
+            }
+        }
+        cur = nxt;
+    }
+    if let Some(last) = steps.last_mut() {
+        last.root = true;
+    }
+    steps
+}
+
+/// Does an `(instance, label, t_start, t_end)` event stream show hybrid
+/// pipelining — instance k+1 **forward** work in flight while instance k
+/// **adjoint/gradient** work runs? A barriered runtime (finish instance k,
+/// then start instance k+1) can never produce such a pair. Shared by the
+/// live-trace assertion, the virtual-time assertion, and the hybrid
+/// experiment report, so the label taxonomy lives in exactly one place.
+pub fn events_show_pipeline_overlap(events: &[(usize, &str, f64, f64)]) -> bool {
+    fn is_backward(l: &str) -> bool {
+        l.starts_with("adj_") || l == "param_grad"
+    }
+    fn is_forward(l: &str) -> bool {
+        !l.starts_with("adj_")
+            && !matches!(l, "param_grad" | "head" | "reduce_grad" | "param_update" | "comm")
+    }
+    events.iter().filter(|(_, l, _, _)| is_backward(l)).any(|&(k, _, b0, b1)| {
+        events
+            .iter()
+            .any(|&(kf, lf, f0, f1)| kf == k + 1 && is_forward(lf) && f0 < b1 && f1 > b0)
+    })
 }
 
 /// One executable V-cycle (level 0 downwards) with the given relaxation
@@ -856,8 +967,10 @@ pub fn mg_forward(
 ///    overlaps adjoint relaxation on early layers.
 ///
 /// The live executor and `sim::simulate` consume this identical graph.
-/// Executed against `coordinator::ExecState::initial_train`, the result is
-/// bit-identical to the serial step in `train::mg_step_serial`.
+/// Executed against `coordinator::MultiExecState::initial_train`, the result
+/// is bit-identical to the serial step in `train::mg_step_serial`.
+///
+/// This is the single-instance (M = 1) case of [`mg_train_step_multi`].
 pub fn mg_train_step(
     spec: &NetSpec,
     hier: &Hierarchy,
@@ -867,6 +980,24 @@ pub fn mg_train_step(
     relax: RelaxKind,
     gran: Granularity,
 ) -> TaskGraph {
+    let groups = InstanceGroups::new(1, partition.n_devices())
+        .expect("single-group instance map");
+    mg_train_step_multi(spec, hier, partition, &groups, batch, cycles, relax, gran, 1)
+        .expect("single-instance training graph")
+}
+
+/// One training-instance task set (forward cycles → head → adjoint cycles →
+/// per-layer gradients) as a standalone single-instance graph, plus the id
+/// of each layer's `GradAccum` task.
+fn train_instance_tasks(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+) -> (TaskGraph, Vec<usize>) {
     let mut b = MgBuilder::new(spec, hier, partition, batch);
     b.gran = gran;
     for _ in 0..cycles {
@@ -880,8 +1011,133 @@ pub fn mg_train_step(
     }
     b.sys = Sys::Primal;
     b.flop_scale = 1.0;
-    b.grads_and_updates();
-    b.g
+    b.grads();
+    let n_layers = hier.fine().n_points - 1;
+    let mut grad_ids = vec![usize::MAX; n_layers];
+    for t in &b.g.tasks {
+        if let Some(TaskOp::GradAccum { layer }) = t.op {
+            grad_ids[layer] = t.id;
+        }
+    }
+    debug_assert!(grad_ids.iter().all(|&i| i != usize::MAX));
+    (b.g, grad_ids)
+}
+
+/// M micro-batch training instances composed into **one** executable graph —
+/// hybrid data×layer parallelism:
+///
+/// - every instance is a full primal+adjoint `mg_train_step` pipeline over
+///   its own state slots (instance-tagged tasks, device ids offset by the
+///   instance's device group);
+/// - per layer, a [`reduce_plan`] tree of [`TaskOp::ReduceGrad`] tasks joins
+///   the M `GradAccum` outputs into the micro-batch mean gradient (the root
+///   scales by 1/M), with explicit Comm tasks where the tree hops across
+///   device groups;
+/// - exactly one [`TaskOp::ParamUpdate`] per layer consumes the reduced
+///   gradient (or the lone instance gradient when M = 1).
+///
+/// There is **no inter-instance barrier**: the only cross-instance edges are
+/// the reduction-tree inputs, so micro-batch k+1's forward V-cycles overlap
+/// micro-batch k's adjoint and gradient wave. `batch` is the per-micro-batch
+/// size (the cost annotations of each instance's kernels).
+#[allow(clippy::too_many_arguments)]
+pub fn mg_train_step_multi(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    groups: &InstanceGroups,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+    micro_batches: usize,
+) -> Result<TaskGraph> {
+    anyhow::ensure!(micro_batches >= 1, "need at least one micro-batch");
+    anyhow::ensure!(
+        groups.devices_per_group() == partition.n_devices(),
+        "instance groups sized for {} devices per group but the partition uses {}",
+        groups.devices_per_group(),
+        partition.n_devices()
+    );
+    let n_layers = hier.fine().n_points - 1;
+    let mut g = TaskGraph::default();
+    // grad_ids[k][layer] = graph-global id of instance k's GradAccum task
+    let mut grad_ids: Vec<Vec<usize>> = Vec::with_capacity(micro_batches);
+    for k in 0..micro_batches {
+        let (sub, ids) = train_instance_tasks(spec, hier, partition, batch, cycles, relax, gran);
+        let off = g.append_instance(sub, k, groups.device_offset(k));
+        grad_ids.push(ids.into_iter().map(|i| i + off).collect());
+    }
+    // producer task + device of a reduction-tree operand
+    fn src_of(
+        src: GradSrc,
+        layer: usize,
+        grad_ids: &[Vec<usize>],
+        node_tasks: &[(usize, usize)],
+        g: &TaskGraph,
+    ) -> (usize, usize) {
+        match src {
+            GradSrc::Inst(k) => {
+                let id = grad_ids[k][layer];
+                (id, g.tasks[id].device)
+            }
+            GradSrc::Node(n) => node_tasks[n],
+        }
+    }
+    // the per-layer join: reduction tree + one ParamUpdate
+    let plan = reduce_plan(micro_batches);
+    for layer in 0..n_layers {
+        let grad_bytes = layer_cost(spec, layer, batch).param_bytes;
+        let elems = grad_bytes / 4.0;
+        // (task id, device) of each internal node, indexed by node id
+        let mut node_tasks: Vec<(usize, usize)> = Vec::with_capacity(plan.len());
+        let mut last: Option<(usize, usize)> = None;
+        for step in &plan {
+            let (lhs_id, lhs_dev) = src_of(step.lhs, layer, &grad_ids, &node_tasks, &g);
+            let (rhs_id, rhs_dev) = src_of(step.rhs, layer, &grad_ids, &node_tasks, &g);
+            // the node runs where its left operand lives; a right operand on
+            // another device (cross-group) travels as an explicit transfer
+            let dst = lhs_dev;
+            let mut deps = vec![lhs_id];
+            match g.comm(rhs_dev, dst, grad_bytes, vec![rhs_id], Some(TaskOp::Xfer)) {
+                Some(c) => deps.push(c),
+                None => deps.push(rhs_id),
+            }
+            let t = g.kernel(
+                dst,
+                "reduce_grad",
+                KernelClass::Light,
+                2.0 * elems,
+                dedup(deps),
+                Some(TaskOp::ReduceGrad {
+                    layer,
+                    lhs: step.lhs,
+                    rhs: step.rhs,
+                    node: step.node,
+                    root: step.root,
+                }),
+            );
+            node_tasks.push((t, dst));
+            last = Some((t, dst));
+        }
+        // M = 1: update straight off the lone instance gradient (PR 2 shape)
+        let (dep, dev) = match last {
+            Some((t, d)) => (t, d),
+            None => {
+                let id = grad_ids[0][layer];
+                (id, g.tasks[id].device)
+            }
+        };
+        g.kernel(
+            dev,
+            "param_update",
+            KernelClass::Light,
+            2.0 * elems,
+            vec![dep],
+            Some(TaskOp::ParamUpdate { layer }),
+        );
+    }
+    Ok(g)
 }
 
 /// Sequential forward propagation partitioned across devices — one long
@@ -1203,6 +1459,164 @@ mod tests {
             .tasks
             .iter()
             .any(|t| matches!(t.op, Some(TaskOp::BlockRun { sys: Sys::Adjoint, .. }))));
+    }
+
+    #[test]
+    fn reduce_plan_shapes() {
+        assert!(reduce_plan(0).is_empty());
+        assert!(reduce_plan(1).is_empty());
+        for m in 2..=9usize {
+            let plan = reduce_plan(m);
+            // pairwise reduction: m − 1 internal nodes, exactly one root (the last)
+            assert_eq!(plan.len(), m - 1, "m={m}");
+            assert_eq!(plan.iter().filter(|s| s.root).count(), 1);
+            assert!(plan.last().unwrap().root);
+            // every instance leaf consumed exactly once
+            let mut inst_uses = vec![0usize; m];
+            for s in &plan {
+                for src in [s.lhs, s.rhs] {
+                    if let GradSrc::Inst(k) = src {
+                        inst_uses[k] += 1;
+                    }
+                }
+            }
+            assert!(inst_uses.iter().all(|&c| c == 1), "m={m}: {inst_uses:?}");
+            // node operands always refer to earlier steps
+            for (i, s) in plan.iter().enumerate() {
+                for src in [s.lhs, s.rhs] {
+                    if let GradSrc::Node(n) = src {
+                        assert!(n < i, "step {i} reads future node {n}");
+                    }
+                }
+                assert_eq!(s.node, i);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_instance_graph_composes_and_validates() {
+        let (spec, hier, part) = setup(32, 2);
+        let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices()).unwrap();
+        for m in [1usize, 2, 3, 4] {
+            let g = mg_train_step_multi(
+                &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep, m,
+            )
+            .unwrap();
+            g.validate().unwrap();
+            assert!(g.tasks.iter().all(|t| t.op.is_some()));
+            // per instance: one head, 32 grads; joint: m−1 reduces and one
+            // update per layer
+            assert_eq!(g.n_kernels_labeled("head"), m);
+            assert_eq!(g.n_kernels_labeled("param_grad"), 32 * m);
+            assert_eq!(g.n_kernels_labeled("reduce_grad"), 32 * (m - 1));
+            assert_eq!(g.n_kernels_labeled("param_update"), 32);
+            // instance tags: every instance id < m appears; joint tasks are 0
+            let max_inst = g.tasks.iter().map(|t| t.instance).max().unwrap();
+            assert_eq!(max_inst, m - 1);
+        }
+    }
+
+    #[test]
+    fn multi_instance_m1_matches_single_instance_graph() {
+        // the M = 1 composition is the PR 2 training graph: same task
+        // multiset, same work, same traffic
+        let (spec, hier, part) = setup(32, 2);
+        let g1 = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
+        let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices()).unwrap();
+        let gm = mg_train_step_multi(
+            &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep, 1,
+        )
+        .unwrap();
+        assert_eq!(g1.n_tasks(), gm.n_tasks());
+        assert!((g1.total_flops() - gm.total_flops()).abs() < 1e-9);
+        assert_eq!(g1.n_comms(), gm.n_comms());
+        assert!(gm.tasks.iter().all(|t| t.instance == 0));
+    }
+
+    #[test]
+    fn cross_instance_edges_only_enter_the_reduction_join() {
+        // the no-inter-instance-barrier property at the graph level: a
+        // task outside the reduction join never depends on another
+        // instance's task
+        let (spec, hier, part) = setup(32, 2);
+        let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices()).unwrap();
+        let g = mg_train_step_multi(
+            &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep, 4,
+        )
+        .unwrap();
+        let is_join = |t: &Task| {
+            matches!(
+                t.op,
+                Some(TaskOp::ReduceGrad { .. }) | Some(TaskOp::ParamUpdate { .. })
+            ) || (matches!(t.op, Some(TaskOp::Xfer))
+                && g.tasks.iter().any(|u| {
+                    matches!(u.op, Some(TaskOp::ReduceGrad { .. })) && u.deps.contains(&t.id)
+                }))
+        };
+        for t in &g.tasks {
+            if is_join(t) {
+                continue;
+            }
+            for &d in &t.deps {
+                assert_eq!(
+                    g.tasks[d].instance, t.instance,
+                    "task {} (inst {}) depends on task {d} (inst {})",
+                    t.id, t.instance, g.tasks[d].instance
+                );
+            }
+        }
+        // and the join really does join: some ReduceGrad has deps from
+        // different instances
+        let crosses = g.tasks.iter().any(|t| {
+            matches!(t.op, Some(TaskOp::ReduceGrad { .. }))
+                && t.deps
+                    .iter()
+                    .map(|&d| g.tasks[d].instance)
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .len()
+                    > 1
+        });
+        assert!(crosses, "reduction tree never joins instances");
+    }
+
+    #[test]
+    fn device_groups_shift_instances_and_add_reduce_comms() {
+        // 2 groups × 2 devices: instance 1 runs on devices 2..4, and the
+        // per-layer reduction tree hops across groups through Comm tasks
+        let (spec, hier, _) = setup(32, 2);
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let part = Partition::contiguous(n_blocks, 2).unwrap();
+        let groups = crate::coordinator::InstanceGroups::new(2, part.n_devices()).unwrap();
+        let g = mg_train_step_multi(
+            &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep, 2,
+        )
+        .unwrap();
+        g.validate().unwrap();
+        let inst1_devs: std::collections::BTreeSet<usize> = g
+            .tasks
+            .iter()
+            .filter(|t| t.instance == 1 && !is_reduce_side(t, &g))
+            .map(|t| t.device)
+            .collect();
+        assert!(inst1_devs.iter().all(|&d| d >= 2), "instance 1 leaked into group 0: {inst1_devs:?}");
+        // cross-group gradient hops are explicit transfers feeding ReduceGrad
+        let reduce_comm = g.tasks.iter().any(|t| {
+            matches!(t.kind, TaskKind::Comm { .. })
+                && g.tasks.iter().any(|u| {
+                    matches!(u.op, Some(TaskOp::ReduceGrad { .. })) && u.deps.contains(&t.id)
+                })
+        });
+        assert!(reduce_comm, "no cross-group transfer in the reduction tree");
+    }
+
+    fn is_reduce_side(t: &Task, g: &TaskGraph) -> bool {
+        matches!(
+            t.op,
+            Some(TaskOp::ReduceGrad { .. }) | Some(TaskOp::ParamUpdate { .. })
+        ) || (matches!(t.kind, TaskKind::Comm { .. })
+            && g.tasks.iter().any(|u| {
+                matches!(u.op, Some(TaskOp::ReduceGrad { .. })) && u.deps.contains(&t.id)
+            }))
     }
 
     #[test]

@@ -162,6 +162,26 @@ impl TrunkGradSlots {
     }
 }
 
+/// Elementwise sum of two (weight, bias) gradient pairs — THE reduction
+/// primitive of the micro-batch join. Both the live `ReduceGrad` task and
+/// the serial sum-over-micro-batches reference call this exact function, so
+/// the two paths perform bit-identical f32 arithmetic in the same order.
+pub fn pair_sum(a: &(Tensor, Tensor), b: &(Tensor, Tensor)) -> Result<(Tensor, Tensor)> {
+    let mut w = a.0.clone();
+    w.axpy(1.0, &b.0)?;
+    let mut bb = a.1.clone();
+    bb.axpy(1.0, &b.1)?;
+    Ok((w, bb))
+}
+
+/// In-place scale of a (weight, bias) pair — the 1/M mean applied at the
+/// root of the micro-batch reduction tree (shared with the serial reference
+/// for the same bit-identity reason as [`pair_sum`]).
+pub fn pair_scale(p: &mut (Tensor, Tensor), s: f32) {
+    p.0.scale(s);
+    p.1.scale(s);
+}
+
 /// Gradients, same structure as the parameters.
 #[derive(Debug, Clone)]
 pub struct NetGrads {
@@ -230,6 +250,20 @@ mod tests {
         let c = NetParams::init(&spec, 43).unwrap();
         assert_eq!(a.w_open, b.w_open);
         assert_ne!(a.w_open, c.w_open);
+    }
+
+    #[test]
+    fn pair_sum_and_scale() {
+        let a = (Tensor::full(&[2], 1.0), Tensor::full(&[1], 2.0));
+        let b = (Tensor::full(&[2], 3.0), Tensor::full(&[1], 4.0));
+        let mut s = pair_sum(&a, &b).unwrap();
+        assert_eq!(s.0.data(), &[4.0, 4.0]);
+        assert_eq!(s.1.data(), &[6.0]);
+        pair_scale(&mut s, 0.5);
+        assert_eq!(s.0.data(), &[2.0, 2.0]);
+        assert_eq!(s.1.data(), &[3.0]);
+        let bad = (Tensor::zeros(&[3]), Tensor::zeros(&[1]));
+        assert!(pair_sum(&a, &bad).is_err());
     }
 
     #[test]

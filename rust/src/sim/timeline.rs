@@ -72,6 +72,7 @@ mod tests {
 
     fn ev(device: usize, slot: usize, t0: f64, t1: f64, is_comm: bool) -> SimTraceEvent {
         SimTraceEvent {
+            task: 0,
             device,
             slot,
             label: if is_comm { "comm" } else { "k" },

@@ -75,6 +75,28 @@ impl Tensor {
         Ok(Tensor { dims: dims.to_vec(), data: self.data.clone() })
     }
 
+    /// Rows `start .. start + count` along the leading (batch) dimension as
+    /// a new contiguous tensor — how the hybrid driver splits a minibatch
+    /// into micro-batches. `slice_batch(0, dims[0])` copies the whole tensor
+    /// (the M = 1 degenerate case), so micro-batched and plain paths see
+    /// identical bytes.
+    pub fn slice_batch(&self, start: usize, count: usize) -> Result<Tensor> {
+        if self.dims.is_empty() {
+            bail!("slice_batch on a 0-d tensor");
+        }
+        if count == 0 {
+            bail!("slice_batch: empty slice");
+        }
+        let b = self.dims[0];
+        if start + count > b {
+            bail!("slice_batch {start}..{} out of range (batch {b})", start + count);
+        }
+        let row: usize = self.dims[1..].iter().product();
+        let mut dims = self.dims.clone();
+        dims[0] = count;
+        Ok(Tensor { dims, data: self.data[start * row..(start + count) * row].to_vec() })
+    }
+
     /// Elementwise a += alpha * b (axpy), shape-checked.
     pub fn axpy(&mut self, alpha: f32, b: &Tensor) -> Result<()> {
         if self.dims != b.dims {
@@ -164,6 +186,20 @@ mod tests {
         assert_eq!(Tensor::add(&a, &b).unwrap().data(), &[4.0, 5.0]);
         assert_eq!(a.l2_norm(), 5.0);
         assert_eq!(Tensor::dot(&a, &b).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn slice_batch_rows() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.slice_batch(1, 2).unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        // full-range slice reproduces the tensor bitwise (M = 1 path)
+        let full = t.slice_batch(0, 4).unwrap();
+        assert_eq!(full.dims(), t.dims());
+        assert!(full.data() == t.data());
+        assert!(t.slice_batch(3, 2).is_err());
+        assert!(t.slice_batch(0, 0).is_err());
     }
 
     #[test]

@@ -158,6 +158,137 @@ pub fn mg_step_serial<E: NetExecutor>(
     Ok(SerialStepOutput { loss, grads, params: updated, states, lams })
 }
 
+/// Execute the micro-batch gradient reduction serially: the balanced
+/// pairwise plan of `taskgraph::reduce_plan(M)` over the per-micro-batch
+/// (dW, db) leaves, with the 1/M mean applied at the root — the SAME plan
+/// and `model::params` primitives the live `ReduceGrad` tasks execute, so
+/// the serial reference and the pipelined hybrid step reduce bit-identically.
+/// A single leaf is returned as-is (the M = 1 degenerate case).
+pub fn reduce_micro_grads(leaves: &[(Tensor, Tensor)]) -> Result<(Tensor, Tensor)> {
+    use crate::mgrit::taskgraph::{reduce_plan, GradSrc};
+    use crate::model::params::{pair_scale, pair_sum};
+    let m = leaves.len();
+    if m == 0 {
+        bail!("no micro-batch gradients to reduce");
+    }
+    if m == 1 {
+        return Ok(leaves[0].clone());
+    }
+    fn fetch(
+        src: GradSrc,
+        leaves: &[(Tensor, Tensor)],
+        nodes: &[Option<(Tensor, Tensor)>],
+    ) -> Result<(Tensor, Tensor)> {
+        match src {
+            GradSrc::Inst(k) => Ok(leaves[k].clone()),
+            GradSrc::Node(n) => nodes[n]
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("reduce plan reads unset node {n}")),
+        }
+    }
+    let plan = reduce_plan(m);
+    let mut nodes: Vec<Option<(Tensor, Tensor)>> = vec![None; plan.len()];
+    for step in &plan {
+        let l = fetch(step.lhs, leaves, &nodes)?;
+        let r = fetch(step.rhs, leaves, &nodes)?;
+        let mut sum = pair_sum(&l, &r)?;
+        if step.root {
+            // the micro-batch mean — same expression as the live root task
+            pair_scale(&mut sum, 1.0 / m as f32);
+            return Ok(sum);
+        }
+        nodes[step.node] = Some(sum);
+    }
+    bail!("reduce plan for {m} leaves had no root step");
+}
+
+/// Serial reference for the hybrid (micro-batched) training step: the output
+/// of [`mg_step_serial_micro`] — `coordinator::ParallelMgrit::train_step_micro`
+/// is asserted *bit-identical* to it.
+#[derive(Debug)]
+pub struct SerialMicroOutput {
+    /// Mean loss over micro-batches.
+    pub loss: f64,
+    /// Reduced (micro-batch mean) gradients.
+    pub grads: NetGrads,
+    /// Post-SGD parameters.
+    pub params: NetParams,
+    /// Per-micro-batch (loss, states, lams), in instance order.
+    pub per_instance: Vec<crate::coordinator::InstanceStep>,
+}
+
+/// The serial sum-over-micro-batches training step: for each of the M equal
+/// micro-batches in order — opening, forward MGRIT (fixed early-stopped
+/// cycles), head fwd+VJP, adjoint MGRIT, per-layer gradients, opening VJP —
+/// then the [`reduce_micro_grads`] mean over every gradient tensor, the mean
+/// loss, and ONE SGD step. With M = 1 this degenerates bit-exactly to
+/// [`mg_step_serial`]. Same arithmetic in the same order as the pipelined
+/// multi-instance task graph.
+#[allow(clippy::too_many_arguments)]
+pub fn mg_step_serial_micro<E: NetExecutor>(
+    spec: &NetSpec,
+    exec: &E,
+    y: &Tensor,
+    labels: &[i32],
+    hier: &Hierarchy,
+    opts: &MgritOptions,
+    lr: f32,
+    micro_batches: usize,
+) -> Result<SerialMicroOutput> {
+    let m = micro_batches;
+    if m == 0 {
+        bail!("need at least one micro-batch");
+    }
+    let b = *y.dims().first().ok_or_else(|| anyhow::anyhow!("batch tensor has no leading dim"))?;
+    if labels.len() != b {
+        bail!("labels len {} != batch {b}", labels.len());
+    }
+    if b % m != 0 {
+        bail!("batch {b} does not divide into {m} micro-batches");
+    }
+    let per = b / m;
+    let h = spec.h();
+    let params = exec.net_params();
+    let opts = MgritOptions { tol: 0.0, ..opts.clone() };
+    let mut per_instance = Vec::with_capacity(m);
+    let mut trunk_per_inst: Vec<Vec<(Tensor, Tensor)>> = Vec::with_capacity(m);
+    let mut open_leaves = Vec::with_capacity(m);
+    let mut fc_leaves = Vec::with_capacity(m);
+    for k in 0..m {
+        let yk = y.slice_batch(k * per, per)?;
+        let lk = &labels[k * per..(k + 1) * per];
+        let u0 = exec.opening(&yk)?;
+        let (states, _) = mgrit::fas::solve_forward_with(exec, hier, &u0, &opts)?;
+        let un = states.last().unwrap();
+        let (_logits, loss) = exec.head(un, lk)?;
+        let (du_n, dwfc, dbfc) = exec.head_vjp(un, lk)?;
+        let (lams, _) = mgrit::adjoint::solve_adjoint_with(exec, &states, hier, &du_n, &opts)?;
+        let trunk = mgrit::adjoint::param_grads(exec, &states, &lams, h)?;
+        let (dw_open, db_open) =
+            opening_vjp(&yk, &params.w_open, &params.b_open, spec.opening.pad, &lams[0])?;
+        trunk_per_inst.push(trunk);
+        open_leaves.push((dw_open, db_open));
+        fc_leaves.push((dwfc, dbfc));
+        per_instance.push(crate::coordinator::InstanceStep { loss, states, lams });
+    }
+    // the combined loss: mean over instances, in instance order — identical
+    // expression to the multi-instance executor
+    let loss = per_instance.iter().map(|i| i.loss).sum::<f64>() / m as f64;
+    let n_layers = spec.n_res();
+    let mut trunk = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        let leaves: Vec<(Tensor, Tensor)> =
+            trunk_per_inst.iter().map(|t| t[i].clone()).collect();
+        trunk.push(reduce_micro_grads(&leaves)?);
+    }
+    let (w_open, b_open) = reduce_micro_grads(&open_leaves)?;
+    let (w_fc, b_fc) = reduce_micro_grads(&fc_leaves)?;
+    let grads = NetGrads { w_open, b_open, trunk, w_fc, b_fc };
+    let mut updated = params.clone();
+    updated.sgd_step(&grads, lr)?;
+    Ok(SerialMicroOutput { loss, grads, params: updated, per_instance })
+}
+
 /// The training hierarchy `Method::Mgrit` implies (what `solve_forward`
 /// builds internally): coarsening 4, the default level cap and coarse floor.
 pub fn training_hierarchy(spec: &NetSpec) -> Result<Hierarchy> {
@@ -166,11 +297,19 @@ pub fn training_hierarchy(spec: &NetSpec) -> Result<Hierarchy> {
     Hierarchy::build(n, spec.h(), mgrit::fas::coarsen_for(n), d.max_levels, d.min_coarse_points)
 }
 
-/// Layer-parallel SGD training through `ParallelMgrit::train_step`: every
-/// step executes the whole-training-step task graph over `n_devices` worker
+/// Layer-parallel SGD training through the multi-instance graph runtime:
+/// every step executes ONE composed training graph over `n_devices` worker
 /// streams (host numerics — each worker builds its own `HostSolver` over the
-/// current parameter snapshot). Batch schedule and arithmetic match
-/// [`train`] with `Method::Mgrit`, so losses are directly comparable.
+/// current parameter snapshot). With `micro_batches > 1` each step splits
+/// its batch into that many micro-batches and pipelines them through the
+/// executor (hybrid data×layer parallelism, `ParallelMgrit::train_step_micro`);
+/// with 1 it is the plain whole-training-step graph.
+///
+/// Batch *selection* is independent of `micro_batches`: every step's batch
+/// is drawn from `Rng::new(cfg.seed)` exactly as in [`train`] with
+/// `Method::Mgrit`, then split deterministically — so M = 1 and M > 1 runs
+/// consume identical data in identical order, and same-M reruns are
+/// bit-reproducible (see `Rng::for_instance` for instance-local streams).
 pub fn train_parallel(
     spec: &Arc<NetSpec>,
     params: &mut NetParams,
@@ -178,6 +317,7 @@ pub fn train_parallel(
     cfg: &TrainConfig,
     n_devices: usize,
     granularity: Granularity,
+    micro_batches: usize,
 ) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
@@ -185,6 +325,12 @@ pub fn train_parallel(
     let Method::Mgrit { cycles } = cfg.method else {
         bail!("train_parallel requires Method::Mgrit");
     };
+    if micro_batches == 0 || cfg.batch % micro_batches != 0 {
+        bail!(
+            "batch {} does not divide into {micro_batches} micro-batches",
+            cfg.batch
+        );
+    }
     let hier = training_hierarchy(spec)?;
     let opts = MgritOptions::early_stopping(cycles);
     let mut rng = Rng::new(cfg.seed);
@@ -205,7 +351,7 @@ pub fn train_parallel(
             cfg.batch,
         )?;
         drv.set_granularity(granularity);
-        let out = drv.train_step(&y, &labels, &opts, cfg.lr)?;
+        let out = drv.train_step_micro(&y, &labels, &opts, cfg.lr, micro_batches)?;
         let grad_norm = out.grads.global_norm();
         *params = out.params;
         logs.push(StepLog { step, loss: out.loss, grad_norm });
@@ -453,7 +599,7 @@ mod tests {
         let logs_s = train(&spec, &mut p_serial, &ds, &cfg, mk_host(&spec)).unwrap();
         let mut p_par = NetParams::init(&spec, 76).unwrap();
         let logs_p =
-            train_parallel(&spec, &mut p_par, &ds, &cfg, 2, Granularity::PerStep).unwrap();
+            train_parallel(&spec, &mut p_par, &ds, &cfg, 2, Granularity::PerStep, 1).unwrap();
         assert_eq!(logs_s.len(), logs_p.len());
         for (a, b) in logs_s.iter().zip(&logs_p) {
             assert_eq!(a.loss, b.loss, "step {} loss differs", a.step);
@@ -464,6 +610,67 @@ mod tests {
         }
         assert!(p_serial.w_fc.data() == p_par.w_fc.data());
         assert!(p_serial.w_open.data() == p_par.w_open.data());
+    }
+
+    #[test]
+    fn reduce_micro_grads_matches_manual_mean() {
+        // m = 3 exercises the odd-carry branch of the plan
+        let mut rng = Rng::new(80);
+        let leaves: Vec<(Tensor, Tensor)> = (0..3)
+            .map(|_| {
+                (Tensor::randn(&[4], 1.0, &mut rng), Tensor::randn(&[2], 1.0, &mut rng))
+            })
+            .collect();
+        let (w, b) = reduce_micro_grads(&leaves).unwrap();
+        // reproduce the plan by hand: ((l0 + l1) + l2) / 3
+        let mut sum = crate::model::params::pair_sum(&leaves[0], &leaves[1]).unwrap();
+        sum = crate::model::params::pair_sum(&sum, &leaves[2]).unwrap();
+        crate::model::params::pair_scale(&mut sum, 1.0 / 3.0f32);
+        assert!(w.data() == sum.0.data() && b.data() == sum.1.data());
+        // single leaf passes through untouched
+        let (w1, _) = reduce_micro_grads(&leaves[..1]).unwrap();
+        assert!(w1.data() == leaves[0].0.data());
+        assert!(reduce_micro_grads(&[]).is_err());
+    }
+
+    #[test]
+    fn serial_micro_m1_degenerates_to_mg_step_serial() {
+        let spec = tiny_spec();
+        let params = NetParams::init(&spec, 81).unwrap();
+        let exec = HostSolver::new(spec.clone(), Arc::new(params)).unwrap();
+        let ds = SyntheticDigits::new(82).dataset(20);
+        let (y, labels) = ds.batch(&[0, 1, 2, 3]).unwrap();
+        let hier = training_hierarchy(&spec).unwrap();
+        let opts = MgritOptions::early_stopping(2);
+        let a = mg_step_serial(&spec, &exec, &y, &labels, &hier, &opts, 0.05).unwrap();
+        let b = mg_step_serial_micro(&spec, &exec, &y, &labels, &hier, &opts, 0.05, 1).unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(b.per_instance.len(), 1);
+        for (x, yv) in a.states.iter().zip(&b.per_instance[0].states) {
+            assert!(x.data() == yv.data());
+        }
+        for ((aw, ab), (bw, bb)) in a.grads.trunk.iter().zip(&b.grads.trunk) {
+            assert!(aw.data() == bw.data() && ab.data() == bb.data());
+        }
+        assert!(a.grads.w_open.data() == b.grads.w_open.data());
+        assert!(a.grads.w_fc.data() == b.grads.w_fc.data());
+        for ((aw, ab), (bw, bb)) in a.params.trunk.iter().zip(&b.params.trunk) {
+            assert!(aw.data() == bw.data() && ab.data() == bb.data());
+        }
+    }
+
+    #[test]
+    fn serial_micro_rejects_indivisible_batch() {
+        let spec = tiny_spec();
+        let params = NetParams::init(&spec, 83).unwrap();
+        let exec = HostSolver::new(spec.clone(), Arc::new(params)).unwrap();
+        let ds = SyntheticDigits::new(84).dataset(10);
+        let (y, labels) = ds.batch(&[0, 1, 2]).unwrap();
+        let hier = training_hierarchy(&spec).unwrap();
+        let opts = MgritOptions::early_stopping(2);
+        assert!(
+            mg_step_serial_micro(&spec, &exec, &y, &labels, &hier, &opts, 0.05, 2).is_err()
+        );
     }
 
     #[test]

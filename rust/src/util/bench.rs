@@ -30,6 +30,9 @@ pub struct Suite {
     measurements: Vec<Measurement>,
     /// extra experiment rows (figure tables) to embed in the JSON output
     tables: Vec<(String, Json)>,
+    /// where the machine-readable `BENCH_<suite>.json` record lands when
+    /// redirected (the full report always stays in `target/bench-results`)
+    record_dir: Option<std::path::PathBuf>,
 }
 
 impl Suite {
@@ -37,12 +40,30 @@ impl Suite {
         // `--quick` on the command line (or BENCH_QUICK=1) shortens runs for CI
         let quick = std::env::args().any(|a| a == "--quick")
             || std::env::var("BENCH_QUICK").is_ok();
+        Self::with_mode(name, quick)
+    }
+
+    /// An explicitly quick (short-iteration) suite — what `mgrit bench` uses
+    /// for the `cargo bench`-free perf snapshots, regardless of argv/env.
+    pub fn new_quick(name: &str) -> Self {
+        Self::with_mode(name, true)
+    }
+
+    fn with_mode(name: &str, quick: bool) -> Self {
         Self {
             name: name.to_string(),
             target_time_s: if quick { 0.2 } else { 1.0 },
             measurements: Vec::new(),
             tables: Vec::new(),
+            record_dir: None,
         }
+    }
+
+    /// Redirect the machine-readable `BENCH_<suite>.json` perf-trajectory
+    /// record (e.g. to the repo root, as `mgrit bench` does). The full
+    /// human-ish report stays under `target/bench-results` either way.
+    pub fn set_record_dir(&mut self, dir: impl Into<std::path::PathBuf>) {
+        self.record_dir = Some(dir.into());
     }
 
     /// Time `f`, choosing the iteration count so total time ≈ target_time.
@@ -143,7 +164,14 @@ impl Suite {
             ("benches", arr(rows)),
         ])
         .to_string();
-        let bench_path = dir.join(format!("BENCH_{}.json", self.name));
+        let record_dir = match &self.record_dir {
+            Some(d) => {
+                let _ = std::fs::create_dir_all(d);
+                d.as_path()
+            }
+            None => dir,
+        };
+        let bench_path = record_dir.join(format!("BENCH_{}.json", self.name));
         match std::fs::File::create(&bench_path) {
             Ok(mut f) => {
                 let _ = writeln!(f, "{bench_json}");
@@ -205,6 +233,27 @@ mod tests {
         assert!(m.mean_s > 0.0);
         assert!(m.iters >= 3);
         assert!(m.min_s <= m.median_s);
+    }
+
+    #[test]
+    fn finish_redirects_only_the_bench_record() {
+        let mut suite = Suite::new_quick("selftest_outdir");
+        suite.set_record_dir("target/bench-results-redirect");
+        suite.bench("noop", || {
+            black_box(2 + 2);
+        });
+        suite.finish();
+        let record =
+            std::path::Path::new("target/bench-results-redirect/BENCH_selftest_outdir.json");
+        assert!(record.exists(), "redirected perf record missing");
+        // the full report stays in the default dir — a redirect to the repo
+        // root must not strew <suite>.json files around
+        assert!(std::path::Path::new("target/bench-results/selftest_outdir.json").exists());
+        assert!(
+            !std::path::Path::new("target/bench-results-redirect/selftest_outdir.json")
+                .exists()
+        );
+        let _ = std::fs::remove_dir_all("target/bench-results-redirect");
     }
 
     #[test]

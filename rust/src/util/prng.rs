@@ -73,6 +73,24 @@ impl Rng {
     pub fn split(&mut self) -> Rng {
         Rng::new(self.next_u64())
     }
+
+    /// The deterministic stream of one `(seed, instance)` pair — the
+    /// instance-local RNG of the multi-instance runtime. The instance id
+    /// goes through an extra SplitMix64 round before being folded into the
+    /// seed, so `(seed, 0)`, `(seed, 1)`, … are unrelated streams and
+    /// `(seed, k)` never collides with `(seed + k, 0)`-style reseeding.
+    ///
+    /// Batch *selection* deliberately does NOT use this: the training loops
+    /// draw each step's batch from `Rng::new(seed)` regardless of the
+    /// micro-batch count, so M = 1 and M > 1 runs consume identical data
+    /// (DESIGN.md §5b). Instance streams are for instance-local noise only.
+    pub fn for_instance(seed: u64, instance: u64) -> Rng {
+        let mut z = instance.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        Rng::new(seed ^ z)
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +147,30 @@ mod tests {
             seen[r.below(10)] = true;
         }
         assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn instance_streams_deterministic_and_distinct() {
+        // same (seed, instance) → same stream
+        let mut a = Rng::for_instance(9, 3);
+        let mut b = Rng::for_instance(9, 3);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // distinct instances (and the base stream) are unrelated
+        let first = |mut r: Rng| r.next_u64();
+        let vals = [
+            first(Rng::new(9)),
+            first(Rng::for_instance(9, 0)),
+            first(Rng::for_instance(9, 1)),
+            first(Rng::for_instance(9, 2)),
+            first(Rng::for_instance(10, 0)),
+        ];
+        for i in 0..vals.len() {
+            for j in i + 1..vals.len() {
+                assert_ne!(vals[i], vals[j], "streams {i} and {j} collide");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Hybrid data×layer parallelism end-to-end: M micro-batch training
+//! instances pipelined through ONE composed task graph by the multi-instance
+//! executor must be BIT-IDENTICAL to the serial sum-over-micro-batches
+//! reference — per-instance states and adjoints, reduced gradients, loss,
+//! and post-SGD parameters — at every (devices × micro-batches × hierarchy)
+//! combination, with the live trace showing cross-instance pipelining (no
+//! inter-instance barrier) and same-seed reruns reproducing bitwise.
+
+use std::sync::Arc;
+
+use resnet_mgrit::coordinator::ParallelMgrit;
+use resnet_mgrit::data::SyntheticDigits;
+use resnet_mgrit::mgrit::{hierarchy::Hierarchy, Granularity, MgritOptions};
+use resnet_mgrit::model::{NetParams, NetSpec};
+use resnet_mgrit::solver::host::HostSolver;
+use resnet_mgrit::solver::SolverFactory;
+use resnet_mgrit::train;
+
+fn params_factory(
+    spec: Arc<NetSpec>,
+    params: Arc<NetParams>,
+) -> impl SolverFactory<Solver = HostSolver> {
+    move |_w: usize| HostSolver::new(spec.clone(), params.clone())
+}
+
+/// mnist geometry with a short trunk — quick but deep enough for a 2-level
+/// hierarchy with several blocks.
+fn tiny_spec() -> Arc<NetSpec> {
+    let mut s = NetSpec::mnist();
+    s.trunk.truncate(8);
+    s.t_final = 0.5;
+    Arc::new(s)
+}
+
+fn train_batch(spec: &NetSpec, batch: usize) -> (resnet_mgrit::Tensor, Vec<i32>) {
+    let ds = SyntheticDigits::new(201).dataset(batch.max(4) * 2);
+    let idx: Vec<usize> = (0..batch).collect();
+    let (y, labels) = ds.batch(&idx).unwrap();
+    let o = &spec.opening;
+    assert_eq!(y.dims(), &[batch, o.in_channels, o.in_h, o.in_w]);
+    (y, labels)
+}
+
+/// Assert one hybrid parallel step equals the serial micro reference bitwise.
+fn assert_hybrid_parity(
+    spec: &Arc<NetSpec>,
+    params: &Arc<NetParams>,
+    hier: &Hierarchy,
+    batch: usize,
+    n_dev: usize,
+    micro: usize,
+    gran: Granularity,
+) {
+    let (y, labels) = train_batch(spec, batch);
+    let lr = 0.05f32;
+    let opts = MgritOptions::early_stopping(2);
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let serial =
+        train::mg_step_serial_micro(spec, &exec, &y, &labels, hier, &opts, lr, micro).unwrap();
+
+    let mut drv = ParallelMgrit::new(
+        params_factory(spec.clone(), params.clone()),
+        spec.clone(),
+        hier.clone(),
+        n_dev,
+        batch,
+    )
+    .unwrap();
+    drv.set_granularity(gran);
+    let par = drv.train_step_micro(&y, &labels, &opts, lr, micro).unwrap();
+    let ctx = format!("n_dev={n_dev} micro={micro} gran={gran:?}");
+
+    assert_eq!(par.loss, serial.loss, "{ctx}: combined loss differs");
+    assert_eq!(par.per_instance.len(), micro);
+    for (k, (p, s)) in par.per_instance.iter().zip(&serial.per_instance).enumerate() {
+        assert_eq!(p.loss, s.loss, "{ctx}: instance {k} loss differs");
+        assert_eq!(p.states.len(), s.states.len());
+        for (j, (a, b)) in p.states.iter().zip(&s.states).enumerate() {
+            assert!(a.data() == b.data(), "{ctx}: instance {k} state {j} differs bitwise");
+        }
+        for (j, (a, b)) in p.lams.iter().zip(&s.lams).enumerate() {
+            assert!(a.data() == b.data(), "{ctx}: instance {k} adjoint {j} differs bitwise");
+        }
+    }
+    for (i, ((pw, pb), (sw, sb))) in
+        par.grads.trunk.iter().zip(&serial.grads.trunk).enumerate()
+    {
+        assert!(pw.data() == sw.data(), "{ctx}: reduced grad W {i} differs bitwise");
+        assert!(pb.data() == sb.data(), "{ctx}: reduced grad b {i} differs bitwise");
+    }
+    assert!(par.grads.w_open.data() == serial.grads.w_open.data(), "{ctx}: dW_open");
+    assert!(par.grads.b_open.data() == serial.grads.b_open.data(), "{ctx}: db_open");
+    assert!(par.grads.w_fc.data() == serial.grads.w_fc.data(), "{ctx}: dW_fc");
+    assert!(par.grads.b_fc.data() == serial.grads.b_fc.data(), "{ctx}: db_fc");
+    for (i, ((pw, pb), (sw, sb))) in
+        par.params.trunk.iter().zip(&serial.params.trunk).enumerate()
+    {
+        assert!(pw.data() == sw.data(), "{ctx}: post-SGD W {i} differs bitwise");
+        assert!(pb.data() == sb.data(), "{ctx}: post-SGD b {i} differs bitwise");
+    }
+    assert!(par.params.w_open.data() == serial.params.w_open.data(), "{ctx}: W_open");
+    assert!(par.params.b_open.data() == serial.params.b_open.data(), "{ctx}: b_open");
+    assert!(par.params.w_fc.data() == serial.params.w_fc.data(), "{ctx}: W_fc");
+    assert!(par.params.b_fc.data() == serial.params.b_fc.data(), "{ctx}: b_fc");
+}
+
+#[test]
+fn hybrid_step_bit_identical_on_two_level_hierarchy() {
+    // the tentpole contract: devices × micro-batches, 2-level hierarchy
+    let spec = tiny_spec();
+    let params = Arc::new(NetParams::init(&spec, 202).unwrap());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+    for n_dev in [1usize, 2, 4] {
+        for micro in [1usize, 2, 4] {
+            assert_hybrid_parity(
+                &spec,
+                &params,
+                &hier,
+                4,
+                n_dev,
+                micro,
+                Granularity::PerStep,
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_step_bit_identical_on_multilevel_hierarchy() {
+    // same contract on a ≥3-level hierarchy, per-block granularity included
+    let spec = tiny_spec();
+    let params = Arc::new(NetParams::init(&spec, 203).unwrap());
+    let hier = Hierarchy::build(spec.n_res(), spec.h(), 2, 3, 2).unwrap();
+    assert!(hier.n_levels() >= 3);
+    for (n_dev, micro, gran) in [
+        (1usize, 2usize, Granularity::PerStep),
+        (2, 2, Granularity::PerStep),
+        (2, 4, Granularity::PerStep),
+        (4, 2, Granularity::PerBlock),
+    ] {
+        assert_hybrid_parity(&spec, &params, &hier, 4, n_dev, micro, gran);
+    }
+}
+
+#[test]
+fn hybrid_step_rejects_indivisible_batch() {
+    let spec = tiny_spec();
+    let params = Arc::new(NetParams::init(&spec, 204).unwrap());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+    let drv = ParallelMgrit::new(
+        params_factory(spec.clone(), params.clone()),
+        spec.clone(),
+        hier,
+        2,
+        3,
+    )
+    .unwrap();
+    let (y, labels) = train_batch(&spec, 3);
+    let opts = MgritOptions::early_stopping(2);
+    assert!(drv.train_step_micro(&y, &labels, &opts, 0.05, 2).is_err());
+}
+
+#[test]
+fn pipelined_instances_overlap_on_the_live_trace() {
+    // the no-inter-instance-barrier property on a REAL run: some instance 1
+    // forward task must be in flight while an instance 0 adjoint task runs.
+    // A barriered runtime (finish instance 0, then start instance 1) can
+    // never produce this pair, because instance 1's forward would only start
+    // after instance 0's whole step — adjoint included — drained.
+    let spec = Arc::new(NetSpec::fig6_depth(32));
+    let params = Arc::new(NetParams::init(&spec, 205).unwrap());
+    let hier = Hierarchy::two_level(32, spec.h(), 4).unwrap();
+    let drv = ParallelMgrit::new(
+        params_factory(spec.clone(), params.clone()),
+        spec.clone(),
+        hier,
+        2,
+        2,
+    )
+    .unwrap();
+    let mut rng = resnet_mgrit::util::prng::Rng::new(206);
+    let o = &spec.opening;
+    let y = resnet_mgrit::Tensor::randn(&[2, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels = [2i32, 7];
+    let opts = MgritOptions::early_stopping(2);
+    let out = drv.train_step_micro(&y, &labels, &opts, 0.05, 2).unwrap();
+    let ev = &out.metrics.events;
+    assert!(ev.iter().any(|e| e.instance == 1), "no instance 1 events recorded");
+    let evs: Vec<(usize, &str, f64, f64)> =
+        ev.iter().map(|e| (e.instance, e.label, e.t_start, e.t_end)).collect();
+    assert!(
+        resnet_mgrit::mgrit::taskgraph::events_show_pipeline_overlap(&evs),
+        "instance 1 forward work never overlapped instance 0 adjoint/gradient work"
+    );
+}
+
+#[test]
+fn hybrid_training_loop_is_bit_reproducible() {
+    // same seed + same M ⇒ bit-identical loss/grad trajectories and final
+    // parameters (batch selection is M-independent by construction; see
+    // Rng::for_instance for the documented per-instance stream derivation)
+    let spec = tiny_spec();
+    let ds = SyntheticDigits::new(207).dataset(40);
+    let cfg = train::TrainConfig {
+        steps: 3,
+        batch: 4,
+        lr: 0.05,
+        method: train::Method::Mgrit { cycles: 2 },
+        seed: 11,
+    };
+    let run = |m: usize| -> (Vec<train::StepLog>, NetParams) {
+        let mut p = NetParams::init(&spec, 208).unwrap();
+        let logs =
+            train::train_parallel(&spec, &mut p, &ds, &cfg, 2, Granularity::PerStep, m).unwrap();
+        (logs, p)
+    };
+    let (logs_a, p_a) = run(2);
+    let (logs_b, p_b) = run(2);
+    for (a, b) in logs_a.iter().zip(&logs_b) {
+        assert_eq!(a.loss, b.loss, "step {} loss not reproducible", a.step);
+        assert_eq!(a.grad_norm, b.grad_norm, "step {} grad norm not reproducible", a.step);
+    }
+    for ((w, b), (w2, b2)) in p_a.trunk.iter().zip(&p_b.trunk) {
+        assert!(w.data() == w2.data() && b.data() == b2.data());
+    }
+    // and the M = 1 loop over the same seed consumes the same batches: its
+    // first-step forward pass starts from the same data, so the M = 2 loss
+    // differs only by the micro-batch mean — not by data order
+    let (logs_m1, _) = run(1);
+    assert_eq!(logs_m1.len(), logs_a.len());
+}
