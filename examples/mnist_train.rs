@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §7): train the `mnist` preset through the
+//! End-to-end driver (DESIGN.md §8): train the `mnist` preset through the
 //! full three-layer stack and reproduce the paper's accuracy-parity claim —
 //! MG layer-parallel training with 2 early-stopped cycles matches serial
 //! backprop Top-1 error, epoch for epoch.

@@ -16,17 +16,29 @@ use crate::Result;
 /// Everything a run needs; sub-structs are derived views.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Network preset name (`micro`, `mnist`, `fig6`, …).
     pub preset: String,
+    /// Minibatch size.
     pub batch: usize,
+    /// MG cycles per solve/step.
     pub cycles: usize,
+    /// Worker devices (streams).
     pub devices: usize,
+    /// Training steps.
     pub steps: usize,
+    /// SGD learning rate.
     pub lr: f64,
+    /// PRNG seed (init + data).
     pub seed: u64,
+    /// MGRIT convergence tolerance.
     pub tol: f64,
+    /// Maximum MGRIT hierarchy levels.
     pub max_levels: usize,
+    /// Relaxation sweep pattern.
     pub relax: RelaxKind,
+    /// MNIST idx directory (synthetic fallback if absent).
     pub data_dir: String,
+    /// AOT artifact directory for the pjrt backend.
     pub artifacts_dir: String,
     /// Execution backend: "host" (pure rust) or "pjrt" (AOT artifacts).
     pub backend: String,
@@ -126,6 +138,7 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Reject configurations no run mode accepts.
     pub fn validate(&self) -> Result<()> {
         if self.batch == 0 || self.devices == 0 || self.cycles == 0 {
             bail!("batch/devices/cycles must be positive");

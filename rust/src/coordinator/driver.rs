@@ -64,6 +64,7 @@ impl RunMetrics {
 /// `train::mg_step_serial` on the same hierarchy.
 #[derive(Debug)]
 pub struct TrainStepOutput {
+    /// Minibatch loss.
     pub loss: f64,
     /// Full gradient set (trunk from the graph's `GradAccum` tasks; opening
     /// and head computed host-side exactly as in the serial step).
@@ -74,6 +75,7 @@ pub struct TrainStepOutput {
     pub states: Vec<Tensor>,
     /// Adjoints λ^0..λ^N.
     pub lams: Vec<Tensor>,
+    /// Execution metrics (phases, traffic, events).
     pub metrics: RunMetrics,
 }
 
@@ -103,6 +105,7 @@ pub struct MicroStepOutput {
     pub params: NetParams,
     /// Per-micro-batch trajectories, in instance order.
     pub per_instance: Vec<InstanceStep>,
+    /// Execution metrics (phases, traffic, events).
     pub metrics: RunMetrics,
 }
 
@@ -164,14 +167,17 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         })
     }
 
+    /// The layer-block → device partition in use.
     pub fn partition(&self) -> &Partition {
         &self.partition
     }
 
+    /// The worker pool (its clock is the trace clock).
     pub fn pool(&self) -> &StreamPool<F> {
         &self.pool
     }
 
+    /// The MGRIT hierarchy this driver solves on.
     pub fn hierarchy(&self) -> &Hierarchy {
         &self.hier
     }
@@ -183,6 +189,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         self.granularity = g;
     }
 
+    /// The configured F-relaxation granularity.
     pub fn granularity(&self) -> Granularity {
         self.granularity
     }

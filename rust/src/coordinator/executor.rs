@@ -49,9 +49,10 @@
 //! `tests/hybrid_integration.rs`.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-use std::sync::mpsc::{channel, Sender};
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail};
 
@@ -72,6 +73,7 @@ use crate::Result;
 /// to make are gone from the scheduler hot path.
 #[derive(Debug)]
 pub struct SysState {
+    /// Per level, the point states `u[level][j]`.
     pub u: Vec<Vec<Arc<Tensor>>>,
     g: Vec<Option<Vec<Arc<Tensor>>>>,
     r: Vec<Vec<Option<Arc<Tensor>>>>,
@@ -202,7 +204,9 @@ pub struct InstanceOutputs {
     /// [`MultiTrainingOutputs::trunk_grads`] and this field is left empty
     /// (no per-step full-gradient copy on the default path).
     pub trunk_grads: Vec<(Tensor, Tensor)>,
+    /// Head weight gradient for this micro-batch.
     pub dw_fc: Tensor,
+    /// Head bias gradient for this micro-batch.
     pub db_fc: Tensor,
 }
 
@@ -212,6 +216,7 @@ pub struct MultiTrainingOutputs {
     /// Mean loss over instances — identical to the instance loss when M = 1
     /// and to the serial reference's `Σ lossₖ / M` otherwise.
     pub loss: f64,
+    /// Per-instance outputs, in instance order.
     pub instances: Vec<InstanceOutputs>,
     /// Reduced per-layer trunk gradients: the lone instance's gradients when
     /// M = 1, the `ReduceGrad` roots (micro-batch mean) otherwise.
@@ -272,6 +277,43 @@ impl MultiExecState {
                 new_trunk: TrunkGradSlots::new(n_layers),
             }),
         })
+    }
+
+    /// State with no instances — the starting point of a dynamic
+    /// ([`ExecSession`]) run, where forward-only instances are admitted one
+    /// request at a time via [`MultiExecState::push_instance`].
+    pub fn empty() -> MultiExecState {
+        MultiExecState { insts: Vec::new(), shared: None }
+    }
+
+    /// Append a fresh forward-only instance (primal system seeded with `u0`,
+    /// no training bookkeeping) and return its instance index.
+    pub fn push_instance(&mut self, hier: &Hierarchy, u0: &Tensor) -> usize {
+        self.insts.push(ExecState::new(hier, u0, None));
+        self.insts.len() - 1
+    }
+
+    /// The final fine-level state u^N of instance `k`, cloned out of its
+    /// slot. Errors if the instance was already released.
+    pub fn final_state(&self, k: usize) -> Result<Tensor> {
+        let inst = self.inst(k)?;
+        inst.pri
+            .u
+            .first()
+            .and_then(|fine| fine.last())
+            .map(|u| (**u).clone())
+            .ok_or_else(|| anyhow!("instance {k} has been released"))
+    }
+
+    /// Drop instance `k`'s state slots (the activation memory of a completed
+    /// request), leaving a tombstone so instance indices of still-running
+    /// requests stay valid. Reading a released instance errors.
+    pub fn release_instance(&mut self, k: usize) -> Result<()> {
+        let inst = self.inst_mut(k)?;
+        inst.pri = SysState { u: Vec::new(), g: Vec::new(), r: Vec::new(), inj: Vec::new() };
+        inst.adj = None;
+        inst.train = None;
+        Ok(())
     }
 
     /// Number of graph instances this state serves.
@@ -394,7 +436,16 @@ pub enum TaskOut {
     /// partial sum, or updated parameters.
     Pair(Tensor, Tensor),
     /// Head forward + VJP output.
-    Head { loss: f64, du: Tensor, dw_fc: Tensor, db_fc: Tensor },
+    Head {
+        /// Micro-batch loss.
+        loss: f64,
+        /// ∂loss/∂u^N (seeds the adjoint system).
+        du: Tensor,
+        /// Head weight gradient.
+        dw_fc: Tensor,
+        /// Head bias gradient.
+        db_fc: Tensor,
+    },
 }
 
 /// One retired kernel task on the live executor, tagged with its graph
@@ -402,11 +453,17 @@ pub enum TaskOut {
 /// (pool-clock timestamps, same clock as the stream trace).
 #[derive(Debug, Clone)]
 pub struct ExecEvent {
+    /// Graph task id.
     pub task: usize,
+    /// Graph instance the task belonged to.
     pub instance: usize,
+    /// Device (worker) that executed it.
     pub device: usize,
+    /// Phase label.
     pub label: &'static str,
+    /// Start timestamp (pool clock, seconds).
     pub t_start: f64,
+    /// End timestamp (pool clock, seconds).
     pub t_end: f64,
 }
 
@@ -436,6 +493,58 @@ impl ExecReport {
     fn add_phase(&mut self, label: &'static str, secs: f64) {
         merge_phases(&mut self.phase_s, &[(label, secs)]);
     }
+}
+
+/// Account one ready Comm task's inline retirement: a transfer feeding a
+/// `ReduceGrad` carries a gradient (parameter-shaped — the graph bytes are
+/// exact); everything else is a layer-state crossing priced by the driver.
+/// Shared by [`execute`] and [`ExecSession`] so the two schedulers can never
+/// drift in their traffic ledgers.
+fn account_comm(
+    report: &mut ExecReport,
+    graph: &TaskGraph,
+    dependents: &[Vec<usize>],
+    id: usize,
+) {
+    report.comm_events += 1;
+    let feeds_reduce = dependents[id]
+        .iter()
+        .any(|&d| matches!(graph.tasks[d].op, Some(TaskOp::ReduceGrad { .. })));
+    if feeds_reduce {
+        if let TaskKind::Comm { bytes, .. } = &graph.tasks[id].kind {
+            report.comm_grad_bytes += *bytes;
+        }
+    } else {
+        report.comm_state_events += 1;
+    }
+}
+
+/// Account one completed kernel: Φ-evaluation count per op, the per-label
+/// phase ledger, and the instance-tagged event record. Shared by
+/// [`execute`] and [`ExecSession`].
+#[allow(clippy::too_many_arguments)]
+fn account_kernel(
+    report: &mut ExecReport,
+    op: TaskOp,
+    task: usize,
+    instance: usize,
+    device: usize,
+    label: &'static str,
+    t_start: f64,
+    t_end: f64,
+) {
+    match op {
+        TaskOp::PointUpdate { .. } | TaskOp::Residual { .. } | TaskOp::Restrict { .. } => {
+            report.phi_evals += 1;
+        }
+        TaskOp::BlockRun { j_first, j_last, .. } => {
+            report.phi_evals += j_last - j_first + 1;
+        }
+        _ => {}
+    }
+    report.kernels += 1;
+    report.add_phase(label, t_end - t_start);
+    report.events.push(ExecEvent { task, instance, device, label, t_start, t_end });
 }
 
 /// Execute `graph` on `pool`, mutating `st` in place. `st` must carry at
@@ -483,19 +592,8 @@ where
         while let Some(Reverse(id)) = ready.pop() {
             let task = &graph.tasks[id];
             match &task.kind {
-                TaskKind::Comm { bytes, .. } => {
-                    report.comm_events += 1;
-                    // a transfer feeding a ReduceGrad carries a gradient
-                    // (parameter-shaped, graph bytes exact); everything else
-                    // is a layer-state crossing priced by the driver
-                    let feeds_reduce = dependents[id].iter().any(|&d| {
-                        matches!(graph.tasks[d].op, Some(TaskOp::ReduceGrad { .. }))
-                    });
-                    if feeds_reduce {
-                        report.comm_grad_bytes += *bytes;
-                    } else {
-                        report.comm_state_events += 1;
-                    }
+                TaskKind::Comm { .. } => {
+                    account_comm(&mut report, graph, &dependents, id);
                     retired += 1;
                     for &d in &dependents[id] {
                         indeg[d] -= 1;
@@ -528,25 +626,16 @@ where
             .op
             .ok_or_else(|| anyhow!("completed task {} has no payload", done.id))?;
         apply_output(hier, st, task.instance, op, out)?;
-        match op {
-            TaskOp::PointUpdate { .. } | TaskOp::Residual { .. } | TaskOp::Restrict { .. } => {
-                report.phi_evals += 1;
-            }
-            TaskOp::BlockRun { j_first, j_last, .. } => {
-                report.phi_evals += j_last - j_first + 1;
-            }
-            _ => {}
-        }
-        report.kernels += 1;
-        report.add_phase(done.label, done.t_end - done.t_start);
-        report.events.push(ExecEvent {
-            task: done.id,
-            instance: task.instance,
-            device: task.device,
-            label: done.label,
-            t_start: done.t_start,
-            t_end: done.t_end,
-        });
+        account_kernel(
+            &mut report,
+            op,
+            done.id,
+            task.instance,
+            task.device,
+            done.label,
+            done.t_start,
+            done.t_end,
+        );
         retired += 1;
         for &d in &dependents[done.id] {
             indeg[d] -= 1;
@@ -556,6 +645,285 @@ where
         }
     }
     Ok(report)
+}
+
+/// An **incremental** executor session: the dynamic-admission counterpart of
+/// [`execute`], built for serving workloads where the instance set is not
+/// known up front.
+///
+/// Where [`execute`] runs one fixed graph to completion, a session holds a
+/// *growing* union graph plus its scheduler state (in-degrees, ready heap,
+/// in-flight jobs) across calls:
+///
+/// - [`ExecSession::admit`] splices a fresh single-instance graph (e.g. a
+///   forward-only `mgrit::taskgraph::mg_forward_with` request) into the union
+///   frontier *while earlier instances are still in flight* — continuous
+///   batching, no generation barrier;
+/// - [`ExecSession::wait`] blocks (optionally bounded) for one kernel
+///   completion, writes it back, and dispatches newly-ready work;
+/// - [`ExecSession::poll_finished`] yields instances whose every task has
+///   retired, in completion order, so the caller can harvest the output
+///   ([`ExecSession::final_state`]) and free the slots
+///   ([`ExecSession::release_instance`]) — making instance lifetime fully
+///   dynamic.
+///
+/// Admitted graphs must be self-contained (no cross-instance dependencies):
+/// ordering *between* requests is the scheduler's job, expressed by when the
+/// caller admits, never by graph edges. The dispatch/retire semantics are
+/// shared with [`execute`] (same `dispatch_kernel` / `apply_output`), so a
+/// session run is bit-identical to running each instance's graph alone.
+pub struct ExecSession<'a, F: SolverFactory>
+where
+    F::Solver: NetExecutor,
+{
+    pool: &'a StreamPool<F>,
+    hier: &'a Hierarchy,
+    st: MultiExecState,
+    graph: TaskGraph,
+    indeg: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+    ready: BinaryHeap<Reverse<usize>>,
+    in_flight: usize,
+    /// Unretired task count per instance; 0 ⇒ the instance is finished.
+    remaining: Vec<usize>,
+    /// Per-instance running max of its kernel completions' `t_end`
+    /// (initialized to the admission clock): once the instance finishes,
+    /// this IS the time its last task retired on a worker — the honest
+    /// per-request completion timestamp, free of both the harvest-side work
+    /// the caller does after polling and of cross-worker completion
+    /// reordering on the channel.
+    last_end: Vec<f64>,
+    finished: VecDeque<usize>,
+    tx: Sender<JobDone<TaskOut>>,
+    rx: Receiver<JobDone<TaskOut>>,
+    report: ExecReport,
+}
+
+impl<'a, F: SolverFactory> ExecSession<'a, F>
+where
+    F::Solver: NetExecutor,
+{
+    /// An idle session over `pool`: no instances, no tasks.
+    pub fn new(pool: &'a StreamPool<F>, hier: &'a Hierarchy) -> ExecSession<'a, F> {
+        let (tx, rx) = channel::<JobDone<TaskOut>>();
+        ExecSession {
+            pool,
+            hier,
+            st: MultiExecState::empty(),
+            graph: TaskGraph::default(),
+            indeg: Vec::new(),
+            dependents: Vec::new(),
+            ready: BinaryHeap::new(),
+            in_flight: 0,
+            remaining: Vec::new(),
+            last_end: Vec::new(),
+            finished: VecDeque::new(),
+            tx,
+            rx,
+            report: ExecReport::default(),
+        }
+    }
+
+    /// Admit one request: a fresh instance seeded with `u0`, running the
+    /// self-contained executable graph `sub`. Its ready tasks dispatch
+    /// immediately, interleaving with whatever is already in flight. Returns
+    /// the instance index.
+    pub fn admit(&mut self, sub: TaskGraph, u0: &Tensor) -> Result<usize> {
+        anyhow::ensure!(
+            sub.tasks.iter().all(|t| t.op.is_some()),
+            "admitted graph must be fully executable (op on every task)"
+        );
+        sub.validate()?;
+        let inst = self.st.push_instance(self.hier, u0);
+        let n_sub = sub.tasks.len();
+        let off = self.graph.append_instance(sub, inst, 0);
+        self.indeg.resize(off + n_sub, 0);
+        self.dependents.resize(off + n_sub, Vec::new());
+        self.remaining.push(n_sub);
+        self.last_end.push(self.pool.now());
+        for id in off..off + n_sub {
+            // the deps move into indeg/dependents; the session never reads
+            // them again, so retired requests hold no dependency heap memory
+            let deps = std::mem::take(&mut self.graph.tasks[id].deps);
+            self.indeg[id] = deps.len();
+            for d in deps {
+                self.dependents[d].push(id);
+            }
+        }
+        if n_sub == 0 {
+            self.finished.push_back(inst);
+            return Ok(inst);
+        }
+        for id in off..off + n_sub {
+            if self.indeg[id] == 0 {
+                self.ready.push(Reverse(id));
+            }
+        }
+        self.pump()?;
+        Ok(inst)
+    }
+
+    /// Dispatch everything currently ready; Comm tasks retire inline (local
+    /// execution only accounts the transfer — same rule as [`execute`],
+    /// through the shared `account_comm`).
+    fn pump(&mut self) -> Result<()> {
+        while let Some(Reverse(id)) = self.ready.pop() {
+            let is_comm = matches!(self.graph.tasks[id].kind, TaskKind::Comm { .. });
+            if is_comm {
+                account_comm(&mut self.report, &self.graph, &self.dependents, id);
+                self.retire(id);
+            } else {
+                let label = match &self.graph.tasks[id].kind {
+                    TaskKind::Kernel { label, .. } => *label,
+                    TaskKind::Comm { .. } => unreachable!("checked above"),
+                };
+                dispatch_kernel(
+                    self.pool,
+                    self.hier,
+                    &mut self.st,
+                    &self.graph.tasks[id],
+                    label,
+                    &self.tx,
+                )?;
+                self.in_flight += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Retire one task: per-instance completion bookkeeping plus dependent
+    /// release. Admitted graphs are self-contained, so a task's dependent
+    /// set is final by the time it retires. Dependency lists (the dominant
+    /// per-task heap allocation) were already moved out at admission, and a
+    /// released instance's tensors are freed by the caller — but the
+    /// fixed-size `Task` records, per-instance bookkeeping entries, and the
+    /// per-kernel `ExecReport::events` trace still grow with every request
+    /// ever admitted, like any tracing executor. A session is sized for one
+    /// serving drain; an indefinitely-lived server should start a fresh
+    /// session per drain (what `serving::ServingRuntime::run` does).
+    fn retire(&mut self, id: usize) {
+        let inst = self.graph.tasks[id].instance;
+        self.remaining[inst] -= 1;
+        if self.remaining[inst] == 0 {
+            self.finished.push_back(inst);
+        }
+        let deps = std::mem::take(&mut self.dependents[id]);
+        for d in deps {
+            self.indeg[d] -= 1;
+            if self.indeg[d] == 0 {
+                self.ready.push(Reverse(d));
+            }
+        }
+    }
+
+    /// Block for one kernel completion (bounded by `timeout` if given),
+    /// write its output back, and dispatch newly-ready work. `Ok(true)` if a
+    /// completion was processed; `Ok(false)` on timeout or when nothing is
+    /// in flight. A non-empty frontier with nothing in flight is a stall
+    /// error, not a hang.
+    pub fn wait(&mut self, timeout: Option<Duration>) -> Result<bool> {
+        if self.in_flight == 0 {
+            let outstanding: usize = self.remaining.iter().sum();
+            if outstanding > 0 {
+                bail!("session stalled with {outstanding} tasks unretired (cyclic dependencies?)");
+            }
+            return Ok(false);
+        }
+        let done = match timeout {
+            None => self
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("stream pool shut down with tasks in flight"))?,
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(done) => done,
+                Err(RecvTimeoutError::Timeout) => return Ok(false),
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("stream pool shut down with tasks in flight")
+                }
+            },
+        };
+        self.in_flight -= 1;
+        let out = done
+            .result
+            .map_err(|e| anyhow!("task {} ({}): {e:#}", done.id, done.label))?;
+        let (instance, device, op) = {
+            let task = &self.graph.tasks[done.id];
+            let op = task
+                .op
+                .ok_or_else(|| anyhow!("completed task {} has no payload", done.id))?;
+            (task.instance, task.device, op)
+        };
+        apply_output(self.hier, &mut self.st, instance, op, out)?;
+        account_kernel(
+            &mut self.report,
+            op,
+            done.id,
+            instance,
+            device,
+            done.label,
+            done.t_start,
+            done.t_end,
+        );
+        self.last_end[instance] = self.last_end[instance].max(done.t_end);
+        self.retire(done.id);
+        self.pump()?;
+        Ok(true)
+    }
+
+    /// Next instance whose every task has retired (completion order), if any.
+    pub fn poll_finished(&mut self) -> Option<usize> {
+        self.finished.pop_front()
+    }
+
+    /// Pool-clock time a finished instance's last task retired on a worker
+    /// (the max `t_end` over its kernel completions) — the honest completion
+    /// timestamp: harvest-side work the caller performs after polling does
+    /// not inflate it. `None` while the instance is in flight.
+    pub fn finished_at(&self, inst: usize) -> Option<f64> {
+        if self.remaining.get(inst).copied() == Some(0) {
+            self.last_end.get(inst).copied()
+        } else {
+            None
+        }
+    }
+
+    /// Kernel tasks currently executing on workers.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Instances admitted so far (including finished and released ones).
+    pub fn n_instances(&self) -> usize {
+        self.st.n_instances()
+    }
+
+    /// The final fine-level state u^N of a **finished** instance. Calling
+    /// this on an instance still in flight is an error, not a silent read
+    /// of a partially-computed state.
+    pub fn final_state(&self, inst: usize) -> Result<Tensor> {
+        anyhow::ensure!(
+            self.remaining.get(inst).copied() == Some(0),
+            "instance {inst} has not finished (poll_finished first)"
+        );
+        self.st.final_state(inst)
+    }
+
+    /// Free a harvested instance's state slots (indices of other instances
+    /// stay valid).
+    pub fn release_instance(&mut self, inst: usize) -> Result<()> {
+        self.st.release_instance(inst)
+    }
+
+    /// The cumulative execution report (instance-tagged kernel events across
+    /// every admitted request — the record the overlap assertions read).
+    pub fn report(&self) -> &ExecReport {
+        &self.report
+    }
+
+    /// Consume the session, returning the cumulative report.
+    pub fn into_report(self) -> ExecReport {
+        self.report
+    }
 }
 
 /// Forward fine state a Ψ application at (level, j−1 → j) linearizes around
@@ -1131,6 +1499,99 @@ mod tests {
             want.axpy(-0.05, dw).unwrap();
             assert!(w_new.data() == want.data(), "param update is not θ − lr·ĝ");
         }
+    }
+
+    #[test]
+    fn session_matches_static_execution_bitwise() {
+        // two requests streamed through one ExecSession produce the same
+        // final states as running each one's graph through the fixed
+        // executor — the dynamic-admission path adds scheduling, not math
+        let (spec, hier, partition, pool, u0) = setup();
+        let mut rng = crate::util::prng::Rng::new(33);
+        let u1 = Tensor::randn(&[1, 2, 6, 6], 0.8, &mut rng);
+        let g = || {
+            taskgraph::mg_forward_with(
+                &spec, &hier, &partition, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+            )
+        };
+        let mut want = Vec::new();
+        for u in [&u0, &u1] {
+            let mut st = MultiExecState::initial(&hier, u);
+            execute(&pool, &hier, &g(), &mut st).unwrap();
+            want.push(st.into_fine_states());
+        }
+        let mut session = ExecSession::new(&pool, &hier);
+        let i0 = session.admit(g(), &u0).unwrap();
+        let i1 = session.admit(g(), &u1).unwrap();
+        assert_eq!((i0, i1), (0, 1));
+        while session.wait(None).unwrap() {}
+        let mut done: Vec<usize> = Vec::new();
+        while let Some(k) = session.poll_finished() {
+            done.push(k);
+        }
+        done.sort_unstable();
+        assert_eq!(done, vec![0, 1]);
+        for (k, w) in want.iter().enumerate() {
+            let got = session.final_state(k).unwrap();
+            assert!(
+                got.data() == w.last().unwrap().data(),
+                "instance {k} final state differs from static execution"
+            );
+            // completion timestamps: stamped, and consistent with the
+            // instance's own kernel events
+            let t = session.finished_at(k).expect("finished instance must be stamped");
+            let last_end = session
+                .report()
+                .events
+                .iter()
+                .filter(|e| e.instance == k)
+                .map(|e| e.t_end)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(t, last_end, "instance {k} finish time != last kernel retirement");
+        }
+        // events carry both instances
+        let insts: std::collections::BTreeSet<usize> =
+            session.report().events.iter().map(|e| e.instance).collect();
+        assert_eq!(insts.len(), 2);
+    }
+
+    #[test]
+    fn session_admits_while_in_flight_and_releases_instances() {
+        let (spec, hier, partition, pool, u0) = setup();
+        let g = || {
+            taskgraph::mg_forward_with(
+                &spec, &hier, &partition, 1, 1, RelaxKind::FCF, Granularity::PerStep,
+            )
+        };
+        let mut session = ExecSession::new(&pool, &hier);
+        session.admit(g(), &u0).unwrap();
+        // pull one completion, then admit the second request mid-flight —
+        // the continuous-batching move the fixed executor cannot make
+        assert!(session.wait(None).unwrap());
+        session.admit(g(), &u0).unwrap();
+        // an in-flight instance is neither readable nor stamped
+        assert!(session.final_state(1).is_err(), "in-flight instance must not be readable");
+        assert!(session.finished_at(1).is_none());
+        while session.wait(None).unwrap() {}
+        let finished: Vec<usize> = std::iter::from_fn(|| session.poll_finished()).collect();
+        assert_eq!(finished.len(), 2);
+        // harvest + release instance 0; instance 1 stays readable
+        let a = session.final_state(0).unwrap();
+        session.release_instance(0).unwrap();
+        assert!(session.final_state(0).is_err(), "released instance still readable");
+        let b = session.final_state(1).unwrap();
+        // same input + same graph ⇒ same output, bitwise
+        assert!(a.data() == b.data());
+        // a wait on an idle session reports no work rather than hanging
+        assert!(!session.wait(Some(std::time::Duration::from_millis(1))).unwrap());
+    }
+
+    #[test]
+    fn session_rejects_non_executable_graphs() {
+        let (spec, hier, _partition, pool, u0) = setup();
+        let mut session = ExecSession::new(&pool, &hier);
+        let g = taskgraph::serial_forward(&spec, 1, 1); // no payloads
+        assert!(session.admit(g, &u0).is_err());
     }
 
     #[test]

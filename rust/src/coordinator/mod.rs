@@ -18,12 +18,40 @@
 //!   device's worker, and retires it on completion, releasing dependents
 //!   immediately. One scheduler drains the union frontier of N concurrent
 //!   graph instances — no per-phase and no inter-instance barriers.
+//!   [`executor::ExecSession`] is its incremental form: instances are
+//!   admitted and retired dynamically (the serving runtime's substrate).
 //! - [`driver::ParallelMgrit`] — builds the executable V-cycle graph (the
 //!   same graph the simulator scores), runs it per MG iteration, keeps the
 //!   boundary-traffic ledger, and exposes the kernel-event trace (the
 //!   real-run analogue of the paper's nvprof Fig 5). `train_step_micro`
 //!   pipelines M micro-batches through one composed training graph (hybrid
 //!   data×layer parallelism).
+//!
+//! A complete parallel forward solve over two worker streams:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use resnet_mgrit::coordinator::ParallelMgrit;
+//! use resnet_mgrit::mgrit::{hierarchy::Hierarchy, MgritOptions};
+//! use resnet_mgrit::model::{NetParams, NetSpec};
+//! use resnet_mgrit::solver::host::HostSolver;
+//! use resnet_mgrit::tensor::Tensor;
+//! use resnet_mgrit::util::prng::Rng;
+//!
+//! let spec = Arc::new(NetSpec::micro());
+//! let params = Arc::new(NetParams::init(&spec, 1).unwrap());
+//! let (s2, p2) = (spec.clone(), params.clone());
+//! let factory = move |_worker: usize| HostSolver::new(s2.clone(), p2.clone());
+//! let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+//! let driver = ParallelMgrit::new(factory, spec.clone(), hier, 2, 1).unwrap();
+//!
+//! let mut rng = Rng::new(2);
+//! let u0 = Tensor::randn(&[1, 2, 6, 6], 0.5, &mut rng);
+//! let (states, stats, metrics) = driver.solve(&u0, &MgritOptions::early_stopping(2)).unwrap();
+//! assert_eq!(states.len(), spec.n_res() + 1);
+//! assert_eq!(metrics.cycles, 2);
+//! assert_eq!(stats.residual_norms.len(), 2);
+//! ```
 
 pub mod driver;
 pub mod executor;
@@ -32,7 +60,8 @@ pub mod streams;
 
 pub use driver::{InstanceStep, MicroStepOutput, ParallelMgrit, RunMetrics, TrainStepOutput};
 pub use executor::{
-    ExecEvent, ExecReport, InstanceOutputs, MultiExecState, MultiTrainingOutputs, TaskOut,
+    ExecEvent, ExecReport, ExecSession, InstanceOutputs, MultiExecState, MultiTrainingOutputs,
+    TaskOut,
 };
 pub use partition::{InstanceGroups, Partition};
 pub use streams::{JobDone, StreamPool, TraceEvent};

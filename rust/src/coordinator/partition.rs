@@ -38,6 +38,7 @@ impl Partition {
         self.bounds.len() - 1
     }
 
+    /// Total layer blocks covered.
     pub fn n_blocks(&self) -> usize {
         *self.bounds.last().unwrap()
     }
@@ -87,6 +88,7 @@ pub struct InstanceGroups {
 }
 
 impl InstanceGroups {
+    /// `n_groups` groups of `devices_per_group` devices each.
     pub fn new(n_groups: usize, devices_per_group: usize) -> Result<InstanceGroups> {
         if n_groups == 0 {
             bail!("need at least one device group");
@@ -97,10 +99,12 @@ impl InstanceGroups {
         Ok(InstanceGroups { n_groups, devices_per_group })
     }
 
+    /// Number of device groups.
     pub fn n_groups(&self) -> usize {
         self.n_groups
     }
 
+    /// Devices inside each group.
     pub fn devices_per_group(&self) -> usize {
         self.devices_per_group
     }

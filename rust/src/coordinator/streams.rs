@@ -4,6 +4,7 @@
 //! single-threaded) and records begin/end timestamps per job so a real run
 //! can be rendered as a Fig 5-style concurrency timeline.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -16,10 +17,13 @@ use crate::Result;
 /// One recorded job execution (for the concurrency timeline).
 #[derive(Debug, Clone)]
 pub struct TraceEvent {
+    /// Worker (stream) id that ran the job.
     pub worker: usize,
+    /// Job label.
     pub label: &'static str,
     /// Seconds since pool creation.
     pub t_start: f64,
+    /// End timestamp (same clock).
     pub t_end: f64,
 }
 
@@ -28,11 +32,15 @@ pub struct TraceEvent {
 /// primitive the dependency-driven executor retires tasks on.
 #[derive(Debug)]
 pub struct JobDone<T> {
+    /// Caller-assigned job id (the executor uses the task id).
     pub id: usize,
+    /// Job label.
     pub label: &'static str,
     /// Seconds since pool creation (same clock as the trace).
     pub t_start: f64,
+    /// End timestamp (same clock).
     pub t_end: f64,
+    /// What the job returned (or the error/panic it raised).
     pub result: Result<T>,
 }
 
@@ -48,6 +56,11 @@ pub struct StreamPool<F: SolverFactory> {
     senders: Vec<Sender<Msg<F::Solver>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     trace: Arc<Mutex<Vec<TraceEvent>>>,
+    /// Whether workers record [`TraceEvent`]s (on by default). Consumers
+    /// with their own event ledger — the serving runtime keeps
+    /// instance-tagged `ExecEvent`s — turn it off to skip the per-job mutex
+    /// append on the completion path.
+    trace_on: Arc<AtomicBool>,
     epoch: Instant,
 }
 
@@ -57,6 +70,7 @@ impl<F: SolverFactory> StreamPool<F> {
     pub fn new(n: usize, factory: F) -> Result<StreamPool<F>> {
         let epoch = Instant::now();
         let trace = Arc::new(Mutex::new(Vec::new()));
+        let trace_on = Arc::new(AtomicBool::new(true));
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         // collect construction errors through a channel so a failing factory
@@ -66,6 +80,7 @@ impl<F: SolverFactory> StreamPool<F> {
             let (tx, rx): (Sender<Msg<F::Solver>>, Receiver<Msg<F::Solver>>) = channel();
             let f = factory.clone();
             let tr = trace.clone();
+            let tr_on = trace_on.clone();
             let rtx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("stream-{w}"))
@@ -86,12 +101,14 @@ impl<F: SolverFactory> StreamPool<F> {
                                 let t0 = epoch.elapsed().as_secs_f64();
                                 job(&solver);
                                 let t1 = epoch.elapsed().as_secs_f64();
-                                tr.lock().unwrap().push(TraceEvent {
-                                    worker: w,
-                                    label,
-                                    t_start: t0,
-                                    t_end: t1,
-                                });
+                                if tr_on.load(Ordering::Relaxed) {
+                                    tr.lock().unwrap().push(TraceEvent {
+                                        worker: w,
+                                        label,
+                                        t_start: t0,
+                                        t_end: t1,
+                                    });
+                                }
                             }
                             Msg::Shutdown => break,
                         }
@@ -107,9 +124,17 @@ impl<F: SolverFactory> StreamPool<F> {
                 return Err(anyhow!("solver construction failed: {e}"));
             }
         }
-        Ok(StreamPool { senders, handles, trace, epoch })
+        Ok(StreamPool { senders, handles, trace, trace_on, epoch })
     }
 
+    /// Enable or disable [`TraceEvent`] recording (enabled by default).
+    /// Disabling skips the per-job mutex append on every worker's
+    /// completion path — for consumers that keep their own event ledger.
+    pub fn set_trace_enabled(&self, on: bool) {
+        self.trace_on.store(on, Ordering::Relaxed);
+    }
+
+    /// Number of worker threads (streams) in the pool.
     pub fn n_workers(&self) -> usize {
         self.senders.len()
     }
@@ -166,6 +191,7 @@ impl<F: SolverFactory> StreamPool<F> {
         self.trace.lock().unwrap().clone()
     }
 
+    /// Discard the trace recorded so far.
     pub fn clear_trace(&self) {
         self.trace.lock().unwrap().clear();
     }
@@ -263,6 +289,34 @@ mod tests {
             }
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn trace_can_be_disabled_and_reenabled() {
+        let pool = StreamPool::new(1, host_factory()).unwrap();
+        pool.set_trace_enabled(false);
+        let (tx, rx) = channel();
+        pool.submit(0, "silent", move |_s| {
+            tx.send(()).unwrap();
+        })
+        .unwrap();
+        rx.iter().next().unwrap();
+        // the push is skipped entirely, not deferred
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(pool.trace().is_empty());
+        pool.set_trace_enabled(true);
+        let (tx, rx) = channel();
+        pool.submit(0, "traced", move |_s| {
+            tx.send(()).unwrap();
+        })
+        .unwrap();
+        rx.iter().next().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(1);
+        while pool.trace().is_empty() && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.trace().len(), 1);
+        assert_eq!(pool.trace()[0].label, "traced");
     }
 
     #[test]

@@ -18,15 +18,19 @@ use crate::Result;
 /// A labelled image set: images `[N, 1, 28, 28]` in [0, 1], labels 0..10.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// One `[1, 1, 28, 28]` tensor per sample, values in [0, 1].
     pub images: Vec<Tensor>,
+    /// Class labels, aligned with `images`.
     pub labels: Vec<i32>,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.images.len()
     }
 
+    /// Whether the set holds no samples.
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }
@@ -134,10 +138,12 @@ pub struct SyntheticDigits {
 }
 
 impl SyntheticDigits {
+    /// A generator with the default noise level.
     pub fn new(seed: u64) -> SyntheticDigits {
         SyntheticDigits { rng: Rng::new(seed), noise: 0.15 }
     }
 
+    /// A generator with an explicit pixel-noise amplitude.
     pub fn with_noise(seed: u64, noise: f32) -> SyntheticDigits {
         SyntheticDigits { rng: Rng::new(seed), noise }
     }

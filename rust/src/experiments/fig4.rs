@@ -35,7 +35,9 @@ pub fn convergence_spec(n_res: usize) -> NetSpec {
 
 /// One convergence history.
 pub struct History {
+    /// Network depth (residual layers).
     pub depth: usize,
+    /// ‖R_h‖ after each cycle.
     pub norms: Vec<f64>,
 }
 

@@ -11,18 +11,23 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod perf;
+pub mod serve;
 
 use crate::util::json::Json;
 
 /// A labelled table of rows (column names + row values).
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table heading.
     pub title: String,
+    /// Column names.
     pub columns: Vec<String>,
+    /// Row values, aligned with `columns`.
     pub rows: Vec<Vec<Json>>,
 }
 
 impl Table {
+    /// An empty table with the given columns.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -31,6 +36,7 @@ impl Table {
         }
     }
 
+    /// Append one row (arity-checked).
     pub fn row(&mut self, values: Vec<Json>) {
         assert_eq!(values.len(), self.columns.len(), "row arity mismatch");
         self.rows.push(values);

@@ -27,12 +27,15 @@
 //! | [`solver`] | `BlockSolver` implementations: host, PJRT, analytic-cost |
 //! | [`runtime`] | PJRT client wrapper + artifact manifest (host fallback when absent) |
 //! | [`coordinator`] | stream pool, device partitions, dependency-driven DAG executor + driver |
+//! | [`serving`] | continuous-batching inference serving over the multi-instance runtime |
 //! | [`sim`] | discrete-event multi-GPU cluster simulator (runs the same DAGs) |
 //! | [`perfmodel`] | V100 + 25 GbE analytic cost model |
 //! | [`data`] | MNIST idx loader + synthetic digit generator |
 //! | [`train`] | SGD training loops (serial, model-partitioned, MG) |
 //! | [`experiments`] | one module per paper figure (benches + CLI call these) |
 //! | [`util`] | JSON, PRNG, CLI args, stats, bench harness, proptest-lite |
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;
@@ -42,6 +45,7 @@ pub mod mgrit;
 pub mod model;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod solver;
 pub mod tensor;

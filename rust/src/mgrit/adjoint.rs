@@ -28,6 +28,7 @@ pub struct AdjointSystem<'a, S: BlockSolver> {
 }
 
 impl<'a, S: BlockSolver> AdjointSystem<'a, S> {
+    /// An adjoint system linearized around the forward states u^0..u^N.
     pub fn new(solver: &'a S, states: &'a [Tensor]) -> Result<Self> {
         if states.len() < 2 {
             bail!("adjoint system needs at least 2 forward states");

@@ -30,6 +30,7 @@ pub struct MgritOptions {
     pub max_cycles: usize,
     /// Convergence tolerance on ‖R_h‖_{L2} (Fig 4 runs to 1e-9).
     pub tol: f64,
+    /// Relaxation sweep pattern per cycle.
     pub relax: RelaxKind,
     /// Maximum levels in the hierarchy (2 = the paper's Algorithm 1).
     pub max_levels: usize,
@@ -56,6 +57,7 @@ impl MgritOptions {
 pub struct CycleStats {
     /// ‖R_h‖ after each cycle.
     pub residual_norms: Vec<f64>,
+    /// Whether the tolerance was reached before the cycle cap.
     pub converged: bool,
     /// Number of Φ applications performed (the solve's work measure).
     pub phi_evals: usize,
@@ -66,7 +68,9 @@ pub struct CycleStats {
 /// points except the fixed input u[0]).
 #[derive(Debug, Clone)]
 pub struct LevelState {
+    /// Point states `u[0..n_points]`.
     pub u: Vec<Tensor>,
+    /// FAS right-hand side (None on the finest level, where g ≡ 0).
     pub g: Option<Vec<Tensor>>,
 }
 

@@ -69,7 +69,9 @@ impl Block {
 /// The full multilevel hierarchy.
 #[derive(Debug, Clone)]
 pub struct Hierarchy {
+    /// Coarsening factor c between consecutive levels.
     pub coarsen: usize,
+    /// The levels, finest first.
     pub levels: Vec<Level>,
 }
 
@@ -118,10 +120,12 @@ impl Hierarchy {
         Self::build(n_layers, h_fine, coarsen, 2, 2)
     }
 
+    /// Number of levels.
     pub fn n_levels(&self) -> usize {
         self.levels.len()
     }
 
+    /// The finest level.
     pub fn fine(&self) -> &Level {
         &self.levels[0]
     }

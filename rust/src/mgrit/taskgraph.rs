@@ -40,6 +40,29 @@
 //!   through one graph (per-layer `ReduceGrad` join, single `ParamUpdate`)
 //! - [`serial_forward`] / [`serial_training`] — single-stream sequential
 //!   baseline (distributed = the paper's "Model Partitioned" / PM method)
+//! - [`mg_forward_with`] / [`mg_serve`] — forward-only inference instances
+//!   and their composed serving schedules (continuous batching vs
+//!   batch-barrier admission; the live scheduler admits the same
+//!   single-instance graphs dynamically)
+//!
+//! Building and inspecting a schedule needs no solver or pool — graphs are
+//! pure data:
+//!
+//! ```
+//! use resnet_mgrit::coordinator::Partition;
+//! use resnet_mgrit::mgrit::{hierarchy::Hierarchy, taskgraph, RelaxKind};
+//! use resnet_mgrit::model::NetSpec;
+//!
+//! let spec = NetSpec::fig6_depth(16);
+//! let hier = Hierarchy::two_level(16, spec.h(), 4).unwrap();
+//! let part = Partition::contiguous(hier.fine().blocks(4).len(), 2).unwrap();
+//! let g = taskgraph::mg_vcycle(&spec, &hier, &part, 1, RelaxKind::FCF);
+//! g.validate().unwrap();
+//! assert!(g.n_tasks() > 0 && g.total_flops() > 0.0);
+//! // every task is executable — the live executor and the simulator
+//! // consume this identical graph
+//! assert!(g.tasks.iter().all(|t| t.op.is_some()));
+//! ```
 
 use crate::coordinator::{InstanceGroups, Partition};
 use crate::model::cost::{head_cost, layer_bwd_cost, layer_cost, state_bytes};
@@ -53,16 +76,32 @@ use super::hierarchy::Hierarchy;
 #[derive(Debug, Clone, PartialEq)]
 pub enum TaskKind {
     /// GPU kernel work: `flops` of the given class on `device`.
-    Kernel { label: &'static str, class: KernelClass, flops: f64 },
+    Kernel {
+        /// Phase label (`f_relax`, `adj_c_relax`, `param_grad`, …).
+        label: &'static str,
+        /// Efficiency class the perfmodel prices this kernel at.
+        class: KernelClass,
+        /// Work in floating-point operations.
+        flops: f64,
+    },
     /// A point-to-point activation transfer.
-    Comm { src: usize, dst: usize, bytes: f64 },
+    Comm {
+        /// Source device.
+        src: usize,
+        /// Destination device.
+        dst: usize,
+        /// Transfer size (bytes).
+        bytes: f64,
+    },
 }
 
 /// Kernel efficiency class (convolutions and GEMMs achieve very different
 /// fractions of peak; the perfmodel assigns rates per class).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelClass {
+    /// Convolution kernels (register-pressure-serialized per the paper).
     Conv,
+    /// Dense GEMM kernels.
     Gemm,
     /// Elementwise / reduction epilogues.
     Light,
@@ -73,7 +112,9 @@ pub enum KernelClass {
 /// μ^m := λ^{N−m} so the same FAS machinery applies).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sys {
+    /// The forward propagation Φ.
     Primal,
+    /// The adjoint propagation Ψ.
     Adjoint,
 }
 
@@ -85,7 +126,9 @@ pub enum Sys {
 /// artifacts) at the cost of coarser scheduling.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Granularity {
+    /// One task per F-point update.
     PerStep,
+    /// One fused task per block F-span.
     PerBlock,
 }
 
@@ -110,20 +153,57 @@ pub enum TaskOp {
     /// `u[level][j] = Φ_{θ(j−1)}(u[level][j−1]) + g[level][j]` — the
     /// elementary update of F-relaxation, C-relaxation, and the coarse
     /// forward substitution (Ψ instead of Φ for the adjoint system).
-    PointUpdate { sys: Sys, level: usize, j: usize },
+    PointUpdate {
+        /// Target system.
+        sys: Sys,
+        /// Hierarchy level.
+        level: usize,
+        /// Point index on that level.
+        j: usize,
+    },
     /// The fused F-span update of one block: points `j_first..=j_last` from
     /// point `j_first − 1` in one task (level 0 only, where the FAS
     /// right-hand side vanishes and the solver's `block_fprop` applies).
-    BlockRun { sys: Sys, level: usize, j_first: usize, j_last: usize },
+    BlockRun {
+        /// Target system.
+        sys: Sys,
+        /// Hierarchy level (always 0).
+        level: usize,
+        /// First point of the fused span.
+        j_first: usize,
+        /// Last point of the fused span (inclusive).
+        j_last: usize,
+    },
     /// `r[level][j] = Φ_{θ(j−1)}(u[level][j−1]) + g[level][j] − u[level][j]`.
-    Residual { sys: Sys, level: usize, j: usize },
+    Residual {
+        /// Target system.
+        sys: Sys,
+        /// Hierarchy level.
+        level: usize,
+        /// Point index on that level.
+        j: usize,
+    },
     /// FAS restriction to `level+1`:
     /// `g[level+1][j] = r[level][j·c] + ū_H[j] − Φ_H(ū_H[j−1])` with
     /// `ū_H[j] = u[level][j·c]`; also injects `u[level+1][j] = ū_H[j]` and
     /// snapshots it for the later correction.
-    Restrict { sys: Sys, level: usize, j: usize },
+    Restrict {
+        /// Target system.
+        sys: Sys,
+        /// Fine level being restricted (writes into `level + 1`).
+        level: usize,
+        /// Coarse point index.
+        j: usize,
+    },
     /// FAS correction: `u[level][j·c] += u[level+1][j] − ū_H[j]`.
-    Correct { sys: Sys, level: usize, j: usize },
+    Correct {
+        /// Target system.
+        sys: Sys,
+        /// Fine level being corrected.
+        level: usize,
+        /// Coarse point index.
+        j: usize,
+    },
     /// Head forward + VJP at the last fine state: produces the loss, the
     /// head parameter gradients, and ∂loss/∂u^N — which seeds *every* slot
     /// of the adjoint system (the constant-in-depth initial guess). Each
@@ -131,7 +211,10 @@ pub enum TaskOp {
     Head,
     /// Layer-local parameter gradient `gⁿ = h·(∂F/∂θⁿ)ᵀ λ^{n+1}` — fans out
     /// the moment its λ slot retires; embarrassingly parallel. Per instance.
-    GradAccum { layer: usize },
+    GradAccum {
+        /// Trunk layer index.
+        layer: usize,
+    },
     /// One node of a layer's micro-batch gradient reduction tree:
     /// `dst = lhs + rhs` over (weight, bias) pairs; the `root` node
     /// additionally scales by 1/M (the micro-batch mean). Leaves read
@@ -139,11 +222,25 @@ pub enum TaskOp {
     /// the only tasks with cross-instance dependencies, so there is never an
     /// inter-instance barrier. Executed with the same `model::params`
     /// primitives as the serial reference → bit-identical reduction.
-    ReduceGrad { layer: usize, lhs: GradSrc, rhs: GradSrc, node: usize, root: bool },
+    ReduceGrad {
+        /// Trunk layer index.
+        layer: usize,
+        /// Left operand.
+        lhs: GradSrc,
+        /// Right operand.
+        rhs: GradSrc,
+        /// Output tree-node id.
+        node: usize,
+        /// Whether this node is the tree root (applies the 1/M mean).
+        root: bool,
+    },
     /// Per-layer SGD update `θⁿ ← θⁿ − lr·ĝⁿ` into the fresh parameter slot,
     /// where ĝ is the instance gradient (M = 1) or the `ReduceGrad` root
     /// (M > 1). Exactly one per layer per composed graph.
-    ParamUpdate { layer: usize },
+    ParamUpdate {
+        /// Trunk layer index.
+        layer: usize,
+    },
     /// Boundary transfer (accounting only in local execution).
     Xfer,
 }
@@ -152,7 +249,9 @@ pub enum TaskOp {
 /// output, or an earlier internal node of the same layer's tree.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GradSrc {
+    /// Instance k's `GradAccum` output.
     Inst(usize),
+    /// An earlier internal tree node.
     Node(usize),
 }
 
@@ -162,12 +261,15 @@ pub enum GradSrc {
 /// the final `ParamUpdate`s and their transfers — carry instance 0).
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Graph-global topological index.
     pub id: usize,
     /// Graph instance (micro-batch) this task's payload operates on.
     pub instance: usize,
     /// Executing device (for Comm: the destination device).
     pub device: usize,
+    /// What the task occupies while it runs (cost annotation).
     pub kind: TaskKind,
+    /// Ids of the tasks that must retire before this one dispatches.
     pub deps: Vec<usize>,
     /// Executable payload; `None` for cost-model-only tasks (baseline
     /// schedules the live executor does not run).
@@ -177,6 +279,7 @@ pub struct Task {
 /// A schedule DAG plus bookkeeping to attach dependencies incrementally.
 #[derive(Debug, Default)]
 pub struct TaskGraph {
+    /// The tasks, in id (topological) order.
     pub tasks: Vec<Task>,
 }
 
@@ -196,7 +299,12 @@ impl TaskGraph {
     /// Splice a single-instance sub-graph into this graph as instance
     /// `instance`, offsetting task ids, dependency ids and device ids (the
     /// instance's device-group offset). Returns the id offset.
-    fn append_instance(&mut self, sub: TaskGraph, instance: usize, dev_offset: usize) -> usize {
+    pub(crate) fn append_instance(
+        &mut self,
+        sub: TaskGraph,
+        instance: usize,
+        dev_offset: usize,
+    ) -> usize {
         let off = self.tasks.len();
         for mut t in sub.tasks {
             t.id += off;
@@ -243,10 +351,12 @@ impl TaskGraph {
         }
     }
 
+    /// Number of tasks in the graph.
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Total kernel work (FLOPs) across all tasks.
     pub fn total_flops(&self) -> f64 {
         self.tasks
             .iter()
@@ -257,6 +367,7 @@ impl TaskGraph {
             .sum()
     }
 
+    /// Total transfer volume (bytes) across all Comm tasks.
     pub fn total_comm_bytes(&self) -> f64 {
         self.tasks
             .iter()
@@ -835,9 +946,13 @@ impl<'a> MgBuilder<'a> {
 /// the root additionally scaled by 1/M.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReduceStep {
+    /// Left operand.
     pub lhs: GradSrc,
+    /// Right operand.
     pub rhs: GradSrc,
+    /// Output tree-node id of this step.
     pub node: usize,
+    /// Whether this step is the tree root (applies the 1/M mean).
     pub root: bool,
 }
 
@@ -945,11 +1060,124 @@ pub fn mg_forward(
     batch: usize,
     cycles: usize,
 ) -> TaskGraph {
+    mg_forward_with(spec, hier, partition, batch, cycles, RelaxKind::FCF, Granularity::PerStep)
+}
+
+/// As [`mg_forward`] with explicit relaxation pattern and F-relaxation
+/// granularity — the forward-only (fig6a-style) instance graph the serving
+/// runtime admits per inference request: `cycles` early-stopped primal
+/// V-cycles, no head, no adjoint, no parameter work.
+#[allow(clippy::too_many_arguments)]
+pub fn mg_forward_with(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+) -> TaskGraph {
     let mut b = MgBuilder::new(spec, hier, partition, batch);
+    b.gran = gran;
     for _ in 0..cycles {
-        b.vcycle(0, RelaxKind::FCF);
+        b.vcycle(0, relax);
     }
     b.g
+}
+
+/// How a composed serving schedule admits request instances (the virtual-time
+/// model of the live scheduler's admission loop; see `serving`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Continuous batching with `window` instances in flight: request k's
+    /// root tasks depend on request k−window's sink tasks — a new instance is
+    /// injected the moment the oldest in-flight one retires, with no
+    /// generation barrier. `window ≥ n_requests` means fully concurrent.
+    Continuous {
+        /// Maximum instances in flight.
+        window: usize,
+    },
+    /// Batch-barrier admission (the baseline serving loop): requests are
+    /// grouped into waves of `wave` instances, and every instance of wave
+    /// w+1 waits for *all* sinks of wave w — the classic batched-inference
+    /// generation barrier.
+    BatchBarrier {
+        /// Instances per wave.
+        wave: usize,
+    },
+}
+
+/// `n_requests` independent forward-only inference instances composed into
+/// one schedule, joined only by *admission edges* per `policy` — the
+/// deterministic virtual-time model of the serving loop (the live runtime
+/// admits instances dynamically through `coordinator::ExecSession` instead).
+///
+/// Each instance is a full [`mg_forward_with`] graph over its own state slots
+/// (instance-tagged tasks, all sharing one device set). Under
+/// [`Admission::Continuous`] the only cross-instance edges are
+/// `roots(k) ← sinks(k − window)`, so request k+1's V-cycles overlap request
+/// k's tail; under [`Admission::BatchBarrier`] every instance of a wave waits
+/// for the whole previous wave.
+#[allow(clippy::too_many_arguments)]
+pub fn mg_serve(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+    n_requests: usize,
+    policy: Admission,
+) -> Result<TaskGraph> {
+    anyhow::ensure!(n_requests >= 1, "need at least one request");
+    match policy {
+        Admission::Continuous { window } => {
+            anyhow::ensure!(window >= 1, "continuous admission needs window ≥ 1")
+        }
+        Admission::BatchBarrier { wave } => {
+            anyhow::ensure!(wave >= 1, "batch-barrier admission needs wave ≥ 1")
+        }
+    }
+    let mut g = TaskGraph::default();
+    // sink task ids (no dependents within their instance) per instance —
+    // "instance complete" in the admission model means all sinks retired
+    let mut sinks: Vec<Vec<usize>> = Vec::with_capacity(n_requests);
+    for k in 0..n_requests {
+        let sub = mg_forward_with(spec, hier, partition, batch, cycles, relax, gran);
+        let n_sub = sub.tasks.len();
+        let off = g.append_instance(sub, k, 0);
+        // admission edges onto this instance's root tasks
+        let root_deps: Vec<usize> = match policy {
+            Admission::Continuous { window } if k >= window => sinks[k - window].clone(),
+            Admission::BatchBarrier { wave } if k >= wave => {
+                let prev_wave = (k / wave - 1) * wave;
+                (prev_wave..prev_wave + wave)
+                    .flat_map(|i| sinks[i].iter().copied())
+                    .collect()
+            }
+            _ => Vec::new(),
+        };
+        if !root_deps.is_empty() {
+            for t in &mut g.tasks[off..off + n_sub] {
+                if t.deps.is_empty() {
+                    t.deps = root_deps.clone();
+                }
+            }
+        }
+        // sinks: tasks of this instance no later task of the instance reads
+        // (admission deps point before `off` and are skipped)
+        let mut has_dependent = vec![false; n_sub];
+        for t in &g.tasks[off..off + n_sub] {
+            for &d in &t.deps {
+                if d >= off {
+                    has_dependent[d - off] = true;
+                }
+            }
+        }
+        sinks.push((0..n_sub).filter(|&i| !has_dependent[i]).map(|i| off + i).collect());
+    }
+    Ok(g)
 }
 
 /// The whole training step as **one** executable task graph, with no
@@ -1654,6 +1882,120 @@ mod tests {
         g.validate().unwrap();
         assert!(g.n_tasks() > 10_000);
         assert!(g.total_comm_bytes() > 0.0);
+    }
+
+    #[test]
+    fn serve_graph_composes_instances_with_admission_edges() {
+        let (spec, hier, part) = setup(32, 2);
+        for n in [1usize, 3, 8] {
+            let g = mg_serve(
+                &spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep, n,
+                Admission::Continuous { window: 2 },
+            )
+            .unwrap();
+            g.validate().unwrap();
+            // n forward-only instances: no training ops anywhere
+            assert!(g.tasks.iter().all(|t| t.op.is_some()));
+            assert!(!g.tasks.iter().any(|t| matches!(
+                t.op,
+                Some(TaskOp::Head)
+                    | Some(TaskOp::GradAccum { .. })
+                    | Some(TaskOp::ReduceGrad { .. })
+                    | Some(TaskOp::ParamUpdate { .. })
+            )));
+            let max_inst = g.tasks.iter().map(|t| t.instance).max().unwrap();
+            assert_eq!(max_inst, n - 1);
+            let single = mg_forward(&spec, &hier, &part, 1, 2);
+            assert_eq!(g.n_tasks(), n * single.n_tasks());
+        }
+    }
+
+    #[test]
+    fn serve_continuous_window_bounds_cross_instance_edges() {
+        let (spec, hier, part) = setup(32, 2);
+        let window = 2usize;
+        let g = mg_serve(
+            &spec, &hier, &part, 1, 1, RelaxKind::F, Granularity::PerStep, 5,
+            Admission::Continuous { window },
+        )
+        .unwrap();
+        // a cross-instance dep only ever points `window` instances back
+        let mut crossing = 0usize;
+        for t in &g.tasks {
+            for &d in &t.deps {
+                let di = g.tasks[d].instance;
+                if di != t.instance {
+                    assert_eq!(t.instance, di + window, "task {} crosses {} → {}", t.id, t.instance, di);
+                    crossing += 1;
+                }
+            }
+        }
+        assert!(crossing > 0, "window admission produced no cross-instance edges");
+        // a window covering every request leaves the instances independent
+        let free = mg_serve(
+            &spec, &hier, &part, 1, 1, RelaxKind::F, Granularity::PerStep, 5,
+            Admission::Continuous { window: 5 },
+        )
+        .unwrap();
+        assert!(free
+            .tasks
+            .iter()
+            .all(|t| t.deps.iter().all(|&d| free.tasks[d].instance == t.instance)));
+    }
+
+    #[test]
+    fn serve_barrier_waves_depend_on_whole_previous_wave() {
+        let (spec, hier, part) = setup(32, 2);
+        let g = mg_serve(
+            &spec, &hier, &part, 1, 1, RelaxKind::F, Granularity::PerStep, 4,
+            Admission::BatchBarrier { wave: 2 },
+        )
+        .unwrap();
+        g.validate().unwrap();
+        // wave 1 (instances 2, 3): each root reaches sinks of BOTH instance 0
+        // and instance 1
+        for inst in [2usize, 3] {
+            let roots: Vec<&Task> = g
+                .tasks
+                .iter()
+                .filter(|t| t.instance == inst && t.deps.iter().any(|&d| g.tasks[d].instance != inst))
+                .collect();
+            assert!(!roots.is_empty(), "instance {inst} has no admission edges");
+            for r in &roots {
+                let srcs: std::collections::BTreeSet<usize> = r
+                    .deps
+                    .iter()
+                    .map(|&d| g.tasks[d].instance)
+                    .filter(|&i| i != inst)
+                    .collect();
+                assert_eq!(srcs, [0usize, 1].into_iter().collect(), "task {}", r.id);
+            }
+        }
+        // continuous admission is a strict subset of the barrier constraints:
+        // fewer cross-instance edges
+        let c = mg_serve(
+            &spec, &hier, &part, 1, 1, RelaxKind::F, Granularity::PerStep, 4,
+            Admission::Continuous { window: 2 },
+        )
+        .unwrap();
+        let n_cross = |g: &TaskGraph| {
+            g.tasks
+                .iter()
+                .flat_map(|t| t.deps.iter().map(move |&d| (t.instance, g.tasks[d].instance)))
+                .filter(|(a, b)| a != b)
+                .count()
+        };
+        assert!(n_cross(&c) < n_cross(&g), "{} vs {}", n_cross(&c), n_cross(&g));
+    }
+
+    #[test]
+    fn forward_with_matches_forward_default() {
+        let (spec, hier, part) = setup(64, 4);
+        let a = mg_forward(&spec, &hier, &part, 1, 2);
+        let b = mg_forward_with(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
+        assert_eq!(a.n_tasks(), b.n_tasks());
+        assert!((a.total_flops() - b.total_flops()).abs() < 1e-9);
+        assert_eq!(a.n_comms(), b.n_comms());
     }
 
     #[test]

@@ -7,6 +7,7 @@ use super::spec::{LayerKind, NetSpec};
 /// Cost of evaluating one trunk layer's residual step at a given batch size.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerCost {
+    /// Floating-point operations (one multiply-add = 2 FLOPs).
     pub flops: f64,
     /// Bytes of parameters streamed (weights + bias).
     pub param_bytes: f64,

@@ -11,16 +11,20 @@ use crate::util::prng::Rng;
 /// All learnable parameters of one network.
 #[derive(Debug, Clone)]
 pub struct NetParams {
+    /// Opening conv weights.
     pub w_open: Tensor,
+    /// Opening bias.
     pub b_open: Tensor,
     /// (weight, bias) per trunk layer; weight layout depends on LayerKind.
     pub trunk: Vec<(Tensor, Tensor)>,
+    /// Head (classifier) weights.
     pub w_fc: Tensor,
+    /// Head bias.
     pub b_fc: Tensor,
 }
 
 /// Refuse to allocate parameter sets above this size (the fig7 preset is
-/// cost-model-only; see DESIGN.md §6).
+/// cost-model-only; see DESIGN.md §7).
 const MAX_PARAM_ELEMS: u64 = 200_000_000;
 
 impl NetParams {
@@ -111,18 +115,22 @@ pub struct TrunkGradSlots {
 }
 
 impl TrunkGradSlots {
+    /// `n_layers` empty slots.
     pub fn new(n_layers: usize) -> TrunkGradSlots {
         TrunkGradSlots { slots: vec![None; n_layers] }
     }
 
+    /// Number of slots.
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// Whether there are no slots.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
 
+    /// Slots already written.
     pub fn n_filled(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -142,6 +150,7 @@ impl TrunkGradSlots {
         Ok(())
     }
 
+    /// Layer `i`'s (dW, db), if filled.
     pub fn get(&self, i: usize) -> Option<&(Tensor, Tensor)> {
         self.slots.get(i).and_then(|s| s.as_ref())
     }
@@ -185,10 +194,15 @@ pub fn pair_scale(p: &mut (Tensor, Tensor), s: f32) {
 /// Gradients, same structure as the parameters.
 #[derive(Debug, Clone)]
 pub struct NetGrads {
+    /// Opening weight gradient.
     pub w_open: Tensor,
+    /// Opening bias gradient.
     pub b_open: Tensor,
+    /// Per-layer trunk (dW, db).
     pub trunk: Vec<(Tensor, Tensor)>,
+    /// Head weight gradient.
     pub w_fc: Tensor,
+    /// Head bias gradient.
     pub b_fc: Tensor,
 }
 

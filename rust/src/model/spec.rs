@@ -34,11 +34,17 @@ pub enum LayerKind {
 /// The non-residual input layer (may change channel count and spatial size).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct OpeningSpec {
+    /// Input image channels.
     pub in_channels: usize,
+    /// Trunk channel count produced.
     pub out_channels: usize,
+    /// Conv kernel size.
     pub kernel: usize,
+    /// Spatial padding.
     pub pad: usize,
+    /// Input image height.
     pub in_h: usize,
+    /// Input image width.
     pub in_w: usize,
 }
 
@@ -51,6 +57,7 @@ impl OpeningSpec {
         )
     }
 
+    /// Parameters of the opening layer (weights + bias).
     pub fn param_count(&self) -> u64 {
         (self.out_channels * self.in_channels * self.kernel * self.kernel + self.out_channels)
             as u64
@@ -61,9 +68,13 @@ impl OpeningSpec {
 /// ODE horizon and MGRIT coarsening factor.
 #[derive(Debug, Clone)]
 pub struct NetSpec {
+    /// Preset name.
     pub name: String,
+    /// The non-residual input layer.
     pub opening: OpeningSpec,
+    /// The residual trunk, one entry per layer.
     pub trunk: Vec<LayerKind>,
+    /// Classifier output classes.
     pub n_classes: usize,
     /// ODE horizon T; the fine-level step is h = T / n_res.
     pub t_final: f64,
@@ -72,6 +83,7 @@ pub struct NetSpec {
 }
 
 impl NetSpec {
+    /// Number of residual trunk layers.
     pub fn n_res(&self) -> usize {
         self.trunk.len()
     }
@@ -86,6 +98,7 @@ impl NetSpec {
         self.opening.out_hw()
     }
 
+    /// Trunk channel count.
     pub fn channels(&self) -> usize {
         self.opening.out_channels
     }

@@ -97,8 +97,11 @@ impl NetworkModel {
 /// Full cluster description for the simulator.
 #[derive(Debug, Clone)]
 pub struct ClusterModel {
+    /// Devices in the cluster.
     pub n_devices: usize,
+    /// Per-device compute model.
     pub device: DeviceModel,
+    /// Interconnect model.
     pub net: NetworkModel,
 }
 

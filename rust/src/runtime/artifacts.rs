@@ -14,12 +14,16 @@ use crate::Result;
 /// Identifies one AOT entry: (preset, entry name, batch size).
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct EntryKey {
+    /// Preset name.
     pub preset: String,
+    /// Entry-point name (e.g. `block_fprop`).
     pub entry: String,
+    /// Batch size the artifact was lowered for.
     pub batch: usize,
 }
 
 impl EntryKey {
+    /// Key from its three components.
     pub fn new(preset: &str, entry: &str, batch: usize) -> EntryKey {
         EntryKey { preset: preset.into(), entry: entry.into(), batch }
     }
@@ -28,40 +32,60 @@ impl EntryKey {
 /// Tensor signature recorded in the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSig {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. `f32`).
     pub dtype: String,
 }
 
 /// One exported artifact.
 #[derive(Debug, Clone)]
 pub struct Entry {
+    /// The entry's identity.
     pub key: EntryKey,
+    /// HLO text file, relative to the manifest directory.
     pub file: PathBuf,
+    /// Input signatures, in call order.
     pub inputs: Vec<TensorSig>,
+    /// Output signatures, in return order.
     pub outputs: Vec<TensorSig>,
 }
 
 /// Preset hyperparameters as exported by python (mirrors `model.Preset`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PresetInfo {
+    /// Trunk channels.
     pub channels: usize,
+    /// Conv kernel size.
     pub kernel: usize,
+    /// Spatial padding.
     pub pad: usize,
+    /// Activation height.
     pub height: usize,
+    /// Activation width.
     pub width: usize,
+    /// Residual trunk depth.
     pub n_res: usize,
+    /// Layers per block (the coarsening factor).
     pub block: usize,
+    /// Time step h.
     pub h: f64,
+    /// Classifier classes.
     pub n_classes: usize,
+    /// Flattened head input size.
     pub fc_in: usize,
+    /// Batch sizes artifacts were exported for.
     pub batches: Vec<usize>,
 }
 
 /// Parsed manifest.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Preset hyperparameters by name.
     pub presets: BTreeMap<String, PresetInfo>,
+    /// Exported artifacts by key.
     pub entries: BTreeMap<EntryKey, Entry>,
 }
 
@@ -148,6 +172,7 @@ impl Manifest {
         Ok(Manifest { dir, presets, entries })
     }
 
+    /// Look up one artifact entry (actionable error when missing).
     pub fn entry(&self, key: &EntryKey) -> Result<&Entry> {
         self.entries.get(key).ok_or_else(|| {
             anyhow!(
@@ -188,7 +213,9 @@ impl Manifest {
 /// An [`ArtifactStore`] couples a manifest with lazily compiled executables.
 /// (Defined here; execution lives in [`super::client`].)
 pub struct ArtifactStore {
+    /// The parsed manifest.
     pub manifest: Manifest,
+    /// The PJRT runtime executing the artifacts.
     pub runtime: super::client::Runtime,
 }
 

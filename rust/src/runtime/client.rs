@@ -20,11 +20,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// A CPU PJRT client with an empty executable cache.
     pub fn new() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// The PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -1,0 +1,95 @@
+//! Continuous-batching inference serving on the multi-instance graph
+//! runtime — the first non-training workload (see SERVING.md for the full
+//! architecture and DESIGN.md §6 for where it sits in the stack).
+//!
+//! The paper's headline property — many independent MGRIT solves executing
+//! concurrently on shared GPUs — is exactly the shape of an inference-serving
+//! workload: each request is one forward-only graph instance (early-stopped
+//! primal V-cycles, no head/adjoint/parameter tasks), its latency scales
+//! with V-cycles rather than network depth, and independent requests overlap
+//! freely on one persistent worker pool.
+//!
+//! Three pieces:
+//!
+//! - [`request`] — [`InferRequest`] / [`RequestRecord`] / [`LatencySummary`]:
+//!   the admission queue entry, the per-request completion record (lifecycle
+//!   timestamps, deadline verdict, outputs), and the p50/p95/p99 summary;
+//! - [`runtime`] — [`ServingRuntime`]: the live continuous-batching
+//!   scheduler over a persistent `StreamPool` + `ExecSession` (admit → wait
+//!   → retire, new instances injected as earlier ones retire — no generation
+//!   barrier);
+//! - [`sim`] — [`simulate_serving`]: the same load on the virtual V100/25GbE
+//!   timeline (`mg_serve` admission-edge schedules + arrival release times),
+//!   giving bit-reproducible latency/deadline numbers.
+//!
+//! Correctness contract: a served request's output is **bit-identical** to
+//! the serial per-request MGRIT reference ([`serial_reference`]) — asserted
+//! end-to-end by `tests/serving_integration.rs`.
+//!
+//! Serving two requests through a persistent two-worker pool:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use resnet_mgrit::mgrit::hierarchy::Hierarchy;
+//! use resnet_mgrit::model::{NetParams, NetSpec};
+//! use resnet_mgrit::serving::{InferRequest, ServeConfig, ServingRuntime};
+//! use resnet_mgrit::solver::host::HostSolver;
+//! use resnet_mgrit::tensor::Tensor;
+//! use resnet_mgrit::util::prng::Rng;
+//!
+//! let spec = Arc::new(NetSpec::micro());
+//! let params = Arc::new(NetParams::init(&spec, 7).unwrap());
+//! let (s2, p2) = (spec.clone(), params.clone());
+//! let factory = move |_worker: usize| HostSolver::new(s2.clone(), p2.clone());
+//! let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+//! let mut rt =
+//!     ServingRuntime::new(factory, spec.clone(), hier, 2, ServeConfig::default()).unwrap();
+//!
+//! let o = &spec.opening;
+//! let mut rng = Rng::new(9);
+//! for id in 0..2u64 {
+//!     let input = Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+//!     rt.submit(InferRequest::new(id, input));
+//! }
+//! let report = rt.run().unwrap();
+//! assert_eq!(report.records.len(), 2);
+//! println!("{}", report.summary.render());
+//! ```
+
+pub mod request;
+pub mod runtime;
+pub mod sim;
+
+pub use request::{
+    argmax_classes, percentile_nearest_rank, InferRequest, LatencySummary, RequestRecord,
+};
+pub use runtime::{events_show_request_overlap, ServeConfig, ServeReport, ServingRuntime};
+pub use sim::{simulate_serving, SimServeConfig, SimServeOutcome};
+
+use crate::mgrit::fas::{self, MgritOptions};
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::solver::NetExecutor;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// The serial per-request reference the serving path must match bit-for-bit:
+/// opening → `opts.max_cycles` serial MGRIT V-cycles (`mgrit::fas`) → head.
+/// Returns `(u_N, logits)`.
+///
+/// Pass [`ServingRuntime::mgrit_options`] as `opts` so cycles/relaxation
+/// match the live per-request graphs.
+pub fn serial_reference<E: NetExecutor>(
+    exec: &E,
+    hier: &Hierarchy,
+    input: &Tensor,
+    opts: &MgritOptions,
+) -> Result<(Tensor, Tensor)> {
+    let u0 = exec.opening(input)?;
+    let (states, _stats) = fas::solve_forward_with(exec, hier, &u0, opts)?;
+    let u_n = states
+        .last()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("empty forward trajectory"))?;
+    let logits = exec.logits(&u_n)?;
+    Ok((u_n, logits))
+}

@@ -1,0 +1,213 @@
+//! Request and response types of the serving path: what enters the admission
+//! queue ([`InferRequest`]), what the scheduler records per completion
+//! ([`RequestRecord`]), and the aggregate tail-latency summary
+//! ([`LatencySummary`]).
+
+use crate::tensor::Tensor;
+
+/// One inference request awaiting admission.
+///
+/// `input` is the raw network input `y` (NCHW, leading batch dimension —
+/// usually 1 for online serving). Times are seconds on the serving clock
+/// (the live runtime's stream-pool clock, or virtual time in the sim).
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Caller-assigned request id (echoed in the [`RequestRecord`]).
+    pub id: u64,
+    /// Raw network input (the opening layer is applied at admission).
+    pub input: Tensor,
+    /// Arrival time in seconds on the serving clock; the scheduler never
+    /// admits a request before it arrives (the admission queue keeps itself
+    /// sorted by arrival, so submission order does not matter).
+    pub arrival_s: f64,
+    /// Latency budget in milliseconds from arrival, if any; a completion
+    /// later than `arrival_s + deadline_ms/1e3` counts as a deadline miss.
+    pub deadline_ms: Option<f64>,
+}
+
+impl InferRequest {
+    /// A request arriving at t = 0 with no deadline.
+    pub fn new(id: u64, input: Tensor) -> InferRequest {
+        InferRequest { id, input, arrival_s: 0.0, deadline_ms: None }
+    }
+}
+
+/// The completion record of one request: the full lifecycle timestamps, the
+/// deadline verdict, and the outputs (final trunk state + head logits).
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    /// The request's caller-assigned id.
+    pub id: u64,
+    /// When the request arrived (serving clock, seconds).
+    pub arrival_s: f64,
+    /// When the scheduler admitted it as a graph instance.
+    pub admit_s: f64,
+    /// When its last task retired.
+    pub complete_s: f64,
+    /// End-to-end latency in milliseconds: `complete_s − arrival_s`
+    /// (queueing included).
+    pub latency_ms: f64,
+    /// The request's latency budget, if any.
+    pub deadline_ms: Option<f64>,
+    /// Whether the completion overran the budget.
+    pub missed_deadline: bool,
+    /// Final fine-level trunk state u^N — bit-identical to the serial MGRIT
+    /// reference on the same hierarchy/cycles (see `serving::serial_reference`).
+    pub output: Tensor,
+    /// Head logits over u^N, `[batch, n_classes]`.
+    pub logits: Tensor,
+    /// Arg-max class per sample.
+    pub predicted: Vec<usize>,
+}
+
+/// Aggregate latency/throughput summary of one serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    /// Completed requests.
+    pub n: usize,
+    /// Median latency (ms).
+    pub p50_ms: f64,
+    /// 95th-percentile latency (ms).
+    pub p95_ms: f64,
+    /// 99th-percentile latency (ms).
+    pub p99_ms: f64,
+    /// Mean latency (ms).
+    pub mean_ms: f64,
+    /// Completed requests per second of serving span (first arrival to last
+    /// completion).
+    pub throughput_rps: f64,
+    /// Requests that overran their deadline.
+    pub deadline_misses: usize,
+}
+
+impl LatencySummary {
+    /// Summarize raw latencies over a serving span of `span_s` seconds.
+    /// `deadline_misses` is carried through (the caller knows the budgets).
+    pub fn from_latencies(latencies_ms: &[f64], span_s: f64, deadline_misses: usize) -> LatencySummary {
+        let n = latencies_ms.len();
+        let mut sorted = latencies_ms.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mean = if n == 0 { 0.0 } else { sorted.iter().sum::<f64>() / n as f64 };
+        LatencySummary {
+            n,
+            p50_ms: percentile_nearest_rank(&sorted, 0.50),
+            p95_ms: percentile_nearest_rank(&sorted, 0.95),
+            p99_ms: percentile_nearest_rank(&sorted, 0.99),
+            mean_ms: mean,
+            throughput_rps: if span_s > 0.0 { n as f64 / span_s } else { 0.0 },
+            deadline_misses,
+        }
+    }
+
+    /// Summarize completion records (latency, span and misses derived).
+    pub fn from_records(records: &[RequestRecord]) -> LatencySummary {
+        let lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
+        let t0 = records.iter().map(|r| r.arrival_s).fold(f64::INFINITY, f64::min);
+        let t1 = records.iter().map(|r| r.complete_s).fold(f64::NEG_INFINITY, f64::max);
+        let span = if records.is_empty() { 0.0 } else { (t1 - t0).max(0.0) };
+        let misses = records.iter().filter(|r| r.missed_deadline).count();
+        LatencySummary::from_latencies(&lat, span, misses)
+    }
+
+    /// One-line human rendering (the `mgrit serve` summary).
+    pub fn render(&self) -> String {
+        format!(
+            "p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  \
+             throughput {:.1} req/s  deadline misses {}/{}",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_ms, self.throughput_rps,
+            self.deadline_misses, self.n
+        )
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`q` in \[0, 1\]);
+/// 0.0 on an empty slice.
+///
+/// Deliberately distinct from `util::stats::percentile` (p in \[0, 100\],
+/// linear interpolation, self-sorting): tail-latency SLOs conventionally
+/// report the nearest *observed* latency, never an interpolated value that
+/// no request actually experienced.
+pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Arg-max class per sample of a `[batch, n_classes]` logits tensor.
+pub fn argmax_classes(logits: &Tensor) -> Vec<usize> {
+    let dims = logits.dims();
+    let (b, c) = (dims[0], dims[1]);
+    let data = logits.data();
+    (0..b)
+        .map(|i| {
+            let row = &data[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&v, 0.50), 50.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.95), 95.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.99), 99.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.0), 100.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.0), 1.0); // clamped to the first rank
+        assert_eq!(percentile_nearest_rank(&[], 0.5), 0.0);
+        assert_eq!(percentile_nearest_rank(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn summary_from_latencies() {
+        let s = LatencySummary::from_latencies(&[1.0, 2.0, 3.0, 4.0], 2.0, 1);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.p50_ms, 2.0);
+        assert_eq!(s.p99_ms, 4.0);
+        assert_eq!(s.mean_ms, 2.5);
+        assert_eq!(s.throughput_rps, 2.0);
+        assert_eq!(s.deadline_misses, 1);
+        assert!(s.render().contains("p50 2.00 ms"));
+    }
+
+    #[test]
+    fn summary_from_records_derives_span_and_misses() {
+        let rec = |arrival: f64, complete: f64, missed| RequestRecord {
+            id: 0,
+            arrival_s: arrival,
+            admit_s: arrival,
+            complete_s: complete,
+            latency_ms: (complete - arrival) * 1e3,
+            deadline_ms: Some(1.0),
+            missed_deadline: missed,
+            output: Tensor::zeros(&[1]),
+            logits: Tensor::zeros(&[1, 2]),
+            predicted: vec![0],
+        };
+        let s = LatencySummary::from_records(&[
+            rec(0.0, 0.010, false),
+            rec(0.5, 0.520, true),
+        ]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.deadline_misses, 1);
+        assert!((s.throughput_rps - 2.0 / 0.52).abs() < 1e-9);
+        assert_eq!(s.p50_ms, 10.0);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 0.5, 0.1, 0.4]).unwrap();
+        assert_eq!(argmax_classes(&t), vec![1, 0]);
+    }
+}

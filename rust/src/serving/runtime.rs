@@ -1,0 +1,463 @@
+//! The live serving runtime: a continuous-batching scheduler over the
+//! multi-instance executor.
+//!
+//! A [`ServingRuntime`] owns a persistent [`StreamPool`] (the workers live
+//! across requests — nothing is rebuilt per request) and an admission queue
+//! of [`InferRequest`]s. [`ServingRuntime::run`] drives the scheduler loop:
+//!
+//! 1. **admit** — while capacity remains (fewer than `max_inflight` request
+//!    instances in flight) and the head of the queue has arrived, apply the
+//!    opening layer host-side and admit a forward-only graph instance
+//!    (`mgrit::taskgraph::mg_forward_with` — `cycles` early-stopped primal
+//!    V-cycles, no head/adjoint/parameter tasks) into the shared
+//!    [`ExecSession`];
+//! 2. **wait** — block for the next kernel completion (bounded by the next
+//!    arrival, so a due request is never admitted late);
+//! 3. **retire** — when an instance's last task retires, harvest u^N, apply
+//!    the head host-side for logits, record the latency against the
+//!    request's arrival (queueing included) and deadline, release the
+//!    instance's state slots, and loop back to admit.
+//!
+//! New instances are injected as earlier ones retire — true continuous
+//! batching with no generation barrier: request k+1's V-cycles fill the
+//! device gaps of request k's tail, which is visible as cross-instance
+//! overlap on the [`ExecEvent`] trace ([`events_show_request_overlap`]).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::coordinator::executor::ExecSession;
+use crate::coordinator::{ExecEvent, Partition, StreamPool};
+use crate::mgrit::fas::{MgritOptions, RelaxKind};
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::taskgraph::{self, Granularity, TaskGraph};
+use crate::solver::{NetExecutor, SolverFactory};
+use crate::Result;
+
+use super::request::{argmax_classes, InferRequest, LatencySummary, RequestRecord};
+
+/// Serving-loop configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Early-stopped MG cycles per request (the paper's training mode uses
+    /// 2; serving inherits the same latency-predictable fixed-cycle solve).
+    pub cycles: usize,
+    /// Relaxation pattern of each V-cycle.
+    pub relax: RelaxKind,
+    /// F-relaxation task granularity.
+    pub granularity: Granularity,
+    /// Maximum request instances concurrently in flight (the continuous
+    /// batching window).
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            cycles: 2,
+            relax: RelaxKind::FCF,
+            granularity: Granularity::PerStep,
+            max_inflight: 4,
+        }
+    }
+}
+
+/// Everything one [`ServingRuntime::run`] drain produced.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Per-request completion records, in completion order.
+    pub records: Vec<RequestRecord>,
+    /// Instance-tagged kernel completions across the whole drain (pool-clock
+    /// timestamps) — the record behind the in-flight overlap assertions.
+    pub events: Vec<ExecEvent>,
+    /// Aggregate latency/throughput summary.
+    pub summary: LatencySummary,
+}
+
+impl ServeReport {
+    /// Did two request instances ever execute concurrently? (The continuous
+    /// batching property on the live trace.)
+    pub fn shows_overlap(&self) -> bool {
+        events_show_request_overlap(&self.events)
+    }
+}
+
+/// Does an instance-tagged kernel event stream show two *different* request
+/// instances in flight at once? A serial per-request loop (finish request k,
+/// then start request k+1) can never produce such a pair.
+///
+/// Edge sweep, O(n log n) in the number of events (a whole serving drain can
+/// hold tens of thousands): an interval opening while any interval of a
+/// different instance is open is an overlap. Closes sort before opens at
+/// equal timestamps, so touching endpoints do not count — the same strict
+/// `b.t_start < a.t_end ∧ b.t_end > a.t_start` predicate as a pairwise scan.
+pub fn events_show_request_overlap(events: &[ExecEvent]) -> bool {
+    let mut edges: Vec<(f64, i8, usize)> = Vec::with_capacity(events.len() * 2);
+    for e in events {
+        edges.push((e.t_start, 1, e.instance));
+        edges.push((e.t_end, -1, e.instance));
+    }
+    edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut open_total = 0i64;
+    let mut open_per: BTreeMap<usize, i64> = BTreeMap::new();
+    for (_, delta, inst) in edges {
+        if delta > 0 {
+            if open_total > open_per.get(&inst).copied().unwrap_or(0) {
+                return true;
+            }
+            open_total += 1;
+            *open_per.entry(inst).or_insert(0) += 1;
+        } else {
+            open_total -= 1;
+            *open_per.entry(inst).or_insert(0) -= 1;
+        }
+    }
+    false
+}
+
+/// A continuous-batching inference server over the multi-instance graph
+/// runtime. See the [module docs](self) for the scheduler loop.
+pub struct ServingRuntime<F: SolverFactory>
+where
+    F::Solver: NetExecutor,
+{
+    pool: StreamPool<F>,
+    /// Scheduler-side executor for the host-side stages (opening, head).
+    exec: F::Solver,
+    spec: Arc<crate::model::NetSpec>,
+    hier: Hierarchy,
+    partition: Partition,
+    cfg: ServeConfig,
+    queue: VecDeque<InferRequest>,
+}
+
+struct Pending {
+    req: InferRequest,
+    admit_s: f64,
+}
+
+impl<F: SolverFactory> ServingRuntime<F>
+where
+    F::Solver: NetExecutor,
+{
+    /// A runtime over `devices` persistent workers (clamped to the block
+    /// count, as in the training driver). The pool and its per-worker
+    /// solvers outlive every request.
+    pub fn new(
+        factory: F,
+        spec: Arc<crate::model::NetSpec>,
+        hier: Hierarchy,
+        devices: usize,
+        cfg: ServeConfig,
+    ) -> Result<ServingRuntime<F>> {
+        anyhow::ensure!(cfg.cycles >= 1, "need at least one MG cycle per request");
+        anyhow::ensure!(cfg.max_inflight >= 1, "need an in-flight window of at least 1");
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let partition = Partition::contiguous(n_blocks, devices)?;
+        let pool = StreamPool::new(partition.n_devices(), factory.clone())?;
+        // the session's instance-tagged ExecEvents are the serving record;
+        // skip the pool's own per-job trace (mutex append per completion)
+        pool.set_trace_enabled(false);
+        let exec = factory.build(0)?;
+        Ok(ServingRuntime { pool, exec, spec, hier, partition, cfg, queue: VecDeque::new() })
+    }
+
+    /// The device partition actually in use.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// The persistent worker pool (its clock is the serving clock).
+    pub fn pool(&self) -> &StreamPool<F> {
+        &self.pool
+    }
+
+    /// Requests queued but not yet admitted.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a request. The queue is kept sorted by `arrival_s` (stable
+    /// for equal arrivals, so same-time requests stay FIFO) — an
+    /// out-of-order submission can therefore never head-of-line-block an
+    /// already-due request behind a future arrival.
+    pub fn submit(&mut self, req: InferRequest) {
+        let pos = self
+            .queue
+            .iter()
+            .rposition(|q| q.arrival_s <= req.arrival_s)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        self.queue.insert(pos, req);
+    }
+
+    /// The forward-only instance graph admitted per request (`batch` is the
+    /// cost-annotation batch; the real tensors set the executed sizes).
+    pub fn instance_graph(&self, batch: usize) -> TaskGraph {
+        taskgraph::mg_forward_with(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            batch,
+            self.cfg.cycles,
+            self.cfg.relax,
+            self.cfg.granularity,
+        )
+    }
+
+    /// The MGRIT options equivalent to this runtime's per-request solve —
+    /// what the serial reference (`serving::serial_reference`) must use for
+    /// bit-identical outputs.
+    pub fn mgrit_options(&self) -> MgritOptions {
+        MgritOptions { relax: self.cfg.relax, ..MgritOptions::early_stopping(self.cfg.cycles) }
+    }
+
+    /// Drain the admission queue through the continuous-batching loop,
+    /// returning when every submitted request has completed.
+    pub fn run(&mut self) -> Result<ServeReport> {
+        let mut session = ExecSession::new(&self.pool, &self.hier);
+        let mut active: BTreeMap<usize, Pending> = BTreeMap::new();
+        let mut records: Vec<RequestRecord> = Vec::new();
+        loop {
+            // 1. admit: fill the in-flight window with every due request
+            let now = self.pool.now();
+            while active.len() < self.cfg.max_inflight
+                && self.queue.front().map(|r| r.arrival_s <= now).unwrap_or(false)
+            {
+                let req = self.queue.pop_front().expect("checked front");
+                // admission time is sampled FIRST: admit_s − arrival_s is
+                // then pure queue wait (the opening conv and graph dispatch
+                // are service time, per SERVING.md §3), and complete_s — a
+                // worker-clock retirement time — can never precede admit_s
+                let admit_s = self.pool.now();
+                let u0 = self.exec.opening(&req.input)?;
+                let batch = *req.input.dims().first().unwrap_or(&1);
+                let inst = session.admit(self.instance_graph(batch), &u0)?;
+                active.insert(inst, Pending { req, admit_s });
+            }
+            // 3. retire: harvest every finished instance
+            let mut harvested = false;
+            while let Some(inst) = session.poll_finished() {
+                harvested = true;
+                let pending = active
+                    .remove(&inst)
+                    .ok_or_else(|| anyhow!("finished instance {inst} has no pending request"))?;
+                // the retirement time of the instance's last task — NOT the
+                // current clock, which would fold the harvest-side host work
+                // (head calls of earlier harvests, openings of fresh admits)
+                // into this request's latency and deadline verdict
+                let complete_s = session
+                    .finished_at(inst)
+                    .ok_or_else(|| anyhow!("finished instance {inst} has no completion time"))?;
+                let output = session.final_state(inst)?;
+                session.release_instance(inst)?;
+                let logits = self.exec.logits(&output)?;
+                let latency_ms = (complete_s - pending.req.arrival_s) * 1e3;
+                let missed_deadline =
+                    pending.req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false);
+                records.push(RequestRecord {
+                    id: pending.req.id,
+                    arrival_s: pending.req.arrival_s,
+                    admit_s: pending.admit_s,
+                    complete_s,
+                    latency_ms,
+                    deadline_ms: pending.req.deadline_ms,
+                    missed_deadline,
+                    predicted: argmax_classes(&logits),
+                    output,
+                    logits,
+                });
+            }
+            if active.is_empty() && self.queue.is_empty() {
+                break;
+            }
+            // a retirement freed window slots: admit into them immediately
+            // instead of waiting for an unrelated kernel completion first
+            if harvested {
+                continue;
+            }
+            // 2. wait: for a completion, but never past the next arrival
+            let next_arrival = self.queue.front().map(|r| r.arrival_s);
+            if active.is_empty() {
+                // idle until the next request arrives (real-time pacing)
+                if let Some(t) = next_arrival {
+                    let dt = t - self.pool.now();
+                    if dt > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(dt));
+                    }
+                }
+                continue;
+            }
+            // a request may have become due since the admission check at
+            // the loop top — admit it into free capacity now rather than
+            // blocking on an unrelated kernel completion
+            if active.len() < self.cfg.max_inflight
+                && next_arrival.map(|t| t <= self.pool.now()).unwrap_or(false)
+            {
+                continue;
+            }
+            let timeout = next_arrival.and_then(|t| {
+                let dt = t - self.pool.now();
+                (dt > 0.0).then(|| Duration::from_secs_f64(dt))
+            });
+            session.wait(timeout)?;
+        }
+        let events = session.into_report().events;
+        let summary = LatencySummary::from_records(&records);
+        Ok(ServeReport { records, events, summary })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NetParams, NetSpec};
+    use crate::solver::host::HostSolver;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Rng;
+
+    fn runtime(
+        max_inflight: usize,
+        devices: usize,
+    ) -> ServingRuntime<impl SolverFactory<Solver = HostSolver>> {
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, 40).unwrap());
+        let spec2 = spec.clone();
+        let factory = move |_w: usize| HostSolver::new(spec2.clone(), params.clone());
+        let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+        let cfg = ServeConfig { max_inflight, ..Default::default() };
+        ServingRuntime::new(factory, spec, hier, devices, cfg).unwrap()
+    }
+
+    fn request(spec: &NetSpec, id: u64, arrival_s: f64) -> InferRequest {
+        let o = &spec.opening;
+        let mut rng = Rng::for_instance(41, id);
+        let input = Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+        InferRequest { id, input, arrival_s, deadline_ms: None }
+    }
+
+    #[test]
+    fn overlap_sweep_matches_pairwise_predicate() {
+        let ev = |instance: usize, t_start: f64, t_end: f64| ExecEvent {
+            task: 0,
+            instance,
+            device: 0,
+            label: "k",
+            t_start,
+            t_end,
+        };
+        // disjoint instances, touching endpoints: no overlap
+        assert!(!events_show_request_overlap(&[ev(0, 0.0, 1.0), ev(1, 1.0, 2.0)]));
+        // same instance overlapping itself: no *cross-request* overlap
+        assert!(!events_show_request_overlap(&[ev(0, 0.0, 2.0), ev(0, 1.0, 3.0)]));
+        // genuine cross-instance overlap
+        assert!(events_show_request_overlap(&[ev(0, 0.0, 2.0), ev(1, 1.0, 3.0)]));
+        // nesting counts too
+        assert!(events_show_request_overlap(&[ev(0, 0.0, 5.0), ev(1, 1.0, 2.0)]));
+        // empty / singleton streams never overlap
+        assert!(!events_show_request_overlap(&[]));
+        assert!(!events_show_request_overlap(&[ev(0, 0.0, 1.0)]));
+    }
+
+    #[test]
+    fn drains_queue_and_records_every_request() {
+        let spec = NetSpec::micro();
+        let mut rt = runtime(3, 2);
+        for k in 0..8u64 {
+            rt.submit(request(&spec, k, 0.0));
+        }
+        let rep = rt.run().unwrap();
+        assert_eq!(rep.records.len(), 8);
+        assert_eq!(rt.queue_len(), 0);
+        let mut ids: Vec<u64> = rep.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        for r in &rep.records {
+            assert!(r.complete_s >= r.admit_s && r.admit_s >= r.arrival_s);
+            assert!(r.latency_ms > 0.0);
+            assert!(!r.missed_deadline, "no deadline was set");
+            assert_eq!(r.predicted.len(), 1);
+            assert_eq!(r.logits.dims()[1], spec.n_classes);
+        }
+        assert_eq!(rep.summary.n, 8);
+        assert_eq!(rep.summary.deadline_misses, 0);
+        assert!(rep.summary.p50_ms <= rep.summary.p95_ms);
+        assert!(rep.summary.p95_ms <= rep.summary.p99_ms);
+    }
+
+    #[test]
+    fn identical_inputs_produce_identical_outputs() {
+        // the runtime is a pure function of the request input: two requests
+        // with the same tensor get bitwise-equal outputs even when they
+        // shared the pool with other in-flight work
+        let spec = NetSpec::micro();
+        let mut rt = runtime(4, 2);
+        let a = request(&spec, 0, 0.0);
+        let mut b = a.clone();
+        b.id = 1;
+        rt.submit(a);
+        rt.submit(request(&spec, 2, 0.0));
+        rt.submit(b);
+        let rep = rt.run().unwrap();
+        let by_id = |id: u64| rep.records.iter().find(|r| r.id == id).unwrap();
+        assert!(by_id(0).output.data() == by_id(1).output.data());
+        assert!(by_id(0).logits.data() == by_id(1).logits.data());
+    }
+
+    #[test]
+    fn deadline_misses_are_accounted() {
+        // a zero-millisecond budget must always miss; a huge one never does
+        let spec = NetSpec::micro();
+        let mut rt = runtime(2, 1);
+        let mut tight = request(&spec, 0, 0.0);
+        tight.deadline_ms = Some(0.0);
+        let mut loose = request(&spec, 1, 0.0);
+        loose.deadline_ms = Some(1e9);
+        rt.submit(tight);
+        rt.submit(loose);
+        let rep = rt.run().unwrap();
+        let by_id = |id: u64| rep.records.iter().find(|r| r.id == id).unwrap();
+        assert!(by_id(0).missed_deadline);
+        assert!(!by_id(1).missed_deadline);
+        assert_eq!(rep.summary.deadline_misses, 1);
+    }
+
+    #[test]
+    fn out_of_order_submission_cannot_block_due_requests() {
+        // a later arrival submitted FIRST must not head-of-line-block an
+        // earlier one submitted after it: the queue re-sorts on submit, so
+        // the earlier arrival is admitted first
+        let spec = NetSpec::micro();
+        let mut rt = runtime(2, 1);
+        rt.submit(request(&spec, 0, 0.002));
+        rt.submit(request(&spec, 1, 0.0)); // earlier arrival, submitted second
+        let rep = rt.run().unwrap();
+        assert_eq!(rep.records.len(), 2);
+        let by_id = |id: u64| rep.records.iter().find(|r| r.id == id).unwrap();
+        assert!(
+            by_id(1).admit_s <= by_id(0).admit_s,
+            "earlier arrival admitted later: {} vs {}",
+            by_id(1).admit_s,
+            by_id(0).admit_s
+        );
+    }
+
+    #[test]
+    fn future_arrivals_are_not_admitted_early() {
+        let spec = NetSpec::micro();
+        let mut rt = runtime(4, 1);
+        rt.submit(request(&spec, 0, 0.0));
+        rt.submit(request(&spec, 1, 0.02)); // 20 ms after the clock started
+        let rep = rt.run().unwrap();
+        let r1 = rep.records.iter().find(|r| r.id == 1).unwrap();
+        assert!(
+            r1.admit_s >= r1.arrival_s,
+            "request 1 admitted at {} before its arrival {}",
+            r1.admit_s,
+            r1.arrival_s
+        );
+    }
+}

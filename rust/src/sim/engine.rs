@@ -15,12 +15,17 @@ pub struct SimTraceEvent {
     /// Graph task id — join back to `graph.tasks[task]` for the payload and
     /// the instance tag (cross-instance overlap assertions).
     pub task: usize,
+    /// Device the task ran on (destination device for comms).
     pub device: usize,
     /// Stream slot on the device (0..max_concurrency); comms use slot 0.
     pub slot: usize,
+    /// Phase label (`comm` for transfers).
     pub label: &'static str,
+    /// Whether this event is a transfer rather than a kernel.
     pub is_comm: bool,
+    /// Virtual start time (seconds).
     pub t_start: f64,
+    /// Virtual end time (seconds).
     pub t_end: f64,
 }
 
@@ -33,7 +38,9 @@ pub struct SimReport {
     pub device_busy_s: Vec<f64>,
     /// Sum of transfer durations (seconds of NIC occupancy, one-sided).
     pub comm_total_s: f64,
+    /// Kernel tasks executed.
     pub n_kernels: usize,
+    /// Transfers executed.
     pub n_comms: usize,
     /// Kernel/transfer timeline (only if `record_trace` was set).
     pub trace: Vec<SimTraceEvent>,
@@ -155,6 +162,22 @@ impl Device {
 
 /// Execute `graph` on `cluster` in virtual time.
 pub fn simulate(graph: &TaskGraph, cluster: &ClusterModel, record_trace: bool) -> Result<SimReport> {
+    simulate_released(graph, cluster, record_trace, &[])
+}
+
+/// As [`simulate`], with **per-instance release times**: a task of instance
+/// `k` never dispatches before `release[k]` seconds of virtual time, even if
+/// its dependencies are satisfied earlier. This is how the serving timeline
+/// models request *arrivals*: instance k is request k, `release[k]` its
+/// arrival time, and the admission edges of `mgrit::taskgraph::mg_serve`
+/// model the scheduler's in-flight window. Instances beyond `release.len()`
+/// (and an empty slice — the [`simulate`] default) release at t = 0.
+pub fn simulate_released(
+    graph: &TaskGraph,
+    cluster: &ClusterModel,
+    record_trace: bool,
+    release: &[f64],
+) -> Result<SimReport> {
     let n = graph.tasks.len();
     if n == 0 {
         return Ok(SimReport {
@@ -276,13 +299,23 @@ pub fn simulate(graph: &TaskGraph, cluster: &ClusterModel, record_trace: bool) -
         }
     }
 
+    // per-instance release (arrival) times: a ready task whose instance has
+    // not arrived yet is *held* until virtual time reaches its release
+    let rel = |inst: usize| release.get(inst).copied().unwrap_or(0.0);
+    let mut held: Vec<(f64, usize)> = Vec::new();
+
     // initial dispatch
     for t in &graph.tasks {
         if indeg[t.id] == 0 {
-            dispatch(
-                t.id, 0.0, graph, cluster, &mut devices, &mut nic_free, &mut comms, &mut trace,
-                &mut comm_total_s, &mut n_comms, record_trace,
-            );
+            let r = rel(t.instance);
+            if r > 0.0 {
+                held.push((r, t.id));
+            } else {
+                dispatch(
+                    t.id, 0.0, graph, cluster, &mut devices, &mut nic_free, &mut comms,
+                    &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                );
+            }
         }
     }
     for d in 0..devices.len() {
@@ -308,10 +341,40 @@ pub fn simulate(graph: &TaskGraph, cluster: &ClusterModel, record_trace: bool) -
                 comm_idx = Some(i);
             }
         }
+        // a pending release may be the next event (an idle system awaiting
+        // the next request arrival)
+        let mut release_due = false;
+        for (t, _) in &held {
+            if *t < t_next {
+                t_next = *t;
+                which = None;
+                comm_idx = None;
+                release_due = true;
+            }
+        }
         if !t_next.is_finite() {
             bail!("simulation deadlock: {done}/{n} tasks done, nothing runnable (cyclic deps?)");
         }
         now = t_next;
+
+        if release_due {
+            let mut i = 0;
+            while i < held.len() {
+                if held[i].0 <= now {
+                    let (_, task_id) = held.swap_remove(i);
+                    dispatch(
+                        task_id, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
+                        &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                    );
+                } else {
+                    i += 1;
+                }
+            }
+            for d in 0..devices.len() {
+                fill_slots(d, now, graph, cluster, &mut devices, &mut trace, &mut n_kernels, record_trace);
+            }
+            continue;
+        }
 
         let mut completed_tasks: Vec<usize> = Vec::new();
         match which {
@@ -348,10 +411,15 @@ pub fn simulate(graph: &TaskGraph, cluster: &ClusterModel, record_trace: bool) -
             for &dep in &dependents[task_id] {
                 indeg[dep] -= 1;
                 if indeg[dep] == 0 {
-                    dispatch(
-                        dep, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                        &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
-                    );
+                    let r = rel(graph.tasks[dep].instance);
+                    if r > now {
+                        held.push((r, dep));
+                    } else {
+                        dispatch(
+                            dep, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
+                            &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                        );
+                    }
                 }
             }
         }
@@ -691,5 +759,114 @@ mod tests {
         let g = taskgraph::TaskGraph::default();
         let rep = simulate(&g, &cluster(1), false).unwrap();
         assert_eq!(rep.makespan_s, 0.0);
+    }
+
+    #[test]
+    fn release_times_delay_instance_starts() {
+        use crate::mgrit::taskgraph::{KernelClass, Task, TaskGraph, TaskKind};
+        // two independent one-kernel instances; instance 1 arrives at t = 1 s
+        let mk = |id, instance| Task {
+            id,
+            instance,
+            device: 0,
+            kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e6 },
+            deps: vec![],
+            op: None,
+        };
+        let g = TaskGraph { tasks: vec![mk(0, 0), mk(1, 1)] };
+        let c = cluster(1);
+        let solo = c.device.kernel_time(KernelClass::Conv, 1e6);
+        // no releases: convs serialize back to back
+        let r0 = simulate(&g, &c, true).unwrap();
+        assert!((r0.makespan_s - 2.0 * solo).abs() / solo < 1e-6);
+        // instance 1 released at 1 s: the device idles until the arrival,
+        // and instance 1's kernel starts exactly at its release
+        let r1 = simulate_released(&g, &c, true, &[0.0, 1.0]).unwrap();
+        assert!((r1.makespan_s - (1.0 + solo)).abs() / solo < 1e-6, "{}", r1.makespan_s);
+        let e1 = r1.trace.iter().find(|e| e.task == 1).unwrap();
+        assert!((e1.t_start - 1.0).abs() < 1e-9, "started at {}", e1.t_start);
+        // an empty release slice is the plain simulate() behavior, bitwise
+        let r2 = simulate_released(&g, &c, false, &[]).unwrap();
+        assert_eq!(r2.makespan_s, r0.makespan_s);
+    }
+
+    #[test]
+    fn release_applies_to_downstream_ready_tasks_too() {
+        use crate::mgrit::taskgraph::{KernelClass, Task, TaskGraph, TaskKind};
+        // chain: task 0 (instance 0) → task 1 (instance 1, released late):
+        // the dependent must wait for max(dep completion, its release)
+        let g = TaskGraph {
+            tasks: vec![
+                Task {
+                    id: 0,
+                    instance: 0,
+                    device: 0,
+                    kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e6 },
+                    deps: vec![],
+                    op: None,
+                },
+                Task {
+                    id: 1,
+                    instance: 1,
+                    device: 0,
+                    kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e6 },
+                    deps: vec![0],
+                    op: None,
+                },
+            ],
+        };
+        let c = cluster(1);
+        let solo = c.device.kernel_time(KernelClass::Conv, 1e6);
+        let rep = simulate_released(&g, &c, true, &[0.0, 0.5]).unwrap();
+        let e1 = rep.trace.iter().find(|e| e.task == 1).unwrap();
+        assert!((e1.t_start - 0.5).abs() < 1e-9, "started at {}", e1.t_start);
+        assert!((rep.makespan_s - (0.5 + solo)).abs() / solo < 1e-6);
+    }
+
+    #[test]
+    fn serve_graph_latencies_are_deterministic_and_windowed() {
+        // the serving schedule: composed forward-only instances + arrivals —
+        // identical timelines across runs, and a tighter window can only
+        // delay completions
+        use crate::mgrit::fas::RelaxKind;
+        use crate::mgrit::taskgraph::{Admission, Granularity};
+        let spec = NetSpec::fig6_depth(64);
+        let hier = Hierarchy::two_level(64, spec.h(), 4).unwrap();
+        let part = Partition::contiguous(hier.fine().blocks(4).len(), 2).unwrap();
+        let n = 6usize;
+        let arrivals: Vec<f64> = (0..n).map(|k| k as f64 * 1e-4).collect();
+        let mk = |window: usize| {
+            taskgraph::mg_serve(
+                &spec, &hier, &part, 1, 1, RelaxKind::FCF, Granularity::PerStep, n,
+                Admission::Continuous { window },
+            )
+            .unwrap()
+        };
+        let completions = |g: &taskgraph::TaskGraph| -> Vec<f64> {
+            let rep = simulate_released(g, &cluster(2), true, &arrivals).unwrap();
+            let mut out = vec![0.0f64; n];
+            for e in &rep.trace {
+                let k = g.tasks[e.task].instance;
+                out[k] = out[k].max(e.t_end);
+            }
+            out
+        };
+        let wide = mk(n);
+        let a = completions(&wide);
+        let b = completions(&wide);
+        assert_eq!(a, b, "virtual serving timeline must be deterministic");
+        // window-1 admission strictly serializes: completions are FIFO and
+        // the tail request finishes later than with a wide window (early
+        // requests may finish *earlier* — they never share the devices)
+        let narrow = completions(&mk(1));
+        for w in narrow.windows(2) {
+            assert!(w[1] > w[0], "window-1 completions out of order: {narrow:?}");
+        }
+        assert!(
+            narrow.last().unwrap() > a.last().unwrap(),
+            "window 1 should hurt the tail: {} vs {}",
+            narrow.last().unwrap(),
+            a.last().unwrap()
+        );
     }
 }

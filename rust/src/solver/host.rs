@@ -20,6 +20,7 @@ pub struct HostSolver {
 }
 
 impl HostSolver {
+    /// A solver over a parameter snapshot (validated against `spec`).
     pub fn new(spec: Arc<NetSpec>, params: Arc<NetParams>) -> Result<HostSolver> {
         if params.trunk.len() != spec.n_res() {
             bail!(
@@ -32,10 +33,12 @@ impl HostSolver {
         Ok(HostSolver { spec, params })
     }
 
+    /// The network spec this solver evaluates.
     pub fn spec(&self) -> &NetSpec {
         &self.spec
     }
 
+    /// The parameter snapshot this solver was built over.
     pub fn params(&self) -> &NetParams {
         &self.params
     }

@@ -70,9 +70,20 @@ pub trait BlockSolver {
 /// graph needs beyond the trunk propagators. Implemented by `HostSolver`
 /// and `PjrtSolver`; re-exported from `train` for the training loops.
 pub trait NetExecutor: BlockSolver {
+    /// Opening layer: raw input y → trunk state u^0.
     fn opening(&self, y: &Tensor) -> Result<Tensor>;
+    /// Head forward: (logits, mean cross-entropy loss) at state u.
     fn head(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, f64)>;
+    /// Head VJP: (∂loss/∂u, dW_fc, db_fc) at state u.
     fn head_vjp(&self, u: &Tensor, labels: &[i32]) -> Result<(Tensor, Tensor, Tensor)>;
+    /// Head logits only — the inference/serving epilogue, where no labels
+    /// exist. Default: evaluate [`NetExecutor::head`] with placeholder
+    /// labels and discard the loss; implementations with a logits-only
+    /// entry point should override.
+    fn logits(&self, u: &Tensor) -> Result<Tensor> {
+        let batch = u.dims().first().copied().unwrap_or(1);
+        Ok(self.head(u, &vec![0i32; batch])?.0)
+    }
     /// The parameter snapshot this executor was built over.
     fn net_params(&self) -> &NetParams;
 }
@@ -111,7 +122,9 @@ impl NetExecutor for pjrt::PjrtSolver {
 /// each worker constructs its own inside the thread — the moral equivalent
 /// of the paper's per-MPI-rank CuDNN handle).
 pub trait SolverFactory: Send + Clone + 'static {
+    /// The solver type each worker owns.
     type Solver: BlockSolver;
+    /// Construct worker `worker`'s solver (called inside its thread).
     fn build(&self, worker: usize) -> Result<Self::Solver>;
 }
 

@@ -35,6 +35,7 @@ pub struct PjrtSolver {
 }
 
 impl PjrtSolver {
+    /// A solver executing AOT artifacts for `spec` at a fixed batch size.
     pub fn new(
         store: Rc<ArtifactStore>,
         spec: Arc<NetSpec>,
@@ -58,14 +59,17 @@ impl PjrtSolver {
         Ok(PjrtSolver { store, spec, params, batch, packed: Mutex::new(HashMap::new()) })
     }
 
+    /// The network spec this solver evaluates.
     pub fn spec(&self) -> &NetSpec {
         &self.spec
     }
 
+    /// The parameter snapshot this solver was built over.
     pub fn params(&self) -> &NetParams {
         &self.params
     }
 
+    /// The batch size the artifacts were lowered for.
     pub fn batch(&self) -> usize {
         self.batch
     }

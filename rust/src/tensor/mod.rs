@@ -17,6 +17,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// A tensor from explicit dims + row-major data (length-checked).
     pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let n: usize = dims.iter().product();
         if n != data.len() {
@@ -25,11 +26,13 @@ impl Tensor {
         Ok(Tensor { dims, data })
     }
 
+    /// All-zero tensor.
     pub fn zeros(dims: &[usize]) -> Tensor {
         let n = dims.iter().product();
         Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Constant-filled tensor.
     pub fn full(dims: &[usize], v: f32) -> Tensor {
         let n = dims.iter().product();
         Tensor { dims: dims.to_vec(), data: vec![v; n] }
@@ -42,26 +45,32 @@ impl Tensor {
         t
     }
 
+    /// The dimensions.
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the raw element vector.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }

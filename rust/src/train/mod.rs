@@ -4,6 +4,38 @@
 //!
 //! Generic over [`NetExecutor`] so the same loop runs on the host path and
 //! the PJRT/Pallas artifact path.
+//!
+//! A minimal training run on synthetic digits (serial solves; swap in
+//! [`train_parallel`] to route every step through the multi-instance graph
+//! runtime):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use resnet_mgrit::data::SyntheticDigits;
+//! use resnet_mgrit::model::{NetParams, NetSpec};
+//! use resnet_mgrit::solver::host::HostSolver;
+//! use resnet_mgrit::train::{self, Method, TrainConfig};
+//!
+//! let mut spec = NetSpec::mnist();
+//! spec.trunk.truncate(8); // keep the doctest quick
+//! spec.t_final = 0.5; // keep h = t_final / n_res at the trained scale
+//! let spec = Arc::new(spec);
+//! let mut params = NetParams::init(&spec, 5).unwrap();
+//! let data = SyntheticDigits::new(6).dataset(8);
+//! let cfg = TrainConfig {
+//!     steps: 1,
+//!     batch: 2,
+//!     method: Method::Mgrit { cycles: 1 },
+//!     ..Default::default()
+//! };
+//! let spec2 = spec.clone();
+//! let logs = train::train(&spec, &mut params, &data, &cfg, move |p| {
+//!     HostSolver::new(spec2.clone(), Arc::new(p.clone()))
+//! })
+//! .unwrap();
+//! assert_eq!(logs.len(), 1);
+//! assert!(logs[0].loss.is_finite());
+//! ```
 
 use std::sync::Arc;
 
@@ -114,7 +146,9 @@ pub fn loss_and_grads<E: NetExecutor>(
 /// `coordinator::ParallelMgrit::train_step` is asserted *bit-identical* to.
 #[derive(Debug)]
 pub struct SerialStepOutput {
+    /// Minibatch loss.
     pub loss: f64,
+    /// Full gradient set.
     pub grads: NetGrads,
     /// Post-SGD parameters.
     pub params: NetParams,
@@ -426,18 +460,26 @@ pub fn parity_report(
 /// Per-step log record.
 #[derive(Debug, Clone)]
 pub struct StepLog {
+    /// Step index.
     pub step: usize,
+    /// Minibatch loss.
     pub loss: f64,
+    /// L2 norm of the full gradient.
     pub grad_norm: f64,
 }
 
 /// Training configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// SGD steps to run.
     pub steps: usize,
+    /// Minibatch size.
     pub batch: usize,
+    /// Learning rate.
     pub lr: f32,
+    /// Forward/adjoint solve method.
     pub method: Method,
+    /// Batch-selection PRNG seed.
     pub seed: u64,
 }
 

@@ -11,9 +11,11 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed command line: subcommand, key→value options, bare flags, positionals.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare argument, if any.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Bare arguments after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -43,22 +45,27 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Args> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Whether a bare `--name` flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name value`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as usize, or a default.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -66,6 +73,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as f64, or a default.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -73,6 +81,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as a comma-separated usize list, or a default.
     pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(name) {
             None => Ok(default.to_vec()),

@@ -15,11 +15,17 @@ use super::stats;
 /// One measured benchmark: name → robust timing statistics (seconds).
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark id.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean iteration time (seconds).
     pub mean_s: f64,
+    /// Median iteration time (seconds).
     pub median_s: f64,
+    /// Standard deviation (seconds).
     pub stddev_s: f64,
+    /// Fastest iteration (seconds).
     pub min_s: f64,
 }
 
@@ -36,6 +42,7 @@ pub struct Suite {
 }
 
 impl Suite {
+    /// A suite honoring `--quick` / `BENCH_QUICK=1` for short CI runs.
     pub fn new(name: &str) -> Self {
         // `--quick` on the command line (or BENCH_QUICK=1) shortens runs for CI
         let quick = std::env::args().any(|a| a == "--quick")

@@ -13,15 +13,22 @@ use anyhow::{anyhow, bail, Result};
 /// hyperparameters and file names — all within f64's exact-integer range).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (f64; integers stay exact within 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -35,6 +42,7 @@ impl Json {
 
     // -- typed accessors -------------------------------------------------
 
+    /// Object member by key (error if absent or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Object member by key, if present.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -49,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The number value (error for non-numbers).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -56,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The number as a usize (error for non-integers).
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -64,6 +75,7 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// The string value (error for non-strings).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -71,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The array items (error for non-arrays).
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -78,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The object map (error for non-objects).
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -87,6 +101,7 @@ impl Json {
 
     // -- writer ----------------------------------------------------------
 
+    /// Serialize (compact, deterministic).
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -136,14 +151,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Array literal helper.
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }
 
+/// Number literal helper.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String literal helper.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

@@ -19,6 +19,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { start: std::time::Instant::now() }
     }

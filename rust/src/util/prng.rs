@@ -22,6 +22,7 @@ impl Rng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

@@ -11,7 +11,9 @@ use super::prng::Rng;
 /// Configuration for one property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Random cases to generate.
     pub cases: usize,
+    /// Seed of case 0 (cases derive from it deterministically).
     pub base_seed: u64,
 }
 
