@@ -672,6 +672,14 @@ where
 /// caller admits, never by graph edges. The dispatch/retire semantics are
 /// shared with [`execute`] (same `dispatch_kernel` / `apply_output`), so a
 /// session run is bit-identical to running each instance's graph alone.
+///
+/// An instance is not necessarily one request: the serving scheduler's
+/// shape-batching policy coalesces several same-shape requests into ONE
+/// admitted instance whose `u0` carries the summed leading dimension
+/// (`Tensor::concat_batch` before [`ExecSession::admit`]). The session is
+/// agnostic — every op is elementwise in the batch dimension — and the
+/// caller fans [`ExecSession::final_state`] back out to per-request outputs
+/// with `Tensor::slice_batch` at retire time (`serving::runtime`).
 pub struct ExecSession<'a, F: SolverFactory>
 where
     F::Solver: NetExecutor,

@@ -103,9 +103,128 @@ pub fn emit_fig6bc(out_dir: &Path) -> Result<PathBuf> {
     Ok(out_dir.join("BENCH_fig6bc.json"))
 }
 
+/// How much a median must grow over the previous record before the delta
+/// step flags it (10% — below that, quick-iteration noise dominates).
+pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
+
+/// Diff freshly emitted `BENCH_*.json` medians in `cur_dir` against the
+/// previous run's records in `prev_dir`, returning one line per comparison:
+/// GitHub `::warning::` annotations for suites whose median regressed more
+/// than [`BENCH_REGRESSION_THRESHOLD`], `::notice::` lines for new or
+/// missing baselines, and plain lines for benchmarks within budget. The CI
+/// bench-delta step prints these verbatim (annotations are advisory — the
+/// perf trajectory is a signal, not a gate; quick-iteration medians on
+/// shared runners are too noisy to fail a build on).
+pub fn bench_delta(prev_dir: &Path, cur_dir: &Path) -> Result<Vec<String>> {
+    use crate::util::json::Json;
+    let mut lines = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(cur_dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                names.push(name);
+            }
+        }
+    }
+    names.sort();
+    anyhow::ensure!(!names.is_empty(), "no BENCH_*.json records in {}", cur_dir.display());
+    let medians = |path: &Path| -> Result<(String, Vec<(String, f64)>)> {
+        let j = Json::parse(std::fs::read_to_string(path)?.trim())?;
+        let suite = j.get("suite")?.as_str()?.to_string();
+        let rows = j
+            .get("benches")?
+            .as_arr()?
+            .iter()
+            .map(|b| Ok((b.get("name")?.as_str()?.to_string(), b.get("median_ns")?.as_f64()?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((suite, rows))
+    };
+    for name in names {
+        let (suite, cur) = medians(&cur_dir.join(&name))?;
+        let prev_path = prev_dir.join(&name);
+        if !prev_path.exists() {
+            lines.push(format!(
+                "::notice title=bench baseline::{suite}: no previous {name} — recording baseline"
+            ));
+            continue;
+        }
+        let (_, prev) = medians(&prev_path)?;
+        for (bench, cur_ns) in &cur {
+            let Some((_, prev_ns)) = prev.iter().find(|(n, _)| n == bench) else {
+                lines.push(format!("::notice title=bench baseline::{suite}/{bench}: new benchmark"));
+                continue;
+            };
+            if *prev_ns <= 0.0 {
+                continue;
+            }
+            let ratio = cur_ns / prev_ns;
+            if ratio > 1.0 + BENCH_REGRESSION_THRESHOLD {
+                lines.push(format!(
+                    "::warning title=bench regression::{suite}/{bench}: median {cur_ns:.0} ns \
+                     vs {prev_ns:.0} ns previously (+{:.1}%)",
+                    (ratio - 1.0) * 100.0
+                ));
+            } else {
+                lines.push(format!(
+                    "{suite}/{bench}: {cur_ns:.0} ns vs {prev_ns:.0} ns ({:+.1}%)",
+                    (ratio - 1.0) * 100.0
+                ));
+            }
+        }
+    }
+    Ok(lines)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn write_record(dir: &Path, suite: &str, medians: &[(&str, f64)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let rows: Vec<String> = medians
+            .iter()
+            .map(|(n, m)| format!("{{\"name\": \"{n}\", \"median_ns\": {m}, \"iters\": 3}}"))
+            .collect();
+        let body = format!(
+            "{{\"suite\": \"{suite}\", \"git_rev\": \"test\", \"benches\": [{}]}}",
+            rows.join(", ")
+        );
+        std::fs::write(dir.join(format!("BENCH_{suite}.json")), body).unwrap();
+    }
+
+    #[test]
+    fn bench_delta_flags_only_real_regressions() {
+        let root = std::path::Path::new("target/bench-delta-selftest");
+        let prev = root.join("prev");
+        let cur = root.join("cur");
+        let _ = std::fs::remove_dir_all(root);
+        write_record(&prev, "alpha", &[("fast", 100.0), ("slow", 1000.0)]);
+        // fast regressed 50%, slow improved; beta has no baseline
+        write_record(&cur, "alpha", &[("fast", 150.0), ("slow", 900.0)]);
+        write_record(&cur, "beta", &[("x", 10.0)]);
+        let lines = bench_delta(&prev, &cur).unwrap();
+        assert!(
+            lines.iter().any(|l| l.starts_with("::warning") && l.contains("alpha/fast")),
+            "{lines:?}"
+        );
+        assert!(
+            !lines.iter().any(|l| l.starts_with("::warning") && l.contains("alpha/slow")),
+            "improvement flagged as regression: {lines:?}"
+        );
+        assert!(
+            lines.iter().any(|l| l.starts_with("::notice") && l.contains("beta")),
+            "{lines:?}"
+        );
+        // within-threshold drift stays a plain line
+        write_record(&cur, "alpha", &[("fast", 105.0), ("slow", 1000.0)]);
+        let quiet = bench_delta(&prev, &cur).unwrap();
+        assert!(!quiet.iter().any(|l| l.starts_with("::warning")), "{quiet:?}");
+        // no current records is an error, empty prev dir is not
+        assert!(bench_delta(&prev, &root.join("nope")).is_err());
+        assert!(bench_delta(&root.join("nope"), &cur).is_ok());
+        let _ = std::fs::remove_dir_all(root);
+    }
 
     #[test]
     fn emit_hotpath_writes_record() {

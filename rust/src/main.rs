@@ -45,18 +45,31 @@ USAGE: mgrit <subcommand> [options]
                 parallelism; batch must divide by M; requires --parallel)
   serve       --requests N --arrival-rate R --deadline-ms D [--preset P] [--devices D]
               [--cycles C] [--inflight W] [--relax F|FC|FCF] [--granularity per_step|per_block]
+              [--policy fifo|edf|shape-batch] [--max-queue Q] [--max-batch B]
+              [--batch-window-ms W] [--seed S]
               synthetic-load driver: N requests stream through the persistent
               multi-instance runtime as forward-only graph instances
               (continuous batching, window W; R = 0 [default] = all requests
-              arrive at once). Prints per-request latency, p50/p95/p99 +
-              throughput, verifies every output bit-for-bit against the
-              serial per-request MGRIT reference, and asserts >= 2 instances
-              overlapped in flight on the live ExecEvent trace whenever the
-              load held two requests co-resident
+              arrive at once; --seed S makes the synthetic load reproducible
+              via per-request Rng::for_instance streams). --policy picks the
+              admission scheduler: fifo (arrival order), edf (earliest
+              deadline first, sheds hopeless requests), shape-batch (fuses
+              up to B same-shape requests arriving within W ms into one
+              batched instance); --max-queue bounds the admission queue
+              (overflow is shed). Prints per-request latency, p50/p95/p99 +
+              throughput + sheds, verifies every served output bit-for-bit
+              against the serial per-request MGRIT reference, and asserts
+              >= 2 instances overlapped in flight on the live ExecEvent
+              trace whenever the load held two requests co-resident
   experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|compound|ablations> [--quick]
+              (serve prints the continuous-vs-barrier table AND the
+               three-way FIFO/EDF/shape-batch policy comparison)
   sim         --preset P --gpus G [--training] [--cycles C]
   bench       [--out DIR] [--full]   quick perf snapshot; writes
               BENCH_hotpath.json + BENCH_fig6bc.json into DIR (default .)
+  bench-delta --prev DIR [--cur DIR]   diff BENCH_*.json medians against a
+              previous run's records; prints GitHub ::warning:: annotations
+              for suites regressing > 10% (advisory, exit 0)
   artifacts   [--artifacts-dir DIR]
   help
 ";
@@ -87,6 +100,7 @@ fn run(args: &Args) -> Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("sim") => cmd_sim(args),
         Some("bench") => cmd_bench(args),
+        Some("bench-delta") => cmd_bench_delta(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("help") | None => {
             print!("{HELP}");
@@ -247,13 +261,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Continuous-batching inference serving through the live multi-instance
-/// runtime: N synthetic requests stream through one persistent pool as
-/// forward-only graph instances; every output is checked bit-for-bit against
+/// Policy-driven continuous-batching inference serving through the live
+/// multi-instance runtime: N synthetic requests stream through one
+/// persistent pool as forward-only graph instances under the chosen
+/// admission policy; every served output is checked bit-for-bit against
 /// the serial per-request MGRIT reference, and the live `ExecEvent` trace
 /// must show ≥ 2 request instances concurrently in flight.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use resnet_mgrit::serving::{self, InferRequest, ServeConfig, ServingRuntime};
+    use resnet_mgrit::serving::{self, InferRequest, PolicyKind, ServeConfig, ServingRuntime};
 
     let cfg = RunConfig::from_args(args)?;
     let n_requests = args.usize_or("requests", 12)?;
@@ -262,6 +277,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let deadline_ms = args.f64_or("deadline-ms", 0.0)?;
     let deadline = (deadline_ms > 0.0).then_some(deadline_ms);
     let inflight = args.usize_or("inflight", 4)?;
+    let max_batch = args.usize_or("max-batch", 4)?;
+    let batch_window_ms = args.f64_or("batch-window-ms", 2.0)?;
+    let policy = PolicyKind::parse(args.get_or("policy", "fifo"), max_batch, batch_window_ms)?;
+    let max_queue = match args.usize_or("max-queue", 0)? {
+        0 => None,
+        q => Some(q),
+    };
     anyhow::ensure!(n_requests >= 1, "--requests must be at least 1");
 
     let spec = Arc::new(NetSpec::by_name(&cfg.preset)?);
@@ -291,15 +313,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         relax: cfg.relax,
         granularity: Granularity::parse(args.get_or("granularity", "per_step"))?,
         max_inflight: inflight,
+        policy,
+        max_queue,
     };
     let mut rt = ServingRuntime::new(factory, spec.clone(), hier.clone(), cfg.devices, serve_cfg)?;
     println!(
-        "serving preset={} devices={} cycles={} inflight={inflight} \
-         requests={n_requests} arrival_rate={rate}/s deadline={}",
+        "serving preset={} devices={} cycles={} inflight={inflight} policy={} \
+         requests={n_requests} arrival_rate={rate}/s deadline={} max_queue={} seed={}",
         spec.name,
         rt.partition().n_devices(),
         cfg.cycles,
+        policy.name(),
         deadline.map(|d| format!("{d} ms")).unwrap_or_else(|| "none".into()),
+        max_queue.map(|q| q.to_string()).unwrap_or_else(|| "unbounded".into()),
+        cfg.seed,
     );
     for req in requests {
         rt.submit(req);
@@ -320,10 +347,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         );
     }
+    for s in &report.sheds {
+        println!(
+            "  req {:>3}  arrival {:>7.1} ms  SHED at {:>8.2} ms ({:?})",
+            s.id,
+            s.arrival_s * 1e3,
+            s.shed_s * 1e3,
+            s.reason
+        );
+    }
     println!("{}", report.summary.render());
 
-    // correctness gate: every served output bit-identical to the serial
-    // per-request MGRIT reference (same hierarchy, same early-stopped cycles)
+    // correctness gate: every SERVED output bit-identical to the serial
+    // per-request MGRIT reference (same hierarchy, same early-stopped
+    // cycles) — shed requests have no output to compare, and coalesced
+    // requests are compared per-request after the harvest fan-out
     let exec = HostSolver::new(spec.clone(), params)?;
     let opts = rt.mgrit_options();
     for r in &report.records {
@@ -335,31 +373,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
             r.id
         );
     }
-    println!("parity: all {n_requests} outputs bit-identical to the serial MGRIT reference");
+    println!(
+        "parity: all {}/{n_requests} served outputs bit-identical to the serial MGRIT reference \
+         ({} shed)",
+        report.records.len(),
+        report.sheds.len()
+    );
 
     // concurrency gate: the continuous-batching property on the live
-    // ExecEvent trace. It is a HARD assertion for a burst load (rate 0 —
-    // the default — queues every request up front, so with ≥ 2 in-flight
+    // ExecEvent trace. It is a HARD assertion for a FIFO burst load (rate 0
+    // — the default — queues every request up front, so with ≥ 2 in-flight
     // slots over ≥ 2 workers, kernel overlap must occur). Under a paced
-    // arrival rate, a fast pool can legitimately drain each request before
-    // the next one's kernels start, so overlap is reported, not required.
+    // arrival rate a fast pool can legitimately drain each request before
+    // the next one's kernels start; under EDF shedding or a bounded queue
+    // fewer than 2 instances may survive; under shape-batch the whole load
+    // may coalesce into one instance — so there overlap is reported, not
+    // required.
     let burst = rate <= 0.0;
-    if n_requests >= 2 && inflight >= 2 && rt.partition().n_devices() >= 2 && burst {
+    let fifo_unbounded = policy == PolicyKind::Fifo && max_queue.is_none();
+    if n_requests >= 2 && inflight >= 2 && rt.partition().n_devices() >= 2 && burst
+        && fifo_unbounded
+    {
         anyhow::ensure!(
             report.shows_overlap(),
             "no two request instances were ever concurrently in flight"
         );
-        let insts: std::collections::BTreeSet<usize> =
-            report.events.iter().map(|e| e.instance).collect();
         println!(
             "concurrency: {} instances traced, cross-request overlap observed on the live trace",
-            insts.len()
+            report.n_instances()
         );
     } else if report.shows_overlap() {
-        println!("concurrency: cross-request overlap observed on the live trace");
+        println!(
+            "concurrency: {} instances traced, cross-instance overlap observed on the live trace",
+            report.n_instances()
+        );
     } else {
         println!(
-            "concurrency: no cross-request kernel overlap under this load \
+            "concurrency: no cross-instance kernel overlap under this load \
              (raise --requests/--inflight or lower --arrival-rate)"
         );
     }
@@ -416,6 +466,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     "{}",
                     exp::serve::run(depth, devices, n, 20_000.0, window, Some(50.0))?.render()
                 );
+                // the three-way scheduler comparison on one matched burst
+                // load (FIFO vs EDF vs shape-batch, deterministic sim)
+                println!(
+                    "{}",
+                    exp::serve::policy_comparison(depth, devices, n, window, 4, 1.0)?.render()
+                );
             }
             "fig7" => {
                 let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
@@ -455,6 +511,28 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let p1 = exp::perf::emit_hotpath(&out)?;
     let p2 = exp::perf::emit_fig6bc(&out)?;
     println!("perf records: {} , {}", p1.display(), p2.display());
+    Ok(())
+}
+
+/// Diff freshly emitted BENCH_*.json medians against the previous run's
+/// records, printing GitHub annotation lines for regressions > 10%. A
+/// missing `--prev` is a usage error; any *analysis* failure (stale or
+/// incompatible cached records, a schema change between runs) downgrades to
+/// a `::notice::` line and exits 0 — the perf trajectory annotates the run,
+/// it must never gate it.
+fn cmd_bench_delta(args: &Args) -> Result<()> {
+    let prev = std::path::PathBuf::from(
+        args.get("prev").ok_or_else(|| anyhow::anyhow!("--prev DIR is required"))?,
+    );
+    let cur = std::path::PathBuf::from(args.get_or("cur", "."));
+    match exp::perf::bench_delta(&prev, &cur) {
+        Ok(lines) => {
+            for line in lines {
+                println!("{line}");
+            }
+        }
+        Err(e) => println!("::notice title=bench delta skipped::{e:#}"),
+    }
     Ok(())
 }
 

@@ -1065,8 +1065,17 @@ pub fn mg_forward(
 
 /// As [`mg_forward`] with explicit relaxation pattern and F-relaxation
 /// granularity — the forward-only (fig6a-style) instance graph the serving
-/// runtime admits per inference request: `cycles` early-stopped primal
+/// runtime admits per scheduling decision: `cycles` early-stopped primal
 /// V-cycles, no head, no adjoint, no parameter work.
+///
+/// `batch` is the instance's **leading dimension**. For a shape-coalesced
+/// admission (`serving::policy::ShapeBatch`) it is the summed row count of
+/// the coalesced requests: every kernel's cost annotation then carries the
+/// batched FLOPs while the *task count* — and with it the per-kernel launch
+/// overhead the paper's concurrency argument centers on — stays that of a
+/// single instance, which is exactly the amortization shape batching buys.
+/// The live executor ignores the annotation (the real tensors set the
+/// executed sizes); the simulator prices it.
 #[allow(clippy::too_many_arguments)]
 pub fn mg_forward_with(
     spec: &NetSpec,

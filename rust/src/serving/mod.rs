@@ -9,22 +9,31 @@
 //! with V-cycles rather than network depth, and independent requests overlap
 //! freely on one persistent worker pool.
 //!
-//! Three pieces:
+//! Four pieces:
 //!
-//! - [`request`] — [`InferRequest`] / [`RequestRecord`] / [`LatencySummary`]:
-//!   the admission queue entry, the per-request completion record (lifecycle
-//!   timestamps, deadline verdict, outputs), and the p50/p95/p99 summary;
+//! - [`request`] — [`InferRequest`] / [`RequestRecord`] / [`ShedRecord`] /
+//!   [`LatencySummary`]: the admission queue entry, the per-request
+//!   completion and shed records, and the p50/p95/p99 summary;
+//! - [`policy`] — the pluggable [`SchedulerPolicy`] trait and the three
+//!   shipped schedulers: [`Fifo`] (arrival order), [`Edf`]
+//!   (earliest-deadline-first with shedding of hopeless requests), and
+//!   [`ShapeBatch`] (coalesces up to B same-shape requests into ONE batched
+//!   graph instance — `Tensor::concat_batch` on admit, `Tensor::slice_batch`
+//!   on harvest);
 //! - [`runtime`] — [`ServingRuntime`]: the live continuous-batching
-//!   scheduler over a persistent `StreamPool` + `ExecSession` (admit → wait
-//!   → retire, new instances injected as earlier ones retire — no generation
-//!   barrier);
-//! - [`sim`] — [`simulate_serving`]: the same load on the virtual V100/25GbE
-//!   timeline (`mg_serve` admission-edge schedules + arrival release times),
-//!   giving bit-reproducible latency/deadline numbers.
+//!   scheduler over a persistent `StreamPool` + `ExecSession` (intake →
+//!   decide → wait → retire, new instances injected as earlier ones retire —
+//!   no generation barrier), with a bounded admission queue
+//!   (`ServeConfig::max_queue`, [`latency_derived_depth`]);
+//! - [`sim`] — [`simulate_serving`] (static admission-edge schedules) and
+//!   [`simulate_serving_policy`] (the same policy trait driven against
+//!   `sim::SimSession` in virtual time), giving bit-reproducible
+//!   latency/deadline/shed numbers for all three policies on one trace.
 //!
 //! Correctness contract: a served request's output is **bit-identical** to
-//! the serial per-request MGRIT reference ([`serial_reference`]) — asserted
-//! end-to-end by `tests/serving_integration.rs`.
+//! the serial per-request MGRIT reference ([`serial_reference`]) — under
+//! every policy, *including requests coalesced into a shape-batched
+//! instance* — asserted end-to-end by `tests/serving_integration.rs`.
 //!
 //! Serving two requests through a persistent two-worker pool:
 //!
@@ -56,15 +65,24 @@
 //! println!("{}", report.summary.render());
 //! ```
 
+pub mod policy;
 pub mod request;
 pub mod runtime;
 pub mod sim;
 
+pub use policy::{
+    latency_derived_depth, Decision, Edf, Fifo, PolicyCtx, PolicyKind, QueuedRequest,
+    SchedulerPolicy, ShapeBatch,
+};
 pub use request::{
     argmax_classes, percentile_nearest_rank, InferRequest, LatencySummary, RequestRecord,
+    ShedReason, ShedRecord,
 };
 pub use runtime::{events_show_request_overlap, ServeConfig, ServeReport, ServingRuntime};
-pub use sim::{simulate_serving, SimServeConfig, SimServeOutcome};
+pub use sim::{
+    simulate_serving, simulate_serving_policy, PolicyServeOutcome, SimPolicyConfig, SimRequest,
+    SimRequestOutcome, SimServeConfig, SimServeOutcome,
+};
 
 use crate::mgrit::fas::{self, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;

@@ -1,0 +1,555 @@
+//! Pluggable serving schedulers: the admission policy is a first-class
+//! subsystem, not logic inlined in the runtime loop.
+//!
+//! A [`SchedulerPolicy`] decides, from a view of the arrived-but-unadmitted
+//! queue, (a) which requests to admit next — possibly **coalescing** several
+//! same-shape requests into ONE batched graph instance — (b) which requests
+//! to **shed** because they can no longer meet their latency budget, and
+//! (c) how long the driver may wait before asking again. The same trait
+//! drives both consumers:
+//!
+//! - the live continuous-batching runtime (`serving::runtime` over
+//!   `coordinator::ExecSession`, wall-clock time), and
+//! - the deterministic virtual-time scorer (`serving::sim` over
+//!   `sim::SimSession`, V100/25 GbE model),
+//!
+//! so a policy's scheduling behavior can be scored bit-reproducibly on the
+//! simulator and then run unchanged against real tensors. Three policies
+//! ship:
+//!
+//! | policy | admit order | coalescing | shedding |
+//! |---|---|---|---|
+//! | [`Fifo`] | arrival order | none (batch-1) | none |
+//! | [`Edf`] | earliest absolute deadline | none (batch-1) | hopeless requests |
+//! | [`ShapeBatch`] | arrival order per shape key | ≤ B same-shape requests per instance | none |
+//!
+//! Whatever the policy decides, per-request *outputs* are bit-identical to
+//! the serial reference (`serving::serial_reference`): policies reorder,
+//! coalesce, and drop work — they never change the arithmetic of a request
+//! that completes (asserted in `tests/serving_integration.rs`, including
+//! requests that were coalesced into a shape-batched instance).
+
+use crate::Result;
+
+/// A scheduler's view of one queued request: everything a policy may base a
+/// decision on, and nothing it may not (no tensor payload — the identical
+/// view serves the live runtime and the virtual-time sim).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueuedRequest {
+    /// Caller-assigned request id (for diagnostics; policies must not key
+    /// decisions on it beyond deterministic tie-breaking by queue order).
+    pub id: u64,
+    /// Arrival time in seconds on the serving clock. The driver only shows
+    /// the policy requests that have already arrived (`arrival_s ≤ now`).
+    pub arrival_s: f64,
+    /// Latency budget in milliseconds from arrival, if any.
+    pub deadline_ms: Option<f64>,
+    /// Input dims. `dims[0]` rows contribute to a coalesced instance's
+    /// leading dimension; `dims[1..]` is the shape key coalescing groups by.
+    pub dims: Vec<usize>,
+}
+
+impl QueuedRequest {
+    /// Absolute completion deadline in seconds (`+∞` when no budget was set).
+    pub fn absolute_deadline_s(&self) -> f64 {
+        match self.deadline_ms {
+            Some(d) => self.arrival_s + d / 1e3,
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// What the driver tells the policy about the world at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyCtx {
+    /// Current time on the serving clock (wall-clock live, virtual in sim).
+    pub now: f64,
+    /// Instance slots still free in the in-flight window (`max_inflight −
+    /// in-flight instances`). A policy must not admit when this is 0.
+    pub free_slots: usize,
+    /// The driver's estimate of one instance's service time in seconds —
+    /// what [`Edf`] sheds against. The live runtime learns it from completed
+    /// requests (0 until the first completion: no speculative shedding); the
+    /// sim derives it deterministically from the cost model.
+    pub service_estimate_s: f64,
+}
+
+/// One scheduling decision. Indices refer to the queue slice the policy was
+/// shown **this call**; the driver removes shed and admitted entries and
+/// calls again, so a policy never has to plan more than one instance ahead.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Decision {
+    /// Queue indices to coalesce into ONE graph instance, in row order.
+    /// Empty ⇒ no admission this round. More than one index ⇒ a batched
+    /// instance (all entries must share `dims[1..]`; the driver concatenates
+    /// inputs along the leading dim and fans the harvest back out).
+    pub admit: Vec<usize>,
+    /// Queue indices to drop without serving (recorded as sheds, never as
+    /// deadline misses — the request produces no output at all).
+    pub shed: Vec<usize>,
+    /// Earliest time the situation can change without an external event
+    /// (e.g. a batch window expiring). The driver will not sleep past
+    /// `min(next arrival, next completion, wait_until)`. `None` ⇒ only an
+    /// arrival or a completion can unblock the policy.
+    pub wait_until: Option<f64>,
+}
+
+impl Decision {
+    /// A decision that admits nothing, sheds nothing, and sets no timer.
+    pub fn rest() -> Decision {
+        Decision::default()
+    }
+
+    /// Did this decision change the queue (admit or shed anything)?
+    pub fn acted(&self) -> bool {
+        !self.admit.is_empty() || !self.shed.is_empty()
+    }
+
+    /// Validate this decision against the waiting room and extract its
+    /// subjects: every admitted and shed entry is removed from `waiting`
+    /// (index-descending, so earlier indices stay valid) and returned as
+    /// `(admitted, shed)`, each in decision order. This is the one shared
+    /// implementation of the driver side of the policy protocol — the live
+    /// runtime and the virtual-time sim both apply decisions through it, so
+    /// the index-validation and extraction semantics can never drift between
+    /// the two. Errors on an admission with `free_slots == 0`, on
+    /// overlapping admit/shed indices, or on an out-of-range index
+    /// (`name` identifies the offending policy).
+    pub fn apply<T>(
+        &self,
+        waiting: &mut Vec<T>,
+        name: &str,
+        free_slots: usize,
+    ) -> Result<(Vec<T>, Vec<T>)> {
+        anyhow::ensure!(
+            self.admit.is_empty() || free_slots > 0,
+            "policy {name} admitted with no free instance slot"
+        );
+        let mut idx: Vec<usize> = self.admit.iter().chain(self.shed.iter()).copied().collect();
+        idx.sort_unstable();
+        idx.dedup();
+        anyhow::ensure!(
+            idx.len() == self.admit.len() + self.shed.len()
+                && idx.iter().all(|&i| i < waiting.len()),
+            "policy {name} returned overlapping or out-of-range indices"
+        );
+        let mut taken: Vec<(usize, Option<T>)> = Vec::new();
+        for &i in idx.iter().rev() {
+            taken.push((i, Some(waiting.remove(i))));
+        }
+        let mut take = |i: usize| -> Result<T> {
+            taken
+                .iter_mut()
+                .find(|(j, _)| *j == i)
+                .and_then(|(_, r)| r.take())
+                .ok_or_else(|| anyhow::anyhow!("decision index {i} lost"))
+        };
+        let admitted = self.admit.iter().map(|&i| take(i)).collect::<Result<Vec<T>>>()?;
+        let shed = self.shed.iter().map(|&i| take(i)).collect::<Result<Vec<T>>>()?;
+        Ok((admitted, shed))
+    }
+}
+
+/// The pluggable admission scheduler of the serving stack. The driver
+/// (live runtime or virtual-time sim) calls [`SchedulerPolicy::decide`] in a
+/// loop — applying sheds and admissions after each call — until the policy
+/// rests (returns a decision with empty `admit` and `shed`), then waits for
+/// the next arrival, completion, or `wait_until` timer and repeats.
+///
+/// Contract: `decide` must be a pure function of `(queue, ctx)` plus the
+/// policy's own state — no clocks, no randomness — so the virtual-time sim
+/// stays bit-reproducible. `admit` must be empty when `ctx.free_slots == 0`,
+/// and a multi-request admission must share one shape key (`dims[1..]`).
+pub trait SchedulerPolicy {
+    /// Stable policy name (CLI spelling, report rows).
+    fn name(&self) -> &'static str;
+    /// One scheduling decision over the arrived-but-unadmitted queue (sorted
+    /// by arrival, stable for equal arrivals).
+    fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision;
+}
+
+/// First-in-first-out admission — exactly the scheduler PR 4 hard-wired into
+/// `ServingRuntime::run`, now expressed as a policy: admit the oldest
+/// arrived request as its own batch-1 instance whenever a slot is free.
+/// Never sheds, never waits on a timer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl SchedulerPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision {
+        if ctx.free_slots == 0 || queue.is_empty() {
+            return Decision::rest();
+        }
+        Decision { admit: vec![0], ..Decision::default() }
+    }
+}
+
+/// Earliest-deadline-first admission with shedding: admit the arrived
+/// request whose **absolute** deadline (`arrival + budget`) is earliest
+/// (no-budget requests sort last, FIFO among themselves), and shed any
+/// request that can no longer meet its budget even if admitted right now
+/// (`now + service_estimate > absolute deadline`). Shedding turns a
+/// guaranteed deadline miss into freed capacity for requests that can still
+/// make it — the control signal PR 4's accounting-only deadlines lacked.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Edf;
+
+impl SchedulerPolicy for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision {
+        // shed first: a hopeless request must not consume a slot ahead of a
+        // viable one, whether or not a slot is currently free
+        let shed: Vec<usize> = queue
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| ctx.now + ctx.service_estimate_s > q.absolute_deadline_s())
+            .map(|(i, _)| i)
+            .collect();
+        if !shed.is_empty() {
+            return Decision { shed, ..Decision::default() };
+        }
+        if ctx.free_slots == 0 || queue.is_empty() {
+            return Decision::rest();
+        }
+        // earliest absolute deadline; ties resolve to the lowest queue index
+        // (arrival order) — total_cmp on +∞ keeps budget-less requests last
+        let best = queue
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.absolute_deadline_s().total_cmp(&b.1.absolute_deadline_s()))
+            .map(|(i, _)| i)
+            .expect("non-empty queue");
+        Decision { admit: vec![best], ..Decision::default() }
+    }
+}
+
+/// Shape-coalescing admission: group arrived requests by shape key
+/// (`dims[1..]`) and fuse up to `max_batch` of one group — all arriving
+/// within `window_s` of the group's oldest member — into **one** batched
+/// graph instance (one set of kernels whose leading dimension is the summed
+/// row count), amortizing per-kernel launch overhead across requests — the
+/// MGRIT analogue of batching parallel training runs (Schroder 2017). A
+/// group admits immediately once `max_batch` requests are waiting, or when
+/// its oldest member has waited `window_s`; otherwise the policy asks the
+/// driver to wake it when the window expires.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeBatch {
+    /// Maximum requests coalesced into one instance (≥ 1).
+    pub max_batch: usize,
+    /// How long the oldest member of a group may wait for peers (seconds).
+    pub window_s: f64,
+}
+
+impl ShapeBatch {
+    /// A policy coalescing up to `max_batch` same-shape requests within a
+    /// `window_ms`-millisecond window.
+    pub fn new(max_batch: usize, window_ms: f64) -> Result<ShapeBatch> {
+        anyhow::ensure!(max_batch >= 1, "shape-batch needs max_batch ≥ 1");
+        anyhow::ensure!(window_ms >= 0.0, "shape-batch window must be ≥ 0");
+        Ok(ShapeBatch { max_batch, window_s: window_ms / 1e3 })
+    }
+}
+
+impl SchedulerPolicy for ShapeBatch {
+    fn name(&self) -> &'static str {
+        "shape-batch"
+    }
+
+    fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision {
+        if ctx.free_slots == 0 || queue.is_empty() {
+            return Decision::rest();
+        }
+        // shape-keyed grouping in queue (arrival) order; groups are ordered
+        // by their oldest member, so the longest-waiting shape goes first.
+        // A 0-d input has no trailing dims: key it by the empty slice rather
+        // than panicking here — the driver's concat/opening will reject it
+        // with a proper error when (and if) the group is admitted
+        let mut groups: Vec<(&[usize], Vec<usize>)> = Vec::new();
+        for (i, q) in queue.iter().enumerate() {
+            let key = q.dims.get(1..).unwrap_or(&[]);
+            if let Some(pos) = groups.iter().position(|(k, _)| *k == key) {
+                groups[pos].1.push(i);
+            } else {
+                groups.push((key, vec![i]));
+            }
+        }
+        let mut wake = f64::INFINITY;
+        for (_, members) in &groups {
+            let oldest = queue[members[0]].arrival_s;
+            if members.len() >= self.max_batch {
+                return Decision {
+                    admit: members[..self.max_batch].to_vec(),
+                    ..Decision::default()
+                };
+            }
+            if ctx.now >= oldest + self.window_s {
+                return Decision { admit: members.clone(), ..Decision::default() };
+            }
+            wake = wake.min(oldest + self.window_s);
+        }
+        Decision { wait_until: wake.is_finite().then_some(wake), ..Decision::default() }
+    }
+}
+
+/// CLI-level policy selector: which [`SchedulerPolicy`] to build, with its
+/// parameters. This is what `ServeConfig` / `mgrit serve --policy` carry —
+/// the runtime builds the boxed policy per drain, so config stays `Clone`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyKind {
+    /// Arrival-order admission ([`Fifo`]) — PR 4's behavior, kept exactly.
+    Fifo,
+    /// Earliest-deadline-first admission with shedding ([`Edf`]).
+    Edf,
+    /// Shape-coalesced batched admission ([`ShapeBatch`]).
+    ShapeBatch {
+        /// Maximum requests coalesced into one batched instance.
+        max_batch: usize,
+        /// Coalescing window in milliseconds.
+        window_ms: f64,
+    },
+}
+
+impl PolicyKind {
+    /// Parse a CLI spelling (`fifo` | `edf` | `shape-batch`), attaching the
+    /// shape-batch parameters (ignored by the other policies).
+    pub fn parse(s: &str, max_batch: usize, window_ms: f64) -> Result<PolicyKind> {
+        match s {
+            "fifo" => Ok(PolicyKind::Fifo),
+            "edf" => Ok(PolicyKind::Edf),
+            "shape-batch" | "shape_batch" | "batch" => {
+                anyhow::ensure!(max_batch >= 1, "--max-batch must be ≥ 1");
+                anyhow::ensure!(window_ms >= 0.0, "--batch-window-ms must be ≥ 0");
+                Ok(PolicyKind::ShapeBatch { max_batch, window_ms })
+            }
+            other => anyhow::bail!("unknown policy {other:?} (fifo|edf|shape-batch)"),
+        }
+    }
+
+    /// The policy's stable name (matches [`SchedulerPolicy::name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Edf => "edf",
+            PolicyKind::ShapeBatch { .. } => "shape-batch",
+        }
+    }
+
+    /// Build the boxed policy this kind describes.
+    pub fn build(&self) -> Result<Box<dyn SchedulerPolicy>> {
+        Ok(match self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Edf => Box::new(Edf),
+            PolicyKind::ShapeBatch { max_batch, window_ms } => {
+                Box::new(ShapeBatch::new(*max_batch, *window_ms)?)
+            }
+        })
+    }
+}
+
+/// The queue depth beyond which a newly arrived request could not meet
+/// `deadline_ms` even under perfect pipelining — the latency-derived bound
+/// for `ServeConfig::max_queue`. With `max_inflight` instances retiring
+/// every ~`service_ms`, queue position p waits ≈ `p / max_inflight ·
+/// service_ms` before admission, so positions past
+/// `deadline_ms / service_ms · max_inflight` are guaranteed misses: bounding
+/// the queue there turns them into immediate rejections (backpressure)
+/// instead of served-too-late work. Returns at least 1; `usize::MAX` when
+/// `service_ms ≤ 0` (no estimate ⇒ no bound).
+pub fn latency_derived_depth(deadline_ms: f64, service_ms: f64, max_inflight: usize) -> usize {
+    if service_ms <= 0.0 || deadline_ms <= 0.0 {
+        return usize::MAX;
+    }
+    (((deadline_ms / service_ms) * max_inflight as f64).floor() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_s: f64, deadline_ms: Option<f64>, dims: &[usize]) -> QueuedRequest {
+        QueuedRequest { id, arrival_s, deadline_ms, dims: dims.to_vec() }
+    }
+
+    fn ctx(now: f64, free_slots: usize, svc: f64) -> PolicyCtx {
+        PolicyCtx { now, free_slots, service_estimate_s: svc }
+    }
+
+    #[test]
+    fn fifo_admits_head_only_when_capacity() {
+        let q = vec![req(0, 0.0, None, &[1, 2]), req(1, 0.1, None, &[1, 2])];
+        let mut p = Fifo;
+        assert_eq!(p.decide(&q, &ctx(1.0, 2, 0.0)).admit, vec![0]);
+        assert_eq!(p.decide(&q, &ctx(1.0, 0, 0.0)), Decision::rest());
+        assert_eq!(p.decide(&[], &ctx(1.0, 2, 0.0)), Decision::rest());
+    }
+
+    #[test]
+    fn edf_orders_by_absolute_deadline() {
+        // request 2 arrived last but has the tightest absolute deadline
+        // (0.2 + 0.150 = 0.35, vs 0.5 for request 0 and +∞ for request 1) —
+        // all still meetable at t = 0.3
+        let q = vec![
+            req(0, 0.0, Some(500.0), &[1, 2]),
+            req(1, 0.1, None, &[1, 2]),
+            req(2, 0.2, Some(150.0), &[1, 2]),
+        ];
+        let mut p = Edf;
+        let d = p.decide(&q, &ctx(0.3, 1, 0.0));
+        assert_eq!(d.admit, vec![2]);
+        assert!(d.shed.is_empty());
+        // budget-less requests sort last: with 2 gone, 0 beats 1
+        let q2 = vec![q[0].clone(), q[1].clone()];
+        assert_eq!(p.decide(&q2, &ctx(0.3, 1, 0.0)).admit, vec![0]);
+    }
+
+    #[test]
+    fn edf_ties_break_by_arrival_order() {
+        let q = vec![req(0, 0.0, Some(100.0), &[1, 2]), req(1, 0.0, Some(100.0), &[1, 2])];
+        let mut p = Edf;
+        assert_eq!(p.decide(&q, &ctx(0.0, 1, 0.0)).admit, vec![0]);
+    }
+
+    #[test]
+    fn edf_sheds_hopeless_requests_first() {
+        // with a 10 ms service estimate at t = 0.095, a 100 ms budget from
+        // t = 0 is hopeless (0.095 + 0.010 > 0.100); a 200 ms budget is not
+        let q = vec![
+            req(0, 0.0, Some(100.0), &[1, 2]),
+            req(1, 0.0, Some(200.0), &[1, 2]),
+        ];
+        let mut p = Edf;
+        let d = p.decide(&q, &ctx(0.095, 1, 0.010));
+        assert_eq!(d.shed, vec![0]);
+        assert!(d.admit.is_empty(), "shedding round admits nothing");
+        // hopeless requests are shed even when no slot is free
+        let d2 = p.decide(&q, &ctx(0.095, 0, 0.010));
+        assert_eq!(d2.shed, vec![0]);
+        // with the queue cleaned, the viable request is admitted
+        let q2 = vec![q[1].clone()];
+        assert_eq!(p.decide(&q2, &ctx(0.095, 1, 0.010)).admit, vec![0]);
+        // a zero service estimate never speculates: nothing sheds until the
+        // absolute deadline has actually passed
+        assert!(p.decide(&q, &ctx(0.095, 1, 0.0)).shed.is_empty());
+        assert_eq!(p.decide(&q, &ctx(0.150, 1, 0.0)).shed, vec![0]);
+    }
+
+    #[test]
+    fn shape_batch_coalesces_same_shape_up_to_width() {
+        let q = vec![
+            req(0, 0.0, None, &[1, 2, 4, 4]),
+            req(1, 0.0, None, &[1, 2, 4, 4]),
+            req(2, 0.0, None, &[1, 2, 4, 4]),
+        ];
+        let mut p = ShapeBatch::new(2, 1000.0).unwrap();
+        // a full group admits immediately, first max_batch members in order
+        assert_eq!(p.decide(&q, &ctx(0.0, 4, 0.0)).admit, vec![0, 1]);
+        // the leftover singleton waits for the window...
+        let rest = vec![q[2].clone()];
+        let d = p.decide(&rest, &ctx(0.0, 4, 0.0));
+        assert!(d.admit.is_empty());
+        assert_eq!(d.wait_until, Some(1.0));
+        // ...and flushes once it expires
+        assert_eq!(p.decide(&rest, &ctx(1.0, 4, 0.0)).admit, vec![0]);
+    }
+
+    #[test]
+    fn shape_batch_never_mixes_shapes() {
+        // two shape keys interleaved: groups stay pure, oldest group first
+        let q = vec![
+            req(0, 0.0, None, &[1, 2, 4, 4]),
+            req(1, 0.0, None, &[1, 2, 8, 8]),
+            req(2, 0.0, None, &[1, 2, 4, 4]),
+            req(3, 0.0, None, &[1, 2, 8, 8]),
+        ];
+        let mut p = ShapeBatch::new(2, 1000.0).unwrap();
+        assert_eq!(p.decide(&q, &ctx(0.0, 4, 0.0)).admit, vec![0, 2]);
+        let rest = vec![q[1].clone(), q[3].clone()];
+        assert_eq!(p.decide(&rest, &ctx(0.0, 4, 0.0)).admit, vec![0, 1]);
+    }
+
+    #[test]
+    fn shape_batch_tolerates_rank_zero_inputs() {
+        // a 0-d input must not panic the scheduler: it groups under the
+        // empty shape key and is admitted like any other group (the tensor
+        // layer rejects it with a proper error downstream)
+        let q = vec![req(0, 0.0, None, &[]), req(1, 0.0, None, &[])];
+        let mut p = ShapeBatch::new(2, 1000.0).unwrap();
+        assert_eq!(p.decide(&q, &ctx(0.0, 1, 0.0)).admit, vec![0, 1]);
+    }
+
+    #[test]
+    fn shape_batch_rests_without_capacity_and_window_zero_never_waits() {
+        let q = vec![req(0, 0.0, None, &[1, 2])];
+        let mut p = ShapeBatch::new(4, 0.0).unwrap();
+        assert_eq!(p.decide(&q, &ctx(0.0, 0, 0.0)), Decision::rest());
+        // window 0: a lone request flushes immediately rather than waiting
+        assert_eq!(p.decide(&q, &ctx(0.0, 1, 0.0)).admit, vec![0]);
+        assert!(ShapeBatch::new(0, 1.0).is_err());
+        assert!(ShapeBatch::new(1, -1.0).is_err());
+    }
+
+    #[test]
+    fn policy_kind_parses_and_builds() {
+        assert_eq!(PolicyKind::parse("fifo", 4, 1.0).unwrap(), PolicyKind::Fifo);
+        assert_eq!(PolicyKind::parse("edf", 4, 1.0).unwrap(), PolicyKind::Edf);
+        assert_eq!(
+            PolicyKind::parse("shape-batch", 4, 2.0).unwrap(),
+            PolicyKind::ShapeBatch { max_batch: 4, window_ms: 2.0 }
+        );
+        assert!(PolicyKind::parse("lifo", 4, 1.0).is_err());
+        assert!(PolicyKind::parse("shape-batch", 0, 1.0).is_err());
+        for kind in [
+            PolicyKind::Fifo,
+            PolicyKind::Edf,
+            PolicyKind::ShapeBatch { max_batch: 2, window_ms: 1.0 },
+        ] {
+            assert_eq!(kind.build().unwrap().name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn decision_apply_extracts_and_validates() {
+        let mut waiting = vec!["a", "b", "c", "d"];
+        // admit out of index order + shed one: extraction keeps decision
+        // order and removes exactly the named entries
+        let d = Decision { admit: vec![2, 0], shed: vec![3], ..Decision::default() };
+        let (admitted, shed) = d.apply(&mut waiting, "test", 1).unwrap();
+        assert_eq!(admitted, vec!["c", "a"]);
+        assert_eq!(shed, vec!["d"]);
+        assert_eq!(waiting, vec!["b"]);
+        // admission with no free slot is a protocol violation
+        let d2 = Decision { admit: vec![0], ..Decision::default() };
+        assert!(d2.apply(&mut waiting, "test", 0).is_err());
+        // sheds alone are fine with no free slot
+        let d3 = Decision { shed: vec![0], ..Decision::default() };
+        let (none, dropped) = d3.apply(&mut waiting, "test", 0).unwrap();
+        assert!(none.is_empty());
+        assert_eq!(dropped, vec!["b"]);
+        assert!(waiting.is_empty());
+        // overlapping and out-of-range indices are rejected
+        let mut w2 = vec![1, 2, 3];
+        let overlap = Decision { admit: vec![0], shed: vec![0], ..Decision::default() };
+        assert!(overlap.apply(&mut w2, "test", 1).is_err());
+        let oob = Decision { admit: vec![5], ..Decision::default() };
+        assert!(oob.apply(&mut w2, "test", 1).is_err());
+        assert_eq!(w2, vec![1, 2, 3], "failed apply must not consume the queue");
+    }
+
+    #[test]
+    fn latency_derived_depth_bounds() {
+        // 100 ms budget, 10 ms service, window 4 ⇒ 40 queue positions
+        assert_eq!(latency_derived_depth(100.0, 10.0, 4), 40);
+        // a budget shorter than one service time still leaves depth 1
+        assert_eq!(latency_derived_depth(5.0, 10.0, 1), 1);
+        // no estimate / no budget ⇒ unbounded
+        assert_eq!(latency_derived_depth(100.0, 0.0, 4), usize::MAX);
+        assert_eq!(latency_derived_depth(0.0, 10.0, 4), usize::MAX);
+    }
+}

@@ -1,7 +1,7 @@
 //! Request and response types of the serving path: what enters the admission
 //! queue ([`InferRequest`]), what the scheduler records per completion
-//! ([`RequestRecord`]), and the aggregate tail-latency summary
-//! ([`LatencySummary`]).
+//! ([`RequestRecord`]) or per dropped request ([`ShedRecord`]), and the
+//! aggregate tail-latency summary ([`LatencySummary`]).
 
 use crate::tensor::Tensor;
 
@@ -60,6 +60,34 @@ pub struct RequestRecord {
     pub predicted: Vec<usize>,
 }
 
+/// Why the scheduler dropped a request without serving it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded admission queue was full when the request arrived
+    /// (backpressure: `ServeConfig::max_queue`).
+    QueueFull,
+    /// The policy judged the request unable to meet its latency budget even
+    /// if admitted immediately (`now + service estimate > arrival +
+    /// deadline`) — EDF's load-shedding rule.
+    DeadlineHopeless,
+}
+
+/// The record of one request the scheduler dropped instead of serving. Shed
+/// requests produce no output and are counted separately from deadline
+/// misses ([`LatencySummary::sheds`] vs [`LatencySummary::deadline_misses`]):
+/// a miss is served-too-late work, a shed is work refused up front.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedRecord {
+    /// The request's caller-assigned id.
+    pub id: u64,
+    /// When the request arrived (serving clock, seconds).
+    pub arrival_s: f64,
+    /// When the scheduler dropped it.
+    pub shed_s: f64,
+    /// Why it was dropped.
+    pub reason: ShedReason,
+}
+
 /// Aggregate latency/throughput summary of one serving run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LatencySummary {
@@ -78,12 +106,21 @@ pub struct LatencySummary {
     pub throughput_rps: f64,
     /// Requests that overran their deadline.
     pub deadline_misses: usize,
+    /// Requests the scheduler dropped without serving (bounded-queue
+    /// rejections + deadline-hopeless sheds) — disjoint from `n`.
+    pub sheds: usize,
 }
 
 impl LatencySummary {
     /// Summarize raw latencies over a serving span of `span_s` seconds.
-    /// `deadline_misses` is carried through (the caller knows the budgets).
-    pub fn from_latencies(latencies_ms: &[f64], span_s: f64, deadline_misses: usize) -> LatencySummary {
+    /// `deadline_misses` and `sheds` are carried through (the caller knows
+    /// the budgets and the drop decisions).
+    pub fn from_latencies(
+        latencies_ms: &[f64],
+        span_s: f64,
+        deadline_misses: usize,
+        sheds: usize,
+    ) -> LatencySummary {
         let n = latencies_ms.len();
         let mut sorted = latencies_ms.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
@@ -96,32 +133,44 @@ impl LatencySummary {
             mean_ms: mean,
             throughput_rps: if span_s > 0.0 { n as f64 / span_s } else { 0.0 },
             deadline_misses,
+            sheds,
         }
     }
 
-    /// Summarize completion records (latency, span and misses derived).
-    pub fn from_records(records: &[RequestRecord]) -> LatencySummary {
+    /// Summarize completion records (latency, span and misses derived;
+    /// `sheds` is the count of requests dropped without a record).
+    pub fn from_records(records: &[RequestRecord], sheds: usize) -> LatencySummary {
         let lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
         let t0 = records.iter().map(|r| r.arrival_s).fold(f64::INFINITY, f64::min);
         let t1 = records.iter().map(|r| r.complete_s).fold(f64::NEG_INFINITY, f64::max);
         let span = if records.is_empty() { 0.0 } else { (t1 - t0).max(0.0) };
         let misses = records.iter().filter(|r| r.missed_deadline).count();
-        LatencySummary::from_latencies(&lat, span, misses)
+        LatencySummary::from_latencies(&lat, span, misses, sheds)
     }
 
     /// One-line human rendering (the `mgrit serve` summary).
     pub fn render(&self) -> String {
         format!(
             "p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  \
-             throughput {:.1} req/s  deadline misses {}/{}",
+             throughput {:.1} req/s  deadline misses {}/{}  shed {}",
             self.p50_ms, self.p95_ms, self.p99_ms, self.mean_ms, self.throughput_rps,
-            self.deadline_misses, self.n
+            self.deadline_misses, self.n, self.sheds
         )
     }
 }
 
-/// Nearest-rank percentile of an ascending-sorted slice (`q` in \[0, 1\]);
-/// 0.0 on an empty slice.
+/// Nearest-rank percentile of an ascending-sorted slice, `q` in \[0, 1\].
+///
+/// Edge cases are part of the contract, not accidents:
+/// - an **empty slice returns 0.0** — the sentinel a zero-completion serving
+///   run reports (there is no latency to quote; callers render it as-is
+///   rather than erroring, so an all-shed drain still summarizes);
+/// - a single sample is returned for every `q` (it is every percentile of
+///   itself);
+/// - `q = 0.0` clamps to the first (minimum) sample and `q = 1.0` is the
+///   last (maximum) sample — the rank is clamped to `[1, n]`, so any finite
+///   `q` outside \[0, 1\] degrades to the min/max rather than indexing out
+///   of range.
 ///
 /// Deliberately distinct from `util::stats::percentile` (p in \[0, 100\],
 /// linear interpolation, self-sorting): tail-latency SLOs conventionally
@@ -170,15 +219,47 @@ mod tests {
     }
 
     #[test]
+    fn percentile_edge_cases_are_contractual() {
+        // empty input: the documented 0.0 sentinel, at every quantile
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile_nearest_rank(&[], q), 0.0);
+        }
+        // a single sample is every percentile of itself
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile_nearest_rank(&[3.25], q), 3.25);
+        }
+        // p0 is the minimum, p100 the maximum
+        let v = [1.0, 2.0, 5.0];
+        assert_eq!(percentile_nearest_rank(&v, 0.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.0), 5.0);
+        // out-of-range q degrades to min/max via the rank clamp
+        assert_eq!(percentile_nearest_rank(&v, -0.5), 1.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.5), 5.0);
+    }
+
+    #[test]
     fn summary_from_latencies() {
-        let s = LatencySummary::from_latencies(&[1.0, 2.0, 3.0, 4.0], 2.0, 1);
+        let s = LatencySummary::from_latencies(&[1.0, 2.0, 3.0, 4.0], 2.0, 1, 2);
         assert_eq!(s.n, 4);
         assert_eq!(s.p50_ms, 2.0);
         assert_eq!(s.p99_ms, 4.0);
         assert_eq!(s.mean_ms, 2.5);
         assert_eq!(s.throughput_rps, 2.0);
         assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.sheds, 2);
         assert!(s.render().contains("p50 2.00 ms"));
+        assert!(s.render().contains("shed 2"));
+    }
+
+    #[test]
+    fn empty_summary_is_the_all_shed_drain() {
+        // every request shed ⇒ no latencies, but the summary still renders
+        let s = LatencySummary::from_latencies(&[], 0.0, 0, 3);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.sheds, 3);
+        assert!(s.render().contains("shed 3"));
     }
 
     #[test]
@@ -195,12 +276,13 @@ mod tests {
             logits: Tensor::zeros(&[1, 2]),
             predicted: vec![0],
         };
-        let s = LatencySummary::from_records(&[
-            rec(0.0, 0.010, false),
-            rec(0.5, 0.520, true),
-        ]);
+        let s = LatencySummary::from_records(
+            &[rec(0.0, 0.010, false), rec(0.5, 0.520, true)],
+            1,
+        );
         assert_eq!(s.n, 2);
         assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.sheds, 1);
         assert!((s.throughput_rps - 2.0 / 0.52).abs() < 1e-9);
         assert_eq!(s.p50_ms, 10.0);
     }

@@ -1,33 +1,43 @@
-//! The live serving runtime: a continuous-batching scheduler over the
-//! multi-instance executor.
+//! The live serving runtime: a policy-driven continuous-batching scheduler
+//! over the multi-instance executor.
 //!
 //! A [`ServingRuntime`] owns a persistent [`StreamPool`] (the workers live
-//! across requests — nothing is rebuilt per request) and an admission queue
-//! of [`InferRequest`]s. [`ServingRuntime::run`] drives the scheduler loop:
+//! across requests — nothing is rebuilt per request), an admission queue of
+//! [`InferRequest`]s, and a pluggable [`SchedulerPolicy`]
+//! (`ServeConfig::policy`). [`ServingRuntime::run`] drives the scheduler
+//! loop:
 //!
-//! 1. **admit** — while capacity remains (fewer than `max_inflight` request
-//!    instances in flight) and the head of the queue has arrived, apply the
-//!    opening layer host-side and admit a forward-only graph instance
-//!    (`mgrit::taskgraph::mg_forward_with` — `cycles` early-stopped primal
-//!    V-cycles, no head/adjoint/parameter tasks) into the shared
-//!    [`ExecSession`];
-//! 2. **wait** — block for the next kernel completion (bounded by the next
-//!    arrival, so a due request is never admitted late);
-//! 3. **retire** — when an instance's last task retires, harvest u^N, apply
-//!    the head host-side for logits, record the latency against the
-//!    request's arrival (queueing included) and deadline, release the
-//!    instance's state slots, and loop back to admit.
+//! 1. **intake** — move every arrived request into the waiting room; when
+//!    the bounded queue (`ServeConfig::max_queue`) is full, the request is
+//!    **shed** at the door (backpressure) instead of queued;
+//! 2. **decide** — ask the policy for admissions and sheds until it rests:
+//!    each admission is one graph instance — a single request under
+//!    [`Fifo`](super::policy::Fifo)/[`Edf`](super::policy::Edf), or up to B
+//!    same-shape requests **coalesced** into one batched instance under
+//!    [`ShapeBatch`](super::policy::ShapeBatch)
+//!    ([`Tensor::concat_batch`] on the inputs, one opening, one forward-only
+//!    graph via `mgrit::taskgraph::mg_forward_with` whose cost annotations
+//!    carry the coalesced leading dimension);
+//! 3. **wait** — block for the next kernel completion, bounded by the next
+//!    arrival *and* the policy's `wait_until` timer (a batch window
+//!    expiring), so a due request or a ripe batch is never served late;
+//! 4. **retire** — when an instance's last task retires, harvest the batched
+//!    u^N and **fan it back out** to per-request records
+//!    ([`Tensor::slice_batch`] at each request's row offset, head applied
+//!    host-side per request so every output is bit-identical to the
+//!    batch-1 serial reference), then release the instance's state slots.
 //!
 //! New instances are injected as earlier ones retire — true continuous
-//! batching with no generation barrier: request k+1's V-cycles fill the
-//! device gaps of request k's tail, which is visible as cross-instance
-//! overlap on the [`ExecEvent`] trace ([`events_show_request_overlap`]).
+//! batching with no generation barrier, now with the *order*, *grouping*,
+//! and *shedding* of admissions owned by the policy rather than hard-wired
+//! ([`events_show_request_overlap`] still asserts the overlap property on
+//! the live [`ExecEvent`] trace).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::anyhow;
+use anyhow::{anyhow, bail};
 
 use crate::coordinator::executor::ExecSession;
 use crate::coordinator::{ExecEvent, Partition, StreamPool};
@@ -35,9 +45,13 @@ use crate::mgrit::fas::{MgritOptions, RelaxKind};
 use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{self, Granularity, TaskGraph};
 use crate::solver::{NetExecutor, SolverFactory};
+use crate::tensor::Tensor;
 use crate::Result;
 
-use super::request::{argmax_classes, InferRequest, LatencySummary, RequestRecord};
+use super::policy::{PolicyCtx, PolicyKind, QueuedRequest, SchedulerPolicy};
+use super::request::{
+    argmax_classes, InferRequest, LatencySummary, RequestRecord, ShedReason, ShedRecord,
+};
 
 /// Serving-loop configuration.
 #[derive(Debug, Clone)]
@@ -49,9 +63,17 @@ pub struct ServeConfig {
     pub relax: RelaxKind,
     /// F-relaxation task granularity.
     pub granularity: Granularity,
-    /// Maximum request instances concurrently in flight (the continuous
-    /// batching window).
+    /// Maximum graph instances concurrently in flight (the continuous
+    /// batching window; a shape-batched instance counts once).
     pub max_inflight: usize,
+    /// Which admission scheduler to run (see `serving::policy`). Default:
+    /// [`PolicyKind::Fifo`] — PR 4's behavior exactly.
+    pub policy: PolicyKind,
+    /// Bounded admission queue: arrived requests beyond this many waiting
+    /// are shed at the door ([`ShedReason::QueueFull`]). `None` (default)
+    /// keeps the queue unbounded; `serving::latency_derived_depth` gives a
+    /// budget-derived bound.
+    pub max_queue: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -61,6 +83,8 @@ impl Default for ServeConfig {
             relax: RelaxKind::FCF,
             granularity: Granularity::PerStep,
             max_inflight: 4,
+            policy: PolicyKind::Fifo,
+            max_queue: None,
         }
     }
 }
@@ -68,20 +92,32 @@ impl Default for ServeConfig {
 /// Everything one [`ServingRuntime::run`] drain produced.
 #[derive(Debug)]
 pub struct ServeReport {
-    /// Per-request completion records, in completion order.
+    /// Per-request completion records, in completion order (requests of one
+    /// batched instance retire together, in their coalesced row order).
     pub records: Vec<RequestRecord>,
+    /// Requests dropped without serving (bounded-queue rejections +
+    /// policy sheds), in drop order.
+    pub sheds: Vec<ShedRecord>,
     /// Instance-tagged kernel completions across the whole drain (pool-clock
     /// timestamps) — the record behind the in-flight overlap assertions.
     pub events: Vec<ExecEvent>,
-    /// Aggregate latency/throughput summary.
+    /// Aggregate latency/throughput summary (sheds included).
     pub summary: LatencySummary,
 }
 
 impl ServeReport {
-    /// Did two request instances ever execute concurrently? (The continuous
+    /// Did two graph instances ever execute concurrently? (The continuous
     /// batching property on the live trace.)
     pub fn shows_overlap(&self) -> bool {
         events_show_request_overlap(&self.events)
+    }
+
+    /// Distinct graph instances on the event trace — under a coalescing
+    /// policy this is the number of *batched* instances, not requests.
+    pub fn n_instances(&self) -> usize {
+        let insts: std::collections::BTreeSet<usize> =
+            self.events.iter().map(|e| e.instance).collect();
+        insts.len()
     }
 }
 
@@ -118,8 +154,9 @@ pub fn events_show_request_overlap(events: &[ExecEvent]) -> bool {
     false
 }
 
-/// A continuous-batching inference server over the multi-instance graph
-/// runtime. See the [module docs](self) for the scheduler loop.
+/// A policy-driven continuous-batching inference server over the
+/// multi-instance graph runtime. See the [module docs](self) for the
+/// scheduler loop.
 pub struct ServingRuntime<F: SolverFactory>
 where
     F::Solver: NetExecutor,
@@ -134,8 +171,10 @@ where
     queue: VecDeque<InferRequest>,
 }
 
+/// One in-flight graph instance: the coalesced requests (row order = concat
+/// order) and when the group was admitted.
 struct Pending {
-    req: InferRequest,
+    reqs: Vec<InferRequest>,
     admit_s: f64,
 }
 
@@ -155,6 +194,11 @@ where
     ) -> Result<ServingRuntime<F>> {
         anyhow::ensure!(cfg.cycles >= 1, "need at least one MG cycle per request");
         anyhow::ensure!(cfg.max_inflight >= 1, "need an in-flight window of at least 1");
+        anyhow::ensure!(
+            cfg.max_queue.map(|q| q >= 1).unwrap_or(true),
+            "a bounded queue needs at least one slot"
+        );
+        cfg.policy.build()?; // reject bad policy parameters up front
         let n_blocks = hier.fine().blocks(hier.coarsen).len();
         let partition = Partition::contiguous(n_blocks, devices)?;
         let pool = StreamPool::new(partition.n_devices(), factory.clone())?;
@@ -194,8 +238,10 @@ where
         self.queue.insert(pos, req);
     }
 
-    /// The forward-only instance graph admitted per request (`batch` is the
-    /// cost-annotation batch; the real tensors set the executed sizes).
+    /// The forward-only instance graph admitted per policy decision. `batch`
+    /// is the instance's **coalesced leading dimension** (the summed row
+    /// count of its requests) — it sets the graph's per-kernel cost
+    /// annotations; the real tensors set the executed sizes.
     pub fn instance_graph(&self, batch: usize) -> TaskGraph {
         taskgraph::mg_forward_with(
             &self.spec,
@@ -215,30 +261,91 @@ where
         MgritOptions { relax: self.cfg.relax, ..MgritOptions::early_stopping(self.cfg.cycles) }
     }
 
-    /// Drain the admission queue through the continuous-batching loop,
-    /// returning when every submitted request has completed.
+    /// Drain the admission queue through the policy-driven continuous
+    /// batching loop, returning when every submitted request has completed
+    /// or been shed.
     pub fn run(&mut self) -> Result<ServeReport> {
+        let mut policy = self.cfg.policy.build()?;
         let mut session = ExecSession::new(&self.pool, &self.hier);
         let mut active: BTreeMap<usize, Pending> = BTreeMap::new();
+        let mut waiting: Vec<InferRequest> = Vec::new();
         let mut records: Vec<RequestRecord> = Vec::new();
+        let mut sheds: Vec<ShedRecord> = Vec::new();
+        // EDF's shedding estimate: EWMA of observed per-instance service
+        // times (admit → last retirement); 0 until the first completion, so
+        // the policy never speculates off nothing
+        let mut svc_est_s = 0.0f64;
         loop {
-            // 1. admit: fill the in-flight window with every due request
+            // 1. intake: arrived requests enter the waiting room; a full
+            //    bounded queue sheds at the door. Same-instant arrivals are
+            //    enqueued in arrival (submission) order before any admission
+            //    decision at that instant.
             let now = self.pool.now();
-            while active.len() < self.cfg.max_inflight
-                && self.queue.front().map(|r| r.arrival_s <= now).unwrap_or(false)
-            {
+            while self.queue.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
                 let req = self.queue.pop_front().expect("checked front");
+                if self.cfg.max_queue.map(|cap| waiting.len() >= cap).unwrap_or(false) {
+                    sheds.push(ShedRecord {
+                        id: req.id,
+                        arrival_s: req.arrival_s,
+                        shed_s: now,
+                        reason: ShedReason::QueueFull,
+                    });
+                    continue;
+                }
+                waiting.push(req);
+            }
+            // 2. decide: admissions and sheds until the policy rests (the
+            // resting decision's timer bounds the wait below)
+            let wait_hint: Option<f64> = loop {
+                let view: Vec<QueuedRequest> = waiting
+                    .iter()
+                    .map(|r| QueuedRequest {
+                        id: r.id,
+                        arrival_s: r.arrival_s,
+                        deadline_ms: r.deadline_ms,
+                        dims: r.input.dims().to_vec(),
+                    })
+                    .collect();
+                let ctx = PolicyCtx {
+                    now: self.pool.now(),
+                    free_slots: self.cfg.max_inflight.saturating_sub(active.len()),
+                    service_estimate_s: svc_est_s,
+                };
+                let d = policy.decide(&view, &ctx);
+                if !d.acted() {
+                    break d.wait_until;
+                }
+                // the one shared protocol implementation: validate the
+                // decision and pull its subjects out of the waiting room
+                let shed_now = self.pool.now();
+                let (group, shed) = d.apply(&mut waiting, policy.name(), ctx.free_slots)?;
+                for req in shed {
+                    sheds.push(ShedRecord {
+                        id: req.id,
+                        arrival_s: req.arrival_s,
+                        shed_s: shed_now,
+                        reason: ShedReason::DeadlineHopeless,
+                    });
+                }
+                if group.is_empty() {
+                    continue;
+                }
                 // admission time is sampled FIRST: admit_s − arrival_s is
                 // then pure queue wait (the opening conv and graph dispatch
                 // are service time, per SERVING.md §3), and complete_s — a
                 // worker-clock retirement time — can never precede admit_s
                 let admit_s = self.pool.now();
-                let u0 = self.exec.opening(&req.input)?;
-                let batch = *req.input.dims().first().unwrap_or(&1);
-                let inst = session.admit(self.instance_graph(batch), &u0)?;
-                active.insert(inst, Pending { req, admit_s });
-            }
-            // 3. retire: harvest every finished instance
+                // coalesce: concat along the leading dim in decision order
+                // (a single-request group copies the input bitwise)
+                let parts: Vec<&Tensor> = group.iter().map(|r| &r.input).collect();
+                let joint = Tensor::concat_batch(&parts)?;
+                let rows = joint.dims()[0];
+                let u0 = self.exec.opening(&joint)?;
+                let inst = session.admit(self.instance_graph(rows), &u0)?;
+                active.insert(inst, Pending { reqs: group, admit_s });
+            };
+            // 4. retire: harvest every finished instance, fanning a batched
+            //    instance back out to per-request records
             let mut harvested = false;
             while let Some(inst) = session.poll_finished() {
                 harvested = true;
@@ -252,26 +359,45 @@ where
                 let complete_s = session
                     .finished_at(inst)
                     .ok_or_else(|| anyhow!("finished instance {inst} has no completion time"))?;
-                let output = session.final_state(inst)?;
+                let batched = session.final_state(inst)?;
                 session.release_instance(inst)?;
-                let logits = self.exec.logits(&output)?;
-                let latency_ms = (complete_s - pending.req.arrival_s) * 1e3;
-                let missed_deadline =
-                    pending.req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false);
-                records.push(RequestRecord {
-                    id: pending.req.id,
-                    arrival_s: pending.req.arrival_s,
-                    admit_s: pending.admit_s,
-                    complete_s,
-                    latency_ms,
-                    deadline_ms: pending.req.deadline_ms,
-                    missed_deadline,
-                    predicted: argmax_classes(&logits),
-                    output,
-                    logits,
-                });
+                svc_est_s = if svc_est_s == 0.0 {
+                    complete_s - pending.admit_s
+                } else {
+                    0.5 * svc_est_s + 0.5 * (complete_s - pending.admit_s)
+                };
+                let mut row = 0usize;
+                for req in pending.reqs {
+                    let rows = *req.input.dims().first().unwrap_or(&1);
+                    // slice the request's rows back out, then apply the head
+                    // on the slice — the exact tensor path of the batch-1
+                    // serial reference, so coalescing cannot perturb bits
+                    let output = batched.slice_batch(row, rows)?;
+                    row += rows;
+                    let logits = self.exec.logits(&output)?;
+                    let latency_ms = (complete_s - req.arrival_s) * 1e3;
+                    let missed_deadline =
+                        req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false);
+                    records.push(RequestRecord {
+                        id: req.id,
+                        arrival_s: req.arrival_s,
+                        admit_s: pending.admit_s,
+                        complete_s,
+                        latency_ms,
+                        deadline_ms: req.deadline_ms,
+                        missed_deadline,
+                        predicted: argmax_classes(&logits),
+                        output,
+                        logits,
+                    });
+                }
+                anyhow::ensure!(
+                    row == *batched.dims().first().unwrap_or(&0),
+                    "instance {inst}: harvested rows ({row}) != batched leading dim ({})",
+                    batched.dims().first().unwrap_or(&0)
+                );
             }
-            if active.is_empty() && self.queue.is_empty() {
+            if active.is_empty() && waiting.is_empty() && self.queue.is_empty() {
                 break;
             }
             // a retirement freed window slots: admit into them immediately
@@ -279,35 +405,45 @@ where
             if harvested {
                 continue;
             }
-            // 2. wait: for a completion, but never past the next arrival
+            // 3. wait: for a completion, but never past the next arrival or
+            // the policy's timer (a batch window expiring)
             let next_arrival = self.queue.front().map(|r| r.arrival_s);
+            let bound = [next_arrival, wait_hint]
+                .into_iter()
+                .flatten()
+                .fold(f64::INFINITY, f64::min);
             if active.is_empty() {
-                // idle until the next request arrives (real-time pacing)
-                if let Some(t) = next_arrival {
-                    let dt = t - self.pool.now();
+                // idle until the next arrival or policy timer (real-time
+                // pacing); an idle runtime with waiting work and no timer
+                // would spin forever — that is a policy bug, not a hang
+                let dt = bound - self.pool.now();
+                if bound.is_finite() {
                     if dt > 0.0 {
                         std::thread::sleep(Duration::from_secs_f64(dt));
                     }
+                    continue;
                 }
+                bail!(
+                    "policy {} deadlocked: {} waiting request(s), nothing in flight, no timer",
+                    policy.name(),
+                    waiting.len()
+                );
+            }
+            // a request may have become due (or a timer ripe) since the
+            // decision loop — go around rather than blocking on an
+            // unrelated kernel completion. ONE clock read serves both the
+            // staleness check and the timeout: re-reading between them
+            // could make `bound − now` negative (a from_secs_f64 panic)
+            let wall = self.pool.now();
+            if bound <= wall {
                 continue;
             }
-            // a request may have become due since the admission check at
-            // the loop top — admit it into free capacity now rather than
-            // blocking on an unrelated kernel completion
-            if active.len() < self.cfg.max_inflight
-                && next_arrival.map(|t| t <= self.pool.now()).unwrap_or(false)
-            {
-                continue;
-            }
-            let timeout = next_arrival.and_then(|t| {
-                let dt = t - self.pool.now();
-                (dt > 0.0).then(|| Duration::from_secs_f64(dt))
-            });
+            let timeout = bound.is_finite().then(|| Duration::from_secs_f64(bound - wall));
             session.wait(timeout)?;
         }
         let events = session.into_report().events;
-        let summary = LatencySummary::from_records(&records);
-        Ok(ServeReport { records, events, summary })
+        let summary = LatencySummary::from_records(&records, sheds.len());
+        Ok(ServeReport { records, sheds, events, summary })
     }
 }
 
@@ -323,12 +459,18 @@ mod tests {
         max_inflight: usize,
         devices: usize,
     ) -> ServingRuntime<impl SolverFactory<Solver = HostSolver>> {
+        runtime_with(ServeConfig { max_inflight, ..Default::default() }, devices)
+    }
+
+    fn runtime_with(
+        cfg: ServeConfig,
+        devices: usize,
+    ) -> ServingRuntime<impl SolverFactory<Solver = HostSolver>> {
         let spec = Arc::new(NetSpec::micro());
         let params = Arc::new(NetParams::init(&spec, 40).unwrap());
         let spec2 = spec.clone();
         let factory = move |_w: usize| HostSolver::new(spec2.clone(), params.clone());
         let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
-        let cfg = ServeConfig { max_inflight, ..Default::default() };
         ServingRuntime::new(factory, spec, hier, devices, cfg).unwrap()
     }
 
@@ -371,6 +513,7 @@ mod tests {
         }
         let rep = rt.run().unwrap();
         assert_eq!(rep.records.len(), 8);
+        assert!(rep.sheds.is_empty());
         assert_eq!(rt.queue_len(), 0);
         let mut ids: Vec<u64> = rep.records.iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -384,6 +527,7 @@ mod tests {
         }
         assert_eq!(rep.summary.n, 8);
         assert_eq!(rep.summary.deadline_misses, 0);
+        assert_eq!(rep.summary.sheds, 0);
         assert!(rep.summary.p50_ms <= rep.summary.p95_ms);
         assert!(rep.summary.p95_ms <= rep.summary.p99_ms);
     }
@@ -459,5 +603,80 @@ mod tests {
             r1.admit_s,
             r1.arrival_s
         );
+    }
+
+    #[test]
+    fn bounded_queue_sheds_burst_overflow_deterministically() {
+        // a burst of 4 into a 2-deep queue with a 1-wide window: requests 0
+        // and 1 queue (and complete), 2 and 3 are shed at the door — the
+        // deterministic backpressure contract, independent of wall clock
+        let spec = NetSpec::micro();
+        let cfg = ServeConfig { max_inflight: 1, max_queue: Some(2), ..Default::default() };
+        let mut rt = runtime_with(cfg, 1);
+        for k in 0..4u64 {
+            rt.submit(request(&spec, k, 0.0));
+        }
+        let rep = rt.run().unwrap();
+        let mut served: Vec<u64> = rep.records.iter().map(|r| r.id).collect();
+        served.sort_unstable();
+        assert_eq!(served, vec![0, 1]);
+        let mut shed: Vec<u64> = rep.sheds.iter().map(|s| s.id).collect();
+        shed.sort_unstable();
+        assert_eq!(shed, vec![2, 3]);
+        for s in &rep.sheds {
+            assert_eq!(s.reason, ShedReason::QueueFull);
+            assert!(s.shed_s >= s.arrival_s);
+        }
+        assert_eq!(rep.summary.n, 2);
+        assert_eq!(rep.summary.sheds, 2);
+        assert!(rep.summary.render().contains("shed 2"));
+    }
+
+    #[test]
+    fn shape_batch_policy_coalesces_and_fans_out() {
+        // 4 same-shape requests under shape-batch(2): exactly 2 batched
+        // instances on the trace, 4 per-request records with the right ids
+        let spec = NetSpec::micro();
+        let cfg = ServeConfig {
+            max_inflight: 4,
+            policy: PolicyKind::ShapeBatch { max_batch: 2, window_ms: 1e6 },
+            ..Default::default()
+        };
+        let mut rt = runtime_with(cfg, 2);
+        for k in 0..4u64 {
+            rt.submit(request(&spec, k, 0.0));
+        }
+        let rep = rt.run().unwrap();
+        assert_eq!(rep.records.len(), 4);
+        assert_eq!(rep.n_instances(), 2, "4 requests must coalesce into 2 instances");
+        // coalesced peers share admit and completion stamps
+        let by_id = |id: u64| rep.records.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).admit_s, by_id(1).admit_s);
+        assert_eq!(by_id(0).complete_s, by_id(1).complete_s);
+        // every output has its own batch-1 row
+        for r in &rep.records {
+            assert_eq!(r.output.dims()[0], 1);
+            assert_eq!(r.logits.dims()[0], 1);
+        }
+    }
+
+    #[test]
+    fn edf_policy_drains_and_respects_deadline_accounting() {
+        let spec = NetSpec::micro();
+        let cfg = ServeConfig {
+            max_inflight: 2,
+            policy: PolicyKind::Edf,
+            ..Default::default()
+        };
+        let mut rt = runtime_with(cfg, 2);
+        for k in 0..4u64 {
+            let mut r = request(&spec, k, 0.0);
+            r.deadline_ms = Some(1e9);
+            rt.submit(r);
+        }
+        let rep = rt.run().unwrap();
+        assert_eq!(rep.records.len(), 4);
+        assert!(rep.sheds.is_empty(), "nothing hopeless under a huge budget");
+        assert_eq!(rep.summary.deadline_misses, 0);
     }
 }

@@ -1,14 +1,23 @@
-//! The deterministic serving timeline: score a synthetic request load on the
+//! The deterministic serving timeline: score synthetic request loads on the
 //! virtual cluster (V100 + 25 GbE cost model) instead of the live pool.
 //!
-//! The composed schedule comes from `mgrit::taskgraph::mg_serve` — one
-//! forward-only instance per request, joined only by admission edges — and
-//! request arrivals enter as per-instance release times in
-//! `sim::simulate_released`. Everything is virtual time, so latency
-//! percentiles and deadline misses are bit-reproducible across runs: the
-//! record behind the continuous-vs-barrier serving experiment
-//! (`experiments::serve`) and the determinism test in
-//! `tests/serving_integration.rs`.
+//! Two models, both bit-reproducible:
+//!
+//! - [`simulate_serving`] — the *static* admission-edge model: one composed
+//!   `mgrit::taskgraph::mg_serve` schedule (continuous vs batch-barrier
+//!   admission as graph edges) scored by `sim::simulate_released` with
+//!   request arrivals as per-instance release times. Good for policies
+//!   expressible as static edges; kept as the continuous-vs-barrier
+//!   experiment's engine.
+//! - [`simulate_serving_policy`] — the *dynamic* policy model: a
+//!   [`SchedulerPolicy`] drives a `sim::SimSession` through the same
+//!   intake → decide → wait → retire loop the live runtime runs, in virtual
+//!   time. Admission order, shape coalescing (batched instance graphs whose
+//!   cost annotations carry the coalesced leading dimension), bounded-queue
+//!   backpressure, and shedding are all *decisions made during the run* —
+//!   which is what lets all three shipped policies (FIFO / EDF /
+//!   shape-batch) be scored on the same trace and compared
+//!   (`experiments::serve::policy_comparison`).
 
 use crate::coordinator::Partition;
 use crate::mgrit::fas::RelaxKind;
@@ -16,12 +25,14 @@ use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{self, Admission, Granularity};
 use crate::model::NetSpec;
 use crate::perfmodel::ClusterModel;
-use crate::sim;
+use crate::sim::{self, SimSession};
 use crate::Result;
 
-use super::request::LatencySummary;
+use super::policy::{PolicyCtx, PolicyKind, QueuedRequest, SchedulerPolicy};
+use super::request::{LatencySummary, ShedReason};
 
-/// Synthetic-load shape for one simulated serving run.
+/// Synthetic-load shape for one simulated serving run (static admission-edge
+/// model; see [`SimPolicyConfig`] for the policy-driven model).
 #[derive(Debug, Clone)]
 pub struct SimServeConfig {
     /// Number of requests.
@@ -115,12 +126,303 @@ pub fn simulate_serving(
     };
     let span = completions.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
         - arrivals.first().copied().unwrap_or(0.0);
-    let summary = LatencySummary::from_latencies(&latencies_ms, span.max(0.0), misses);
+    let summary = LatencySummary::from_latencies(&latencies_ms, span.max(0.0), misses, 0);
     Ok(SimServeOutcome {
         arrivals_s: arrivals,
         completions_s: completions,
         latencies_ms,
         makespan_s: rep.makespan_s,
+        summary,
+    })
+}
+
+/// One request of a policy-driven virtual-time serving run: arrival,
+/// optional budget, and row count (the leading dimension it contributes to a
+/// coalesced instance). All sim requests share the model's input shape —
+/// shape keys only separate genuinely different trailing dims, which one
+/// deployed model does not produce.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimRequest {
+    /// Caller-assigned request id.
+    pub id: u64,
+    /// Virtual arrival time (seconds).
+    pub arrival_s: f64,
+    /// Latency budget (ms from arrival), if any.
+    pub deadline_ms: Option<f64>,
+    /// Rows this request contributes to an instance's leading dimension.
+    pub rows: usize,
+}
+
+impl SimRequest {
+    /// An open-loop load: `n` batch-1 requests, request k arriving at
+    /// `k / rate` (all at t = 0 when `rate ≤ 0` — a burst), each with the
+    /// same optional budget.
+    pub fn open_loop(n: usize, rate_rps: f64, deadline_ms: Option<f64>) -> Vec<SimRequest> {
+        (0..n)
+            .map(|k| SimRequest {
+                id: k as u64,
+                arrival_s: if rate_rps > 0.0 { k as f64 / rate_rps } else { 0.0 },
+                deadline_ms,
+                rows: 1,
+            })
+            .collect()
+    }
+}
+
+/// Configuration of one policy-driven virtual-time serving run — the sim
+/// mirror of the live `ServeConfig` (the policy itself is passed to
+/// [`simulate_serving_policy`] so one config can score several).
+#[derive(Debug, Clone)]
+pub struct SimPolicyConfig {
+    /// Early-stopped MG cycles per request.
+    pub cycles: usize,
+    /// Relaxation pattern of each V-cycle.
+    pub relax: RelaxKind,
+    /// F-relaxation task granularity.
+    pub granularity: Granularity,
+    /// Maximum graph instances concurrently in flight.
+    pub max_inflight: usize,
+    /// Bounded admission queue (`None` = unbounded), as in `ServeConfig`.
+    pub max_queue: Option<usize>,
+}
+
+impl Default for SimPolicyConfig {
+    fn default() -> Self {
+        SimPolicyConfig {
+            cycles: 2,
+            relax: RelaxKind::FCF,
+            granularity: Granularity::PerStep,
+            max_inflight: 4,
+            max_queue: None,
+        }
+    }
+}
+
+/// The per-request outcome of a policy-driven virtual-time run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimRequestOutcome {
+    /// The request's id.
+    pub id: u64,
+    /// Virtual arrival time (seconds).
+    pub arrival_s: f64,
+    /// Virtual admission time (seconds).
+    pub admit_s: f64,
+    /// Virtual completion time (seconds).
+    pub complete_s: f64,
+    /// Latency (ms): completion − arrival.
+    pub latency_ms: f64,
+    /// Whether the completion overran the request's budget.
+    pub missed_deadline: bool,
+}
+
+/// The deterministic outcome of one policy-driven virtual-time serving run.
+#[derive(Debug, Clone)]
+pub struct PolicyServeOutcome {
+    /// Which policy produced it ([`SchedulerPolicy::name`]).
+    pub policy: &'static str,
+    /// Served requests, in completion order.
+    pub completed: Vec<SimRequestOutcome>,
+    /// `(id, shed time, reason)` of every dropped request, in drop order —
+    /// the same [`ShedReason`] taxonomy as the live runtime's `ShedRecord`.
+    pub sheds: Vec<(u64, f64, ShedReason)>,
+    /// Graph instances admitted (under coalescing, fewer than requests).
+    pub instances: usize,
+    /// Virtual makespan of the whole drain.
+    pub makespan_s: f64,
+    /// Aggregate summary (sheds included).
+    pub summary: LatencySummary,
+}
+
+/// Deterministic service-time estimate the sim hands EDF for shedding: the
+/// virtual makespan of ONE batch-1 instance graph running alone on the
+/// cluster (seconds). The live runtime learns the same quantity from
+/// observed completions instead.
+pub fn service_estimate_s(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    cluster: &ClusterModel,
+    cfg: &SimPolicyConfig,
+) -> Result<f64> {
+    let g = taskgraph::mg_forward_with(
+        spec,
+        hier,
+        partition,
+        1,
+        cfg.cycles,
+        cfg.relax,
+        cfg.granularity,
+    );
+    Ok(sim::simulate(&g, cluster, false)?.makespan_s)
+}
+
+/// Score a request load under `policy` on the deterministic virtual
+/// timeline: the same intake → decide → wait → retire loop as the live
+/// `ServingRuntime::run`, with `sim::SimSession` as the executor and virtual
+/// time as the clock. Identical inputs produce bit-identical outcomes.
+pub fn simulate_serving_policy(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    devices: usize,
+    cfg: &SimPolicyConfig,
+    requests: &[SimRequest],
+    kind: PolicyKind,
+) -> Result<PolicyServeOutcome> {
+    anyhow::ensure!(!requests.is_empty(), "need at least one request");
+    anyhow::ensure!(cfg.max_inflight >= 1, "need an in-flight window of at least 1");
+    // same constructor contract as the live ServingRuntime::new
+    anyhow::ensure!(
+        cfg.max_queue.map(|q| q >= 1).unwrap_or(true),
+        "a bounded queue needs at least one slot"
+    );
+    let mut policy = kind.build()?;
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let partition = Partition::contiguous(n_blocks, devices)?;
+    let cluster = ClusterModel::tx_gaia(partition.n_devices());
+    let svc = service_estimate_s(spec, hier, &partition, &cluster, cfg)?;
+    // the model's input shape; rows vary per request
+    let tail: Vec<usize> =
+        vec![spec.opening.in_channels, spec.opening.in_h, spec.opening.in_w];
+
+    let mut future: std::collections::VecDeque<SimRequest> = {
+        let mut v = requests.to_vec();
+        v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        v.into()
+    };
+    let mut session = SimSession::new(&cluster, false);
+    let mut waiting: Vec<SimRequest> = Vec::new();
+    let mut active: std::collections::BTreeMap<usize, (Vec<SimRequest>, f64)> =
+        std::collections::BTreeMap::new();
+    let mut completed: Vec<SimRequestOutcome> = Vec::new();
+    let mut sheds: Vec<(u64, f64, ShedReason)> = Vec::new();
+    let mut instances = 0usize;
+
+    loop {
+        let now = session.now();
+        // 1. intake (bounded queue sheds at the door)
+        while future.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
+            let req = future.pop_front().expect("checked front");
+            if cfg.max_queue.map(|cap| waiting.len() >= cap).unwrap_or(false) {
+                sheds.push((req.id, now, ShedReason::QueueFull));
+                continue;
+            }
+            waiting.push(req);
+        }
+        // 2. decide until the policy rests
+        let wait_hint: Option<f64> = loop {
+            let view: Vec<QueuedRequest> = waiting
+                .iter()
+                .map(|r| {
+                    let mut dims = Vec::with_capacity(1 + tail.len());
+                    dims.push(r.rows);
+                    dims.extend_from_slice(&tail);
+                    QueuedRequest {
+                        id: r.id,
+                        arrival_s: r.arrival_s,
+                        deadline_ms: r.deadline_ms,
+                        dims,
+                    }
+                })
+                .collect();
+            let ctx = PolicyCtx {
+                now: session.now(),
+                free_slots: cfg.max_inflight.saturating_sub(active.len()),
+                service_estimate_s: svc,
+            };
+            let d = policy.decide(&view, &ctx);
+            if !d.acted() {
+                break d.wait_until;
+            }
+            // the one shared protocol implementation (see Decision::apply):
+            // identical validation/extraction semantics to the live runtime
+            let (group, shed) = d.apply(&mut waiting, policy.name(), ctx.free_slots)?;
+            for req in shed {
+                sheds.push((req.id, session.now(), ShedReason::DeadlineHopeless));
+            }
+            if group.is_empty() {
+                continue;
+            }
+            let rows: usize = group.iter().map(|r| r.rows).sum();
+            let admit_s = session.now();
+            // the coalesced leading dimension prices the instance's kernels:
+            // one launch per kernel amortized over `rows` requests
+            let sub = taskgraph::mg_forward_with(
+                spec,
+                hier,
+                &partition,
+                rows.max(1),
+                cfg.cycles,
+                cfg.relax,
+                cfg.granularity,
+            );
+            let inst = session.admit(sub)?;
+            instances += 1;
+            active.insert(inst, (group, admit_s));
+        };
+        // 3. retire
+        let mut harvested = false;
+        while let Some(inst) = session.poll_finished() {
+            harvested = true;
+            let (group, admit_s) = active
+                .remove(&inst)
+                .ok_or_else(|| anyhow::anyhow!("finished instance {inst} has no requests"))?;
+            let complete_s = session
+                .finished_at(inst)
+                .ok_or_else(|| anyhow::anyhow!("finished instance {inst} has no stamp"))?;
+            for req in group {
+                let latency_ms = (complete_s - req.arrival_s) * 1e3;
+                completed.push(SimRequestOutcome {
+                    id: req.id,
+                    arrival_s: req.arrival_s,
+                    admit_s,
+                    complete_s,
+                    latency_ms,
+                    missed_deadline: req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false),
+                });
+            }
+        }
+        if active.is_empty() && waiting.is_empty() && future.is_empty() {
+            break;
+        }
+        if harvested {
+            continue;
+        }
+        // 4. advance virtual time to the next event: a session completion,
+        // the next arrival, or the policy's timer
+        let bound = [future.front().map(|r| r.arrival_s), wait_hint]
+            .into_iter()
+            .flatten()
+            .fold(f64::INFINITY, f64::min);
+        match session.next_event_s() {
+            Some(e) if e <= bound => {
+                session.step()?;
+            }
+            _ => {
+                anyhow::ensure!(
+                    bound.is_finite() && bound > session.now(),
+                    "policy {} deadlocked at t = {} with {} waiting request(s)",
+                    policy.name(),
+                    session.now(),
+                    waiting.len()
+                );
+                session.advance_to(bound)?;
+            }
+        }
+    }
+
+    let makespan_s = session.now();
+    let misses = completed.iter().filter(|r| r.missed_deadline).count();
+    let latencies: Vec<f64> = completed.iter().map(|r| r.latency_ms).collect();
+    let t0 = completed.iter().map(|r| r.arrival_s).fold(f64::INFINITY, f64::min);
+    let t1 = completed.iter().map(|r| r.complete_s).fold(f64::NEG_INFINITY, f64::max);
+    let span = if completed.is_empty() { 0.0 } else { (t1 - t0).max(0.0) };
+    let summary = LatencySummary::from_latencies(&latencies, span, misses, sheds.len());
+    Ok(PolicyServeOutcome {
+        policy: policy.name(),
+        completed,
+        sheds,
+        instances,
+        makespan_s,
         summary,
     })
 }
@@ -202,5 +504,107 @@ mod tests {
         assert!(out.arrivals_s.iter().all(|&a| a == 0.0));
         assert_eq!(out.latencies_ms.len(), 3);
         assert!(out.latencies_ms.iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn policy_sim_fifo_is_deterministic_and_complete() {
+        let (spec, hier) = setup();
+        let cfg = SimPolicyConfig { max_inflight: 3, ..Default::default() };
+        let reqs = SimRequest::open_loop(10, 10_000.0, None);
+        let a = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo).unwrap();
+        let b = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo).unwrap();
+        assert_eq!(a.completed, b.completed, "policy timeline not reproducible");
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.completed.len(), 10);
+        assert_eq!(a.instances, 10, "FIFO never coalesces");
+        assert!(a.sheds.is_empty());
+        // FIFO admits in arrival order
+        let mut admits: Vec<(f64, u64)> =
+            a.completed.iter().map(|r| (r.admit_s, r.id)).collect();
+        admits.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        let ids: Vec<u64> = admits.iter().map(|x| x.1).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        // every request: arrival ≤ admit ≤ complete
+        for r in &a.completed {
+            assert!(r.arrival_s <= r.admit_s && r.admit_s <= r.complete_s);
+            assert!(r.latency_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn policy_sim_shape_batch_coalesces_and_amortizes() {
+        // a burst of 8 under shape-batch(4) runs as 2 batched instances and
+        // finishes the drain no later than 8 batch-1 FIFO instances — the
+        // per-kernel launch amortization the coalesced leading dim models
+        let (spec, hier) = setup();
+        let cfg = SimPolicyConfig { max_inflight: 4, ..Default::default() };
+        let reqs = SimRequest::open_loop(8, 0.0, None);
+        let fifo =
+            simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo).unwrap();
+        let batch = simulate_serving_policy(
+            &spec,
+            &hier,
+            2,
+            &cfg,
+            &reqs,
+            PolicyKind::ShapeBatch { max_batch: 4, window_ms: 1.0 },
+        )
+        .unwrap();
+        assert_eq!(batch.completed.len(), 8);
+        assert_eq!(batch.instances, 2, "8 requests must coalesce into 2 instances");
+        assert_eq!(fifo.instances, 8);
+        assert!(
+            batch.makespan_s < fifo.makespan_s,
+            "coalescing should amortize launches: {} vs {}",
+            batch.makespan_s,
+            fifo.makespan_s
+        );
+    }
+
+    #[test]
+    fn policy_sim_bounded_queue_sheds() {
+        let (spec, hier) = setup();
+        let cfg =
+            SimPolicyConfig { max_inflight: 1, max_queue: Some(2), ..Default::default() };
+        let reqs = SimRequest::open_loop(5, 0.0, None);
+        let out =
+            simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo).unwrap();
+        // burst of 5 into a 2-deep queue: 0 and 1 queue and complete, the
+        // rest shed at the door, deterministically
+        let mut served: Vec<u64> = out.completed.iter().map(|r| r.id).collect();
+        served.sort_unstable();
+        assert_eq!(served, vec![0, 1]);
+        let shed_ids: Vec<u64> = out.sheds.iter().map(|s| s.0).collect();
+        assert_eq!(shed_ids, vec![2, 3, 4]);
+        assert!(out.sheds.iter().all(|s| s.2 == ShedReason::QueueFull));
+        assert_eq!(out.summary.sheds, 3);
+        assert_eq!(out.summary.n, 2);
+        // the live constructor contract holds here too: a 0-slot queue is
+        // rejected, not a silent shed-everything configuration
+        let zero = SimPolicyConfig { max_queue: Some(0), ..cfg };
+        assert!(simulate_serving_policy(&spec, &hier, 2, &zero, &reqs, PolicyKind::Fifo).is_err());
+    }
+
+    #[test]
+    fn policy_sim_edf_sheds_hopeless_requests() {
+        // a budget far below one service time is hopeless from arrival: EDF
+        // sheds it immediately (no wasted work), FIFO serves it late (a miss)
+        let (spec, hier) = setup();
+        let cfg = SimPolicyConfig { max_inflight: 2, ..Default::default() };
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let partition = Partition::contiguous(n_blocks, 2).unwrap();
+        let cluster = ClusterModel::tx_gaia(partition.n_devices());
+        let svc = service_estimate_s(&spec, &hier, &partition, &cluster, &cfg).unwrap();
+        let budget_ms = svc * 1e3 / 2.0; // half a service time: unmeetable
+        let reqs = SimRequest::open_loop(4, 0.0, Some(budget_ms));
+        let edf = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Edf).unwrap();
+        assert_eq!(edf.sheds.len(), 4, "every hopeless request shed");
+        assert!(edf.sheds.iter().all(|s| s.2 == ShedReason::DeadlineHopeless));
+        assert!(edf.completed.is_empty());
+        assert_eq!(edf.summary.deadline_misses, 0);
+        let fifo =
+            simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo).unwrap();
+        assert_eq!(fifo.completed.len(), 4, "FIFO ignores budgets");
+        assert_eq!(fifo.summary.deadline_misses, 4);
     }
 }

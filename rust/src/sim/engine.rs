@@ -440,6 +440,355 @@ pub fn simulate_released(
     })
 }
 
+/// An **incremental** virtual-time executor session — the simulator analogue
+/// of `coordinator::executor::ExecSession`, built for policy-driven serving
+/// where admission times are *decisions*, not inputs.
+///
+/// [`simulate_released`] needs the whole schedule (and every cross-instance
+/// admission edge) up front, so it can only score policies expressible as
+/// static graph edges. A `SimSession` instead holds the virtual cluster
+/// state (device stream slots, NIC occupancy, in-flight comms) **across
+/// calls**: [`SimSession::admit`] splices a self-contained instance graph
+/// into the run at the *current* virtual time, [`SimSession::step`] advances
+/// to the next completion event, and [`SimSession::advance_to`] idles the
+/// cluster forward to a chosen time (the next request arrival or a batch
+/// window expiring). A scheduler loop can therefore interleave decisions
+/// with virtual-time execution exactly as the live `ServingRuntime`
+/// interleaves them with wall-clock execution — which is what makes the
+/// three serving policies scoreable on one deterministic timeline
+/// (`serving::simulate_serving_policy`).
+///
+/// Everything is plain f64 event arithmetic over the same device model as
+/// [`simulate`]: an instance admitted alone at t = 0 finishes at exactly
+/// the makespan `simulate` reports for its graph.
+pub struct SimSession<'a> {
+    cluster: &'a crate::perfmodel::ClusterModel,
+    record_trace: bool,
+    graph: TaskGraph,
+    indeg: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+    /// Unretired task count per instance; 0 ⇒ the instance is finished.
+    remaining: Vec<usize>,
+    /// Virtual completion time per finished instance (its last retirement).
+    done_at: Vec<f64>,
+    finished: VecDeque<usize>,
+    devices: Vec<Device>,
+    nic_free: Vec<f64>,
+    /// In-flight comms: (t_end, task id).
+    comms: Vec<(f64, usize)>,
+    trace: Vec<SimTraceEvent>,
+    comm_total_s: f64,
+    n_kernels: usize,
+    n_comms: usize,
+    now: f64,
+}
+
+impl<'a> SimSession<'a> {
+    /// An idle session over `cluster` at virtual time 0 — no instances, no
+    /// tasks. `record_trace` keeps the kernel/comm timeline (the per-request
+    /// completion times need it off the `done_at` ledger only, so traceless
+    /// sessions stay cheap).
+    pub fn new(cluster: &'a crate::perfmodel::ClusterModel, record_trace: bool) -> SimSession<'a> {
+        let max_conc = cluster.device.max_concurrency;
+        SimSession {
+            cluster,
+            record_trace,
+            graph: TaskGraph::default(),
+            indeg: Vec::new(),
+            dependents: Vec::new(),
+            remaining: Vec::new(),
+            done_at: Vec::new(),
+            finished: VecDeque::new(),
+            devices: (0..cluster.n_devices).map(|_| Device::new(max_conc)).collect(),
+            nic_free: vec![0.0; cluster.n_devices],
+            comms: Vec::new(),
+            trace: Vec::new(),
+            comm_total_s: 0.0,
+            n_kernels: 0,
+            n_comms: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Instances admitted so far.
+    pub fn n_instances(&self) -> usize {
+        self.remaining.len()
+    }
+
+    /// Admit one self-contained instance graph at the current virtual time:
+    /// its root tasks dispatch now, interleaving with whatever is already in
+    /// flight. Returns the instance index.
+    pub fn admit(&mut self, sub: TaskGraph) -> Result<usize> {
+        sub.validate()?;
+        for t in &sub.tasks {
+            if t.device >= self.cluster.n_devices {
+                bail!(
+                    "task {} targets device {} ≥ n_devices {}",
+                    t.id,
+                    t.device,
+                    self.cluster.n_devices
+                );
+            }
+        }
+        let inst = self.remaining.len();
+        let n_sub = sub.tasks.len();
+        let off = self.graph.append_instance(sub, inst, 0);
+        self.indeg.resize(off + n_sub, 0);
+        self.dependents.resize(off + n_sub, Vec::new());
+        self.remaining.push(n_sub);
+        self.done_at.push(self.now);
+        for id in off..off + n_sub {
+            self.indeg[id] = self.graph.tasks[id].deps.len();
+            for k in 0..self.graph.tasks[id].deps.len() {
+                let d = self.graph.tasks[id].deps[k];
+                self.dependents[d].push(id);
+            }
+        }
+        if n_sub == 0 {
+            self.finished.push_back(inst);
+            return Ok(inst);
+        }
+        let t = self.now;
+        for id in off..off + n_sub {
+            if self.indeg[id] == 0 {
+                self.dispatch_at(id, t);
+            }
+        }
+        self.fill_all(t);
+        Ok(inst)
+    }
+
+    /// Route one dependency-free task: kernels queue on their device, comms
+    /// occupy both NICs from `max(t, nic free times)` — identical pricing to
+    /// [`simulate_released`]'s dispatch.
+    fn dispatch_at(&mut self, task_id: usize, t: f64) {
+        let task = &self.graph.tasks[task_id];
+        match &task.kind {
+            TaskKind::Kernel { .. } => {
+                self.devices[task.device].ready.push_back(task_id);
+            }
+            TaskKind::Comm { src, dst, bytes } => {
+                let start = t.max(self.nic_free[*src]).max(self.nic_free[*dst]);
+                let dur = self.cluster.net.message_time(*bytes);
+                self.nic_free[*src] = start + dur;
+                self.nic_free[*dst] = start + dur;
+                self.comms.push((start + dur, task_id));
+                self.comm_total_s += dur;
+                self.n_comms += 1;
+                if self.record_trace {
+                    self.trace.push(SimTraceEvent {
+                        task: task_id,
+                        device: *dst,
+                        slot: 0,
+                        label: "comm",
+                        is_comm: true,
+                        t_start: start,
+                        t_end: start + dur,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Start ready kernels on every device's free stream slots at time `t`.
+    fn fill_all(&mut self, t: f64) {
+        for d in 0..self.devices.len() {
+            let dev = &mut self.devices[d];
+            while dev.running.len() < dev.slots.len() && !dev.ready.is_empty() {
+                dev.advance(t);
+                let task_id = dev.ready.pop_front().unwrap();
+                let TaskKind::Kernel { label, class, flops } = &self.graph.tasks[task_id].kind
+                else {
+                    unreachable!("ready queue holds kernels only");
+                };
+                let slot = dev.slots.iter().position(|s| !s).unwrap();
+                dev.slots[slot] = true;
+                if dev.running.is_empty() {
+                    dev.busy_since = t;
+                }
+                let trace_idx = if self.record_trace {
+                    self.trace.push(SimTraceEvent {
+                        task: task_id,
+                        device: d,
+                        slot,
+                        label,
+                        is_comm: false,
+                        t_start: t,
+                        t_end: f64::NAN,
+                    });
+                    Some(self.trace.len() - 1)
+                } else {
+                    None
+                };
+                let (launch, compute) = self.cluster.device.kernel_phases(*class, *flops);
+                dev.running.push(RunningKernel {
+                    task: task_id,
+                    launch_rem: launch,
+                    compute_rem: compute,
+                    slot,
+                    trace_idx,
+                });
+                self.n_kernels += 1;
+            }
+        }
+    }
+
+    /// Virtual time of the next completion event (a comm finishing, a launch
+    /// phase ending, or a kernel completing), if anything is in flight.
+    pub fn next_event_s(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        for dev in &self.devices {
+            t = t.min(dev.next_completion());
+        }
+        for (tc, _) in &self.comms {
+            t = t.min(*tc);
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Advance to the next event and process its completions. `Ok(false)`
+    /// when nothing is in flight (the session is idle); a non-idle session
+    /// with unretired tasks and no next event is a dependency-cycle error.
+    pub fn step(&mut self) -> Result<bool> {
+        let mut t_next = f64::INFINITY;
+        let mut which: Option<usize> = None; // Some(device) or None => comm
+        for (d, dev) in self.devices.iter().enumerate() {
+            let t = dev.next_completion();
+            if t < t_next {
+                t_next = t;
+                which = Some(d);
+            }
+        }
+        let mut comm_idx: Option<usize> = None;
+        for (i, (t, _)) in self.comms.iter().enumerate() {
+            if *t < t_next {
+                t_next = *t;
+                which = None;
+                comm_idx = Some(i);
+            }
+        }
+        if !t_next.is_finite() {
+            // validated instance graphs are acyclic and self-contained, so an
+            // idle cluster with unretired tasks is a bookkeeping bug, not a
+            // schedule waiting on anything
+            let outstanding: usize = self.remaining.iter().sum();
+            if outstanding > 0 {
+                bail!("sim session stalled with {outstanding} tasks unretired");
+            }
+            return Ok(false);
+        }
+        self.now = self.now.max(t_next);
+        let now = self.now;
+
+        let mut completed: Vec<usize> = Vec::new();
+        match which {
+            None => {
+                let (_, task_id) = self.comms.swap_remove(comm_idx.unwrap());
+                completed.push(task_id);
+            }
+            Some(d) => {
+                let dev = &mut self.devices[d];
+                dev.advance(now);
+                let mut i = 0;
+                while i < dev.running.len() {
+                    if dev.running[i].done() {
+                        let k = dev.running.swap_remove(i);
+                        dev.slots[k.slot] = false;
+                        if let Some(ti) = k.trace_idx {
+                            self.trace[ti].t_end = now;
+                        }
+                        completed.push(k.task);
+                    } else {
+                        i += 1;
+                    }
+                }
+                if dev.running.is_empty() {
+                    dev.busy_s += now - dev.busy_since;
+                }
+            }
+        }
+
+        for task_id in completed {
+            let inst = self.graph.tasks[task_id].instance;
+            self.remaining[inst] -= 1;
+            if self.remaining[inst] == 0 {
+                self.done_at[inst] = now;
+                self.finished.push_back(inst);
+            }
+            let deps = std::mem::take(&mut self.dependents[task_id]);
+            for dep in deps {
+                self.indeg[dep] -= 1;
+                if self.indeg[dep] == 0 {
+                    self.dispatch_at(dep, now);
+                }
+            }
+        }
+        self.fill_all(now);
+        Ok(true)
+    }
+
+    /// Process every event up to and including time `t`, then set the clock
+    /// to `t` (idling the cluster forward if nothing happens in between) —
+    /// how the serving loop models "wait until the next arrival / window".
+    /// The clock never moves backwards.
+    pub fn advance_to(&mut self, t: f64) -> Result<()> {
+        while let Some(e) = self.next_event_s() {
+            if e > t {
+                break;
+            }
+            self.step()?;
+        }
+        self.now = self.now.max(t);
+        Ok(())
+    }
+
+    /// Run every in-flight and dependent task to completion.
+    pub fn run_to_idle(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Next instance whose every task has retired (completion order), if any.
+    pub fn poll_finished(&mut self) -> Option<usize> {
+        self.finished.pop_front()
+    }
+
+    /// Virtual time a finished instance's last task retired; `None` while it
+    /// is still in flight.
+    pub fn finished_at(&self, inst: usize) -> Option<f64> {
+        (self.remaining.get(inst).copied() == Some(0)).then(|| self.done_at[inst])
+    }
+
+    /// The kernel/comm timeline recorded so far (empty unless the session
+    /// was created with `record_trace`).
+    pub fn trace(&self) -> &[SimTraceEvent] {
+        &self.trace
+    }
+
+    /// The graph task record behind a trace event's `task` id.
+    pub fn task_instance(&self, task: usize) -> usize {
+        self.graph.tasks[task].instance
+    }
+
+    /// Consume the session into the aggregate report (makespan = the final
+    /// virtual clock).
+    pub fn into_report(self) -> SimReport {
+        SimReport {
+            makespan_s: self.now,
+            device_busy_s: self.devices.iter().map(|d| d.busy_s).collect(),
+            comm_total_s: self.comm_total_s,
+            n_kernels: self.n_kernels,
+            n_comms: self.n_comms,
+            trace: self.trace,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -868,5 +1217,104 @@ mod tests {
             narrow.last().unwrap(),
             a.last().unwrap()
         );
+    }
+
+    fn forward_graph(devices: usize) -> taskgraph::TaskGraph {
+        use crate::mgrit::fas::RelaxKind;
+        use crate::mgrit::taskgraph::Granularity;
+        let spec = NetSpec::fig6_depth(32);
+        let hier = Hierarchy::two_level(32, spec.h(), 4).unwrap();
+        let part = Partition::contiguous(hier.fine().blocks(4).len(), devices).unwrap();
+        taskgraph::mg_forward_with(
+            &spec, &hier, &part, 1, 1, RelaxKind::FCF, Granularity::PerStep,
+        )
+    }
+
+    #[test]
+    fn sim_session_lone_instance_matches_batch_simulate() {
+        // one instance admitted at t = 0 into an idle session must finish at
+        // exactly the makespan the batch engine reports for the same graph —
+        // the session adds incrementality, not a different cost model
+        let g = forward_graph(2);
+        let c = cluster(2);
+        let want = simulate(&g, &c, false).unwrap();
+        let mut s = SimSession::new(&c, false);
+        let inst = s.admit(forward_graph(2)).unwrap();
+        s.run_to_idle().unwrap();
+        assert_eq!(s.poll_finished(), Some(inst));
+        assert_eq!(s.finished_at(inst), Some(s.now()));
+        let rep = s.into_report();
+        assert_eq!(rep.makespan_s, want.makespan_s, "session drifted from batch simulate");
+        assert_eq!(rep.n_kernels, want.n_kernels);
+        assert_eq!(rep.n_comms, want.n_comms);
+    }
+
+    #[test]
+    fn sim_session_concurrent_instances_overlap_and_stamp_completions() {
+        let c = cluster(2);
+        let mut s = SimSession::new(&c, true);
+        let i0 = s.admit(forward_graph(2)).unwrap();
+        let i1 = s.admit(forward_graph(2)).unwrap();
+        s.run_to_idle().unwrap();
+        let finished: Vec<usize> = std::iter::from_fn(|| s.poll_finished()).collect();
+        assert_eq!(finished.len(), 2);
+        let t0 = s.finished_at(i0).unwrap();
+        let t1 = s.finished_at(i1).unwrap();
+        // completion stamps equal each instance's latest trace t_end
+        for (inst, t) in [(i0, t0), (i1, t1)] {
+            let last = s
+                .trace()
+                .iter()
+                .filter(|e| !e.is_comm && s.task_instance(e.task) == inst)
+                .map(|e| e.t_end)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(t, last, "instance {inst} stamp != last kernel retirement");
+        }
+        // two co-admitted instances share the cluster: both run before either
+        // finishes (some kernel of each starts before the other's completion)
+        let first_start = |inst: usize| {
+            s.trace()
+                .iter()
+                .filter(|e| !e.is_comm && s.task_instance(e.task) == inst)
+                .map(|e| e.t_start)
+                .fold(f64::INFINITY, f64::min)
+        };
+        assert!(first_start(i1) < t0, "instance 1 never overlapped instance 0");
+    }
+
+    #[test]
+    fn sim_session_staggered_admission_and_idle_advance() {
+        let c = cluster(2);
+        let mut s = SimSession::new(&c, true);
+        assert!(s.next_event_s().is_none());
+        assert!(!s.step().unwrap(), "idle session must report no work");
+        // idle-advance models waiting for an arrival
+        s.advance_to(0.5).unwrap();
+        assert_eq!(s.now(), 0.5);
+        let i0 = s.admit(forward_graph(2)).unwrap();
+        // a second instance admitted later never runs anything earlier
+        s.advance_to(s.now() + 1e-5).unwrap();
+        let i1 = s.admit(forward_graph(2)).unwrap();
+        s.run_to_idle().unwrap();
+        let start_of = |inst: usize| {
+            s.trace()
+                .iter()
+                .filter(|e| s.task_instance(e.task) == inst)
+                .map(|e| e.t_start)
+                .fold(f64::INFINITY, f64::min)
+        };
+        assert!(start_of(i0) >= 0.5, "work before the clock reached admission");
+        assert!(start_of(i1) >= 0.5 + 1e-5);
+        assert!(s.finished_at(i0).unwrap() <= s.finished_at(i1).unwrap());
+        // the timeline is bit-reproducible
+        let replay = |mut sess: SimSession| -> (f64, f64) {
+            let a = sess.admit(forward_graph(2)).unwrap();
+            let b = sess.admit(forward_graph(2)).unwrap();
+            sess.run_to_idle().unwrap();
+            (sess.finished_at(a).unwrap(), sess.finished_at(b).unwrap())
+        };
+        let x = replay(SimSession::new(&c, false));
+        let y = replay(SimSession::new(&c, false));
+        assert_eq!(x, y);
     }
 }

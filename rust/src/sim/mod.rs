@@ -16,4 +16,4 @@
 pub mod engine;
 pub mod timeline;
 
-pub use engine::{simulate, simulate_released, SimReport, SimTraceEvent};
+pub use engine::{simulate, simulate_released, SimReport, SimSession, SimTraceEvent};

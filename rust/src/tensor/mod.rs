@@ -106,6 +106,43 @@ impl Tensor {
         Ok(Tensor { dims, data: self.data[start * row..(start + count) * row].to_vec() })
     }
 
+    /// Concatenate tensors along the leading (batch) dimension — the inverse
+    /// of [`Tensor::slice_batch`]: `concat_batch(&[a.slice_batch(0, k)?,
+    /// a.slice_batch(k, b − k)?])` reproduces `a` bitwise, and slicing a
+    /// concatenation back at the original row offsets reproduces every part
+    /// bitwise (the round-trip law the shape-batching serving policy relies
+    /// on). All parts must share their trailing dims (`dims[1..]`); the
+    /// output's leading dim is the sum of the parts' leading dims. Errors on
+    /// an empty part list, a 0-d part, or a trailing-shape mismatch.
+    pub fn concat_batch(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = match parts.first() {
+            Some(t) => *t,
+            None => bail!("concat_batch: empty part list"),
+        };
+        if first.dims.is_empty() {
+            bail!("concat_batch on a 0-d tensor");
+        }
+        let tail = &first.dims[1..];
+        let mut rows = 0usize;
+        for (i, p) in parts.iter().enumerate() {
+            if p.dims.is_empty() || &p.dims[1..] != tail {
+                bail!(
+                    "concat_batch: part {i} shape {:?} does not share trailing dims {:?}",
+                    p.dims,
+                    tail
+                );
+            }
+            rows += p.dims[0];
+        }
+        let mut dims = first.dims.clone();
+        dims[0] = rows;
+        let mut data = Vec::with_capacity(rows * tail.iter().product::<usize>());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor { dims, data })
+    }
+
     /// Elementwise a += alpha * b (axpy), shape-checked.
     pub fn axpy(&mut self, alpha: f32, b: &Tensor) -> Result<()> {
         if self.dims != b.dims {
@@ -209,6 +246,45 @@ mod tests {
         assert!(full.data() == t.data());
         assert!(t.slice_batch(3, 2).is_err());
         assert!(t.slice_batch(0, 0).is_err());
+    }
+
+    #[test]
+    fn concat_batch_round_trips_with_slice_batch() {
+        // slice ∘ concat == identity, bitwise, at uneven part widths
+        let a = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let b = Tensor::new(vec![1, 3], vec![9.0, 8.0, 7.0]).unwrap();
+        let c = Tensor::new(vec![3, 3], (10..19).map(|i| i as f32).collect()).unwrap();
+        let joint = Tensor::concat_batch(&[&a, &b, &c]).unwrap();
+        assert_eq!(joint.dims(), &[6, 3]);
+        assert!(joint.slice_batch(0, 2).unwrap().data() == a.data());
+        assert!(joint.slice_batch(2, 1).unwrap().data() == b.data());
+        assert!(joint.slice_batch(3, 3).unwrap().data() == c.data());
+        // concat ∘ slice == identity: re-splitting a tensor and re-joining
+        // the parts reproduces the original bytes
+        let back = Tensor::concat_batch(&[
+            &joint.slice_batch(0, 4).unwrap(),
+            &joint.slice_batch(4, 2).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(back.dims(), joint.dims());
+        assert!(back.data() == joint.data());
+        // a single-part concat copies the tensor bitwise (the batch-1 path)
+        let solo = Tensor::concat_batch(&[&a]).unwrap();
+        assert_eq!(solo.dims(), a.dims());
+        assert!(solo.data() == a.data());
+    }
+
+    #[test]
+    fn concat_batch_rejects_bad_parts() {
+        let a = Tensor::zeros(&[2, 3]);
+        let wrong_tail = Tensor::zeros(&[2, 4]);
+        let wrong_rank = Tensor::zeros(&[2, 3, 1]);
+        assert!(Tensor::concat_batch(&[]).is_err(), "empty part list");
+        assert!(Tensor::concat_batch(&[&a, &wrong_tail]).is_err(), "trailing-dim mismatch");
+        assert!(Tensor::concat_batch(&[&a, &wrong_rank]).is_err(), "rank mismatch");
+        // uneven tails on the way back out are rejected by slice_batch
+        let joint = Tensor::concat_batch(&[&a, &a]).unwrap();
+        assert!(joint.slice_batch(3, 2).is_err(), "slice past the concatenated batch");
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! Serving end-to-end: N inference requests streamed through the live
 //! continuous-batching runtime must (a) produce outputs BIT-IDENTICAL to the
-//! serial per-request MGRIT reference, (b) show two request instances
-//! concurrently in flight on the live `ExecEvent` trace (no per-request
-//! serialization), and (c) give deterministic deadline-miss accounting on
-//! the virtual serving timeline.
+//! serial per-request MGRIT reference — under every scheduling policy,
+//! including requests coalesced into a shape-batched instance — (b) show two
+//! request instances concurrently in flight on the live `ExecEvent` trace
+//! (no per-request serialization), (c) give deterministic deadline-miss and
+//! shed accounting on the virtual serving timeline, and (d) let EDF
+//! admission strictly reduce deadline misses vs FIFO on a burst load in the
+//! deterministic sim.
 
 use std::sync::Arc;
 
+use resnet_mgrit::experiments::serve::deadline_mixed_burst;
 use resnet_mgrit::mgrit::hierarchy::Hierarchy;
 use resnet_mgrit::mgrit::taskgraph::Admission;
 use resnet_mgrit::model::{NetParams, NetSpec};
 use resnet_mgrit::serving::{
-    self, InferRequest, ServeConfig, ServingRuntime, SimServeConfig,
+    self, simulate_serving_policy, InferRequest, PolicyKind, ServeConfig, ServingRuntime,
+    ShedReason, SimPolicyConfig, SimServeConfig,
 };
 use resnet_mgrit::solver::host::HostSolver;
 use resnet_mgrit::solver::SolverFactory;
@@ -111,6 +116,137 @@ fn two_request_instances_overlap_on_the_live_trace() {
         report.shows_overlap(),
         "no two request instances were ever concurrently in flight"
     );
+}
+
+#[test]
+fn every_policy_is_bit_identical_to_the_serial_reference() {
+    // (a) extended to the policy layer: the same 8-request burst served
+    // under FIFO, EDF, and shape-batch at TWO coalescing widths (2 and 4)
+    // must produce, for every request, a u^N and logits vector bitwise
+    // equal to the serial per-request reference — scheduling (and
+    // coalescing) choose order and grouping, never arithmetic
+    let spec = Arc::new(NetSpec::fig6_depth(16));
+    let params = Arc::new(NetParams::init(&spec, 310).unwrap());
+    let hier = Hierarchy::two_level(16, spec.h(), 4).unwrap();
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let reqs = requests(&spec, 8, 0.0, Some(1e9));
+    let inputs: Vec<Tensor> = reqs.iter().map(|r| r.input.clone()).collect();
+    for (policy, want_instances) in [
+        (PolicyKind::Fifo, 8),
+        (PolicyKind::Edf, 8),
+        // two batch widths: 8 requests → 4 instances and → 2 instances
+        (PolicyKind::ShapeBatch { max_batch: 2, window_ms: 1e6 }, 4),
+        (PolicyKind::ShapeBatch { max_batch: 4, window_ms: 1e6 }, 2),
+    ] {
+        let cfg = ServeConfig { max_inflight: 4, policy, ..Default::default() };
+        let mut rt = ServingRuntime::new(
+            factory(spec.clone(), params.clone()),
+            spec.clone(),
+            hier.clone(),
+            2,
+            cfg,
+        )
+        .unwrap();
+        for r in reqs.clone() {
+            rt.submit(r);
+        }
+        let opts = rt.mgrit_options();
+        let report = rt.run().unwrap();
+        assert_eq!(report.records.len(), 8, "{policy:?} lost requests");
+        assert!(report.sheds.is_empty(), "{policy:?} shed under a huge budget");
+        assert_eq!(
+            report.n_instances(),
+            want_instances,
+            "{policy:?}: wrong instance count on the trace"
+        );
+        for r in &report.records {
+            let (u_ref, logits_ref) =
+                serving::serial_reference(&exec, &hier, &inputs[r.id as usize], &opts).unwrap();
+            assert!(
+                r.output.data() == u_ref.data(),
+                "{policy:?}, request {}: u^N differs from the serial reference bitwise",
+                r.id
+            );
+            assert!(
+                r.logits.data() == logits_ref.data(),
+                "{policy:?}, request {}: logits differ from the serial reference bitwise",
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn edf_strictly_reduces_deadline_misses_on_a_burst_load() {
+    // (d) the control-signal claim, on the deterministic virtual timeline:
+    // one matched burst load with mixed budgets, scored under FIFO and EDF —
+    // EDF admits tight-budget requests first and strictly reduces misses
+    let spec = NetSpec::fig6_depth(64);
+    let hier = Hierarchy::two_level(64, spec.h(), 4).unwrap();
+    let cfg = SimPolicyConfig { max_inflight: 3, ..Default::default() };
+    let (reqs, _tight_ms, m) = deadline_mixed_burst(&spec, &hier, 2, &cfg, 12).unwrap();
+    assert!(m >= 1);
+    let fifo = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo).unwrap();
+    let edf = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Edf).unwrap();
+    assert!(
+        fifo.summary.deadline_misses >= 1,
+        "the load must pressure FIFO into missing (got {})",
+        fifo.summary.deadline_misses
+    );
+    assert!(
+        edf.summary.deadline_misses < fifo.summary.deadline_misses,
+        "EDF must strictly reduce misses: edf {} vs fifo {}",
+        edf.summary.deadline_misses,
+        fifo.summary.deadline_misses
+    );
+    assert!(edf.sheds.is_empty(), "a meetable load must not be shed");
+    assert_eq!(edf.completed.len(), 12);
+    // bit-reproducible: the same inputs give the same outcome
+    let edf2 = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Edf).unwrap();
+    assert_eq!(edf.completed, edf2.completed);
+    assert_eq!(edf.summary, edf2.summary);
+}
+
+#[test]
+fn bounded_queue_backpressure_sheds_and_still_serves_bit_identically() {
+    // (c) extended to the bounded queue, on the LIVE runtime: a burst of 6
+    // into a 2-deep queue with a 1-wide window serves exactly requests 0-1
+    // (bit-identical to the reference) and sheds 2-5 at the door
+    let spec = Arc::new(NetSpec::fig6_depth(16));
+    let params = Arc::new(NetParams::init(&spec, 311).unwrap());
+    let hier = Hierarchy::two_level(16, spec.h(), 4).unwrap();
+    let cfg = ServeConfig { max_inflight: 1, max_queue: Some(2), ..Default::default() };
+    let mut rt = ServingRuntime::new(
+        factory(spec.clone(), params.clone()),
+        spec.clone(),
+        hier.clone(),
+        2,
+        cfg,
+    )
+    .unwrap();
+    let reqs = requests(&spec, 6, 0.0, None);
+    let inputs: Vec<Tensor> = reqs.iter().map(|r| r.input.clone()).collect();
+    for r in reqs {
+        rt.submit(r);
+    }
+    let opts = rt.mgrit_options();
+    let report = rt.run().unwrap();
+    let mut served: Vec<u64> = report.records.iter().map(|r| r.id).collect();
+    served.sort_unstable();
+    assert_eq!(served, vec![0, 1]);
+    let mut shed: Vec<u64> = report.sheds.iter().map(|s| s.id).collect();
+    shed.sort_unstable();
+    assert_eq!(shed, vec![2, 3, 4, 5]);
+    assert!(report.sheds.iter().all(|s| s.reason == ShedReason::QueueFull));
+    assert_eq!(report.summary.n, 2);
+    assert_eq!(report.summary.sheds, 4);
+    let exec = HostSolver::new(spec.clone(), params).unwrap();
+    for r in &report.records {
+        let (u_ref, logits_ref) =
+            serving::serial_reference(&exec, &hier, &inputs[r.id as usize], &opts).unwrap();
+        assert!(r.output.data() == u_ref.data());
+        assert!(r.logits.data() == logits_ref.data());
+    }
 }
 
 #[test]
