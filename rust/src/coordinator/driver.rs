@@ -19,12 +19,14 @@ use std::sync::Arc;
 
 use super::executor::{self, ExecEvent, MultiExecState};
 use super::partition::{InstanceGroups, Partition};
+use super::placement::{self, PlacementKind};
 use super::streams::StreamPool;
 use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph::{self, Granularity};
+use crate::mgrit::taskgraph::{self, Granularity, TaskGraph};
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
+use crate::perfmodel::ClusterModel;
 use crate::solver::{NetExecutor, SolverFactory};
 use crate::tensor::Tensor;
 use crate::Result;
@@ -121,6 +123,12 @@ pub struct ParallelMgrit<F: SolverFactory> {
     /// Device groups for multi-instance runs: instance k's tasks run on
     /// device group k mod n_groups (group 0 is the partition itself).
     n_groups: usize,
+    /// Scheduling & placement policy. `MinId` (the default) executes the
+    /// graph as built — static `Partition` devices, min-id dispatch — with
+    /// no planning pass; `Heft`/`Lookahead` plan each graph once against
+    /// the `perfmodel` cluster costs and execute the rewritten graph under
+    /// its dispatch priorities. Bit-identical outputs either way.
+    placement: PlacementKind,
 }
 
 impl<F: SolverFactory> ParallelMgrit<F> {
@@ -164,6 +172,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             partition,
             granularity: Granularity::PerStep,
             n_groups,
+            placement: PlacementKind::MinId,
         })
     }
 
@@ -192,6 +201,38 @@ impl<F: SolverFactory> ParallelMgrit<F> {
     /// The configured F-relaxation granularity.
     pub fn granularity(&self) -> Granularity {
         self.granularity
+    }
+
+    /// Select the scheduling & placement policy (see
+    /// [`super::placement`]). The library default is `MinId` — the graphs
+    /// run exactly as built; the CLI defaults to the policy-comparison
+    /// winner instead.
+    pub fn set_placement(&mut self, kind: PlacementKind) {
+        self.placement = kind;
+    }
+
+    /// The configured placement policy.
+    pub fn placement(&self) -> PlacementKind {
+        self.placement
+    }
+
+    /// The cluster cost model the planning pass prices against — one
+    /// modeled device per pool worker.
+    fn cluster(&self) -> ClusterModel {
+        ClusterModel::tx_gaia(self.partition.n_devices() * self.n_groups)
+    }
+
+    /// Run `graph` through the configured placement policy: `MinId` is the
+    /// no-plan fast path (graph unchanged, min-id dispatch); other policies
+    /// return the rewritten graph plus its dispatch priorities.
+    fn planned(&self, graph: TaskGraph) -> Result<(TaskGraph, Option<Vec<f64>>)> {
+        match self.placement {
+            PlacementKind::MinId => Ok((graph, None)),
+            kind => {
+                let p = placement::plan(kind.build().as_ref(), &graph, &self.cluster())?;
+                Ok((p.graph, Some(p.priority)))
+            }
+        }
     }
 
     /// The executable V-cycle schedule this driver runs each MG iteration —
@@ -278,21 +319,37 @@ where
         u0: &Tensor,
         opts: &MgritOptions,
     ) -> Result<(Vec<Tensor>, CycleStats, RunMetrics)> {
-        let cycle = self.cycle_graph(opts);
-        let check =
-            taskgraph::residual_check(&self.spec, &self.hier, &self.partition, self.batch);
+        let (cycle, cycle_pri) = self.planned(self.cycle_graph(opts))?;
+        let (check, check_pri) = self.planned(taskgraph::residual_check(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            self.batch,
+        ))?;
         let state_bytes = 4 * u0.len() as u64;
         let mut st = MultiExecState::initial(&self.hier, u0);
         let mut metrics = RunMetrics::default();
         let mut stats =
             CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
         for _ in 0..opts.max_cycles {
-            let rep = executor::execute(&self.pool, &self.hier, &cycle, &mut st)?;
+            let rep = executor::execute_prioritized(
+                &self.pool,
+                &self.hier,
+                &cycle,
+                &mut st,
+                cycle_pri.as_deref(),
+            )?;
             Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
             metrics.cycles += 1;
             // convergence check: residual at every fine C-point (same
             // arithmetic + accumulation order as the serial engine)
-            let rep = executor::execute(&self.pool, &self.hier, &check, &mut st)?;
+            let rep = executor::execute_prioritized(
+                &self.pool,
+                &self.hier,
+                &check,
+                &mut st,
+                check_pri.as_deref(),
+            )?;
             Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
             let mut acc = 0.0f64;
             for cp in self.hier.fine().cpoints(self.hier.coarsen) {
@@ -396,14 +453,20 @@ where
             inputs.push((u0, labels[k * per..(k + 1) * per].to_vec()));
             ys.push(yk);
         }
-        let graph = self.train_graph_micro(opts, m)?;
+        let (graph, pri) = self.planned(self.train_graph_micro(opts, m)?)?;
         let state_bytes = 4 * inputs[0].0.len() as u64;
         let mut st =
             MultiExecState::initial_train(&self.hier, &inputs, params.clone(), lr)?;
         let mut metrics = RunMetrics::default();
         let mut stats =
             CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
-        let rep = executor::execute(&self.pool, &self.hier, &graph, &mut st)?;
+        let rep = executor::execute_prioritized(
+            &self.pool,
+            &self.hier,
+            &graph,
+            &mut st,
+            pri.as_deref(),
+        )?;
         Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
         metrics.cycles = opts.max_cycles;
         let out = st.into_training_outputs()?;

@@ -20,8 +20,12 @@
 //! ## Dependency-retirement protocol
 //!
 //! 1. in-degrees are counted per task; zero-degree tasks enter the ready
-//!    queue (a min-id heap, so earlier instances get queue priority — the
-//!    pipelining skew);
+//!    queue — a max-heap on the [`placement`](super::placement) dispatch
+//!    priority whose ties break by **lowest task id**, so the default
+//!    all-zero priorities degenerate to the legacy min-id order (earlier
+//!    instances get queue priority — the pipelining skew) and a
+//!    [`super::placement::Placement`]'s HEFT ranks advance the critical
+//!    path first;
 //! 2. ready **Comm** tasks retire immediately on the scheduler thread (local
 //!    execution only *accounts* the transfer — the tensors share memory);
 //! 3. ready **Kernel** tasks take `Arc` handles on their input slots out of
@@ -48,7 +52,6 @@
 //! to the serial solve — asserted by `tests/mgrit_integration.rs` and
 //! `tests/hybrid_integration.rs`.
 
-use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -56,6 +59,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail};
 
+use super::placement::ReadyKey;
 use super::streams::{JobDone, StreamPool};
 use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{GradSrc, Sys, Task, TaskGraph, TaskKind, TaskOp};
@@ -506,6 +510,14 @@ fn account_comm(
     dependents: &[Vec<usize>],
     id: usize,
 ) {
+    // a placement policy may co-locate a transfer's endpoints — the hop
+    // degenerates to a local slot handoff and leaves the traffic ledger
+    // (graphs built against the static Partition map never carry src == dst)
+    if let TaskKind::Comm { src, dst, .. } = &graph.tasks[id].kind {
+        if src == dst {
+            return;
+        }
+    }
     report.comm_events += 1;
     let feeds_reduce = dependents[id]
         .iter()
@@ -548,12 +560,30 @@ fn account_kernel(
 }
 
 /// Execute `graph` on `pool`, mutating `st` in place. `st` must carry at
-/// least as many instances as the graph references.
+/// least as many instances as the graph references. Dispatches in the
+/// legacy min-id order (equivalent to all-zero priorities).
 pub fn execute<F: SolverFactory>(
     pool: &StreamPool<F>,
     hier: &Hierarchy,
     graph: &TaskGraph,
     st: &mut MultiExecState,
+) -> Result<ExecReport>
+where
+    F::Solver: NetExecutor,
+{
+    execute_prioritized(pool, hier, graph, st, None)
+}
+
+/// [`execute`] under a placement policy's dispatch priorities (indexed by
+/// task id; higher dispatches first, ties by lowest id — the vector a
+/// `coordinator::placement::Placement` carries alongside its rewritten
+/// graph). `None` means all-zero: the legacy min-id order, bit-for-bit.
+pub fn execute_prioritized<F: SolverFactory>(
+    pool: &StreamPool<F>,
+    hier: &Hierarchy,
+    graph: &TaskGraph,
+    st: &mut MultiExecState,
+    priority: Option<&[f64]>,
 ) -> Result<ExecReport>
 where
     F::Solver: NetExecutor,
@@ -579,17 +609,30 @@ where
             dependents[d].push(t.id);
         }
     }
+    if let Some(p) = priority {
+        anyhow::ensure!(
+            p.len() == n,
+            "priority vector length {} != task count {n}",
+            p.len()
+        );
+    }
+    let pri = |id: usize| priority.map_or(0.0, |p| p[id]);
     let (tx, rx) = channel::<JobDone<TaskOut>>();
-    // min-id heap: ready tasks of earlier instances enter worker queues
-    // first, giving the micro-batch pipeline its forward skew
-    let mut ready: BinaryHeap<Reverse<usize>> =
-        graph.tasks.iter().filter(|t| t.deps.is_empty()).map(|t| Reverse(t.id)).collect();
+    // priority max-heap with min-id ties: without a placement pass this is
+    // the legacy min-id heap — ready tasks of earlier instances enter worker
+    // queues first, giving the micro-batch pipeline its forward skew
+    let mut ready: BinaryHeap<ReadyKey> = graph
+        .tasks
+        .iter()
+        .filter(|t| t.deps.is_empty())
+        .map(|t| ReadyKey { pri: pri(t.id), id: t.id })
+        .collect();
     let mut in_flight = 0usize;
     let mut retired = 0usize;
 
     while retired < n {
         // dispatch everything currently ready; Comm tasks retire inline
-        while let Some(Reverse(id)) = ready.pop() {
+        while let Some(ReadyKey { id, .. }) = ready.pop() {
             let task = &graph.tasks[id];
             match &task.kind {
                 TaskKind::Comm { .. } => {
@@ -598,7 +641,7 @@ where
                     for &d in &dependents[id] {
                         indeg[d] -= 1;
                         if indeg[d] == 0 {
-                            ready.push(Reverse(d));
+                            ready.push(ReadyKey { pri: pri(d), id: d });
                         }
                     }
                 }
@@ -640,7 +683,7 @@ where
         for &d in &dependents[done.id] {
             indeg[d] -= 1;
             if indeg[d] == 0 {
-                ready.push(Reverse(d));
+                ready.push(ReadyKey { pri: pri(d), id: d });
             }
         }
     }
@@ -690,7 +733,10 @@ where
     graph: TaskGraph,
     indeg: Vec<usize>,
     dependents: Vec<Vec<usize>>,
-    ready: BinaryHeap<Reverse<usize>>,
+    /// Per-task dispatch priority over the union graph (zero unless the
+    /// instance was admitted via [`ExecSession::admit_prioritized`]).
+    priority: Vec<f64>,
+    ready: BinaryHeap<ReadyKey>,
     in_flight: usize,
     /// Unretired task count per instance; 0 ⇒ the instance is finished.
     remaining: Vec<usize>,
@@ -721,6 +767,7 @@ where
             graph: TaskGraph::default(),
             indeg: Vec::new(),
             dependents: Vec::new(),
+            priority: Vec::new(),
             ready: BinaryHeap::new(),
             in_flight: 0,
             remaining: Vec::new(),
@@ -735,8 +782,38 @@ where
     /// Admit one request: a fresh instance seeded with `u0`, running the
     /// self-contained executable graph `sub`. Its ready tasks dispatch
     /// immediately, interleaving with whatever is already in flight. Returns
-    /// the instance index.
+    /// the instance index. Dispatches in the legacy min-id order (all-zero
+    /// priorities).
     pub fn admit(&mut self, sub: TaskGraph, u0: &Tensor) -> Result<usize> {
+        self.admit_inner(sub, u0, None)
+    }
+
+    /// [`ExecSession::admit`] under a placement policy's dispatch
+    /// priorities (indexed by `sub`'s task ids — the vector a
+    /// `coordinator::placement::Placement` carries alongside its rewritten
+    /// graph, which should be the `sub` admitted here so the planned
+    /// devices and the planned order travel together).
+    pub fn admit_prioritized(
+        &mut self,
+        sub: TaskGraph,
+        u0: &Tensor,
+        priority: &[f64],
+    ) -> Result<usize> {
+        anyhow::ensure!(
+            priority.len() == sub.tasks.len(),
+            "priority vector length {} != task count {}",
+            priority.len(),
+            sub.tasks.len()
+        );
+        self.admit_inner(sub, u0, Some(priority))
+    }
+
+    fn admit_inner(
+        &mut self,
+        sub: TaskGraph,
+        u0: &Tensor,
+        priority: Option<&[f64]>,
+    ) -> Result<usize> {
         anyhow::ensure!(
             sub.tasks.iter().all(|t| t.op.is_some()),
             "admitted graph must be fully executable (op on every task)"
@@ -747,6 +824,10 @@ where
         let off = self.graph.append_instance(sub, inst, 0);
         self.indeg.resize(off + n_sub, 0);
         self.dependents.resize(off + n_sub, Vec::new());
+        self.priority.resize(off + n_sub, 0.0);
+        if let Some(p) = priority {
+            self.priority[off..off + n_sub].copy_from_slice(p);
+        }
         self.remaining.push(n_sub);
         self.last_end.push(self.pool.now());
         for id in off..off + n_sub {
@@ -764,7 +845,7 @@ where
         }
         for id in off..off + n_sub {
             if self.indeg[id] == 0 {
-                self.ready.push(Reverse(id));
+                self.ready.push(ReadyKey { pri: self.priority[id], id });
             }
         }
         self.pump()?;
@@ -775,7 +856,7 @@ where
     /// execution only accounts the transfer — same rule as [`execute`],
     /// through the shared `account_comm`).
     fn pump(&mut self) -> Result<()> {
-        while let Some(Reverse(id)) = self.ready.pop() {
+        while let Some(ReadyKey { id, .. }) = self.ready.pop() {
             let is_comm = matches!(self.graph.tasks[id].kind, TaskKind::Comm { .. });
             if is_comm {
                 account_comm(&mut self.report, &self.graph, &self.dependents, id);
@@ -819,7 +900,7 @@ where
         for d in deps {
             self.indeg[d] -= 1;
             if self.indeg[d] == 0 {
-                self.ready.push(Reverse(d));
+                self.ready.push(ReadyKey { pri: self.priority[d], id: d });
             }
         }
     }
@@ -1592,6 +1673,30 @@ mod tests {
         assert!(a.data() == b.data());
         // a wait on an idle session reports no work rather than hanging
         assert!(!session.wait(Some(std::time::Duration::from_millis(1))).unwrap());
+    }
+
+    #[test]
+    fn adversarial_priorities_do_not_change_results() {
+        // the graph carries every RAW/WAR/WAW hazard, so ANY dispatch order
+        // a priority vector induces stays bit-identical to min-id order
+        let (spec, hier, partition, pool, u0) = setup();
+        let g = taskgraph::mg_forward_with(
+            &spec, &hier, &partition, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+        );
+        let mut st_a = MultiExecState::initial(&hier, &u0);
+        execute(&pool, &hier, &g, &mut st_a).unwrap();
+        // highest-id-first: the exact reverse of the legacy tie-break
+        let pri: Vec<f64> = g.tasks.iter().map(|t| t.id as f64).collect();
+        let mut st_b = MultiExecState::initial(&hier, &u0);
+        execute_prioritized(&pool, &hier, &g, &mut st_b, Some(&pri)).unwrap();
+        let a = st_a.into_fine_states();
+        let b = st_b.into_fine_states();
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(x.data() == y.data(), "state {k} differs under reversed priorities");
+        }
+        // a mis-sized priority vector is an error, not a silent truncation
+        let mut st_c = MultiExecState::initial(&hier, &u0);
+        assert!(execute_prioritized(&pool, &hier, &g, &mut st_c, Some(&[0.0])).is_err());
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //! - [`partition::Partition`] — contiguous layer-block → device assignment
 //!   (the paper's MPI model partitioning); [`partition::InstanceGroups`]
 //!   maps micro-batch instances onto device groups.
+//! - [`placement`] — the scheduling & placement layer: a
+//!   [`placement::PlacementPolicy`] (`rank` → dispatch priority, `place` →
+//!   device) planned once per graph against the `perfmodel` costs and then
+//!   consumed identically by the live executor and the virtual-time sim.
+//!   `Partition`'s static map is the `MinId` identity policy's answer; HEFT
+//!   and lookahead re-place cost-aware.
 //! - [`executor`] — the dependency-counting event-driven **multi-instance**
 //!   executor: takes `Arc` handles on a task's input slots, ships it to its
 //!   device's worker, and retires it on completion, releasing dependents
@@ -56,6 +62,7 @@
 pub mod driver;
 pub mod executor;
 pub mod partition;
+pub mod placement;
 pub mod streams;
 
 pub use driver::{InstanceStep, MicroStepOutput, ParallelMgrit, RunMetrics, TrainStepOutput};
@@ -64,4 +71,5 @@ pub use executor::{
     TaskOut,
 };
 pub use partition::{InstanceGroups, Partition};
+pub use placement::{GraphCosts, PlaceCtx, Placement, PlacementKind, PlacementPolicy};
 pub use streams::{JobDone, StreamPool, TraceEvent};

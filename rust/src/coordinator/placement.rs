@@ -1,0 +1,772 @@
+//! Cost-aware scheduling & placement policies shared by the live executor
+//! and the virtual-time simulator.
+//!
+//! Historically dispatch order was baked into `coordinator::executor` (a
+//! min-id ready heap) and placement into the graph builders (`Partition`'s
+//! static block → device map) — placement never saw the cost model, so
+//! reductions parked on the left operand's device and cheap tasks could
+//! block the critical path. This module extracts both decisions behind one
+//! [`PlacementPolicy`] trait:
+//!
+//! - [`PlacementPolicy::rank`] assigns every task a dispatch **priority**
+//!   (higher dispatches first; ties break by lowest task id, so an all-equal
+//!   priority vector reproduces the legacy min-id order bit-for-bit);
+//! - [`PlacementPolicy::place`] picks a kernel's **device** given the
+//!   planner's device states ([`PlaceCtx`]) — `Partition`'s static map is
+//!   one *input* (the task's baked `device` field), not the decision.
+//!
+//! [`plan`] consults the policy once, ahead of execution, over the same
+//! `perfmodel` costs the simulator prices — a deterministic Kahn list
+//! schedule (pop the highest-priority ready task, place kernels at their
+//! earliest-finish-time device) — and returns a [`Placement`]: the rewritten
+//! graph (kernel devices remapped, Comm endpoints re-derived from their
+//! producer/consumer placements, co-located transfers degenerating to
+//! zero-cost) plus the per-task priority vector. Both the live executor
+//! (`execute_prioritized` / `ExecSession::admit_prioritized`) and the sim
+//! (`sim::simulate_prioritized` / `SimSession::admit_prioritized`) consume
+//! that one `Placement`, so the virtual-time engine and the real run can
+//! never drift on a scheduling decision.
+//!
+//! Three policies ship:
+//!
+//! | policy        | rank                  | place                          |
+//! |---------------|-----------------------|--------------------------------|
+//! | [`MinId`]     | constant (id order)   | the graph's baked device       |
+//! | [`Heft`]      | HEFT upward rank      | min earliest-finish-time (EFT) |
+//! | [`Lookahead`] | HEFT upward rank      | min EFT of the most critical child after a one-step lookahead |
+//!
+//! Placement may only change *when/where* a task runs, never *what* it
+//! computes: workers are homogeneous (every `StreamPool` worker holds the
+//! same solver + parameters) and the graph carries every RAW/WAR/WAW hazard,
+//! so any topological execution on any device map stays bit-identical to the
+//! serial references — asserted against `train::mg_step_serial_micro` and
+//! `serving::serial_reference` in the integration tests.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind};
+use crate::perfmodel::ClusterModel;
+use crate::Result;
+
+/// Per-task cost annotations a policy ranks against, computed once per graph
+/// from the same [`ClusterModel`] the simulator prices.
+#[derive(Debug, Clone)]
+pub struct GraphCosts {
+    /// Exclusive service time of each task: `DeviceModel::kernel_time` for
+    /// kernels, `NetworkModel::message_time` for transfers.
+    pub exec_s: Vec<f64>,
+    /// HEFT upward rank: `exec_s[i] + max over dependents of rank_up` — the
+    /// critical-path cost from task i to the graph sink (transfers
+    /// contribute their message time as chain links).
+    pub rank_up: Vec<f64>,
+    /// Dependents adjacency (the reverse of `Task::deps`).
+    pub dependents: Vec<Vec<usize>>,
+}
+
+impl GraphCosts {
+    /// Price every task of `graph` under `cluster` and compute upward ranks.
+    /// One reverse-id pass suffices: `TaskGraph::validate` guarantees deps
+    /// point backwards, so ids are a topological order.
+    pub fn new(graph: &TaskGraph, cluster: &ClusterModel) -> GraphCosts {
+        let n = graph.tasks.len();
+        let mut exec_s = vec![0.0f64; n];
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in &graph.tasks {
+            exec_s[t.id] = match &t.kind {
+                TaskKind::Kernel { class, flops, .. } => {
+                    cluster.device.kernel_time(*class, *flops)
+                }
+                TaskKind::Comm { bytes, .. } => cluster.net.message_time(*bytes),
+            };
+            for &d in &t.deps {
+                dependents[d].push(t.id);
+            }
+        }
+        let mut rank_up = vec![0.0f64; n];
+        for id in (0..n).rev() {
+            let tail = dependents[id].iter().map(|&d| rank_up[d]).fold(0.0f64, f64::max);
+            rank_up[id] = exec_s[id] + tail;
+        }
+        GraphCosts { exec_s, rank_up, dependents }
+    }
+}
+
+/// The planner's device states at one placement decision — the
+/// `device_states` argument of [`PlacementPolicy::place`].
+///
+/// Times follow a serial-device model (each device drains its kernels one
+/// at a time): a deliberate, deterministic *estimate* of the processor-
+/// shared timeline the simulator replays — co-resident kernels share a
+/// device's throughput there, so per-device total work (what EFT balances)
+/// is conserved between the two models.
+#[derive(Debug)]
+pub struct PlaceCtx<'a> {
+    /// The graph being planned (original devices, original Comm endpoints).
+    pub graph: &'a TaskGraph,
+    /// Per-task costs and upward ranks.
+    pub costs: &'a GraphCosts,
+    /// The cluster the costs were priced under.
+    pub cluster: &'a ClusterModel,
+    /// Per-device earliest idle time under the serial-device model.
+    pub free_at: &'a [f64],
+    /// Per-task planned finish time (valid where `placed`).
+    pub finish: &'a [f64],
+    /// Per-task planned device (valid where `placed`; the baked device
+    /// otherwise).
+    pub device: &'a [usize],
+    /// Whether a task has been scheduled yet.
+    pub placed: &'a [bool],
+}
+
+impl PlaceCtx<'_> {
+    /// Devices available for placement.
+    pub fn n_devices(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// Earliest time `task`'s inputs are available on device `d`: the max of
+    /// its dependencies' finish times, where a Comm dependency additionally
+    /// pays its message time iff its producer was placed on a different
+    /// device than `d` (co-located transfers are free — the same rule the
+    /// executor and the sim apply to `src == dst` Comm tasks).
+    pub fn ready_at(&self, task: &Task, d: usize) -> f64 {
+        let mut t = 0.0f64;
+        for &dep in &task.deps {
+            let mut f = self.finish[dep];
+            if let TaskKind::Comm { bytes, .. } = &self.graph.tasks[dep].kind {
+                if let Some(p) = comm_producer(self.graph, dep) {
+                    if self.placed[p] && self.device[p] != d {
+                        f += self.cluster.net.message_time(*bytes);
+                    }
+                }
+            }
+            t = t.max(f);
+        }
+        t
+    }
+
+    /// Earliest start time of `task` on device `d` (input availability and
+    /// device idleness).
+    pub fn est(&self, task: &Task, d: usize) -> f64 {
+        self.free_at[d].max(self.ready_at(task, d))
+    }
+
+    /// Earliest finish time of `task` on device `d`.
+    pub fn eft(&self, task: &Task, d: usize) -> f64 {
+        self.est(task, d) + self.costs.exec_s[task.id]
+    }
+}
+
+/// A scheduling & placement policy: ranks tasks into dispatch priorities and
+/// places kernels onto devices. Consulted once per graph by [`plan`]; the
+/// resulting [`Placement`] drives both the live executor and the simulator.
+pub trait PlacementPolicy {
+    /// Short CLI/report name of this policy.
+    fn name(&self) -> &'static str;
+
+    /// Dispatch priority of `task` (higher dispatches first; ties break by
+    /// lowest task id).
+    fn rank(&self, task: &Task, graph: &TaskGraph, costs: &GraphCosts) -> f64;
+
+    /// Execution device of kernel `task` given the planner's device states.
+    fn place(&self, task: &Task, ctx: &PlaceCtx<'_>) -> usize;
+
+    /// Whether this policy is the identity (keep the graph's baked devices
+    /// and the legacy min-id dispatch order bit-for-bit). [`plan`] skips the
+    /// graph rewrite for identity policies.
+    fn is_identity(&self) -> bool {
+        false
+    }
+}
+
+/// Today's behavior, bit-for-bit: constant priority (so dispatch order
+/// degenerates to min-id) and the graph's baked `Partition` device map.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinId;
+
+impl PlacementPolicy for MinId {
+    fn name(&self) -> &'static str {
+        "min-id"
+    }
+
+    fn rank(&self, _task: &Task, _graph: &TaskGraph, _costs: &GraphCosts) -> f64 {
+        0.0
+    }
+
+    fn place(&self, task: &Task, _ctx: &PlaceCtx<'_>) -> usize {
+        task.device
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+}
+
+/// HEFT (heterogeneous-earliest-finish-time) list scheduling: rank by
+/// upward critical-path cost, place each kernel on the device minimizing
+/// its earliest finish time including transfer cost (ties break by lowest
+/// device id).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Heft;
+
+impl PlacementPolicy for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+
+    fn rank(&self, task: &Task, _graph: &TaskGraph, costs: &GraphCosts) -> f64 {
+        costs.rank_up[task.id]
+    }
+
+    fn place(&self, task: &Task, ctx: &PlaceCtx<'_>) -> usize {
+        let mut best = 0usize;
+        let mut best_eft = f64::INFINITY;
+        for d in 0..ctx.n_devices() {
+            let e = ctx.eft(task, d);
+            if e < best_eft {
+                best = d;
+                best_eft = e;
+            }
+        }
+        best
+    }
+}
+
+/// One-step EFT refinement of [`Heft`]: a kernel is placed to minimize the
+/// earliest finish time of its most *critical* dependent (highest upward
+/// rank, looking through Comm tasks to the consuming kernel), optimistically
+/// assuming that child's other inputs are already available. Falls back to
+/// plain EFT for sink tasks; ties break by the task's own EFT, then lowest
+/// device id.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Lookahead;
+
+impl Lookahead {
+    /// The dependent kernel with the highest upward rank (Comm dependents
+    /// resolve to their consuming kernel), if any.
+    fn critical_child(task: &Task, ctx: &PlaceCtx<'_>) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for &dep in &ctx.costs.dependents[task.id] {
+            let k = match ctx.graph.tasks[dep].kind {
+                TaskKind::Kernel { .. } => dep,
+                TaskKind::Comm { .. } => match comm_consumer(ctx.costs, dep) {
+                    Some(c) if matches!(ctx.graph.tasks[c].kind, TaskKind::Kernel { .. }) => c,
+                    _ => continue,
+                },
+            };
+            if best.is_none_or(|b| ctx.costs.rank_up[k] > ctx.costs.rank_up[b]) {
+                best = Some(k);
+            }
+        }
+        best
+    }
+
+    /// Optimistic EFT of `child` over all devices, given `task` finishing at
+    /// `task_eft` on device `d`: the edge from `task` (direct or through a
+    /// Comm) pays its message time when the child lands elsewhere; other
+    /// already-placed inputs contribute their planned finish; unplaced
+    /// inputs contribute nothing.
+    fn child_eft_after(
+        task: &Task,
+        d: usize,
+        task_eft: f64,
+        child: usize,
+        ctx: &PlaceCtx<'_>,
+    ) -> f64 {
+        let c = &ctx.graph.tasks[child];
+        let mut best = f64::INFINITY;
+        for e in 0..ctx.n_devices() {
+            let mut ready = 0.0f64;
+            for &dep in &c.deps {
+                let via_task = dep == task.id
+                    || (matches!(ctx.graph.tasks[dep].kind, TaskKind::Comm { .. })
+                        && ctx.graph.tasks[dep].deps.contains(&task.id));
+                let f = if via_task {
+                    let xfer = match &ctx.graph.tasks[dep].kind {
+                        TaskKind::Comm { bytes, .. } if e != d => {
+                            ctx.cluster.net.message_time(*bytes)
+                        }
+                        _ => 0.0,
+                    };
+                    task_eft + xfer
+                } else if ctx.placed[dep] {
+                    ctx.finish[dep]
+                } else {
+                    0.0
+                };
+                ready = ready.max(f);
+            }
+            let idle = if e == d { ctx.free_at[e].max(task_eft) } else { ctx.free_at[e] };
+            best = best.min(ready.max(idle) + ctx.costs.exec_s[child]);
+        }
+        best
+    }
+}
+
+impl PlacementPolicy for Lookahead {
+    fn name(&self) -> &'static str {
+        "lookahead"
+    }
+
+    fn rank(&self, task: &Task, _graph: &TaskGraph, costs: &GraphCosts) -> f64 {
+        costs.rank_up[task.id]
+    }
+
+    fn place(&self, task: &Task, ctx: &PlaceCtx<'_>) -> usize {
+        let child = Self::critical_child(task, ctx);
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        let mut best_eft = f64::INFINITY;
+        for d in 0..ctx.n_devices() {
+            let eft = ctx.eft(task, d);
+            let score = match child {
+                None => eft,
+                Some(c) => Self::child_eft_after(task, d, eft, c, ctx),
+            };
+            if score < best_score || (score == best_score && eft < best_eft) {
+                best = d;
+                best_score = score;
+                best_eft = eft;
+            }
+        }
+        best
+    }
+}
+
+/// Producer of a Comm task's payload: its highest-id dependency living on
+/// the transfer's source device (hazard edges may add other deps), falling
+/// back to the highest-id dependency.
+fn comm_producer(graph: &TaskGraph, comm: usize) -> Option<usize> {
+    let t = &graph.tasks[comm];
+    let TaskKind::Comm { src, .. } = t.kind else { return None };
+    t.deps
+        .iter()
+        .copied()
+        .filter(|&d| graph.tasks[d].device == src)
+        .max()
+        .or_else(|| t.deps.iter().copied().max())
+}
+
+/// Consumer of a Comm task's payload: its lowest-id dependent.
+fn comm_consumer(costs: &GraphCosts, comm: usize) -> Option<usize> {
+    costs.dependents[comm].iter().copied().min()
+}
+
+/// The output of [`plan`]: everything the live executor and the simulator
+/// need to execute one policy's scheduling decisions.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Name of the policy that produced this placement.
+    pub policy: &'static str,
+    /// Per-task dispatch priority (indexed by task id; higher first).
+    pub priority: Vec<f64>,
+    /// Per-task planned device (Comm tasks carry their destination).
+    pub device: Vec<usize>,
+    /// The graph with kernel devices remapped and Comm endpoints re-derived
+    /// from their producer/consumer placements (co-located transfers keep
+    /// `src == dst` and execute at zero cost). For an identity policy this
+    /// is a verbatim clone of the input.
+    pub graph: TaskGraph,
+    /// The planner's serial-device makespan estimate (seconds) — an
+    /// *estimate*; the simulator's processor-shared timeline is the score
+    /// of record.
+    pub est_makespan_s: f64,
+}
+
+/// Max-heap key for a priority-dispatched ready queue: higher priority pops
+/// first, ties pop the **lowest** task id — so an all-equal priority vector
+/// reproduces the legacy min-id dispatch order bit-for-bit. Shared by the
+/// planner and the live executor.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadyKey {
+    /// Dispatch priority (higher pops first).
+    pub pri: f64,
+    /// Graph task id (ties pop lowest first).
+    pub id: usize,
+}
+
+impl PartialEq for ReadyKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for ReadyKey {}
+
+impl PartialOrd for ReadyKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.pri.total_cmp(&other.pri).then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+/// Consult `policy` over `graph` under `cluster`: a deterministic Kahn list
+/// schedule popping the highest-priority ready task (ties by lowest id),
+/// placing each kernel via [`PlacementPolicy::place`] at its policy-chosen
+/// device under a serial-device EFT model. Comm tasks are transparent to
+/// the planner's clock (their transfer cost is priced at the consumer, and
+/// only when the endpoints differ — exactly when the executed graph pays
+/// it). Returns the rewritten graph + priorities as a [`Placement`].
+pub fn plan<P: PlacementPolicy + ?Sized>(
+    policy: &P,
+    graph: &TaskGraph,
+    cluster: &ClusterModel,
+) -> Result<Placement> {
+    graph.validate()?;
+    let n = graph.tasks.len();
+    let n_dev = cluster.n_devices.max(1);
+    let costs = GraphCosts::new(graph, cluster);
+    let priority: Vec<f64> =
+        graph.tasks.iter().map(|t| policy.rank(t, graph, &costs)).collect();
+
+    let mut indeg = vec![0usize; n];
+    for t in &graph.tasks {
+        indeg[t.id] = t.deps.len();
+    }
+    let mut heap: BinaryHeap<ReadyKey> = graph
+        .tasks
+        .iter()
+        .filter(|t| t.deps.is_empty())
+        .map(|t| ReadyKey { pri: priority[t.id], id: t.id })
+        .collect();
+    let mut free_at = vec![0.0f64; n_dev];
+    let mut finish = vec![0.0f64; n];
+    let mut device: Vec<usize> = graph.tasks.iter().map(|t| t.device).collect();
+    let mut placed = vec![false; n];
+    let mut scheduled = 0usize;
+    while let Some(ReadyKey { id, .. }) = heap.pop() {
+        let task = &graph.tasks[id];
+        match &task.kind {
+            TaskKind::Comm { .. } => {
+                // transparent: the transfer is priced at the consumer, and
+                // only if the endpoints end up on different devices
+                finish[id] = task.deps.iter().map(|&d| finish[d]).fold(0.0f64, f64::max);
+            }
+            TaskKind::Kernel { .. } => {
+                let (d, eft) = {
+                    let ctx = PlaceCtx {
+                        graph,
+                        costs: &costs,
+                        cluster,
+                        free_at: &free_at,
+                        finish: &finish,
+                        device: &device,
+                        placed: &placed,
+                    };
+                    let d =
+                        if policy.is_identity() { task.device } else { policy.place(task, &ctx) };
+                    anyhow::ensure!(
+                        d < n_dev,
+                        "policy {} placed task {} on device {d} but the cluster has {n_dev}",
+                        policy.name(),
+                        id
+                    );
+                    (d, ctx.eft(task, d))
+                };
+                device[id] = d;
+                finish[id] = eft;
+                free_at[d] = eft;
+            }
+        }
+        placed[id] = true;
+        scheduled += 1;
+        for &dep in &costs.dependents[id] {
+            indeg[dep] -= 1;
+            if indeg[dep] == 0 {
+                heap.push(ReadyKey { pri: priority[dep], id: dep });
+            }
+        }
+    }
+    anyhow::ensure!(
+        scheduled == n,
+        "placement planner stalled at {scheduled}/{n} tasks (cyclic dependencies?)"
+    );
+    let est_makespan_s = finish.iter().fold(0.0f64, |a, &b| a.max(b));
+
+    let mut tasks: Vec<Task> = graph.tasks.clone();
+    if !policy.is_identity() {
+        for t in &mut tasks {
+            match &mut t.kind {
+                TaskKind::Kernel { .. } => t.device = device[t.id],
+                TaskKind::Comm { src, dst, .. } => {
+                    if let Some(p) = comm_producer(graph, t.id) {
+                        *src = device[p];
+                    }
+                    if let Some(c) = comm_consumer(&costs, t.id) {
+                        *dst = device[c];
+                    }
+                    t.device = *dst;
+                    device[t.id] = *dst;
+                }
+            }
+        }
+    }
+    Ok(Placement {
+        policy: policy.name(),
+        priority,
+        device,
+        graph: TaskGraph { tasks },
+        est_makespan_s,
+    })
+}
+
+/// The shipped policy inventory, CLI-selectable via `--placement`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementKind {
+    /// [`MinId`]: the graph's baked devices, min-id dispatch (the library
+    /// default — no planning pass, bit-for-bit today's behavior).
+    #[default]
+    MinId,
+    /// [`Heft`]: upward-rank priorities, min-EFT placement.
+    Heft,
+    /// [`Lookahead`]: upward-rank priorities, one-step EFT refinement.
+    Lookahead,
+}
+
+impl PlacementKind {
+    /// Parse a CLI spelling (`min-id` | `heft` | `lookahead`).
+    pub fn parse(s: &str) -> Result<PlacementKind> {
+        match s {
+            "min-id" | "min_id" | "minid" => Ok(PlacementKind::MinId),
+            "heft" => Ok(PlacementKind::Heft),
+            "lookahead" | "heft-la" => Ok(PlacementKind::Lookahead),
+            other => anyhow::bail!("unknown placement policy {other:?} (min-id|heft|lookahead)"),
+        }
+    }
+
+    /// The policy's report/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::MinId => "min-id",
+            PlacementKind::Heft => "heft",
+            PlacementKind::Lookahead => "lookahead",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(&self) -> Box<dyn PlacementPolicy> {
+        match self {
+            PlacementKind::MinId => Box::new(MinId),
+            PlacementKind::Heft => Box::new(Heft),
+            PlacementKind::Lookahead => Box::new(Lookahead),
+        }
+    }
+
+    /// Every shipped policy, in inventory order.
+    pub fn all() -> [PlacementKind; 3] {
+        [PlacementKind::MinId, PlacementKind::Heft, PlacementKind::Lookahead]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{InstanceGroups, Partition};
+    use crate::mgrit::fas::RelaxKind;
+    use crate::mgrit::hierarchy::Hierarchy;
+    use crate::mgrit::taskgraph::{self, Granularity, KernelClass};
+    use crate::model::NetSpec;
+
+    fn forward_graph(devices: usize) -> (TaskGraph, ClusterModel) {
+        let spec = NetSpec::fig6_depth(32);
+        let hier = Hierarchy::two_level(32, spec.h(), 4).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let part = Partition::contiguous(n_blocks, devices).unwrap();
+        let g = taskgraph::mg_forward_with(
+            &spec,
+            &hier,
+            &part,
+            1,
+            1,
+            RelaxKind::FCF,
+            Granularity::PerStep,
+        );
+        (g, ClusterModel::tx_gaia(part.n_devices()))
+    }
+
+    #[test]
+    fn ready_key_orders_by_priority_then_min_id() {
+        let mut h = BinaryHeap::new();
+        h.push(ReadyKey { pri: 0.0, id: 7 });
+        h.push(ReadyKey { pri: 0.0, id: 3 });
+        h.push(ReadyKey { pri: 1.0, id: 9 });
+        h.push(ReadyKey { pri: 0.0, id: 5 });
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop().map(|k| k.id)).collect();
+        // highest priority first; equal priorities pop in min-id order
+        assert_eq!(order, vec![9, 3, 5, 7]);
+    }
+
+    #[test]
+    fn upward_rank_grows_toward_sources() {
+        let (g, cluster) = forward_graph(2);
+        let costs = GraphCosts::new(&g, &cluster);
+        // rank(dep) ≥ rank(dependent) + exec(dep) − ε for every edge
+        for t in &g.tasks {
+            for &d in &t.deps {
+                assert!(
+                    costs.rank_up[d] >= costs.rank_up[t.id] + costs.exec_s[d] - 1e-15,
+                    "rank_up not monotone along edge {d} -> {}",
+                    t.id
+                );
+            }
+        }
+        // a source's rank bounds the whole downstream chain
+        let max_rank = costs.rank_up.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(max_rank > 0.0);
+    }
+
+    #[test]
+    fn min_id_plan_is_identity() {
+        let (g, cluster) = forward_graph(2);
+        let p = plan(&MinId, &g, &cluster).unwrap();
+        assert_eq!(p.policy, "min-id");
+        assert!(p.priority.iter().all(|&x| x == 0.0));
+        assert!(p.est_makespan_s > 0.0);
+        assert_eq!(p.graph.tasks.len(), g.tasks.len());
+        for (a, b) in p.graph.tasks.iter().zip(&g.tasks) {
+            assert_eq!(a.device, b.device, "task {} device changed", b.id);
+            assert_eq!(a.kind, b.kind, "task {} kind changed", b.id);
+            assert_eq!(a.deps, b.deps, "task {} deps changed", b.id);
+        }
+        // zero-priority dispatch over the unchanged graph replays the legacy
+        // timeline exactly
+        let base = crate::sim::simulate(&g, &cluster, false).unwrap();
+        let planned =
+            crate::sim::simulate_prioritized(&p.graph, &cluster, false, Some(&p.priority))
+                .unwrap();
+        assert_eq!(base.makespan_s, planned.makespan_s);
+        assert_eq!(base.n_comms, planned.n_comms);
+    }
+
+    #[test]
+    fn planned_graphs_stay_valid_and_in_device_range() {
+        let (g, cluster) = forward_graph(4);
+        for kind in PlacementKind::all() {
+            let p = plan(kind.build().as_ref(), &g, &cluster).unwrap();
+            p.graph.validate().unwrap();
+            assert_eq!(p.priority.len(), g.tasks.len());
+            for t in &p.graph.tasks {
+                assert!(t.device < cluster.n_devices, "{}: task {} device", kind.name(), t.id);
+                if let TaskKind::Comm { src, dst, .. } = t.kind {
+                    assert!(src < cluster.n_devices && dst < cluster.n_devices);
+                    assert_eq!(t.device, dst);
+                }
+            }
+            // the planner only remaps placement — never the work itself
+            assert_eq!(p.graph.total_flops(), g.total_flops());
+            assert_eq!(p.graph.n_comms(), g.n_comms());
+        }
+    }
+
+    #[test]
+    fn comm_endpoints_follow_their_producer_and_consumer() {
+        let (g, cluster) = forward_graph(4);
+        let p = plan(&Heft, &g, &cluster).unwrap();
+        for t in &p.graph.tasks {
+            if let TaskKind::Comm { src, dst, .. } = t.kind {
+                if let Some(prod) = comm_producer(&g, t.id) {
+                    assert_eq!(src, p.device[prod], "comm {} src != producer device", t.id);
+                }
+                let costs = GraphCosts::new(&g, &cluster);
+                if let Some(cons) = comm_consumer(&costs, t.id) {
+                    assert_eq!(dst, p.device[cons], "comm {} dst != consumer device", t.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_device_cluster_pins_everything_to_device_zero() {
+        let (g, cluster) = forward_graph(1);
+        for kind in [PlacementKind::Heft, PlacementKind::Lookahead] {
+            let p = plan(kind.build().as_ref(), &g, &cluster).unwrap();
+            assert!(p.graph.tasks.iter().all(|t| t.device == 0));
+        }
+    }
+
+    #[test]
+    fn heft_ranks_critical_chain_above_leaves() {
+        // hand-built diamond: a long chain and a cheap leaf from one source
+        let k = |flops: f64| TaskKind::Kernel { label: "x", class: KernelClass::Conv, flops };
+        let tasks = vec![
+            Task { id: 0, instance: 0, device: 0, kind: k(1e8), deps: vec![], op: None },
+            Task { id: 1, instance: 0, device: 0, kind: k(1e9), deps: vec![0], op: None },
+            Task { id: 2, instance: 0, device: 1, kind: k(1e6), deps: vec![0], op: None },
+            Task { id: 3, instance: 0, device: 0, kind: k(1e9), deps: vec![1], op: None },
+        ];
+        let g = TaskGraph { tasks };
+        let cluster = ClusterModel::tx_gaia(2);
+        let costs = GraphCosts::new(&g, &cluster);
+        let heft = Heft;
+        let chain = heft.rank(&g.tasks[1], &g, &costs);
+        let leaf = heft.rank(&g.tasks[2], &g, &costs);
+        assert!(chain > leaf, "critical chain must outrank the cheap leaf");
+        // and the source outranks everything downstream
+        assert!(heft.rank(&g.tasks[0], &g, &costs) > chain);
+    }
+
+    #[test]
+    fn heft_strictly_beats_min_id_on_multi_instance_training_graph() {
+        // the acceptance gate: on the M = 2 multi-instance training graph at
+        // ≥ 2 devices, cost-aware ranks + EFT placement strictly reduce the
+        // simulated makespan vs the static min-id schedule
+        let spec = NetSpec::fig6_depth(64);
+        let hier = Hierarchy::two_level(64, spec.h(), 4).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        for devices in [2usize, 4] {
+            let part = Partition::contiguous(n_blocks, devices).unwrap();
+            let groups = InstanceGroups::new(1, part.n_devices()).unwrap();
+            let g = taskgraph::mg_train_step_multi(
+                &spec,
+                &hier,
+                &part,
+                &groups,
+                1,
+                2,
+                RelaxKind::FCF,
+                Granularity::PerStep,
+                2,
+            )
+            .unwrap();
+            let cluster = ClusterModel::tx_gaia(part.n_devices());
+            let minid = plan(&MinId, &g, &cluster).unwrap();
+            let heft = plan(&Heft, &g, &cluster).unwrap();
+            let base = crate::sim::simulate_prioritized(
+                &minid.graph,
+                &cluster,
+                false,
+                Some(&minid.priority),
+            )
+            .unwrap();
+            let tuned = crate::sim::simulate_prioritized(
+                &heft.graph,
+                &cluster,
+                false,
+                Some(&heft.priority),
+            )
+            .unwrap();
+            assert!(
+                tuned.makespan_s < base.makespan_s,
+                "devices={devices}: heft {:.6e} !< min-id {:.6e}",
+                tuned.makespan_s,
+                base.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn placement_kind_round_trips() {
+        for kind in PlacementKind::all() {
+            assert_eq!(PlacementKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert!(PlacementKind::parse("random").is_err());
+        assert_eq!(PlacementKind::default(), PlacementKind::MinId);
+    }
+}

@@ -1,9 +1,9 @@
 //! `cargo bench`-free perf snapshots: the `mgrit bench` subcommand calls
 //! these to emit the machine-readable `BENCH_hotpath.json` /
-//! `BENCH_fig6bc.json` perf-trajectory records (median ns + iteration count
-//! per benchmark, tagged with the git revision) into a chosen directory —
-//! the repo root in CI, so the perf trajectory stays diffable across PRs
-//! without a bench runner.
+//! `BENCH_fig6bc.json` / `BENCH_placement.json` perf-trajectory records
+//! (median ns + iteration count per benchmark, tagged with the git
+//! revision) into a chosen directory — the repo root in CI, so the perf
+//! trajectory stays diffable across PRs without a bench runner.
 //!
 //! These are quick-iteration *companions* to the full suites under
 //! `rust/benches/`, not the same measurements: benchmark names encode their
@@ -103,6 +103,48 @@ pub fn emit_fig6bc(out_dir: &Path) -> Result<PathBuf> {
     Ok(out_dir.join("BENCH_fig6bc.json"))
 }
 
+/// Emit `BENCH_placement.json` into `out_dir`: the placement-policy
+/// comparison tables (min-id vs HEFT vs lookahead on the 2-micro-batch
+/// training graph and on a FIFO serving drain, quick shapes) plus the HEFT
+/// planning pass itself as a tracked hot path — the planner runs once per
+/// admitted graph on the live serving path, so its cost belongs in the perf
+/// trajectory.
+pub fn emit_placement(out_dir: &Path) -> Result<PathBuf> {
+    let mut suite = Suite::new_quick("placement");
+    suite.set_record_dir(out_dir);
+
+    let t = super::placement::training_comparison(32, &[2, 4], 2)?;
+    suite.table("training_rows", t.to_json_rows());
+    let sv = super::placement::serving_comparison(32, 2, 6, 3, 20_000.0)?;
+    suite.table("serving_rows", sv.to_json_rows());
+
+    let spec = NetSpec::fig6_depth(32);
+    let hier = Hierarchy::two_level(32, spec.h(), spec.coarsen)?;
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let part = crate::coordinator::Partition::contiguous(n_blocks, 4)?;
+    let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices())?;
+    let graph = crate::mgrit::taskgraph::mg_train_step_multi(
+        &spec,
+        &hier,
+        &part,
+        &groups,
+        1,
+        2,
+        crate::mgrit::fas::RelaxKind::FCF,
+        crate::mgrit::taskgraph::Granularity::PerStep,
+        2,
+    )?;
+    let cluster = ClusterModel::tx_gaia(part.n_devices());
+    let heft = crate::coordinator::PlacementKind::Heft.build();
+    suite.bench("plan_heft_train_step_micro2_depth32_4dev", || {
+        black_box(
+            crate::coordinator::placement::plan(heft.as_ref(), &graph, &cluster).unwrap(),
+        );
+    });
+    suite.finish();
+    Ok(out_dir.join("BENCH_placement.json"))
+}
+
 /// How much a median must grow over the previous record before the delta
 /// step flags it (10% — below that, quick-iteration noise dominates).
 pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
@@ -115,20 +157,41 @@ pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
 /// bench-delta step prints these verbatim (annotations are advisory — the
 /// perf trajectory is a signal, not a gate; quick-iteration medians on
 /// shared runners are too noisy to fail a build on).
+///
+/// The scan walks the UNION of both directories: a suite or benchmark
+/// present on only one side is reported with a `::notice::` coverage line,
+/// never silently skipped — a record that stops being produced breaks the
+/// perf trajectory just as surely as a regression. An empty or missing
+/// `prev_dir` is fine (first run: everything is a new baseline); no records
+/// in `cur_dir` is an error (the emit step failed).
 pub fn bench_delta(prev_dir: &Path, cur_dir: &Path) -> Result<Vec<String>> {
     use crate::util::json::Json;
-    let mut lines = Vec::new();
-    let mut names: Vec<String> = Vec::new();
-    if let Ok(entries) = std::fs::read_dir(cur_dir) {
-        for e in entries.flatten() {
-            let name = e.file_name().to_string_lossy().into_owned();
-            if name.starts_with("BENCH_") && name.ends_with(".json") {
-                names.push(name);
+    let scan = |dir: &Path| -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("BENCH_") && name.ends_with(".json") {
+                    names.push(name);
+                }
             }
+        }
+        names
+    };
+    let mut lines = Vec::new();
+    let cur_names = scan(cur_dir);
+    anyhow::ensure!(
+        !cur_names.is_empty(),
+        "no BENCH_*.json records in {}",
+        cur_dir.display()
+    );
+    let mut names = cur_names.clone();
+    for n in scan(prev_dir) {
+        if !names.contains(&n) {
+            names.push(n);
         }
     }
     names.sort();
-    anyhow::ensure!(!names.is_empty(), "no BENCH_*.json records in {}", cur_dir.display());
     let medians = |path: &Path| -> Result<(String, Vec<(String, f64)>)> {
         let j = Json::parse(std::fs::read_to_string(path)?.trim())?;
         let suite = j.get("suite")?.as_str()?.to_string();
@@ -141,6 +204,14 @@ pub fn bench_delta(prev_dir: &Path, cur_dir: &Path) -> Result<Vec<String>> {
         Ok((suite, rows))
     };
     for name in names {
+        if !cur_names.contains(&name) {
+            let (suite, _) = medians(&prev_dir.join(&name))?;
+            lines.push(format!(
+                "::notice title=bench coverage::{suite}: {name} exists only in the previous \
+                 run — the suite is no longer emitted"
+            ));
+            continue;
+        }
         let (suite, cur) = medians(&cur_dir.join(&name))?;
         let prev_path = prev_dir.join(&name);
         if !prev_path.exists() {
@@ -169,6 +240,14 @@ pub fn bench_delta(prev_dir: &Path, cur_dir: &Path) -> Result<Vec<String>> {
                 lines.push(format!(
                     "{suite}/{bench}: {cur_ns:.0} ns vs {prev_ns:.0} ns ({:+.1}%)",
                     (ratio - 1.0) * 100.0
+                ));
+            }
+        }
+        for (bench, _) in &prev {
+            if !cur.iter().any(|(n, _)| n == bench) {
+                lines.push(format!(
+                    "::notice title=bench coverage::{suite}/{bench}: exists only in the \
+                     previous run — benchmark no longer emitted"
                 ));
             }
         }
@@ -224,6 +303,47 @@ mod tests {
         assert!(bench_delta(&prev, &root.join("nope")).is_err());
         assert!(bench_delta(&root.join("nope"), &cur).is_ok());
         let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn bench_delta_reports_one_sided_suites_and_benches() {
+        // the union scan: a suite (or a benchmark inside a shared suite)
+        // that stops being emitted is reported, never silently skipped
+        let root = std::path::Path::new("target/bench-delta-union-selftest");
+        let prev = root.join("prev");
+        let cur = root.join("cur");
+        let _ = std::fs::remove_dir_all(root);
+        write_record(&prev, "alpha", &[("kept", 100.0), ("dropped", 50.0)]);
+        write_record(&prev, "gone", &[("x", 10.0)]);
+        write_record(&cur, "alpha", &[("kept", 101.0)]);
+        let lines = bench_delta(&prev, &cur).unwrap();
+        assert!(
+            lines
+                .iter()
+                .any(|l| l.starts_with("::notice") && l.contains("BENCH_gone.json")),
+            "prev-only suite not reported: {lines:?}"
+        );
+        assert!(
+            lines.iter().any(|l| l.starts_with("::notice") && l.contains("alpha/dropped")),
+            "prev-only benchmark not reported: {lines:?}"
+        );
+        // the shared benchmark still gets its plain within-budget line
+        assert!(
+            lines.iter().any(|l| !l.starts_with("::") && l.contains("alpha/kept")),
+            "{lines:?}"
+        );
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn emit_placement_writes_record() {
+        let dir = std::path::Path::new("target/perf-placement-selftest");
+        let path = emit_placement(dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "placement");
+        assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! The placement-policy comparison: min-id vs HEFT vs one-step-lookahead
+//! dispatch (`coordinator::placement`), scored head-to-head on the
+//! deterministic virtual cluster (V100 + 25 GbE cost model).
+//!
+//! Two workloads, the two the live stack actually runs:
+//!
+//! 1. [`training_comparison`] — the multi-instance training graph
+//!    (`taskgraph::mg_train_step_multi`, M micro-batches pipelined through
+//!    one composed graph): each policy plans the graph once, then the plan
+//!    (rewritten devices + dispatch priorities) is scored by
+//!    `sim::simulate_prioritized`. This is the workload where HEFT's
+//!    upward-rank ordering and min-EFT placement pay: critical-path kernels
+//!    dispatch ahead of leaf work, and co-locating a comm's endpoints turns
+//!    the transfer into a free local handoff.
+//! 2. [`serving_comparison`] — an open-loop FIFO serving drain
+//!    (`serving::simulate_serving_policy`) with each admitted instance graph
+//!    planned by the policy, as the live `ServingRuntime` does per
+//!    admission.
+//!
+//! Columns report the planner's own serial-device estimate next to the
+//! simulated makespan, mean device utilization (Σ busy / (makespan ×
+//! devices)), and the comm ledger (priced events and total transfer time) —
+//! the quantities the placement decision trades against each other.
+
+use crate::coordinator::placement::{self, PlacementKind};
+use crate::coordinator::{InstanceGroups, Partition};
+use crate::mgrit::fas::RelaxKind;
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::taskgraph::{self, Granularity};
+use crate::model::NetSpec;
+use crate::perfmodel::ClusterModel;
+use crate::serving::{simulate_serving_policy, PolicyKind, SimPolicyConfig, SimRequest};
+use crate::sim;
+use crate::util::json::{num, s};
+use crate::Result;
+
+use super::Table;
+
+/// Score every shipped placement policy on the M-micro-batch training graph
+/// at each device count in `devices`: one row per (devices, policy) with the
+/// planner estimate, simulated makespan, utilization, comm ledger, and the
+/// speedup over the min-id baseline at the same device count.
+pub fn training_comparison(
+    depth: usize,
+    devices: &[usize],
+    micro_batches: usize,
+) -> Result<Table> {
+    let spec = NetSpec::fig6_depth(depth);
+    let hier = Hierarchy::two_level(depth, spec.h(), spec.coarsen)?;
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let mut t = Table::new(
+        &format!(
+            "Placement: min-id vs HEFT vs lookahead on the {micro_batches}-micro-batch \
+             training graph (depth {depth}; virtual timeline)"
+        ),
+        &[
+            "devices",
+            "policy",
+            "est_makespan_ms",
+            "sim_makespan_ms",
+            "utilization",
+            "comm_ms",
+            "comm_events",
+            "speedup_vs_min_id",
+        ],
+    );
+    for &n_dev in devices {
+        let part = Partition::contiguous(n_blocks, n_dev)?;
+        let groups = InstanceGroups::new(1, part.n_devices())?;
+        let graph = taskgraph::mg_train_step_multi(
+            &spec,
+            &hier,
+            &part,
+            &groups,
+            1,
+            2,
+            RelaxKind::FCF,
+            Granularity::PerStep,
+            micro_batches,
+        )?;
+        let cluster = ClusterModel::tx_gaia(part.n_devices());
+        let mut base_ms = f64::NAN;
+        for kind in PlacementKind::all() {
+            let plan = placement::plan(kind.build().as_ref(), &graph, &cluster)?;
+            let rep =
+                sim::simulate_prioritized(&plan.graph, &cluster, false, Some(&plan.priority))?;
+            let busy: f64 = rep.device_busy_s.iter().sum();
+            let util = if rep.makespan_s > 0.0 {
+                busy / (rep.makespan_s * cluster.n_devices as f64)
+            } else {
+                0.0
+            };
+            let mk_ms = rep.makespan_s * 1e3;
+            if kind == PlacementKind::MinId {
+                base_ms = mk_ms;
+            }
+            t.row(vec![
+                num(part.n_devices() as f64),
+                s(kind.name()),
+                num(plan.est_makespan_s * 1e3),
+                num(mk_ms),
+                num(util),
+                num(rep.comm_total_s * 1e3),
+                num(rep.n_comms as f64),
+                num(base_ms / mk_ms),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Score every shipped placement policy on an open-loop FIFO serving drain:
+/// one row per policy with tail latency, throughput, and drain makespan —
+/// the per-admission planning path of the live `ServingRuntime`.
+pub fn serving_comparison(
+    depth: usize,
+    devices: usize,
+    n_requests: usize,
+    window: usize,
+    arrival_rate_rps: f64,
+) -> Result<Table> {
+    let spec = NetSpec::fig6_depth(depth);
+    let hier = Hierarchy::two_level(depth, spec.h(), spec.coarsen)?;
+    let reqs = SimRequest::open_loop(n_requests, arrival_rate_rps, None);
+    let mut t = Table::new(
+        &format!(
+            "Placement: serving drain under FIFO admission ({n_requests} requests, \
+             window {window}; virtual timeline)"
+        ),
+        &[
+            "policy",
+            "requests",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "throughput_rps",
+            "makespan_ms",
+        ],
+    );
+    for kind in PlacementKind::all() {
+        let cfg = SimPolicyConfig {
+            max_inflight: window,
+            placement: kind,
+            ..Default::default()
+        };
+        let out = simulate_serving_policy(&spec, &hier, devices, &cfg, &reqs, PolicyKind::Fifo)?;
+        t.row(vec![
+            s(kind.name()),
+            num(out.completed.len() as f64),
+            num(out.summary.p50_ms),
+            num(out.summary.p95_ms),
+            num(out.summary.p99_ms),
+            num(out.summary.throughput_rps),
+            num(out.makespan_s * 1e3),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Both placement tables with the default shapes the CLI uses: the training
+/// comparison at 2 and 4 devices with 2 micro-batches, and the serving drain
+/// at `devices`.
+pub fn run(depth: usize, devices: usize, micro_batches: usize) -> Result<Vec<Table>> {
+    Ok(vec![
+        training_comparison(depth, &[2, devices.max(2)], micro_batches)?,
+        serving_comparison(depth, devices, 8, 3, 20_000.0)?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_table_heft_strictly_beats_min_id_at_two_plus_devices() {
+        // the acceptance claim, in the experiment table itself: on the M ≥ 2
+        // multi-instance training graph at ≥ 2 devices, HEFT's simulated
+        // makespan is strictly below min-id's
+        let t = training_comparison(64, &[2, 4], 2).unwrap();
+        assert_eq!(t.rows.len(), 6);
+        for dev_rows in t.rows.chunks(3) {
+            let name = |i: usize| dev_rows[i][1].as_str().unwrap().to_string();
+            assert_eq!(name(0), "min-id");
+            assert_eq!(name(1), "heft");
+            assert_eq!(name(2), "lookahead");
+            let mk = |i: usize| dev_rows[i][3].as_f64().unwrap();
+            let n_dev = dev_rows[0][0].as_f64().unwrap();
+            assert!(
+                mk(1) < mk(0),
+                "heft must strictly beat min-id at {n_dev} devices: {} vs {}",
+                mk(1),
+                mk(0)
+            );
+            // the speedup column agrees with the makespans
+            let sp = dev_rows[1][7].as_f64().unwrap();
+            assert!((sp - mk(0) / mk(1)).abs() < 1e-9);
+            assert!(sp > 1.0);
+            // utilization is a fraction
+            for r in dev_rows {
+                let u = r[4].as_f64().unwrap();
+                assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u} out of range");
+            }
+        }
+        // deterministic rerun reproduces the table exactly
+        let t2 = training_comparison(64, &[2, 4], 2).unwrap();
+        for (a, b) in t.rows.iter().zip(&t2.rows) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_string(), y.to_string());
+            }
+        }
+    }
+
+    #[test]
+    fn serving_table_covers_every_policy_and_loses_nothing() {
+        let t = serving_comparison(64, 2, 6, 3, 20_000.0).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        for (i, kind) in PlacementKind::all().iter().enumerate() {
+            assert_eq!(t.rows[i][0].as_str().unwrap(), kind.name());
+            assert_eq!(t.rows[i][1].as_f64().unwrap(), 6.0, "{} lost requests", kind.name());
+            assert!(t.rows[i][6].as_f64().unwrap() > 0.0);
+        }
+    }
+}

@@ -4,9 +4,9 @@
 //!   forward     MG vs serial forward propagation on real numerics
 //!   train       SGD training (serial | MG layer-parallel | hybrid micro-batched), host or PJRT
 //!   serve       continuous-batching inference serving through the live multi-instance runtime
-//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|ablations
+//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|ablations
 //!   sim         one simulated MG/PM run at a given GPU count
-//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json
+//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json
 //!   artifacts   check the AOT artifact manifest against the rust presets
 //!   help        this text
 
@@ -15,7 +15,7 @@ use std::sync::Arc;
 use anyhow::bail;
 
 use resnet_mgrit::config::RunConfig;
-use resnet_mgrit::coordinator::ParallelMgrit;
+use resnet_mgrit::coordinator::{ParallelMgrit, PlacementKind};
 use resnet_mgrit::data::mnist;
 use resnet_mgrit::experiments as exp;
 use resnet_mgrit::mgrit::hierarchy::Hierarchy;
@@ -35,18 +35,24 @@ const HELP: &str = "mgrit — layer-parallel ResNet training via nonlinear multi
 USAGE: mgrit <subcommand> [options]
 
   forward     --preset P --batch B --cycles C --devices D --tol T [--backend host|pjrt]
+              [--placement min-id|heft|lookahead]
   train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
               [--parallel N_DEVICES] [--granularity per_step|per_block] [--micro-batches M]
+              [--placement min-id|heft|lookahead]
                 --parallel routes every step through the whole-training-step
                 task graph (ParallelMgrit::train_step, host backend) and
                 prints a one-line speed/parity report vs the serial MG step;
                 --micro-batches M splits each batch into M micro-batches
                 pipelined through ONE composed graph (hybrid data x layer
-                parallelism; batch must divide by M; requires --parallel)
+                parallelism; batch must divide by M; requires --parallel);
+                --placement picks the scheduling & placement policy the
+                graphs dispatch under (default heft — the policy-comparison
+                winner; min-id is the static-partition legacy order; every
+                policy is bit-identical, see `experiment placement`)
   serve       --requests N --arrival-rate R --deadline-ms D [--preset P] [--devices D]
               [--cycles C] [--inflight W] [--relax F|FC|FCF] [--granularity per_step|per_block]
               [--policy fifo|edf|shape-batch] [--max-queue Q] [--max-batch B]
-              [--batch-window-ms W] [--seed S]
+              [--batch-window-ms W] [--seed S] [--placement min-id|heft|lookahead]
               synthetic-load driver: N requests stream through the persistent
               multi-instance runtime as forward-only graph instances
               (continuous batching, window W; R = 0 [default] = all requests
@@ -61,12 +67,15 @@ USAGE: mgrit <subcommand> [options]
               against the serial per-request MGRIT reference, and asserts
               >= 2 instances overlapped in flight on the live ExecEvent
               trace whenever the load held two requests co-resident
-  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|compound|ablations> [--quick]
+  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|placement|compound|ablations> [--quick]
               (serve prints the continuous-vs-barrier table AND the
-               three-way FIFO/EDF/shape-batch policy comparison)
+               three-way FIFO/EDF/shape-batch policy comparison;
+               placement scores min-id vs HEFT vs lookahead dispatch on
+               the training graph and a serving drain)
   sim         --preset P --gpus G [--training] [--cycles C]
   bench       [--out DIR] [--full]   quick perf snapshot; writes
-              BENCH_hotpath.json + BENCH_fig6bc.json into DIR (default .)
+              BENCH_hotpath.json + BENCH_fig6bc.json + BENCH_placement.json
+              into DIR (default .)
   bench-delta --prev DIR [--cur DIR]   diff BENCH_*.json medians against a
               previous run's records; prints GitHub ::warning:: annotations
               for suites regressing > 10% (advisory, exit 0)
@@ -133,7 +142,11 @@ fn cmd_forward(args: &Args) -> Result<()> {
     let spec2 = spec.clone();
     let params2 = params.clone();
     let factory = move |_w: usize| HostSolver::new(spec2.clone(), params2.clone());
-    let driver = ParallelMgrit::new(factory, spec.clone(), hier, cfg.devices, cfg.batch)?;
+    // CLI default is the policy-comparison winner; the library default stays
+    // min-id (see `mgrit experiment placement` for the head-to-head table)
+    let placement = PlacementKind::parse(args.get_or("placement", "heft"))?;
+    let mut driver = ParallelMgrit::new(factory, spec.clone(), hier, cfg.devices, cfg.batch)?;
+    driver.set_placement(placement);
     let t = Timer::start();
     let (mg, stats, metrics) = driver.solve(&u0, &cfg.mgrit_options())?;
     let mg_s = t.elapsed_s();
@@ -142,7 +155,13 @@ fn cmd_forward(args: &Args) -> Result<()> {
         mg.last().unwrap().data(),
         serial.last().unwrap().data(),
     );
-    println!("preset={} n_res={n} batch={} devices={}", spec.name, cfg.batch, cfg.devices);
+    println!(
+        "preset={} n_res={n} batch={} devices={} placement={}",
+        spec.name,
+        cfg.batch,
+        cfg.devices,
+        placement.name()
+    );
     println!("serial forward     : {:.1} ms", serial_s * 1e3);
     println!(
         "MG forward         : {:.1} ms  ({} cycles, converged={}, ‖R‖={:.3e})",
@@ -172,6 +191,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let parallel = args.usize_or("parallel", 0)?;
     let granularity = Granularity::parse(args.get_or("granularity", "per_step"))?;
     let micro_batches = args.usize_or("micro-batches", 1)?;
+    // heft by default: the CLI runs the policy-comparison winner, the
+    // library keeps min-id (bit-identical either way)
+    let placement = PlacementKind::parse(args.get_or("placement", "heft"))?;
     let method = if args.flag("serial") {
         train::Method::Serial
     } else {
@@ -204,10 +226,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         println!(
             "parallel training: {parallel} devices, granularity {granularity:?}, \
-             micro-batches {micro_batches}"
+             micro-batches {micro_batches}, placement {}",
+            placement.name()
         );
         let logs = train::train_parallel(
-            &spec, &mut params, &data, &tc, parallel, granularity, micro_batches,
+            &spec, &mut params, &data, &tc, parallel, granularity, micro_batches, placement,
         )?;
         for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
             println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
@@ -216,7 +239,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             "{}",
             train::parity_report(
                 &spec, &params, &data, cfg.batch, cfg.cycles, cfg.lr as f32, parallel,
-                granularity,
+                granularity, placement,
             )?
         );
         let exec = HostSolver::new(spec.clone(), Arc::new(params.clone()))?;
@@ -280,6 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("max-batch", 4)?;
     let batch_window_ms = args.f64_or("batch-window-ms", 2.0)?;
     let policy = PolicyKind::parse(args.get_or("policy", "fifo"), max_batch, batch_window_ms)?;
+    let placement = PlacementKind::parse(args.get_or("placement", "heft"))?;
     let max_queue = match args.usize_or("max-queue", 0)? {
         0 => None,
         q => Some(q),
@@ -315,15 +339,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_inflight: inflight,
         policy,
         max_queue,
+        placement,
     };
     let mut rt = ServingRuntime::new(factory, spec.clone(), hier.clone(), cfg.devices, serve_cfg)?;
     println!(
-        "serving preset={} devices={} cycles={} inflight={inflight} policy={} \
+        "serving preset={} devices={} cycles={} inflight={inflight} policy={} placement={} \
          requests={n_requests} arrival_rate={rate}/s deadline={} max_queue={} seed={}",
         spec.name,
         rt.partition().n_devices(),
         cfg.cycles,
         policy.name(),
+        placement.name(),
         deadline.map(|d| format!("{d} ms")).unwrap_or_else(|| "none".into()),
         max_queue.map(|q| q.to_string()).unwrap_or_else(|| "unbounded".into()),
         cfg.seed,
@@ -473,6 +499,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     exp::serve::policy_comparison(depth, devices, n, window, 4, 1.0)?.render()
                 );
             }
+            "placement" => {
+                // min-id vs HEFT vs lookahead on the training graph and a
+                // FIFO serving drain (deterministic virtual timeline)
+                let (depth, devices, micro) = if quick { (32, 4, 2) } else { (64, 4, 2) };
+                for t in exp::placement::run(depth, devices, micro)? {
+                    println!("{}", t.render());
+                }
+            }
             "fig7" => {
                 let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
                 println!("{}", exp::fig7::run(gpus)?.render());
@@ -491,7 +525,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "serve", "compound", "ablations"] {
+        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "serve", "placement", "compound", "ablations"] {
             run_one(name)?;
         }
         Ok(())
@@ -501,8 +535,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 /// Quick perf snapshot without `cargo bench`: emits the machine-readable
-/// BENCH_hotpath.json / BENCH_fig6bc.json perf-trajectory records into
-/// `--out` (default: the current directory — the repo root in CI).
+/// BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json
+/// perf-trajectory records into `--out` (default: the current directory —
+/// the repo root in CI).
 fn cmd_bench(args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "."));
     if args.flag("full") {
@@ -510,7 +545,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     let p1 = exp::perf::emit_hotpath(&out)?;
     let p2 = exp::perf::emit_fig6bc(&out)?;
-    println!("perf records: {} , {}", p1.display(), p2.display());
+    let p3 = exp::perf::emit_placement(&out)?;
+    println!("perf records: {} , {} , {}", p1.display(), p2.display(), p3.display());
     Ok(())
 }
 

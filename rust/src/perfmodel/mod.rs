@@ -157,4 +157,97 @@ mod tests {
         assert_eq!(c.n_devices, 64);
         assert_eq!(c.device.max_concurrency, 5);
     }
+
+    #[test]
+    fn phases_decompose_kernel_time_exactly() {
+        // kernel_time is definitionally the sum of the two kernel_phases
+        // components, and Conv folds its launch into the serialized phase —
+        // the invariants the simulator's phase bookkeeping relies on
+        let d = DeviceModel::v100();
+        for class in [KernelClass::Conv, KernelClass::Gemm, KernelClass::Light] {
+            let (l, c) = d.kernel_phases(class, 2.5e9);
+            assert_eq!(l + c, d.kernel_time(class, 2.5e9));
+        }
+        let (l_conv, _) = d.kernel_phases(KernelClass::Conv, 2.5e9);
+        assert_eq!(l_conv, 0.0, "conv launch must fold into the shared phase");
+        let (l_gemm, _) = d.kernel_phases(KernelClass::Gemm, 2.5e9);
+        assert_eq!(l_gemm, d.launch_s);
+    }
+
+    #[test]
+    fn model_arithmetic_matches_sim_per_event_accounting() {
+        // the contract between this module and the simulator, checked on a
+        // known two-kernel chain (conv on device 0 → transfer → gemm on
+        // device 1): every simulated interval must be priced by exactly the
+        // published formulas — kernel_time for solo kernels, message_time
+        // for the transfer — and the serial chain's makespan is their sum
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind};
+        use crate::sim;
+
+        let c = ClusterModel::tx_gaia(2);
+        let (flops0, flops1, bytes) = (3.0e9, 1.5e9, 4.0e6);
+        let g = TaskGraph {
+            tasks: vec![
+                Task {
+                    id: 0,
+                    instance: 0,
+                    device: 0,
+                    kind: TaskKind::Kernel { label: "k0", class: KernelClass::Conv, flops: flops0 },
+                    deps: vec![],
+                    op: None,
+                },
+                Task {
+                    id: 1,
+                    instance: 0,
+                    device: 1,
+                    kind: TaskKind::Comm { src: 0, dst: 1, bytes },
+                    deps: vec![0],
+                    op: None,
+                },
+                Task {
+                    id: 2,
+                    instance: 0,
+                    device: 1,
+                    kind: TaskKind::Kernel { label: "k1", class: KernelClass::Gemm, flops: flops1 },
+                    deps: vec![1],
+                    op: None,
+                },
+            ],
+        };
+        let rep = sim::simulate(&g, &c, true).unwrap();
+
+        let kt0 = c.device.kernel_time(KernelClass::Conv, flops0);
+        let kt1 = c.device.kernel_time(KernelClass::Gemm, flops1);
+        let mt = c.net.message_time(bytes);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs();
+
+        assert_eq!((rep.n_kernels, rep.n_comms), (2, 1));
+        assert!(
+            close(rep.makespan_s, kt0 + mt + kt1),
+            "makespan {} vs model sum {}",
+            rep.makespan_s,
+            kt0 + mt + kt1
+        );
+        // the comm ledger is the one-sided NIC occupancy: one transfer,
+        // exactly message_time long
+        assert_eq!(rep.comm_total_s, mt);
+        // device busy time = that device's solo kernel interval
+        assert!(close(rep.device_busy_s[0], kt0), "{} vs {kt0}", rep.device_busy_s[0]);
+        assert!(close(rep.device_busy_s[1], kt1), "{} vs {kt1}", rep.device_busy_s[1]);
+
+        // per-event accounting on the trace
+        assert_eq!(rep.trace.len(), 3);
+        let ev = |id: usize| rep.trace.iter().find(|e| e.task == id).unwrap();
+        assert!(!ev(0).is_comm && ev(0).device == 0);
+        assert!(close(ev(0).t_end - ev(0).t_start, kt0));
+        let comm = ev(1);
+        assert!(comm.is_comm && comm.device == 1, "comm events land on the destination");
+        assert!(close(comm.t_end - comm.t_start, mt));
+        assert!(!ev(2).is_comm && ev(2).device == 1);
+        assert!(close(ev(2).t_end - ev(2).t_start, kt1));
+        // the chain hands off with no idle gap: each stage starts the
+        // instant its predecessor retires
+        assert_eq!(comm.t_start, ev(0).t_end);
+        assert_eq!(ev(2).t_start, comm.t_end);
+    }
 }

@@ -20,7 +20,7 @@
 //! | policy | admit order | coalescing | shedding |
 //! |---|---|---|---|
 //! | [`Fifo`] | arrival order | none (batch-1) | none |
-//! | [`Edf`] | earliest absolute deadline | none (batch-1) | hopeless requests |
+//! | [`Edf`] | earliest aged deadline (`min(arrival + budget, arrival + max_wait)`) | none (batch-1) | hopeless requests |
 //! | [`ShapeBatch`] | arrival order per shape key | ≤ B same-shape requests per instance | none |
 //!
 //! Whatever the policy decides, per-request *outputs* are bit-identical to
@@ -188,15 +188,42 @@ impl SchedulerPolicy for Fifo {
     }
 }
 
-/// Earliest-deadline-first admission with shedding: admit the arrived
-/// request whose **absolute** deadline (`arrival + budget`) is earliest
-/// (no-budget requests sort last, FIFO among themselves), and shed any
-/// request that can no longer meet its budget even if admitted right now
+/// Earliest-deadline-first admission with shedding **and aging**: admit the
+/// arrived request whose *admission key* is earliest, and shed any request
+/// that can no longer meet its budget even if admitted right now
 /// (`now + service_estimate > absolute deadline`). Shedding turns a
 /// guaranteed deadline miss into freed capacity for requests that can still
 /// make it — the control signal PR 4's accounting-only deadlines lacked.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Edf;
+///
+/// The admission key is `min(arrival + budget, arrival + max_wait)`: pure
+/// EDF starves budget-less (`deadline = +∞`) requests forever under a
+/// sustained stream of tight deadlines, so every request's key saturates
+/// after [`Edf::max_wait_s`] seconds in the queue — an aged request then
+/// outranks anything that arrived after `aged.arrival + max_wait −
+/// their_budget`. Shedding keeps using the **true** deadline (aging is a
+/// fairness device, not a budget: an aged budget-less request is never
+/// "hopeless", and a tight request's shed point does not move).
+#[derive(Debug, Clone, Copy)]
+pub struct Edf {
+    /// Seconds a request may wait before its admission key saturates at
+    /// `arrival + max_wait_s` (30 by default — far beyond any interactive
+    /// budget, so aging only kicks in where pure EDF would starve).
+    pub max_wait_s: f64,
+}
+
+impl Default for Edf {
+    fn default() -> Edf {
+        Edf { max_wait_s: 30.0 }
+    }
+}
+
+impl Edf {
+    /// The aged admission ordering key: the absolute deadline, capped at
+    /// `arrival + max_wait_s`.
+    fn admission_key(&self, q: &QueuedRequest) -> f64 {
+        q.absolute_deadline_s().min(q.arrival_s + self.max_wait_s)
+    }
+}
 
 impl SchedulerPolicy for Edf {
     fn name(&self) -> &'static str {
@@ -205,7 +232,8 @@ impl SchedulerPolicy for Edf {
 
     fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision {
         // shed first: a hopeless request must not consume a slot ahead of a
-        // viable one, whether or not a slot is currently free
+        // viable one, whether or not a slot is currently free. Hopelessness
+        // is judged on the TRUE deadline, never the aged key
         let shed: Vec<usize> = queue
             .iter()
             .enumerate()
@@ -218,12 +246,12 @@ impl SchedulerPolicy for Edf {
         if ctx.free_slots == 0 || queue.is_empty() {
             return Decision::rest();
         }
-        // earliest absolute deadline; ties resolve to the lowest queue index
-        // (arrival order) — total_cmp on +∞ keeps budget-less requests last
+        // earliest admission key; ties resolve to the lowest queue index
+        // (arrival order — min_by keeps the first of equal minima)
         let best = queue
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.absolute_deadline_s().total_cmp(&b.1.absolute_deadline_s()))
+            .min_by(|a, b| self.admission_key(a.1).total_cmp(&self.admission_key(b.1)))
             .map(|(i, _)| i)
             .expect("non-empty queue");
         Decision { admit: vec![best], ..Decision::default() }
@@ -345,7 +373,7 @@ impl PolicyKind {
     pub fn build(&self) -> Result<Box<dyn SchedulerPolicy>> {
         Ok(match self {
             PolicyKind::Fifo => Box::new(Fifo),
-            PolicyKind::Edf => Box::new(Edf),
+            PolicyKind::Edf => Box::new(Edf::default()),
             PolicyKind::ShapeBatch { max_batch, window_ms } => {
                 Box::new(ShapeBatch::new(*max_batch, *window_ms)?)
             }
@@ -400,7 +428,7 @@ mod tests {
             req(1, 0.1, None, &[1, 2]),
             req(2, 0.2, Some(150.0), &[1, 2]),
         ];
-        let mut p = Edf;
+        let mut p = Edf::default();
         let d = p.decide(&q, &ctx(0.3, 1, 0.0));
         assert_eq!(d.admit, vec![2]);
         assert!(d.shed.is_empty());
@@ -412,7 +440,7 @@ mod tests {
     #[test]
     fn edf_ties_break_by_arrival_order() {
         let q = vec![req(0, 0.0, Some(100.0), &[1, 2]), req(1, 0.0, Some(100.0), &[1, 2])];
-        let mut p = Edf;
+        let mut p = Edf::default();
         assert_eq!(p.decide(&q, &ctx(0.0, 1, 0.0)).admit, vec![0]);
     }
 
@@ -424,7 +452,7 @@ mod tests {
             req(0, 0.0, Some(100.0), &[1, 2]),
             req(1, 0.0, Some(200.0), &[1, 2]),
         ];
-        let mut p = Edf;
+        let mut p = Edf::default();
         let d = p.decide(&q, &ctx(0.095, 1, 0.010));
         assert_eq!(d.shed, vec![0]);
         assert!(d.admit.is_empty(), "shedding round admits nothing");
@@ -438,6 +466,41 @@ mod tests {
         // absolute deadline has actually passed
         assert!(p.decide(&q, &ctx(0.095, 1, 0.0)).shed.is_empty());
         assert_eq!(p.decide(&q, &ctx(0.150, 1, 0.0)).shed, vec![0]);
+    }
+
+    #[test]
+    fn edf_aging_bounds_starvation_of_budget_less_requests() {
+        // a budget-less request queued at t = 0 vs a steady stream of fresh
+        // tight-deadline requests: pure EDF (here: a max_wait far beyond the
+        // horizon) picks the fresh request every single round — unbounded
+        // starvation. With max_wait_s = 1 the old request's admission key
+        // saturates at 0 + 1 = 1 s, so once the clock passes the point where
+        // fresh deadlines exceed that key (arrival + 0.1 > 1.0), it wins
+        let old = req(0, 0.0, None, &[1, 2]);
+        let mut starved = Edf { max_wait_s: 1e9 };
+        let mut aged = Edf { max_wait_s: 1.0 };
+        for round in 0..20 {
+            let now = 1.0 + round as f64 * 0.2;
+            let fresh = req(1 + round, now, Some(100.0), &[1, 2]);
+            let q = vec![old.clone(), fresh];
+            assert_eq!(starved.decide(&q, &ctx(now, 1, 0.0)).admit, vec![1]);
+            assert_eq!(
+                aged.decide(&q, &ctx(now, 1, 0.0)).admit,
+                vec![0],
+                "aged key must outrank a fresh deadline at t = {now}"
+            );
+        }
+        // aging never sheds: the true deadline of a budget-less request
+        // stays +∞ no matter how stale its admission key is
+        let d = aged.decide(&[old.clone()], &ctx(500.0, 1, 0.010));
+        assert!(d.shed.is_empty());
+        assert_eq!(d.admit, vec![0]);
+        // and aging does not move a deadline request's shed point: hopeless
+        // stays hopeless under the true budget even though its aged key is
+        // far in the future
+        let tight = req(99, 0.0, Some(100.0), &[1, 2]);
+        let d2 = Edf { max_wait_s: 1e9 }.decide(&[tight], &ctx(0.095, 1, 0.010));
+        assert_eq!(d2.shed, vec![0]);
     }
 
     #[test]

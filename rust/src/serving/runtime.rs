@@ -40,7 +40,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail};
 
 use crate::coordinator::executor::ExecSession;
+use crate::coordinator::placement::{self, PlacementKind};
 use crate::coordinator::{ExecEvent, Partition, StreamPool};
+use crate::perfmodel::ClusterModel;
 use crate::mgrit::fas::{MgritOptions, RelaxKind};
 use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{self, Granularity, TaskGraph};
@@ -74,6 +76,13 @@ pub struct ServeConfig {
     /// keeps the queue unbounded; `serving::latency_derived_depth` gives a
     /// budget-derived bound.
     pub max_queue: Option<usize>,
+    /// Which placement policy plans each admitted instance graph
+    /// (`coordinator::placement`): [`PlacementKind::MinId`] (default) keeps
+    /// the partition's baked devices and FIFO dispatch with zero planning
+    /// overhead; `Heft`/`Lookahead` re-place cost-aware and ship dispatch
+    /// priorities with the instance. Outputs are bit-identical either way —
+    /// the hazard-complete graph makes any placement numerically safe.
+    pub placement: PlacementKind,
 }
 
 impl Default for ServeConfig {
@@ -85,6 +94,7 @@ impl Default for ServeConfig {
             max_inflight: 4,
             policy: PolicyKind::Fifo,
             max_queue: None,
+            placement: PlacementKind::MinId,
         }
     }
 }
@@ -254,6 +264,22 @@ where
         )
     }
 
+    /// The instance graph after the configured placement pass: the planned
+    /// graph plus dispatch priorities (`None` under the identity `MinId`,
+    /// which skips planning entirely). Heft/Lookahead plan against the
+    /// V100/25 GbE cost model over this runtime's device count — the same
+    /// model the virtual-time scorer uses, so live and simulated serving
+    /// share one placement decision per (policy, batch) pair.
+    fn planned_instance(&self, batch: usize) -> Result<(TaskGraph, Option<Vec<f64>>)> {
+        let graph = self.instance_graph(batch);
+        if self.cfg.placement == PlacementKind::MinId {
+            return Ok((graph, None));
+        }
+        let cluster = ClusterModel::tx_gaia(self.partition.n_devices());
+        let p = placement::plan(self.cfg.placement.build().as_ref(), &graph, &cluster)?;
+        Ok((p.graph, Some(p.priority)))
+    }
+
     /// The MGRIT options equivalent to this runtime's per-request solve —
     /// what the serial reference (`serving::serial_reference`) must use for
     /// bit-identical outputs.
@@ -341,7 +367,11 @@ where
                 let joint = Tensor::concat_batch(&parts)?;
                 let rows = joint.dims()[0];
                 let u0 = self.exec.opening(&joint)?;
-                let inst = session.admit(self.instance_graph(rows), &u0)?;
+                let (graph, pri) = self.planned_instance(rows)?;
+                let inst = match &pri {
+                    Some(p) => session.admit_prioritized(graph, &u0, p)?,
+                    None => session.admit(graph, &u0)?,
+                };
                 active.insert(inst, Pending { reqs: group, admit_s });
             };
             // 4. retire: harvest every finished instance, fanning a batched

@@ -19,6 +19,7 @@
 //!   shape-batch) be scored on the same trace and compared
 //!   (`experiments::serve::policy_comparison`).
 
+use crate::coordinator::placement::{self, PlacementKind};
 use crate::coordinator::Partition;
 use crate::mgrit::fas::RelaxKind;
 use crate::mgrit::hierarchy::Hierarchy;
@@ -184,6 +185,9 @@ pub struct SimPolicyConfig {
     pub max_inflight: usize,
     /// Bounded admission queue (`None` = unbounded), as in `ServeConfig`.
     pub max_queue: Option<usize>,
+    /// Placement policy planning each admitted instance graph, as in
+    /// `ServeConfig::placement` ([`PlacementKind::MinId`] = no planning).
+    pub placement: PlacementKind,
 }
 
 impl Default for SimPolicyConfig {
@@ -194,6 +198,7 @@ impl Default for SimPolicyConfig {
             granularity: Granularity::PerStep,
             max_inflight: 4,
             max_queue: None,
+            placement: PlacementKind::MinId,
         }
     }
 }
@@ -355,7 +360,14 @@ pub fn simulate_serving_policy(
                 cfg.relax,
                 cfg.granularity,
             );
-            let inst = session.admit(sub)?;
+            // same planning step as the live runtime's planned_instance —
+            // one cost model, one placement decision for both timelines
+            let inst = if cfg.placement == PlacementKind::MinId {
+                session.admit(sub)?
+            } else {
+                let p = placement::plan(cfg.placement.build().as_ref(), &sub, &cluster)?;
+                session.admit_prioritized(p.graph, &p.priority)?
+            };
             instances += 1;
             active.insert(inst, (group, admit_s));
         };
@@ -583,6 +595,29 @@ mod tests {
         // rejected, not a silent shed-everything configuration
         let zero = SimPolicyConfig { max_queue: Some(0), ..cfg };
         assert!(simulate_serving_policy(&spec, &hier, 2, &zero, &reqs, PolicyKind::Fifo).is_err());
+    }
+
+    #[test]
+    fn policy_sim_runs_under_every_placement() {
+        // every placement policy drains the same load deterministically and
+        // completely — placement re-places and reorders work, it never adds,
+        // drops, or duplicates any
+        let (spec, hier) = setup();
+        let reqs = SimRequest::open_loop(6, 20_000.0, None);
+        for kind in PlacementKind::all() {
+            let cfg = SimPolicyConfig { max_inflight: 3, placement: kind, ..Default::default() };
+            let a = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo)
+                .unwrap();
+            let b = simulate_serving_policy(&spec, &hier, 2, &cfg, &reqs, PolicyKind::Fifo)
+                .unwrap();
+            assert_eq!(a.completed, b.completed, "{} timeline not reproducible", kind.name());
+            assert_eq!(a.completed.len(), 6, "{} lost requests", kind.name());
+            assert_eq!(a.instances, 6);
+            assert!(a.sheds.is_empty());
+            for r in &a.completed {
+                assert!(r.arrival_s <= r.admit_s && r.admit_s <= r.complete_s);
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! The event loop: executes a [`TaskGraph`] in virtual time on a
 //! [`ClusterModel`].
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
 
 use anyhow::bail;
 
@@ -102,9 +103,45 @@ impl RunningKernel {
     }
 }
 
+/// One entry of a device's prioritized ready queue: highest placement
+/// dispatch priority pops first, ties break FIFO by per-device arrival
+/// order (`seq`) — so the default all-zero priorities reproduce the legacy
+/// FIFO queue bit-for-bit. Note the tie-break differs from the live
+/// executor's global min-id heap on purpose: each models its own
+/// substrate's legacy order (per-device stream queue vs one scheduler
+/// thread), and a `Placement`'s priorities — not the tie-break — carry the
+/// policy's decisions across both.
+#[derive(Debug, Clone, Copy)]
+struct ReadyEntry {
+    pri: f64,
+    seq: u64,
+    task: usize,
+}
+
+impl PartialEq for ReadyEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for ReadyEntry {}
+
+impl PartialOrd for ReadyEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.pri.total_cmp(&other.pri).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
 struct Device {
     running: Vec<RunningKernel>,
-    ready: VecDeque<usize>,
+    ready: BinaryHeap<ReadyEntry>,
+    next_seq: u64,
     slots: Vec<bool>,
     last_update: f64,
     busy_s: f64,
@@ -115,12 +152,19 @@ impl Device {
     fn new(max_conc: usize) -> Device {
         Device {
             running: Vec::new(),
-            ready: VecDeque::new(),
+            ready: BinaryHeap::new(),
+            next_seq: 0,
             slots: vec![false; max_conc],
             last_update: 0.0,
             busy_s: 0.0,
             busy_since: 0.0,
         }
+    }
+
+    /// Enqueue a ready kernel at `pri` (FIFO among equal priorities).
+    fn push_ready(&mut self, task: usize, pri: f64) {
+        self.ready.push(ReadyEntry { pri, seq: self.next_seq, task });
+        self.next_seq += 1;
     }
 
     /// Advance progress to time `t`: launch phases elapse concurrently;
@@ -162,7 +206,22 @@ impl Device {
 
 /// Execute `graph` on `cluster` in virtual time.
 pub fn simulate(graph: &TaskGraph, cluster: &ClusterModel, record_trace: bool) -> Result<SimReport> {
-    simulate_released(graph, cluster, record_trace, &[])
+    simulate_core(graph, cluster, record_trace, &[], None)
+}
+
+/// As [`simulate`], with **per-task dispatch priorities** — the virtual-time
+/// consumer of a `coordinator::placement::Placement`: when several kernels
+/// are ready on one device, the highest-priority one takes the next free
+/// stream slot (FIFO among equals). `None` (and all-equal priorities)
+/// reproduces [`simulate`] exactly. Pair with the placement-rewritten graph:
+/// `simulate_prioritized(&p.graph, &cluster, false, Some(&p.priority))`.
+pub fn simulate_prioritized(
+    graph: &TaskGraph,
+    cluster: &ClusterModel,
+    record_trace: bool,
+    priority: Option<&[f64]>,
+) -> Result<SimReport> {
+    simulate_core(graph, cluster, record_trace, &[], priority)
 }
 
 /// As [`simulate`], with **per-instance release times**: a task of instance
@@ -178,7 +237,25 @@ pub fn simulate_released(
     record_trace: bool,
     release: &[f64],
 ) -> Result<SimReport> {
+    simulate_core(graph, cluster, record_trace, release, None)
+}
+
+/// The shared engine behind [`simulate`], [`simulate_released`], and
+/// [`simulate_prioritized`]: release times gate dispatch, priorities order
+/// each device's ready queue.
+fn simulate_core(
+    graph: &TaskGraph,
+    cluster: &ClusterModel,
+    record_trace: bool,
+    release: &[f64],
+    priority: Option<&[f64]>,
+) -> Result<SimReport> {
     let n = graph.tasks.len();
+    if let Some(p) = priority {
+        if p.len() != n {
+            bail!("priority slice has {} entries for a {n}-task graph", p.len());
+        }
+    }
     if n == 0 {
         return Ok(SimReport {
             makespan_s: 0.0,
@@ -215,6 +292,7 @@ pub fn simulate_released(
     let mut now = 0.0f64;
 
     // schedule one task whose deps are all satisfied
+    #[allow(clippy::too_many_arguments)]
     fn dispatch(
         task_id: usize,
         t: f64,
@@ -227,13 +305,22 @@ pub fn simulate_released(
         comm_total_s: &mut f64,
         n_comms: &mut usize,
         record_trace: bool,
+        priority: Option<&[f64]>,
     ) {
         let task = &graph.tasks[task_id];
         match &task.kind {
             TaskKind::Kernel { .. } => {
-                devices[task.device].ready.push_back(task_id);
+                let pri = priority.map_or(0.0, |p| p[task_id]);
+                devices[task.device].push_ready(task_id, pri);
             }
             TaskKind::Comm { src, dst, bytes } => {
+                if src == dst {
+                    // co-located endpoints (a placement rewrite): the
+                    // transfer degenerates to a local handoff — zero time,
+                    // no NIC occupancy, not counted in the comm ledger
+                    comms.push((t, task_id));
+                    return;
+                }
                 let start = t.max(nic_free[*src]).max(nic_free[*dst]);
                 let dur = cluster.net.message_time(*bytes);
                 nic_free[*src] = start + dur;
@@ -270,7 +357,7 @@ pub fn simulate_released(
         let dev = &mut devices[d];
         while dev.running.len() < dev.slots.len() && !dev.ready.is_empty() {
             dev.advance(t);
-            let task_id = dev.ready.pop_front().unwrap();
+            let task_id = dev.ready.pop().unwrap().task;
             let TaskKind::Kernel { label, class, flops } = &graph.tasks[task_id].kind else {
                 unreachable!("ready queue holds kernels only");
             };
@@ -313,7 +400,7 @@ pub fn simulate_released(
             } else {
                 dispatch(
                     t.id, 0.0, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                    &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                    &mut trace, &mut comm_total_s, &mut n_comms, record_trace, priority,
                 );
             }
         }
@@ -364,7 +451,7 @@ pub fn simulate_released(
                     let (_, task_id) = held.swap_remove(i);
                     dispatch(
                         task_id, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                        &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                        &mut trace, &mut comm_total_s, &mut n_comms, record_trace, priority,
                     );
                 } else {
                     i += 1;
@@ -417,7 +504,7 @@ pub fn simulate_released(
                     } else {
                         dispatch(
                             dep, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                            &mut trace, &mut comm_total_s, &mut n_comms, record_trace,
+                            &mut trace, &mut comm_total_s, &mut n_comms, record_trace, priority,
                         );
                     }
                 }
@@ -467,6 +554,9 @@ pub struct SimSession<'a> {
     graph: TaskGraph,
     indeg: Vec<usize>,
     dependents: Vec<Vec<usize>>,
+    /// Per-task dispatch priority over the union graph (0.0 unless the
+    /// instance was admitted via [`SimSession::admit_prioritized`]).
+    priority: Vec<f64>,
     /// Unretired task count per instance; 0 ⇒ the instance is finished.
     remaining: Vec<usize>,
     /// Virtual completion time per finished instance (its last retirement).
@@ -496,6 +586,7 @@ impl<'a> SimSession<'a> {
             graph: TaskGraph::default(),
             indeg: Vec::new(),
             dependents: Vec::new(),
+            priority: Vec::new(),
             remaining: Vec::new(),
             done_at: Vec::new(),
             finished: VecDeque::new(),
@@ -524,6 +615,26 @@ impl<'a> SimSession<'a> {
     /// its root tasks dispatch now, interleaving with whatever is already in
     /// flight. Returns the instance index.
     pub fn admit(&mut self, sub: TaskGraph) -> Result<usize> {
+        self.admit_inner(sub, None)
+    }
+
+    /// As [`SimSession::admit`], with per-task dispatch priorities for the
+    /// admitted instance — the session-mode consumer of a placement plan
+    /// (`coordinator::placement::Placement`), mirroring
+    /// `ExecSession::admit_prioritized` on the live side. `priority` must
+    /// have one entry per task of `sub`.
+    pub fn admit_prioritized(&mut self, sub: TaskGraph, priority: &[f64]) -> Result<usize> {
+        if priority.len() != sub.tasks.len() {
+            bail!(
+                "priority slice has {} entries for a {}-task instance",
+                priority.len(),
+                sub.tasks.len()
+            );
+        }
+        self.admit_inner(sub, Some(priority))
+    }
+
+    fn admit_inner(&mut self, sub: TaskGraph, priority: Option<&[f64]>) -> Result<usize> {
         sub.validate()?;
         for t in &sub.tasks {
             if t.device >= self.cluster.n_devices {
@@ -540,6 +651,10 @@ impl<'a> SimSession<'a> {
         let off = self.graph.append_instance(sub, inst, 0);
         self.indeg.resize(off + n_sub, 0);
         self.dependents.resize(off + n_sub, Vec::new());
+        self.priority.resize(off + n_sub, 0.0);
+        if let Some(p) = priority {
+            self.priority[off..off + n_sub].copy_from_slice(p);
+        }
         self.remaining.push(n_sub);
         self.done_at.push(self.now);
         for id in off..off + n_sub {
@@ -565,14 +680,20 @@ impl<'a> SimSession<'a> {
 
     /// Route one dependency-free task: kernels queue on their device, comms
     /// occupy both NICs from `max(t, nic free times)` — identical pricing to
-    /// [`simulate_released`]'s dispatch.
+    /// [`simulate_released`]'s dispatch (including the zero-cost co-located
+    /// comm fast path).
     fn dispatch_at(&mut self, task_id: usize, t: f64) {
         let task = &self.graph.tasks[task_id];
         match &task.kind {
             TaskKind::Kernel { .. } => {
-                self.devices[task.device].ready.push_back(task_id);
+                let pri = self.priority[task_id];
+                self.devices[task.device].push_ready(task_id, pri);
             }
             TaskKind::Comm { src, dst, bytes } => {
+                if src == dst {
+                    self.comms.push((t, task_id));
+                    return;
+                }
                 let start = t.max(self.nic_free[*src]).max(self.nic_free[*dst]);
                 let dur = self.cluster.net.message_time(*bytes);
                 self.nic_free[*src] = start + dur;
@@ -601,7 +722,7 @@ impl<'a> SimSession<'a> {
             let dev = &mut self.devices[d];
             while dev.running.len() < dev.slots.len() && !dev.ready.is_empty() {
                 dev.advance(t);
-                let task_id = dev.ready.pop_front().unwrap();
+                let task_id = dev.ready.pop().unwrap().task;
                 let TaskKind::Kernel { label, class, flops } = &self.graph.tasks[task_id].kind
                 else {
                     unreachable!("ready queue holds kernels only");
@@ -1316,5 +1437,109 @@ mod tests {
         let x = replay(SimSession::new(&c, false));
         let y = replay(SimSession::new(&c, false));
         assert_eq!(x, y);
+    }
+
+    #[test]
+    fn priorities_reorder_ready_kernels_and_zero_priorities_match_fifo() {
+        use crate::mgrit::taskgraph::{KernelClass, Task, TaskGraph, TaskKind};
+        // one device, one stream slot, three conv kernels (convs serialize):
+        // FIFO runs them 0,1,2; priorities [0,1,2] must run them 2,1,0
+        let mk = |id| Task {
+            id,
+            instance: 0,
+            device: 0,
+            kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e3 },
+            deps: vec![],
+            op: None,
+        };
+        let g = TaskGraph { tasks: (0..3).map(mk).collect() };
+        let mut c = cluster(1);
+        c.device.max_concurrency = 1;
+        let fifo = simulate(&g, &c, true).unwrap();
+        let order = |rep: &SimReport| {
+            let mut ev: Vec<(f64, usize)> =
+                rep.trace.iter().map(|e| (e.t_start, e.task)).collect();
+            ev.sort_by(|a, b| a.0.total_cmp(&b.0));
+            ev.into_iter().map(|(_, t)| t).collect::<Vec<_>>()
+        };
+        assert_eq!(order(&fifo), vec![0, 1, 2]);
+        let zeros = simulate_prioritized(&g, &c, true, Some(&[0.0; 3])).unwrap();
+        assert_eq!(order(&zeros), vec![0, 1, 2]);
+        assert_eq!(zeros.makespan_s, fifo.makespan_s);
+        let rev = simulate_prioritized(&g, &c, true, Some(&[0.0, 1.0, 2.0])).unwrap();
+        assert_eq!(order(&rev), vec![2, 1, 0]);
+        // priorities reorder, they never add or remove work
+        assert_eq!(rev.makespan_s, fifo.makespan_s);
+        // mis-sized priority slices are rejected
+        assert!(simulate_prioritized(&g, &c, false, Some(&[0.0])).is_err());
+    }
+
+    #[test]
+    fn co_located_comms_are_free_and_uncounted() {
+        use crate::mgrit::taskgraph::{KernelClass, Task, TaskGraph, TaskKind};
+        // kernel → src==dst comm → kernel: the comm must cost zero time,
+        // occupy no NIC, and stay out of the comm ledger — in both the batch
+        // engine and the incremental session
+        let kern = |id, deps: Vec<usize>| Task {
+            id,
+            instance: 0,
+            device: 0,
+            kind: TaskKind::Kernel { label: "k", class: KernelClass::Conv, flops: 1e3 },
+            deps,
+            op: None,
+        };
+        let g = TaskGraph {
+            tasks: vec![
+                kern(0, vec![]),
+                Task {
+                    id: 1,
+                    instance: 0,
+                    device: 0,
+                    kind: TaskKind::Comm { src: 0, dst: 0, bytes: 3.125e6 },
+                    deps: vec![0],
+                    op: None,
+                },
+                kern(2, vec![1]),
+            ],
+        };
+        let c = cluster(2);
+        let solo = c.device.kernel_time(KernelClass::Conv, 1e3);
+        let rep = simulate(&g, &c, false).unwrap();
+        assert_eq!(rep.n_comms, 0);
+        assert_eq!(rep.comm_total_s, 0.0);
+        assert!(
+            (rep.makespan_s - 2.0 * solo).abs() / solo < 1e-6,
+            "handoff not free: {} vs {}",
+            rep.makespan_s,
+            2.0 * solo
+        );
+        let mut s = SimSession::new(&c, false);
+        let inst = s.admit(g).unwrap();
+        s.run_to_idle().unwrap();
+        assert_eq!(s.finished_at(inst).unwrap(), rep.makespan_s);
+        let done = s.into_report();
+        assert_eq!(done.n_comms, 0);
+        assert_eq!(done.comm_total_s, 0.0);
+    }
+
+    #[test]
+    fn session_prioritized_admission_matches_batch_prioritized_run() {
+        // the same (graph, priority) pair scores identically through
+        // simulate_prioritized and SimSession::admit_prioritized — the two
+        // consumers of a placement plan can never drift
+        let g = forward_graph(2);
+        let c = cluster(2);
+        let pri: Vec<f64> = g.tasks.iter().map(|t| t.id as f64).collect();
+        let batch = simulate_prioritized(&g, &c, false, Some(&pri)).unwrap();
+        let mut s = SimSession::new(&c, false);
+        let inst = s.admit_prioritized(g.clone(), &pri).unwrap();
+        s.run_to_idle().unwrap();
+        assert_eq!(s.finished_at(inst).unwrap(), batch.makespan_s);
+        let rep = s.into_report();
+        assert_eq!(rep.n_kernels, batch.n_kernels);
+        assert_eq!(rep.n_comms, batch.n_comms);
+        // mis-sized priority slices are rejected at admission
+        let mut s2 = SimSession::new(&c, false);
+        assert!(s2.admit_prioritized(g, &[1.0]).is_err());
     }
 }

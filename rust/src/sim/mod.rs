@@ -16,4 +16,6 @@
 pub mod engine;
 pub mod timeline;
 
-pub use engine::{simulate, simulate_released, SimReport, SimSession, SimTraceEvent};
+pub use engine::{
+    simulate, simulate_prioritized, simulate_released, SimReport, SimSession, SimTraceEvent,
+};

@@ -41,6 +41,7 @@ use std::sync::Arc;
 
 use anyhow::bail;
 
+use crate::coordinator::PlacementKind;
 use crate::data::Dataset;
 use crate::mgrit::{self, Granularity, Hierarchy, MgritOptions};
 use crate::model::params::NetGrads;
@@ -344,6 +345,11 @@ pub fn training_hierarchy(spec: &NetSpec) -> Result<Hierarchy> {
 /// `Method::Mgrit`, then split deterministically — so M = 1 and M > 1 runs
 /// consume identical data in identical order, and same-M reruns are
 /// bit-reproducible (see `Rng::for_instance` for instance-local streams).
+///
+/// `placement` picks the scheduling & placement policy each step's graph is
+/// dispatched under ([`crate::coordinator::placement`]); every policy is
+/// bit-identical to `MinId`, so it only moves wall-clock time.
+#[allow(clippy::too_many_arguments)]
 pub fn train_parallel(
     spec: &Arc<NetSpec>,
     params: &mut NetParams,
@@ -352,6 +358,7 @@ pub fn train_parallel(
     n_devices: usize,
     granularity: Granularity,
     micro_batches: usize,
+    placement: PlacementKind,
 ) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
@@ -385,6 +392,7 @@ pub fn train_parallel(
             cfg.batch,
         )?;
         drv.set_granularity(granularity);
+        drv.set_placement(placement);
         let out = drv.train_step_micro(&y, &labels, &opts, cfg.lr, micro_batches)?;
         let grad_norm = out.grads.global_norm();
         *params = out.params;
@@ -397,6 +405,7 @@ pub fn train_parallel(
 /// serial MG step and the parallel whole-step graph) on one batch from
 /// `data` and reports timings plus the largest relative error across every
 /// post-SGD parameter tensor (expected 0 — the step is bit-identical).
+#[allow(clippy::too_many_arguments)]
 pub fn parity_report(
     spec: &Arc<NetSpec>,
     params: &NetParams,
@@ -406,6 +415,7 @@ pub fn parity_report(
     lr: f32,
     n_devices: usize,
     granularity: Granularity,
+    placement: PlacementKind,
 ) -> Result<String> {
     let mut rng = Rng::new(0xC0FFEE);
     let (y, labels) = data.sample_batch(batch, &mut rng)?;
@@ -429,6 +439,7 @@ pub fn parity_report(
         batch,
     )?;
     drv.set_granularity(granularity);
+    drv.set_placement(placement);
     let t = crate::util::Timer::start();
     let par = drv.train_step(&y, &labels, &opts, lr)?;
     let par_s = t.elapsed_s();
@@ -641,7 +652,8 @@ mod tests {
         let logs_s = train(&spec, &mut p_serial, &ds, &cfg, mk_host(&spec)).unwrap();
         let mut p_par = NetParams::init(&spec, 76).unwrap();
         let logs_p =
-            train_parallel(&spec, &mut p_par, &ds, &cfg, 2, Granularity::PerStep, 1).unwrap();
+            train_parallel(&spec, &mut p_par, &ds, &cfg, 2, Granularity::PerStep, 1, PlacementKind::MinId)
+                .unwrap();
         assert_eq!(logs_s.len(), logs_p.len());
         for (a, b) in logs_s.iter().zip(&logs_p) {
             assert_eq!(a.loss, b.loss, "step {} loss differs", a.step);

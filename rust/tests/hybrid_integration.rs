@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use resnet_mgrit::coordinator::ParallelMgrit;
+use resnet_mgrit::coordinator::{ParallelMgrit, PlacementKind};
 use resnet_mgrit::data::SyntheticDigits;
 use resnet_mgrit::mgrit::{hierarchy::Hierarchy, Granularity, MgritOptions};
 use resnet_mgrit::model::{NetParams, NetSpec};
@@ -211,7 +211,17 @@ fn hybrid_training_loop_is_bit_reproducible() {
     let run = |m: usize| -> (Vec<train::StepLog>, NetParams) {
         let mut p = NetParams::init(&spec, 208).unwrap();
         let logs =
-            train::train_parallel(&spec, &mut p, &ds, &cfg, 2, Granularity::PerStep, m).unwrap();
+            train::train_parallel(
+                &spec,
+                &mut p,
+                &ds,
+                &cfg,
+                2,
+                Granularity::PerStep,
+                m,
+                PlacementKind::MinId,
+            )
+            .unwrap();
         (logs, p)
     };
     let (logs_a, p_a) = run(2);
@@ -228,4 +238,65 @@ fn hybrid_training_loop_is_bit_reproducible() {
     // differs only by the micro-batch mean — not by data order
     let (logs_m1, _) = run(1);
     assert_eq!(logs_m1.len(), logs_a.len());
+}
+
+#[test]
+fn placement_policies_bit_match_serial_micro_reference() {
+    // placement may only change *when/where* tasks run, never *what* they
+    // compute: every policy — including the cost-aware re-placers — must be
+    // bit-identical to the serial micro reference at 1/2/4 devices
+    let spec = tiny_spec();
+    let params = Arc::new(NetParams::init(&spec, 209).unwrap());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+    let (y, labels) = train_batch(&spec, 4);
+    let lr = 0.05f32;
+    let opts = MgritOptions::early_stopping(2);
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let serial =
+        train::mg_step_serial_micro(&spec, &exec, &y, &labels, &hier, &opts, lr, 2).unwrap();
+    for n_dev in [1usize, 2, 4] {
+        for kind in PlacementKind::all() {
+            let mut drv = ParallelMgrit::new(
+                params_factory(spec.clone(), params.clone()),
+                spec.clone(),
+                hier.clone(),
+                n_dev,
+                4,
+            )
+            .unwrap();
+            drv.set_placement(kind);
+            assert_eq!(drv.placement(), kind);
+            let par = drv.train_step_micro(&y, &labels, &opts, lr, 2).unwrap();
+            let ctx = format!("n_dev={n_dev} placement={}", kind.name());
+            assert_eq!(par.loss, serial.loss, "{ctx}: combined loss differs");
+            for (k, (p, s)) in par.per_instance.iter().zip(&serial.per_instance).enumerate()
+            {
+                assert_eq!(p.loss, s.loss, "{ctx}: instance {k} loss differs");
+                for (j, (a, b)) in p.states.iter().zip(&s.states).enumerate() {
+                    assert!(a.data() == b.data(), "{ctx}: inst {k} state {j} differs");
+                }
+                for (j, (a, b)) in p.lams.iter().zip(&s.lams).enumerate() {
+                    assert!(a.data() == b.data(), "{ctx}: inst {k} adjoint {j} differs");
+                }
+            }
+            for (i, ((pw, pb), (sw, sb))) in
+                par.grads.trunk.iter().zip(&serial.grads.trunk).enumerate()
+            {
+                assert!(
+                    pw.data() == sw.data() && pb.data() == sb.data(),
+                    "{ctx}: reduced trunk grad {i} differs bitwise"
+                );
+            }
+            for (i, ((pw, pb), (sw, sb))) in
+                par.params.trunk.iter().zip(&serial.params.trunk).enumerate()
+            {
+                assert!(
+                    pw.data() == sw.data() && pb.data() == sb.data(),
+                    "{ctx}: post-SGD trunk {i} differs bitwise"
+                );
+            }
+            assert!(par.params.w_open.data() == serial.params.w_open.data(), "{ctx}: W_open");
+            assert!(par.params.w_fc.data() == serial.params.w_fc.data(), "{ctx}: W_fc");
+        }
+    }
 }

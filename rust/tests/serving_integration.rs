@@ -10,6 +10,7 @@
 
 use std::sync::Arc;
 
+use resnet_mgrit::coordinator::PlacementKind;
 use resnet_mgrit::experiments::serve::deadline_mixed_burst;
 use resnet_mgrit::mgrit::hierarchy::Hierarchy;
 use resnet_mgrit::mgrit::taskgraph::Admission;
@@ -172,6 +173,59 @@ fn every_policy_is_bit_identical_to_the_serial_reference() {
                 "{policy:?}, request {}: logits differ from the serial reference bitwise",
                 r.id
             );
+        }
+    }
+}
+
+#[test]
+fn every_placement_serves_bit_identically_to_the_serial_reference() {
+    // (a) extended to the placement layer: the same 4-request burst served
+    // under min-id, HEFT, and lookahead placement at 1/2/4 devices must
+    // produce, for every request, outputs bitwise equal to the serial
+    // reference — placement re-places and reorders the hazard-complete
+    // graph, it never changes arithmetic
+    let spec = Arc::new(NetSpec::fig6_depth(16));
+    let params = Arc::new(NetParams::init(&spec, 312).unwrap());
+    let hier = Hierarchy::two_level(16, spec.h(), 4).unwrap();
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let reqs = requests(&spec, 4, 0.0, None);
+    let inputs: Vec<Tensor> = reqs.iter().map(|r| r.input.clone()).collect();
+    for devices in [1usize, 2, 4] {
+        for placement in PlacementKind::all() {
+            let cfg = ServeConfig { max_inflight: 2, placement, ..Default::default() };
+            let mut rt = ServingRuntime::new(
+                factory(spec.clone(), params.clone()),
+                spec.clone(),
+                hier.clone(),
+                devices,
+                cfg,
+            )
+            .unwrap();
+            for r in reqs.clone() {
+                rt.submit(r);
+            }
+            let opts = rt.mgrit_options();
+            let report = rt.run().unwrap();
+            assert_eq!(
+                report.records.len(),
+                4,
+                "{placement:?} at {devices} device(s) lost requests"
+            );
+            for r in &report.records {
+                let (u_ref, logits_ref) =
+                    serving::serial_reference(&exec, &hier, &inputs[r.id as usize], &opts)
+                        .unwrap();
+                assert!(
+                    r.output.data() == u_ref.data(),
+                    "{placement:?} at {devices} device(s), request {}: u^N differs bitwise",
+                    r.id
+                );
+                assert!(
+                    r.logits.data() == logits_ref.data(),
+                    "{placement:?} at {devices} device(s), request {}: logits differ bitwise",
+                    r.id
+                );
+            }
         }
     }
 }
