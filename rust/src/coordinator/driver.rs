@@ -23,7 +23,7 @@ use super::placement::{self, PlacementKind};
 use super::streams::StreamPool;
 use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph::{self, Granularity, TaskGraph};
+use crate::mgrit::taskgraph::{self, Granularity, PipeSync, TaskGraph};
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
 use crate::perfmodel::ClusterModel;
@@ -108,6 +108,22 @@ pub struct MicroStepOutput {
     /// Per-micro-batch trajectories, in instance order.
     pub per_instance: Vec<InstanceStep>,
     /// Execution metrics (phases, traffic, events).
+    pub metrics: RunMetrics,
+}
+
+/// Output of one **cross-step pipelined** training run (see
+/// [`ParallelMgrit::train_pipeline`]): K steps executed as ONE graph.
+#[derive(Debug)]
+pub struct PipelineRunOutput {
+    /// Per-step mean loss, in step order — with `PipeSync::Staleness(0)`
+    /// bit-identical to K sequential [`ParallelMgrit::train_step_micro`]
+    /// losses.
+    pub losses: Vec<f64>,
+    /// The final parameters after all K updates (snapshot-ring version K).
+    pub params: NetParams,
+    /// The snapshot ring's live-depth high-water mark (≤ S + 2).
+    pub peak_ring_depth: usize,
+    /// Execution metrics (phases, traffic, events) over the whole run.
     pub metrics: RunMetrics,
 }
 
@@ -284,6 +300,33 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             opts.relax,
             self.granularity,
             micro_batches,
+        )
+    }
+
+    /// The cross-step pipelined training schedule: `k_steps` consecutive
+    /// training steps of `micro_batches` instances each, composed into ONE
+    /// graph whose only cross-step edges are the `sync` policy's
+    /// version-gap bounds — one plan, one execution, no inter-step barrier.
+    pub fn train_pipeline_graph(
+        &self,
+        opts: &MgritOptions,
+        micro_batches: usize,
+        k_steps: usize,
+        sync: PipeSync,
+    ) -> Result<taskgraph::TaskGraph> {
+        let groups = InstanceGroups::new(self.n_groups, self.partition.n_devices())?;
+        taskgraph::mg_train_pipeline(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            &groups,
+            (self.batch / (k_steps * micro_batches).max(1)).max(1),
+            opts.max_cycles,
+            opts.relax,
+            self.granularity,
+            micro_batches,
+            k_steps,
+            sync,
         )
     }
 }
@@ -518,6 +561,98 @@ where
             metrics,
         })
     }
+
+    /// **Cross-step pipelined training**: run `k_steps` consecutive training
+    /// steps as ONE executable graph. The superbatch `y` (leading dimension
+    /// K·M·per) is sliced step-major — step t's micro-batch k is rows
+    /// `[(t·M + k)·per, (t·M + k + 1)·per)` — so each step sees exactly the
+    /// rows the sequential reference would.
+    ///
+    /// Under `PipeSync::Staleness(S)`, step t's tasks read the snapshot-ring
+    /// parameter version `max(0, t − S)`: step t+1's forward V-cycles launch
+    /// against the step-t snapshot while step t's adjoint/gradient tail is
+    /// still draining, and the only cross-step edges are the version-gap
+    /// bounds (`ParamUpdate(t−S−1, slot)` → step t's first reader of the
+    /// slot). `S = 0` is **bit-identical** to `k_steps` sequential
+    /// [`ParallelMgrit::train_step_micro`] calls — same arithmetic, same
+    /// order, only the schedule overlaps. `PipeSync::Barrier` is the fully
+    /// synchronous reference composition (every step-t+1 root waits for all
+    /// of step t's updates).
+    ///
+    /// Unlike the single-step paths, the opening layer and its VJP, and ALL
+    /// parameter updates, run **in-graph** against the versioned snapshot
+    /// ring — host-side staging would serialize the steps this exists to
+    /// overlap.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_pipeline(
+        &self,
+        y: &Tensor,
+        labels: &[i32],
+        opts: &MgritOptions,
+        lr: f32,
+        micro_batches: usize,
+        k_steps: usize,
+        sync: PipeSync,
+    ) -> Result<PipelineRunOutput> {
+        let m = micro_batches;
+        anyhow::ensure!(m >= 1, "need at least one micro-batch");
+        anyhow::ensure!(k_steps >= 1, "need at least one pipeline step");
+        let b = *y
+            .dims()
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("batch tensor has no leading dimension"))?;
+        anyhow::ensure!(labels.len() == b, "labels len {} != batch {b}", labels.len());
+        anyhow::ensure!(
+            b % (k_steps * m) == 0,
+            "superbatch {b} does not divide into {k_steps} steps × {m} micro-batches"
+        );
+        let per = b / (k_steps * m);
+        let exec = self.factory.build(0)?;
+        let params = Arc::new(exec.net_params().clone());
+        let mut inputs = Vec::with_capacity(k_steps * m);
+        for gi in 0..k_steps * m {
+            let yk = y.slice_batch(gi * per, per)?;
+            inputs.push((yk, labels[gi * per..(gi + 1) * per].to_vec()));
+        }
+        let (graph, pri) =
+            self.planned(self.train_pipeline_graph(opts, m, k_steps, sync)?)?;
+        // a barrier-synced graph's cross-step edges already guarantee version
+        // t is complete before step t dispatches — its executor staleness is 0
+        let staleness = match sync {
+            PipeSync::Barrier => 0,
+            PipeSync::Staleness(s) => s,
+        };
+        let mut st = MultiExecState::initial_train_pipeline(
+            &self.hier,
+            self.spec.clone(),
+            &graph,
+            &inputs,
+            params,
+            lr,
+            m,
+            staleness,
+        )?;
+        let state_bytes = 4 * (per * self.spec.state_elems()) as u64;
+        let mut metrics = RunMetrics::default();
+        let mut stats =
+            CycleStats { residual_norms: Vec::new(), converged: false, phi_evals: 0 };
+        let rep = executor::execute_prioritized(
+            &self.pool,
+            &self.hier,
+            &graph,
+            &mut st,
+            pri.as_deref(),
+        )?;
+        Self::absorb(&mut metrics, &rep, &mut stats, state_bytes);
+        metrics.cycles = opts.max_cycles * k_steps;
+        let out = st.into_pipeline_outputs()?;
+        Ok(PipelineRunOutput {
+            losses: out.losses,
+            params: out.params,
+            peak_ring_depth: out.peak_ring_depth,
+            metrics,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -656,5 +791,108 @@ mod tests {
                 })
             });
         assert!(overlap, "no cross-phase overlap observed in the stream trace");
+    }
+
+    /// Run the sequential K-step reference (one driver per step, each over
+    /// the step's slice of `y`) and return (per-step losses, final params).
+    fn sequential_steps(
+        spec: &Arc<NetSpec>,
+        hier: &Hierarchy,
+        y: &Tensor,
+        labels: &[i32],
+        opts: &MgritOptions,
+        seed: u64,
+        n_dev: usize,
+        micro: usize,
+        k: usize,
+        batch: usize,
+    ) -> (Vec<f64>, NetParams) {
+        let mut p_seq = NetParams::init(spec, seed).unwrap();
+        let mut losses = Vec::new();
+        for t in 0..k {
+            let ys = y.slice_batch(t * batch, batch).unwrap();
+            let ls = labels[t * batch..(t + 1) * batch].to_vec();
+            let sp = spec.clone();
+            let snap = Arc::new(p_seq.clone());
+            let f = move |_w: usize| HostSolver::new(sp.clone(), snap.clone());
+            let drv =
+                ParallelMgrit::new(f, spec.clone(), hier.clone(), n_dev, batch).unwrap();
+            let out = drv.train_step_micro(&ys, &ls, opts, 0.05, micro).unwrap();
+            p_seq = out.params;
+            losses.push(out.loss);
+        }
+        (losses, p_seq)
+    }
+
+    /// One pipelined window over the full superbatch, then bitwise-compare
+    /// against the sequential reference.
+    fn assert_pipeline_s0_parity(
+        spec: &Arc<NetSpec>,
+        hier: &Hierarchy,
+        seed: u64,
+        n_dev: usize,
+        micro: usize,
+        k: usize,
+        batch: usize,
+    ) {
+        let mut rng = crate::util::prng::Rng::new(seed + 1);
+        let y = Tensor::randn(
+            &[k * batch, spec.opening.in_channels, spec.opening.in_h, spec.opening.in_w],
+            0.8,
+            &mut rng,
+        );
+        let labels: Vec<i32> = (0..k * batch).map(|i| (i % 10) as i32).collect();
+        let opts = MgritOptions::early_stopping(1);
+        let (losses, p_seq) =
+            sequential_steps(spec, hier, &y, &labels, &opts, seed, n_dev, micro, k, batch);
+        let sp = spec.clone();
+        let snap = Arc::new(NetParams::init(spec, seed).unwrap());
+        let f = move |_w: usize| HostSolver::new(sp.clone(), snap.clone());
+        let drv =
+            ParallelMgrit::new(f, spec.clone(), hier.clone(), n_dev, k * batch).unwrap();
+        let out = drv
+            .train_pipeline(&y, &labels, &opts, 0.05, micro, k, PipeSync::Staleness(0))
+            .unwrap();
+        let tag = format!("dev {n_dev} micro {micro}");
+        assert_eq!(out.losses, losses, "{tag}: losses differ");
+        assert!(out.peak_ring_depth <= 2, "{tag}: ring depth {}", out.peak_ring_depth);
+        for (i, ((w, b), (w2, b2))) in
+            out.params.trunk.iter().zip(&p_seq.trunk).enumerate()
+        {
+            assert!(
+                w.data() == w2.data() && b.data() == b2.data(),
+                "{tag}: trunk layer {i} differs"
+            );
+        }
+        assert!(out.params.w_open.data() == p_seq.w_open.data(), "{tag}: w_open differs");
+        assert!(out.params.b_open.data() == p_seq.b_open.data(), "{tag}: b_open differs");
+        assert!(out.params.w_fc.data() == p_seq.w_fc.data(), "{tag}: w_fc differs");
+        assert!(out.params.b_fc.data() == p_seq.b_fc.data(), "{tag}: b_fc differs");
+    }
+
+    #[test]
+    fn pipeline_s0_bitwise_matches_sequential_steps() {
+        // tentpole acceptance gate: one composed K-step graph at staleness 0
+        // is bit-identical to K sequential micro-batched steps, across
+        // device counts and micro splits on a two-level hierarchy
+        let spec = Arc::new(NetSpec::micro());
+        let hier = Hierarchy::two_level(4, spec.h(), 2).unwrap();
+        for (n_dev, micro) in [(1usize, 1usize), (1, 2), (2, 1), (2, 2)] {
+            assert_pipeline_s0_parity(&spec, &hier, 91, n_dev, micro, 3, 2);
+        }
+    }
+
+    #[test]
+    fn pipeline_s0_parity_four_devices() {
+        // the 4-device column of the parity matrix needs ≥ 4 layer blocks:
+        // an 8-layer trunk on a two-level hierarchy with coarsening 2
+        let mut s = NetSpec::mnist();
+        s.trunk.truncate(8);
+        s.t_final = 0.5;
+        let spec = Arc::new(s);
+        let hier = Hierarchy::two_level(8, spec.h(), 2).unwrap();
+        for micro in [1usize, 2] {
+            assert_pipeline_s0_parity(&spec, &hier, 93, 4, micro, 2, 2);
+        }
     }
 }

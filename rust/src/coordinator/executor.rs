@@ -62,11 +62,12 @@ use anyhow::{anyhow, bail};
 use super::placement::ReadyKey;
 use super::streams::{JobDone, StreamPool};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph::{GradSrc, Sys, Task, TaskGraph, TaskKind, TaskOp};
+use crate::mgrit::taskgraph::{op_param_slots, GradSrc, Sys, Task, TaskGraph, TaskKind, TaskOp};
 use crate::model::params::{pair_scale, pair_sum, TrunkGradSlots};
-use crate::model::NetParams;
+use crate::model::spec::LayerKind;
+use crate::model::{NetParams, NetSpec};
 use crate::solver::{BlockSolver, NetExecutor, SolverFactory};
-use crate::tensor::Tensor;
+use crate::tensor::{ops, vjp, Tensor};
 use crate::Result;
 
 /// The state slots of one MGRIT system (primal or adjoint): per level, the
@@ -186,12 +187,157 @@ struct SharedTrain {
     new_trunk: TrunkGradSlots,
 }
 
+/// Versioned parameter storage for **cross-step pipelined** training: a
+/// bounded ring of parameter *versions*, each one `(w, b)` pair per slot
+/// (trunk layers `0..n_layers`, the opening pair at `n_layers`, the head
+/// pair at `n_layers + 1`). Version 0 is the admitted snapshot; step t's
+/// `ParamUpdate`s write version t+1; step t's tasks read version
+/// `max(0, t − S)`. Per-version outstanding-read counts are fixed at
+/// admission from the graph, so a version retires (frees its tensors) the
+/// moment its last reader completes — the ring's live depth is bounded by
+/// S + 2 when the graph's staleness edges are correct, and reading a retired
+/// or unwritten version is a hard error, never a silent stale read.
+#[derive(Debug)]
+pub struct SnapshotRing {
+    /// Absolute version number of `versions[0]`.
+    base: usize,
+    /// Live versions, oldest first; each is one optional `(w, b)` per slot.
+    versions: VecDeque<Vec<Option<(Arc<Tensor>, Arc<Tensor>)>>>,
+    /// Outstanding parameter reads per absolute version.
+    pending: Vec<usize>,
+    n_slots: usize,
+    peak: usize,
+}
+
+impl SnapshotRing {
+    /// Ring seeded with `params` as version 0; `pending[v]` is the total
+    /// read count the admitted graph performs against version `v`.
+    pub fn new(params: &NetParams, n_layers: usize, pending: Vec<usize>) -> SnapshotRing {
+        let n_slots = n_layers + 2;
+        let mut v0: Vec<Option<(Arc<Tensor>, Arc<Tensor>)>> = Vec::with_capacity(n_slots);
+        for (w, b) in &params.trunk {
+            v0.push(Some((Arc::new(w.clone()), Arc::new(b.clone()))));
+        }
+        v0.push(Some((Arc::new(params.w_open.clone()), Arc::new(params.b_open.clone()))));
+        v0.push(Some((Arc::new(params.w_fc.clone()), Arc::new(params.b_fc.clone()))));
+        let mut versions = VecDeque::new();
+        versions.push_back(v0);
+        SnapshotRing { base: 0, versions, pending, n_slots, peak: 1 }
+    }
+
+    /// The `(w, b)` pair of `slot` at absolute `version`. Hard-errors on a
+    /// retired version (a staleness-edge bug would otherwise read freed
+    /// parameters) or an unwritten one (a missing dependency edge).
+    pub fn get(&self, version: usize, slot: usize) -> Result<(Arc<Tensor>, Arc<Tensor>)> {
+        if version < self.base {
+            bail!(
+                "snapshot ring: version {version} slot {slot} already retired (base {})",
+                self.base
+            );
+        }
+        self.versions
+            .get(version - self.base)
+            .and_then(|v| v.get(slot))
+            .and_then(|s| s.clone())
+            .ok_or_else(|| anyhow!("snapshot ring: version {version} slot {slot} not yet written"))
+    }
+
+    /// Write `slot` of `version`, extending the ring as needed. A double
+    /// write is a graph bug.
+    pub fn set(&mut self, version: usize, slot: usize, w: Tensor, b: Tensor) -> Result<()> {
+        anyhow::ensure!(
+            version >= self.base,
+            "snapshot ring: write to retired version {version} (base {})",
+            self.base
+        );
+        anyhow::ensure!(slot < self.n_slots, "snapshot ring: slot {slot} out of range");
+        while self.versions.len() <= version - self.base {
+            self.versions.push_back(vec![None; self.n_slots]);
+            self.peak = self.peak.max(self.versions.len());
+        }
+        let s = &mut self.versions[version - self.base][slot];
+        anyhow::ensure!(
+            s.is_none(),
+            "snapshot ring: version {version} slot {slot} written twice"
+        );
+        *s = Some((Arc::new(w), Arc::new(b)));
+        Ok(())
+    }
+
+    /// Record one completed read against `version` and retire leading
+    /// versions whose reads drained. The newest version — the run's final
+    /// parameters — is never retired.
+    pub fn note_read(&mut self, version: usize) -> Result<()> {
+        let p = self
+            .pending
+            .get_mut(version)
+            .ok_or_else(|| anyhow!("snapshot ring: read of unknown version {version}"))?;
+        anyhow::ensure!(
+            *p > 0,
+            "snapshot ring: version {version} read more times than admitted"
+        );
+        *p -= 1;
+        while self.versions.len() > 1 && self.pending.get(self.base).copied() == Some(0) {
+            self.versions.pop_front();
+            self.base += 1;
+        }
+        Ok(())
+    }
+
+    /// Currently-live version count.
+    pub fn depth(&self) -> usize {
+        self.versions.len()
+    }
+
+    /// Maximum live version count over the run — the ring's memory
+    /// high-water mark (≤ S + 2 when the staleness edges are correct).
+    pub fn peak_depth(&self) -> usize {
+        self.peak
+    }
+}
+
+/// Training state of a cross-step **pipelined** run, shared across all its
+/// instances: the versioned parameter ring plus *per-step* reduction
+/// storage — each of the K steps joins its own M instances, so the flat
+/// [`SharedTrain`] slots do not apply.
+#[derive(Debug)]
+struct PipeShared {
+    spec: Arc<NetSpec>,
+    lr: f32,
+    micro: usize,
+    staleness: usize,
+    k_steps: usize,
+    n_layers: usize,
+    ring: SnapshotRing,
+    /// `nodes[step][slot][node]` — internal reduction-tree partial sums.
+    nodes: Vec<Vec<Vec<Option<(Tensor, Tensor)>>>>,
+    /// `reduced[step][slot]` — the per-step `ReduceGrad` roots.
+    reduced: Vec<Vec<Option<(Tensor, Tensor)>>>,
+    /// Per global instance, the raw micro-batch input `y` (read by the
+    /// in-graph `Opening` / `OpenGrad` tasks).
+    inputs: Vec<Arc<Tensor>>,
+}
+
+/// Everything a completed pipelined training run produced.
+#[derive(Debug)]
+pub struct PipelineOutputs {
+    /// Per-step mean loss over the step's M instances, in step order — each
+    /// computed with the identical summation order as the sequential
+    /// reference (`Σₖ lossₖ / M`, instance order).
+    pub losses: Vec<f64>,
+    /// The final parameters: ring version K.
+    pub params: NetParams,
+    /// The snapshot ring's live-depth high-water mark (≤ S + 2).
+    pub peak_ring_depth: usize,
+}
+
 /// The live state the multi-instance executor reads and writes: one
 /// [`ExecState`] per graph instance plus the shared training join state.
 #[derive(Debug)]
 pub struct MultiExecState {
     insts: Vec<ExecState>,
     shared: Option<SharedTrain>,
+    pipe: Option<PipeShared>,
 }
 
 /// One instance's share of a completed training run.
@@ -240,7 +386,7 @@ impl MultiExecState {
     /// training bookkeeping (graphs with training ops will be rejected at
     /// dispatch).
     pub fn initial(hier: &Hierarchy, u0: &Tensor) -> MultiExecState {
-        MultiExecState { insts: vec![ExecState::new(hier, u0, None)], shared: None }
+        MultiExecState { insts: vec![ExecState::new(hier, u0, None)], shared: None, pipe: None }
     }
 
     /// Training-step state for M instances: `inputs[k]` is instance k's
@@ -280,6 +426,103 @@ impl MultiExecState {
                 reduced: TrunkGradSlots::new(n_layers),
                 new_trunk: TrunkGradSlots::new(n_layers),
             }),
+            pipe: None,
+        })
+    }
+
+    /// Pipelined-training state for a `mg_train_pipeline` graph over
+    /// `inputs.len()` instances (K steps × `micro` micro-batches, instance
+    /// order step-major): `inputs[t·micro + k]` is step t's k-th raw
+    /// micro-batch `y` and its labels — the in-graph `Opening` task computes
+    /// u⁰ against the step's parameter *version*, so unlike
+    /// [`MultiExecState::initial_train`] the caller passes raw inputs, not
+    /// opened states. The snapshot ring is seeded with `params` as version 0
+    /// and its per-version read counts are scanned from `graph`, so versions
+    /// retire exactly when their last reader completes. `staleness` must
+    /// match the graph's `PipeSync`: the version step t reads is
+    /// `max(0, t − staleness)` — pass 0 for barrier-synced graphs, whose
+    /// cross-step edges guarantee version t is complete before step t
+    /// dispatches.
+    #[allow(clippy::too_many_arguments)]
+    pub fn initial_train_pipeline(
+        hier: &Hierarchy,
+        spec: Arc<NetSpec>,
+        graph: &TaskGraph,
+        inputs: &[(Tensor, Vec<i32>)],
+        params: Arc<NetParams>,
+        lr: f32,
+        micro: usize,
+        staleness: usize,
+    ) -> Result<MultiExecState> {
+        anyhow::ensure!(micro >= 1, "need at least one micro-batch");
+        anyhow::ensure!(
+            !inputs.is_empty() && inputs.len() % micro == 0,
+            "instance count {} is not a multiple of micro {micro}",
+            inputs.len()
+        );
+        let k_steps = inputs.len() / micro;
+        let n_layers = hier.fine().n_points - 1;
+        let n_slots = n_layers + 2;
+        anyhow::ensure!(
+            params.trunk.len() == n_layers,
+            "params have {} trunk layers, hierarchy has {n_layers}",
+            params.trunk.len()
+        );
+        // each instance's primal system is seeded by its in-graph Opening
+        // task (the instance's sole dependency-free task — everything else
+        // is ordered behind it), so the placeholder seed is never read
+        let ph = Tensor::zeros(&[1]);
+        let insts: Vec<ExecState> = inputs
+            .iter()
+            .map(|(_, labels)| {
+                ExecState::new(
+                    hier,
+                    &ph,
+                    Some(TrainState {
+                        labels: labels.clone(),
+                        // slots 0..n_layers: trunk GradAccum; slot n_layers:
+                        // the OpenGrad pair (the head pair lives in HeadOut)
+                        grads: TrunkGradSlots::new(n_layers + 1),
+                        head: None,
+                    }),
+                )
+            })
+            .collect();
+        // per-version outstanding read counts: every parameter-reading task
+        // of step t reads version max(0, t − S) once per slot it touches;
+        // every ParamUpdate of step t additionally reads version t (its base)
+        let mut pending = vec![0usize; k_steps + 1];
+        for t in &graph.tasks {
+            let Some(op) = &t.op else { continue };
+            let step = t.instance / micro;
+            anyhow::ensure!(
+                step < k_steps,
+                "task {} instance {} exceeds the {k_steps}-step input set",
+                t.id,
+                t.instance
+            );
+            if matches!(op, TaskOp::ParamUpdate { .. }) {
+                pending[step] += 1;
+            } else {
+                pending[step.saturating_sub(staleness)] += op_param_slots(op, hier, n_layers).len();
+            }
+        }
+        let ring = SnapshotRing::new(&params, n_layers, pending);
+        Ok(MultiExecState {
+            insts,
+            shared: None,
+            pipe: Some(PipeShared {
+                spec,
+                lr,
+                micro,
+                staleness,
+                k_steps,
+                n_layers,
+                ring,
+                nodes: vec![vec![vec![None; micro.saturating_sub(1)]; n_slots]; k_steps],
+                reduced: vec![vec![None; n_slots]; k_steps],
+                inputs: inputs.iter().map(|(y, _)| Arc::new(y.clone())).collect(),
+            }),
         })
     }
 
@@ -287,7 +530,7 @@ impl MultiExecState {
     /// ([`ExecSession`]) run, where forward-only instances are admitted one
     /// request at a time via [`MultiExecState::push_instance`].
     pub fn empty() -> MultiExecState {
-        MultiExecState { insts: Vec::new(), shared: None }
+        MultiExecState { insts: Vec::new(), shared: None, pipe: None }
     }
 
     /// Append a fresh forward-only instance (primal system seeded with `u0`,
@@ -370,6 +613,41 @@ impl MultiExecState {
         }
     }
 
+    /// Pipelined counterpart of [`MultiExecState::grad_src`]: a *step-local*
+    /// reduction operand — instance leaves index the step's own M instances
+    /// and tree nodes the step's own storage. Slot `n_layers + 1` (the head
+    /// pair) reads the instance's `HeadOut` gradients; slot `n_layers` the
+    /// `OpenGrad` pair; trunk slots the `GradAccum` pairs.
+    fn grad_src_pipe(&self, step: usize, slot: usize, src: GradSrc) -> Result<(Tensor, Tensor)> {
+        let pipe = self
+            .pipe
+            .as_ref()
+            .ok_or_else(|| anyhow!("pipelined reduce outside a pipelined run"))?;
+        match src {
+            GradSrc::Inst(k) => {
+                let gi = step * pipe.micro + k;
+                let train = self.inst(gi)?.train()?;
+                if slot == pipe.n_layers + 1 {
+                    let head = train.head.as_ref().ok_or_else(|| {
+                        anyhow!("reduce({slot}): instance {gi} head not retired")
+                    })?;
+                    Ok((head.dw_fc.clone(), head.db_fc.clone()))
+                } else {
+                    train.grads.get(slot).cloned().ok_or_else(|| {
+                        anyhow!("reduce({slot}): instance {gi} gradient slot empty")
+                    })
+                }
+            }
+            GradSrc::Node(n) => pipe
+                .nodes
+                .get(step)
+                .and_then(|s| s.get(slot))
+                .and_then(|l| l.get(n))
+                .and_then(|s| s.clone())
+                .ok_or_else(|| anyhow!("reduce({slot}): step {step} tree node {n} empty")),
+        }
+    }
+
     /// Residual tensor at `(level, j)` of instance 0's primal system, if
     /// computed (the forward solve's convergence check).
     pub fn residual(&self, level: usize, j: usize) -> Option<&Tensor> {
@@ -425,6 +703,45 @@ impl MultiExecState {
             instances,
             trunk_grads,
             new_trunk: shared.new_trunk.into_pairs()?,
+        })
+    }
+
+    /// Consume a completed pipelined run into its outputs: per-step mean
+    /// losses, the final parameters (ring version K), and the ring's peak
+    /// depth. Errors if any head never retired or a final slot is unwritten.
+    pub fn into_pipeline_outputs(self) -> Result<PipelineOutputs> {
+        let pipe = self.pipe.ok_or_else(|| {
+            anyhow!("not a pipelined run (use MultiExecState::initial_train_pipeline)")
+        })?;
+        let (k, m, n_layers) = (pipe.k_steps, pipe.micro, pipe.n_layers);
+        let mut losses = vec![0.0f64; k];
+        for (gi, inst) in self.insts.into_iter().enumerate() {
+            let train =
+                inst.train.ok_or_else(|| anyhow!("instance {gi}: missing training state"))?;
+            let head =
+                train.head.ok_or_else(|| anyhow!("instance {gi}: head task never retired"))?;
+            losses[gi / m] += head.loss;
+        }
+        for l in &mut losses {
+            *l /= m as f64;
+        }
+        let mut trunk = Vec::with_capacity(n_layers);
+        for slot in 0..n_layers {
+            let (w, b) = pipe.ring.get(k, slot)?;
+            trunk.push(((*w).clone(), (*b).clone()));
+        }
+        let (w_open, b_open) = pipe.ring.get(k, n_layers)?;
+        let (w_fc, b_fc) = pipe.ring.get(k, n_layers + 1)?;
+        Ok(PipelineOutputs {
+            losses,
+            params: NetParams {
+                w_open: (*w_open).clone(),
+                b_open: (*b_open).clone(),
+                trunk,
+                w_fc: (*w_fc).clone(),
+                b_fc: (*b_fc).clone(),
+            },
+            peak_ring_depth: pipe.ring.peak_depth(),
         })
     }
 }
@@ -751,6 +1068,11 @@ where
     tx: Sender<JobDone<TaskOut>>,
     rx: Receiver<JobDone<TaskOut>>,
     report: ExecReport,
+    /// Kernel tasks currently executing per device (grown on demand).
+    dev_inflight: Vec<usize>,
+    /// EWMA of completed kernel durations (`t_end − t_start`, seconds) per
+    /// device — the service-time half of [`ExecSession::device_occupancy`].
+    dev_ewma_s: Vec<f64>,
 }
 
 impl<'a, F: SolverFactory> ExecSession<'a, F>
@@ -776,7 +1098,25 @@ where
             tx,
             rx,
             report: ExecReport::default(),
+            dev_inflight: Vec::new(),
+            dev_ewma_s: Vec::new(),
         }
+    }
+
+    /// Estimated busy horizon per device, in seconds: in-flight kernel count
+    /// × the device's EWMA kernel duration. A deliberately coarse heuristic —
+    /// its only job is to be monotone in device load so that
+    /// [`crate::coordinator::placement::plan_with_occupancy`] steers a
+    /// concurrent admission away from devices that are already saturated,
+    /// instead of planning every instance against an empty cluster.
+    pub fn device_occupancy(&self, n_devices: usize) -> Vec<f64> {
+        (0..n_devices)
+            .map(|d| {
+                let inflight = self.dev_inflight.get(d).copied().unwrap_or(0);
+                let ewma = self.dev_ewma_s.get(d).copied().unwrap_or(0.0);
+                inflight as f64 * ewma
+            })
+            .collect()
     }
 
     /// Admit one request: a fresh instance seeded with `u0`, running the
@@ -875,6 +1215,11 @@ where
                     &self.tx,
                 )?;
                 self.in_flight += 1;
+                let dev = self.graph.tasks[id].device;
+                if dev >= self.dev_inflight.len() {
+                    self.dev_inflight.resize(dev + 1, 0);
+                }
+                self.dev_inflight[dev] += 1;
             }
         }
         Ok(())
@@ -954,6 +1299,15 @@ where
             done.t_end,
         );
         self.last_end[instance] = self.last_end[instance].max(done.t_end);
+        if let Some(c) = self.dev_inflight.get_mut(device) {
+            *c = c.saturating_sub(1);
+        }
+        if device >= self.dev_ewma_s.len() {
+            self.dev_ewma_s.resize(device + 1, 0.0);
+        }
+        let obs = (done.t_end - done.t_start).max(0.0);
+        let e = &mut self.dev_ewma_s[device];
+        *e = if *e == 0.0 { obs } else { 0.5 * *e + 0.5 * obs };
         self.retire(done.id);
         self.pump()?;
         Ok(true)
@@ -1021,6 +1375,71 @@ fn rev_layer(hier: &Hierarchy, level: usize, j: usize) -> usize {
     hier.adjoint_state_index(level, j)
 }
 
+/// The snapshot-ring parameters a pipelined instance's trunk op must use:
+/// `(layer kind, w, b)` of `layer` at the instance's read version
+/// (`max(0, step − S)`). `None` on non-pipelined runs, where the workers'
+/// own solver snapshot applies. Taken at dispatch time on the scheduler
+/// thread — the graph's version-gap edges guarantee the version is written,
+/// and the ring's read accounting keeps it alive until this task completes.
+fn pipe_trunk(
+    st: &MultiExecState,
+    ki: usize,
+    layer: usize,
+) -> Result<Option<(LayerKind, Arc<Tensor>, Arc<Tensor>)>> {
+    let Some(pipe) = &st.pipe else { return Ok(None) };
+    let version = (ki / pipe.micro).saturating_sub(pipe.staleness);
+    let (w, b) = pipe.ring.get(version, layer)?;
+    Ok(Some((pipe.spec.trunk[layer].clone(), w, b)))
+}
+
+/// Φ at one trunk layer against explicit `(w, b)` — the identical free
+/// functions `HostSolver::step` wraps, so pipelined dispatch is bit-identical
+/// to solver dispatch at equal parameter values.
+fn phi_step(kind: &LayerKind, h: f32, w: &Tensor, b: &Tensor, u: &Tensor) -> Result<Tensor> {
+    match kind {
+        LayerKind::Conv { kernel, .. } => ops::residual_step(u, w, b, h, kernel / 2),
+        LayerKind::Fc { .. } => ops::residual_fc_step(u, w, b, h),
+    }
+}
+
+/// Ψ (adjoint step) against explicit `(w, b)` — mirrors
+/// `HostSolver::adjoint_step`.
+fn psi_step(
+    kind: &LayerKind,
+    h: f32,
+    w: &Tensor,
+    b: &Tensor,
+    fwd: &Tensor,
+    lam: &Tensor,
+) -> Result<Tensor> {
+    match kind {
+        LayerKind::Conv { kernel, .. } => vjp::adjoint_step(fwd, w, b, h, kernel / 2, lam),
+        LayerKind::Fc { .. } => Ok(vjp::residual_fc_step_vjp(fwd, w, b, h, lam)?.0),
+    }
+}
+
+/// Layer parameter gradient against explicit `(w, b)` — mirrors
+/// `HostSolver::param_grad`.
+fn phi_param_grad(
+    kind: &LayerKind,
+    h: f32,
+    w: &Tensor,
+    b: &Tensor,
+    u: &Tensor,
+    lam: &Tensor,
+) -> Result<(Tensor, Tensor)> {
+    match kind {
+        LayerKind::Conv { kernel, .. } => {
+            let (_, dw, db) = vjp::residual_step_vjp(u, w, b, h, kernel / 2, lam)?;
+            Ok((dw, db))
+        }
+        LayerKind::Fc { .. } => {
+            let (_, dw, db) = vjp::residual_fc_step_vjp(u, w, b, h, lam)?;
+            Ok((dw, db))
+        }
+    }
+}
+
 /// Take `Arc` handles on a kernel task's inputs and submit it to its
 /// device's worker. For `Restrict`, the injection (coarse initial guess +
 /// correction snapshot) is applied at dispatch time: the graph's WAR edges
@@ -1053,24 +1472,44 @@ where
             let gj = ss.g[level].as_ref().map(|g| g[j].clone());
             match sys {
                 Sys::Primal => {
-                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                        let mut v = s.step(theta, h, &u_prev)?;
-                        if let Some(g) = &gj {
-                            v.axpy(1.0, g)?;
-                        }
-                        Ok(TaskOut::State(v))
-                    })
+                    if let Some((kind, w, b)) = pipe_trunk(st, ki, theta)? {
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                            let mut v = phi_step(&kind, h, &w, &b, &u_prev)?;
+                            if let Some(g) = &gj {
+                                v.axpy(1.0, g)?;
+                            }
+                            Ok(TaskOut::State(v))
+                        })
+                    } else {
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                            let mut v = s.step(theta, h, &u_prev)?;
+                            if let Some(g) = &gj {
+                                v.axpy(1.0, g)?;
+                            }
+                            Ok(TaskOut::State(v))
+                        })
+                    }
                 }
                 Sys::Adjoint => {
                     let rev = rev_layer(hier, level, j);
                     let fwd = inst.pri.u[0][rev].clone();
-                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                        let mut v = s.adjoint_step(rev, h, &fwd, &u_prev)?;
-                        if let Some(g) = &gj {
-                            v.axpy(1.0, g)?;
-                        }
-                        Ok(TaskOut::State(v))
-                    })
+                    if let Some((kind, w, b)) = pipe_trunk(st, ki, rev)? {
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                            let mut v = psi_step(&kind, h, &w, &b, &fwd, &u_prev)?;
+                            if let Some(g) = &gj {
+                                v.axpy(1.0, g)?;
+                            }
+                            Ok(TaskOut::State(v))
+                        })
+                    } else {
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                            let mut v = s.adjoint_step(rev, h, &fwd, &u_prev)?;
+                            if let Some(g) = &gj {
+                                v.axpy(1.0, g)?;
+                            }
+                            Ok(TaskOut::State(v))
+                        })
+                    }
                 }
             }
         }
@@ -1088,10 +1527,28 @@ where
             let u_prev = ss.u[level][j_first - 1].clone();
             match sys {
                 Sys::Primal => {
-                    // the solver's fused block path (one PJRT block artifact)
-                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                        Ok(TaskOut::States(s.block_fprop(start_theta, stride, count, h, &u_prev)?))
-                    })
+                    if st.pipe.is_some() {
+                        let plan: Vec<(LayerKind, Arc<Tensor>, Arc<Tensor>)> = (0..count)
+                            .map(|i| {
+                                pipe_trunk(st, ki, start_theta + i * stride)
+                                    .map(|p| p.expect("pipelined run"))
+                            })
+                            .collect::<Result<_>>()?;
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                            let mut out = Vec::with_capacity(plan.len());
+                            let mut u = (*u_prev).clone();
+                            for (kind, w, b) in &plan {
+                                u = phi_step(kind, h, w, b, &u)?;
+                                out.push(u.clone());
+                            }
+                            Ok(TaskOut::States(out))
+                        })
+                    } else {
+                        // the solver's fused block path (one PJRT block artifact)
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                            Ok(TaskOut::States(s.block_fprop(start_theta, stride, count, h, &u_prev)?))
+                        })
+                    }
                 }
                 Sys::Adjoint => {
                     let steps: Vec<(usize, Arc<Tensor>)> = (j_first..=j_last)
@@ -1100,15 +1557,36 @@ where
                             (rev, inst.pri.u[0][rev].clone())
                         })
                         .collect();
-                    pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                        let mut out = Vec::with_capacity(steps.len());
-                        let mut mu = (*u_prev).clone();
-                        for (rev, fwd) in &steps {
-                            mu = s.adjoint_step(*rev, h, fwd, &mu)?;
-                            out.push(mu.clone());
-                        }
-                        Ok(TaskOut::States(out))
-                    })
+                    if st.pipe.is_some() {
+                        let plan: Vec<(LayerKind, Arc<Tensor>, Arc<Tensor>, Arc<Tensor>)> = steps
+                            .iter()
+                            .map(|(rev, fwd)| {
+                                pipe_trunk(st, ki, *rev).map(|p| {
+                                    let (kind, w, b) = p.expect("pipelined run");
+                                    (kind, w, b, fwd.clone())
+                                })
+                            })
+                            .collect::<Result<_>>()?;
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                            let mut out = Vec::with_capacity(plan.len());
+                            let mut mu = (*u_prev).clone();
+                            for (kind, w, b, fwd) in &plan {
+                                mu = psi_step(kind, h, w, b, fwd, &mu)?;
+                                out.push(mu.clone());
+                            }
+                            Ok(TaskOut::States(out))
+                        })
+                    } else {
+                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                            let mut out = Vec::with_capacity(steps.len());
+                            let mut mu = (*u_prev).clone();
+                            for (rev, fwd) in &steps {
+                                mu = s.adjoint_step(*rev, h, fwd, &mu)?;
+                                out.push(mu.clone());
+                            }
+                            Ok(TaskOut::States(out))
+                        })
+                    }
                 }
             }
         }
@@ -1128,17 +1606,35 @@ where
                     Some((rev, inst.pri.u[0][rev].clone()))
                 }
             };
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let mut r = match &fwd {
-                    None => s.step(theta, h, &u_prev)?,
-                    Some((rev, f)) => s.adjoint_step(*rev, h, f, &u_prev)?,
-                };
-                if let Some(g) = &gj {
-                    r.axpy(1.0, g)?;
-                }
-                r.axpy(-1.0, &u_cur)?;
-                Ok(TaskOut::State(r))
-            })
+            let layer = match &fwd {
+                None => theta,
+                Some((rev, _)) => *rev,
+            };
+            if let Some((kind, w, b)) = pipe_trunk(st, ki, layer)? {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                    let mut r = match &fwd {
+                        None => phi_step(&kind, h, &w, &b, &u_prev)?,
+                        Some((_, f)) => psi_step(&kind, h, &w, &b, f, &u_prev)?,
+                    };
+                    if let Some(g) = &gj {
+                        r.axpy(1.0, g)?;
+                    }
+                    r.axpy(-1.0, &u_cur)?;
+                    Ok(TaskOut::State(r))
+                })
+            } else {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                    let mut r = match &fwd {
+                        None => s.step(theta, h, &u_prev)?,
+                        Some((rev, f)) => s.adjoint_step(*rev, h, f, &u_prev)?,
+                    };
+                    if let Some(g) = &gj {
+                        r.axpy(1.0, g)?;
+                    }
+                    r.axpy(-1.0, &u_cur)?;
+                    Ok(TaskOut::State(r))
+                })
+            }
         }
         TaskOp::Restrict { sys, level, j } => {
             let c = hier.coarsen;
@@ -1162,6 +1658,11 @@ where
                     Some((rev, st.inst(ki)?.pri.u[0][rev].clone()))
                 }
             };
+            let layer = match &fwd {
+                None => theta,
+                Some((rev, _)) => *rev,
+            };
+            let pp = pipe_trunk(st, ki, layer)?;
             // inject the coarse initial guess + correction snapshot now —
             // safe because this task's WAR deps have already retired
             {
@@ -1169,16 +1670,29 @@ where
                 sm.u[level + 1][j] = inj_cur.clone();
                 sm.inj[level + 1][j] = Some(inj_cur.clone());
             }
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let phi = match &fwd {
-                    None => s.step(theta, h, &inj_prev)?,
-                    Some((rev, f)) => s.adjoint_step(*rev, h, f, &inj_prev)?,
-                };
-                let mut out = (*r).clone();
-                out.axpy(1.0, &inj_cur)?;
-                out.axpy(-1.0, &phi)?;
-                Ok(TaskOut::State(out))
-            })
+            if let Some((kind, w, b)) = pp {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                    let phi = match &fwd {
+                        None => phi_step(&kind, h, &w, &b, &inj_prev)?,
+                        Some((_, f)) => psi_step(&kind, h, &w, &b, f, &inj_prev)?,
+                    };
+                    let mut out = (*r).clone();
+                    out.axpy(1.0, &inj_cur)?;
+                    out.axpy(-1.0, &phi)?;
+                    Ok(TaskOut::State(out))
+                })
+            } else {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                    let phi = match &fwd {
+                        None => s.step(theta, h, &inj_prev)?,
+                        Some((rev, f)) => s.adjoint_step(*rev, h, f, &inj_prev)?,
+                    };
+                    let mut out = (*r).clone();
+                    out.axpy(1.0, &inj_cur)?;
+                    out.axpy(-1.0, &phi)?;
+                    Ok(TaskOut::State(out))
+                })
+            }
         }
         TaskOp::Correct { sys, level, j } => {
             let c = hier.coarsen;
@@ -1200,11 +1714,21 @@ where
             let inst = st.inst(ki)?;
             let u = inst.pri.u[0][n_last].clone();
             let labels = inst.train()?.labels.clone();
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let (_logits, loss) = s.head(&u, &labels)?;
-                let (du, dw_fc, db_fc) = s.head_vjp(&u, &labels)?;
-                Ok(TaskOut::Head { loss, du, dw_fc, db_fc })
-            })
+            if let Some(pipe) = &st.pipe {
+                let version = (ki / pipe.micro).saturating_sub(pipe.staleness);
+                let (w_fc, b_fc) = pipe.ring.get(version, pipe.n_layers + 1)?;
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                    let (_logits, loss) = ops::head_fwd(&u, &w_fc, &b_fc, &labels)?;
+                    let (du, dw_fc, db_fc) = vjp::head_vjp(&u, &w_fc, &b_fc, &labels)?;
+                    Ok(TaskOut::Head { loss, du, dw_fc, db_fc })
+                })
+            } else {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                    let (_logits, loss) = s.head(&u, &labels)?;
+                    let (du, dw_fc, db_fc) = s.head_vjp(&u, &labels)?;
+                    Ok(TaskOut::Head { loss, du, dw_fc, db_fc })
+                })
+            }
         }
         TaskOp::GradAccum { layer } => {
             let h = hier.fine().h;
@@ -1213,17 +1737,35 @@ where
             let u = inst.pri.u[0][layer].clone();
             // λ^{layer+1} = μ^{N−1−layer}
             let lam = inst.sys(Sys::Adjoint)?.u[0][n_layers - 1 - layer].clone();
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
-                let (dw, db) = s.param_grad(layer, h, &u, &lam)?;
-                Ok(TaskOut::Pair(dw, db))
-            })
+            if let Some((kind, w, b)) = pipe_trunk(st, ki, layer)? {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                    let (dw, db) = phi_param_grad(&kind, h, &w, &b, &u, &lam)?;
+                    Ok(TaskOut::Pair(dw, db))
+                })
+            } else {
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                    let (dw, db) = s.param_grad(layer, h, &u, &lam)?;
+                    Ok(TaskOut::Pair(dw, db))
+                })
+            }
         }
         TaskOp::ReduceGrad { layer, lhs, rhs, root, .. } => {
-            let l = st.grad_src(layer, lhs)?;
-            let r = st.grad_src(layer, rhs)?;
             // the root applies the micro-batch mean — the SAME expression the
             // serial reference uses (train::reduce_micro_grads)
-            let scale = if root { Some(1.0 / st.insts.len() as f32) } else { None };
+            let (l, r, scale) = if let Some(pipe) = &st.pipe {
+                let step = ki / pipe.micro;
+                (
+                    st.grad_src_pipe(step, layer, lhs)?,
+                    st.grad_src_pipe(step, layer, rhs)?,
+                    if root { Some(1.0 / pipe.micro as f32) } else { None },
+                )
+            } else {
+                (
+                    st.grad_src(layer, lhs)?,
+                    st.grad_src(layer, rhs)?,
+                    if root { Some(1.0 / st.insts.len() as f32) } else { None },
+                )
+            };
             pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let mut sum = pair_sum(&l, &r)?;
                 if let Some(sc) = scale {
@@ -1233,29 +1775,95 @@ where
             })
         }
         TaskOp::ParamUpdate { layer } => {
-            let sh = st.shared()?;
-            // M = 1: the lone instance's gradient; M > 1: the reduced mean
-            let (dw, db) = if st.insts.len() == 1 {
-                st.insts[0]
-                    .train()?
-                    .grads
-                    .get(layer)
-                    .cloned()
-                    .ok_or_else(|| anyhow!("param_update({layer}): gradient slot empty"))?
+            if let Some(pipe) = &st.pipe {
+                let step = ki / pipe.micro;
+                // M = 1: the lone instance's gradient; M > 1: the reduced mean
+                let (dw, db) = if pipe.micro == 1 {
+                    st.grad_src_pipe(step, layer, GradSrc::Inst(0))?
+                } else {
+                    pipe.reduced
+                        .get(step)
+                        .and_then(|s| s.get(layer))
+                        .and_then(|s| s.clone())
+                        .ok_or_else(|| {
+                            anyhow!("param_update(step {step}, {layer}): reduced gradient missing")
+                        })?
+                };
+                let (w, b) = pipe.ring.get(step, layer)?;
+                let lr = pipe.lr;
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                    let mut w2 = (*w).clone();
+                    w2.axpy(-lr, &dw)?;
+                    let mut b2 = (*b).clone();
+                    b2.axpy(-lr, &db)?;
+                    Ok(TaskOut::Pair(w2, b2))
+                })
             } else {
-                sh.reduced
-                    .get(layer)
-                    .cloned()
-                    .ok_or_else(|| anyhow!("param_update({layer}): reduced gradient missing"))?
-            };
-            let (w, b) = sh.params.trunk[layer].clone();
-            let lr = sh.lr;
+                let sh = st.shared()?;
+                // M = 1: the lone instance's gradient; M > 1: the reduced mean
+                let (dw, db) = if st.insts.len() == 1 {
+                    st.insts[0]
+                        .train()?
+                        .grads
+                        .get(layer)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("param_update({layer}): gradient slot empty"))?
+                } else {
+                    sh.reduced
+                        .get(layer)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("param_update({layer}): reduced gradient missing"))?
+                };
+                let (w, b) = sh.params.trunk[layer].clone();
+                let lr = sh.lr;
+                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                    let mut w2 = w;
+                    w2.axpy(-lr, &dw)?;
+                    let mut b2 = b;
+                    b2.axpy(-lr, &db)?;
+                    Ok(TaskOut::Pair(w2, b2))
+                })
+            }
+        }
+        TaskOp::Opening => {
+            let pipe = st
+                .pipe
+                .as_ref()
+                .ok_or_else(|| anyhow!("Opening task outside a pipelined run"))?;
+            let version = (ki / pipe.micro).saturating_sub(pipe.staleness);
+            let (w, b) = pipe.ring.get(version, pipe.n_layers)?;
+            let y = pipe
+                .inputs
+                .get(ki)
+                .cloned()
+                .ok_or_else(|| anyhow!("opening: no input for instance {ki}"))?;
+            let pad = pipe.spec.opening.pad;
             pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
-                let mut w2 = w;
-                w2.axpy(-lr, &dw)?;
-                let mut b2 = b;
-                b2.axpy(-lr, &db)?;
-                Ok(TaskOut::Pair(w2, b2))
+                let mut u = ops::conv2d(&y, &w, pad)?;
+                ops::add_bias(&mut u, &b)?;
+                ops::relu(&mut u);
+                Ok(TaskOut::State(u))
+            })
+        }
+        TaskOp::OpenGrad => {
+            let pipe = st
+                .pipe
+                .as_ref()
+                .ok_or_else(|| anyhow!("OpenGrad task outside a pipelined run"))?;
+            let version = (ki / pipe.micro).saturating_sub(pipe.staleness);
+            let (w, b) = pipe.ring.get(version, pipe.n_layers)?;
+            let y = pipe
+                .inputs
+                .get(ki)
+                .cloned()
+                .ok_or_else(|| anyhow!("open_grad: no input for instance {ki}"))?;
+            let pad = pipe.spec.opening.pad;
+            let n_last = hier.fine().n_points - 1;
+            // λ⁰ = the fully-relaxed adjoint state at the first trunk layer
+            let lam0 = st.inst(ki)?.sys(Sys::Adjoint)?.u[0][n_last].clone();
+            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                let (dw, db) = crate::train::opening_vjp(&y, &w, &b, pad, &lam0)?;
+                Ok(TaskOut::Pair(dw, db))
             })
         }
         TaskOp::Xfer => bail!("Xfer payload on a kernel task (graph bug)"),
@@ -1344,28 +1952,84 @@ fn apply_output(
             let TaskOut::Pair(w, b) = out else {
                 bail!("reduce_grad: wrong output kind");
             };
-            let sh = st.shared_mut()?;
-            if root {
-                sh.reduced.set(layer, w, b)?;
-            } else {
-                let slot = sh
-                    .nodes
-                    .get_mut(layer)
-                    .and_then(|l| l.get_mut(node))
-                    .ok_or_else(|| anyhow!("reduce({layer}): node {node} out of range"))?;
+            if let Some(pipe) = st.pipe.as_mut() {
+                let step = ki / pipe.micro;
+                let slot = if root {
+                    pipe.reduced
+                        .get_mut(step)
+                        .and_then(|s| s.get_mut(layer))
+                        .ok_or_else(|| anyhow!("reduce(step {step}, {layer}): out of range"))?
+                } else {
+                    pipe.nodes
+                        .get_mut(step)
+                        .and_then(|s| s.get_mut(layer))
+                        .and_then(|l| l.get_mut(node))
+                        .ok_or_else(|| {
+                            anyhow!("reduce(step {step}, {layer}): node {node} out of range")
+                        })?
+                };
                 if slot.is_some() {
-                    bail!("reduce({layer}): node {node} filled twice");
+                    bail!("reduce(step {step}, {layer}): slot filled twice");
                 }
                 *slot = Some((w, b));
+            } else {
+                let sh = st.shared_mut()?;
+                if root {
+                    sh.reduced.set(layer, w, b)?;
+                } else {
+                    let slot = sh
+                        .nodes
+                        .get_mut(layer)
+                        .and_then(|l| l.get_mut(node))
+                        .ok_or_else(|| anyhow!("reduce({layer}): node {node} out of range"))?;
+                    if slot.is_some() {
+                        bail!("reduce({layer}): node {node} filled twice");
+                    }
+                    *slot = Some((w, b));
+                }
             }
         }
         TaskOp::ParamUpdate { layer } => {
             let TaskOut::Pair(w, b) = out else {
                 bail!("param_update: wrong output kind");
             };
-            st.shared_mut()?.new_trunk.set(layer, w, b)?;
+            if let Some(pipe) = st.pipe.as_mut() {
+                let step = ki / pipe.micro;
+                pipe.ring.set(step + 1, layer, w, b)?;
+            } else {
+                st.shared_mut()?.new_trunk.set(layer, w, b)?;
+            }
+        }
+        TaskOp::Opening => {
+            let u0 = expect_state(out, "opening")?;
+            anyhow::ensure!(st.pipe.is_some(), "Opening output outside a pipelined run");
+            // replace the placeholder state wholesale: the opening activation
+            // seeds every fine/coarse primal slot, exactly as the host-side
+            // driver prologue does for the synchronous path
+            st.inst_mut(ki)?.pri = SysState::seeded(hier, &u0);
+        }
+        TaskOp::OpenGrad => {
+            let TaskOut::Pair(dw, db) = out else {
+                bail!("open_grad: wrong output kind");
+            };
+            let n_layers = hier.fine().n_points - 1;
+            st.inst_mut(ki)?.train_mut()?.grads.set(n_layers, dw, db)?;
         }
         TaskOp::Xfer => bail!("Xfer payload completed as a kernel (graph bug)"),
+    }
+    // Snapshot-ring read accounting: every parameter read this op performed at
+    // dispatch time is released now, AFTER the write-back above, so a failed
+    // write can never unpin a version that later diagnostics still need.
+    if let Some(pipe) = st.pipe.as_mut() {
+        let n_layers = hier.fine().n_points - 1;
+        let step = ki / pipe.micro;
+        if matches!(op, TaskOp::ParamUpdate { .. }) {
+            pipe.ring.note_read(step)?;
+        } else {
+            for _ in 0..op_param_slots(&op, hier, n_layers).len() {
+                pipe.ring.note_read(step.saturating_sub(pipe.staleness))?;
+            }
+        }
     }
     Ok(())
 }
@@ -1713,5 +2377,183 @@ mod tests {
         merge_phases(&mut acc, &[("a", 2.0), ("b", 3.0)]);
         merge_phases(&mut acc, &[("b", 1.0)]);
         assert_eq!(acc, vec![("a", 3.0), ("b", 4.0)]);
+    }
+
+    /// Raw (pre-opening) micro-batch inputs for a `steps × micro` pipelined
+    /// run — one `[1, C_in, H, W]` tensor + label per global instance.
+    fn pipeline_inputs(
+        spec: &NetSpec,
+        k_steps: usize,
+        micro: usize,
+        seed: u64,
+    ) -> Vec<(Tensor, Vec<i32>)> {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        (0..k_steps * micro)
+            .map(|gi| {
+                let y = Tensor::randn(
+                    &[1, spec.opening.in_channels, spec.opening.in_h, spec.opening.in_w],
+                    0.8,
+                    &mut rng,
+                );
+                (y, vec![(gi % 10) as i32])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn snapshot_ring_retires_versions_and_rejects_misuse() {
+        let spec = Arc::new(NetSpec::micro());
+        let params = NetParams::init(&spec, 40).unwrap();
+        let n_layers = params.trunk.len();
+        // admitted read counts: two against v0, one against v1
+        let mut ring = SnapshotRing::new(&params, n_layers, vec![2, 1]);
+        assert_eq!(ring.depth(), 1);
+        // version 0 serves every slot: trunk, opening, fc
+        ring.get(0, 0).unwrap();
+        ring.get(0, n_layers).unwrap();
+        ring.get(0, n_layers + 1).unwrap();
+        // unwritten slots and double writes are hard errors
+        let err = ring.get(1, 0).unwrap_err().to_string();
+        assert!(err.contains("not yet written"), "{err}");
+        let (w, b) = params.trunk[0].clone();
+        ring.set(1, 0, w.clone(), b.clone()).unwrap();
+        assert_eq!(ring.depth(), 2);
+        let err = ring.set(1, 0, w, b).unwrap_err().to_string();
+        assert!(err.contains("twice"), "{err}");
+        // draining v0's admitted reads retires it the moment the last lands
+        ring.note_read(0).unwrap();
+        assert_eq!(ring.depth(), 2);
+        ring.note_read(0).unwrap();
+        assert_eq!(ring.depth(), 1);
+        let err = ring.get(0, 0).unwrap_err().to_string();
+        assert!(err.contains("retired"), "{err}");
+        // a read beyond the admitted count is an accounting bug, not a no-op
+        assert!(ring.note_read(0).is_err());
+        // the newest version survives its own read drain (final parameters)
+        ring.note_read(1).unwrap();
+        assert_eq!(ring.depth(), 1);
+        ring.get(1, 0).unwrap();
+        assert_eq!(ring.peak_depth(), 2);
+    }
+
+    #[test]
+    fn pipelined_barrier_and_staleness0_agree_bitwise() {
+        // the two S = 0 composition modes differ only in WHERE the
+        // cross-step edges sit; the executed arithmetic must be identical
+        let (spec, hier, partition, pool, _u0) = setup();
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let groups = InstanceGroups::new(1, partition.n_devices()).unwrap();
+        let inputs = pipeline_inputs(&spec, 2, 1, 41);
+        let run = |sync| {
+            let g = taskgraph::mg_train_pipeline(
+                &spec, &hier, &partition, &groups, 1, 1, RelaxKind::FCF,
+                Granularity::PerStep, 1, 2, sync,
+            )
+            .unwrap();
+            let mut st = MultiExecState::initial_train_pipeline(
+                &hier, spec.clone(), &g, &inputs, params.clone(), 0.05, 1, 0,
+            )
+            .unwrap();
+            let rep = execute(&pool, &hier, &g, &mut st).unwrap();
+            assert!(rep.kernels > 0);
+            st.into_pipeline_outputs().unwrap()
+        };
+        let a = run(taskgraph::PipeSync::Barrier);
+        let b = run(taskgraph::PipeSync::Staleness(0));
+        assert_eq!(a.losses.len(), 2);
+        assert!(a.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(a.losses, b.losses);
+        for (x, y) in a.params.trunk.iter().zip(&b.params.trunk) {
+            assert!(x.0.data() == y.0.data() && x.1.data() == y.1.data());
+        }
+        assert!(a.params.w_open.data() == b.params.w_open.data());
+        assert!(a.params.b_open.data() == b.params.b_open.data());
+        assert!(a.params.w_fc.data() == b.params.w_fc.data());
+        assert!(a.params.b_fc.data() == b.params.b_fc.data());
+        assert!(a.peak_ring_depth <= 2 && b.peak_ring_depth <= 2);
+    }
+
+    #[test]
+    fn pipelined_staleness_run_bounds_ring_depth() {
+        // K = 3 steps × M = 2 micro-batches at S = 1: reduce trees join each
+        // step's pair, and the ring never holds more than S + 2 versions
+        let (spec, hier, partition, pool, _u0) = setup();
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let groups = InstanceGroups::new(1, partition.n_devices()).unwrap();
+        let inputs = pipeline_inputs(&spec, 3, 2, 42);
+        let g = taskgraph::mg_train_pipeline(
+            &spec, &hier, &partition, &groups, 1, 1, RelaxKind::FCF,
+            Granularity::PerStep, 2, 3, taskgraph::PipeSync::Staleness(1),
+        )
+        .unwrap();
+        let mut st = MultiExecState::initial_train_pipeline(
+            &hier, spec.clone(), &g, &inputs, params.clone(), 0.05, 2, 1,
+        )
+        .unwrap();
+        execute(&pool, &hier, &g, &mut st).unwrap();
+        let out = st.into_pipeline_outputs().unwrap();
+        assert_eq!(out.losses.len(), 3);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!(out.peak_ring_depth <= 3, "ring depth {} > S + 2", out.peak_ring_depth);
+        // three updates landed: the final parameters moved off version 0
+        assert!(out.params.w_fc.data() != params.w_fc.data());
+    }
+
+    #[test]
+    fn live_trace_respects_staleness_bound() {
+        // regression guard on the staleness edges: in the LIVE event trace,
+        // no parameter-reading kernel of step t starts before the
+        // ParamUpdate that produced version t − S retired — i.e. no reader
+        // ever observes parameters more than S versions old
+        let (spec, hier, partition, pool, _u0) = setup();
+        let params = Arc::new(NetParams::init(&spec, 30).unwrap());
+        let groups = InstanceGroups::new(1, partition.n_devices()).unwrap();
+        let n_layers = hier.fine().n_points - 1;
+        for s in [0usize, 1] {
+            let inputs = pipeline_inputs(&spec, 3, 1, 43 + s as u64);
+            let g = taskgraph::mg_train_pipeline(
+                &spec, &hier, &partition, &groups, 1, 1, RelaxKind::FCF,
+                Granularity::PerStep, 1, 3, taskgraph::PipeSync::Staleness(s),
+            )
+            .unwrap();
+            let mut st = MultiExecState::initial_train_pipeline(
+                &hier, spec.clone(), &g, &inputs, params.clone(), 0.05, 1, s,
+            )
+            .unwrap();
+            let rep = execute(&pool, &hier, &g, &mut st).unwrap();
+            // retirement time of each step's per-slot ParamUpdate (M = 1,
+            // so a join task's instance tag IS its step)
+            let mut pu_end = std::collections::HashMap::new();
+            for e in &rep.events {
+                let t = &g.tasks[e.task];
+                if let Some(TaskOp::ParamUpdate { layer }) = t.op {
+                    pu_end.insert((t.instance, layer), e.t_end);
+                }
+            }
+            for e in &rep.events {
+                let t = &g.tasks[e.task];
+                let Some(op) = &t.op else { continue };
+                if matches!(op, TaskOp::ParamUpdate { .. }) {
+                    continue;
+                }
+                let step = t.instance;
+                let need = step.saturating_sub(s);
+                if need == 0 {
+                    continue; // version 0 pre-exists the run
+                }
+                for slot in op_param_slots(op, &hier, n_layers) {
+                    let end = *pu_end
+                        .get(&(need - 1, slot))
+                        .expect("every ParamUpdate must appear in the trace");
+                    assert!(
+                        e.t_start >= end,
+                        "S={s}: step {step} task {} read slot {slot} (needs v{need}) \
+                         at {:.9}, before its producing update retired at {end:.9}",
+                        e.task,
+                        e.t_start
+                    );
+                }
+            }
+        }
     }
 }

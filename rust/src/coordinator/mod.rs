@@ -65,10 +65,12 @@ pub mod partition;
 pub mod placement;
 pub mod streams;
 
-pub use driver::{InstanceStep, MicroStepOutput, ParallelMgrit, RunMetrics, TrainStepOutput};
+pub use driver::{
+    InstanceStep, MicroStepOutput, ParallelMgrit, PipelineRunOutput, RunMetrics, TrainStepOutput,
+};
 pub use executor::{
     ExecEvent, ExecReport, ExecSession, InstanceOutputs, MultiExecState, MultiTrainingOutputs,
-    TaskOut,
+    SnapshotRing, TaskOut,
 };
 pub use partition::{InstanceGroups, Partition};
 pub use placement::{GraphCosts, PlaceCtx, Placement, PlacementKind, PlacementPolicy};

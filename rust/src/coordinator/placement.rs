@@ -418,6 +418,22 @@ pub fn plan<P: PlacementPolicy + ?Sized>(
     graph: &TaskGraph,
     cluster: &ClusterModel,
 ) -> Result<Placement> {
+    plan_with_occupancy(policy, graph, cluster, &[])
+}
+
+/// As [`plan`], seeding each device's earliest-free time from `busy` — the
+/// live occupancy horizon (`ExecSession::device_occupancy` on the executor
+/// side) at admission time, so a plan made while earlier admissions are
+/// still in flight stops pricing against an empty cluster. Devices beyond
+/// `busy.len()` start free. Occupancy shifts only the planner's EFT model —
+/// where load-aware policies place work and what the makespan estimate
+/// reads — never the graph's semantics.
+pub fn plan_with_occupancy<P: PlacementPolicy + ?Sized>(
+    policy: &P,
+    graph: &TaskGraph,
+    cluster: &ClusterModel,
+    busy: &[f64],
+) -> Result<Placement> {
     graph.validate()?;
     let n = graph.tasks.len();
     let n_dev = cluster.n_devices.max(1);
@@ -435,7 +451,8 @@ pub fn plan<P: PlacementPolicy + ?Sized>(
         .filter(|t| t.deps.is_empty())
         .map(|t| ReadyKey { pri: priority[t.id], id: t.id })
         .collect();
-    let mut free_at = vec![0.0f64; n_dev];
+    let mut free_at: Vec<f64> =
+        (0..n_dev).map(|d| busy.get(d).copied().unwrap_or(0.0).max(0.0)).collect();
     let mut finish = vec![0.0f64; n];
     let mut device: Vec<usize> = graph.tasks.iter().map(|t| t.device).collect();
     let mut placed = vec![false; n];
@@ -661,6 +678,33 @@ mod tests {
             // the planner only remaps placement — never the work itself
             assert_eq!(p.graph.total_flops(), g.total_flops());
             assert_eq!(p.graph.n_comms(), g.n_comms());
+        }
+    }
+
+    #[test]
+    fn occupancy_seeding_shifts_work_off_busy_devices() {
+        let (g, cluster) = forward_graph(2);
+        // an empty busy vector reproduces plan() exactly
+        let base = plan(&Heft, &g, &cluster).unwrap();
+        let zero = plan_with_occupancy(&Heft, &g, &cluster, &[]).unwrap();
+        assert_eq!(base.priority, zero.priority);
+        assert_eq!(base.device, zero.device);
+        assert_eq!(base.est_makespan_s, zero.est_makespan_s);
+        // device 0 busy far beyond this graph's span: min-EFT placement must
+        // route every kernel to device 1 instead of the empty-cluster split
+        let busy = [1e3, 0.0];
+        let shifted = plan_with_occupancy(&Heft, &g, &cluster, &busy).unwrap();
+        shifted.graph.validate().unwrap();
+        for t in &shifted.graph.tasks {
+            if matches!(t.kind, TaskKind::Kernel { .. }) {
+                assert_eq!(t.device, 1, "task {} planned onto the busy device", t.id);
+            }
+        }
+        assert!(shifted.est_makespan_s >= base.est_makespan_s);
+        // identity policies keep their baked devices regardless of occupancy
+        let ident = plan_with_occupancy(&MinId, &g, &cluster, &busy).unwrap();
+        for (a, b) in ident.graph.tasks.iter().zip(&g.tasks) {
+            assert_eq!(a.device, b.device);
         }
     }
 

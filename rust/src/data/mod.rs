@@ -4,5 +4,7 @@
 //! *identical* data, so the generator substitution cancels out.
 
 pub mod mnist;
+pub mod sampler;
 
 pub use mnist::{Dataset, SyntheticDigits};
+pub use sampler::StepSampler;

@@ -1,0 +1,189 @@
+//! Per-step deterministic batch sampling + augmentation for pipelined
+//! training.
+//!
+//! The sequential training loops draw every batch from ONE mutable
+//! `Rng::new(seed)` stream, so batch t's contents depend on how many draws
+//! steps 0..t made — fine for a serial loop, but a cross-step pipeline
+//! (`coordinator::ParallelMgrit::train_pipeline`) needs step t's data to be
+//! a pure function of `(seed, t)`: the K steps of one composed graph are
+//! sliced up front, and the SAME bytes must reach step t whether the run
+//! uses 1 or 4 micro-batches, staleness 0 or 2, or a different K split.
+//! [`StepSampler`] provides that: each step's shuffle and augmentation draw
+//! from `Rng::for_instance(seed, step)` — the instance-keyed SplitMix64
+//! stream split — so steps are mutually unrelated and every `(seed, step)`
+//! pair is bit-reproducible in isolation.
+
+use anyhow::bail;
+
+use super::Dataset;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// Deterministic per-step batch sampler: step t's shuffle + augmentation
+/// stream is `Rng::for_instance(seed, t)`, independent of every other step
+/// and of the pipeline geometry (micro-batch count M, staleness S, window K).
+#[derive(Debug, Clone)]
+pub struct StepSampler {
+    seed: u64,
+    jitter: f32,
+}
+
+impl StepSampler {
+    /// A sampler with the default per-sample intensity jitter (±10%).
+    pub fn new(seed: u64) -> StepSampler {
+        StepSampler { seed, jitter: 0.1 }
+    }
+
+    /// A sampler with an explicit jitter amplitude (0 disables augmentation
+    /// but keeps the per-step shuffle).
+    pub fn with_jitter(seed: u64, jitter: f32) -> StepSampler {
+        StepSampler { seed, jitter }
+    }
+
+    /// The deterministic stream step `step` draws from.
+    pub fn step_rng(&self, step: usize) -> Rng {
+        Rng::for_instance(self.seed, step as u64)
+    }
+
+    /// Step `step`'s batch: a without-replacement shuffled draw (partial
+    /// Fisher–Yates over the index space; topped up with replacement only if
+    /// `batch` exceeds the dataset) followed by per-sample intensity jitter —
+    /// all from the step's own stream. Same `(seed, step, batch)` ⇒ same
+    /// bytes, regardless of how the caller partitions the batch afterwards.
+    pub fn step_batch(
+        &self,
+        data: &Dataset,
+        step: usize,
+        batch: usize,
+    ) -> Result<(Tensor, Vec<i32>)> {
+        if data.is_empty() {
+            bail!("empty dataset");
+        }
+        if batch == 0 {
+            bail!("empty batch");
+        }
+        let mut rng = self.step_rng(step);
+        let n = data.len();
+        let take = batch.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..take {
+            let j = i + rng.below(n - i);
+            idx.swap(i, j);
+        }
+        let mut chosen = idx[..take].to_vec();
+        while chosen.len() < batch {
+            chosen.push(rng.below(n));
+        }
+        let (mut y, labels) = data.batch(&chosen)?;
+        if self.jitter != 0.0 {
+            let per = y.len() / batch;
+            for k in 0..batch {
+                let s = 1.0 + self.jitter * (2.0 * rng.uniform() - 1.0);
+                for v in &mut y.data_mut()[k * per..(k + 1) * per] {
+                    *v = (*v * s).clamp(0.0, 1.0);
+                }
+            }
+        }
+        Ok((y, labels))
+    }
+
+    /// The K-step superbatch a pipelined run consumes: steps
+    /// `first_step..first_step + k_steps` concatenated step-major, so
+    /// `superbatch.slice_batch(t·batch, batch)` is bit-identical to
+    /// [`StepSampler::step_batch`] at `first_step + t` — a pipelined window
+    /// and a sequential loop see the same data.
+    pub fn superbatch(
+        &self,
+        data: &Dataset,
+        first_step: usize,
+        k_steps: usize,
+        batch: usize,
+    ) -> Result<(Tensor, Vec<i32>)> {
+        if k_steps == 0 {
+            bail!("need at least one pipeline step");
+        }
+        let mut ys = Vec::with_capacity(k_steps);
+        let mut labels = Vec::with_capacity(k_steps * batch);
+        for t in 0..k_steps {
+            let (y, l) = self.step_batch(data, first_step + t, batch)?;
+            ys.push(y);
+            labels.extend(l);
+        }
+        let refs: Vec<&Tensor> = ys.iter().collect();
+        Ok((Tensor::concat_batch(&refs)?, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticDigits;
+
+    #[test]
+    fn step_batches_reproducible_and_step_keyed() {
+        let ds = SyntheticDigits::new(11).dataset(30);
+        let s = StepSampler::new(9);
+        let (a, la) = s.step_batch(&ds, 3, 8).unwrap();
+        let (b, lb) = s.step_batch(&ds, 3, 8).unwrap();
+        assert!(a.data() == b.data() && la == lb, "same (seed, step) must repeat");
+        let (c, _) = s.step_batch(&ds, 4, 8).unwrap();
+        assert!(a.data() != c.data(), "distinct steps must draw distinct batches");
+        let (d, _) = StepSampler::new(10).step_batch(&ds, 3, 8).unwrap();
+        assert!(a.data() != d.data(), "distinct seeds must draw distinct batches");
+    }
+
+    #[test]
+    fn superbatch_slices_match_per_step_batches() {
+        // the M/S-independence property: however a pipelined run partitions
+        // the superbatch (micro-batches, staleness), step t's rows are the
+        // step-t batch, bitwise
+        let ds = SyntheticDigits::new(12).dataset(30);
+        let s = StepSampler::new(13);
+        let batch = 6;
+        let (sup, labels) = s.superbatch(&ds, 2, 3, batch).unwrap();
+        assert_eq!(sup.dims()[0], 3 * batch);
+        for t in 0..3 {
+            let (want, want_l) = s.step_batch(&ds, 2 + t, batch).unwrap();
+            let got = sup.slice_batch(t * batch, batch).unwrap();
+            assert!(got.data() == want.data(), "step {t} rows differ");
+            assert_eq!(&labels[t * batch..(t + 1) * batch], &want_l[..]);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_without_replacement_and_jitter_bounded() {
+        let ds = SyntheticDigits::new(14).dataset(20);
+        // jitter 0: rows must be exact dataset samples, all distinct
+        let s = StepSampler::with_jitter(15, 0.0);
+        let (y, labels) = s.step_batch(&ds, 0, 20).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        let per = y.len() / 20;
+        for k in 0..20 {
+            let row = &y.data()[k * per..(k + 1) * per];
+            let hit = (0..ds.len()).find(|&i| {
+                ds.labels[i] == labels[k] && ds.images[i].data() == row
+            });
+            let i = hit.expect("unjittered row must be a dataset sample");
+            assert!(seen.insert(i), "sample {i} drawn twice in a full shuffle");
+        }
+        // jittered samples stay in [0, 1]
+        let s = StepSampler::new(15);
+        let (y, _) = s.step_batch(&ds, 0, 8).unwrap();
+        assert!(y.data().iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn sampler_rejects_degenerate_inputs() {
+        let ds = SyntheticDigits::new(16).dataset(10);
+        let s = StepSampler::new(17);
+        assert!(s.step_batch(&ds, 0, 0).is_err());
+        assert!(s.superbatch(&ds, 0, 0, 4).is_err());
+        let empty = Dataset { images: vec![], labels: vec![] };
+        assert!(s.step_batch(&empty, 0, 4).is_err());
+        // batch > len tops up with replacement instead of erroring
+        let (y, l) = s.step_batch(&ds, 1, 14).unwrap();
+        assert_eq!(y.dims()[0], 14);
+        assert_eq!(l.len(), 14);
+    }
+}

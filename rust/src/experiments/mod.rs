@@ -11,6 +11,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod perf;
+pub mod pipeline;
 pub mod placement;
 pub mod serve;
 

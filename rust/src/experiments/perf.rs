@@ -145,6 +145,88 @@ pub fn emit_placement(out_dir: &Path) -> Result<PathBuf> {
     Ok(out_dir.join("BENCH_placement.json"))
 }
 
+/// Emit `BENCH_pipeline.json` into `out_dir`: the cross-step pipelining
+/// perf record — the simulated barrier-vs-staleness makespan sweep as a
+/// table, plus three tracked hot paths: composing the K-step pipeline
+/// graph, the live pipelined window at S = 0 and S = 1 (micro preset,
+/// 2 devices), and one full read/write/retire cycle of the parameter
+/// snapshot ring itself.
+pub fn emit_pipeline(out_dir: &Path) -> Result<PathBuf> {
+    use crate::coordinator::SnapshotRing;
+    use crate::mgrit::taskgraph::{self, Granularity, PipeSync};
+
+    let mut suite = Suite::new_quick("pipeline");
+    suite.set_record_dir(out_dir);
+
+    let spec = NetSpec::micro();
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2)?;
+    let t = super::pipeline::sim_makespan(&spec, &hier, 2, 1, 3, 2)?;
+    suite.table("sim_makespan_rows", t.to_json_rows());
+
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let part = crate::coordinator::Partition::contiguous(n_blocks, 2)?;
+    let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices())?;
+    suite.bench("build_micro_pipeline_graph_k3_m2_s1", || {
+        black_box(
+            taskgraph::mg_train_pipeline(
+                &spec,
+                &hier,
+                &part,
+                &groups,
+                1,
+                2,
+                crate::mgrit::fas::RelaxKind::FCF,
+                Granularity::PerStep,
+                2,
+                3,
+                PipeSync::Staleness(1),
+            )
+            .unwrap(),
+        );
+    });
+
+    let aspec = Arc::new(spec.clone());
+    let params = Arc::new(NetParams::init(&aspec, 3)?);
+    let (sp, pp) = (aspec.clone(), params.clone());
+    let factory = move |_w: usize| HostSolver::new(sp.clone(), pp.clone());
+    let driver = ParallelMgrit::new(factory, aspec.clone(), hier.clone(), 2, 2)?;
+    let mut rng = Rng::new(5);
+    let o = &aspec.opening;
+    let y = Tensor::randn(&[2, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels = [1i32, 4];
+    let topts = MgritOptions::early_stopping(2);
+    suite.bench("train_pipeline_micro_k2_s0_2dev", || {
+        driver.pool().clear_trace();
+        black_box(
+            driver.train_pipeline(&y, &labels, &topts, 0.05, 1, 2, PipeSync::Staleness(0)).unwrap(),
+        );
+    });
+    suite.bench("train_pipeline_micro_k2_s1_2dev", || {
+        driver.pool().clear_trace();
+        black_box(
+            driver.train_pipeline(&y, &labels, &topts, 0.05, 1, 2, PipeSync::Staleness(1)).unwrap(),
+        );
+    });
+
+    // the ring itself: K = 4 versions, each fully read then rewritten —
+    // exercises get / set / note_read and the retirement sweep
+    let n_layers = params.trunk.len();
+    let n_slots = n_layers + 2;
+    suite.bench("snapshot_ring_cycle_micro_k4", || {
+        let mut ring = SnapshotRing::new(&params, n_layers, vec![n_slots; 5]);
+        for v in 1..=4usize {
+            for slot in 0..n_slots {
+                let (w, b) = ring.get(v - 1, slot).unwrap();
+                ring.set(v, slot, (*w).clone(), (*b).clone()).unwrap();
+                ring.note_read(v - 1).unwrap();
+            }
+        }
+        black_box(ring.peak_depth());
+    });
+    suite.finish();
+    Ok(out_dir.join("BENCH_pipeline.json"))
+}
+
 /// How much a median must grow over the previous record before the delta
 /// step flags it (10% — below that, quick-iteration noise dominates).
 pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
@@ -342,6 +424,17 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(text.trim()).unwrap();
         assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "placement");
+        assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn emit_pipeline_writes_record() {
+        let dir = std::path::Path::new("target/perf-pipeline-selftest");
+        let path = emit_pipeline(dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "pipeline");
         assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
         let _ = std::fs::remove_dir_all(dir);
     }

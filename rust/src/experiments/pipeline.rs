@@ -1,0 +1,311 @@
+//! Cross-step pipelined training: bounded-staleness asynchronous SGD scored
+//! against the cross-step barrier (DESIGN.md §7).
+//!
+//! Three tables, all over the same `PipeSync` sweep (barrier, then
+//! staleness S ∈ {0, 1, 2}):
+//!
+//! 1. [`sim_makespan`] — the composed K-step pipeline graph
+//!    (`taskgraph::mg_train_pipeline`) priced on the deterministic virtual
+//!    cluster (V100 + 25 GbE): the throughput side of the trade, with the
+//!    speedup of each staleness level over the barrier baseline. This is
+//!    the acceptance-criterion table — at ≥ 2 devices the S ≥ 1 pipeline's
+//!    makespan is strictly below the barrier's.
+//! 2. [`live_makespan`] — the same window executed for real through
+//!    `ParallelMgrit::train_pipeline` (host numerics): wall-clock makespan
+//!    from the instance-tagged `ExecEvent` trace, the snapshot ring's
+//!    live-depth high-water mark, and the window's final loss. With S = 0
+//!    the losses are bit-identical to the sequential step loop.
+//! 3. [`convergence`] — the accuracy side: per-step loss trajectories of
+//!    `train::train_parallel_pipelined` at S = 0 / 1 / 2 on one synthetic
+//!    dataset with step-keyed batches (`data::StepSampler`), so any
+//!    divergence between columns is *caused by staleness*, never by data
+//!    order.
+
+use std::sync::Arc;
+
+use crate::coordinator::{InstanceGroups, ParallelMgrit, Partition, PlacementKind};
+use crate::data::SyntheticDigits;
+use crate::mgrit::fas::RelaxKind;
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::taskgraph::{self, Granularity, PipeSync};
+use crate::mgrit::MgritOptions;
+use crate::model::{NetParams, NetSpec};
+use crate::perfmodel::ClusterModel;
+use crate::sim;
+use crate::solver::host::HostSolver;
+use crate::tensor::Tensor;
+use crate::train::{self, Method, TrainConfig};
+use crate::util::json::{num, s};
+use crate::util::prng::Rng;
+use crate::Result;
+
+use super::Table;
+
+/// The sync modes every pipeline table sweeps: the cross-step barrier
+/// baseline plus bounded staleness S ∈ {0, 1, 2}.
+pub const SYNC_SWEEP: [PipeSync; 4] = [
+    PipeSync::Barrier,
+    PipeSync::Staleness(0),
+    PipeSync::Staleness(1),
+    PipeSync::Staleness(2),
+];
+
+fn sync_label(sync: PipeSync) -> String {
+    match sync {
+        PipeSync::Barrier => "barrier".to_string(),
+        PipeSync::Staleness(st) => format!("staleness-{st}"),
+    }
+}
+
+/// Simulated makespan of the K-step pipelined training graph per sync mode:
+/// one row per [`SYNC_SWEEP`] entry with the composed graph's task count,
+/// the virtual-timeline makespan, and the speedup over the barrier row.
+pub fn sim_makespan(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    devices: usize,
+    batch: usize,
+    k_steps: usize,
+    micro_batches: usize,
+) -> Result<Table> {
+    let n_blocks = hier.fine().blocks(hier.coarsen).len();
+    let part = Partition::contiguous(n_blocks, devices)?;
+    let groups = InstanceGroups::new(1, part.n_devices())?;
+    let cluster = ClusterModel::tx_gaia(part.n_devices());
+    let mut t = Table::new(
+        &format!(
+            "Pipelined training: simulated makespan (K = {k_steps} steps x {micro_batches} \
+             micro-batches, {} devices; virtual timeline)",
+            part.n_devices()
+        ),
+        &["sync", "tasks", "sim_makespan_ms", "speedup_vs_barrier"],
+    );
+    let mut barrier_ms = f64::NAN;
+    for sync in SYNC_SWEEP {
+        let g = taskgraph::mg_train_pipeline(
+            spec,
+            hier,
+            &part,
+            &groups,
+            batch,
+            2,
+            RelaxKind::FCF,
+            Granularity::PerStep,
+            micro_batches,
+            k_steps,
+            sync,
+        )?;
+        let rep = sim::simulate(&g, &cluster, false)?;
+        let ms = rep.makespan_s * 1e3;
+        if sync == PipeSync::Barrier {
+            barrier_ms = ms;
+        }
+        t.row(vec![
+            s(&sync_label(sync)),
+            num(g.tasks.len() as f64),
+            num(ms),
+            num(barrier_ms / ms),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Live makespan of the K-step pipelined window per sync mode, executed for
+/// real over `devices` host workers on the micro preset: wall-clock span of
+/// the instance-tagged `ExecEvent` trace, the snapshot ring's peak depth
+/// (≤ S + 2), and the window's final loss. The same `seed` feeds every row,
+/// so the S = 0 row's losses are bit-identical to the barrier row's.
+pub fn live_makespan(
+    devices: usize,
+    batch: usize,
+    k_steps: usize,
+    micro_batches: usize,
+    seed: u64,
+) -> Result<Table> {
+    let spec = Arc::new(NetSpec::micro());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2)?;
+    let o = &spec.opening;
+    let mut rng = Rng::new(seed);
+    let y = Tensor::randn(&[k_steps * batch, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels: Vec<i32> = (0..k_steps * batch).map(|i| (i % 10) as i32).collect();
+    let opts = MgritOptions::early_stopping(2);
+    let mut t = Table::new(
+        &format!(
+            "Pipelined training: live makespan (micro preset, K = {k_steps} steps x \
+             {micro_batches} micro-batches, {devices} devices; wall clock)"
+        ),
+        &["sync", "live_makespan_ms", "peak_ring_depth", "final_loss"],
+    );
+    for sync in SYNC_SWEEP {
+        let params = NetParams::init(&spec, seed + 1)?;
+        let spec2 = spec.clone();
+        let snap = Arc::new(params);
+        let factory = move |_w: usize| HostSolver::new(spec2.clone(), snap.clone());
+        let drv =
+            ParallelMgrit::new(factory, spec.clone(), hier.clone(), devices, k_steps * batch)?;
+        let out = drv.train_pipeline(&y, &labels, &opts, 0.05, micro_batches, k_steps, sync)?;
+        let t0 = out.metrics.events.iter().map(|e| e.t_start).fold(f64::INFINITY, f64::min);
+        let t1 = out.metrics.events.iter().map(|e| e.t_end).fold(f64::NEG_INFINITY, f64::max);
+        let span_ms = if out.metrics.events.is_empty() { 0.0 } else { (t1 - t0) * 1e3 };
+        t.row(vec![
+            s(&sync_label(sync)),
+            num(span_ms),
+            num(out.peak_ring_depth as f64),
+            num(out.losses.last().copied().unwrap_or(f64::NAN)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Loss trajectories under bounded staleness: one row per training step with
+/// the per-step loss at S = 0, 1, and 2 (K-step windows, `devices` workers).
+/// Every column trains from the same initial parameters on the same
+/// step-keyed batches, so column differences isolate the staleness effect.
+pub fn convergence(
+    steps: usize,
+    batch: usize,
+    k_steps: usize,
+    devices: usize,
+) -> Result<Table> {
+    // mnist geometry with a short trunk — the train-loop test spec
+    let spec = {
+        let mut sp = NetSpec::mnist();
+        sp.trunk.truncate(8);
+        sp.t_final = 0.5;
+        Arc::new(sp)
+    };
+    let ds = SyntheticDigits::new(29).dataset(40);
+    let cfg = TrainConfig {
+        steps,
+        batch,
+        lr: 0.05,
+        method: Method::Mgrit { cycles: 2 },
+        seed: 9,
+    };
+    let mut traces: Vec<Vec<f64>> = Vec::new();
+    for staleness in [0usize, 1, 2] {
+        let mut params = NetParams::init(&spec, 31)?;
+        let logs = train::train_parallel_pipelined(
+            &spec,
+            &mut params,
+            &ds,
+            &cfg,
+            devices,
+            Granularity::PerStep,
+            1,
+            PlacementKind::MinId,
+            k_steps,
+            PipeSync::Staleness(staleness),
+        )?;
+        traces.push(logs.iter().map(|l| l.loss).collect());
+    }
+    let mut t = Table::new(
+        &format!(
+            "Pipelined training: loss trajectory vs staleness ({steps} steps, batch {batch}, \
+             K = {k_steps}, {devices} devices)"
+        ),
+        &["step", "loss_s0", "loss_s1", "loss_s2"],
+    );
+    for i in 0..steps {
+        t.row(vec![
+            num(i as f64),
+            num(traces[0][i]),
+            num(traces[1][i]),
+            num(traces[2][i]),
+        ]);
+    }
+    Ok(t)
+}
+
+/// All three pipeline tables with the CLI's default shapes: the simulated
+/// sweep on the depth-`depth` fig6 spec, the live sweep on the micro preset,
+/// and the convergence trajectories on the short-trunk training spec.
+pub fn run(depth: usize, devices: usize, k_steps: usize) -> Result<Vec<Table>> {
+    let spec = NetSpec::fig6_depth(depth);
+    let hier = Hierarchy::two_level(depth, spec.h(), spec.coarsen)?;
+    Ok(vec![
+        sim_makespan(&spec, &hier, devices, 1, k_steps, 2)?,
+        live_makespan(2, 2, k_steps, 2, 17)?,
+        convergence(6, 4, k_steps.max(2), 2)?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_table_pipelined_strictly_beats_barrier_on_micro_shape() {
+        // the acceptance criterion, read off the experiment table itself, on
+        // the shape the engine test proves strict: micro spec, 2 devices,
+        // K = 3 steps x 2 micro-batches
+        let spec = NetSpec::micro();
+        let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+        let t = sim_makespan(&spec, &hier, 2, 1, 3, 2).unwrap();
+        assert_eq!(t.rows.len(), SYNC_SWEEP.len());
+        let label = |i: usize| t.rows[i][0].as_str().unwrap().to_string();
+        assert_eq!(label(0), "barrier");
+        assert_eq!(label(1), "staleness-0");
+        let mk = |i: usize| t.rows[i][2].as_f64().unwrap();
+        for i in 0..t.rows.len() {
+            assert!(mk(i) > 0.0, "row {i} has no makespan");
+        }
+        // S = 0 relaxes barrier edges to per-slot first-reader edges: never
+        // slower; S >= 1 overlaps whole steps: strictly faster than barrier
+        assert!(mk(1) <= mk(0) + 1e-12, "S=0 slower than barrier: {} vs {}", mk(1), mk(0));
+        for i in [2, 3] {
+            assert!(
+                mk(i) < mk(0),
+                "{} must strictly beat barrier: {} vs {}",
+                label(i),
+                mk(i),
+                mk(0)
+            );
+        }
+        // the speedup column agrees with the makespans
+        let sp = t.rows[2][3].as_f64().unwrap();
+        assert!((sp - mk(0) / mk(2)).abs() < 1e-9);
+        assert!(sp > 1.0);
+        // deterministic rerun reproduces the table exactly
+        let t2 = sim_makespan(&spec, &hier, 2, 1, 3, 2).unwrap();
+        for (a, b) in t.rows.iter().zip(&t2.rows) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_string(), y.to_string());
+            }
+        }
+    }
+
+    #[test]
+    fn live_table_rows_complete_with_bounded_ring() {
+        let t = live_makespan(2, 1, 2, 1, 23).unwrap();
+        assert_eq!(t.rows.len(), SYNC_SWEEP.len());
+        for (i, row) in t.rows.iter().enumerate() {
+            assert!(row[1].as_f64().unwrap() > 0.0, "row {i} has no live span");
+            let peak = row[2].as_f64().unwrap();
+            assert!(peak >= 1.0 && peak <= 4.0, "row {i} ring depth {peak} out of bounds");
+            assert!(row[3].as_f64().unwrap().is_finite(), "row {i} loss not finite");
+        }
+        // barrier and S = 0 share sequential SGD semantics: identical loss
+        assert_eq!(
+            t.rows[0][3].as_f64().unwrap(),
+            t.rows[1][3].as_f64().unwrap(),
+            "barrier and staleness-0 final losses must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn convergence_trajectories_are_finite_and_start_together() {
+        let t = convergence(4, 4, 2, 2).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            for col in 1..4 {
+                assert!(row[col].as_f64().unwrap().is_finite());
+            }
+        }
+        // step 0 of every staleness level reads the same version-0
+        // parameters on the same step-keyed batch: identical loss
+        let first = &t.rows[0];
+        assert_eq!(first[1].as_f64().unwrap(), first[2].as_f64().unwrap());
+        assert_eq!(first[1].as_f64().unwrap(), first[3].as_f64().unwrap());
+    }
+}

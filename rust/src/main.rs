@@ -4,9 +4,9 @@
 //!   forward     MG vs serial forward propagation on real numerics
 //!   train       SGD training (serial | MG layer-parallel | hybrid micro-batched), host or PJRT
 //!   serve       continuous-batching inference serving through the live multi-instance runtime
-//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|ablations
+//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|pipeline|ablations
 //!   sim         one simulated MG/PM run at a given GPU count
-//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json
+//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json
 //!   artifacts   check the AOT artifact manifest against the rust presets
 //!   help        this text
 
@@ -38,13 +38,19 @@ USAGE: mgrit <subcommand> [options]
               [--placement min-id|heft|lookahead]
   train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
               [--parallel N_DEVICES] [--granularity per_step|per_block] [--micro-batches M]
-              [--placement min-id|heft|lookahead]
+              [--pipeline-steps K] [--staleness S] [--placement min-id|heft|lookahead]
                 --parallel routes every step through the whole-training-step
                 task graph (ParallelMgrit::train_step, host backend) and
                 prints a one-line speed/parity report vs the serial MG step;
                 --micro-batches M splits each batch into M micro-batches
                 pipelined through ONE composed graph (hybrid data x layer
                 parallelism; batch must divide by M; requires --parallel);
+                --pipeline-steps K composes K consecutive training steps into
+                ONE cross-step pipelined graph (requires --parallel) and
+                --staleness S bounds how stale the parameters a step reads
+                may be: S = 0 keeps sequential-SGD semantics bit-for-bit
+                while still overlapping cross-step tails, S >= 1 trades
+                bounded staleness for makespan (see `experiment pipeline`);
                 --placement picks the scheduling & placement policy the
                 graphs dispatch under (default heft — the policy-comparison
                 winner; min-id is the static-partition legacy order; every
@@ -67,15 +73,18 @@ USAGE: mgrit <subcommand> [options]
               against the serial per-request MGRIT reference, and asserts
               >= 2 instances overlapped in flight on the live ExecEvent
               trace whenever the load held two requests co-resident
-  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|placement|compound|ablations> [--quick]
+  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|placement|pipeline|compound|ablations> [--quick]
               (serve prints the continuous-vs-barrier table AND the
                three-way FIFO/EDF/shape-batch policy comparison;
                placement scores min-id vs HEFT vs lookahead dispatch on
-               the training graph and a serving drain)
+               the training graph and a serving drain;
+               pipeline sweeps cross-step sync modes — barrier vs
+               staleness 0/1/2 — reporting simulated + live makespan
+               and the loss trajectory at each staleness bound)
   sim         --preset P --gpus G [--training] [--cycles C]
   bench       [--out DIR] [--full]   quick perf snapshot; writes
               BENCH_hotpath.json + BENCH_fig6bc.json + BENCH_placement.json
-              into DIR (default .)
+              + BENCH_pipeline.json into DIR (default .)
   bench-delta --prev DIR [--cur DIR]   diff BENCH_*.json medians against a
               previous run's records; prints GitHub ::warning:: annotations
               for suites regressing > 10% (advisory, exit 0)
@@ -210,8 +219,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         method,
         seed: cfg.seed,
     };
+    let pipeline_steps = args.usize_or("pipeline-steps", 1)?;
+    let staleness = args.usize_or("staleness", 0)?;
     if micro_batches != 1 && parallel == 0 {
         bail!("--micro-batches requires --parallel (the multi-instance graph runtime)");
+    }
+    if pipeline_steps > 1 && parallel == 0 {
+        bail!("--pipeline-steps requires --parallel (the multi-instance graph runtime)");
+    }
+    if staleness > 0 && pipeline_steps <= 1 {
+        bail!("--staleness only applies with --pipeline-steps K > 1");
     }
     if parallel > 0 {
         // the layer-parallel path: every step is one whole-training-step
@@ -223,6 +240,39 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         if cfg.backend != "host" {
             bail!("--parallel runs on the host backend (PJRT contexts are per-thread)");
+        }
+        if pipeline_steps > 1 {
+            // cross-step pipelining: K consecutive steps become ONE composed
+            // graph; step t reads parameter version max(0, t − S) from the
+            // snapshot ring (S = 0 is bit-identical to the sequential loop)
+            use resnet_mgrit::mgrit::taskgraph::PipeSync;
+            println!(
+                "pipelined training: {parallel} devices, K={pipeline_steps} steps/window, \
+                 staleness {staleness}, granularity {granularity:?}, \
+                 micro-batches {micro_batches}, placement {}",
+                placement.name()
+            );
+            let logs = train::train_parallel_pipelined(
+                &spec,
+                &mut params,
+                &data,
+                &tc,
+                parallel,
+                granularity,
+                micro_batches,
+                placement,
+                pipeline_steps,
+                PipeSync::Staleness(staleness),
+            )?;
+            // the pipelined path reduces loss per step but not |g| (the
+            // update happens inside the graph), so only loss is printed
+            for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
+                println!("  step {:>4}  loss {:.4}", l.step, l.loss);
+            }
+            let exec = HostSolver::new(spec.clone(), Arc::new(params.clone()))?;
+            let err = train::top1_error(&spec, &exec, &data, cfg.batch, 8)?;
+            println!("final top-1 error: {:.1}%", err * 100.0);
+            return Ok(());
         }
         println!(
             "parallel training: {parallel} devices, granularity {granularity:?}, \
@@ -507,6 +557,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     println!("{}", t.render());
                 }
             }
+            "pipeline" => {
+                // cross-step barrier vs bounded staleness: simulated
+                // makespan sweep, live micro-preset window, loss trajectory
+                let (depth, devices, k) = if quick { (32, 2, 3) } else { (64, 4, 4) };
+                for t in exp::pipeline::run(depth, devices, k)? {
+                    println!("{}", t.render());
+                }
+            }
             "fig7" => {
                 let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
                 println!("{}", exp::fig7::run(gpus)?.render());
@@ -525,7 +583,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "serve", "placement", "compound", "ablations"] {
+        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "serve", "placement", "pipeline", "compound", "ablations"] {
             run_one(name)?;
         }
         Ok(())
@@ -535,9 +593,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 /// Quick perf snapshot without `cargo bench`: emits the machine-readable
-/// BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json
-/// perf-trajectory records into `--out` (default: the current directory —
-/// the repo root in CI).
+/// BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json /
+/// BENCH_pipeline.json perf-trajectory records into `--out` (default: the
+/// current directory — the repo root in CI).
 fn cmd_bench(args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "."));
     if args.flag("full") {
@@ -546,7 +604,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let p1 = exp::perf::emit_hotpath(&out)?;
     let p2 = exp::perf::emit_fig6bc(&out)?;
     let p3 = exp::perf::emit_placement(&out)?;
-    println!("perf records: {} , {} , {}", p1.display(), p2.display(), p3.display());
+    let p4 = exp::perf::emit_pipeline(&out)?;
+    println!(
+        "perf records: {} , {} , {} , {}",
+        p1.display(),
+        p2.display(),
+        p3.display(),
+        p4.display()
+    );
     Ok(())
 }
 

@@ -38,6 +38,11 @@
 //! - [`mg_train_step`] — the whole training step as one executable graph
 //! - [`mg_train_step_multi`] — M micro-batch training instances pipelined
 //!   through one graph (per-layer `ReduceGrad` join, single `ParamUpdate`)
+//! - [`mg_train_pipeline`] — K consecutive training steps **cross-step
+//!   pipelined** under bounded staleness: step t reads parameter version
+//!   max(0, t−S) from a snapshot ring, and the only cross-step edges are
+//!   per-slot `ParamUpdate` → first-reader version-gap edges (or a full
+//!   barrier for the drain-to-idle baseline)
 //! - [`serial_forward`] / [`serial_training`] — single-stream sequential
 //!   baseline (distributed = the paper's "Model Partitioned" / PM method)
 //! - [`mg_forward_with`] / [`mg_serve`] — forward-only inference instances
@@ -65,7 +70,7 @@
 //! ```
 
 use crate::coordinator::{InstanceGroups, Partition};
-use crate::model::cost::{head_cost, layer_bwd_cost, layer_cost, state_bytes};
+use crate::model::cost::{head_cost, layer_bwd_cost, layer_cost, opening_cost, state_bytes};
 use crate::model::NetSpec;
 use crate::Result;
 
@@ -241,6 +246,19 @@ pub enum TaskOp {
         /// Trunk layer index.
         layer: usize,
     },
+    /// The opening layer `u⁰ = relu(conv(y) + b_open)` of one **pipelined**
+    /// training instance — the sole dependency-free task of its instance,
+    /// evaluated against the instance's parameter *version* (the snapshot
+    /// ring; see [`mg_train_pipeline`]). It seeds every primal state slot,
+    /// mirroring how [`TaskOp::Head`] seeds the adjoint system, so the whole
+    /// instance is ordered behind it. Plain (non-pipelined) training steps
+    /// run the opening host-side instead.
+    Opening,
+    /// The opening layer's VJP of one pipelined training instance: reads the
+    /// instance input `y` and λ⁰, against the same parameter version as the
+    /// instance's [`TaskOp::Opening`], producing the opening `(dW, db)` pair
+    /// that joins the pipeline's per-step reduction at slot `n_layers`.
+    OpenGrad,
     /// Boundary transfer (accounting only in local execution).
     Xfer,
 }
@@ -309,6 +327,35 @@ impl TaskGraph {
         for mut t in sub.tasks {
             t.id += off;
             t.instance = instance;
+            t.device += dev_offset;
+            if let TaskKind::Comm { src, dst, .. } = &mut t.kind {
+                *src += dev_offset;
+                *dst += dev_offset;
+            }
+            for d in &mut t.deps {
+                *d += off;
+            }
+            self.tasks.push(t);
+        }
+        off
+    }
+
+    /// Splice an already-composed **multi-instance** sub-graph into this
+    /// graph, offsetting task ids, dependency ids and device ids while
+    /// *preserving* the sub-graph's per-task instance tags (shifted by
+    /// `inst_offset`) — the composed-admission counterpart of
+    /// [`TaskGraph::append_instance`], used to admit whole pipelined
+    /// training graphs into an incremental session. Returns the id offset.
+    pub(crate) fn append_composed(
+        &mut self,
+        sub: TaskGraph,
+        inst_offset: usize,
+        dev_offset: usize,
+    ) -> usize {
+        let off = self.tasks.len();
+        for mut t in sub.tasks {
+            t.id += off;
+            t.instance += inst_offset;
             t.device += dev_offset;
             if let TaskKind::Comm { src, dst, .. } = &mut t.kind {
                 *src += dev_offset;
@@ -940,6 +987,54 @@ impl<'a> MgBuilder<'a> {
             self.slots[1].u[0][mu].readers.push(gt);
         }
     }
+
+    /// The in-graph opening task of one pipelined training instance: the
+    /// instance's sole dependency-free root. Seeds every primal state slot
+    /// (the primal mirror of [`MgBuilder::head`]'s adjoint seeding), so all
+    /// instance work — and therefore every parameter read of the instance —
+    /// is ordered behind it.
+    fn opening(&mut self) -> usize {
+        let dev = self.pm.device_of(Sys::Primal, 0, 0);
+        let oc = opening_cost(self.spec, self.batch);
+        let t = self.g.kernel(
+            dev,
+            "opening",
+            KernelClass::Conv,
+            oc.flops,
+            Vec::new(),
+            self.op(TaskOp::Opening),
+        );
+        for l in 0..self.pm.hier.n_levels() {
+            for j in 0..self.pm.hier.levels[l].n_points {
+                self.slots[0].u[l][j].writer = Some(t);
+                self.slots[0].rhs[l][j].writer = Some(t);
+            }
+        }
+        t
+    }
+
+    /// The opening VJP task of one pipelined training instance: reads λ⁰
+    /// (the adjoint fine state μ^N = λ⁰) once its final writer retires.
+    /// VJP cost ≈ 2× the opening forward cost, same class.
+    fn open_grad(&mut self) -> usize {
+        let n_last = self.pm.hier.fine().n_points - 1;
+        let dev = self.pm.device_of(Sys::Adjoint, 0, n_last);
+        let oc = opening_cost(self.spec, self.batch);
+        let mut deps: Vec<usize> = Vec::new();
+        if let Some(w) = self.slots[1].u[0][n_last].writer {
+            deps.push(w);
+        }
+        let t = self.g.kernel(
+            dev,
+            "open_grad",
+            KernelClass::Conv,
+            2.0 * oc.flops,
+            deps,
+            self.op(TaskOp::OpenGrad),
+        );
+        self.slots[1].u[0][n_last].readers.push(t);
+        t
+    }
 }
 
 /// One step of the micro-batch gradient reduction: `node = lhs + rhs`, with
@@ -1373,6 +1468,295 @@ pub fn mg_train_step_multi(
             vec![dep],
             Some(TaskOp::ParamUpdate { layer }),
         );
+    }
+    Ok(g)
+}
+
+/// Cross-step synchronization policy of a pipelined multi-step training
+/// graph (see [`mg_train_pipeline`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipeSync {
+    /// Drain-to-idle between steps: every task of step t waits for ALL of
+    /// step t−1's parameter updates — the barrier-synced baseline
+    /// (sequential SGD semantics, no cross-step overlap).
+    Barrier,
+    /// Bounded-staleness pipelining: step t reads parameter version
+    /// `max(0, t − S)`, and the only cross-step edges are
+    /// `ParamUpdate(t − S − 1, slot)` → the *first reader* of that slot's
+    /// parameters in each step-t instance, plus the per-slot `ParamUpdate`
+    /// chain. `Staleness(0)` keeps sequential SGD semantics — bit-identical
+    /// to the barrier and to K sequential `train_step_micro` calls — while
+    /// already overlapping step t+1's forward wave with step t's gradient
+    /// tail wherever the per-slot first-reader edges allow.
+    Staleness(usize),
+}
+
+/// The **parameter slots** a task's payload reads: trunk layer indices
+/// `0..n_layers`, the opening pair at slot `n_layers`, the head (FC) pair at
+/// slot `n_layers + 1`. Mirrors exactly which `(w, b)` pairs the live
+/// executor fetches at dispatch time for each op, so the pipeline composer
+/// (which adds a staleness edge on the *first* reader of each slot per
+/// instance) and the executor's versioned parameter reads cannot drift
+/// apart. Ops that touch no parameters (corrections, reductions, transfers)
+/// return an empty list; `ParamUpdate` is excluded on purpose — its base
+/// read is version-chained explicitly by the composer.
+pub fn op_param_slots(op: &TaskOp, hier: &Hierarchy, n_layers: usize) -> Vec<usize> {
+    match *op {
+        TaskOp::PointUpdate { sys, level, j } | TaskOp::Residual { sys, level, j } => {
+            match sys {
+                Sys::Primal => vec![hier.levels[level].theta_idx(j - 1)],
+                Sys::Adjoint => vec![hier.adjoint_state_index(level, j)],
+            }
+        }
+        TaskOp::BlockRun { sys, level, j_first, j_last } => (j_first..=j_last)
+            .map(|j| match sys {
+                Sys::Primal => hier.levels[level].theta_idx(j - 1),
+                Sys::Adjoint => hier.adjoint_state_index(level, j),
+            })
+            .collect(),
+        TaskOp::Restrict { sys, level, j } => match sys {
+            Sys::Primal => vec![hier.levels[level + 1].theta_idx(j - 1)],
+            Sys::Adjoint => vec![hier.adjoint_state_index(level + 1, j)],
+        },
+        TaskOp::GradAccum { layer } => vec![layer],
+        TaskOp::Opening | TaskOp::OpenGrad => vec![n_layers],
+        TaskOp::Head => vec![n_layers + 1],
+        TaskOp::Correct { .. }
+        | TaskOp::ReduceGrad { .. }
+        | TaskOp::ParamUpdate { .. }
+        | TaskOp::Xfer => Vec::new(),
+    }
+}
+
+/// One **pipelined** training-instance task set — like `train_instance_tasks`
+/// but with the opening layer and its VJP in-graph ([`TaskOp::Opening`] /
+/// [`TaskOp::OpenGrad`]), since a pipelined step must evaluate them against
+/// its own parameter *version* rather than a host-side snapshot. Returns the
+/// sub-graph plus the gradient-producer task id per parameter slot
+/// (`0..n_layers` trunk `GradAccum`s, `n_layers` the `OpenGrad`,
+/// `n_layers + 1` the `Head`, whose VJP yields the FC pair).
+fn pipeline_instance_tasks(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+) -> (TaskGraph, Vec<usize>) {
+    let mut b = MgBuilder::new(spec, hier, partition, batch);
+    b.gran = gran;
+    b.opening();
+    for _ in 0..cycles {
+        b.vcycle(0, relax);
+    }
+    let head_id = b.head();
+    b.sys = Sys::Adjoint;
+    b.flop_scale = 2.0;
+    for _ in 0..cycles {
+        b.vcycle(0, relax);
+    }
+    b.sys = Sys::Primal;
+    b.flop_scale = 1.0;
+    b.grads();
+    let og = b.open_grad();
+    let n_layers = hier.fine().n_points - 1;
+    let mut grad_ids = vec![usize::MAX; n_layers + 2];
+    for t in &b.g.tasks {
+        if let Some(TaskOp::GradAccum { layer }) = t.op {
+            grad_ids[layer] = t.id;
+        }
+    }
+    grad_ids[n_layers] = og;
+    grad_ids[n_layers + 1] = head_id;
+    debug_assert!(grad_ids.iter().all(|&i| i != usize::MAX));
+    (b.g, grad_ids)
+}
+
+/// K consecutive training steps of M micro-batch instances each, composed
+/// into **one** executable graph with **cross-step pipelining under bounded
+/// staleness** — asynchronous SGD over the multi-instance runtime:
+///
+/// - every step is a full [`mg_train_step_multi`]-shaped sub-graph, except
+///   that the opening layer and its VJP run *in-graph*
+///   ([`TaskOp::Opening`] / [`TaskOp::OpenGrad`]) and the per-step join
+///   reduces **all** `n_layers + 2` parameter slots (trunk layers, opening,
+///   head) — one `ParamUpdate` per slot per step, producing parameter
+///   version `t + 1` from version `t` and step t's mean gradient;
+/// - step t's tasks read parameter version `max(0, t − S)` (the snapshot
+///   ring of the live executor); under [`PipeSync::Staleness`] the only
+///   cross-step edges are `ParamUpdate(t − S − 1, slot)` → the first reader
+///   of that slot in each step-t instance — so step t+1's forward V-cycles
+///   launch against the step-t snapshot while step t's adjoint/GradAccum/
+///   ReduceGrad tail is still draining — plus the per-slot `ParamUpdate`
+///   chain (update t needs version t's slot as its base);
+/// - under [`PipeSync::Barrier`] every root task of step t instead waits for
+///   all of step t−1's updates: the drain-to-idle baseline the pipelined
+///   makespan is compared against.
+///
+/// Instance tags are global (`t·M + k`); join tasks of step t carry
+/// `t·M`, so the executor recovers the step as `instance / M`. The whole
+/// cross-step graph is planned by the placement pass as ONE plan and scored
+/// by the simulator unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn mg_train_pipeline(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    groups: &InstanceGroups,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+    micro_batches: usize,
+    steps: usize,
+    sync: PipeSync,
+) -> Result<TaskGraph> {
+    anyhow::ensure!(steps >= 1, "need at least one pipelined step");
+    anyhow::ensure!(micro_batches >= 1, "need at least one micro-batch");
+    anyhow::ensure!(
+        groups.devices_per_group() == partition.n_devices(),
+        "instance groups sized for {} devices per group but the partition uses {}",
+        groups.devices_per_group(),
+        partition.n_devices()
+    );
+    let n_layers = hier.fine().n_points - 1;
+    let n_slots = n_layers + 2;
+    let mut g = TaskGraph::default();
+    let plan = reduce_plan(micro_batches);
+    // pu_ids[t][slot] = graph-global id of step t's ParamUpdate for `slot`
+    let mut pu_ids: Vec<Vec<usize>> = Vec::with_capacity(steps);
+    fn src_of(
+        src: GradSrc,
+        slot: usize,
+        grad_ids: &[Vec<usize>],
+        node_tasks: &[(usize, usize)],
+        g: &TaskGraph,
+    ) -> (usize, usize) {
+        match src {
+            GradSrc::Inst(k) => {
+                let id = grad_ids[k][slot];
+                (id, g.tasks[id].device)
+            }
+            GradSrc::Node(n) => node_tasks[n],
+        }
+    }
+    for t in 0..steps {
+        // grad_ids[k][slot] = id of step-t instance k's slot-gradient producer
+        let mut grad_ids: Vec<Vec<usize>> = Vec::with_capacity(micro_batches);
+        for k in 0..micro_batches {
+            let (sub, ids) =
+                pipeline_instance_tasks(spec, hier, partition, batch, cycles, relax, gran);
+            let n_sub = sub.tasks.len();
+            let off = g.append_instance(sub, t * micro_batches + k, groups.device_offset(k));
+            grad_ids.push(ids.into_iter().map(|i| i + off).collect());
+            match sync {
+                PipeSync::Barrier if t > 0 => {
+                    // the drain-to-idle baseline: the instance's root tasks
+                    // (the Opening is the only dependency-free task of a
+                    // pipelined instance) wait for the whole previous step's
+                    // parameter join
+                    let root_deps: Vec<usize> = pu_ids[t - 1].clone();
+                    for task in &mut g.tasks[off..off + n_sub] {
+                        if task.deps.is_empty() {
+                            task.deps = root_deps.clone();
+                        }
+                    }
+                }
+                PipeSync::Staleness(s) if t >= s + 1 => {
+                    // version-gap edges: the FIRST reader of each parameter
+                    // slot in this instance waits for ParamUpdate(t−s−1, slot)
+                    // — every later same-slot reader is already ordered
+                    // behind it through the instance's hazard frontier chains
+                    let src = &pu_ids[t - s - 1];
+                    let mut seen = vec![false; n_slots];
+                    let mut extra: Vec<(usize, usize)> = Vec::new();
+                    for task in &g.tasks[off..off + n_sub] {
+                        if let Some(op) = &task.op {
+                            for slot in op_param_slots(op, hier, n_layers) {
+                                if !seen[slot] {
+                                    seen[slot] = true;
+                                    extra.push((task.id, src[slot]));
+                                }
+                            }
+                        }
+                    }
+                    for (id, dep) in extra {
+                        g.tasks[id].deps.push(dep);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // step-t parameter join: per-slot reduction tree + one chained update
+        let join_start = g.tasks.len();
+        let mut step_pu = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
+            let grad_bytes = if slot < n_layers {
+                layer_cost(spec, slot, batch).param_bytes
+            } else if slot == n_layers {
+                opening_cost(spec, batch).param_bytes
+            } else {
+                head_cost(spec, batch).param_bytes
+            };
+            let elems = grad_bytes / 4.0;
+            let mut node_tasks: Vec<(usize, usize)> = Vec::with_capacity(plan.len());
+            let mut last: Option<(usize, usize)> = None;
+            for step in &plan {
+                let (lhs_id, lhs_dev) = src_of(step.lhs, slot, &grad_ids, &node_tasks, &g);
+                let (rhs_id, rhs_dev) = src_of(step.rhs, slot, &grad_ids, &node_tasks, &g);
+                let dst = lhs_dev;
+                let mut deps = vec![lhs_id];
+                match g.comm(rhs_dev, dst, grad_bytes, vec![rhs_id], Some(TaskOp::Xfer)) {
+                    Some(c) => deps.push(c),
+                    None => deps.push(rhs_id),
+                }
+                let id = g.kernel(
+                    dst,
+                    "reduce_grad",
+                    KernelClass::Light,
+                    2.0 * elems,
+                    dedup(deps),
+                    Some(TaskOp::ReduceGrad {
+                        layer: slot,
+                        lhs: step.lhs,
+                        rhs: step.rhs,
+                        node: step.node,
+                        root: step.root,
+                    }),
+                );
+                node_tasks.push((id, dst));
+                last = Some((id, dst));
+            }
+            let (dep, dev) = match last {
+                Some((id, d)) => (id, d),
+                None => {
+                    let id = grad_ids[0][slot];
+                    (id, g.tasks[id].device)
+                }
+            };
+            // the per-slot version chain: update t consumes version t's slot
+            // as its base, so it must follow update t−1 of the same slot
+            let mut deps = vec![dep];
+            if t > 0 {
+                deps.push(pu_ids[t - 1][slot]);
+            }
+            let id = g.kernel(
+                dev,
+                "param_update",
+                KernelClass::Light,
+                2.0 * elems,
+                dedup(deps),
+                Some(TaskOp::ParamUpdate { layer: slot }),
+            );
+            step_pu.push(id);
+        }
+        // join tasks belong to step t: tag them with the step's first
+        // instance so the executor recovers `step = instance / M`
+        for task in &mut g.tasks[join_start..] {
+            task.instance = t * micro_batches;
+        }
+        pu_ids.push(step_pu);
     }
     Ok(g)
 }
@@ -2016,5 +2400,151 @@ mod tests {
         let g = mg_train_step(&spec, &hier, &part, 1, 2, RelaxKind::FCF, Granularity::PerStep);
         g.validate().unwrap();
         assert_eq!(g.n_kernels_labeled("param_grad"), spec.n_res());
+    }
+
+    #[test]
+    fn op_param_slots_mirrors_executor_reads() {
+        let spec = NetSpec::fig6_depth(8);
+        let hier = Hierarchy::two_level(8, spec.h(), 4).unwrap();
+        let n_layers = 8usize;
+        let s = |op: &TaskOp| op_param_slots(op, &hier, n_layers);
+        // primal fine point j applies Φ at layer j−1
+        assert_eq!(s(&TaskOp::PointUpdate { sys: Sys::Primal, level: 0, j: 3 }), vec![2]);
+        // adjoint point j applies Ψ at the reversed fine layer
+        assert_eq!(
+            s(&TaskOp::PointUpdate { sys: Sys::Adjoint, level: 0, j: 3 }),
+            vec![hier.adjoint_state_index(0, 3)]
+        );
+        // coarse-level updates stride through the fine layers
+        assert_eq!(s(&TaskOp::PointUpdate { sys: Sys::Primal, level: 1, j: 2 }), vec![4]);
+        // restrict applies the COARSE Φ_H of level+1
+        assert_eq!(s(&TaskOp::Restrict { sys: Sys::Primal, level: 0, j: 1 }), vec![0]);
+        // fused spans list every layer of the span
+        assert_eq!(
+            s(&TaskOp::BlockRun { sys: Sys::Primal, level: 0, j_first: 1, j_last: 3 }),
+            vec![0, 1, 2]
+        );
+        // non-trunk slots: opening at n_layers, head at n_layers + 1
+        assert_eq!(s(&TaskOp::Opening), vec![n_layers]);
+        assert_eq!(s(&TaskOp::OpenGrad), vec![n_layers]);
+        assert_eq!(s(&TaskOp::Head), vec![n_layers + 1]);
+        assert_eq!(s(&TaskOp::GradAccum { layer: 5 }), vec![5]);
+        // parameter-free ops
+        assert!(s(&TaskOp::Correct { sys: Sys::Primal, level: 0, j: 1 }).is_empty());
+        assert!(s(&TaskOp::ParamUpdate { layer: 0 }).is_empty());
+        assert!(s(&TaskOp::Xfer).is_empty());
+    }
+
+    #[test]
+    fn pipeline_graph_composes_and_validates() {
+        let (spec, hier, part) = setup(32, 2);
+        let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices()).unwrap();
+        let n_slots = 32 + 2;
+        for sync in [PipeSync::Barrier, PipeSync::Staleness(0), PipeSync::Staleness(1)] {
+            let g = mg_train_pipeline(
+                &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+                2, 2, sync,
+            )
+            .unwrap();
+            g.validate().unwrap();
+            assert!(g.tasks.iter().all(|t| t.op.is_some()));
+            // K = 2 steps × M = 2 instances: per-instance stages ×4, joint
+            // stages reduce ALL n_layers + 2 slots per step
+            assert_eq!(g.n_kernels_labeled("opening"), 4, "{sync:?}");
+            assert_eq!(g.n_kernels_labeled("open_grad"), 4);
+            assert_eq!(g.n_kernels_labeled("head"), 4);
+            assert_eq!(g.n_kernels_labeled("param_grad"), 32 * 4);
+            assert_eq!(g.n_kernels_labeled("reduce_grad"), n_slots * 2);
+            assert_eq!(g.n_kernels_labeled("param_update"), n_slots * 2);
+            // global instance tags 0..K·M
+            let max_inst = g.tasks.iter().map(|t| t.instance).max().unwrap();
+            assert_eq!(max_inst, 3);
+        }
+    }
+
+    #[test]
+    fn pipeline_staleness_edges_bound_version_gap() {
+        // S = 1, M = 1, K = 4: the only cross-step edges are ParamUpdate
+        // chains (gap 1) and first-reader version-gap edges from step
+        // t − S − 1 = t − 2 — and each step t ≥ 2 carries exactly one such
+        // edge per parameter slot
+        let (spec, hier, part) = setup(32, 2);
+        let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices()).unwrap();
+        let n_slots = 32 + 2;
+        let g = mg_train_pipeline(
+            &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+            1, 4, PipeSync::Staleness(1),
+        )
+        .unwrap();
+        g.validate().unwrap();
+        let mut gap_edges = vec![0usize; 4];
+        for t in &g.tasks {
+            let step = t.instance; // M = 1
+            for &d in &t.deps {
+                let dstep = g.tasks[d].instance;
+                if dstep == step {
+                    continue;
+                }
+                assert!(
+                    matches!(g.tasks[d].op, Some(TaskOp::ParamUpdate { .. })),
+                    "cross-step dep {} → {} is not a ParamUpdate",
+                    t.id,
+                    d
+                );
+                if matches!(t.op, Some(TaskOp::ParamUpdate { .. })) {
+                    assert_eq!(step, dstep + 1, "update chain must link adjacent versions");
+                } else {
+                    assert_eq!(step, dstep + 2, "version-gap edge must span S + 1 steps");
+                    gap_edges[step] += 1;
+                }
+            }
+        }
+        assert_eq!(gap_edges, vec![0, 0, n_slots, n_slots]);
+    }
+
+    #[test]
+    fn pipeline_s0_serializes_readers_behind_previous_update() {
+        // S = 0: step t's first reader of every slot waits for step t−1's
+        // update of that slot — sequential SGD semantics with per-slot
+        // (not whole-step) release
+        let (spec, hier, part) = setup(32, 2);
+        let groups = crate::coordinator::InstanceGroups::new(1, part.n_devices()).unwrap();
+        let g = mg_train_pipeline(
+            &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+            1, 2, PipeSync::Staleness(0),
+        )
+        .unwrap();
+        let gap: Vec<(usize, usize)> = g
+            .tasks
+            .iter()
+            .filter(|t| !matches!(t.op, Some(TaskOp::ParamUpdate { .. })))
+            .flat_map(|t| {
+                t.deps
+                    .iter()
+                    .filter(|&&d| g.tasks[d].instance != t.instance)
+                    .map(move |&d| (t.instance, g.tasks[d].instance))
+            })
+            .collect();
+        assert_eq!(gap.len(), 32 + 2);
+        assert!(gap.iter().all(|&(a, b)| a == 1 && b == 0));
+        // the edges land at the slot's first USE, not all on the root: step
+        // 1's Opening waits for exactly ONE step-0 update (its own slot) —
+        // under the barrier baseline it waits for ALL of them
+        let cross_deps_of_opening = |g: &TaskGraph| {
+            g.tasks
+                .iter()
+                .find(|t| matches!(t.op, Some(TaskOp::Opening)) && t.instance == 1)
+                .map(|t| {
+                    t.deps.iter().filter(|&&d| g.tasks[d].instance == 0).count()
+                })
+                .unwrap()
+        };
+        assert_eq!(cross_deps_of_opening(&g), 1);
+        let bar = mg_train_pipeline(
+            &spec, &hier, &part, &groups, 1, 2, RelaxKind::FCF, Granularity::PerStep,
+            1, 2, PipeSync::Barrier,
+        )
+        .unwrap();
+        assert_eq!(cross_deps_of_opening(&bar), 32 + 2);
     }
 }

@@ -71,8 +71,8 @@ pub mod runtime;
 pub mod sim;
 
 pub use policy::{
-    latency_derived_depth, Decision, Edf, Fifo, PolicyCtx, PolicyKind, QueuedRequest,
-    SchedulerPolicy, ShapeBatch,
+    latency_derived_depth, latency_derived_depth_batched, Decision, Edf, Fifo, PolicyCtx,
+    PolicyKind, QueuedRequest, SchedulerPolicy, ShapeBatch,
 };
 pub use request::{
     argmax_classes, percentile_nearest_rank, InferRequest, LatencySummary, RequestRecord,

@@ -68,9 +68,14 @@ pub struct PolicyCtx {
     /// in-flight instances`). A policy must not admit when this is 0.
     pub free_slots: usize,
     /// The driver's estimate of one instance's service time in seconds —
-    /// what [`Edf`] sheds against. The live runtime learns it from completed
-    /// requests (0 until the first completion: no speculative shedding); the
-    /// sim derives it deterministically from the cost model.
+    /// what [`Edf`] sheds against. The live runtime learns a **per-row**
+    /// EWMA from completed instances (a coalesced instance's latency is
+    /// divided by its summed leading dimension before feeding the average)
+    /// and scales it back up by [`SchedulerPolicy::coalesce_width`] here, so
+    /// a width-B batching policy is judged against the latency of the B-row
+    /// instances it actually launches (0 until the first completion: no
+    /// speculative shedding). The sim derives the estimate deterministically
+    /// from the cost model.
     pub service_estimate_s: f64,
 }
 
@@ -166,6 +171,14 @@ pub trait SchedulerPolicy {
     /// One scheduling decision over the arrived-but-unadmitted queue (sorted
     /// by arrival, stable for equal arrivals).
     fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision;
+    /// How many requests this policy coalesces into one instance in the
+    /// common case — the width the driver multiplies its **per-row** service
+    /// EWMA by to form [`PolicyCtx::service_estimate_s`], and the width
+    /// [`latency_derived_depth_batched`] sizes the queue bound with. Batch-1
+    /// policies keep the default of 1; [`ShapeBatch`] reports `max_batch`.
+    fn coalesce_width(&self) -> usize {
+        1
+    }
 }
 
 /// First-in-first-out admission — exactly the scheduler PR 4 hard-wired into
@@ -290,6 +303,10 @@ impl SchedulerPolicy for ShapeBatch {
         "shape-batch"
     }
 
+    fn coalesce_width(&self) -> usize {
+        self.max_batch
+    }
+
     fn decide(&mut self, queue: &[QueuedRequest], ctx: &PolicyCtx) -> Decision {
         if ctx.free_slots == 0 || queue.is_empty() {
             return Decision::rest();
@@ -395,6 +412,34 @@ pub fn latency_derived_depth(deadline_ms: f64, service_ms: f64, max_inflight: us
         return usize::MAX;
     }
     (((deadline_ms / service_ms) * max_inflight as f64).floor() as usize).max(1)
+}
+
+/// [`latency_derived_depth`] for a coalescing policy of width `width`:
+/// `service_ms` is the **per-row** service time, and a width-`width`
+/// instance takes ≈ `width · service_ms` end to end, so the last request
+/// admitted into a full instance burns `(width − 1) · service_ms` of its
+/// budget on co-batched rows before its own completes. The bound therefore
+/// sizes the queue against the budget that remains after that coalescing
+/// tax: `latency_derived_depth(deadline − (width−1)·service, service,
+/// max_inflight)`. Per-row throughput is unchanged by coalescing (an
+/// instance retires `width` requests), which is why the denominator stays
+/// the per-row service time. `width ≤ 1` reduces to the unbatched bound;
+/// a budget the coalescing tax alone exhausts yields depth 1 (admit only
+/// what is already doomed-or-not at the head, reject the rest).
+pub fn latency_derived_depth_batched(
+    deadline_ms: f64,
+    service_ms: f64,
+    max_inflight: usize,
+    width: usize,
+) -> usize {
+    if service_ms <= 0.0 || deadline_ms <= 0.0 {
+        return usize::MAX;
+    }
+    let remaining_ms = deadline_ms - (width.max(1) as f64 - 1.0) * service_ms;
+    if remaining_ms <= 0.0 {
+        return 1;
+    }
+    latency_derived_depth(remaining_ms, service_ms, max_inflight)
 }
 
 #[cfg(test)]
@@ -614,5 +659,33 @@ mod tests {
         // no estimate / no budget ⇒ unbounded
         assert_eq!(latency_derived_depth(100.0, 0.0, 4), usize::MAX);
         assert_eq!(latency_derived_depth(0.0, 10.0, 4), usize::MAX);
+    }
+
+    #[test]
+    fn latency_derived_depth_batched_charges_the_coalescing_tax() {
+        // width 1 (and a degenerate width 0) reduce to the unbatched bound
+        assert_eq!(latency_derived_depth_batched(100.0, 10.0, 4, 1), 40);
+        assert_eq!(latency_derived_depth_batched(100.0, 10.0, 4, 0), 40);
+        // width 4 burns (4−1)·10 = 30 ms on co-batched rows: the queue is
+        // sized against the remaining 70 ms ⇒ 28 positions, not 40
+        assert_eq!(latency_derived_depth_batched(100.0, 10.0, 4, 4), 28);
+        // a width whose tax alone exhausts the budget clamps to depth 1
+        // rather than reporting "unbounded"
+        assert_eq!(latency_derived_depth_batched(100.0, 10.0, 4, 11), 1);
+        assert_eq!(latency_derived_depth_batched(100.0, 10.0, 4, 64), 1);
+        // no estimate / no budget stays unbounded regardless of width
+        assert_eq!(latency_derived_depth_batched(100.0, 0.0, 4, 8), usize::MAX);
+        assert_eq!(latency_derived_depth_batched(0.0, 10.0, 4, 8), usize::MAX);
+    }
+
+    #[test]
+    fn coalesce_width_defaults_to_one_and_tracks_shape_batch() {
+        assert_eq!(Fifo.coalesce_width(), 1);
+        assert_eq!(Edf::default().coalesce_width(), 1);
+        assert_eq!(ShapeBatch::new(8, 1.0).unwrap().coalesce_width(), 8);
+        // the boxed form the runtime actually holds reports the same width
+        let boxed = PolicyKind::ShapeBatch { max_batch: 3, window_ms: 1.0 }.build().unwrap();
+        assert_eq!(boxed.coalesce_width(), 3);
+        assert_eq!(PolicyKind::Edf.build().unwrap().coalesce_width(), 1);
     }
 }

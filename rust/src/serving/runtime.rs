@@ -74,7 +74,9 @@ pub struct ServeConfig {
     /// Bounded admission queue: arrived requests beyond this many waiting
     /// are shed at the door ([`ShedReason::QueueFull`]). `None` (default)
     /// keeps the queue unbounded; `serving::latency_derived_depth` gives a
-    /// budget-derived bound.
+    /// budget-derived bound (`latency_derived_depth_batched` under a
+    /// coalescing policy, which charges the co-batched rows' service time
+    /// against the budget).
     pub max_queue: Option<usize>,
     /// Which placement policy plans each admitted instance graph
     /// (`coordinator::placement`): [`PlacementKind::MinId`] (default) keeps
@@ -267,16 +269,29 @@ where
     /// The instance graph after the configured placement pass: the planned
     /// graph plus dispatch priorities (`None` under the identity `MinId`,
     /// which skips planning entirely). Heft/Lookahead plan against the
-    /// V100/25 GbE cost model over this runtime's device count — the same
-    /// model the virtual-time scorer uses, so live and simulated serving
-    /// share one placement decision per (policy, batch) pair.
-    fn planned_instance(&self, batch: usize) -> Result<(TaskGraph, Option<Vec<f64>>)> {
+    /// V100/25 GbE cost model over this runtime's device count, seeded with
+    /// `busy` — the session's live per-device busy horizon
+    /// (`ExecSession::device_occupancy`) at admission time — so a new
+    /// instance is steered away from devices the in-flight instances have
+    /// already saturated instead of being planned against an empty cluster.
+    /// Outputs stay bit-identical either way: occupancy shifts the planner's
+    /// EFT model, never the graph's hazard edges.
+    fn planned_instance(
+        &self,
+        batch: usize,
+        busy: &[f64],
+    ) -> Result<(TaskGraph, Option<Vec<f64>>)> {
         let graph = self.instance_graph(batch);
         if self.cfg.placement == PlacementKind::MinId {
             return Ok((graph, None));
         }
         let cluster = ClusterModel::tx_gaia(self.partition.n_devices());
-        let p = placement::plan(self.cfg.placement.build().as_ref(), &graph, &cluster)?;
+        let p = placement::plan_with_occupancy(
+            self.cfg.placement.build().as_ref(),
+            &graph,
+            &cluster,
+            busy,
+        )?;
         Ok((p.graph, Some(p.priority)))
     }
 
@@ -297,9 +312,13 @@ where
         let mut waiting: Vec<InferRequest> = Vec::new();
         let mut records: Vec<RequestRecord> = Vec::new();
         let mut sheds: Vec<ShedRecord> = Vec::new();
-        // EDF's shedding estimate: EWMA of observed per-instance service
-        // times (admit → last retirement); 0 until the first completion, so
-        // the policy never speculates off nothing
+        // EDF's shedding estimate: EWMA of observed PER-ROW service times
+        // (admit → last retirement, divided by the instance's coalesced
+        // leading dimension); 0 until the first completion, so the policy
+        // never speculates off nothing. The PolicyCtx scales it back up by
+        // the policy's coalesce width, so a width-B batching policy sheds
+        // against the latency of the B-row instances it actually launches
+        // rather than a raw mix of whatever widths happened to retire
         let mut svc_est_s = 0.0f64;
         loop {
             // 1. intake: arrived requests enter the waiting room; a full
@@ -335,7 +354,7 @@ where
                 let ctx = PolicyCtx {
                     now: self.pool.now(),
                     free_slots: self.cfg.max_inflight.saturating_sub(active.len()),
-                    service_estimate_s: svc_est_s,
+                    service_estimate_s: svc_est_s * policy.coalesce_width().max(1) as f64,
                 };
                 let d = policy.decide(&view, &ctx);
                 if !d.acted() {
@@ -367,7 +386,8 @@ where
                 let joint = Tensor::concat_batch(&parts)?;
                 let rows = joint.dims()[0];
                 let u0 = self.exec.opening(&joint)?;
-                let (graph, pri) = self.planned_instance(rows)?;
+                let busy = session.device_occupancy(self.partition.n_devices());
+                let (graph, pri) = self.planned_instance(rows, &busy)?;
                 let inst = match &pri {
                     Some(p) => session.admit_prioritized(graph, &u0, p)?,
                     None => session.admit(graph, &u0)?,
@@ -391,10 +411,15 @@ where
                     .ok_or_else(|| anyhow!("finished instance {inst} has no completion time"))?;
                 let batched = session.final_state(inst)?;
                 session.release_instance(inst)?;
+                // normalize the observation by the instance's coalesced
+                // width: a 4-row batched instance taking 4t must not teach
+                // the EWMA that a 1-row instance takes 4t
+                let inst_rows = (*batched.dims().first().unwrap_or(&1)).max(1) as f64;
+                let obs_per_row = (complete_s - pending.admit_s) / inst_rows;
                 svc_est_s = if svc_est_s == 0.0 {
-                    complete_s - pending.admit_s
+                    obs_per_row
                 } else {
-                    0.5 * svc_est_s + 0.5 * (complete_s - pending.admit_s)
+                    0.5 * svc_est_s + 0.5 * obs_per_row
                 };
                 let mut row = 0usize;
                 for req in pending.reqs {

@@ -240,8 +240,10 @@ pub struct PolicyServeOutcome {
 
 /// Deterministic service-time estimate the sim hands EDF for shedding: the
 /// virtual makespan of ONE batch-1 instance graph running alone on the
-/// cluster (seconds). The live runtime learns the same quantity from
-/// observed completions instead.
+/// cluster (seconds) — a **per-row** figure, like the live runtime's
+/// per-row EWMA. Both drivers scale it by the policy's
+/// [`SchedulerPolicy::coalesce_width`] when building the `PolicyCtx`, so a
+/// coalescing policy is judged against the instances it actually launches.
 pub fn service_estimate_s(
     spec: &NetSpec,
     hier: &Hierarchy,
@@ -332,7 +334,7 @@ pub fn simulate_serving_policy(
             let ctx = PolicyCtx {
                 now: session.now(),
                 free_slots: cfg.max_inflight.saturating_sub(active.len()),
-                service_estimate_s: svc,
+                service_estimate_s: svc * policy.coalesce_width().max(1) as f64,
             };
             let d = policy.decide(&view, &ctx);
             if !d.acted() {

@@ -42,7 +42,8 @@ use std::sync::Arc;
 use anyhow::bail;
 
 use crate::coordinator::PlacementKind;
-use crate::data::Dataset;
+use crate::data::{Dataset, StepSampler};
+use crate::mgrit::taskgraph::PipeSync;
 use crate::mgrit::{self, Granularity, Hierarchy, MgritOptions};
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
@@ -401,6 +402,84 @@ pub fn train_parallel(
     Ok(logs)
 }
 
+/// Cross-step **pipelined** layer-parallel SGD: consecutive training steps
+/// are composed into windows of `k_steps` and each window executes as ONE
+/// graph through [`crate::coordinator::ParallelMgrit::train_pipeline`] —
+/// step t + 1's forward V-cycles overlap step t's adjoint/reduction tail,
+/// reading whatever parameter snapshot `sync` allows (bounded staleness S,
+/// or a full cross-step barrier). With `PipeSync::Staleness(0)` every window
+/// is bit-identical to `k_steps` sequential
+/// [`crate::coordinator::ParallelMgrit::train_step_micro`] calls over the
+/// same per-step batches.
+///
+/// Batch selection uses [`StepSampler`]: step t's batch is a pure function
+/// of `(cfg.seed, t)`, so runs with different `micro_batches`, `k_steps`, or
+/// staleness consume identical data — unlike [`train_parallel`], whose
+/// single-stream draw is only stable for a fixed step sequence.
+///
+/// The pipelined path never materializes a per-step global gradient, so each
+/// returned [`StepLog`] carries `grad_norm = NaN`.
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_pipelined(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    k_steps: usize,
+    sync: PipeSync,
+) -> Result<Vec<StepLog>> {
+    if data.is_empty() {
+        bail!("empty dataset");
+    }
+    let Method::Mgrit { cycles } = cfg.method else {
+        bail!("train_parallel_pipelined requires Method::Mgrit");
+    };
+    if k_steps == 0 {
+        bail!("need at least one pipeline step");
+    }
+    if micro_batches == 0 || cfg.batch % micro_batches != 0 {
+        bail!(
+            "batch {} does not divide into {micro_batches} micro-batches",
+            cfg.batch
+        );
+    }
+    let hier = training_hierarchy(spec)?;
+    let opts = MgritOptions::early_stopping(cycles);
+    let sampler = StepSampler::new(cfg.seed);
+    let mut logs = Vec::with_capacity(cfg.steps);
+    let mut step = 0usize;
+    while step < cfg.steps {
+        let k = k_steps.min(cfg.steps - step);
+        let (y, labels) = sampler.superbatch(data, step, k, cfg.batch)?;
+        // workers hold immutable snapshots of the window's base parameters;
+        // inside the window the snapshot ring carries every update
+        let spec2 = spec.clone();
+        let snap = Arc::new(params.clone());
+        let factory =
+            move |_w: usize| crate::solver::host::HostSolver::new(spec2.clone(), snap.clone());
+        let mut drv = crate::coordinator::ParallelMgrit::new(
+            factory,
+            spec.clone(),
+            hier.clone(),
+            n_devices,
+            k * cfg.batch,
+        )?;
+        drv.set_granularity(granularity);
+        drv.set_placement(placement);
+        let out = drv.train_pipeline(&y, &labels, &opts, cfg.lr, micro_batches, k, sync)?;
+        *params = out.params;
+        for (i, loss) in out.losses.iter().enumerate() {
+            logs.push(StepLog { step: step + i, loss: *loss, grad_norm: f64::NAN });
+        }
+        step += k;
+    }
+    Ok(logs)
+}
+
 /// One-line speed/parity report: runs a single training step both ways (the
 /// serial MG step and the parallel whole-step graph) on one batch from
 /// `data` and reports timings plus the largest relative error across every
@@ -664,6 +743,116 @@ mod tests {
         }
         assert!(p_serial.w_fc.data() == p_par.w_fc.data());
         assert!(p_serial.w_open.data() == p_par.w_open.data());
+    }
+
+    #[test]
+    fn pipelined_s0_training_matches_sequential_step_loop() {
+        // multilevel-hierarchy parity: the windowed pipelined loop at
+        // staleness 0 reproduces the sequential micro-batched loop over the
+        // same StepSampler batches — losses and final parameters bitwise
+        let spec = tiny_spec();
+        let ds = SyntheticDigits::new(83).dataset(40);
+        let cfg = TrainConfig {
+            steps: 4,
+            batch: 4,
+            lr: 0.05,
+            method: Method::Mgrit { cycles: 2 },
+            seed: 5,
+        };
+        let hier = training_hierarchy(&spec).unwrap();
+        let opts = MgritOptions::early_stopping(2);
+        let sampler = StepSampler::new(cfg.seed);
+        for (n_devices, micro) in [(1usize, 1usize), (2, 1), (2, 2)] {
+            let mut p_seq = NetParams::init(&spec, 84).unwrap();
+            let mut losses = Vec::new();
+            for t in 0..cfg.steps {
+                let (y, labels) = sampler.step_batch(&ds, t, cfg.batch).unwrap();
+                let spec2 = spec.clone();
+                let snap = Arc::new(p_seq.clone());
+                let factory =
+                    move |_w: usize| HostSolver::new(spec2.clone(), snap.clone());
+                let drv = crate::coordinator::ParallelMgrit::new(
+                    factory,
+                    spec.clone(),
+                    hier.clone(),
+                    n_devices,
+                    cfg.batch,
+                )
+                .unwrap();
+                let out = drv.train_step_micro(&y, &labels, &opts, cfg.lr, micro).unwrap();
+                p_seq = out.params;
+                losses.push(out.loss);
+            }
+            let mut p_pipe = NetParams::init(&spec, 84).unwrap();
+            let logs = train_parallel_pipelined(
+                &spec,
+                &mut p_pipe,
+                &ds,
+                &cfg,
+                n_devices,
+                Granularity::PerStep,
+                micro,
+                PlacementKind::MinId,
+                2,
+                PipeSync::Staleness(0),
+            )
+            .unwrap();
+            let got: Vec<f64> = logs.iter().map(|l| l.loss).collect();
+            assert_eq!(got, losses, "dev {n_devices} micro {micro}: losses differ");
+            for ((w, b), (w2, b2)) in p_seq.trunk.iter().zip(&p_pipe.trunk) {
+                assert!(
+                    w.data() == w2.data() && b.data() == b2.data(),
+                    "dev {n_devices} micro {micro}: trunk differs"
+                );
+            }
+            assert!(p_seq.w_open.data() == p_pipe.w_open.data());
+            assert!(p_seq.b_open.data() == p_pipe.b_open.data());
+            assert!(p_seq.w_fc.data() == p_pipe.w_fc.data());
+            assert!(p_seq.b_fc.data() == p_pipe.b_fc.data());
+        }
+    }
+
+    #[test]
+    fn pipelined_stale_training_stays_finite_and_diverges_from_sync() {
+        // S = 1 legitimately changes which snapshot later steps read, so the
+        // trajectory departs from S = 0 inside a window — but remains a
+        // finite, working SGD run on identical data
+        let spec = tiny_spec();
+        let ds = SyntheticDigits::new(85).dataset(40);
+        let cfg = TrainConfig {
+            steps: 4,
+            batch: 4,
+            lr: 0.05,
+            method: Method::Mgrit { cycles: 2 },
+            seed: 6,
+        };
+        let run = |sync| {
+            let mut p = NetParams::init(&spec, 86).unwrap();
+            let logs = train_parallel_pipelined(
+                &spec,
+                &mut p,
+                &ds,
+                &cfg,
+                2,
+                Granularity::PerStep,
+                1,
+                PlacementKind::MinId,
+                4,
+                sync,
+            )
+            .unwrap();
+            (logs, p)
+        };
+        let (l0, _) = run(PipeSync::Staleness(0));
+        let (l1, p1) = run(PipeSync::Staleness(1));
+        assert_eq!(l1.len(), 4);
+        assert!(l1.iter().all(|l| l.loss.is_finite() && l.grad_norm.is_nan()));
+        // step 0 reads version 0 under both policies — identical data,
+        // identical snapshot, identical loss
+        assert_eq!(l0[0].loss, l1[0].loss);
+        // some later step must have read a stale snapshot
+        assert!(l0.iter().zip(&l1).any(|(a, b)| a.loss != b.loss));
+        assert!(p1.w_fc.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -81,10 +81,14 @@ impl Rng {
     /// seed, so `(seed, 0)`, `(seed, 1)`, … are unrelated streams and
     /// `(seed, k)` never collides with `(seed + k, 0)`-style reseeding.
     ///
-    /// Batch *selection* deliberately does NOT use this: the training loops
-    /// draw each step's batch from `Rng::new(seed)` regardless of the
-    /// micro-batch count, so M = 1 and M > 1 runs consume identical data
-    /// (DESIGN.md §5b). Instance streams are for instance-local noise only.
+    /// The *sequential* training loops deliberately do NOT use this for
+    /// batch selection: they draw every step's batch from one mutable
+    /// `Rng::new(seed)` stream, so M = 1 and M > 1 runs consume identical
+    /// data (DESIGN.md §5b). The *pipelined* path instead keys each step's
+    /// shuffle/augmentation on `for_instance(seed, step)` through
+    /// `data::StepSampler` — step t's data is a pure function of
+    /// `(seed, t)`, reproducible across micro-batch count M, staleness S,
+    /// and window size K (DESIGN.md §7).
     pub fn for_instance(seed: u64, instance: u64) -> Rng {
         let mut z = instance.wrapping_add(0x9e3779b97f4a7c15);
         z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
