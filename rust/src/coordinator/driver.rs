@@ -23,7 +23,7 @@ use super::placement::{self, PlacementKind};
 use super::streams::StreamPool;
 use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
-use crate::mgrit::taskgraph::{self, Granularity, PipeSync, TaskGraph};
+use crate::mgrit::taskgraph::{self, Collective, Granularity, PipeSync, ReduceStep, TaskGraph};
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
 use crate::perfmodel::ClusterModel;
@@ -145,6 +145,13 @@ pub struct ParallelMgrit<F: SolverFactory> {
     /// the `perfmodel` cluster costs and execute the rewritten graph under
     /// its dispatch priorities. Bit-identical outputs either way.
     placement: PlacementKind,
+    /// The micro-batch gradient collective (see
+    /// [`taskgraph::Collective`]). `Tree` — the default — is the balanced
+    /// pairwise plan, bit-for-bit the pre-topology behavior; `Ring` and
+    /// `TwoPhase` change the `(src, dst)` endpoints of the reduction's
+    /// transfers (two-phase reduces inside each node first, crossing the
+    /// inter-node fabric once per remote node).
+    collective: Collective,
 }
 
 impl<F: SolverFactory> ParallelMgrit<F> {
@@ -189,6 +196,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             granularity: Granularity::PerStep,
             n_groups,
             placement: PlacementKind::MinId,
+            collective: Collective::Tree,
         })
     }
 
@@ -232,10 +240,44 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         self.placement
     }
 
+    /// Select the micro-batch gradient collective. `Tree` (the default)
+    /// keeps the balanced pairwise plan; every choice stays bit-identical to
+    /// the serial reference executing the same plan — only the transfer
+    /// endpoints and the sum's association order move.
+    pub fn set_collective(&mut self, c: Collective) {
+        self.collective = c;
+    }
+
+    /// The configured gradient collective.
+    pub fn collective(&self) -> Collective {
+        self.collective
+    }
+
+    /// Device groups (each one modeled cluster node when > 1).
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    /// The reduction plan the configured collective emits for `m` instances,
+    /// with instance k hosted on node `k mod n_groups` (the round-robin
+    /// [`InstanceGroups`] spread). Shared by the graph builders and the
+    /// host-side epilogue so both reduce with the identical plan.
+    fn reduce_plan_for(&self, m: usize) -> Vec<ReduceStep> {
+        let node_of: Vec<usize> = (0..m).map(|k| k % self.n_groups).collect();
+        taskgraph::collective_plan(self.collective, m, &node_of)
+    }
+
     /// The cluster cost model the planning pass prices against — one
-    /// modeled device per pool worker.
+    /// modeled device per pool worker. With more than one device group the
+    /// groups are promoted to **nodes**: PCIe inside a group, the 25G
+    /// fabric between groups; a single group keeps the legacy flat pricing
+    /// bit-for-bit.
     fn cluster(&self) -> ClusterModel {
-        ClusterModel::tx_gaia(self.partition.n_devices() * self.n_groups)
+        if self.n_groups > 1 {
+            ClusterModel::tx_gaia_nodes(self.n_groups, self.partition.n_devices())
+        } else {
+            ClusterModel::tx_gaia(self.partition.n_devices())
+        }
     }
 
     /// Run `graph` through the configured placement policy: `MinId` is the
@@ -290,7 +332,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         micro_batches: usize,
     ) -> Result<taskgraph::TaskGraph> {
         let groups = InstanceGroups::new(self.n_groups, self.partition.n_devices())?;
-        taskgraph::mg_train_step_multi(
+        taskgraph::mg_train_step_multi_plan(
             &self.spec,
             &self.hier,
             &self.partition,
@@ -300,6 +342,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             opts.relax,
             self.granularity,
             micro_batches,
+            &self.reduce_plan_for(micro_batches),
         )
     }
 
@@ -315,7 +358,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         sync: PipeSync,
     ) -> Result<taskgraph::TaskGraph> {
         let groups = InstanceGroups::new(self.n_groups, self.partition.n_devices())?;
-        taskgraph::mg_train_pipeline(
+        taskgraph::mg_train_pipeline_plan(
             &self.spec,
             &self.hier,
             &self.partition,
@@ -327,6 +370,7 @@ impl<F: SolverFactory> ParallelMgrit<F> {
             micro_batches,
             k_steps,
             sync,
+            &self.reduce_plan_for(micro_batches),
         )
     }
 }
@@ -528,8 +572,9 @@ where
             open_leaves.push((dw, db));
             fc_leaves.push((inst.dw_fc.clone(), inst.db_fc.clone()));
         }
-        let (w_open_g, b_open_g) = crate::train::reduce_micro_grads(&open_leaves)?;
-        let (w_fc_g, b_fc_g) = crate::train::reduce_micro_grads(&fc_leaves)?;
+        let plan = self.reduce_plan_for(m);
+        let (w_open_g, b_open_g) = crate::train::reduce_micro_grads_plan(&plan, &open_leaves)?;
+        let (w_fc_g, b_fc_g) = crate::train::reduce_micro_grads_plan(&plan, &fc_leaves)?;
         let grads = NetGrads {
             w_open: w_open_g,
             b_open: b_open_g,

@@ -325,6 +325,12 @@ pub struct PipelineOutputs {
     /// computed with the identical summation order as the sequential
     /// reference (`Σₖ lossₖ / M`, instance order).
     pub losses: Vec<f64>,
+    /// Per-step global norm of the reduced (micro-batch mean) gradient over
+    /// every parameter slot — trunk layers, opening, head — harvested from
+    /// the step's `ReduceGrad` roots (the lone instance's gradients when
+    /// M = 1). Same quantity `train_parallel` reports via
+    /// `NetGrads::global_norm`, so pipelined step logs are comparable.
+    pub grad_norms: Vec<f64>,
     /// The final parameters: ring version K.
     pub params: NetParams,
     /// The snapshot ring's live-depth high-water mark (≤ S + 2).
@@ -715,16 +721,47 @@ impl MultiExecState {
         })?;
         let (k, m, n_layers) = (pipe.k_steps, pipe.micro, pipe.n_layers);
         let mut losses = vec![0.0f64; k];
+        let mut grad_sq = vec![0.0f64; k];
+        let sq = |t: &Tensor| {
+            let n = t.l2_norm();
+            n * n
+        };
         for (gi, inst) in self.insts.into_iter().enumerate() {
             let train =
                 inst.train.ok_or_else(|| anyhow!("instance {gi}: missing training state"))?;
-            let head =
-                train.head.ok_or_else(|| anyhow!("instance {gi}: head task never retired"))?;
+            let head = train
+                .head
+                .as_ref()
+                .ok_or_else(|| anyhow!("instance {gi}: head task never retired"))?;
             losses[gi / m] += head.loss;
+            if m == 1 {
+                // no ReduceGrad tasks: the lone instance's gradients ARE the
+                // reduced set (trunk + opening slots here, head in HeadOut)
+                let acc = &mut grad_sq[gi];
+                for slot in 0..=n_layers {
+                    let (dw, db) = train.grads.get(slot).ok_or_else(|| {
+                        anyhow!("instance {gi}: gradient slot {slot} never filled")
+                    })?;
+                    *acc += sq(dw) + sq(db);
+                }
+                *acc += sq(&head.dw_fc) + sq(&head.db_fc);
+            }
         }
         for l in &mut losses {
             *l /= m as f64;
         }
+        if m > 1 {
+            for (step, slots) in pipe.reduced.iter().enumerate() {
+                let acc = &mut grad_sq[step];
+                for (slot, pair) in slots.iter().enumerate() {
+                    let (dw, db) = pair.as_ref().ok_or_else(|| {
+                        anyhow!("step {step}: reduced gradient slot {slot} never filled")
+                    })?;
+                    *acc += sq(dw) + sq(db);
+                }
+            }
+        }
+        let grad_norms: Vec<f64> = grad_sq.iter().map(|s| s.sqrt()).collect();
         let mut trunk = Vec::with_capacity(n_layers);
         for slot in 0..n_layers {
             let (w, b) = pipe.ring.get(k, slot)?;
@@ -734,6 +771,7 @@ impl MultiExecState {
         let (w_fc, b_fc) = pipe.ring.get(k, n_layers + 1)?;
         Ok(PipelineOutputs {
             losses,
+            grad_norms,
             params: NetParams {
                 w_open: (*w_open).clone(),
                 b_open: (*b_open).clone(),

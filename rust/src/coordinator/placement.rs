@@ -77,7 +77,10 @@ impl GraphCosts {
                 TaskKind::Kernel { class, flops, .. } => {
                     cluster.device.kernel_time(*class, *flops)
                 }
-                TaskKind::Comm { bytes, .. } => cluster.net.message_time(*bytes),
+                // tier-aware pricing on the graph's own endpoints: an
+                // intra-node hop is cheaper than a fabric hop, so rank_up
+                // and EFT see the topology the simulator will charge
+                TaskKind::Comm { src, dst, bytes } => cluster.message_time(*src, *dst, *bytes),
             };
             for &d in &t.deps {
                 dependents[d].push(t.id);
@@ -137,7 +140,7 @@ impl PlaceCtx<'_> {
             if let TaskKind::Comm { bytes, .. } = &self.graph.tasks[dep].kind {
                 if let Some(p) = comm_producer(self.graph, dep) {
                     if self.placed[p] && self.device[p] != d {
-                        f += self.cluster.net.message_time(*bytes);
+                        f += self.cluster.message_time(self.device[p], d, *bytes);
                     }
                 }
             }
@@ -285,7 +288,7 @@ impl Lookahead {
                 let f = if via_task {
                     let xfer = match &ctx.graph.tasks[dep].kind {
                         TaskKind::Comm { bytes, .. } if e != d => {
-                            ctx.cluster.net.message_time(*bytes)
+                            ctx.cluster.message_time(d, e, *bytes)
                         }
                         _ => 0.0,
                     };

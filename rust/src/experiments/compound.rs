@@ -25,7 +25,7 @@ fn allreduce_s(cluster: &ClusterModel, r: usize, bytes: f64) -> f64 {
     if r <= 1 {
         return 0.0;
     }
-    let n = &cluster.net;
+    let n = cluster.fabric();
     2.0 * (r as f64 - 1.0) / r as f64 * bytes / n.bandwidth_bps
         + 2.0 * (r as f64 - 1.0) * n.latency_s
 }
@@ -91,9 +91,9 @@ mod tests {
         let c = ClusterModel::tx_gaia(64);
         let t8 = allreduce_s(&c, 8, 1e9);
         let t64 = allreduce_s(&c, 64, 1e9);
-        let wire = 2.0 * 1e9 / c.net.bandwidth_bps;
-        assert!(t8 < wire + 8.0 * 2.0 * c.net.latency_s);
-        assert!(t64 < wire + 64.0 * 2.0 * c.net.latency_s);
+        let wire = 2.0 * 1e9 / c.fabric().bandwidth_bps;
+        assert!(t8 < wire + 8.0 * 2.0 * c.fabric().latency_s);
+        assert!(t64 < wire + 64.0 * 2.0 * c.fabric().latency_s);
     }
 
     #[test]

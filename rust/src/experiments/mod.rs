@@ -14,6 +14,7 @@ pub mod perf;
 pub mod pipeline;
 pub mod placement;
 pub mod serve;
+pub mod topology;
 
 use crate::util::json::Json;
 

@@ -1,6 +1,7 @@
 //! `cargo bench`-free perf snapshots: the `mgrit bench` subcommand calls
 //! these to emit the machine-readable `BENCH_hotpath.json` /
-//! `BENCH_fig6bc.json` / `BENCH_placement.json` perf-trajectory records
+//! `BENCH_fig6bc.json` / `BENCH_placement.json` / `BENCH_pipeline.json` /
+//! `BENCH_topology.json` perf-trajectory records
 //! (median ns + iteration count per benchmark, tagged with the git
 //! revision) into a chosen directory — the repo root in CI, so the perf
 //! trajectory stays diffable across PRs without a bench runner.
@@ -227,6 +228,53 @@ pub fn emit_pipeline(out_dir: &Path) -> Result<PathBuf> {
     Ok(out_dir.join("BENCH_pipeline.json"))
 }
 
+/// Emit `BENCH_topology.json` into `out_dir`: the topology-aware collective
+/// perf record — the node-count × collective sweep (makespan, cross-node
+/// bytes, utilization) as a table, plus two tracked hot paths: generating
+/// the hierarchical two-phase plan at M = 16 over 8 nodes, and composing +
+/// simulating the two-node training-step graph it schedules.
+pub fn emit_topology(out_dir: &Path) -> Result<PathBuf> {
+    use crate::mgrit::taskgraph::{self, collective_plan, Collective, Granularity};
+
+    let mut suite = Suite::new_quick("topology");
+    suite.set_record_dir(out_dir);
+
+    let t = super::topology::sweep(32, 2, &[1, 2, 4, 8])?;
+    suite.table("collective_rows", t.to_json_rows());
+
+    let node_of16: Vec<usize> = (0..16).map(|k| k % 8).collect();
+    suite.bench("collective_plan_two_phase_m16_8nodes", || {
+        black_box(collective_plan(Collective::TwoPhase, 16, &node_of16));
+    });
+
+    let spec = NetSpec::fig6_depth(32);
+    let hier = Hierarchy::two_level(32, spec.h(), 4)?;
+    let n_blocks = hier.fine().blocks(4).len();
+    let part = crate::coordinator::Partition::contiguous(n_blocks, 2)?;
+    let groups = crate::coordinator::InstanceGroups::new(2, 2)?;
+    let cluster = ClusterModel::tx_gaia_nodes(2, 2);
+    let node_of4: Vec<usize> = (0..4).map(|k| k % 2).collect();
+    let plan = collective_plan(Collective::TwoPhase, 4, &node_of4);
+    suite.bench("sim_train_step_two_phase_m4_2x2", || {
+        let g = taskgraph::mg_train_step_multi_plan(
+            &spec,
+            &hier,
+            &part,
+            &groups,
+            1,
+            2,
+            crate::mgrit::fas::RelaxKind::FCF,
+            Granularity::PerStep,
+            4,
+            &plan,
+        )
+        .unwrap();
+        black_box(crate::sim::simulate(&g, &cluster, false).unwrap());
+    });
+    suite.finish();
+    Ok(out_dir.join("BENCH_topology.json"))
+}
+
 /// How much a median must grow over the previous record before the delta
 /// step flags it (10% — below that, quick-iteration noise dominates).
 pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
@@ -435,6 +483,17 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(text.trim()).unwrap();
         assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "pipeline");
+        assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn emit_topology_writes_record() {
+        let dir = std::path::Path::new("target/perf-topology-selftest");
+        let path = emit_topology(dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "topology");
         assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
         let _ = std::fs::remove_dir_all(dir);
     }

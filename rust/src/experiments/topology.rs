@@ -1,0 +1,158 @@
+//! Topology-aware collectives: gradient-reduction plans scored across node
+//! counts (DESIGN.md §6d).
+//!
+//! One table: for each node count the three [`Collective`] plans run the same
+//! hybrid training-step graph (`taskgraph::mg_train_step_multi_plan`, M = 2
+//! micro-batch instances per node, round-robined) on the tiered virtual
+//! cluster (`ClusterModel::tx_gaia_nodes`: PCIe inside a node, 25 GbE
+//! between nodes). Columns report the simulated makespan, the bytes that
+//! crossed the node boundary, the intra-/inter-tier transfer seconds, and
+//! device utilization. This is the acceptance-criterion table — at ≥ 2 nodes
+//! the hierarchical two-phase plan strictly beats the flat pairwise tree on
+//! both cross-node bytes and makespan.
+
+use crate::coordinator::{InstanceGroups, Partition};
+use crate::mgrit::fas::RelaxKind;
+use crate::mgrit::hierarchy::Hierarchy;
+use crate::mgrit::taskgraph::{self, collective_plan, Collective, Granularity};
+use crate::model::NetSpec;
+use crate::perfmodel::ClusterModel;
+use crate::sim;
+use crate::util::json::{num, s};
+use crate::Result;
+
+use super::Table;
+
+/// The node counts the full sweep covers.
+pub const NODE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Simulated collective comparison: one row per (node count, collective).
+///
+/// Each row round-robins M = 2·nodes micro-batch instances over `nodes`
+/// instance groups of `devices_per_node` devices, builds the training-step
+/// graph under the named reduction plan, and prices it on the two-tier
+/// cluster. `cross_node_mb` counts only transfers whose endpoints live on
+/// different nodes; co-located reduces are free and do not appear in either
+/// tier column.
+pub fn sweep(
+    depth: usize,
+    devices_per_node: usize,
+    node_counts: &[usize],
+) -> Result<Table> {
+    let spec = NetSpec::fig6_depth(depth);
+    let hier = Hierarchy::two_level(depth, spec.h(), 4)?;
+    let n_blocks = hier.fine().blocks(4).len();
+    let mut t = Table::new(
+        &format!(
+            "Topology-aware collectives: simulated gradient reduction (depth {depth}, \
+             {devices_per_node} devices/node, 2 micro-batches/node; virtual timeline)"
+        ),
+        &[
+            "nodes",
+            "collective",
+            "micro",
+            "sim_makespan_ms",
+            "cross_node_mb",
+            "comm_inter_ms",
+            "comm_intra_ms",
+            "utilization",
+        ],
+    );
+    for &nodes in node_counts {
+        let part = Partition::contiguous(n_blocks, devices_per_node)?;
+        let groups = InstanceGroups::new(nodes, devices_per_node)?;
+        let cluster = ClusterModel::tx_gaia_nodes(nodes, devices_per_node);
+        let micro = 2 * nodes;
+        let node_of: Vec<usize> = (0..micro).map(|k| k % nodes).collect();
+        for c in Collective::all() {
+            let plan = collective_plan(c, micro, &node_of);
+            let g = taskgraph::mg_train_step_multi_plan(
+                &spec,
+                &hier,
+                &part,
+                &groups,
+                1,
+                2,
+                RelaxKind::FCF,
+                Granularity::PerStep,
+                micro,
+                &plan,
+            )?;
+            let rep = sim::simulate(&g, &cluster, false)?;
+            let n_dev = rep.device_busy_s.len().max(1) as f64;
+            let util = rep.device_busy_s.iter().sum::<f64>() / (n_dev * rep.makespan_s);
+            t.row(vec![
+                num(nodes as f64),
+                s(c.name()),
+                num(micro as f64),
+                num(rep.makespan_s * 1e3),
+                num(rep.cross_node_bytes / 1e6),
+                num(rep.comm_inter_s * 1e3),
+                num(rep.comm_intra_s * 1e3),
+                num(util),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// The sweep with the CLI's default shapes: the full depth and node ladder,
+/// or a two-node quick variant for CI smoke runs.
+pub fn run(quick: bool) -> Result<Vec<Table>> {
+    let (depth, devices_per_node) = if quick { (32, 2) } else { (64, 2) };
+    let node_counts: &[usize] = if quick { &[1, 2] } else { &NODE_COUNTS };
+    Ok(vec![sweep(depth, devices_per_node, node_counts)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(t: &Table, name: &str) -> usize {
+        t.columns.iter().position(|c| c == name).unwrap()
+    }
+
+    #[test]
+    fn two_phase_row_beats_tree_row_at_two_nodes() {
+        // the acceptance criterion, read off the experiment table itself
+        let t = sweep(32, 2, &[1, 2]).unwrap();
+        assert_eq!(t.rows.len(), 2 * Collective::all().len());
+        let nodes_c = col(&t, "nodes");
+        let coll_c = col(&t, "collective");
+        let mk_c = col(&t, "sim_makespan_ms");
+        let mb_c = col(&t, "cross_node_mb");
+        let find = |nodes: f64, name: &str| {
+            t.rows
+                .iter()
+                .find(|r| {
+                    r[nodes_c].as_f64().unwrap() == nodes
+                        && r[coll_c].as_str().unwrap() == name
+                })
+                .unwrap()
+        };
+        // single node: every plan stays inside the box — zero cross-node bytes
+        for c in Collective::all() {
+            let r = find(1.0, c.name());
+            assert_eq!(r[mb_c].as_f64().unwrap(), 0.0, "{} leaked bytes at 1 node", c.name());
+            assert!(r[mk_c].as_f64().unwrap() > 0.0);
+        }
+        // two nodes: two-phase strictly beats the flat tree on both axes
+        let tree = find(2.0, "tree");
+        let two = find(2.0, "two-phase");
+        assert!(tree[mb_c].as_f64().unwrap() > 0.0, "tree must cross at 2 nodes");
+        assert!(
+            two[mb_c].as_f64().unwrap() < tree[mb_c].as_f64().unwrap(),
+            "two-phase must cut cross-node bytes"
+        );
+        assert!(
+            two[mk_c].as_f64().unwrap() < tree[mk_c].as_f64().unwrap(),
+            "two-phase must cut the makespan"
+        );
+        // utilization is a fraction
+        let u_c = col(&t, "utilization");
+        for r in &t.rows {
+            let u = r[u_c].as_f64().unwrap();
+            assert!(u > 0.0 && u <= 1.0 + 1e-12, "utilization {u} out of range");
+        }
+    }
+}

@@ -4,9 +4,9 @@
 //!   forward     MG vs serial forward propagation on real numerics
 //!   train       SGD training (serial | MG layer-parallel | hybrid micro-batched), host or PJRT
 //!   serve       continuous-batching inference serving through the live multi-instance runtime
-//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|pipeline|ablations
+//!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|pipeline|topology|ablations
 //!   sim         one simulated MG/PM run at a given GPU count
-//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json
+//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json / BENCH_topology.json
 //!   artifacts   check the AOT artifact manifest against the rust presets
 //!   help        this text
 
@@ -19,7 +19,7 @@ use resnet_mgrit::coordinator::{ParallelMgrit, PlacementKind};
 use resnet_mgrit::data::mnist;
 use resnet_mgrit::experiments as exp;
 use resnet_mgrit::mgrit::hierarchy::Hierarchy;
-use resnet_mgrit::mgrit::Granularity;
+use resnet_mgrit::mgrit::{Collective, Granularity};
 use resnet_mgrit::model::{NetParams, NetSpec};
 use resnet_mgrit::solver::host::HostSolver;
 use resnet_mgrit::solver::BlockSolver;
@@ -39,6 +39,7 @@ USAGE: mgrit <subcommand> [options]
   train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
               [--parallel N_DEVICES] [--granularity per_step|per_block] [--micro-batches M]
               [--pipeline-steps K] [--staleness S] [--placement min-id|heft|lookahead]
+              [--nodes G] [--collective tree|ring|two-phase]
                 --parallel routes every step through the whole-training-step
                 task graph (ParallelMgrit::train_step, host backend) and
                 prints a one-line speed/parity report vs the serial MG step;
@@ -54,7 +55,15 @@ USAGE: mgrit <subcommand> [options]
                 --placement picks the scheduling & placement policy the
                 graphs dispatch under (default heft — the policy-comparison
                 winner; min-id is the static-partition legacy order; every
-                policy is bit-identical, see `experiment placement`)
+                policy is bit-identical, see `experiment placement`);
+                --nodes G splits the workers into G node-level device
+                groups (micro-batch instances round-robin across nodes;
+                total workers = G x N_DEVICES) and --collective picks the
+                gradient-reduction plan joining them: tree (flat pairwise,
+                default), ring, or two-phase (reduce inside each node,
+                cross the inter-node fabric once — see `experiment
+                topology`); every collective is bit-identical to the
+                serial reference executing the same plan
   serve       --requests N --arrival-rate R --deadline-ms D [--preset P] [--devices D]
               [--cycles C] [--inflight W] [--relax F|FC|FCF] [--granularity per_step|per_block]
               [--policy fifo|edf|shape-batch] [--max-queue Q] [--max-batch B]
@@ -73,18 +82,22 @@ USAGE: mgrit <subcommand> [options]
               against the serial per-request MGRIT reference, and asserts
               >= 2 instances overlapped in flight on the live ExecEvent
               trace whenever the load held two requests co-resident
-  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|placement|pipeline|compound|ablations> [--quick]
+  experiment  <fig1|fig4|fig5|fig6a|fig6b|fig6c|fig6t|fig7|hybrid|serve|placement|pipeline|topology|compound|ablations> [--quick]
               (serve prints the continuous-vs-barrier table AND the
                three-way FIFO/EDF/shape-batch policy comparison;
                placement scores min-id vs HEFT vs lookahead dispatch on
                the training graph and a serving drain;
                pipeline sweeps cross-step sync modes — barrier vs
                staleness 0/1/2 — reporting simulated + live makespan
-               and the loss trajectory at each staleness bound)
+               and the loss trajectory at each staleness bound;
+               topology scores the gradient collectives — flat tree vs
+               ring vs hierarchical two-phase — across node counts on
+               the tiered cluster: makespan, cross-node bytes,
+               utilization)
   sim         --preset P --gpus G [--training] [--cycles C]
   bench       [--out DIR] [--full]   quick perf snapshot; writes
               BENCH_hotpath.json + BENCH_fig6bc.json + BENCH_placement.json
-              + BENCH_pipeline.json into DIR (default .)
+              + BENCH_pipeline.json + BENCH_topology.json into DIR (default .)
   bench-delta --prev DIR [--cur DIR]   diff BENCH_*.json medians against a
               previous run's records; prints GitHub ::warning:: annotations
               for suites regressing > 10% (advisory, exit 0)
@@ -203,6 +216,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     // heft by default: the CLI runs the policy-comparison winner, the
     // library keeps min-id (bit-identical either way)
     let placement = PlacementKind::parse(args.get_or("placement", "heft"))?;
+    let nodes = args.usize_or("nodes", 1)?;
+    let collective = Collective::parse(args.get_or("collective", "tree"))?;
     let method = if args.flag("serial") {
         train::Method::Serial
     } else {
@@ -230,6 +245,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if staleness > 0 && pipeline_steps <= 1 {
         bail!("--staleness only applies with --pipeline-steps K > 1");
     }
+    if nodes == 0 {
+        bail!("--nodes must be at least 1");
+    }
+    if (nodes > 1 || collective != Collective::Tree) && parallel == 0 {
+        bail!("--nodes / --collective require --parallel (the multi-instance graph runtime)");
+    }
     if parallel > 0 {
         // the layer-parallel path: every step is one whole-training-step
         // task graph over `parallel` worker streams (host numerics); with
@@ -247,12 +268,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             // snapshot ring (S = 0 is bit-identical to the sequential loop)
             use resnet_mgrit::mgrit::taskgraph::PipeSync;
             println!(
-                "pipelined training: {parallel} devices, K={pipeline_steps} steps/window, \
-                 staleness {staleness}, granularity {granularity:?}, \
-                 micro-batches {micro_batches}, placement {}",
-                placement.name()
+                "pipelined training: {parallel} devices x {nodes} nodes, \
+                 K={pipeline_steps} steps/window, staleness {staleness}, \
+                 granularity {granularity:?}, micro-batches {micro_batches}, \
+                 placement {}, collective {}",
+                placement.name(),
+                collective.name()
             );
-            let logs = train::train_parallel_pipelined(
+            let logs = train::train_parallel_pipelined_grouped(
                 &spec,
                 &mut params,
                 &data,
@@ -263,11 +286,13 @@ fn cmd_train(args: &Args) -> Result<()> {
                 placement,
                 pipeline_steps,
                 PipeSync::Staleness(staleness),
+                nodes,
+                collective,
             )?;
-            // the pipelined path reduces loss per step but not |g| (the
-            // update happens inside the graph), so only loss is printed
+            // |g| is harvested from each window's ReduceGrad roots — the
+            // same reduced-gradient norm the per-step path reports
             for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
-                println!("  step {:>4}  loss {:.4}", l.step, l.loss);
+                println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
             }
             let exec = HostSolver::new(spec.clone(), Arc::new(params.clone()))?;
             let err = train::top1_error(&spec, &exec, &data, cfg.batch, 8)?;
@@ -275,12 +300,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             return Ok(());
         }
         println!(
-            "parallel training: {parallel} devices, granularity {granularity:?}, \
-             micro-batches {micro_batches}, placement {}",
-            placement.name()
+            "parallel training: {parallel} devices x {nodes} nodes, \
+             granularity {granularity:?}, micro-batches {micro_batches}, \
+             placement {}, collective {}",
+            placement.name(),
+            collective.name()
         );
-        let logs = train::train_parallel(
+        let logs = train::train_parallel_grouped(
             &spec, &mut params, &data, &tc, parallel, granularity, micro_batches, placement,
+            nodes, collective,
         )?;
         for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
             println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
@@ -565,6 +593,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     println!("{}", t.render());
                 }
             }
+            "topology" => {
+                // flat tree vs ring vs hierarchical two-phase gradient
+                // collectives across node counts (tiered virtual cluster)
+                for t in exp::topology::run(quick)? {
+                    println!("{}", t.render());
+                }
+            }
             "fig7" => {
                 let gpus: &[usize] = if quick { &[1, 4, 64] } else { &exp::fig7::GPU_COUNTS };
                 println!("{}", exp::fig7::run(gpus)?.render());
@@ -583,7 +618,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "serve", "placement", "pipeline", "compound", "ablations"] {
+        for name in ["fig1", "fig4", "fig5", "fig6a", "fig6b", "fig6c", "fig6t", "fig7", "hybrid", "serve", "placement", "pipeline", "topology", "compound", "ablations"] {
             run_one(name)?;
         }
         Ok(())
@@ -594,8 +629,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 /// Quick perf snapshot without `cargo bench`: emits the machine-readable
 /// BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json /
-/// BENCH_pipeline.json perf-trajectory records into `--out` (default: the
-/// current directory — the repo root in CI).
+/// BENCH_pipeline.json / BENCH_topology.json perf-trajectory records into
+/// `--out` (default: the current directory — the repo root in CI).
 fn cmd_bench(args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "."));
     if args.flag("full") {
@@ -605,12 +640,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let p2 = exp::perf::emit_fig6bc(&out)?;
     let p3 = exp::perf::emit_placement(&out)?;
     let p4 = exp::perf::emit_pipeline(&out)?;
+    let p5 = exp::perf::emit_topology(&out)?;
     println!(
-        "perf records: {} , {} , {} , {}",
+        "perf records: {} , {} , {} , {} , {}",
         p1.display(),
         p2.display(),
         p3.display(),
-        p4.display()
+        p4.display(),
+        p5.display()
     );
     Ok(())
 }

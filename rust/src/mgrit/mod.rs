@@ -21,4 +21,4 @@ pub mod taskgraph;
 
 pub use fas::{solve_forward, CycleStats, LevelState, MgritOptions, RelaxKind};
 pub use hierarchy::{Hierarchy, Level};
-pub use taskgraph::Granularity;
+pub use taskgraph::{Collective, Granularity};

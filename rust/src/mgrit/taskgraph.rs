@@ -1083,6 +1083,145 @@ pub fn reduce_plan(m: usize) -> Vec<ReduceStep> {
     steps
 }
 
+/// The collective algorithm joining the M micro-batch gradients per layer.
+///
+/// Every algorithm emits a plain `Vec<ReduceStep>` obeying the same shape
+/// contract (see [`collective_plan`]), so the executor, the simulator, and
+/// the serial bit-identity reference `train::reduce_micro_grads_plan` all
+/// consume any plan unchanged — the choice only moves `(src, dst)` endpoints
+/// and the association order of the floating-point sum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Collective {
+    /// Balanced pairwise tree (the library default — [`reduce_plan`],
+    /// bit-for-bit the pre-topology behavior). Topology-blind: at M
+    /// instances round-robined over G nodes, roughly M·(G−1)/G tree edges
+    /// cross a node boundary.
+    #[default]
+    Tree,
+    /// Sequential ring: the partial sum travels instance 0 → 1 → … → M−1,
+    /// one hop per step. Minimizes concurrent link pressure (one transfer
+    /// in flight per layer) at the price of an M−1-deep critical path.
+    Ring,
+    /// Hierarchical two-phase: balanced pairwise **inside** each node
+    /// (co-located, so every phase-1 transfer is free), then a chain of the
+    /// per-node partials into the lowest node — exactly G−1 inter-node
+    /// hops per layer, the minimum for a single-rooted reduction.
+    TwoPhase,
+}
+
+impl Collective {
+    /// Parse a CLI spelling (`tree` | `ring` | `two-phase`).
+    pub fn parse(s: &str) -> Result<Collective> {
+        match s {
+            "tree" | "flat" | "pairwise" => Ok(Collective::Tree),
+            "ring" => Ok(Collective::Ring),
+            "two-phase" | "two_phase" | "twophase" | "hierarchical" => Ok(Collective::TwoPhase),
+            other => anyhow::bail!("unknown collective {other:?} (tree|ring|two-phase)"),
+        }
+    }
+
+    /// The collective's report/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Tree => "tree",
+            Collective::Ring => "ring",
+            Collective::TwoPhase => "two-phase",
+        }
+    }
+
+    /// Every shipped collective, in inventory order.
+    pub fn all() -> [Collective; 3] {
+        [Collective::Tree, Collective::Ring, Collective::TwoPhase]
+    }
+}
+
+/// The topology-aware reduction plan over `m` instance gradients under
+/// collective `c`, where `node_of[k]` is the cluster node hosting instance
+/// `k` (for the canonical groups≡nodes configuration this is
+/// `InstanceGroups::group_of`). Every plan satisfies the same **shape
+/// contract**, which is what lets the executor's fixed
+/// `vec![None; m - 1]` node-slot arrays and the serial reference execute any
+/// of them unchanged:
+///
+/// - exactly `m − 1` steps (empty for `m ≤ 1`);
+/// - step `i` has `node == i`, and `GradSrc::Node(n)` operands only
+///   reference earlier steps (`n < i`);
+/// - every instance `0..m` appears as an operand exactly once;
+/// - the **last** step (and only it) is marked `root` — the 1/M mean.
+///
+/// The step order is fully deterministic per `(c, m, node_of)`: bit-identity
+/// with the serial reference follows from executing the *same* plan with the
+/// same `model::params` primitives, not from any cross-plan equivalence
+/// (IEEE-754 addition is commutative but not associative, so different
+/// collectives legitimately disagree in the last bits).
+pub fn collective_plan(c: Collective, m: usize, node_of: &[usize]) -> Vec<ReduceStep> {
+    debug_assert!(node_of.len() >= m, "node_of must cover every instance");
+    match c {
+        Collective::Tree => reduce_plan(m),
+        Collective::Ring => {
+            if m <= 1 {
+                return Vec::new();
+            }
+            // the partial sum hops 0 → 1 → … → m−1: step i runs on instance
+            // i+1's device (the lhs) and pulls the running partial to it
+            (0..m - 1)
+                .map(|i| ReduceStep {
+                    lhs: GradSrc::Inst(i + 1),
+                    rhs: if i == 0 { GradSrc::Inst(0) } else { GradSrc::Node(i - 1) },
+                    node: i,
+                    root: i == m - 2,
+                })
+                .collect()
+        }
+        Collective::TwoPhase => {
+            if m <= 1 {
+                return Vec::new();
+            }
+            // phase 1: balanced pairwise inside each node (ascending node
+            // id, instances ascending) — co-located, so these transfers are
+            // free; each node is left holding one partial
+            let mut nodes: Vec<usize> = node_of[..m].to_vec();
+            nodes.sort_unstable();
+            nodes.dedup();
+            let mut steps: Vec<ReduceStep> = Vec::new();
+            let mut next_node = 0usize;
+            let mut partials: Vec<GradSrc> = Vec::with_capacity(nodes.len());
+            for &nd in &nodes {
+                let mut cur: Vec<GradSrc> =
+                    (0..m).filter(|&k| node_of[k] == nd).map(GradSrc::Inst).collect();
+                while cur.len() > 1 {
+                    let mut nxt: Vec<GradSrc> = Vec::with_capacity((cur.len() + 1) / 2);
+                    for pair in cur.chunks(2) {
+                        if let [lhs, rhs] = *pair {
+                            let node = next_node;
+                            next_node += 1;
+                            steps.push(ReduceStep { lhs, rhs, node, root: false });
+                            nxt.push(GradSrc::Node(node));
+                        } else {
+                            nxt.push(pair[0]);
+                        }
+                    }
+                    cur = nxt;
+                }
+                partials.push(cur[0]);
+            }
+            // phase 2: chain the node partials into the lowest node — one
+            // inter-node hop per remote node, G − 1 total
+            let mut acc = partials[0];
+            for &p in &partials[1..] {
+                let node = next_node;
+                next_node += 1;
+                steps.push(ReduceStep { lhs: acc, rhs: p, node, root: false });
+                acc = GradSrc::Node(node);
+            }
+            if let Some(last) = steps.last_mut() {
+                last.root = true;
+            }
+            steps
+        }
+    }
+}
+
 /// Does an `(instance, label, t_start, t_end)` event stream show hybrid
 /// pipelining — instance k+1 **forward** work in flight while instance k
 /// **adjoint/gradient** work runs? A barriered runtime (finish instance k,
@@ -1384,7 +1523,51 @@ pub fn mg_train_step_multi(
     gran: Granularity,
     micro_batches: usize,
 ) -> Result<TaskGraph> {
+    let plan = reduce_plan(micro_batches);
+    mg_train_step_multi_plan(
+        spec,
+        hier,
+        partition,
+        groups,
+        batch,
+        cycles,
+        relax,
+        gran,
+        micro_batches,
+        &plan,
+    )
+}
+
+/// [`mg_train_step_multi`] with an explicit reduction `plan` (any
+/// [`collective_plan`] output) instead of the default balanced pairwise
+/// tree. The plan's [shape contract](collective_plan) is what the builder
+/// relies on: `m − 1` steps, `node == step index`, backwards `Node` refs,
+/// last step `root`. Endpoint placement follows the *runs-where-lhs-lives*
+/// rule — each `ReduceGrad` executes on its left operand's device and the
+/// right operand travels as an explicit `Comm` (elided when co-located) —
+/// so the plan controls (src, dst) endpoints purely through operand
+/// ordering.
+#[allow(clippy::too_many_arguments)]
+pub fn mg_train_step_multi_plan(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    groups: &InstanceGroups,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+    micro_batches: usize,
+    plan: &[ReduceStep],
+) -> Result<TaskGraph> {
     anyhow::ensure!(micro_batches >= 1, "need at least one micro-batch");
+    anyhow::ensure!(
+        plan.len() == micro_batches - 1,
+        "reduction plan has {} steps but {} micro-batches need {}",
+        plan.len(),
+        micro_batches,
+        micro_batches - 1
+    );
     anyhow::ensure!(
         groups.devices_per_group() == partition.n_devices(),
         "instance groups sized for {} devices per group but the partition uses {}",
@@ -1416,15 +1599,14 @@ pub fn mg_train_step_multi(
             GradSrc::Node(n) => node_tasks[n],
         }
     }
-    // the per-layer join: reduction tree + one ParamUpdate
-    let plan = reduce_plan(micro_batches);
+    // the per-layer join: reduction plan + one ParamUpdate
     for layer in 0..n_layers {
         let grad_bytes = layer_cost(spec, layer, batch).param_bytes;
         let elems = grad_bytes / 4.0;
         // (task id, device) of each internal node, indexed by node id
         let mut node_tasks: Vec<(usize, usize)> = Vec::with_capacity(plan.len());
         let mut last: Option<(usize, usize)> = None;
-        for step in &plan {
+        for step in plan {
             let (lhs_id, lhs_dev) = src_of(step.lhs, layer, &grad_ids, &node_tasks, &g);
             let (rhs_id, rhs_dev) = src_of(step.rhs, layer, &grad_ids, &node_tasks, &g);
             // the node runs where its left operand lives; a right operand on
@@ -1612,8 +1794,52 @@ pub fn mg_train_pipeline(
     steps: usize,
     sync: PipeSync,
 ) -> Result<TaskGraph> {
+    let plan = reduce_plan(micro_batches);
+    mg_train_pipeline_plan(
+        spec,
+        hier,
+        partition,
+        groups,
+        batch,
+        cycles,
+        relax,
+        gran,
+        micro_batches,
+        steps,
+        sync,
+        &plan,
+    )
+}
+
+/// [`mg_train_pipeline`] with an explicit per-slot reduction `plan` (any
+/// [`collective_plan`] output) — the same plan joins every parameter slot of
+/// every step, so collective choice composes orthogonally with cross-step
+/// pipelining. Placement follows the *runs-where-lhs-lives* rule described
+/// on [`mg_train_step_multi_plan`].
+#[allow(clippy::too_many_arguments)]
+pub fn mg_train_pipeline_plan(
+    spec: &NetSpec,
+    hier: &Hierarchy,
+    partition: &Partition,
+    groups: &InstanceGroups,
+    batch: usize,
+    cycles: usize,
+    relax: RelaxKind,
+    gran: Granularity,
+    micro_batches: usize,
+    steps: usize,
+    sync: PipeSync,
+    plan: &[ReduceStep],
+) -> Result<TaskGraph> {
     anyhow::ensure!(steps >= 1, "need at least one pipelined step");
     anyhow::ensure!(micro_batches >= 1, "need at least one micro-batch");
+    anyhow::ensure!(
+        plan.len() == micro_batches - 1,
+        "reduction plan has {} steps but {} micro-batches need {}",
+        plan.len(),
+        micro_batches,
+        micro_batches - 1
+    );
     anyhow::ensure!(
         groups.devices_per_group() == partition.n_devices(),
         "instance groups sized for {} devices per group but the partition uses {}",
@@ -1623,7 +1849,6 @@ pub fn mg_train_pipeline(
     let n_layers = hier.fine().n_points - 1;
     let n_slots = n_layers + 2;
     let mut g = TaskGraph::default();
-    let plan = reduce_plan(micro_batches);
     // pu_ids[t][slot] = graph-global id of step t's ParamUpdate for `slot`
     let mut pu_ids: Vec<Vec<usize>> = Vec::with_capacity(steps);
     fn src_of(
@@ -1702,7 +1927,7 @@ pub fn mg_train_pipeline(
             let elems = grad_bytes / 4.0;
             let mut node_tasks: Vec<(usize, usize)> = Vec::with_capacity(plan.len());
             let mut last: Option<(usize, usize)> = None;
-            for step in &plan {
+            for step in plan {
                 let (lhs_id, lhs_dev) = src_of(step.lhs, slot, &grad_ids, &node_tasks, &g);
                 let (rhs_id, rhs_dev) = src_of(step.rhs, slot, &grad_ids, &node_tasks, &g);
                 let dst = lhs_dev;
@@ -2112,6 +2337,125 @@ mod tests {
                 assert_eq!(s.node, i);
             }
         }
+    }
+
+    /// The [`collective_plan`] shape contract every collective must satisfy
+    /// (see its doc): m − 1 steps, node == step index, backwards Node refs,
+    /// every instance exactly once, last-and-only-last step root.
+    fn assert_plan_contract(plan: &[ReduceStep], m: usize, ctx: &str) {
+        assert_eq!(plan.len(), m.saturating_sub(1), "{ctx}");
+        if m <= 1 {
+            return;
+        }
+        assert_eq!(plan.iter().filter(|s| s.root).count(), 1, "{ctx}");
+        assert!(plan.last().unwrap().root, "{ctx}");
+        let mut inst_uses = vec![0usize; m];
+        for (i, s) in plan.iter().enumerate() {
+            assert_eq!(s.node, i, "{ctx}");
+            for src in [s.lhs, s.rhs] {
+                match src {
+                    GradSrc::Inst(k) => inst_uses[k] += 1,
+                    GradSrc::Node(n) => assert!(n < i, "{ctx}: step {i} reads future node {n}"),
+                }
+            }
+        }
+        assert!(inst_uses.iter().all(|&c| c == 1), "{ctx}: {inst_uses:?}");
+    }
+
+    /// The cluster node each step's output lands on under the
+    /// runs-where-lhs-lives placement rule, plus the number of operand
+    /// fetches that cross a node boundary (= inter-node gradient transfers).
+    fn cross_node_hops(plan: &[ReduceStep], node_of: &[usize]) -> usize {
+        let mut out_node: Vec<usize> = Vec::with_capacity(plan.len());
+        let mut hops = 0usize;
+        for s in plan {
+            let node_of_src = |src: GradSrc, out: &[usize]| match src {
+                GradSrc::Inst(k) => node_of[k],
+                GradSrc::Node(n) => out[n],
+            };
+            let dst = node_of_src(s.lhs, &out_node);
+            if node_of_src(s.rhs, &out_node) != dst {
+                hops += 1;
+            }
+            out_node.push(dst);
+        }
+        hops
+    }
+
+    #[test]
+    fn collective_plans_satisfy_contract_at_odd_m() {
+        // satellite: non-power-of-two M across every collective and several
+        // node shapes, plus determinism (two generations are identical)
+        for m in [3usize, 5, 7] {
+            for n_nodes in [1usize, 2, 3] {
+                let node_of: Vec<usize> = (0..m).map(|k| k % n_nodes).collect();
+                for c in Collective::all() {
+                    let ctx = format!("{} m={m} nodes={n_nodes}", c.name());
+                    let plan = collective_plan(c, m, &node_of);
+                    assert_plan_contract(&plan, m, &ctx);
+                    assert_eq!(plan, collective_plan(c, m, &node_of), "{ctx}: nondeterministic");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collective_plan_contract_property() {
+        use crate::util::proptest_lite as pt;
+        pt::check("collective-plan-contract", |rng| {
+            let m = pt::gen_usize(rng, 1, 12);
+            let n_nodes = pt::gen_usize(rng, 1, 4);
+            // arbitrary (not just round-robin) instance→node assignment
+            let node_of: Vec<usize> = (0..m).map(|_| pt::gen_usize(rng, 0, n_nodes - 1)).collect();
+            for c in Collective::all() {
+                let ctx = format!("{} m={m} node_of={node_of:?}", c.name());
+                let plan = collective_plan(c, m, &node_of);
+                assert_plan_contract(&plan, m, &ctx);
+                assert_eq!(plan, collective_plan(c, m, &node_of), "{ctx}: nondeterministic");
+            }
+        });
+    }
+
+    #[test]
+    fn collective_plan_tree_is_reduce_plan_and_flat_two_phase_matches() {
+        for m in 1..=8usize {
+            let flat = vec![0usize; m];
+            assert_eq!(collective_plan(Collective::Tree, m, &flat), reduce_plan(m));
+            // one node ⇒ two-phase degenerates to the same balanced pairwise
+            assert_eq!(collective_plan(Collective::TwoPhase, m, &flat), reduce_plan(m));
+        }
+    }
+
+    #[test]
+    fn two_phase_needs_exactly_one_hop_per_remote_node() {
+        // M=4 round-robin over 2 nodes: the flat tree pairs (0,1) and (2,3)
+        // across nodes (2 hops) while two-phase reduces inside each node
+        // first and crosses once
+        let node_of = [0usize, 1, 0, 1];
+        assert_eq!(cross_node_hops(&collective_plan(Collective::Tree, 4, &node_of), &node_of), 2);
+        assert_eq!(
+            cross_node_hops(&collective_plan(Collective::TwoPhase, 4, &node_of), &node_of),
+            1
+        );
+        // general law: two-phase crosses exactly (#occupied nodes − 1) times
+        for m in [3usize, 5, 7, 8] {
+            for n_nodes in [2usize, 3, 4] {
+                let node_of: Vec<usize> = (0..m).map(|k| k % n_nodes).collect();
+                let occupied = node_of.iter().collect::<std::collections::BTreeSet<_>>().len();
+                let plan = collective_plan(Collective::TwoPhase, m, &node_of);
+                assert_eq!(cross_node_hops(&plan, &node_of), occupied - 1, "m={m} g={n_nodes}");
+            }
+        }
+    }
+
+    #[test]
+    fn collective_parse_names_roundtrip() {
+        for c in Collective::all() {
+            assert_eq!(Collective::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(Collective::parse("hierarchical").unwrap(), Collective::TwoPhase);
+        assert!(Collective::parse("allreduce").is_err());
+        assert_eq!(Collective::default(), Collective::Tree);
     }
 
     #[test]

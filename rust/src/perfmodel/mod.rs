@@ -88,27 +88,156 @@ impl NetworkModel {
         NetworkModel { latency_s: 25e-6, bandwidth_bps: 25e9 / 8.0 }
     }
 
+    /// Intra-node device-to-device staging over PCIe gen3 ×16 (the paper's
+    /// nodes have no NVLink): far lower latency than the host-staged MPI
+    /// fabric and ~4× its per-link bandwidth.
+    pub fn pcie_gen3() -> NetworkModel {
+        NetworkModel { latency_s: 5e-6, bandwidth_bps: 12e9 }
+    }
+
     /// Message service time.
     pub fn message_time(&self, bytes: f64) -> f64 {
         self.latency_s + bytes / self.bandwidth_bps
     }
 }
 
-/// Full cluster description for the simulator.
+/// Which network tier one (src, dst) hop traverses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    /// Both endpoints on the same node (PCIe / shared-memory staging).
+    Intra,
+    /// Endpoints on different nodes (the inter-node fabric).
+    Inter,
+}
+
+/// Devices grouped into nodes, with one [`NetworkModel`] per tier. A hop is
+/// priced by the tier it traverses: the intra-node link when both endpoints
+/// share a node, the inter-node fabric otherwise. The flat (one device per
+/// node) topology reproduces the legacy uniform pricing exactly — every
+/// cross-device hop is an inter-node hop.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// `node_of[d]` = node hosting device d.
+    node_of: Vec<usize>,
+    /// Intra-node link (same-node, cross-device hops).
+    pub intra: NetworkModel,
+    /// Inter-node fabric (cross-node hops).
+    pub inter: NetworkModel,
+}
+
+impl Topology {
+    /// One device per node: every cross-device hop rides `fabric`, so this
+    /// is bit-for-bit the pre-topology flat network (the intra tier is
+    /// present but unreachable).
+    pub fn flat(n_devices: usize, fabric: NetworkModel) -> Topology {
+        Topology { node_of: (0..n_devices).collect(), intra: fabric.clone(), inter: fabric }
+    }
+
+    /// `n_nodes` nodes of `devices_per_node` consecutive devices each:
+    /// device d lives on node `d / devices_per_node`.
+    pub fn nodes(
+        n_nodes: usize,
+        devices_per_node: usize,
+        intra: NetworkModel,
+        inter: NetworkModel,
+    ) -> Topology {
+        let node_of = (0..n_nodes * devices_per_node).map(|d| d / devices_per_node).collect();
+        Topology { node_of, intra, inter }
+    }
+
+    /// Devices in the topology.
+    pub fn n_devices(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Nodes in the topology (1 + the highest node id).
+    pub fn n_nodes(&self) -> usize {
+        self.node_of.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    /// Node hosting device `d`.
+    pub fn node_of(&self, d: usize) -> usize {
+        self.node_of[d]
+    }
+
+    /// Whether two devices share a node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// The tier a src → dst hop traverses (src == dst is intra by
+    /// convention, but such hops are free — see [`Topology::message_time`]).
+    pub fn tier(&self, src: usize, dst: usize) -> LinkTier {
+        if self.same_node(src, dst) {
+            LinkTier::Intra
+        } else {
+            LinkTier::Inter
+        }
+    }
+
+    /// Per-hop message service time: 0 for co-located endpoints (a local
+    /// handoff — the simulator and live executor both treat src == dst
+    /// transfers as free), the owning tier's `message_time` otherwise.
+    pub fn message_time(&self, src: usize, dst: usize, bytes: f64) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        match self.tier(src, dst) {
+            LinkTier::Intra => self.intra.message_time(bytes),
+            LinkTier::Inter => self.inter.message_time(bytes),
+        }
+    }
+}
+
+/// Full cluster description for the simulator. `topo.n_devices()` always
+/// equals `n_devices` (both constructors guarantee it).
 #[derive(Debug, Clone)]
 pub struct ClusterModel {
     /// Devices in the cluster.
     pub n_devices: usize,
     /// Per-device compute model.
     pub device: DeviceModel,
-    /// Interconnect model.
-    pub net: NetworkModel,
+    /// Node grouping + per-tier interconnect models.
+    pub topo: Topology,
 }
 
 impl ClusterModel {
-    /// The paper's testbed at a given GPU count.
+    /// The paper's testbed at a given GPU count: flat topology (one device
+    /// per node — TX-GAIA's GPUs talk through host-staged MPI even within a
+    /// node), so every hop is priced on the 25 GbE fabric.
     pub fn tx_gaia(n_devices: usize) -> ClusterModel {
-        ClusterModel { n_devices, device: DeviceModel::v100(), net: NetworkModel::ethernet_25g() }
+        ClusterModel {
+            n_devices,
+            device: DeviceModel::v100(),
+            topo: Topology::flat(n_devices, NetworkModel::ethernet_25g()),
+        }
+    }
+
+    /// A multi-node variant of the testbed: `n_nodes` nodes of
+    /// `devices_per_node` GPUs, PCIe-staged intra-node transfers, the same
+    /// 25 GbE fabric between nodes.
+    pub fn tx_gaia_nodes(n_nodes: usize, devices_per_node: usize) -> ClusterModel {
+        ClusterModel {
+            n_devices: n_nodes * devices_per_node,
+            device: DeviceModel::v100(),
+            topo: Topology::nodes(
+                n_nodes,
+                devices_per_node,
+                NetworkModel::pcie_gen3(),
+                NetworkModel::ethernet_25g(),
+            ),
+        }
+    }
+
+    /// Tier-aware per-hop pricing (see [`Topology::message_time`]).
+    pub fn message_time(&self, src: usize, dst: usize, bytes: f64) -> f64 {
+        self.topo.message_time(src, dst, bytes)
+    }
+
+    /// The inter-node fabric — the flat-rate model analytic expressions
+    /// (e.g. the data-parallel allreduce closed form) price against.
+    pub fn fabric(&self) -> &NetworkModel {
+        &self.topo.inter
     }
 }
 
@@ -156,6 +285,33 @@ mod tests {
         let c = ClusterModel::tx_gaia(64);
         assert_eq!(c.n_devices, 64);
         assert_eq!(c.device.max_concurrency, 5);
+        // flat topology: one device per node, every hop on the fabric
+        assert_eq!(c.topo.n_devices(), 64);
+        assert_eq!(c.topo.n_nodes(), 64);
+        assert_eq!(c.message_time(0, 1, 1e6), c.fabric().message_time(1e6));
+    }
+
+    #[test]
+    fn topology_tiers_price_per_hop() {
+        let c = ClusterModel::tx_gaia_nodes(2, 4);
+        assert_eq!(c.n_devices, 8);
+        assert_eq!(c.topo.n_devices(), 8);
+        assert_eq!(c.topo.n_nodes(), 2);
+        // consecutive grouping: devices 0..4 on node 0, 4..8 on node 1
+        assert_eq!(c.topo.node_of(3), 0);
+        assert_eq!(c.topo.node_of(4), 1);
+        assert!(c.topo.same_node(1, 3) && !c.topo.same_node(3, 4));
+        assert_eq!(c.topo.tier(0, 2), LinkTier::Intra);
+        assert_eq!(c.topo.tier(2, 6), LinkTier::Inter);
+        // pricing: intra hops ride PCIe, inter hops ride the fabric,
+        // co-located hops are free
+        let bytes = 4.0e6;
+        assert_eq!(c.message_time(0, 2, bytes), NetworkModel::pcie_gen3().message_time(bytes));
+        assert_eq!(c.message_time(2, 6, bytes), NetworkModel::ethernet_25g().message_time(bytes));
+        assert_eq!(c.message_time(5, 5, bytes), 0.0);
+        // the intra link must actually be faster, or the two-phase
+        // collective's phase split buys nothing
+        assert!(c.message_time(0, 2, bytes) < c.message_time(2, 6, bytes));
     }
 
     #[test]
@@ -218,7 +374,7 @@ mod tests {
 
         let kt0 = c.device.kernel_time(KernelClass::Conv, flops0);
         let kt1 = c.device.kernel_time(KernelClass::Gemm, flops1);
-        let mt = c.net.message_time(bytes);
+        let mt = c.message_time(0, 1, bytes);
         let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs();
 
         assert_eq!((rep.n_kernels, rep.n_comms), (2, 1));
@@ -249,5 +405,68 @@ mod tests {
         // instant its predecessor retires
         assert_eq!(comm.t_start, ev(0).t_end);
         assert_eq!(ev(2).t_start, comm.t_end);
+    }
+
+    #[test]
+    fn tiered_model_arithmetic_matches_sim_on_two_node_chain() {
+        // same contract as above, on a known TWO-NODE chain: an intra-node
+        // hop (device 0 → 1, node 0) then an inter-node hop (device 1 → 2,
+        // node 0 → 1). Each simulated transfer must be priced by ITS tier's
+        // message_time, the two-level ledger must split exactly along the
+        // tier boundary, and only the inter hop's bytes count as cross-node
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind};
+        use crate::sim;
+
+        let c = ClusterModel::tx_gaia_nodes(2, 2);
+        let (flops0, bytes_intra, bytes_inter) = (2.0e9, 3.0e6, 5.0e6);
+        let g = TaskGraph {
+            tasks: vec![
+                Task {
+                    id: 0,
+                    instance: 0,
+                    device: 0,
+                    kind: TaskKind::Kernel { label: "k0", class: KernelClass::Conv, flops: flops0 },
+                    deps: vec![],
+                    op: None,
+                },
+                Task {
+                    id: 1,
+                    instance: 0,
+                    device: 1,
+                    kind: TaskKind::Comm { src: 0, dst: 1, bytes: bytes_intra },
+                    deps: vec![0],
+                    op: None,
+                },
+                Task {
+                    id: 2,
+                    instance: 0,
+                    device: 2,
+                    kind: TaskKind::Comm { src: 1, dst: 2, bytes: bytes_inter },
+                    deps: vec![1],
+                    op: None,
+                },
+            ],
+        };
+        let rep = sim::simulate(&g, &c, true).unwrap();
+
+        let kt0 = c.device.kernel_time(KernelClass::Conv, flops0);
+        let mt_intra = c.topo.intra.message_time(bytes_intra);
+        let mt_inter = c.topo.inter.message_time(bytes_inter);
+        assert_eq!(c.message_time(0, 1, bytes_intra), mt_intra);
+        assert_eq!(c.message_time(1, 2, bytes_inter), mt_inter);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs();
+
+        assert_eq!((rep.n_kernels, rep.n_comms), (1, 2));
+        assert!(close(rep.makespan_s, kt0 + mt_intra + mt_inter));
+        // the two-level ledger splits on the tier boundary and still sums
+        // to the legacy total
+        assert_eq!(rep.comm_intra_s, mt_intra);
+        assert_eq!(rep.comm_inter_s, mt_inter);
+        assert_eq!(rep.comm_total_s, mt_intra + mt_inter);
+        assert_eq!(rep.cross_node_bytes, bytes_inter);
+        // per-event agreement on the trace
+        let ev = |id: usize| rep.trace.iter().find(|e| e.task == id).unwrap();
+        assert!(close(ev(1).t_end - ev(1).t_start, mt_intra));
+        assert!(close(ev(2).t_end - ev(2).t_start, mt_inter));
     }
 }

@@ -7,7 +7,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use anyhow::bail;
 
 use crate::mgrit::taskgraph::{TaskGraph, TaskKind};
-use crate::perfmodel::ClusterModel;
+use crate::perfmodel::{ClusterModel, LinkTier};
 use crate::Result;
 
 /// One executed kernel or transfer (virtual-time nvprof line).
@@ -37,8 +37,17 @@ pub struct SimReport {
     pub makespan_s: f64,
     /// Per-device union-of-kernel-intervals (compute-occupied seconds).
     pub device_busy_s: Vec<f64>,
-    /// Sum of transfer durations (seconds of NIC occupancy, one-sided).
+    /// Sum of transfer durations (seconds of NIC occupancy, one-sided) —
+    /// always `comm_intra_s + comm_inter_s`.
     pub comm_total_s: f64,
+    /// Intra-node share of `comm_total_s` (same-node, cross-device hops;
+    /// 0 on a flat one-device-per-node topology).
+    pub comm_intra_s: f64,
+    /// Inter-node share of `comm_total_s` (hops across a node boundary).
+    pub comm_inter_s: f64,
+    /// Bytes moved across node boundaries — the quantity the hierarchical
+    /// two-phase collective exists to cut.
+    pub cross_node_bytes: f64,
     /// Kernel tasks executed.
     pub n_kernels: usize,
     /// Transfers executed.
@@ -100,6 +109,70 @@ struct RunningKernel {
 impl RunningKernel {
     fn done(&self) -> bool {
         self.launch_rem <= 1e-12 && self.compute_rem <= 1e-12
+    }
+}
+
+/// Per-tier NIC occupancy plus the transfer ledger, shared by the batch
+/// engine ([`simulate`]) and the incremental [`SimSession`]: intra-node
+/// transfers occupy per-device intra-link slots, inter-node transfers the
+/// per-device fabric NICs — so same-node traffic no longer serializes
+/// against cross-node traffic touching the same endpoint device.
+#[derive(Debug)]
+struct CommState {
+    /// When each device's intra-node link is next free.
+    intra_free: Vec<f64>,
+    /// When each device's inter-node fabric NIC is next free.
+    inter_free: Vec<f64>,
+    intra_s: f64,
+    inter_s: f64,
+    cross_node_bytes: f64,
+    n_comms: usize,
+}
+
+impl CommState {
+    fn new(n_devices: usize) -> CommState {
+        CommState {
+            intra_free: vec![0.0; n_devices],
+            inter_free: vec![0.0; n_devices],
+            intra_s: 0.0,
+            inter_s: 0.0,
+            cross_node_bytes: 0.0,
+            n_comms: 0,
+        }
+    }
+
+    fn total_s(&self) -> f64 {
+        self.intra_s + self.inter_s
+    }
+
+    /// Price and book one src ≠ dst transfer starting no earlier than `t`
+    /// on its tier's NIC pair; returns (start, end).
+    fn book(
+        &mut self,
+        cluster: &ClusterModel,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        t: f64,
+    ) -> (f64, f64) {
+        let tier = cluster.topo.tier(src, dst);
+        let nic = match tier {
+            LinkTier::Intra => &mut self.intra_free,
+            LinkTier::Inter => &mut self.inter_free,
+        };
+        let start = t.max(nic[src]).max(nic[dst]);
+        let dur = cluster.message_time(src, dst, bytes);
+        nic[src] = start + dur;
+        nic[dst] = start + dur;
+        match tier {
+            LinkTier::Intra => self.intra_s += dur,
+            LinkTier::Inter => {
+                self.inter_s += dur;
+                self.cross_node_bytes += bytes;
+            }
+        }
+        self.n_comms += 1;
+        (start, start + dur)
     }
 }
 
@@ -261,6 +334,9 @@ fn simulate_core(
             makespan_s: 0.0,
             device_busy_s: vec![0.0; cluster.n_devices],
             comm_total_s: 0.0,
+            comm_intra_s: 0.0,
+            comm_inter_s: 0.0,
+            cross_node_bytes: 0.0,
             n_kernels: 0,
             n_comms: 0,
             trace: Vec::new(),
@@ -281,13 +357,11 @@ fn simulate_core(
 
     let max_conc = cluster.device.max_concurrency;
     let mut devices: Vec<Device> = (0..cluster.n_devices).map(|_| Device::new(max_conc)).collect();
-    let mut nic_free = vec![0.0f64; cluster.n_devices];
+    let mut cs = CommState::new(cluster.n_devices);
     // in-flight comms: (t_end, task id)
     let mut comms: Vec<(f64, usize)> = Vec::new();
     let mut trace: Vec<SimTraceEvent> = Vec::new();
-    let mut comm_total_s = 0.0;
     let mut n_kernels = 0usize;
-    let mut n_comms = 0usize;
     let mut done = 0usize;
     let mut now = 0.0f64;
 
@@ -299,11 +373,9 @@ fn simulate_core(
         graph: &TaskGraph,
         cluster: &ClusterModel,
         devices: &mut [Device],
-        nic_free: &mut [f64],
+        cs: &mut CommState,
         comms: &mut Vec<(f64, usize)>,
         trace: &mut Vec<SimTraceEvent>,
-        comm_total_s: &mut f64,
-        n_comms: &mut usize,
         record_trace: bool,
         priority: Option<&[f64]>,
     ) {
@@ -321,13 +393,8 @@ fn simulate_core(
                     comms.push((t, task_id));
                     return;
                 }
-                let start = t.max(nic_free[*src]).max(nic_free[*dst]);
-                let dur = cluster.net.message_time(*bytes);
-                nic_free[*src] = start + dur;
-                nic_free[*dst] = start + dur;
-                comms.push((start + dur, task_id));
-                *comm_total_s += dur;
-                *n_comms += 1;
+                let (start, end) = cs.book(cluster, *src, *dst, *bytes, t);
+                comms.push((end, task_id));
                 if record_trace {
                     trace.push(SimTraceEvent {
                         task: task_id,
@@ -336,7 +403,7 @@ fn simulate_core(
                         label: "comm",
                         is_comm: true,
                         t_start: start,
-                        t_end: start + dur,
+                        t_end: end,
                     });
                 }
             }
@@ -399,8 +466,8 @@ fn simulate_core(
                 held.push((r, t.id));
             } else {
                 dispatch(
-                    t.id, 0.0, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                    &mut trace, &mut comm_total_s, &mut n_comms, record_trace, priority,
+                    t.id, 0.0, graph, cluster, &mut devices, &mut cs, &mut comms,
+                    &mut trace, record_trace, priority,
                 );
             }
         }
@@ -450,8 +517,8 @@ fn simulate_core(
                 if held[i].0 <= now {
                     let (_, task_id) = held.swap_remove(i);
                     dispatch(
-                        task_id, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                        &mut trace, &mut comm_total_s, &mut n_comms, record_trace, priority,
+                        task_id, now, graph, cluster, &mut devices, &mut cs, &mut comms,
+                        &mut trace, record_trace, priority,
                     );
                 } else {
                     i += 1;
@@ -503,8 +570,8 @@ fn simulate_core(
                         held.push((r, dep));
                     } else {
                         dispatch(
-                            dep, now, graph, cluster, &mut devices, &mut nic_free, &mut comms,
-                            &mut trace, &mut comm_total_s, &mut n_comms, record_trace, priority,
+                            dep, now, graph, cluster, &mut devices, &mut cs, &mut comms,
+                            &mut trace, record_trace, priority,
                         );
                     }
                 }
@@ -520,9 +587,12 @@ fn simulate_core(
     Ok(SimReport {
         makespan_s: now,
         device_busy_s,
-        comm_total_s,
+        comm_total_s: cs.total_s(),
+        comm_intra_s: cs.intra_s,
+        comm_inter_s: cs.inter_s,
+        cross_node_bytes: cs.cross_node_bytes,
         n_kernels,
-        n_comms,
+        n_comms: cs.n_comms,
         trace,
     })
 }
@@ -563,13 +633,11 @@ pub struct SimSession<'a> {
     done_at: Vec<f64>,
     finished: VecDeque<usize>,
     devices: Vec<Device>,
-    nic_free: Vec<f64>,
+    cs: CommState,
     /// In-flight comms: (t_end, task id).
     comms: Vec<(f64, usize)>,
     trace: Vec<SimTraceEvent>,
-    comm_total_s: f64,
     n_kernels: usize,
-    n_comms: usize,
     now: f64,
 }
 
@@ -591,12 +659,10 @@ impl<'a> SimSession<'a> {
             done_at: Vec::new(),
             finished: VecDeque::new(),
             devices: (0..cluster.n_devices).map(|_| Device::new(max_conc)).collect(),
-            nic_free: vec![0.0; cluster.n_devices],
+            cs: CommState::new(cluster.n_devices),
             comms: Vec::new(),
             trace: Vec::new(),
-            comm_total_s: 0.0,
             n_kernels: 0,
-            n_comms: 0,
             now: 0.0,
         }
     }
@@ -762,7 +828,8 @@ impl<'a> SimSession<'a> {
     }
 
     /// Route one dependency-free task: kernels queue on their device, comms
-    /// occupy both NICs from `max(t, nic free times)` — identical pricing to
+    /// occupy both endpoints of their tier's link (intra-node vs inter-node
+    /// fabric) from `max(t, link free times)` — identical pricing to
     /// [`simulate_released`]'s dispatch (including the zero-cost co-located
     /// comm fast path).
     fn dispatch_at(&mut self, task_id: usize, t: f64) {
@@ -777,13 +844,8 @@ impl<'a> SimSession<'a> {
                     self.comms.push((t, task_id));
                     return;
                 }
-                let start = t.max(self.nic_free[*src]).max(self.nic_free[*dst]);
-                let dur = self.cluster.net.message_time(*bytes);
-                self.nic_free[*src] = start + dur;
-                self.nic_free[*dst] = start + dur;
-                self.comms.push((start + dur, task_id));
-                self.comm_total_s += dur;
-                self.n_comms += 1;
+                let (start, end) = self.cs.book(self.cluster, *src, *dst, *bytes, t);
+                self.comms.push((end, task_id));
                 if self.record_trace {
                     self.trace.push(SimTraceEvent {
                         task: task_id,
@@ -792,7 +854,7 @@ impl<'a> SimSession<'a> {
                         label: "comm",
                         is_comm: true,
                         t_start: start,
-                        t_end: start + dur,
+                        t_end: end,
                     });
                 }
             }
@@ -985,9 +1047,12 @@ impl<'a> SimSession<'a> {
         SimReport {
             makespan_s: self.now,
             device_busy_s: self.devices.iter().map(|d| d.busy_s).collect(),
-            comm_total_s: self.comm_total_s,
+            comm_total_s: self.cs.total_s(),
+            comm_intra_s: self.cs.intra_s,
+            comm_inter_s: self.cs.inter_s,
+            cross_node_bytes: self.cs.cross_node_bytes,
             n_kernels: self.n_kernels,
-            n_comms: self.n_comms,
+            n_comms: self.cs.n_comms,
             trace: self.trace,
         }
     }
@@ -1164,11 +1229,70 @@ mod tests {
         let c = ClusterModel {
             n_devices: 2,
             device: DeviceModel::v100(),
-            net: NetworkModel::ethernet_25g(),
+            topo: crate::perfmodel::Topology::flat(2, NetworkModel::ethernet_25g()),
         };
-        let one = c.net.message_time(3.125e6);
+        let one = c.message_time(0, 1, 3.125e6);
         let rep = simulate(&g, &c, false).unwrap();
         assert!((rep.makespan_s - 2.0 * one).abs() / one < 1e-6);
+        // flat topology: everything is fabric traffic
+        assert_eq!(rep.comm_intra_s, 0.0);
+        assert!((rep.comm_inter_s - 2.0 * one).abs() / one < 1e-6);
+        assert_eq!(rep.cross_node_bytes, 2.0 * 3.125e6);
+    }
+
+    #[test]
+    fn tiered_nics_do_not_serialize_across_tiers() {
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind};
+        // two nodes of two devices. Device 1 receives an intra-node message
+        // (0 → 1) and an inter-node message (2 → 1) released together: on
+        // the old single-NIC model they would serialize on device 1; with
+        // per-tier links they overlap, so the makespan is the slower hop
+        // alone — and the ledger tallies each on its own tier
+        let bytes = 3.125e6;
+        let mk = |id, src| Task {
+            id,
+            instance: 0,
+            device: 1,
+            kind: TaskKind::Comm { src, dst: 1, bytes },
+            deps: vec![],
+            op: None,
+        };
+        let g = TaskGraph { tasks: vec![mk(0, 0), mk(1, 2)] };
+        let c = ClusterModel::tx_gaia_nodes(2, 2);
+        let t_intra = c.message_time(0, 1, bytes);
+        let t_inter = c.message_time(2, 1, bytes);
+        assert!(t_intra < t_inter);
+        let rep = simulate(&g, &c, false).unwrap();
+        assert!((rep.makespan_s - t_inter).abs() / t_inter < 1e-9, "tiers serialized");
+        assert!((rep.comm_intra_s - t_intra).abs() / t_intra < 1e-9);
+        assert!((rep.comm_inter_s - t_inter).abs() / t_inter < 1e-9);
+        assert_eq!(rep.comm_total_s, rep.comm_intra_s + rep.comm_inter_s);
+        // only the inter hop's bytes cross a node boundary
+        assert_eq!(rep.cross_node_bytes, bytes);
+    }
+
+    #[test]
+    fn colocated_comms_stay_free_and_uncounted_under_topology() {
+        use crate::mgrit::taskgraph::{Task, TaskGraph, TaskKind};
+        // src == dst transfers (placement rewrites) remain zero-time local
+        // handoffs on a multi-node topology: no ledger entry on either tier
+        let g = TaskGraph {
+            tasks: vec![Task {
+                id: 0,
+                instance: 0,
+                device: 2,
+                kind: TaskKind::Comm { src: 2, dst: 2, bytes: 1e9 },
+                deps: vec![],
+                op: None,
+            }],
+        };
+        let rep = simulate(&g, &ClusterModel::tx_gaia_nodes(2, 2), true).unwrap();
+        assert_eq!(rep.makespan_s, 0.0);
+        assert_eq!((rep.n_comms, rep.trace.len()), (0, 0));
+        assert_eq!(rep.comm_total_s, 0.0);
+        assert_eq!(rep.comm_intra_s, 0.0);
+        assert_eq!(rep.comm_inter_s, 0.0);
+        assert_eq!(rep.cross_node_bytes, 0.0);
     }
 
     #[test]

@@ -44,7 +44,7 @@ use anyhow::bail;
 use crate::coordinator::PlacementKind;
 use crate::data::{Dataset, StepSampler};
 use crate::mgrit::taskgraph::PipeSync;
-use crate::mgrit::{self, Granularity, Hierarchy, MgritOptions};
+use crate::mgrit::{self, Collective, Granularity, Hierarchy, MgritOptions};
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
 use crate::solver::BlockSolver;
@@ -201,7 +201,22 @@ pub fn mg_step_serial<E: NetExecutor>(
 /// the serial reference and the pipelined hybrid step reduce bit-identically.
 /// A single leaf is returned as-is (the M = 1 degenerate case).
 pub fn reduce_micro_grads(leaves: &[(Tensor, Tensor)]) -> Result<(Tensor, Tensor)> {
-    use crate::mgrit::taskgraph::{reduce_plan, GradSrc};
+    let plan = crate::mgrit::taskgraph::reduce_plan(leaves.len());
+    reduce_micro_grads_plan(&plan, leaves)
+}
+
+/// [`reduce_micro_grads`] under an explicit reduction plan — any
+/// [`taskgraph::collective_plan`](crate::mgrit::taskgraph::collective_plan)
+/// output. This is the **plan-parametric serial reference**: bit-identity of
+/// the live runtime holds per plan (the serial walk executes the same steps
+/// with the same `model::params` primitives in the same order), not across
+/// plans — IEEE-754 addition is commutative but not associative, so
+/// different collectives legitimately differ in the last bits.
+pub fn reduce_micro_grads_plan(
+    plan: &[crate::mgrit::taskgraph::ReduceStep],
+    leaves: &[(Tensor, Tensor)],
+) -> Result<(Tensor, Tensor)> {
+    use crate::mgrit::taskgraph::GradSrc;
     use crate::model::params::{pair_scale, pair_sum};
     let m = leaves.len();
     if m == 0 {
@@ -209,6 +224,9 @@ pub fn reduce_micro_grads(leaves: &[(Tensor, Tensor)]) -> Result<(Tensor, Tensor
     }
     if m == 1 {
         return Ok(leaves[0].clone());
+    }
+    if plan.len() != m - 1 {
+        bail!("reduction plan has {} steps but {m} leaves need {}", plan.len(), m - 1);
     }
     fn fetch(
         src: GradSrc,
@@ -222,9 +240,8 @@ pub fn reduce_micro_grads(leaves: &[(Tensor, Tensor)]) -> Result<(Tensor, Tensor
                 .ok_or_else(|| anyhow::anyhow!("reduce plan reads unset node {n}")),
         }
     }
-    let plan = reduce_plan(m);
     let mut nodes: Vec<Option<(Tensor, Tensor)>> = vec![None; plan.len()];
-    for step in &plan {
+    for step in plan {
         let l = fetch(step.lhs, leaves, &nodes)?;
         let r = fetch(step.rhs, leaves, &nodes)?;
         let mut sum = pair_sum(&l, &r)?;
@@ -271,6 +288,27 @@ pub fn mg_step_serial_micro<E: NetExecutor>(
     lr: f32,
     micro_batches: usize,
 ) -> Result<SerialMicroOutput> {
+    let plan = crate::mgrit::taskgraph::reduce_plan(micro_batches);
+    mg_step_serial_micro_plan(spec, exec, y, labels, hier, opts, lr, micro_batches, &plan)
+}
+
+/// [`mg_step_serial_micro`] reducing under an explicit plan (any
+/// [`taskgraph::collective_plan`](crate::mgrit::taskgraph::collective_plan)
+/// output) — the serial bit-identity reference for a runtime configured with
+/// a non-default collective. Same plan for every gradient tensor (trunk
+/// layers, opening, head), mirroring the live graph builders.
+#[allow(clippy::too_many_arguments)]
+pub fn mg_step_serial_micro_plan<E: NetExecutor>(
+    spec: &NetSpec,
+    exec: &E,
+    y: &Tensor,
+    labels: &[i32],
+    hier: &Hierarchy,
+    opts: &MgritOptions,
+    lr: f32,
+    micro_batches: usize,
+    plan: &[crate::mgrit::taskgraph::ReduceStep],
+) -> Result<SerialMicroOutput> {
     let m = micro_batches;
     if m == 0 {
         bail!("need at least one micro-batch");
@@ -315,10 +353,10 @@ pub fn mg_step_serial_micro<E: NetExecutor>(
     for i in 0..n_layers {
         let leaves: Vec<(Tensor, Tensor)> =
             trunk_per_inst.iter().map(|t| t[i].clone()).collect();
-        trunk.push(reduce_micro_grads(&leaves)?);
+        trunk.push(reduce_micro_grads_plan(plan, &leaves)?);
     }
-    let (w_open, b_open) = reduce_micro_grads(&open_leaves)?;
-    let (w_fc, b_fc) = reduce_micro_grads(&fc_leaves)?;
+    let (w_open, b_open) = reduce_micro_grads_plan(plan, &open_leaves)?;
+    let (w_fc, b_fc) = reduce_micro_grads_plan(plan, &fc_leaves)?;
     let grads = NetGrads { w_open, b_open, trunk, w_fc, b_fc };
     let mut updated = params.clone();
     updated.sgd_step(&grads, lr)?;
@@ -361,6 +399,41 @@ pub fn train_parallel(
     micro_batches: usize,
     placement: PlacementKind,
 ) -> Result<Vec<StepLog>> {
+    train_parallel_grouped(
+        spec,
+        params,
+        data,
+        cfg,
+        n_devices,
+        granularity,
+        micro_batches,
+        placement,
+        1,
+        Collective::Tree,
+    )
+}
+
+/// As [`train_parallel`] with the cluster topology exposed: the pool splits
+/// into `n_groups` node-level device groups of `n_devices` workers each
+/// (micro-batch instances round-robin over groups), and `collective` picks
+/// the gradient-reduction plan joining them — flat pairwise tree, ring, or
+/// the hierarchical two-phase plan that reduces inside each node before
+/// crossing the inter-node fabric once. Every collective is bit-identical
+/// to the serial reference executing the same plan; only transfer endpoints
+/// and the sum's association order move.
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_grouped(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    n_groups: usize,
+    collective: Collective,
+) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
     }
@@ -385,15 +458,17 @@ pub fn train_parallel(
         let snap = Arc::new(params.clone());
         let factory =
             move |_w: usize| crate::solver::host::HostSolver::new(spec2.clone(), snap.clone());
-        let mut drv = crate::coordinator::ParallelMgrit::new(
+        let mut drv = crate::coordinator::ParallelMgrit::new_grouped(
             factory,
             spec.clone(),
             hier.clone(),
             n_devices,
+            n_groups,
             cfg.batch,
         )?;
         drv.set_granularity(granularity);
         drv.set_placement(placement);
+        drv.set_collective(collective);
         let out = drv.train_step_micro(&y, &labels, &opts, cfg.lr, micro_batches)?;
         let grad_norm = out.grads.global_norm();
         *params = out.params;
@@ -417,8 +492,10 @@ pub fn train_parallel(
 /// staleness consume identical data — unlike [`train_parallel`], whose
 /// single-stream draw is only stable for a fixed step sequence.
 ///
-/// The pipelined path never materializes a per-step global gradient, so each
-/// returned [`StepLog`] carries `grad_norm = NaN`.
+/// Each returned [`StepLog`] carries the step's reduced-gradient global norm
+/// harvested from the window's `ReduceGrad` roots — the same quantity
+/// [`train_parallel`] computes from `NetGrads::global_norm`, so pipelined
+/// and per-step logs are directly comparable.
 #[allow(clippy::too_many_arguments)]
 pub fn train_parallel_pipelined(
     spec: &Arc<NetSpec>,
@@ -431,6 +508,41 @@ pub fn train_parallel_pipelined(
     placement: PlacementKind,
     k_steps: usize,
     sync: PipeSync,
+) -> Result<Vec<StepLog>> {
+    train_parallel_pipelined_grouped(
+        spec,
+        params,
+        data,
+        cfg,
+        n_devices,
+        granularity,
+        micro_batches,
+        placement,
+        k_steps,
+        sync,
+        1,
+        Collective::Tree,
+    )
+}
+
+/// As [`train_parallel_pipelined`] with the cluster topology exposed —
+/// `n_groups` node-level device groups of `n_devices` workers each and the
+/// gradient [`Collective`] joining each step's micro-batch instances (see
+/// [`train_parallel_grouped`]).
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_pipelined_grouped(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    k_steps: usize,
+    sync: PipeSync,
+    n_groups: usize,
+    collective: Collective,
 ) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
@@ -461,19 +573,21 @@ pub fn train_parallel_pipelined(
         let snap = Arc::new(params.clone());
         let factory =
             move |_w: usize| crate::solver::host::HostSolver::new(spec2.clone(), snap.clone());
-        let mut drv = crate::coordinator::ParallelMgrit::new(
+        let mut drv = crate::coordinator::ParallelMgrit::new_grouped(
             factory,
             spec.clone(),
             hier.clone(),
             n_devices,
+            n_groups,
             k * cfg.batch,
         )?;
         drv.set_granularity(granularity);
         drv.set_placement(placement);
+        drv.set_collective(collective);
         let out = drv.train_pipeline(&y, &labels, &opts, cfg.lr, micro_batches, k, sync)?;
         *params = out.params;
         for (i, loss) in out.losses.iter().enumerate() {
-            logs.push(StepLog { step: step + i, loss: *loss, grad_norm: f64::NAN });
+            logs.push(StepLog { step: step + i, loss: *loss, grad_norm: out.grad_norms[i] });
         }
         step += k;
     }
@@ -846,7 +960,7 @@ mod tests {
         let (l0, _) = run(PipeSync::Staleness(0));
         let (l1, p1) = run(PipeSync::Staleness(1));
         assert_eq!(l1.len(), 4);
-        assert!(l1.iter().all(|l| l.loss.is_finite() && l.grad_norm.is_nan()));
+        assert!(l1.iter().all(|l| l.loss.is_finite() && l.grad_norm.is_finite() && l.grad_norm > 0.0));
         // step 0 reads version 0 under both policies — identical data,
         // identical snapshot, identical loss
         assert_eq!(l0[0].loss, l1[0].loss);

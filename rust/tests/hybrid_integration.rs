@@ -241,6 +241,112 @@ fn hybrid_training_loop_is_bit_reproducible() {
 }
 
 #[test]
+fn collectives_bit_match_serial_micro_reference() {
+    // a collective may only change the reduction's association order and
+    // transfer endpoints, never the step's semantics: every plan must be
+    // bit-identical to the serial reference executing the SAME plan
+    // (`mg_step_serial_micro_plan`) — across device counts, grouped
+    // (multi-node) layouts, and micro splits, on 2-level and multilevel
+    // hierarchies
+    use resnet_mgrit::mgrit::taskgraph::{collective_plan, Collective};
+    let spec = tiny_spec();
+    let params = Arc::new(NetParams::init(&spec, 210).unwrap());
+    let hier2 = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+    let hier3 = Hierarchy::build(spec.n_res(), spec.h(), 2, 3, 2).unwrap();
+    assert!(hier3.n_levels() >= 3);
+    let (y, labels) = train_batch(&spec, 4);
+    let lr = 0.05f32;
+    let opts = MgritOptions::early_stopping(2);
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    // (devices per group, groups, micro-batches): 1/2/4 total devices with
+    // both flat (one group) and grouped (groups ≡ nodes) layouts
+    for hier in [&hier2, &hier3] {
+        for (per_group, n_groups, micro) in
+            [(1usize, 1usize, 2usize), (2, 1, 4), (1, 2, 2), (2, 2, 4), (4, 1, 4)]
+        {
+            for c in Collective::all() {
+                let node_of: Vec<usize> = (0..micro).map(|k| k % n_groups).collect();
+                let plan = collective_plan(c, micro, &node_of);
+                let serial = train::mg_step_serial_micro_plan(
+                    &spec, &exec, &y, &labels, hier, &opts, lr, micro, &plan,
+                )
+                .unwrap();
+                let mut drv = ParallelMgrit::new_grouped(
+                    params_factory(spec.clone(), params.clone()),
+                    spec.clone(),
+                    hier.clone(),
+                    per_group,
+                    n_groups,
+                    4,
+                )
+                .unwrap();
+                drv.set_collective(c);
+                assert_eq!(drv.collective(), c);
+                let par = drv.train_step_micro(&y, &labels, &opts, lr, micro).unwrap();
+                let ctx = format!(
+                    "levels={} per_group={per_group} groups={n_groups} micro={micro} c={}",
+                    hier.n_levels(),
+                    c.name()
+                );
+                assert_eq!(par.loss, serial.loss, "{ctx}: combined loss differs");
+                for (i, ((pw, pb), (sw, sb))) in
+                    par.grads.trunk.iter().zip(&serial.grads.trunk).enumerate()
+                {
+                    assert!(
+                        pw.data() == sw.data() && pb.data() == sb.data(),
+                        "{ctx}: reduced trunk grad {i} differs bitwise"
+                    );
+                }
+                assert!(par.grads.w_open.data() == serial.grads.w_open.data(), "{ctx}: dW_open");
+                assert!(par.grads.w_fc.data() == serial.grads.w_fc.data(), "{ctx}: dW_fc");
+                for (i, ((pw, pb), (sw, sb))) in
+                    par.params.trunk.iter().zip(&serial.params.trunk).enumerate()
+                {
+                    assert!(
+                        pw.data() == sw.data() && pb.data() == sb.data(),
+                        "{ctx}: post-SGD trunk {i} differs bitwise"
+                    );
+                }
+                assert!(par.params.w_open.data() == serial.params.w_open.data(), "{ctx}: W_open");
+                assert!(par.params.w_fc.data() == serial.params.w_fc.data(), "{ctx}: W_fc");
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_and_two_phase_differ_from_tree_in_last_bits_only() {
+    // sanity that the collectives are actually exercising different
+    // association orders: at M = 4 the tree ((g0+g1)+(g2+g3))/4 and the ring
+    // (((g1+g0)+g2)+g3)/4 are different f32 summations, so SOME reduced
+    // tensor should differ — while staying equal to ~1e-6 relative error
+    use resnet_mgrit::mgrit::taskgraph::Collective;
+    let spec = tiny_spec();
+    let params = Arc::new(NetParams::init(&spec, 211).unwrap());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+    let (y, labels) = train_batch(&spec, 4);
+    let opts = MgritOptions::early_stopping(2);
+    let run = |c: Collective| {
+        let mut drv = ParallelMgrit::new(
+            params_factory(spec.clone(), params.clone()),
+            spec.clone(),
+            hier.clone(),
+            2,
+            4,
+        )
+        .unwrap();
+        drv.set_collective(c);
+        drv.train_step_micro(&y, &labels, &opts, 0.05, 4).unwrap()
+    };
+    let tree = run(Collective::Tree);
+    let ring = run(Collective::Ring);
+    for ((tw, _), (rw, _)) in tree.grads.trunk.iter().zip(&ring.grads.trunk) {
+        let err = resnet_mgrit::util::stats::rel_l2_err(tw.data(), rw.data());
+        assert!(err < 1e-5, "collectives should agree to fp tolerance, got {err}");
+    }
+}
+
+#[test]
 fn placement_policies_bit_match_serial_micro_reference() {
     // placement may only change *when/where* tasks run, never *what* they
     // compute: every policy — including the cost-aware re-placers — must be
