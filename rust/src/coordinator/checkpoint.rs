@@ -1,0 +1,306 @@
+//! Checkpoint primitives: exact-roundtrip serialization of tensors and
+//! parameters, plus the two on-disk checkpoint records — a
+//! [`SessionSnapshot`] (one executor session frozen at a retired-task
+//! frontier) and a [`TrainCheckpoint`] (training-loop progress between
+//! steps).
+//!
+//! Everything goes through `util::json`, whose number writer emits the
+//! shortest f64 decimal that round-trips; every f32 is exactly representable
+//! as f64 and the shortest-roundtrip property composes, so
+//! `f32 → Json → text → Json → f32` is the identity. That is the whole
+//! fault-tolerance story: a resumed run computes on bit-identical inputs, so
+//! checkpoint → resume → finish equals the uninterrupted run bit-for-bit
+//! (asserted by `tests/fault_integration.rs`).
+//!
+//! The *structure* of a session (its task graph) is deliberately NOT part of
+//! a snapshot: graphs are pure functions of the run configuration, so the
+//! resuming caller rebuilds the graph and the snapshot contributes only the
+//! frontier (which task ids have retired) and the live state slots. This
+//! keeps snapshots small and immune to graph-encoding drift.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::model::NetParams;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// `{"dims": [...], "data": [...]}` — value-complete, exact for f32.
+pub(crate) fn tensor_to_json(t: &Tensor) -> Json {
+    json::obj(vec![
+        ("dims", Json::Arr(t.dims().iter().map(|&d| json::num(d as f64)).collect())),
+        ("data", Json::Arr(t.data().iter().map(|&v| json::num(v as f64)).collect())),
+    ])
+}
+
+/// Inverse of [`tensor_to_json`].
+pub(crate) fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let dims = j
+        .get("dims")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let data = j
+        .get("data")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Result<Vec<_>>>()?;
+    Tensor::new(dims, data)
+}
+
+/// `{"w": tensor, "b": tensor}` for one (weight, bias) pair.
+pub(crate) fn pair_to_json(p: &(Tensor, Tensor)) -> Json {
+    json::obj(vec![("w", tensor_to_json(&p.0)), ("b", tensor_to_json(&p.1))])
+}
+
+/// Inverse of [`pair_to_json`].
+pub(crate) fn pair_from_json(j: &Json) -> Result<(Tensor, Tensor)> {
+    Ok((tensor_from_json(j.get("w")?)?, tensor_from_json(j.get("b")?)?))
+}
+
+/// Full network parameters: opening pair, trunk pairs, head pair.
+pub(crate) fn params_to_json(p: &NetParams) -> Json {
+    json::obj(vec![
+        ("w_open", tensor_to_json(&p.w_open)),
+        ("b_open", tensor_to_json(&p.b_open)),
+        ("trunk", Json::Arr(p.trunk.iter().map(pair_to_json).collect())),
+        ("w_fc", tensor_to_json(&p.w_fc)),
+        ("b_fc", tensor_to_json(&p.b_fc)),
+    ])
+}
+
+/// Inverse of [`params_to_json`].
+pub(crate) fn params_from_json(j: &Json) -> Result<NetParams> {
+    Ok(NetParams {
+        w_open: tensor_from_json(j.get("w_open")?)?,
+        b_open: tensor_from_json(j.get("b_open")?)?,
+        trunk: j
+            .get("trunk")?
+            .as_arr()?
+            .iter()
+            .map(pair_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        w_fc: tensor_from_json(j.get("w_fc")?)?,
+        b_fc: tensor_from_json(j.get("b_fc")?)?,
+    })
+}
+
+fn save_json(j: &Json, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, j.to_string())
+        .with_context(|| format!("writing checkpoint {}", path.display()))
+}
+
+fn load_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    Json::parse(&text).with_context(|| format!("parsing checkpoint {}", path.display()))
+}
+
+/// One executor session frozen at a quiescent retired-task frontier
+/// (`coordinator::executor::ExecSession::checkpoint`): which tasks of the
+/// deterministically-rebuildable graph have retired, plus the serialized
+/// live state (`MultiExecState::to_json`). `ExecSession::resume` turns it
+/// back into a running session that executes exactly the un-retired tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    /// Task count of the graph this snapshot covers — resume refuses a graph
+    /// of any other size (the cheap guard against resuming a snapshot
+    /// against the wrong run configuration).
+    pub n_tasks: usize,
+    /// Retired task ids, ascending.
+    pub frontier: Vec<usize>,
+    /// `MultiExecState::to_json` output: every live state slot.
+    pub state: Json,
+}
+
+impl SessionSnapshot {
+    /// Serialize, including a format version tag.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("n_tasks", json::num(self.n_tasks as f64)),
+            ("frontier", Json::Arr(self.frontier.iter().map(|&i| json::num(i as f64)).collect())),
+            ("state", self.state.clone()),
+        ])
+    }
+
+    /// Inverse of [`SessionSnapshot::to_json`].
+    pub fn from_json(j: &Json) -> Result<SessionSnapshot> {
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(anyhow!("unsupported session snapshot version {version}"));
+        }
+        Ok(SessionSnapshot {
+            n_tasks: j.get("n_tasks")?.as_usize()?,
+            frontier: j
+                .get("frontier")?
+                .as_arr()?
+                .iter()
+                .map(|i| i.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            state: j.get("state")?.clone(),
+        })
+    }
+
+    /// Write to `path` (parent directories are created).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        save_json(&self.to_json(), path)
+    }
+
+    /// Read back what [`SessionSnapshot::save`] wrote.
+    pub fn load(path: &Path) -> Result<SessionSnapshot> {
+        SessionSnapshot::from_json(&load_json(path)?)
+    }
+}
+
+/// Training-loop progress at a step boundary: the next step to run and the
+/// exact parameters entering it. Everything else a resumed run needs (batch
+/// schedule, learning rate, hierarchy) is a pure function of the training
+/// config and the step index, so `train::*_ckpt` resumes bit-identically
+/// from just this record.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// Index of the next training step to execute (steps `0..step` are done).
+    pub step: usize,
+    /// Parameters entering step `step`, bit-exact.
+    pub params: NetParams,
+}
+
+impl TrainCheckpoint {
+    /// Serialize, including a format version tag.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("step", json::num(self.step as f64)),
+            ("params", params_to_json(&self.params)),
+        ])
+    }
+
+    /// Inverse of [`TrainCheckpoint::to_json`].
+    pub fn from_json(j: &Json) -> Result<TrainCheckpoint> {
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(anyhow!("unsupported train checkpoint version {version}"));
+        }
+        Ok(TrainCheckpoint {
+            step: j.get("step")?.as_usize()?,
+            params: params_from_json(j.get("params")?)?,
+        })
+    }
+
+    /// Write to `path` (parent directories are created).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        save_json(&self.to_json(), path)
+    }
+
+    /// Read back what [`TrainCheckpoint::save`] wrote.
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        TrainCheckpoint::from_json(&load_json(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NetSpec;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn tensor_roundtrip_is_bit_exact() {
+        let vals = vec![
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            1.0 / 3.0,
+            core::f32::consts::PI,
+            1e-30,
+            -3.4e38,
+            f32::MIN_POSITIVE,
+        ];
+        let t = Tensor::new(vec![3, 3], vals.clone()).unwrap();
+        let back = tensor_from_json(&Json::parse(&tensor_to_json(&t).to_string()).unwrap()).unwrap();
+        assert_eq!(back.dims(), t.dims());
+        for (a, b) in t.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round-tripped to {b}");
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_is_bit_exact() {
+        let spec = NetSpec::micro();
+        let p = NetParams::init(&spec, 17).unwrap();
+        let back =
+            params_from_json(&Json::parse(&params_to_json(&p).to_string()).unwrap()).unwrap();
+        let eq = |a: &Tensor, b: &Tensor| {
+            assert_eq!(a.dims(), b.dims());
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        };
+        eq(&p.w_open, &back.w_open);
+        eq(&p.b_open, &back.b_open);
+        assert_eq!(p.trunk.len(), back.trunk.len());
+        for ((w, b), (w2, b2)) in p.trunk.iter().zip(&back.trunk) {
+            eq(w, w2);
+            eq(b, b2);
+        }
+        eq(&p.w_fc, &back.w_fc);
+        eq(&p.b_fc, &back.b_fc);
+    }
+
+    #[test]
+    fn session_snapshot_file_roundtrip() {
+        let snap = SessionSnapshot {
+            n_tasks: 42,
+            frontier: vec![0, 1, 5, 7],
+            state: json::obj(vec![("insts", Json::Arr(vec![]))]),
+        };
+        let dir = std::path::Path::new("target/checkpoint-selftest");
+        let path = dir.join("snap.json");
+        snap.save(&path).unwrap();
+        let back = SessionSnapshot::load(&path).unwrap();
+        assert_eq!(back, snap);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn train_checkpoint_file_roundtrip() {
+        let spec = NetSpec::micro();
+        let mut params = NetParams::init(&spec, 3).unwrap();
+        // perturb so the record is not the seed initialization
+        let mut rng = Rng::new(9);
+        let w = params.trunk[0].0.data_mut();
+        for v in w.iter_mut() {
+            *v += rng.normal() * 0.1;
+        }
+        let ck = TrainCheckpoint { step: 5, params: params.clone() };
+        let dir = std::path::Path::new("target/checkpoint-selftest-train");
+        let path = dir.join("ck.json");
+        ck.save(&path).unwrap();
+        let back = TrainCheckpoint::load(&path).unwrap();
+        assert_eq!(back.step, 5);
+        assert_eq!(back.params.trunk[0].0.data(), params.trunk[0].0.data());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let j = json::obj(vec![
+            ("version", json::num(2.0)),
+            ("step", json::num(0.0)),
+            ("params", Json::Null),
+        ]);
+        assert!(TrainCheckpoint::from_json(&j).is_err());
+    }
+}

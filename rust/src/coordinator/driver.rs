@@ -27,6 +27,8 @@ use crate::mgrit::taskgraph::{self, Collective, Granularity, PipeSync, ReduceSte
 use crate::model::params::NetGrads;
 use crate::model::{NetParams, NetSpec};
 use crate::perfmodel::ClusterModel;
+use crate::serving::policy::{PolicyCtx, QueuedRequest, SchedulerPolicy};
+use crate::serving::request::ShedReason;
 use crate::solver::{NetExecutor, SolverFactory};
 use crate::tensor::Tensor;
 use crate::Result;
@@ -47,6 +49,9 @@ pub struct RunMetrics {
     /// Instance-tagged kernel completions (pool-clock timestamps) — the
     /// record the cross-instance pipelining assertions read.
     pub events: Vec<ExecEvent>,
+    /// Recovery re-dispatches absorbed over the run: failed or lost tasks
+    /// re-enqueued onto surviving workers (0 on a fault-free run).
+    pub retries: usize,
 }
 
 impl RunMetrics {
@@ -119,6 +124,11 @@ pub struct PipelineRunOutput {
     /// bit-identical to K sequential [`ParallelMgrit::train_step_micro`]
     /// losses.
     pub losses: Vec<f64>,
+    /// Per-step global norm of the reduced (micro-batch mean) gradient over
+    /// every parameter slot, in step order — the same quantity the
+    /// sequential paths report via `NetGrads::global_norm`, so pipelined
+    /// step logs are comparable.
+    pub grad_norms: Vec<f64>,
     /// The final parameters after all K updates (snapshot-ring version K).
     pub params: NetParams,
     /// The snapshot ring's live-depth high-water mark (≤ S + 2).
@@ -396,6 +406,7 @@ where
         stats.phi_evals += rep.phi_evals;
         executor::merge_phases(&mut m.phases, &rep.phase_s);
         m.events.extend(rep.events.iter().cloned());
+        m.retries += rep.retries.len();
     }
 
     /// Full parallel MGRIT solve (same contract as `mgrit::solve_forward`):
@@ -693,11 +704,154 @@ where
         let out = st.into_pipeline_outputs()?;
         Ok(PipelineRunOutput {
             losses: out.losses,
+            grad_norms: out.grad_norms,
             params: out.params,
             peak_ring_depth: out.peak_ring_depth,
             metrics,
         })
     }
+}
+
+/// Executor-and-clock abstraction behind the serving drain loop. The live
+/// `serving::runtime::ServingRuntime::run` (wall clock + `ExecSession`) and
+/// the virtual-time `serving::sim::simulate_serving_policy` (event clock +
+/// `SimSession`) used to carry two hand-synchronized copies of the same
+/// intake → decide → retire → wait protocol; both now implement this trait
+/// and share the single [`drive`] loop, so the two timelines cannot drift —
+/// a policy bug or a protocol change lands in exactly one place.
+///
+/// The split: [`drive`] owns everything *protocol* — the waiting room, the
+/// bounded-queue door shed, the decide loop with its
+/// [`Decision::apply`](crate::serving::policy::Decision::apply) call, the
+/// harvest-before-wait ordering, and termination. The backend owns
+/// everything *mechanism* — where requests come from, what a clock read
+/// means, how a group becomes a running graph instance, and how to block
+/// until the next event.
+pub trait DriveBackend {
+    /// The request type held in the waiting room (live: `InferRequest`
+    /// carrying a real tensor; sim: `SimRequest` carrying just a row count).
+    type Req;
+
+    /// Current time on this backend's clock (wall seconds on the pool clock,
+    /// or virtual seconds).
+    fn now(&self) -> f64;
+
+    /// Arrival time of the earliest not-yet-arrived request, `None` when the
+    /// submission queue is drained. `drive` uses it both to bound waits and
+    /// (with an empty waiting room and nothing in flight) to terminate.
+    fn next_arrival_s(&self) -> Option<f64>;
+
+    /// Pop the next request whose arrival is `<= now`, in submission order;
+    /// `None` when nothing (more) has arrived yet.
+    fn pop_arrived(&mut self, now: f64) -> Option<Self::Req>;
+
+    /// The policy-facing view of a waiting request.
+    fn view(&self, req: &Self::Req) -> QueuedRequest;
+
+    /// **Per-row** service-time estimate handed to the policy for shedding
+    /// decisions (live: completion-fed EWMA; sim: the makespan of one
+    /// batch-1 instance). `drive` scales it by the policy's coalesce width.
+    fn service_estimate_s(&self) -> f64;
+
+    /// Record a dropped request. `at_s` is the backend clock at the drop.
+    fn shed(&mut self, req: Self::Req, at_s: f64, reason: ShedReason);
+
+    /// Coalesce an admitted group (non-empty, decision order) into ONE graph
+    /// instance and start it on the executor. The backend samples its own
+    /// admission timestamp first, so queue-wait accounting stays pure.
+    fn admit(&mut self, group: Vec<Self::Req>) -> Result<()>;
+
+    /// Harvest at most one finished instance (record outcomes, release the
+    /// slot, feed the service estimate). `Ok(false)` when none is finished —
+    /// `drive` calls this in a loop, then re-enters the decide phase
+    /// immediately if anything was harvested.
+    fn poll_retire(&mut self) -> Result<bool>;
+
+    /// Number of admitted-but-unfinished instances (occupied window slots).
+    fn n_active(&self) -> usize;
+
+    /// Block (live) or advance virtual time (sim) until the next event, but
+    /// never past `bound` — the earlier of the next arrival and the policy's
+    /// timer, `+∞` when neither exists. Must error out (not spin) when no
+    /// event can ever come: `n_waiting` and `policy_name` feed that
+    /// diagnostic.
+    fn advance(&mut self, bound: f64, n_waiting: usize, policy_name: &'static str)
+        -> Result<()>;
+}
+
+/// The single serving drain protocol over any [`DriveBackend`]: intake
+/// (bounded-queue door shed) → decide until the policy rests (admissions
+/// and sheds via `Decision::apply`) → harvest every finished instance →
+/// terminate when nothing is waiting, in flight, or still to arrive —
+/// otherwise wait for the next completion, arrival, or policy timer and go
+/// around. Freed slots are re-offered to the policy before any wait.
+pub fn drive<B: DriveBackend>(
+    backend: &mut B,
+    policy: &mut dyn SchedulerPolicy,
+    max_inflight: usize,
+    max_queue: Option<usize>,
+) -> Result<()> {
+    let mut waiting: Vec<B::Req> = Vec::new();
+    loop {
+        // 1. intake: arrived requests enter the waiting room; a full bounded
+        //    queue sheds at the door. Same-instant arrivals are enqueued in
+        //    submission order before any admission decision at that instant.
+        let now = backend.now();
+        while let Some(req) = backend.pop_arrived(now) {
+            if max_queue.map(|cap| waiting.len() >= cap).unwrap_or(false) {
+                backend.shed(req, now, ShedReason::QueueFull);
+                continue;
+            }
+            waiting.push(req);
+        }
+        // 2. decide: admissions and sheds until the policy rests (the
+        //    resting decision's timer bounds the wait below)
+        let wait_hint: Option<f64> = loop {
+            let view: Vec<QueuedRequest> = waiting.iter().map(|r| backend.view(r)).collect();
+            let ctx = PolicyCtx {
+                now: backend.now(),
+                free_slots: max_inflight.saturating_sub(backend.n_active()),
+                service_estimate_s: backend.service_estimate_s()
+                    * policy.coalesce_width().max(1) as f64,
+            };
+            let d = policy.decide(&view, &ctx);
+            if !d.acted() {
+                break d.wait_until;
+            }
+            // the one shared protocol implementation: validate the decision
+            // and pull its subjects out of the waiting room
+            let shed_now = backend.now();
+            let (group, shed) = d.apply(&mut waiting, policy.name(), ctx.free_slots)?;
+            for req in shed {
+                backend.shed(req, shed_now, ShedReason::DeadlineHopeless);
+            }
+            if group.is_empty() {
+                continue;
+            }
+            backend.admit(group)?;
+        };
+        // 3. retire: harvest every finished instance
+        let mut harvested = false;
+        while backend.poll_retire()? {
+            harvested = true;
+        }
+        if backend.n_active() == 0 && waiting.is_empty() && backend.next_arrival_s().is_none() {
+            break;
+        }
+        // a retirement freed window slots: admit into them immediately
+        // instead of waiting for an unrelated event first
+        if harvested {
+            continue;
+        }
+        // 4. wait: for a completion, but never past the next arrival or the
+        //    policy's timer (a batch window expiring)
+        let bound = [backend.next_arrival_s(), wait_hint]
+            .into_iter()
+            .flatten()
+            .fold(f64::INFINITY, f64::min);
+        backend.advance(bound, waiting.len(), policy.name())?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -710,6 +864,139 @@ mod tests {
     fn factory(spec: Arc<NetSpec>, seed: u64) -> impl SolverFactory<Solver = HostSolver> {
         let params = Arc::new(NetParams::init(&spec, seed).unwrap());
         move |_w: usize| HostSolver::new(spec.clone(), params.clone())
+    }
+
+    /// Scripted executor for [`drive`]: constant service time, completions
+    /// retire when the clock passes them, the clock jumps to the next event.
+    struct MockBackend {
+        now: f64,
+        future: std::collections::VecDeque<(u64, f64)>,
+        active: Vec<(u64, f64)>,
+        served: Vec<(u64, f64)>,
+        sheds: Vec<(u64, ShedReason)>,
+        svc: f64,
+    }
+
+    impl DriveBackend for MockBackend {
+        type Req = (u64, f64);
+
+        fn now(&self) -> f64 {
+            self.now
+        }
+
+        fn next_arrival_s(&self) -> Option<f64> {
+            self.future.front().map(|r| r.1)
+        }
+
+        fn pop_arrived(&mut self, now: f64) -> Option<(u64, f64)> {
+            if self.future.front().map(|r| r.1 <= now).unwrap_or(false) {
+                self.future.pop_front()
+            } else {
+                None
+            }
+        }
+
+        fn view(&self, r: &(u64, f64)) -> QueuedRequest {
+            QueuedRequest { id: r.0, arrival_s: r.1, deadline_ms: None, dims: vec![1, 4] }
+        }
+
+        fn service_estimate_s(&self) -> f64 {
+            self.svc
+        }
+
+        fn shed(&mut self, req: (u64, f64), _at_s: f64, reason: ShedReason) {
+            self.sheds.push((req.0, reason));
+        }
+
+        fn admit(&mut self, group: Vec<(u64, f64)>) -> Result<()> {
+            let done = self.now + self.svc;
+            for r in group {
+                self.active.push((r.0, done));
+            }
+            Ok(())
+        }
+
+        fn poll_retire(&mut self) -> Result<bool> {
+            let now = self.now;
+            if let Some(pos) = self.active.iter().position(|&(_, t)| t <= now) {
+                let entry = self.active.remove(pos);
+                self.served.push(entry);
+                return Ok(true);
+            }
+            Ok(false)
+        }
+
+        fn n_active(&self) -> usize {
+            self.active.len()
+        }
+
+        fn advance(
+            &mut self,
+            bound: f64,
+            n_waiting: usize,
+            policy_name: &'static str,
+        ) -> Result<()> {
+            let next_done =
+                self.active.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+            let target = bound.min(next_done);
+            anyhow::ensure!(
+                target.is_finite() && target > self.now,
+                "policy {policy_name} deadlocked with {n_waiting} waiting request(s)"
+            );
+            self.now = target;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn drive_protocol_on_mock_backend() {
+        use crate::serving::policy::Fifo;
+        // three requests: two at t=0 into a 1-slot waiting room (second
+        // sheds at the door), a third at t=0.5 that must wait for the
+        // single in-flight slot to free at t=1
+        let mut b = MockBackend {
+            now: 0.0,
+            future: vec![(1, 0.0), (2, 0.0), (3, 0.5)].into(),
+            active: Vec::new(),
+            served: Vec::new(),
+            sheds: Vec::new(),
+            svc: 1.0,
+        };
+        drive(&mut b, &mut Fifo, 1, Some(1)).unwrap();
+        assert_eq!(b.sheds, vec![(2, ShedReason::QueueFull)]);
+        assert_eq!(b.served, vec![(1, 1.0), (3, 2.0)]);
+        assert_eq!(b.n_active(), 0);
+        assert_eq!(b.now, 2.0);
+    }
+
+    #[test]
+    fn drive_bails_instead_of_spinning_when_idle_with_no_timer() {
+        // a policy that never admits: one waiting request, nothing in
+        // flight, no timer — the backend's advance must surface a deadlock
+        // error rather than loop forever
+        struct Never;
+        impl SchedulerPolicy for Never {
+            fn name(&self) -> &'static str {
+                "never"
+            }
+            fn decide(
+                &mut self,
+                _q: &[QueuedRequest],
+                _ctx: &PolicyCtx,
+            ) -> crate::serving::policy::Decision {
+                crate::serving::policy::Decision::rest()
+            }
+        }
+        let mut b = MockBackend {
+            now: 0.0,
+            future: vec![(1, 0.0)].into(),
+            active: Vec::new(),
+            served: Vec::new(),
+            sheds: Vec::new(),
+            svc: 1.0,
+        };
+        let err = drive(&mut b, &mut Never, 1, None).unwrap_err();
+        assert!(err.to_string().contains("deadlocked"), "got: {err}");
     }
 
     #[test]

@@ -52,15 +52,20 @@
 //! to the serial solve — asserted by `tests/mgrit_integration.rs` and
 //! `tests/hybrid_integration.rs`.
 
-use std::collections::{BinaryHeap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use super::checkpoint::{
+    pair_from_json, pair_to_json, params_from_json, params_to_json, tensor_from_json,
+    tensor_to_json, SessionSnapshot,
+};
 use super::placement::ReadyKey;
 use super::streams::{JobDone, StreamPool};
+use crate::util::json::{self, Json};
 use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{op_param_slots, GradSrc, Sys, Task, TaskGraph, TaskKind, TaskOp};
 use crate::model::params::{pair_scale, pair_sum, TrunkGradSlots};
@@ -293,6 +298,66 @@ impl SnapshotRing {
     /// high-water mark (≤ S + 2 when the staleness edges are correct).
     pub fn peak_depth(&self) -> usize {
         self.peak
+    }
+
+    /// Serialize the ring field-by-field for a checkpoint: live versions,
+    /// outstanding read counts, and the high-water mark all survive, so a
+    /// resumed run performs the identical retire sequence.
+    fn to_json(&self) -> Json {
+        let ver = |v: &Vec<Option<(Arc<Tensor>, Arc<Tensor>)>>| {
+            Json::Arr(
+                v.iter()
+                    .map(|s| match s {
+                        None => Json::Null,
+                        Some((w, b)) => json::obj(vec![
+                            ("w", tensor_to_json(w)),
+                            ("b", tensor_to_json(b)),
+                        ]),
+                    })
+                    .collect(),
+            )
+        };
+        json::obj(vec![
+            ("base", json::num(self.base as f64)),
+            ("versions", Json::Arr(self.versions.iter().map(ver).collect())),
+            ("pending", Json::Arr(self.pending.iter().map(|&p| json::num(p as f64)).collect())),
+            ("n_slots", json::num(self.n_slots as f64)),
+            ("peak", json::num(self.peak as f64)),
+        ])
+    }
+
+    /// Rebuild a ring from [`SnapshotRing::to_json`] output.
+    fn from_json(j: &Json) -> Result<SnapshotRing> {
+        let versions = j
+            .get("versions")?
+            .as_arr()?
+            .iter()
+            .map(|v| -> Result<Vec<Option<(Arc<Tensor>, Arc<Tensor>)>>> {
+                v.as_arr()?
+                    .iter()
+                    .map(|s| match s {
+                        Json::Null => Ok(None),
+                        p => Ok(Some((
+                            Arc::new(tensor_from_json(p.get("w")?)?),
+                            Arc::new(tensor_from_json(p.get("b")?)?),
+                        ))),
+                    })
+                    .collect()
+            })
+            .collect::<Result<VecDeque<_>>>()?;
+        let pending = j
+            .get("pending")?
+            .as_arr()?
+            .iter()
+            .map(|p| p.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SnapshotRing {
+            base: j.get("base")?.as_usize()?,
+            versions,
+            pending,
+            n_slots: j.get("n_slots")?.as_usize()?,
+            peak: j.get("peak")?.as_usize()?,
+        })
     }
 }
 
@@ -782,6 +847,358 @@ impl MultiExecState {
             peak_ring_depth: pipe.ring.peak_depth(),
         })
     }
+
+    /// Serialize the complete live state for a checkpoint
+    /// ([`crate::coordinator::checkpoint::SessionSnapshot`]). Every tensor is
+    /// written value-complete through the exact-roundtrip f32 path, so a
+    /// resumed run computes on bit-identical inputs; `Arc` sharing between
+    /// slots is not preserved (resume re-allocates each slot independently),
+    /// which changes memory footprint but never values.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("insts", Json::Arr(self.insts.iter().map(inst_to_json).collect())),
+            (
+                "shared",
+                match &self.shared {
+                    None => Json::Null,
+                    Some(s) => shared_to_json(s),
+                },
+            ),
+            (
+                "pipe",
+                match &self.pipe {
+                    None => Json::Null,
+                    Some(p) => pipe_to_json(p),
+                },
+            ),
+        ])
+    }
+
+    /// Rebuild live state from [`MultiExecState::to_json`] output. `spec` is
+    /// required for pipelined snapshots (the net spec is code configuration,
+    /// not state, so the resuming caller re-supplies it) and ignored
+    /// otherwise.
+    pub fn from_json(j: &Json, spec: Option<Arc<NetSpec>>) -> Result<MultiExecState> {
+        let insts = j
+            .get("insts")?
+            .as_arr()?
+            .iter()
+            .map(inst_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let shared = match j.get("shared")? {
+            Json::Null => None,
+            s => Some(shared_from_json(s)?),
+        };
+        let pipe = match j.get("pipe")? {
+            Json::Null => None,
+            p => {
+                let spec = spec
+                    .ok_or_else(|| anyhow!("pipelined snapshot needs the net spec to resume"))?;
+                Some(pipe_from_json(p, spec)?)
+            }
+        };
+        Ok(MultiExecState { insts, shared, pipe })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint serialization of the live state (executor-private structure;
+// tensor/params primitives live in `coordinator::checkpoint`)
+// ---------------------------------------------------------------------------
+
+fn opt_tensor_json(t: &Option<Arc<Tensor>>) -> Json {
+    match t {
+        None => Json::Null,
+        Some(t) => tensor_to_json(t),
+    }
+}
+
+fn opt_tensor_from(j: &Json) -> Result<Option<Arc<Tensor>>> {
+    match j {
+        Json::Null => Ok(None),
+        t => Ok(Some(Arc::new(tensor_from_json(t)?))),
+    }
+}
+
+fn opt_pair_json(p: &Option<(Tensor, Tensor)>) -> Json {
+    match p {
+        None => Json::Null,
+        Some(p) => pair_to_json(p),
+    }
+}
+
+fn opt_pair_from(j: &Json) -> Result<Option<(Tensor, Tensor)>> {
+    match j {
+        Json::Null => Ok(None),
+        p => pair_from_json(p).map(Some),
+    }
+}
+
+fn slots_to_json(s: &TrunkGradSlots) -> Json {
+    Json::Arr(
+        (0..s.len())
+            .map(|i| match s.get(i) {
+                None => Json::Null,
+                Some(p) => pair_to_json(p),
+            })
+            .collect(),
+    )
+}
+
+fn slots_from_json(j: &Json) -> Result<TrunkGradSlots> {
+    let a = j.as_arr()?;
+    let mut s = TrunkGradSlots::new(a.len());
+    for (i, e) in a.iter().enumerate() {
+        if !matches!(e, Json::Null) {
+            let (w, b) = pair_from_json(e)?;
+            s.set(i, w, b)?;
+        }
+    }
+    Ok(s)
+}
+
+fn sys_to_json(s: &SysState) -> Json {
+    let lvl_opt = |lvl: &Vec<Option<Arc<Tensor>>>| Json::Arr(lvl.iter().map(opt_tensor_json).collect());
+    json::obj(vec![
+        (
+            "u",
+            Json::Arr(
+                s.u.iter()
+                    .map(|lvl| Json::Arr(lvl.iter().map(|t| tensor_to_json(t)).collect()))
+                    .collect(),
+            ),
+        ),
+        (
+            "g",
+            Json::Arr(
+                s.g.iter()
+                    .map(|lvl| match lvl {
+                        None => Json::Null,
+                        Some(v) => Json::Arr(v.iter().map(|t| tensor_to_json(t)).collect()),
+                    })
+                    .collect(),
+            ),
+        ),
+        ("r", Json::Arr(s.r.iter().map(lvl_opt).collect())),
+        ("inj", Json::Arr(s.inj.iter().map(lvl_opt).collect())),
+    ])
+}
+
+fn sys_from_json(j: &Json) -> Result<SysState> {
+    let u = j
+        .get("u")?
+        .as_arr()?
+        .iter()
+        .map(|lvl| -> Result<Vec<Arc<Tensor>>> {
+            lvl.as_arr()?.iter().map(|t| tensor_from_json(t).map(Arc::new)).collect()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let g = j
+        .get("g")?
+        .as_arr()?
+        .iter()
+        .map(|lvl| -> Result<Option<Vec<Arc<Tensor>>>> {
+            match lvl {
+                Json::Null => Ok(None),
+                v => Ok(Some(
+                    v.as_arr()?
+                        .iter()
+                        .map(|t| tensor_from_json(t).map(Arc::new))
+                        .collect::<Result<Vec<_>>>()?,
+                )),
+            }
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let opt_lvl = |lvl: &Json| -> Result<Vec<Option<Arc<Tensor>>>> {
+        lvl.as_arr()?.iter().map(opt_tensor_from).collect()
+    };
+    let r = j.get("r")?.as_arr()?.iter().map(&opt_lvl).collect::<Result<Vec<_>>>()?;
+    let inj = j.get("inj")?.as_arr()?.iter().map(&opt_lvl).collect::<Result<Vec<_>>>()?;
+    Ok(SysState { u, g, r, inj })
+}
+
+fn train_to_json(t: &TrainState) -> Json {
+    json::obj(vec![
+        ("labels", Json::Arr(t.labels.iter().map(|&l| json::num(l as f64)).collect())),
+        ("grads", slots_to_json(&t.grads)),
+        (
+            "head",
+            match &t.head {
+                None => Json::Null,
+                Some(h) => json::obj(vec![
+                    ("loss", json::num(h.loss)),
+                    ("dw_fc", tensor_to_json(&h.dw_fc)),
+                    ("db_fc", tensor_to_json(&h.db_fc)),
+                ]),
+            },
+        ),
+    ])
+}
+
+fn train_from_json(j: &Json) -> Result<TrainState> {
+    let labels = j
+        .get("labels")?
+        .as_arr()?
+        .iter()
+        .map(|l| -> Result<i32> {
+            let f = l.as_f64()?;
+            anyhow::ensure!(f.fract() == 0.0, "label {f} is not an integer");
+            Ok(f as i32)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let head = match j.get("head")? {
+        Json::Null => None,
+        h => Some(HeadOut {
+            loss: h.get("loss")?.as_f64()?,
+            dw_fc: tensor_from_json(h.get("dw_fc")?)?,
+            db_fc: tensor_from_json(h.get("db_fc")?)?,
+        }),
+    };
+    Ok(TrainState { labels, grads: slots_from_json(j.get("grads")?)?, head })
+}
+
+fn inst_to_json(i: &ExecState) -> Json {
+    json::obj(vec![
+        ("pri", sys_to_json(&i.pri)),
+        (
+            "adj",
+            match &i.adj {
+                None => Json::Null,
+                Some(s) => sys_to_json(s),
+            },
+        ),
+        (
+            "train",
+            match &i.train {
+                None => Json::Null,
+                Some(t) => train_to_json(t),
+            },
+        ),
+    ])
+}
+
+fn inst_from_json(j: &Json) -> Result<ExecState> {
+    Ok(ExecState {
+        pri: sys_from_json(j.get("pri")?)?,
+        adj: match j.get("adj")? {
+            Json::Null => None,
+            s => Some(sys_from_json(s)?),
+        },
+        train: match j.get("train")? {
+            Json::Null => None,
+            t => Some(train_from_json(t)?),
+        },
+    })
+}
+
+fn shared_to_json(s: &SharedTrain) -> Json {
+    json::obj(vec![
+        ("params", params_to_json(&s.params)),
+        ("lr", json::num(s.lr as f64)),
+        (
+            "nodes",
+            Json::Arr(
+                s.nodes
+                    .iter()
+                    .map(|l| Json::Arr(l.iter().map(opt_pair_json).collect()))
+                    .collect(),
+            ),
+        ),
+        ("reduced", slots_to_json(&s.reduced)),
+        ("new_trunk", slots_to_json(&s.new_trunk)),
+    ])
+}
+
+fn shared_from_json(j: &Json) -> Result<SharedTrain> {
+    Ok(SharedTrain {
+        params: Arc::new(params_from_json(j.get("params")?)?),
+        lr: j.get("lr")?.as_f64()? as f32,
+        nodes: j
+            .get("nodes")?
+            .as_arr()?
+            .iter()
+            .map(|l| -> Result<Vec<Option<(Tensor, Tensor)>>> {
+                l.as_arr()?.iter().map(opt_pair_from).collect()
+            })
+            .collect::<Result<Vec<_>>>()?,
+        reduced: slots_from_json(j.get("reduced")?)?,
+        new_trunk: slots_from_json(j.get("new_trunk")?)?,
+    })
+}
+
+fn pipe_to_json(p: &PipeShared) -> Json {
+    json::obj(vec![
+        ("lr", json::num(p.lr as f64)),
+        ("micro", json::num(p.micro as f64)),
+        ("staleness", json::num(p.staleness as f64)),
+        ("k_steps", json::num(p.k_steps as f64)),
+        ("n_layers", json::num(p.n_layers as f64)),
+        ("ring", p.ring.to_json()),
+        (
+            "nodes",
+            Json::Arr(
+                p.nodes
+                    .iter()
+                    .map(|step| {
+                        Json::Arr(
+                            step.iter()
+                                .map(|slot| Json::Arr(slot.iter().map(opt_pair_json).collect()))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "reduced",
+            Json::Arr(
+                p.reduced
+                    .iter()
+                    .map(|step| Json::Arr(step.iter().map(opt_pair_json).collect()))
+                    .collect(),
+            ),
+        ),
+        ("inputs", Json::Arr(p.inputs.iter().map(|t| tensor_to_json(t)).collect())),
+    ])
+}
+
+fn pipe_from_json(j: &Json, spec: Arc<NetSpec>) -> Result<PipeShared> {
+    Ok(PipeShared {
+        spec,
+        lr: j.get("lr")?.as_f64()? as f32,
+        micro: j.get("micro")?.as_usize()?,
+        staleness: j.get("staleness")?.as_usize()?,
+        k_steps: j.get("k_steps")?.as_usize()?,
+        n_layers: j.get("n_layers")?.as_usize()?,
+        ring: SnapshotRing::from_json(j.get("ring")?)?,
+        nodes: j
+            .get("nodes")?
+            .as_arr()?
+            .iter()
+            .map(|step| -> Result<Vec<Vec<Option<(Tensor, Tensor)>>>> {
+                step.as_arr()?
+                    .iter()
+                    .map(|slot| -> Result<Vec<Option<(Tensor, Tensor)>>> {
+                        slot.as_arr()?.iter().map(opt_pair_from).collect()
+                    })
+                    .collect()
+            })
+            .collect::<Result<Vec<_>>>()?,
+        reduced: j
+            .get("reduced")?
+            .as_arr()?
+            .iter()
+            .map(|step| -> Result<Vec<Option<(Tensor, Tensor)>>> {
+                step.as_arr()?.iter().map(opt_pair_from).collect()
+            })
+            .collect::<Result<Vec<_>>>()?,
+        inputs: j
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|t| tensor_from_json(t).map(Arc::new))
+            .collect::<Result<Vec<_>>>()?,
+    })
 }
 
 /// Typed result of one kernel task (the payload of [`JobDone`]).
@@ -826,6 +1243,124 @@ pub struct ExecEvent {
     pub t_end: f64,
 }
 
+/// A typed executor failure the recovery layer could not absorb: surfaced
+/// through `anyhow` so callers can `downcast_ref::<ExecError>()` for the
+/// structured payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecError {
+    /// A worker thread died with a task on it and no surviving worker could
+    /// take the re-execution (single-device pool, or retry budget spent).
+    /// Before the recovery layer existed this scenario *hung* the scheduler
+    /// forever: the dead worker never sent a completion and the executor's
+    /// own `Sender` clone kept the channel open, so the blocking `recv`
+    /// never saw a disconnect.
+    WorkerLost {
+        /// Graph task id that was in flight on the dead worker.
+        task: usize,
+        /// Worker (device) index that died.
+        worker: usize,
+    },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::WorkerLost { task, worker } => {
+                write!(f, "worker {worker} lost with task {task} in flight and no recovery path")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// One recovery re-dispatch: task `task` moved from `from_device` to
+/// `to_device` on attempt `attempt` after the executor slept `backoff_s`.
+/// Accumulated in [`ExecReport::retries`] — the audit trail every
+/// fault-injection test asserts on.
+#[derive(Debug, Clone)]
+pub struct RetryEvent {
+    /// Graph task id that was re-dispatched.
+    pub task: usize,
+    /// Phase label of the task.
+    pub label: &'static str,
+    /// Retry attempt number (1-based; 0 marks a dead-device reroute at
+    /// *first* dispatch, which spends no retry budget).
+    pub attempt: usize,
+    /// Device the failed/unroutable dispatch targeted.
+    pub from_device: usize,
+    /// Surviving device the task was re-dispatched to.
+    pub to_device: usize,
+    /// Backoff slept before the re-dispatch, seconds.
+    pub backoff_s: f64,
+}
+
+/// Re-execution budget per task: first dispatch + `MAX_RETRIES` retries.
+const MAX_RETRIES: usize = 2;
+/// Base of the exponential retry backoff (`BACKOFF_BASE_S · 2^(attempt−1)`).
+const BACKOFF_BASE_S: f64 = 0.0005;
+/// Poll granularity of the completion wait: every expiry runs a worker
+/// liveness sweep so a silently-dead worker surfaces in bounded time.
+const LIVENESS_POLL: Duration = Duration::from_millis(20);
+
+fn backoff_s(attempt: usize) -> f64 {
+    BACKOFF_BASE_S * (1u64 << (attempt.saturating_sub(1)).min(20)) as f64
+}
+
+/// In-flight bookkeeping behind worker recovery. Keyed on task ids in a
+/// `BTreeMap` so liveness sweeps visit lost tasks in deterministic (id)
+/// order — recovery re-dispatch order is then a pure function of the fault,
+/// never of map iteration order.
+#[derive(Debug, Default)]
+struct Recovery {
+    /// Retries consumed per task id.
+    attempts: BTreeMap<usize, usize>,
+    /// Device each in-flight task was dispatched to.
+    inflight_dev: BTreeMap<usize, usize>,
+}
+
+impl Recovery {
+    fn dispatched(&mut self, id: usize, dev: usize) {
+        self.inflight_dev.insert(id, dev);
+    }
+
+    /// Mark a completion and return the device the task actually ran on.
+    fn completed(&mut self, id: usize) -> Option<usize> {
+        self.inflight_dev.remove(&id)
+    }
+
+    /// In-flight tasks stranded on dead workers, in task-id order. Sound
+    /// only when the completion channel is empty: a worker sends every
+    /// completion before it can die on a later message, so dead worker +
+    /// empty channel ⇒ its remaining in-flight tasks will never complete.
+    fn lost_tasks<F: SolverFactory>(&self, pool: &StreamPool<F>) -> Vec<(usize, usize)> {
+        self.inflight_dev
+            .iter()
+            .filter(|(_, &dev)| !pool.worker_alive(dev))
+            .map(|(&id, &dev)| (id, dev))
+            .collect()
+    }
+
+    /// Consume one unit of task `id`'s retry budget; `None` when spent.
+    fn next_attempt(&mut self, id: usize) -> Option<usize> {
+        let a = self.attempts.entry(id).or_insert(0);
+        if *a >= MAX_RETRIES {
+            None
+        } else {
+            *a += 1;
+            Some(*a)
+        }
+    }
+}
+
+/// First alive device scanning cyclically from `from` (inclusive), so a
+/// task whose planned worker survives stays put and a dead worker's load
+/// spills deterministically onto its successor.
+fn pick_alive_device<F: SolverFactory>(pool: &StreamPool<F>, from: usize) -> Option<usize> {
+    let n = pool.n_workers();
+    (0..n).map(|k| (from + k) % n).find(|&d| pool.worker_alive(d))
+}
+
 /// Aggregate record of one graph execution.
 #[derive(Debug, Default, Clone)]
 pub struct ExecReport {
@@ -846,12 +1381,66 @@ pub struct ExecReport {
     pub phase_s: Vec<(&'static str, f64)>,
     /// Instance-tagged kernel completions, in retirement order.
     pub events: Vec<ExecEvent>,
+    /// Recovery re-dispatches (failed task retried, dead worker rerouted),
+    /// in occurrence order — empty on a fault-free run.
+    pub retries: Vec<RetryEvent>,
 }
 
 impl ExecReport {
     fn add_phase(&mut self, label: &'static str, secs: f64) {
         merge_phases(&mut self.phase_s, &[(label, secs)]);
     }
+}
+
+/// Phase label of a kernel task (`"comm"` for transfers — only reachable on
+/// malformed recovery paths, never on a validated graph).
+fn kernel_label(graph: &TaskGraph, id: usize) -> &'static str {
+    match &graph.tasks[id].kind {
+        TaskKind::Kernel { label, .. } => label,
+        TaskKind::Comm { .. } => "comm",
+    }
+}
+
+/// Spend one retry and pick the surviving target for a failed task:
+/// `(to_device, attempt, backoff_s)`. [`ExecError::WorkerLost`] when the
+/// budget is spent or no worker survives.
+fn plan_retry<F: SolverFactory>(
+    pool: &StreamPool<F>,
+    rec: &mut Recovery,
+    id: usize,
+    from: usize,
+) -> Result<(usize, usize, f64)> {
+    let attempt =
+        rec.next_attempt(id).ok_or(ExecError::WorkerLost { task: id, worker: from })?;
+    let to =
+        pick_alive_device(pool, from).ok_or(ExecError::WorkerLost { task: id, worker: from })?;
+    Ok((to, attempt, backoff_s(attempt)))
+}
+
+/// Resolve a task's dispatch device: its planned device if that worker is
+/// alive, else the deterministic reroute target (recorded as an attempt-0
+/// [`RetryEvent`] — no retry budget spent, the task never ran).
+fn route_dispatch<F: SolverFactory>(
+    pool: &StreamPool<F>,
+    report: &mut ExecReport,
+    id: usize,
+    label: &'static str,
+    want: usize,
+) -> Result<usize> {
+    if pool.worker_alive(want) {
+        return Ok(want);
+    }
+    let to =
+        pick_alive_device(pool, want).ok_or(ExecError::WorkerLost { task: id, worker: want })?;
+    report.retries.push(RetryEvent {
+        task: id,
+        label,
+        attempt: 0,
+        from_device: want,
+        to_device: to,
+        backoff_s: 0.0,
+    });
+    Ok(to)
 }
 
 /// Account one ready Comm task's inline retirement: a transfer feeding a
@@ -984,6 +1573,7 @@ where
         .collect();
     let mut in_flight = 0usize;
     let mut retired = 0usize;
+    let mut recovery = Recovery::default();
 
     while retired < n {
         // dispatch everything currently ready; Comm tasks retire inline
@@ -1001,7 +1591,9 @@ where
                     }
                 }
                 TaskKind::Kernel { label, .. } => {
-                    dispatch_kernel(pool, hier, st, task, *label, &tx)?;
+                    let dev = route_dispatch(pool, &mut report, id, *label, task.device)?;
+                    dispatch_kernel(pool, hier, st, task, *label, dev, &tx)?;
+                    recovery.dispatched(id, dev);
                     in_flight += 1;
                 }
             }
@@ -1012,13 +1604,80 @@ where
         if in_flight == 0 {
             bail!("executor stalled with {retired}/{n} tasks retired (cyclic dependencies?)");
         }
-        let done = rx
-            .recv()
-            .map_err(|_| anyhow!("stream pool shut down with tasks in flight"))?;
+        // bounded-poll receive: every expiry sweeps worker liveness so a
+        // silently-dead worker surfaces as recovery (or WorkerLost) in
+        // bounded time instead of blocking forever
+        let done = loop {
+            match rx.recv_timeout(LIVENESS_POLL) {
+                Ok(d) => break d,
+                Err(RecvTimeoutError::Timeout) => {
+                    let lost = recovery.lost_tasks(pool);
+                    if lost.is_empty() {
+                        continue;
+                    }
+                    // a worker sends every completion before it can die on a
+                    // later message — confirm the channel is empty before
+                    // declaring its in-flight tasks lost
+                    match rx.try_recv() {
+                        Ok(d) => break d,
+                        Err(TryRecvError::Empty) => {
+                            for (id, dev) in lost {
+                                in_flight -= 1;
+                                recovery.completed(id);
+                                let label = kernel_label(graph, id);
+                                let (to, attempt, backoff) =
+                                    plan_retry(pool, &mut recovery, id, dev)?;
+                                std::thread::sleep(Duration::from_secs_f64(backoff));
+                                report.retries.push(RetryEvent {
+                                    task: id,
+                                    label,
+                                    attempt,
+                                    from_device: dev,
+                                    to_device: to,
+                                    backoff_s: backoff,
+                                });
+                                dispatch_kernel(
+                                    pool, hier, st, &graph.tasks[id], label, to, &tx,
+                                )?;
+                                recovery.dispatched(id, to);
+                                in_flight += 1;
+                            }
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            bail!("stream pool shut down with tasks in flight")
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("stream pool shut down with tasks in flight")
+                }
+            }
+        };
         in_flight -= 1;
-        let out = done
-            .result
-            .map_err(|e| anyhow!("task {} ({}): {e:#}", done.id, done.label))?;
+        let from = recovery.completed(done.id).unwrap_or(graph.tasks[done.id].device);
+        let out = match done.result {
+            Ok(o) => o,
+            Err(e) => {
+                // failed jobs write no outputs and hazard edges admit any
+                // topological order, so a re-execution is bit-identical —
+                // retry on a surviving worker with exponential backoff
+                let (to, attempt, backoff) = plan_retry(pool, &mut recovery, done.id, from)
+                    .map_err(|lost| lost.context(format!("task {} ({}): {e:#}", done.id, done.label)))?;
+                std::thread::sleep(Duration::from_secs_f64(backoff));
+                report.retries.push(RetryEvent {
+                    task: done.id,
+                    label: done.label,
+                    attempt,
+                    from_device: from,
+                    to_device: to,
+                    backoff_s: backoff,
+                });
+                dispatch_kernel(pool, hier, st, &graph.tasks[done.id], done.label, to, &tx)?;
+                recovery.dispatched(done.id, to);
+                in_flight += 1;
+                continue;
+            }
+        };
         let task = &graph.tasks[done.id];
         let op = task
             .op
@@ -1111,6 +1770,16 @@ where
     /// EWMA of completed kernel durations (`t_end − t_start`, seconds) per
     /// device — the service-time half of [`ExecSession::device_occupancy`].
     dev_ewma_s: Vec<f64>,
+    /// Worker-recovery bookkeeping (in-flight devices, retry budgets).
+    recovery: Recovery,
+    /// Retired-task mask over the union graph — the checkpoint frontier.
+    done: Vec<bool>,
+    /// Retired task count (`done.iter().filter(|d| **d).count()`).
+    done_count: usize,
+    /// While `true`, [`ExecSession::pump`] dispatches nothing: ready tasks
+    /// stay queued so in-flight work can drain to a checkpointable quiescent
+    /// state (`in_flight == 0` with a well-defined retired frontier).
+    dispatch_paused: bool,
 }
 
 impl<'a, F: SolverFactory> ExecSession<'a, F>
@@ -1138,6 +1807,10 @@ where
             report: ExecReport::default(),
             dev_inflight: Vec::new(),
             dev_ewma_s: Vec::new(),
+            recovery: Recovery::default(),
+            done: Vec::new(),
+            done_count: 0,
+            dispatch_paused: false,
         }
     }
 
@@ -1203,6 +1876,7 @@ where
         self.indeg.resize(off + n_sub, 0);
         self.dependents.resize(off + n_sub, Vec::new());
         self.priority.resize(off + n_sub, 0.0);
+        self.done.resize(off + n_sub, false);
         if let Some(p) = priority {
             self.priority[off..off + n_sub].copy_from_slice(p);
         }
@@ -1232,9 +1906,11 @@ where
 
     /// Dispatch everything currently ready; Comm tasks retire inline (local
     /// execution only accounts the transfer — same rule as [`execute`],
-    /// through the shared `account_comm`).
+    /// through the shared `account_comm`). While dispatch is paused
+    /// (checkpoint drain), ready tasks stay queued untouched.
     fn pump(&mut self) -> Result<()> {
-        while let Some(ReadyKey { id, .. }) = self.ready.pop() {
+        while !self.dispatch_paused {
+            let Some(ReadyKey { id, .. }) = self.ready.pop() else { break };
             let is_comm = matches!(self.graph.tasks[id].kind, TaskKind::Comm { .. });
             if is_comm {
                 account_comm(&mut self.report, &self.graph, &self.dependents, id);
@@ -1244,16 +1920,24 @@ where
                     TaskKind::Kernel { label, .. } => *label,
                     TaskKind::Comm { .. } => unreachable!("checked above"),
                 };
+                let dev = route_dispatch(
+                    self.pool,
+                    &mut self.report,
+                    id,
+                    label,
+                    self.graph.tasks[id].device,
+                )?;
                 dispatch_kernel(
                     self.pool,
                     self.hier,
                     &mut self.st,
                     &self.graph.tasks[id],
                     label,
+                    dev,
                     &self.tx,
                 )?;
+                self.recovery.dispatched(id, dev);
                 self.in_flight += 1;
-                let dev = self.graph.tasks[id].device;
                 if dev >= self.dev_inflight.len() {
                     self.dev_inflight.resize(dev + 1, 0);
                 }
@@ -1274,6 +1958,8 @@ where
     /// serving drain; an indefinitely-lived server should start a fresh
     /// session per drain (what `serving::ServingRuntime::run` does).
     fn retire(&mut self, id: usize) {
+        self.done[id] = true;
+        self.done_count += 1;
         let inst = self.graph.tasks[id].instance;
         self.remaining[inst] -= 1;
         if self.remaining[inst] == 0 {
@@ -1296,34 +1982,90 @@ where
     pub fn wait(&mut self, timeout: Option<Duration>) -> Result<bool> {
         if self.in_flight == 0 {
             let outstanding: usize = self.remaining.iter().sum();
-            if outstanding > 0 {
+            if outstanding > 0 && !self.dispatch_paused {
                 bail!("session stalled with {outstanding} tasks unretired (cyclic dependencies?)");
             }
             return Ok(false);
         }
-        let done = match timeout {
-            None => self
-                .rx
-                .recv()
-                .map_err(|_| anyhow!("stream pool shut down with tasks in flight"))?,
-            Some(d) => match self.rx.recv_timeout(d) {
-                Ok(done) => done,
-                Err(RecvTimeoutError::Timeout) => return Ok(false),
+        let deadline = timeout.map(|d| Instant::now() + d);
+        // bounded-poll receive: every expiry runs a worker liveness sweep so
+        // a silently-dead worker surfaces as recovery (or a typed
+        // WorkerLost error) in bounded time instead of blocking forever
+        let done = loop {
+            let poll = match deadline {
+                None => LIVENESS_POLL,
+                Some(dl) => {
+                    let rem = dl.saturating_duration_since(Instant::now());
+                    if rem.is_zero() {
+                        return Ok(false);
+                    }
+                    rem.min(LIVENESS_POLL)
+                }
+            };
+            match self.rx.recv_timeout(poll) {
+                Ok(d) => break d,
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(d) = self.sweep_lost()? {
+                        break d;
+                    }
+                }
                 Err(RecvTimeoutError::Disconnected) => {
                     bail!("stream pool shut down with tasks in flight")
                 }
-            },
+            }
         };
         self.in_flight -= 1;
-        let out = done
-            .result
-            .map_err(|e| anyhow!("task {} ({}): {e:#}", done.id, done.label))?;
-        let (instance, device, op) = {
+        // the device the job actually ran on (recovery may have rerouted it)
+        let device = self
+            .recovery
+            .completed(done.id)
+            .unwrap_or(self.graph.tasks[done.id].device);
+        if let Some(c) = self.dev_inflight.get_mut(device) {
+            *c = c.saturating_sub(1);
+        }
+        let out = match done.result {
+            Ok(o) => o,
+            Err(e) => {
+                // failed jobs write no outputs and hazard edges admit any
+                // topological order, so re-execution is bit-identical —
+                // retry on a surviving worker with exponential backoff
+                let (to, attempt, backoff) =
+                    plan_retry(self.pool, &mut self.recovery, done.id, device).map_err(
+                        |lost| lost.context(format!("task {} ({}): {e:#}", done.id, done.label)),
+                    )?;
+                std::thread::sleep(Duration::from_secs_f64(backoff));
+                self.report.retries.push(RetryEvent {
+                    task: done.id,
+                    label: done.label,
+                    attempt,
+                    from_device: device,
+                    to_device: to,
+                    backoff_s: backoff,
+                });
+                dispatch_kernel(
+                    self.pool,
+                    self.hier,
+                    &mut self.st,
+                    &self.graph.tasks[done.id],
+                    done.label,
+                    to,
+                    &self.tx,
+                )?;
+                self.recovery.dispatched(done.id, to);
+                self.in_flight += 1;
+                if to >= self.dev_inflight.len() {
+                    self.dev_inflight.resize(to + 1, 0);
+                }
+                self.dev_inflight[to] += 1;
+                return Ok(true);
+            }
+        };
+        let (instance, op) = {
             let task = &self.graph.tasks[done.id];
             let op = task
                 .op
                 .ok_or_else(|| anyhow!("completed task {} has no payload", done.id))?;
-            (task.instance, task.device, op)
+            (task.instance, op)
         };
         apply_output(self.hier, &mut self.st, instance, op, out)?;
         account_kernel(
@@ -1337,9 +2079,6 @@ where
             done.t_end,
         );
         self.last_end[instance] = self.last_end[instance].max(done.t_end);
-        if let Some(c) = self.dev_inflight.get_mut(device) {
-            *c = c.saturating_sub(1);
-        }
         if device >= self.dev_ewma_s.len() {
             self.dev_ewma_s.resize(device + 1, 0.0);
         }
@@ -1349,6 +2088,59 @@ where
         self.retire(done.id);
         self.pump()?;
         Ok(true)
+    }
+
+    /// Detect in-flight tasks stranded on dead workers and re-dispatch them
+    /// onto survivors, spending retry budget. Called on poll expiry, when
+    /// the channel has been observed empty; a completion that races the
+    /// observation is returned for normal processing instead of sweeping.
+    fn sweep_lost(&mut self) -> Result<Option<JobDone<TaskOut>>> {
+        let lost = self.recovery.lost_tasks(self.pool);
+        if lost.is_empty() {
+            return Ok(None);
+        }
+        // a worker sends every completion before it can die on a later
+        // message — confirm the channel is still empty before declaring the
+        // dead workers' in-flight tasks lost
+        match self.rx.try_recv() {
+            Ok(d) => return Ok(Some(d)),
+            Err(TryRecvError::Disconnected) => bail!("stream pool shut down with tasks in flight"),
+            Err(TryRecvError::Empty) => {}
+        }
+        for (id, dev) in lost {
+            self.in_flight -= 1;
+            self.recovery.completed(id);
+            if let Some(c) = self.dev_inflight.get_mut(dev) {
+                *c = c.saturating_sub(1);
+            }
+            let label = kernel_label(&self.graph, id);
+            let (to, attempt, backoff) = plan_retry(self.pool, &mut self.recovery, id, dev)?;
+            std::thread::sleep(Duration::from_secs_f64(backoff));
+            self.report.retries.push(RetryEvent {
+                task: id,
+                label,
+                attempt,
+                from_device: dev,
+                to_device: to,
+                backoff_s: backoff,
+            });
+            dispatch_kernel(
+                self.pool,
+                self.hier,
+                &mut self.st,
+                &self.graph.tasks[id],
+                label,
+                to,
+                &self.tx,
+            )?;
+            self.recovery.dispatched(id, to);
+            self.in_flight += 1;
+            if to >= self.dev_inflight.len() {
+                self.dev_inflight.resize(to + 1, 0);
+            }
+            self.dev_inflight[to] += 1;
+        }
+        Ok(None)
     }
 
     /// Next instance whose every task has retired (completion order), if any.
@@ -1404,6 +2196,233 @@ where
     /// Consume the session, returning the cumulative report.
     pub fn into_report(self) -> ExecReport {
         self.report
+    }
+
+    /// Consume the session into its live state plus the cumulative report —
+    /// the harvest path of checkpoint-driven runs
+    /// ([`ExecSession::admit_prebuilt`] / [`ExecSession::resume`]), where the
+    /// caller owns a multi-instance state the per-instance accessors do not
+    /// cover.
+    pub fn into_state(self) -> (MultiExecState, ExecReport) {
+        (self.st, self.report)
+    }
+
+    /// Retired task count over the union graph (the checkpoint frontier
+    /// size).
+    pub fn retired(&self) -> usize {
+        self.done_count
+    }
+
+    /// Admit a **prebuilt multi-instance graph** with its matching live
+    /// state into a fresh session — the checkpointable counterpart of
+    /// [`execute_prioritized`]: same graph, same state, same dispatch rules,
+    /// but the caller can pause at a frontier ([`ExecSession::run_to_frontier`]),
+    /// snapshot ([`ExecSession::checkpoint`]), and later
+    /// [`ExecSession::resume`]. The session must be fresh (nothing admitted);
+    /// `graph` task ids must be dense `0..n` with every op present, and every
+    /// task's `instance` must exist in `st`.
+    pub fn admit_prebuilt(
+        &mut self,
+        graph: TaskGraph,
+        st: MultiExecState,
+        priority: Option<&[f64]>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.graph.tasks.is_empty() && self.st.n_instances() == 0,
+            "admit_prebuilt requires a fresh session"
+        );
+        anyhow::ensure!(
+            graph.tasks.iter().all(|t| t.op.is_some()),
+            "admitted graph must be fully executable (op on every task)"
+        );
+        graph.validate()?;
+        let n = graph.tasks.len();
+        if let Some(p) = priority {
+            anyhow::ensure!(
+                p.len() == n,
+                "priority vector length {} != task count {n}",
+                p.len()
+            );
+        }
+        let n_inst = st.n_instances();
+        for t in &graph.tasks {
+            anyhow::ensure!(
+                t.instance < n_inst,
+                "task {} targets instance {} but the state has {n_inst} instance(s)",
+                t.id,
+                t.instance
+            );
+        }
+        self.st = st;
+        self.graph = graph;
+        self.indeg = vec![0; n];
+        self.dependents = vec![Vec::new(); n];
+        self.priority = priority.map(|p| p.to_vec()).unwrap_or_else(|| vec![0.0; n]);
+        self.done = vec![false; n];
+        self.done_count = 0;
+        self.remaining = vec![0; n_inst];
+        self.last_end = vec![self.pool.now(); n_inst];
+        for id in 0..n {
+            let deps = std::mem::take(&mut self.graph.tasks[id].deps);
+            self.indeg[id] = deps.len();
+            self.remaining[self.graph.tasks[id].instance] += 1;
+            for d in deps {
+                self.dependents[d].push(id);
+            }
+        }
+        for (k, &r) in self.remaining.iter().enumerate() {
+            if r == 0 {
+                self.finished.push_back(k);
+            }
+        }
+        for id in 0..n {
+            if self.indeg[id] == 0 {
+                self.ready.push(ReadyKey { pri: self.priority[id], id });
+            }
+        }
+        self.pump()
+    }
+
+    /// Run until at least `min_retired` tasks have retired, then pause
+    /// dispatch and drain every in-flight job. On return the session is
+    /// quiescent — `in_flight == 0` with a well-defined retired frontier of
+    /// at least `min_retired` tasks — and ready to [`ExecSession::checkpoint`].
+    /// Returns the frontier size (which may exceed `min_retired`: the drain
+    /// retires whatever was already in flight).
+    pub fn run_to_frontier(&mut self, min_retired: usize) -> Result<usize> {
+        anyhow::ensure!(
+            min_retired <= self.graph.tasks.len(),
+            "frontier target {min_retired} exceeds task count {}",
+            self.graph.tasks.len()
+        );
+        while self.done_count < min_retired {
+            if !self.wait(None)? {
+                break; // everything already retired
+            }
+        }
+        self.dispatch_paused = true;
+        while self.in_flight > 0 {
+            self.wait(None)?;
+        }
+        Ok(self.done_count)
+    }
+
+    /// Snapshot the quiescent session: the retired-task frontier plus the
+    /// serialized live state. Requires `in_flight == 0` (drain via
+    /// [`ExecSession::run_to_frontier`]) so no completed-but-unapplied output
+    /// can be lost between the frontier and the state.
+    pub fn checkpoint(&self) -> Result<SessionSnapshot> {
+        anyhow::ensure!(
+            self.in_flight == 0,
+            "checkpoint requires a quiescent session (drain via run_to_frontier)"
+        );
+        let frontier =
+            self.done.iter().enumerate().filter(|(_, d)| **d).map(|(i, _)| i).collect();
+        Ok(SessionSnapshot {
+            n_tasks: self.graph.tasks.len(),
+            frontier,
+            state: self.st.to_json(),
+        })
+    }
+
+    /// Reconstruct a session from a [`SessionSnapshot`]: the caller
+    /// re-supplies the (deterministically rebuilt) graph, the dispatch
+    /// priorities, and — for pipelined runs — the net spec; the snapshot
+    /// supplies the retired frontier and the live state. Only un-retired
+    /// tasks are executed; dependency edges satisfied by the frontier are
+    /// already released, so retired work is never re-run and un-retired work
+    /// is never skipped ([`ExecSession::run_to_end`] finishes the graph).
+    /// Dispatch starts paused-off: ready tasks launch immediately.
+    pub fn resume(
+        pool: &'a StreamPool<F>,
+        hier: &'a Hierarchy,
+        graph: TaskGraph,
+        priority: Option<&[f64]>,
+        snap: &SessionSnapshot,
+        spec: Option<Arc<NetSpec>>,
+    ) -> Result<ExecSession<'a, F>> {
+        anyhow::ensure!(
+            graph.tasks.len() == snap.n_tasks,
+            "snapshot covers {} tasks, resumed graph has {}",
+            snap.n_tasks,
+            graph.tasks.len()
+        );
+        anyhow::ensure!(
+            graph.tasks.iter().all(|t| t.op.is_some()),
+            "resumed graph must be fully executable (op on every task)"
+        );
+        graph.validate()?;
+        let st = MultiExecState::from_json(&snap.state, spec)?;
+        let n = graph.tasks.len();
+        if let Some(p) = priority {
+            anyhow::ensure!(
+                p.len() == n,
+                "priority vector length {} != task count {n}",
+                p.len()
+            );
+        }
+        let mut sess = ExecSession::new(pool, hier);
+        sess.st = st;
+        sess.graph = graph;
+        let n_inst = sess.st.n_instances();
+        sess.indeg = vec![0; n];
+        sess.dependents = vec![Vec::new(); n];
+        sess.priority = priority.map(|p| p.to_vec()).unwrap_or_else(|| vec![0.0; n]);
+        sess.done = vec![false; n];
+        for &id in &snap.frontier {
+            anyhow::ensure!(id < n, "frontier task {id} out of range");
+            anyhow::ensure!(!sess.done[id], "frontier lists task {id} twice");
+            sess.done[id] = true;
+        }
+        sess.done_count = snap.frontier.len();
+        sess.remaining = vec![0; n_inst];
+        sess.last_end = vec![pool.now(); n_inst];
+        for id in 0..n {
+            let t = &sess.graph.tasks[id];
+            anyhow::ensure!(
+                t.instance < n_inst,
+                "task {} targets instance {} but the snapshot has {n_inst} instance(s)",
+                t.id,
+                t.instance
+            );
+            if !sess.done[id] {
+                sess.remaining[t.instance] += 1;
+            }
+        }
+        for id in 0..n {
+            let deps = std::mem::take(&mut sess.graph.tasks[id].deps);
+            if sess.done[id] {
+                continue; // retired: never re-executed, holds no edges
+            }
+            let live: Vec<usize> = deps.into_iter().filter(|d| !sess.done[*d]).collect();
+            sess.indeg[id] = live.len();
+            for d in live {
+                sess.dependents[d].push(id);
+            }
+        }
+        for (k, &r) in sess.remaining.iter().enumerate() {
+            if r == 0 {
+                sess.finished.push_back(k);
+            }
+        }
+        for id in 0..n {
+            if !sess.done[id] && sess.indeg[id] == 0 {
+                sess.ready.push(ReadyKey { pri: sess.priority[id], id });
+            }
+        }
+        sess.pump()?;
+        Ok(sess)
+    }
+
+    /// Resume dispatch (if paused) and run the session to full completion:
+    /// every task of every admitted instance retired.
+    pub fn run_to_end(&mut self) -> Result<()> {
+        self.dispatch_paused = false;
+        self.pump()?;
+        while self.wait(None)? {}
+        let outstanding: usize = self.remaining.iter().sum();
+        anyhow::ensure!(outstanding == 0, "session ended with {outstanding} tasks unretired");
+        Ok(())
     }
 }
 
@@ -1478,8 +2497,9 @@ fn phi_param_grad(
     }
 }
 
-/// Take `Arc` handles on a kernel task's inputs and submit it to its
-/// device's worker. For `Restrict`, the injection (coarse initial guess +
+/// Take `Arc` handles on a kernel task's inputs and submit it to worker
+/// `dev` (the task's planned device, or the recovery reroute target when
+/// that worker died). For `Restrict`, the injection (coarse initial guess +
 /// correction snapshot) is applied at dispatch time: the graph's WAR edges
 /// guarantee every reader of the old coarse slots has already completed.
 /// Adjoint ops additionally take the forward fine state they linearize
@@ -1490,6 +2510,7 @@ fn dispatch_kernel<F: SolverFactory>(
     st: &mut MultiExecState,
     task: &Task,
     label: &'static str,
+    dev: usize,
     tx: &Sender<JobDone<TaskOut>>,
 ) -> Result<()>
 where
@@ -1511,7 +2532,7 @@ where
             match sys {
                 Sys::Primal => {
                     if let Some((kind, w, b)) = pipe_trunk(st, ki, theta)? {
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                             let mut v = phi_step(&kind, h, &w, &b, &u_prev)?;
                             if let Some(g) = &gj {
                                 v.axpy(1.0, g)?;
@@ -1519,7 +2540,7 @@ where
                             Ok(TaskOut::State(v))
                         })
                     } else {
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                             let mut v = s.step(theta, h, &u_prev)?;
                             if let Some(g) = &gj {
                                 v.axpy(1.0, g)?;
@@ -1532,7 +2553,7 @@ where
                     let rev = rev_layer(hier, level, j);
                     let fwd = inst.pri.u[0][rev].clone();
                     if let Some((kind, w, b)) = pipe_trunk(st, ki, rev)? {
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                             let mut v = psi_step(&kind, h, &w, &b, &fwd, &u_prev)?;
                             if let Some(g) = &gj {
                                 v.axpy(1.0, g)?;
@@ -1540,7 +2561,7 @@ where
                             Ok(TaskOut::State(v))
                         })
                     } else {
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                             let mut v = s.adjoint_step(rev, h, &fwd, &u_prev)?;
                             if let Some(g) = &gj {
                                 v.axpy(1.0, g)?;
@@ -1572,7 +2593,7 @@ where
                                     .map(|p| p.expect("pipelined run"))
                             })
                             .collect::<Result<_>>()?;
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                             let mut out = Vec::with_capacity(plan.len());
                             let mut u = (*u_prev).clone();
                             for (kind, w, b) in &plan {
@@ -1583,7 +2604,7 @@ where
                         })
                     } else {
                         // the solver's fused block path (one PJRT block artifact)
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                             Ok(TaskOut::States(s.block_fprop(start_theta, stride, count, h, &u_prev)?))
                         })
                     }
@@ -1605,7 +2626,7 @@ where
                                 })
                             })
                             .collect::<Result<_>>()?;
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                             let mut out = Vec::with_capacity(plan.len());
                             let mut mu = (*u_prev).clone();
                             for (kind, w, b, fwd) in &plan {
@@ -1615,7 +2636,7 @@ where
                             Ok(TaskOut::States(out))
                         })
                     } else {
-                        pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                        pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                             let mut out = Vec::with_capacity(steps.len());
                             let mut mu = (*u_prev).clone();
                             for (rev, fwd) in &steps {
@@ -1649,7 +2670,7 @@ where
                 Some((rev, _)) => *rev,
             };
             if let Some((kind, w, b)) = pipe_trunk(st, ki, layer)? {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                     let mut r = match &fwd {
                         None => phi_step(&kind, h, &w, &b, &u_prev)?,
                         Some((_, f)) => psi_step(&kind, h, &w, &b, f, &u_prev)?,
@@ -1661,7 +2682,7 @@ where
                     Ok(TaskOut::State(r))
                 })
             } else {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                     let mut r = match &fwd {
                         None => s.step(theta, h, &u_prev)?,
                         Some((rev, f)) => s.adjoint_step(*rev, h, f, &u_prev)?,
@@ -1709,7 +2730,7 @@ where
                 sm.inj[level + 1][j] = Some(inj_cur.clone());
             }
             if let Some((kind, w, b)) = pp {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                     let phi = match &fwd {
                         None => phi_step(&kind, h, &w, &b, &inj_prev)?,
                         Some((_, f)) => psi_step(&kind, h, &w, &b, f, &inj_prev)?,
@@ -1720,7 +2741,7 @@ where
                     Ok(TaskOut::State(out))
                 })
             } else {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                     let phi = match &fwd {
                         None => s.step(theta, h, &inj_prev)?,
                         Some((rev, f)) => s.adjoint_step(*rev, h, f, &inj_prev)?,
@@ -1740,7 +2761,7 @@ where
             let inj = ss.inj[level + 1][j]
                 .clone()
                 .ok_or_else(|| anyhow!("correct({level},{j}): injection snapshot missing"))?;
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+            pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let delta = Tensor::sub(&u_coarse, &inj)?;
                 let mut out = (*u_fine).clone();
                 out.axpy(1.0, &delta)?;
@@ -1755,13 +2776,13 @@ where
             if let Some(pipe) = &st.pipe {
                 let version = (ki / pipe.micro).saturating_sub(pipe.staleness);
                 let (w_fc, b_fc) = pipe.ring.get(version, pipe.n_layers + 1)?;
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                     let (_logits, loss) = ops::head_fwd(&u, &w_fc, &b_fc, &labels)?;
                     let (du, dw_fc, db_fc) = vjp::head_vjp(&u, &w_fc, &b_fc, &labels)?;
                     Ok(TaskOut::Head { loss, du, dw_fc, db_fc })
                 })
             } else {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                     let (_logits, loss) = s.head(&u, &labels)?;
                     let (du, dw_fc, db_fc) = s.head_vjp(&u, &labels)?;
                     Ok(TaskOut::Head { loss, du, dw_fc, db_fc })
@@ -1776,12 +2797,12 @@ where
             // λ^{layer+1} = μ^{N−1−layer}
             let lam = inst.sys(Sys::Adjoint)?.u[0][n_layers - 1 - layer].clone();
             if let Some((kind, w, b)) = pipe_trunk(st, ki, layer)? {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                     let (dw, db) = phi_param_grad(&kind, h, &w, &b, &u, &lam)?;
                     Ok(TaskOut::Pair(dw, db))
                 })
             } else {
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |s: &F::Solver| {
                     let (dw, db) = s.param_grad(layer, h, &u, &lam)?;
                     Ok(TaskOut::Pair(dw, db))
                 })
@@ -1804,7 +2825,7 @@ where
                     if root { Some(1.0 / st.insts.len() as f32) } else { None },
                 )
             };
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+            pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let mut sum = pair_sum(&l, &r)?;
                 if let Some(sc) = scale {
                     pair_scale(&mut sum, sc);
@@ -1829,7 +2850,7 @@ where
                 };
                 let (w, b) = pipe.ring.get(step, layer)?;
                 let lr = pipe.lr;
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                     let mut w2 = (*w).clone();
                     w2.axpy(-lr, &dw)?;
                     let mut b2 = (*b).clone();
@@ -1854,7 +2875,7 @@ where
                 };
                 let (w, b) = sh.params.trunk[layer].clone();
                 let lr = sh.lr;
-                pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+                pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                     let mut w2 = w;
                     w2.axpy(-lr, &dw)?;
                     let mut b2 = b;
@@ -1876,7 +2897,7 @@ where
                 .cloned()
                 .ok_or_else(|| anyhow!("opening: no input for instance {ki}"))?;
             let pad = pipe.spec.opening.pad;
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+            pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let mut u = ops::conv2d(&y, &w, pad)?;
                 ops::add_bias(&mut u, &b)?;
                 ops::relu(&mut u);
@@ -1899,7 +2920,7 @@ where
             let n_last = hier.fine().n_points - 1;
             // λ⁰ = the fully-relaxed adjoint state at the first trunk layer
             let lam0 = st.inst(ki)?.sys(Sys::Adjoint)?.u[0][n_last].clone();
-            pool.submit_job(task.device, label, task.id, tx.clone(), move |_s: &F::Solver| {
+            pool.submit_job(dev, label, task.id, tx.clone(), move |_s: &F::Solver| {
                 let (dw, db) = crate::train::opening_vjp(&y, &w, &b, pad, &lam0)?;
                 Ok(TaskOut::Pair(dw, db))
             })

@@ -26,6 +26,12 @@
 //!   graph instances — no per-phase and no inter-instance barriers.
 //!   [`executor::ExecSession`] is its incremental form: instances are
 //!   admitted and retired dynamically (the serving runtime's substrate).
+//! - [`checkpoint`] — frontier snapshots of a running session plus training
+//!   step checkpoints, both exact-roundtrip serialized so
+//!   checkpoint → resume → finish is bit-identical to the uninterrupted run;
+//!   `executor::ExecSession::{checkpoint, resume}` and the `train::*_ckpt`
+//!   loops build on it, and worker recovery (retry + re-enqueue on surviving
+//!   workers) keeps a session alive without one.
 //! - [`driver::ParallelMgrit`] — builds the executable V-cycle graph (the
 //!   same graph the simulator scores), runs it per MG iteration, keeps the
 //!   boundary-traffic ledger, and exposes the kernel-event trace (the
@@ -59,18 +65,21 @@
 //! assert_eq!(stats.residual_norms.len(), 2);
 //! ```
 
+pub mod checkpoint;
 pub mod driver;
 pub mod executor;
 pub mod partition;
 pub mod placement;
 pub mod streams;
 
+pub use checkpoint::{SessionSnapshot, TrainCheckpoint};
 pub use driver::{
-    InstanceStep, MicroStepOutput, ParallelMgrit, PipelineRunOutput, RunMetrics, TrainStepOutput,
+    drive, DriveBackend, InstanceStep, MicroStepOutput, ParallelMgrit, PipelineRunOutput,
+    RunMetrics, TrainStepOutput,
 };
 pub use executor::{
-    ExecEvent, ExecReport, ExecSession, InstanceOutputs, MultiExecState, MultiTrainingOutputs,
-    SnapshotRing, TaskOut,
+    ExecError, ExecEvent, ExecReport, ExecSession, InstanceOutputs, MultiExecState,
+    MultiTrainingOutputs, RetryEvent, SnapshotRing, TaskOut,
 };
 pub use partition::{InstanceGroups, Partition};
 pub use placement::{GraphCosts, PlaceCtx, Placement, PlacementKind, PlacementPolicy};

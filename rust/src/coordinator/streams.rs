@@ -12,6 +12,7 @@ use std::time::Instant;
 use anyhow::anyhow;
 
 use crate::solver::SolverFactory;
+use crate::util::faultpoint::{FaultAction, FaultPlan, FaultState};
 use crate::Result;
 
 /// One recorded job execution (for the concurrency timeline).
@@ -61,6 +62,9 @@ pub struct StreamPool<F: SolverFactory> {
     /// instance-tagged `ExecEvent`s — turn it off to skip the per-job mutex
     /// append on the completion path.
     trace_on: Arc<AtomicBool>,
+    /// Deterministic fault-injection hooks (unarmed by default); see
+    /// [`crate::util::faultpoint`].
+    faults: Arc<FaultState>,
     epoch: Instant,
 }
 
@@ -71,6 +75,7 @@ impl<F: SolverFactory> StreamPool<F> {
         let epoch = Instant::now();
         let trace = Arc::new(Mutex::new(Vec::new()));
         let trace_on = Arc::new(AtomicBool::new(true));
+        let faults = Arc::new(FaultState::new(n));
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         // collect construction errors through a channel so a failing factory
@@ -81,6 +86,7 @@ impl<F: SolverFactory> StreamPool<F> {
             let f = factory.clone();
             let tr = trace.clone();
             let tr_on = trace_on.clone();
+            let flt = faults.clone();
             let rtx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("stream-{w}"))
@@ -98,16 +104,30 @@ impl<F: SolverFactory> StreamPool<F> {
                     while let Ok(msg) = rx.recv() {
                         match msg {
                             Msg::Run { label, job } => {
+                                // an armed kill_worker_at point: the thread
+                                // exits mid-queue, dropping this job without
+                                // a completion — the silent-death failure
+                                // mode the executor's liveness sweep detects
+                                if flt.on_worker_msg(w) {
+                                    break;
+                                }
                                 let t0 = epoch.elapsed().as_secs_f64();
-                                job(&solver);
+                                // a plain-`submit` job that panics must not
+                                // take the worker thread down with it (the
+                                // old hang: dead worker, live sender, blocked
+                                // scheduler); submit_job additionally wraps
+                                // the body so the panic surfaces as an Err
+                                // completion
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| job(&solver)),
+                                );
                                 let t1 = epoch.elapsed().as_secs_f64();
                                 if tr_on.load(Ordering::Relaxed) {
-                                    tr.lock().unwrap().push(TraceEvent {
-                                        worker: w,
-                                        label,
-                                        t_start: t0,
-                                        t_end: t1,
-                                    });
+                                    // tolerate poisoning: a panicked trace
+                                    // reader must not wedge every worker
+                                    tr.lock().unwrap_or_else(|p| p.into_inner()).push(
+                                        TraceEvent { worker: w, label, t_start: t0, t_end: t1 },
+                                    );
                                 }
                             }
                             Msg::Shutdown => break,
@@ -124,7 +144,21 @@ impl<F: SolverFactory> StreamPool<F> {
                 return Err(anyhow!("solver construction failed: {e}"));
             }
         }
-        Ok(StreamPool { senders, handles, trace, trace_on, epoch })
+        Ok(StreamPool { senders, handles, trace, trace_on, faults, epoch })
+    }
+
+    /// Arm a deterministic [`FaultPlan`] (chaos testing): the next matching
+    /// dispatch / worker message fires the plan's fault points. Arming
+    /// [`FaultPlan::none`] disarms injection.
+    pub fn arm_faults(&self, plan: FaultPlan) {
+        self.faults.arm(plan);
+    }
+
+    /// Whether `worker`'s thread is still running. `false` for an
+    /// out-of-range index or a worker that died (injected kill or crash) —
+    /// the executor's recovery path reroutes work accordingly.
+    pub fn worker_alive(&self, worker: usize) -> bool {
+        self.handles.get(worker).map(|h| !h.is_finished()).unwrap_or(false)
     }
 
     /// Enable or disable [`TraceEvent`] recording (enabled by default).
@@ -169,10 +203,20 @@ impl<F: SolverFactory> StreamPool<F> {
         job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
     ) -> Result<()> {
         let epoch = self.epoch;
+        // fault injection keys on the dispatch, not the execution: the
+        // decision is taken here on the (single) scheduler thread, so the
+        // n-th dispatch is the same job on every run of the same graph
+        let fault = self.faults.on_dispatch(id);
         self.submit(worker, label, move |solver| {
             let t_start = epoch.elapsed().as_secs_f64();
             let result =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(solver)))
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match fault {
+                    FaultAction::PanicJob => panic!("injected fault: kill task {id}"),
+                    FaultAction::FailJob => {
+                        Err(anyhow!("job {id} ({label}): injected dispatch fault"))
+                    }
+                    FaultAction::None => job(solver),
+                }))
                     .unwrap_or_else(|payload| {
                         let msg = payload
                             .downcast_ref::<String>()
@@ -188,12 +232,12 @@ impl<F: SolverFactory> StreamPool<F> {
 
     /// Snapshot of the trace so far.
     pub fn trace(&self) -> Vec<TraceEvent> {
-        self.trace.lock().unwrap().clone()
+        self.trace.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// Discard the trace recorded so far.
     pub fn clear_trace(&self) {
-        self.trace.lock().unwrap().clear();
+        self.trace.lock().unwrap_or_else(|p| p.into_inner()).clear();
     }
 
     /// Seconds since pool creation (same clock as the trace).
@@ -388,5 +432,51 @@ mod tests {
     fn out_of_range_worker_rejected() {
         let pool = StreamPool::new(1, host_factory()).unwrap();
         assert!(pool.submit(5, "x", |_s| {}).is_err());
+    }
+
+    #[test]
+    fn plain_submit_panic_does_not_kill_worker() {
+        let pool = StreamPool::new(1, host_factory()).unwrap();
+        pool.submit(0, "boom", |_s| panic!("intentional")).unwrap();
+        let (tx, rx) = channel();
+        pool.submit(0, "after", move |_s| tx.send(42).unwrap()).unwrap();
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(), 42);
+        assert!(pool.worker_alive(0));
+    }
+
+    #[test]
+    fn injected_task_kill_surfaces_as_err_completion() {
+        let pool = StreamPool::new(1, host_factory()).unwrap();
+        pool.arm_faults(crate::util::faultpoint::FaultPlan {
+            kill_task: Some(5),
+            ..Default::default()
+        });
+        let (tx, rx) = channel::<JobDone<usize>>();
+        pool.submit_job(0, "job", 5, tx.clone(), move |_s: &HostSolver| Ok(1usize)).unwrap();
+        let done = rx.iter().next().unwrap();
+        let err = done.result.unwrap_err().to_string();
+        assert!(err.contains("injected fault"), "{err}");
+        // one-shot: the same id re-dispatched runs clean (the retry path)
+        pool.submit_job(0, "job", 5, tx, move |_s: &HostSolver| Ok(1usize)).unwrap();
+        assert_eq!(*rx.iter().next().unwrap().result.as_ref().unwrap(), 1);
+    }
+
+    #[test]
+    fn injected_worker_kill_flips_liveness() {
+        let pool = StreamPool::new(2, host_factory()).unwrap();
+        pool.arm_faults(crate::util::faultpoint::FaultPlan {
+            kill_worker_at: Some((0, 1)),
+            ..Default::default()
+        });
+        // the doomed worker receives its first message and exits silently —
+        // the job is dropped without any completion
+        pool.submit(0, "dropped", |_s| {}).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while pool.worker_alive(0) && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert!(!pool.worker_alive(0), "killed worker must read as dead");
+        assert!(pool.worker_alive(1), "survivor must read as alive");
+        assert!(!pool.worker_alive(7), "out of range reads as dead");
     }
 }

@@ -1,7 +1,7 @@
 //! `cargo bench`-free perf snapshots: the `mgrit bench` subcommand calls
 //! these to emit the machine-readable `BENCH_hotpath.json` /
 //! `BENCH_fig6bc.json` / `BENCH_placement.json` / `BENCH_pipeline.json` /
-//! `BENCH_topology.json` perf-trajectory records
+//! `BENCH_topology.json` / `BENCH_recovery.json` perf-trajectory records
 //! (median ns + iteration count per benchmark, tagged with the git
 //! revision) into a chosen directory — the repo root in CI, so the perf
 //! trajectory stays diffable across PRs without a bench runner.
@@ -275,6 +275,96 @@ pub fn emit_topology(out_dir: &Path) -> Result<PathBuf> {
     Ok(out_dir.join("BENCH_topology.json"))
 }
 
+/// Emit `BENCH_recovery.json` into `out_dir`: the fault-tolerance perf
+/// record — the `TrainCheckpoint` save + load round trip, a clean training
+/// step as the recovery baseline, and the same step absorbing an injected
+/// mid-graph task panic (the worker-recovery retry path), plus a table
+/// comparing the clean and recovered runs (the recovered loss must be
+/// bit-identical; only the retry count differs).
+pub fn emit_recovery(out_dir: &Path) -> Result<PathBuf> {
+    use crate::coordinator::TrainCheckpoint;
+    use crate::util::faultpoint::FaultPlan;
+    use crate::util::json;
+
+    let mut suite = Suite::new_quick("recovery");
+    suite.set_record_dir(out_dir);
+
+    let spec = Arc::new(NetSpec::micro());
+    let params = Arc::new(NetParams::init(&spec, 7)?);
+
+    // checkpoint round trip: exact-serialize to disk and parse back
+    let scratch = Path::new("target/perf-recovery-scratch");
+    std::fs::create_dir_all(scratch)?;
+    let ck_path = scratch.join("ck.json");
+    let ck = TrainCheckpoint { step: 3, params: (*params).clone() };
+    suite.bench("train_checkpoint_save_load_micro", || {
+        ck.save(&ck_path).unwrap();
+        black_box(TrainCheckpoint::load(&ck_path).unwrap());
+    });
+
+    let (sp, pp) = (spec.clone(), params.clone());
+    let factory = move |_w: usize| HostSolver::new(sp.clone(), pp.clone());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2)?;
+    let driver = ParallelMgrit::new(factory, spec.clone(), hier, 2, 1)?;
+    let mut rng = Rng::new(9);
+    let o = &spec.opening;
+    let y = Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels = [2i32];
+    let topts = MgritOptions::early_stopping(2);
+
+    // pick a victim that really dispatches: a mid-trace kernel of a clean run
+    driver.pool().clear_trace();
+    let clean = driver.train_step(&y, &labels, &topts, 0.05)?;
+    anyhow::ensure!(!clean.metrics.events.is_empty(), "clean run produced no kernel events");
+    let victim = clean.metrics.events[clean.metrics.events.len() / 2].task;
+
+    suite.bench("train_step_clean_micro_2dev", || {
+        driver.pool().clear_trace();
+        black_box(driver.train_step(&y, &labels, &topts, 0.05).unwrap());
+    });
+    suite.bench("train_step_recover_kill_task_micro_2dev", || {
+        driver.pool().clear_trace();
+        driver
+            .pool()
+            .arm_faults(FaultPlan { kill_task: Some(victim), ..FaultPlan::none() });
+        black_box(driver.train_step(&y, &labels, &topts, 0.05).unwrap());
+    });
+    driver.pool().arm_faults(FaultPlan::none());
+
+    // retry accounting: the recovered step re-dispatched at least once and
+    // still landed on the bit-identical loss
+    driver.pool().clear_trace();
+    driver.pool().arm_faults(FaultPlan { kill_task: Some(victim), ..FaultPlan::none() });
+    let recovered = driver.train_step(&y, &labels, &topts, 0.05)?;
+    driver.pool().arm_faults(FaultPlan::none());
+    anyhow::ensure!(recovered.metrics.retries >= 1, "injected kill absorbed without a retry");
+    anyhow::ensure!(
+        recovered.loss == clean.loss,
+        "recovered loss {} != clean loss {}",
+        recovered.loss,
+        clean.loss
+    );
+    suite.table(
+        "recovery_rows",
+        vec![
+            json::obj(vec![
+                ("run", json::s("clean")),
+                ("retries", json::num(clean.metrics.retries as f64)),
+                ("loss", json::num(clean.loss)),
+            ]),
+            json::obj(vec![
+                ("run", json::s("kill_task_recovered")),
+                ("victim_task", json::num(victim as f64)),
+                ("retries", json::num(recovered.metrics.retries as f64)),
+                ("loss", json::num(recovered.loss)),
+            ]),
+        ],
+    );
+    suite.finish();
+    let _ = std::fs::remove_dir_all(scratch);
+    Ok(out_dir.join("BENCH_recovery.json"))
+}
+
 /// How much a median must grow over the previous record before the delta
 /// step flags it (10% — below that, quick-iteration noise dominates).
 pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
@@ -494,6 +584,17 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(text.trim()).unwrap();
         assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "topology");
+        assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn emit_recovery_writes_record() {
+        let dir = std::path::Path::new("target/perf-recovery-selftest");
+        let path = emit_recovery(dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "recovery");
         assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
         let _ = std::fs::remove_dir_all(dir);
     }

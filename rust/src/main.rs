@@ -6,7 +6,7 @@
 //!   serve       continuous-batching inference serving through the live multi-instance runtime
 //!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|pipeline|topology|ablations
 //!   sim         one simulated MG/PM run at a given GPU count
-//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json / BENCH_topology.json
+//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json / BENCH_topology.json / BENCH_recovery.json
 //!   artifacts   check the AOT artifact manifest against the rust presets
 //!   help        this text
 
@@ -40,6 +40,7 @@ USAGE: mgrit <subcommand> [options]
               [--parallel N_DEVICES] [--granularity per_step|per_block] [--micro-batches M]
               [--pipeline-steps K] [--staleness S] [--placement min-id|heft|lookahead]
               [--nodes G] [--collective tree|ring|two-phase]
+              [--checkpoint-every N] [--checkpoint-path PATH] [--resume PATH]
                 --parallel routes every step through the whole-training-step
                 task graph (ParallelMgrit::train_step, host backend) and
                 prints a one-line speed/parity report vs the serial MG step;
@@ -63,7 +64,13 @@ USAGE: mgrit <subcommand> [options]
                 default), ring, or two-phase (reduce inside each node,
                 cross the inter-node fabric once — see `experiment
                 topology`); every collective is bit-identical to the
-                serial reference executing the same plan
+                serial reference executing the same plan;
+                --checkpoint-every N writes a step-boundary TrainCheckpoint
+                to --checkpoint-path (default mgrit-checkpoint.json) every N
+                completed steps (the pipelined loop checkpoints at window
+                ends), and --resume PATH restarts an interrupted run from
+                one — resumed training is bit-identical to never having
+                stopped (requires --parallel)
   serve       --requests N --arrival-rate R --deadline-ms D [--preset P] [--devices D]
               [--cycles C] [--inflight W] [--relax F|FC|FCF] [--granularity per_step|per_block]
               [--policy fifo|edf|shape-batch] [--max-queue Q] [--max-batch B]
@@ -97,7 +104,8 @@ USAGE: mgrit <subcommand> [options]
   sim         --preset P --gpus G [--training] [--cycles C]
   bench       [--out DIR] [--full]   quick perf snapshot; writes
               BENCH_hotpath.json + BENCH_fig6bc.json + BENCH_placement.json
-              + BENCH_pipeline.json + BENCH_topology.json into DIR (default .)
+              + BENCH_pipeline.json + BENCH_topology.json
+              + BENCH_recovery.json into DIR (default .)
   bench-delta --prev DIR [--cur DIR]   diff BENCH_*.json medians against a
               previous run's records; prints GitHub ::warning:: annotations
               for suites regressing > 10% (advisory, exit 0)
@@ -236,6 +244,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let pipeline_steps = args.usize_or("pipeline-steps", 1)?;
     let staleness = args.usize_or("staleness", 0)?;
+    let ckpt_every = args.usize_or("checkpoint-every", 0)?;
+    let ckpt = train::CheckpointConfig {
+        every: ckpt_every,
+        path: (ckpt_every > 0).then(|| {
+            std::path::PathBuf::from(args.get_or("checkpoint-path", "mgrit-checkpoint.json"))
+        }),
+        resume: args.get("resume").map(std::path::PathBuf::from),
+    };
+    if (ckpt.every > 0 || ckpt.resume.is_some()) && parallel == 0 {
+        bail!("--checkpoint-every / --resume require --parallel (the graph-runtime loops)");
+    }
+    if let Some(p) = &ckpt.resume {
+        println!("resuming from checkpoint {}", p.display());
+    }
+    if let Some(p) = &ckpt.path {
+        println!("checkpointing every {} step(s) -> {}", ckpt.every, p.display());
+    }
     if micro_batches != 1 && parallel == 0 {
         bail!("--micro-batches requires --parallel (the multi-instance graph runtime)");
     }
@@ -275,7 +300,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 placement.name(),
                 collective.name()
             );
-            let logs = train::train_parallel_pipelined_grouped(
+            let logs = train::train_parallel_pipelined_grouped_ckpt(
                 &spec,
                 &mut params,
                 &data,
@@ -288,6 +313,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 PipeSync::Staleness(staleness),
                 nodes,
                 collective,
+                &ckpt,
             )?;
             // |g| is harvested from each window's ReduceGrad roots — the
             // same reduced-gradient norm the per-step path reports
@@ -306,9 +332,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             placement.name(),
             collective.name()
         );
-        let logs = train::train_parallel_grouped(
+        let logs = train::train_parallel_grouped_ckpt(
             &spec, &mut params, &data, &tc, parallel, granularity, micro_batches, placement,
-            nodes, collective,
+            nodes, collective, &ckpt,
         )?;
         for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
             println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
@@ -641,13 +667,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let p3 = exp::perf::emit_placement(&out)?;
     let p4 = exp::perf::emit_pipeline(&out)?;
     let p5 = exp::perf::emit_topology(&out)?;
+    let p6 = exp::perf::emit_recovery(&out)?;
     println!(
-        "perf records: {} , {} , {} , {} , {}",
+        "perf records: {} , {} , {} , {} , {} , {}",
         p1.display(),
         p2.display(),
         p3.display(),
         p4.display(),
-        p5.display()
+        p5.display(),
+        p6.display()
     );
     Ok(())
 }

@@ -3,7 +3,8 @@
 //!
 //! A [`ServingRuntime`] owns a persistent [`StreamPool`] (the workers live
 //! across requests — nothing is rebuilt per request), an admission queue of
-//! [`InferRequest`]s, and a pluggable [`SchedulerPolicy`]
+//! [`InferRequest`]s, and a pluggable
+//! [`SchedulerPolicy`](super::policy::SchedulerPolicy)
 //! (`ServeConfig::policy`). [`ServingRuntime::run`] drives the scheduler
 //! loop:
 //!
@@ -39,6 +40,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail};
 
+use crate::coordinator::driver;
 use crate::coordinator::executor::ExecSession;
 use crate::coordinator::placement::{self, PlacementKind};
 use crate::coordinator::{ExecEvent, Partition, StreamPool};
@@ -50,7 +52,7 @@ use crate::solver::{NetExecutor, SolverFactory};
 use crate::tensor::Tensor;
 use crate::Result;
 
-use super::policy::{PolicyCtx, PolicyKind, QueuedRequest, SchedulerPolicy};
+use super::policy::{PolicyKind, QueuedRequest};
 use super::request::{
     argmax_classes, InferRequest, LatencySummary, RequestRecord, ShedReason, ShedRecord,
 };
@@ -304,201 +306,218 @@ where
 
     /// Drain the admission queue through the policy-driven continuous
     /// batching loop, returning when every submitted request has completed
-    /// or been shed.
+    /// or been shed. The protocol (intake → decide → retire → wait) is the
+    /// shared [`driver::drive`] loop — the virtual-time sim runs the
+    /// *identical* code — with this runtime supplying the wall-clock
+    /// mechanism through [`LiveBackend`].
     pub fn run(&mut self) -> Result<ServeReport> {
         let mut policy = self.cfg.policy.build()?;
-        let mut session = ExecSession::new(&self.pool, &self.hier);
-        let mut active: BTreeMap<usize, Pending> = BTreeMap::new();
-        let mut waiting: Vec<InferRequest> = Vec::new();
-        let mut records: Vec<RequestRecord> = Vec::new();
-        let mut sheds: Vec<ShedRecord> = Vec::new();
-        // EDF's shedding estimate: EWMA of observed PER-ROW service times
-        // (admit → last retirement, divided by the instance's coalesced
-        // leading dimension); 0 until the first completion, so the policy
-        // never speculates off nothing. The PolicyCtx scales it back up by
-        // the policy's coalesce width, so a width-B batching policy sheds
-        // against the latency of the B-row instances it actually launches
-        // rather than a raw mix of whatever widths happened to retire
-        let mut svc_est_s = 0.0f64;
-        loop {
-            // 1. intake: arrived requests enter the waiting room; a full
-            //    bounded queue sheds at the door. Same-instant arrivals are
-            //    enqueued in arrival (submission) order before any admission
-            //    decision at that instant.
-            let now = self.pool.now();
-            while self.queue.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
-                let req = self.queue.pop_front().expect("checked front");
-                if self.cfg.max_queue.map(|cap| waiting.len() >= cap).unwrap_or(false) {
-                    sheds.push(ShedRecord {
-                        id: req.id,
-                        arrival_s: req.arrival_s,
-                        shed_s: now,
-                        reason: ShedReason::QueueFull,
-                    });
-                    continue;
-                }
-                waiting.push(req);
-            }
-            // 2. decide: admissions and sheds until the policy rests (the
-            // resting decision's timer bounds the wait below)
-            let wait_hint: Option<f64> = loop {
-                let view: Vec<QueuedRequest> = waiting
-                    .iter()
-                    .map(|r| QueuedRequest {
-                        id: r.id,
-                        arrival_s: r.arrival_s,
-                        deadline_ms: r.deadline_ms,
-                        dims: r.input.dims().to_vec(),
-                    })
-                    .collect();
-                let ctx = PolicyCtx {
-                    now: self.pool.now(),
-                    free_slots: self.cfg.max_inflight.saturating_sub(active.len()),
-                    service_estimate_s: svc_est_s * policy.coalesce_width().max(1) as f64,
-                };
-                let d = policy.decide(&view, &ctx);
-                if !d.acted() {
-                    break d.wait_until;
-                }
-                // the one shared protocol implementation: validate the
-                // decision and pull its subjects out of the waiting room
-                let shed_now = self.pool.now();
-                let (group, shed) = d.apply(&mut waiting, policy.name(), ctx.free_slots)?;
-                for req in shed {
-                    sheds.push(ShedRecord {
-                        id: req.id,
-                        arrival_s: req.arrival_s,
-                        shed_s: shed_now,
-                        reason: ShedReason::DeadlineHopeless,
-                    });
-                }
-                if group.is_empty() {
-                    continue;
-                }
-                // admission time is sampled FIRST: admit_s − arrival_s is
-                // then pure queue wait (the opening conv and graph dispatch
-                // are service time, per SERVING.md §3), and complete_s — a
-                // worker-clock retirement time — can never precede admit_s
-                let admit_s = self.pool.now();
-                // coalesce: concat along the leading dim in decision order
-                // (a single-request group copies the input bitwise)
-                let parts: Vec<&Tensor> = group.iter().map(|r| &r.input).collect();
-                let joint = Tensor::concat_batch(&parts)?;
-                let rows = joint.dims()[0];
-                let u0 = self.exec.opening(&joint)?;
-                let busy = session.device_occupancy(self.partition.n_devices());
-                let (graph, pri) = self.planned_instance(rows, &busy)?;
-                let inst = match &pri {
-                    Some(p) => session.admit_prioritized(graph, &u0, p)?,
-                    None => session.admit(graph, &u0)?,
-                };
-                active.insert(inst, Pending { reqs: group, admit_s });
-            };
-            // 4. retire: harvest every finished instance, fanning a batched
-            //    instance back out to per-request records
-            let mut harvested = false;
-            while let Some(inst) = session.poll_finished() {
-                harvested = true;
-                let pending = active
-                    .remove(&inst)
-                    .ok_or_else(|| anyhow!("finished instance {inst} has no pending request"))?;
-                // the retirement time of the instance's last task — NOT the
-                // current clock, which would fold the harvest-side host work
-                // (head calls of earlier harvests, openings of fresh admits)
-                // into this request's latency and deadline verdict
-                let complete_s = session
-                    .finished_at(inst)
-                    .ok_or_else(|| anyhow!("finished instance {inst} has no completion time"))?;
-                let batched = session.final_state(inst)?;
-                session.release_instance(inst)?;
-                // normalize the observation by the instance's coalesced
-                // width: a 4-row batched instance taking 4t must not teach
-                // the EWMA that a 1-row instance takes 4t
-                let inst_rows = (*batched.dims().first().unwrap_or(&1)).max(1) as f64;
-                let obs_per_row = (complete_s - pending.admit_s) / inst_rows;
-                svc_est_s = if svc_est_s == 0.0 {
-                    obs_per_row
-                } else {
-                    0.5 * svc_est_s + 0.5 * obs_per_row
-                };
-                let mut row = 0usize;
-                for req in pending.reqs {
-                    let rows = *req.input.dims().first().unwrap_or(&1);
-                    // slice the request's rows back out, then apply the head
-                    // on the slice — the exact tensor path of the batch-1
-                    // serial reference, so coalescing cannot perturb bits
-                    let output = batched.slice_batch(row, rows)?;
-                    row += rows;
-                    let logits = self.exec.logits(&output)?;
-                    let latency_ms = (complete_s - req.arrival_s) * 1e3;
-                    let missed_deadline =
-                        req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false);
-                    records.push(RequestRecord {
-                        id: req.id,
-                        arrival_s: req.arrival_s,
-                        admit_s: pending.admit_s,
-                        complete_s,
-                        latency_ms,
-                        deadline_ms: req.deadline_ms,
-                        missed_deadline,
-                        predicted: argmax_classes(&logits),
-                        output,
-                        logits,
-                    });
-                }
-                anyhow::ensure!(
-                    row == *batched.dims().first().unwrap_or(&0),
-                    "instance {inst}: harvested rows ({row}) != batched leading dim ({})",
-                    batched.dims().first().unwrap_or(&0)
-                );
-            }
-            if active.is_empty() && waiting.is_empty() && self.queue.is_empty() {
-                break;
-            }
-            // a retirement freed window slots: admit into them immediately
-            // instead of waiting for an unrelated kernel completion first
-            if harvested {
-                continue;
-            }
-            // 3. wait: for a completion, but never past the next arrival or
-            // the policy's timer (a batch window expiring)
-            let next_arrival = self.queue.front().map(|r| r.arrival_s);
-            let bound = [next_arrival, wait_hint]
-                .into_iter()
-                .flatten()
-                .fold(f64::INFINITY, f64::min);
-            if active.is_empty() {
-                // idle until the next arrival or policy timer (real-time
-                // pacing); an idle runtime with waiting work and no timer
-                // would spin forever — that is a policy bug, not a hang
-                let dt = bound - self.pool.now();
-                if bound.is_finite() {
-                    if dt > 0.0 {
-                        std::thread::sleep(Duration::from_secs_f64(dt));
-                    }
-                    continue;
-                }
-                bail!(
-                    "policy {} deadlocked: {} waiting request(s), nothing in flight, no timer",
-                    policy.name(),
-                    waiting.len()
-                );
-            }
-            // a request may have become due (or a timer ripe) since the
-            // decision loop — go around rather than blocking on an
-            // unrelated kernel completion. ONE clock read serves both the
-            // staleness check and the timeout: re-reading between them
-            // could make `bound − now` negative (a from_secs_f64 panic)
-            let wall = self.pool.now();
-            if bound <= wall {
-                continue;
-            }
-            let timeout = bound.is_finite().then(|| Duration::from_secs_f64(bound - wall));
-            session.wait(timeout)?;
-        }
+        let (max_inflight, max_queue) = (self.cfg.max_inflight, self.cfg.max_queue);
+        let queue = std::mem::take(&mut self.queue);
+        let mut backend = LiveBackend {
+            session: ExecSession::new(&self.pool, &self.hier),
+            rt: &*self,
+            queue,
+            active: BTreeMap::new(),
+            records: Vec::new(),
+            sheds: Vec::new(),
+            svc_est_s: 0.0,
+        };
+        driver::drive(&mut backend, policy.as_mut(), max_inflight, max_queue)?;
+        let LiveBackend { session, records, sheds, .. } = backend;
         let events = session.into_report().events;
         let summary = LatencySummary::from_records(&records, sheds.len());
         Ok(ServeReport { records, sheds, events, summary })
+    }
+}
+
+/// The wall-clock mechanism under the shared [`driver::drive`] protocol:
+/// requests are real tensors, the clock is the pool clock, admission runs
+/// the opening conv and plants a graph instance on the live [`ExecSession`],
+/// and waiting blocks on kernel completions.
+struct LiveBackend<'a, F: SolverFactory>
+where
+    F::Solver: NetExecutor,
+{
+    rt: &'a ServingRuntime<F>,
+    session: ExecSession<'a, F>,
+    /// Submitted-but-not-arrived requests (taken from the runtime's queue).
+    queue: VecDeque<InferRequest>,
+    active: BTreeMap<usize, Pending>,
+    records: Vec<RequestRecord>,
+    sheds: Vec<ShedRecord>,
+    /// EDF's shedding estimate: EWMA of observed PER-ROW service times
+    /// (admit → last retirement, divided by the instance's coalesced
+    /// leading dimension); 0 until the first completion, so the policy
+    /// never speculates off nothing. The PolicyCtx scales it back up by
+    /// the policy's coalesce width, so a width-B batching policy sheds
+    /// against the latency of the B-row instances it actually launches
+    /// rather than a raw mix of whatever widths happened to retire
+    svc_est_s: f64,
+}
+
+impl<F: SolverFactory> driver::DriveBackend for LiveBackend<'_, F>
+where
+    F::Solver: NetExecutor,
+{
+    type Req = InferRequest;
+
+    fn now(&self) -> f64 {
+        self.rt.pool.now()
+    }
+
+    fn next_arrival_s(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival_s)
+    }
+
+    fn pop_arrived(&mut self, now: f64) -> Option<InferRequest> {
+        if self.queue.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
+            self.queue.pop_front()
+        } else {
+            None
+        }
+    }
+
+    fn view(&self, r: &InferRequest) -> QueuedRequest {
+        QueuedRequest {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            deadline_ms: r.deadline_ms,
+            dims: r.input.dims().to_vec(),
+        }
+    }
+
+    fn service_estimate_s(&self) -> f64 {
+        self.svc_est_s
+    }
+
+    fn shed(&mut self, req: InferRequest, at_s: f64, reason: ShedReason) {
+        self.sheds.push(ShedRecord {
+            id: req.id,
+            arrival_s: req.arrival_s,
+            shed_s: at_s,
+            reason,
+        });
+    }
+
+    fn admit(&mut self, group: Vec<InferRequest>) -> Result<()> {
+        // admission time is sampled FIRST: admit_s − arrival_s is then pure
+        // queue wait (the opening conv and graph dispatch are service time,
+        // per SERVING.md §3), and complete_s — a worker-clock retirement
+        // time — can never precede admit_s
+        let admit_s = self.rt.pool.now();
+        // coalesce: concat along the leading dim in decision order (a
+        // single-request group copies the input bitwise)
+        let parts: Vec<&Tensor> = group.iter().map(|r| &r.input).collect();
+        let joint = Tensor::concat_batch(&parts)?;
+        let rows = joint.dims()[0];
+        let u0 = self.rt.exec.opening(&joint)?;
+        let busy = self.session.device_occupancy(self.rt.partition.n_devices());
+        let (graph, pri) = self.rt.planned_instance(rows, &busy)?;
+        let inst = match &pri {
+            Some(p) => self.session.admit_prioritized(graph, &u0, p)?,
+            None => self.session.admit(graph, &u0)?,
+        };
+        self.active.insert(inst, Pending { reqs: group, admit_s });
+        Ok(())
+    }
+
+    fn poll_retire(&mut self) -> Result<bool> {
+        // harvest one finished instance, fanning a batched instance back
+        // out to per-request records
+        let Some(inst) = self.session.poll_finished() else {
+            return Ok(false);
+        };
+        let pending = self
+            .active
+            .remove(&inst)
+            .ok_or_else(|| anyhow!("finished instance {inst} has no pending request"))?;
+        // the retirement time of the instance's last task — NOT the current
+        // clock, which would fold the harvest-side host work (head calls of
+        // earlier harvests, openings of fresh admits) into this request's
+        // latency and deadline verdict
+        let complete_s = self
+            .session
+            .finished_at(inst)
+            .ok_or_else(|| anyhow!("finished instance {inst} has no completion time"))?;
+        let batched = self.session.final_state(inst)?;
+        self.session.release_instance(inst)?;
+        // normalize the observation by the instance's coalesced width: a
+        // 4-row batched instance taking 4t must not teach the EWMA that a
+        // 1-row instance takes 4t
+        let inst_rows = (*batched.dims().first().unwrap_or(&1)).max(1) as f64;
+        let obs_per_row = (complete_s - pending.admit_s) / inst_rows;
+        self.svc_est_s = if self.svc_est_s == 0.0 {
+            obs_per_row
+        } else {
+            0.5 * self.svc_est_s + 0.5 * obs_per_row
+        };
+        let mut row = 0usize;
+        for req in pending.reqs {
+            let rows = *req.input.dims().first().unwrap_or(&1);
+            // slice the request's rows back out, then apply the head on the
+            // slice — the exact tensor path of the batch-1 serial
+            // reference, so coalescing cannot perturb bits
+            let output = batched.slice_batch(row, rows)?;
+            row += rows;
+            let logits = self.rt.exec.logits(&output)?;
+            let latency_ms = (complete_s - req.arrival_s) * 1e3;
+            let missed_deadline = req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false);
+            self.records.push(RequestRecord {
+                id: req.id,
+                arrival_s: req.arrival_s,
+                admit_s: pending.admit_s,
+                complete_s,
+                latency_ms,
+                deadline_ms: req.deadline_ms,
+                missed_deadline,
+                predicted: argmax_classes(&logits),
+                output,
+                logits,
+            });
+        }
+        anyhow::ensure!(
+            row == *batched.dims().first().unwrap_or(&0),
+            "instance {inst}: harvested rows ({row}) != batched leading dim ({})",
+            batched.dims().first().unwrap_or(&0)
+        );
+        Ok(true)
+    }
+
+    fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn advance(&mut self, bound: f64, n_waiting: usize, policy_name: &'static str) -> Result<()> {
+        if self.active.is_empty() {
+            // idle until the next arrival or policy timer (real-time
+            // pacing); an idle runtime with waiting work and no timer
+            // would spin forever — that is a policy bug, not a hang
+            let dt = bound - self.rt.pool.now();
+            if bound.is_finite() {
+                if dt > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(dt));
+                }
+                return Ok(());
+            }
+            bail!(
+                "policy {} deadlocked: {} waiting request(s), nothing in flight, no timer",
+                policy_name,
+                n_waiting
+            );
+        }
+        // a request may have become due (or a timer ripe) since the
+        // decision loop — go around rather than blocking on an unrelated
+        // kernel completion. ONE clock read serves both the staleness check
+        // and the timeout: re-reading between them could make `bound − now`
+        // negative (a from_secs_f64 panic)
+        let wall = self.rt.pool.now();
+        if bound <= wall {
+            return Ok(());
+        }
+        let timeout = bound.is_finite().then(|| Duration::from_secs_f64(bound - wall));
+        self.session.wait(timeout)?;
+        Ok(())
     }
 }
 

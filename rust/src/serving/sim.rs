@@ -10,7 +10,8 @@
 //!   expressible as static edges; kept as the continuous-vs-barrier
 //!   experiment's engine.
 //! - [`simulate_serving_policy`] — the *dynamic* policy model: a
-//!   [`SchedulerPolicy`] drives a `sim::SimSession` through the same
+//!   [`SchedulerPolicy`](super::policy::SchedulerPolicy) drives a
+//!   `sim::SimSession` through the same
 //!   intake → decide → wait → retire loop the live runtime runs, in virtual
 //!   time. Admission order, shape coalescing (batched instance graphs whose
 //!   cost annotations carry the coalesced leading dimension), bounded-queue
@@ -19,6 +20,7 @@
 //!   shape-batch) be scored on the same trace and compared
 //!   (`experiments::serve::policy_comparison`).
 
+use crate::coordinator::driver;
 use crate::coordinator::placement::{self, PlacementKind};
 use crate::coordinator::Partition;
 use crate::mgrit::fas::RelaxKind;
@@ -29,7 +31,7 @@ use crate::perfmodel::ClusterModel;
 use crate::sim::{self, SimSession};
 use crate::Result;
 
-use super::policy::{PolicyCtx, PolicyKind, QueuedRequest, SchedulerPolicy};
+use super::policy::{PolicyKind, QueuedRequest};
 use super::request::{LatencySummary, ShedReason};
 
 /// Synthetic-load shape for one simulated serving run (static admission-edge
@@ -223,7 +225,8 @@ pub struct SimRequestOutcome {
 /// The deterministic outcome of one policy-driven virtual-time serving run.
 #[derive(Debug, Clone)]
 pub struct PolicyServeOutcome {
-    /// Which policy produced it ([`SchedulerPolicy::name`]).
+    /// Which policy produced it
+    /// ([`SchedulerPolicy::name`](super::policy::SchedulerPolicy::name)).
     pub policy: &'static str,
     /// Served requests, in completion order.
     pub completed: Vec<SimRequestOutcome>,
@@ -291,138 +294,30 @@ pub fn simulate_serving_policy(
     let tail: Vec<usize> =
         vec![spec.opening.in_channels, spec.opening.in_h, spec.opening.in_w];
 
-    let mut future: std::collections::VecDeque<SimRequest> = {
+    let future: std::collections::VecDeque<SimRequest> = {
         let mut v = requests.to_vec();
         v.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         v.into()
     };
-    let mut session = SimSession::new(&cluster, false);
-    let mut waiting: Vec<SimRequest> = Vec::new();
-    let mut active: std::collections::BTreeMap<usize, (Vec<SimRequest>, f64)> =
-        std::collections::BTreeMap::new();
-    let mut completed: Vec<SimRequestOutcome> = Vec::new();
-    let mut sheds: Vec<(u64, f64, ShedReason)> = Vec::new();
-    let mut instances = 0usize;
-
-    loop {
-        let now = session.now();
-        // 1. intake (bounded queue sheds at the door)
-        while future.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
-            let req = future.pop_front().expect("checked front");
-            if cfg.max_queue.map(|cap| waiting.len() >= cap).unwrap_or(false) {
-                sheds.push((req.id, now, ShedReason::QueueFull));
-                continue;
-            }
-            waiting.push(req);
-        }
-        // 2. decide until the policy rests
-        let wait_hint: Option<f64> = loop {
-            let view: Vec<QueuedRequest> = waiting
-                .iter()
-                .map(|r| {
-                    let mut dims = Vec::with_capacity(1 + tail.len());
-                    dims.push(r.rows);
-                    dims.extend_from_slice(&tail);
-                    QueuedRequest {
-                        id: r.id,
-                        arrival_s: r.arrival_s,
-                        deadline_ms: r.deadline_ms,
-                        dims,
-                    }
-                })
-                .collect();
-            let ctx = PolicyCtx {
-                now: session.now(),
-                free_slots: cfg.max_inflight.saturating_sub(active.len()),
-                service_estimate_s: svc * policy.coalesce_width().max(1) as f64,
-            };
-            let d = policy.decide(&view, &ctx);
-            if !d.acted() {
-                break d.wait_until;
-            }
-            // the one shared protocol implementation (see Decision::apply):
-            // identical validation/extraction semantics to the live runtime
-            let (group, shed) = d.apply(&mut waiting, policy.name(), ctx.free_slots)?;
-            for req in shed {
-                sheds.push((req.id, session.now(), ShedReason::DeadlineHopeless));
-            }
-            if group.is_empty() {
-                continue;
-            }
-            let rows: usize = group.iter().map(|r| r.rows).sum();
-            let admit_s = session.now();
-            // the coalesced leading dimension prices the instance's kernels:
-            // one launch per kernel amortized over `rows` requests
-            let sub = taskgraph::mg_forward_with(
-                spec,
-                hier,
-                &partition,
-                rows.max(1),
-                cfg.cycles,
-                cfg.relax,
-                cfg.granularity,
-            );
-            // same planning step as the live runtime's planned_instance —
-            // one cost model, one placement decision for both timelines
-            let inst = if cfg.placement == PlacementKind::MinId {
-                session.admit(sub)?
-            } else {
-                let p = placement::plan(cfg.placement.build().as_ref(), &sub, &cluster)?;
-                session.admit_prioritized(p.graph, &p.priority)?
-            };
-            instances += 1;
-            active.insert(inst, (group, admit_s));
-        };
-        // 3. retire
-        let mut harvested = false;
-        while let Some(inst) = session.poll_finished() {
-            harvested = true;
-            let (group, admit_s) = active
-                .remove(&inst)
-                .ok_or_else(|| anyhow::anyhow!("finished instance {inst} has no requests"))?;
-            let complete_s = session
-                .finished_at(inst)
-                .ok_or_else(|| anyhow::anyhow!("finished instance {inst} has no stamp"))?;
-            for req in group {
-                let latency_ms = (complete_s - req.arrival_s) * 1e3;
-                completed.push(SimRequestOutcome {
-                    id: req.id,
-                    arrival_s: req.arrival_s,
-                    admit_s,
-                    complete_s,
-                    latency_ms,
-                    missed_deadline: req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false),
-                });
-            }
-        }
-        if active.is_empty() && waiting.is_empty() && future.is_empty() {
-            break;
-        }
-        if harvested {
-            continue;
-        }
-        // 4. advance virtual time to the next event: a session completion,
-        // the next arrival, or the policy's timer
-        let bound = [future.front().map(|r| r.arrival_s), wait_hint]
-            .into_iter()
-            .flatten()
-            .fold(f64::INFINITY, f64::min);
-        match session.next_event_s() {
-            Some(e) if e <= bound => {
-                session.step()?;
-            }
-            _ => {
-                anyhow::ensure!(
-                    bound.is_finite() && bound > session.now(),
-                    "policy {} deadlocked at t = {} with {} waiting request(s)",
-                    policy.name(),
-                    session.now(),
-                    waiting.len()
-                );
-                session.advance_to(bound)?;
-            }
-        }
-    }
+    let mut backend = SimBackend {
+        spec,
+        hier,
+        partition: &partition,
+        cluster: &cluster,
+        cfg,
+        tail,
+        svc,
+        session: SimSession::new(&cluster, false),
+        future,
+        active: std::collections::BTreeMap::new(),
+        completed: Vec::new(),
+        sheds: Vec::new(),
+        instances: 0,
+    };
+    // the shared intake → decide → retire → wait protocol — the live
+    // runtime runs the *identical* loop over its wall-clock backend
+    driver::drive(&mut backend, policy.as_mut(), cfg.max_inflight, cfg.max_queue)?;
+    let SimBackend { session, completed, sheds, instances, .. } = backend;
 
     let makespan_s = session.now();
     let misses = completed.iter().filter(|r| r.missed_deadline).count();
@@ -439,6 +334,141 @@ pub fn simulate_serving_policy(
         makespan_s,
         summary,
     })
+}
+
+/// The virtual-time mechanism under the shared [`driver::drive`] protocol:
+/// requests are row counts, the clock is the event clock, admission prices a
+/// graph instance on the [`SimSession`], and "waiting" advances virtual time
+/// to the next event.
+struct SimBackend<'a> {
+    spec: &'a NetSpec,
+    hier: &'a Hierarchy,
+    partition: &'a Partition,
+    cluster: &'a ClusterModel,
+    cfg: &'a SimPolicyConfig,
+    /// The model's input shape minus the leading dim; rows vary per request.
+    tail: Vec<usize>,
+    /// Deterministic per-row service estimate (see [`service_estimate_s`]).
+    svc: f64,
+    session: SimSession<'a>,
+    future: std::collections::VecDeque<SimRequest>,
+    active: std::collections::BTreeMap<usize, (Vec<SimRequest>, f64)>,
+    completed: Vec<SimRequestOutcome>,
+    sheds: Vec<(u64, f64, ShedReason)>,
+    instances: usize,
+}
+
+impl driver::DriveBackend for SimBackend<'_> {
+    type Req = SimRequest;
+
+    fn now(&self) -> f64 {
+        self.session.now()
+    }
+
+    fn next_arrival_s(&self) -> Option<f64> {
+        self.future.front().map(|r| r.arrival_s)
+    }
+
+    fn pop_arrived(&mut self, now: f64) -> Option<SimRequest> {
+        if self.future.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
+            self.future.pop_front()
+        } else {
+            None
+        }
+    }
+
+    fn view(&self, r: &SimRequest) -> QueuedRequest {
+        let mut dims = Vec::with_capacity(1 + self.tail.len());
+        dims.push(r.rows);
+        dims.extend_from_slice(&self.tail);
+        QueuedRequest { id: r.id, arrival_s: r.arrival_s, deadline_ms: r.deadline_ms, dims }
+    }
+
+    fn service_estimate_s(&self) -> f64 {
+        self.svc
+    }
+
+    fn shed(&mut self, req: SimRequest, at_s: f64, reason: ShedReason) {
+        self.sheds.push((req.id, at_s, reason));
+    }
+
+    fn admit(&mut self, group: Vec<SimRequest>) -> Result<()> {
+        let rows: usize = group.iter().map(|r| r.rows).sum();
+        let admit_s = self.session.now();
+        // the coalesced leading dimension prices the instance's kernels:
+        // one launch per kernel amortized over `rows` requests
+        let sub = taskgraph::mg_forward_with(
+            self.spec,
+            self.hier,
+            self.partition,
+            rows.max(1),
+            self.cfg.cycles,
+            self.cfg.relax,
+            self.cfg.granularity,
+        );
+        // same planning step as the live runtime's planned_instance — one
+        // cost model, one placement decision for both timelines
+        let inst = if self.cfg.placement == PlacementKind::MinId {
+            self.session.admit(sub)?
+        } else {
+            let p = placement::plan(self.cfg.placement.build().as_ref(), &sub, self.cluster)?;
+            self.session.admit_prioritized(p.graph, &p.priority)?
+        };
+        self.instances += 1;
+        self.active.insert(inst, (group, admit_s));
+        Ok(())
+    }
+
+    fn poll_retire(&mut self) -> Result<bool> {
+        let Some(inst) = self.session.poll_finished() else {
+            return Ok(false);
+        };
+        let (group, admit_s) = self
+            .active
+            .remove(&inst)
+            .ok_or_else(|| anyhow::anyhow!("finished instance {inst} has no requests"))?;
+        let complete_s = self
+            .session
+            .finished_at(inst)
+            .ok_or_else(|| anyhow::anyhow!("finished instance {inst} has no stamp"))?;
+        for req in group {
+            let latency_ms = (complete_s - req.arrival_s) * 1e3;
+            self.completed.push(SimRequestOutcome {
+                id: req.id,
+                arrival_s: req.arrival_s,
+                admit_s,
+                complete_s,
+                latency_ms,
+                missed_deadline: req.deadline_ms.map(|d| latency_ms > d).unwrap_or(false),
+            });
+        }
+        Ok(true)
+    }
+
+    fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn advance(&mut self, bound: f64, n_waiting: usize, policy_name: &'static str) -> Result<()> {
+        // advance virtual time to the next event: a session completion, the
+        // next arrival, or the policy's timer
+        match self.session.next_event_s() {
+            Some(e) if e <= bound => {
+                self.session.step()?;
+            }
+            _ => {
+                anyhow::ensure!(
+                    bound.is_finite() && bound > self.session.now(),
+                    "policy {} deadlocked at t = {} with {} waiting request(s)",
+                    policy_name,
+                    self.session.now(),
+                    n_waiting
+                );
+                self.session.advance_to(bound)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -41,7 +41,7 @@ use std::sync::Arc;
 
 use anyhow::bail;
 
-use crate::coordinator::PlacementKind;
+use crate::coordinator::{PlacementKind, TrainCheckpoint};
 use crate::data::{Dataset, StepSampler};
 use crate::mgrit::taskgraph::PipeSync;
 use crate::mgrit::{self, Collective, Granularity, Hierarchy, MgritOptions};
@@ -363,6 +363,61 @@ pub fn mg_step_serial_micro_plan<E: NetExecutor>(
     Ok(SerialMicroOutput { loss, grads, params: updated, per_instance })
 }
 
+/// Step-boundary checkpointing for the parallel training loops: write a
+/// [`TrainCheckpoint`] every `every` completed steps to `path`, and/or
+/// resume from one before training. Checkpoints are taken **between** steps
+/// (the executor is quiescent, the parameters exact), and every quantity a
+/// step consumes besides the parameters — batch schedule, hierarchy,
+/// learning rate — is a pure function of the config and the step index, so
+/// interrupt → resume → finish is bit-identical to the uninterrupted run
+/// (asserted by `tests/fault_integration.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointConfig {
+    /// Write a checkpoint after every this-many completed steps (0 = never).
+    /// The pipelined loop rounds up to its next window boundary — windows
+    /// are atomic, so a cut can only land between them.
+    pub every: usize,
+    /// Where checkpoints are written (required when `every > 0`); each save
+    /// overwrites the last.
+    pub path: Option<std::path::PathBuf>,
+    /// Resume from this checkpoint before training: its `params` replace the
+    /// caller's and its `step` marks the steps already done (only steps
+    /// `step..cfg.steps` run, and only their logs are returned).
+    pub resume: Option<std::path::PathBuf>,
+}
+
+impl CheckpointConfig {
+    fn validate(&self) -> Result<()> {
+        if self.every > 0 && self.path.is_none() {
+            bail!("checkpoint interval set but no checkpoint path given");
+        }
+        Ok(())
+    }
+
+    /// Load the resume checkpoint, if configured, and bound-check it.
+    fn load_resume(&self, total_steps: usize) -> Result<Option<TrainCheckpoint>> {
+        let Some(p) = &self.resume else { return Ok(None) };
+        let ck = TrainCheckpoint::load(p)?;
+        if ck.step > total_steps {
+            bail!(
+                "checkpoint is at step {} but the run only has {total_steps} step(s)",
+                ck.step
+            );
+        }
+        Ok(Some(ck))
+    }
+
+    /// Save a checkpoint at completed-step count `step` if the interval says
+    /// a boundary in `(prev_step, step]` is due.
+    fn maybe_save(&self, prev_step: usize, step: usize, params: &NetParams) -> Result<()> {
+        if self.every == 0 || step / self.every == prev_step / self.every {
+            return Ok(());
+        }
+        let path = self.path.as_ref().expect("validated: every > 0 has a path");
+        TrainCheckpoint { step, params: params.clone() }.save(path)
+    }
+}
+
 /// The training hierarchy `Method::Mgrit` implies (what `solve_forward`
 /// builds internally): coarsening 4, the default level cap and coarse floor.
 pub fn training_hierarchy(spec: &NetSpec) -> Result<Hierarchy> {
@@ -434,6 +489,41 @@ pub fn train_parallel_grouped(
     n_groups: usize,
     collective: Collective,
 ) -> Result<Vec<StepLog>> {
+    train_parallel_grouped_ckpt(
+        spec,
+        params,
+        data,
+        cfg,
+        n_devices,
+        granularity,
+        micro_batches,
+        placement,
+        n_groups,
+        collective,
+        &CheckpointConfig::default(),
+    )
+}
+
+/// As [`train_parallel_grouped`] with step-boundary checkpoint/resume
+/// ([`CheckpointConfig`]). A resumed run replays the batch-selection PRNG
+/// through the already-completed steps (one `sample_batch` draw per step —
+/// the loop's only consumption of the stream), so steps `ck.step..` see
+/// exactly the batches the interrupted run would have, and resuming is
+/// bit-identical to never having stopped.
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_grouped_ckpt(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    n_groups: usize,
+    collective: Collective,
+    ckpt: &CheckpointConfig,
+) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
     }
@@ -446,11 +536,23 @@ pub fn train_parallel_grouped(
             cfg.batch
         );
     }
+    ckpt.validate()?;
+    let start = match ckpt.load_resume(cfg.steps)? {
+        Some(ck) => {
+            *params = ck.params;
+            ck.step
+        }
+        None => 0,
+    };
     let hier = training_hierarchy(spec)?;
     let opts = MgritOptions::early_stopping(cycles);
     let mut rng = Rng::new(cfg.seed);
-    let mut logs = Vec::with_capacity(cfg.steps);
-    for step in 0..cfg.steps {
+    // replay the completed steps' draws so the stream position matches
+    for _ in 0..start {
+        let _ = data.sample_batch(cfg.batch, &mut rng)?;
+    }
+    let mut logs = Vec::with_capacity(cfg.steps - start);
+    for step in start..cfg.steps {
         let (y, labels) = data.sample_batch(cfg.batch, &mut rng)?;
         // workers hold immutable parameter snapshots — rebuild the pool per
         // step (the moral equivalent of re-uploading weights to the devices)
@@ -473,6 +575,7 @@ pub fn train_parallel_grouped(
         let grad_norm = out.grads.global_norm();
         *params = out.params;
         logs.push(StepLog { step, loss: out.loss, grad_norm });
+        ckpt.maybe_save(step, step + 1, params)?;
     }
     Ok(logs)
 }
@@ -544,6 +647,48 @@ pub fn train_parallel_pipelined_grouped(
     n_groups: usize,
     collective: Collective,
 ) -> Result<Vec<StepLog>> {
+    train_parallel_pipelined_grouped_ckpt(
+        spec,
+        params,
+        data,
+        cfg,
+        n_devices,
+        granularity,
+        micro_batches,
+        placement,
+        k_steps,
+        sync,
+        n_groups,
+        collective,
+        &CheckpointConfig::default(),
+    )
+}
+
+/// As [`train_parallel_pipelined_grouped`] with window-boundary
+/// checkpoint/resume ([`CheckpointConfig`]). Windows are atomic — a
+/// checkpoint lands at the first window end on or past each interval
+/// boundary, and a resume starts a fresh window exactly there. Because every
+/// checkpoint sits on a window end, the resumed run re-creates the
+/// *identical* window partition the uninterrupted run walks (windows advance
+/// `k_steps` at a time from step 0), and [`StepSampler`] makes step t's
+/// batch a pure function of `(seed, t)` — so resume is bit-identical at any
+/// staleness, not just S = 0.
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_pipelined_grouped_ckpt(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    k_steps: usize,
+    sync: PipeSync,
+    n_groups: usize,
+    collective: Collective,
+    ckpt: &CheckpointConfig,
+) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
     }
@@ -559,11 +704,25 @@ pub fn train_parallel_pipelined_grouped(
             cfg.batch
         );
     }
+    ckpt.validate()?;
+    let start = match ckpt.load_resume(cfg.steps)? {
+        Some(ck) => {
+            if ck.step % k_steps != 0 && ck.step != cfg.steps {
+                bail!(
+                    "checkpoint at step {} is not a window boundary (k_steps = {k_steps})",
+                    ck.step
+                );
+            }
+            *params = ck.params;
+            ck.step
+        }
+        None => 0,
+    };
     let hier = training_hierarchy(spec)?;
     let opts = MgritOptions::early_stopping(cycles);
     let sampler = StepSampler::new(cfg.seed);
-    let mut logs = Vec::with_capacity(cfg.steps);
-    let mut step = 0usize;
+    let mut logs = Vec::with_capacity(cfg.steps - start);
+    let mut step = start;
     while step < cfg.steps {
         let k = k_steps.min(cfg.steps - step);
         let (y, labels) = sampler.superbatch(data, step, k, cfg.batch)?;
@@ -589,6 +748,7 @@ pub fn train_parallel_pipelined_grouped(
         for (i, loss) in out.losses.iter().enumerate() {
             logs.push(StepLog { step: step + i, loss: *loss, grad_norm: out.grad_norms[i] });
         }
+        ckpt.maybe_save(step, step + k, params)?;
         step += k;
     }
     Ok(logs)

@@ -1,0 +1,215 @@
+//! Deterministic, seed-keyed fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] names at most a handful of *fault points* — a task whose
+//! job body panics, a worker thread that dies silently, a dispatch that
+//! fails — and a [`FaultState`] armed with the plan fires each point exactly
+//! once at a position that is a pure function of the plan, never of wall
+//! clock or thread timing:
+//!
+//! - `kill_task` keys on the **graph task id** carried by every
+//!   `StreamPool::submit_job` call — the same task panics no matter how the
+//!   scheduler interleaves dispatches;
+//! - `fail_nth_dispatch` keys on the **global dispatch counter**, which only
+//!   the single scheduler thread advances, so the n-th dispatch is the same
+//!   job on every run of the same graph;
+//! - `kill_worker_at` keys on a per-worker **message receipt count** — each
+//!   worker's channel is FIFO and fed by one scheduler, so "worker w dies
+//!   on its k-th job" is reproducible.
+//!
+//! `tests/fault_integration.rs` drives every recovery path through these
+//! hooks; [`FaultPlan::from_seed`] derives a plan from a single seed so a CI
+//! chaos matrix is just a list of seeds.
+
+use std::sync::Mutex;
+
+use crate::util::prng::Rng;
+
+/// What an armed fault point asks the dispatch path to do with one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault here: run the job normally.
+    None,
+    /// Replace the job's result with an `Err` (a clean task failure).
+    FailJob,
+    /// Panic inside the job body (exercises the `catch_unwind` boundary).
+    PanicJob,
+}
+
+/// A deterministic chaos scenario: each field is one optional fault point.
+/// Every point fires at most once per armed plan.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic the job body of this graph task id, wherever it is dispatched.
+    pub kill_task: Option<usize>,
+    /// `(worker, n)`: worker `worker` dies silently — thread exits without
+    /// running or acknowledging the job — upon receiving its `n`-th job
+    /// message (1-based).
+    pub kill_worker_at: Option<(usize, usize)>,
+    /// Fail the `n`-th dispatched job overall (1-based, in scheduler
+    /// dispatch order) with a clean `Err`.
+    pub fail_nth_dispatch: Option<usize>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults fire.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Derive one fault point from `seed`: a pure function of
+    /// `(seed, n_workers, n_tasks)`, so a chaos run is reproducible from its
+    /// seed alone. Cycles through the three fault kinds as the seed varies.
+    pub fn from_seed(seed: u64, n_workers: usize, n_tasks: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xfa17_fa17_fa17_fa17);
+        let n_tasks = n_tasks.max(1);
+        let n_workers = n_workers.max(1);
+        match rng.below(3) {
+            0 => FaultPlan { kill_task: Some(rng.below(n_tasks)), ..FaultPlan::default() },
+            1 => FaultPlan {
+                kill_worker_at: Some((rng.below(n_workers), 1 + rng.below(4))),
+                ..FaultPlan::default()
+            },
+            _ => FaultPlan {
+                fail_nth_dispatch: Some(1 + rng.below(n_tasks)),
+                ..FaultPlan::default()
+            },
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct FaultCounters {
+    plan: FaultPlan,
+    /// Global dispatch count (jobs submitted so far).
+    dispatches: usize,
+    /// Per-worker job-message receipt count.
+    worker_msgs: Vec<usize>,
+    task_fired: bool,
+    dispatch_fired: bool,
+    worker_fired: bool,
+}
+
+/// The armed, counting half of fault injection: owned by a `StreamPool`,
+/// consulted at every dispatch and every worker message receipt. With no
+/// plan armed (the default) every query is a cheap no-fault answer, so
+/// production paths pay one mutex lock per dispatch and nothing else.
+#[derive(Debug)]
+pub struct FaultState {
+    inner: Mutex<FaultCounters>,
+}
+
+impl FaultState {
+    /// Unarmed state for a pool of `n_workers` workers.
+    pub fn new(n_workers: usize) -> FaultState {
+        FaultState {
+            inner: Mutex::new(FaultCounters {
+                worker_msgs: vec![0; n_workers],
+                ..FaultCounters::default()
+            }),
+        }
+    }
+
+    /// Arm `plan`, resetting all counters and one-shot latches. Arming the
+    /// empty plan disarms fault injection.
+    pub fn arm(&self, plan: FaultPlan) {
+        let mut g = self.lock();
+        let n = g.worker_msgs.len();
+        *g = FaultCounters { plan, worker_msgs: vec![0; n], ..FaultCounters::default() };
+    }
+
+    /// Record one job dispatch for graph task `task_id` and return the fault
+    /// action (if any) the dispatch path must apply to this job.
+    pub fn on_dispatch(&self, task_id: usize) -> FaultAction {
+        let mut g = self.lock();
+        g.dispatches += 1;
+        if !g.task_fired && g.plan.kill_task == Some(task_id) {
+            g.task_fired = true;
+            return FaultAction::PanicJob;
+        }
+        if !g.dispatch_fired && g.plan.fail_nth_dispatch == Some(g.dispatches) {
+            g.dispatch_fired = true;
+            return FaultAction::FailJob;
+        }
+        FaultAction::None
+    }
+
+    /// Record one job-message receipt on `worker`; `true` means the worker
+    /// must die silently *now* — before running the job, without reporting
+    /// a completion.
+    pub fn on_worker_msg(&self, worker: usize) -> bool {
+        let mut g = self.lock();
+        if worker >= g.worker_msgs.len() {
+            g.worker_msgs.resize(worker + 1, 0);
+        }
+        g.worker_msgs[worker] += 1;
+        if !g.worker_fired && g.plan.kill_worker_at == Some((worker, g.worker_msgs[worker])) {
+            g.worker_fired = true;
+            return true;
+        }
+        false
+    }
+
+    /// Poison-tolerant lock: a worker that panicked mid-job never holds this
+    /// mutex across the panic, so inheriting a poisoned guard is always safe.
+    fn lock(&self) -> std::sync::MutexGuard<'_, FaultCounters> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_points_fire_once_at_their_key() {
+        let st = FaultState::new(2);
+        st.arm(FaultPlan { kill_task: Some(7), fail_nth_dispatch: Some(3), ..FaultPlan::none() });
+        assert_eq!(st.on_dispatch(1), FaultAction::None); // dispatch 1
+        assert_eq!(st.on_dispatch(7), FaultAction::PanicJob); // task key wins
+        assert_eq!(st.on_dispatch(7), FaultAction::FailJob); // dispatch 3, task latched
+        assert_eq!(st.on_dispatch(7), FaultAction::None); // both latched
+    }
+
+    #[test]
+    fn worker_kill_fires_on_nth_message_only() {
+        let st = FaultState::new(2);
+        st.arm(FaultPlan { kill_worker_at: Some((1, 2)), ..FaultPlan::none() });
+        assert!(!st.on_worker_msg(0));
+        assert!(!st.on_worker_msg(1)); // worker 1, msg 1
+        assert!(st.on_worker_msg(1)); // worker 1, msg 2 → dies
+        assert!(!st.on_worker_msg(1)); // latched
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_in_range() {
+        for seed in 0..64u64 {
+            let a = FaultPlan::from_seed(seed, 4, 100);
+            let b = FaultPlan::from_seed(seed, 4, 100);
+            assert_eq!(a, b);
+            let armed = usize::from(a.kill_task.is_some())
+                + usize::from(a.kill_worker_at.is_some())
+                + usize::from(a.fail_nth_dispatch.is_some());
+            assert_eq!(armed, 1, "from_seed arms exactly one point");
+            if let Some(t) = a.kill_task {
+                assert!(t < 100);
+            }
+            if let Some((w, n)) = a.kill_worker_at {
+                assert!(w < 4 && n >= 1);
+            }
+            if let Some(n) = a.fail_nth_dispatch {
+                assert!(n >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn rearming_resets_counters() {
+        let st = FaultState::new(1);
+        st.arm(FaultPlan { fail_nth_dispatch: Some(1), ..FaultPlan::none() });
+        assert_eq!(st.on_dispatch(0), FaultAction::FailJob);
+        st.arm(FaultPlan { fail_nth_dispatch: Some(1), ..FaultPlan::none() });
+        assert_eq!(st.on_dispatch(0), FaultAction::FailJob, "counters reset on re-arm");
+        st.arm(FaultPlan::none());
+        assert_eq!(st.on_dispatch(0), FaultAction::None);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod faultpoint;
 pub mod json;
 pub mod prng;
 pub mod proptest_lite;

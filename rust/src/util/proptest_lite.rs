@@ -64,6 +64,11 @@ pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     lo + rng.below(hi - lo + 1)
 }
 
+/// Bernoulli(1/2) draw.
+pub fn gen_bool(rng: &mut Rng) -> bool {
+    rng.below(2) == 1
+}
+
 /// Vector of standard-normal f32 scaled by `scale`.
 pub fn gen_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
     let mut v = vec![0.0; len];

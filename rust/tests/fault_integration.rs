@@ -1,0 +1,520 @@
+//! Deterministic fault-injection integration: the fault-tolerance layer's
+//! proof obligations. Every scenario is driven through the seed-keyed
+//! `util::faultpoint` hooks — no timing, no flakiness — and every recovery
+//! path must land BIT-IDENTICAL to the serial reference or the
+//! uninterrupted run:
+//!
+//! - an injected task panic is absorbed at any device count (retry on the
+//!   caught-panic path), bit-identical to `train::mg_step_serial_micro`;
+//! - a silently dying worker is survivable whenever a surviving worker
+//!   exists (re-dispatch onto survivors), and surfaces as the typed
+//!   `ExecError::WorkerLost` — not a hang — when none does;
+//! - checkpoint → resume → finish of the training loops (plain,
+//!   micro-batched, pipelined) equals never having stopped;
+//! - a mid-graph `ExecSession` snapshot resumes through its JSON round
+//!   trip, re-executing exactly the un-retired task set (property-tested
+//!   over arbitrary checkpoint cuts, replayable via `PROPTEST_SEED`).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use resnet_mgrit::coordinator::{
+    ExecError, ExecSession, InstanceGroups, MultiExecState, ParallelMgrit, Partition,
+    PlacementKind, SessionSnapshot, StreamPool,
+};
+use resnet_mgrit::data::Dataset;
+use resnet_mgrit::mgrit::fas::RelaxKind;
+use resnet_mgrit::mgrit::hierarchy::Hierarchy;
+use resnet_mgrit::mgrit::taskgraph::{self, PipeSync};
+use resnet_mgrit::mgrit::{Collective, Granularity, MgritOptions};
+use resnet_mgrit::model::{NetParams, NetSpec};
+use resnet_mgrit::solver::host::HostSolver;
+use resnet_mgrit::tensor::Tensor;
+use resnet_mgrit::train::{self, CheckpointConfig, Method, TrainConfig};
+use resnet_mgrit::util::faultpoint::FaultPlan;
+use resnet_mgrit::util::prng::Rng;
+use resnet_mgrit::util::proptest_lite::{self, gen_usize};
+
+/// Bitwise equality over every parameter tensor — the recovery layer's
+/// contract is exact re-execution, so no tolerance is ever appropriate.
+fn assert_params_bit_eq(a: &NetParams, b: &NetParams, what: &str) {
+    assert!(a.w_open.data() == b.w_open.data(), "{what}: w_open differs");
+    assert!(a.b_open.data() == b.b_open.data(), "{what}: b_open differs");
+    assert_eq!(a.trunk.len(), b.trunk.len(), "{what}: trunk depth differs");
+    for (i, ((aw, ab), (bw, bb))) in a.trunk.iter().zip(&b.trunk).enumerate() {
+        assert!(aw.data() == bw.data(), "{what}: trunk[{i}] weight differs");
+        assert!(ab.data() == bb.data(), "{what}: trunk[{i}] bias differs");
+    }
+    assert!(a.w_fc.data() == b.w_fc.data(), "{what}: w_fc differs");
+    assert!(a.b_fc.data() == b.b_fc.data(), "{what}: b_fc differs");
+}
+
+/// mnist geometry truncated to 16 layers: 4 fine-level blocks under the
+/// training hierarchy, so the device matrix {1, 2, 4} all partition evenly.
+fn small_mnist_spec() -> Arc<NetSpec> {
+    let mut s = NetSpec::mnist();
+    s.trunk.truncate(16);
+    s.t_final = 1.0;
+    Arc::new(s)
+}
+
+/// Synthetic micro-preset dataset (6x6 single-channel images).
+fn micro_dataset(n: usize, seed: u64) -> Dataset {
+    let spec = NetSpec::micro();
+    let o = &spec.opening;
+    let mut rng = Rng::new(seed);
+    let images = (0..n)
+        .map(|_| Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.8, &mut rng))
+        .collect();
+    let labels = (0..n).map(|i| (i % 10) as i32).collect();
+    Dataset { images, labels }
+}
+
+// ---------------------------------------------------------------------------
+// worker recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_device_worker_death_is_a_typed_error_not_a_hang() {
+    // regression guard: before the recovery layer, a dead worker left the
+    // scheduler blocked forever on a completion that could never arrive
+    let spec = Arc::new(NetSpec::micro());
+    let params = Arc::new(NetParams::init(&spec, 60).unwrap());
+    let (s2, p2) = (spec.clone(), params.clone());
+    let factory = move |_w: usize| HostSolver::new(s2.clone(), p2.clone());
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+    let drv = ParallelMgrit::new(factory, spec.clone(), hier, 1, 1).unwrap();
+
+    drv.pool().arm_faults(FaultPlan { kill_worker_at: Some((0, 1)), ..FaultPlan::none() });
+    let o = &spec.opening;
+    let mut rng = Rng::new(61);
+    let y = Tensor::randn(&[1, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let err = drv
+        .train_step(&y, &[3i32], &MgritOptions::early_stopping(1), 0.05)
+        .expect_err("the only worker died: the step cannot succeed");
+    match err.downcast_ref::<ExecError>() {
+        Some(ExecError::WorkerLost { worker, .. }) => assert_eq!(*worker, 0),
+        other => panic!("expected ExecError::WorkerLost, got {other:?} ({err:#})"),
+    }
+}
+
+#[test]
+fn injected_task_panic_recovers_bit_identically_across_device_counts() {
+    let spec = small_mnist_spec();
+    let hier = train::training_hierarchy(&spec).unwrap();
+    let params = Arc::new(NetParams::init(&spec, 62).unwrap());
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let mut rng = Rng::new(63);
+    let o = &spec.opening;
+    let y = Tensor::randn(&[2, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels = [3i32, 7];
+    let opts = MgritOptions::early_stopping(2);
+    let serial =
+        train::mg_step_serial_micro(&spec, &exec, &y, &labels, &hier, &opts, 0.05, 1).unwrap();
+
+    for n_dev in [1usize, 2, 4] {
+        let (s2, p2) = (spec.clone(), params.clone());
+        let factory = move |_w: usize| HostSolver::new(s2.clone(), p2.clone());
+        let drv =
+            ParallelMgrit::new(factory, spec.clone(), hier.clone(), n_dev, 2).unwrap();
+        let clean = drv.train_step(&y, &labels, &opts, 0.05).unwrap();
+        assert_eq!(clean.loss, serial.loss, "{n_dev} devices: clean loss != serial");
+        assert_params_bit_eq(&clean.params, &serial.params, "clean vs serial");
+        assert_eq!(clean.metrics.retries, 0, "fault-free run recorded retries");
+
+        // one victim per execution phase: the first task of each distinct
+        // kernel label is a phase boundary in dispatch order
+        let mut victims: Vec<(&'static str, usize)> = Vec::new();
+        let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+        for e in &clean.metrics.events {
+            if seen.insert(e.label) {
+                victims.push((e.label, e.task));
+            }
+        }
+        assert!(victims.len() >= 3, "{n_dev} devices: too few phases ({victims:?})");
+        victims.truncate(5);
+        for (label, task) in victims {
+            drv.pool()
+                .arm_faults(FaultPlan { kill_task: Some(task), ..FaultPlan::none() });
+            let out = drv.train_step(&y, &labels, &opts, 0.05).unwrap_or_else(|e| {
+                panic!("{n_dev} devices: kill of {label} task {task} not absorbed: {e:#}")
+            });
+            assert!(
+                out.metrics.retries >= 1,
+                "{n_dev} devices: kill of {label} task {task} absorbed without a retry"
+            );
+            assert_eq!(out.loss, serial.loss, "{n_dev} devices, {label}: loss differs");
+            assert_params_bit_eq(
+                &out.params,
+                &serial.params,
+                &format!("{n_dev} devices, killed {label} task {task}"),
+            );
+        }
+        drv.pool().arm_faults(FaultPlan::none());
+    }
+}
+
+#[test]
+fn silent_worker_death_recovers_on_survivors() {
+    let spec = small_mnist_spec();
+    let hier = train::training_hierarchy(&spec).unwrap();
+    let params = Arc::new(NetParams::init(&spec, 64).unwrap());
+    let exec = HostSolver::new(spec.clone(), params.clone()).unwrap();
+    let mut rng = Rng::new(65);
+    let o = &spec.opening;
+    let y = Tensor::randn(&[2, o.in_channels, o.in_h, o.in_w], 0.5, &mut rng);
+    let labels = [1i32, 8];
+    let opts = MgritOptions::early_stopping(2);
+    let serial =
+        train::mg_step_serial_micro(&spec, &exec, &y, &labels, &hier, &opts, 0.05, 1).unwrap();
+
+    // (devices, doomed worker, receipt count that kills it): early and
+    // mid-stream deaths, every worker index covered at some device count
+    let scenarios: &[(usize, usize, usize)] = &[
+        (2, 0, 1),
+        (2, 1, 1),
+        (2, 0, 3),
+        (4, 0, 1),
+        (4, 1, 1),
+        (4, 2, 1),
+        (4, 3, 2),
+    ];
+    for &(n_dev, worker, msg) in scenarios {
+        // fresh driver per scenario: a killed worker stays dead
+        let (s2, p2) = (spec.clone(), params.clone());
+        let factory = move |_w: usize| HostSolver::new(s2.clone(), p2.clone());
+        let drv =
+            ParallelMgrit::new(factory, spec.clone(), hier.clone(), n_dev, 2).unwrap();
+        drv.pool().arm_faults(FaultPlan {
+            kill_worker_at: Some((worker, msg)),
+            ..FaultPlan::none()
+        });
+        let out = drv.train_step(&y, &labels, &opts, 0.05).unwrap_or_else(|e| {
+            panic!("{n_dev} devices: death of worker {worker} at msg {msg} not survived: {e:#}")
+        });
+        assert!(!drv.pool().worker_alive(worker), "doomed worker still reads alive");
+        assert!(
+            out.metrics.retries >= 1,
+            "{n_dev} devices: worker {worker} died with no re-dispatch recorded"
+        );
+        assert_eq!(
+            out.loss, serial.loss,
+            "{n_dev} devices, worker {worker} at msg {msg}: loss differs"
+        );
+        assert_params_bit_eq(
+            &out.params,
+            &serial.params,
+            &format!("{n_dev} devices, worker {worker} died at msg {msg}"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// training-loop checkpoint / resume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grouped_training_resumes_bit_identically_at_each_micro_batching() {
+    let spec = Arc::new(NetSpec::micro());
+    let data = micro_dataset(24, 70);
+    let dir = std::path::Path::new("target/fault-ckpt-grouped");
+    std::fs::create_dir_all(dir).unwrap();
+
+    for micro in [1usize, 2, 4] {
+        let cfg = TrainConfig {
+            steps: 4,
+            batch: 4,
+            lr: 0.05,
+            method: Method::Mgrit { cycles: 2 },
+            seed: 71,
+        };
+        let run = |params: &mut NetParams, cfg: &TrainConfig, ckpt: &CheckpointConfig| {
+            train::train_parallel_grouped_ckpt(
+                &spec,
+                params,
+                &data,
+                cfg,
+                2,
+                Granularity::PerStep,
+                micro,
+                PlacementKind::MinId,
+                1,
+                Collective::Tree,
+                ckpt,
+            )
+            .unwrap()
+        };
+
+        // the uninterrupted reference
+        let mut p_ref = NetParams::init(&spec, 72).unwrap();
+        let logs_ref = run(&mut p_ref, &cfg, &CheckpointConfig::default());
+
+        // interrupted: stop after 2 steps, checkpointing at the boundary...
+        let path = dir.join(format!("m{micro}.json"));
+        let mut p_leg1 = NetParams::init(&spec, 72).unwrap();
+        let cfg_leg1 = TrainConfig { steps: 2, ..cfg.clone() };
+        run(
+            &mut p_leg1,
+            &cfg_leg1,
+            &CheckpointConfig { every: 2, path: Some(path.clone()), resume: None },
+        );
+
+        // ...then resume from garbage parameters: only the checkpoint counts
+        let mut p_resumed = NetParams::init(&spec, 999).unwrap();
+        let logs_tail = run(
+            &mut p_resumed,
+            &cfg,
+            &CheckpointConfig { every: 0, path: None, resume: Some(path) },
+        );
+
+        assert_params_bit_eq(&p_resumed, &p_ref, &format!("micro {micro} resumed params"));
+        assert_eq!(logs_tail.len(), 2, "resume replays completed steps");
+        for (got, want) in logs_tail.iter().zip(&logs_ref[2..]) {
+            assert_eq!(got.step, want.step);
+            assert_eq!(got.loss, want.loss, "micro {micro}, step {}: loss", got.step);
+            assert_eq!(
+                got.grad_norm, want.grad_norm,
+                "micro {micro}, step {}: grad norm",
+                got.step
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pipelined_training_resumes_bit_identically_at_each_staleness() {
+    let spec = Arc::new(NetSpec::micro());
+    let data = micro_dataset(24, 73);
+    let dir = std::path::Path::new("target/fault-ckpt-pipelined");
+    std::fs::create_dir_all(dir).unwrap();
+
+    for staleness in [0usize, 1] {
+        let cfg = TrainConfig {
+            steps: 4,
+            batch: 2,
+            lr: 0.05,
+            method: Method::Mgrit { cycles: 2 },
+            seed: 74,
+        };
+        let run = |params: &mut NetParams, cfg: &TrainConfig, ckpt: &CheckpointConfig| {
+            train::train_parallel_pipelined_grouped_ckpt(
+                &spec,
+                params,
+                &data,
+                cfg,
+                2,
+                Granularity::PerStep,
+                1,
+                PlacementKind::MinId,
+                2,
+                PipeSync::Staleness(staleness),
+                1,
+                Collective::Tree,
+                ckpt,
+            )
+            .unwrap()
+        };
+
+        let mut p_ref = NetParams::init(&spec, 75).unwrap();
+        let logs_ref = run(&mut p_ref, &cfg, &CheckpointConfig::default());
+
+        // checkpoint lands on the window boundary after step 2
+        let path = dir.join(format!("s{staleness}.json"));
+        let mut p_leg1 = NetParams::init(&spec, 75).unwrap();
+        let cfg_leg1 = TrainConfig { steps: 2, ..cfg.clone() };
+        run(
+            &mut p_leg1,
+            &cfg_leg1,
+            &CheckpointConfig { every: 2, path: Some(path.clone()), resume: None },
+        );
+
+        let mut p_resumed = NetParams::init(&spec, 999).unwrap();
+        let logs_tail = run(
+            &mut p_resumed,
+            &cfg,
+            &CheckpointConfig { every: 0, path: None, resume: Some(path.clone()) },
+        );
+
+        assert_params_bit_eq(&p_resumed, &p_ref, &format!("S = {staleness} resumed params"));
+        assert_eq!(logs_tail.len(), 2);
+        for (got, want) in logs_tail.iter().zip(&logs_ref[2..]) {
+            assert_eq!(got.step, want.step);
+            assert_eq!(got.loss, want.loss, "S = {staleness}, step {}: loss", got.step);
+            assert_eq!(
+                got.grad_norm, want.grad_norm,
+                "S = {staleness}, step {}: grad norm",
+                got.step
+            );
+        }
+
+        // a cut that is NOT a window boundary is refused, not silently wrong
+        let mut bad = resnet_mgrit::coordinator::TrainCheckpoint::load(&path).unwrap();
+        bad.step = 1;
+        bad.save(&path).unwrap();
+        let mut p = NetParams::init(&spec, 75).unwrap();
+        let err = train::train_parallel_pipelined_grouped_ckpt(
+            &spec,
+            &mut p,
+            &data,
+            &cfg,
+            2,
+            Granularity::PerStep,
+            1,
+            PlacementKind::MinId,
+            2,
+            PipeSync::Staleness(staleness),
+            1,
+            Collective::Tree,
+            &CheckpointConfig { every: 0, path: None, resume: Some(path) },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("window boundary"), "{err:#}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+// ---------------------------------------------------------------------------
+// mid-graph session snapshots
+// ---------------------------------------------------------------------------
+
+/// Micro training-step fixture shared by the session tests: a two-device
+/// pool plus a builder for `(graph, state)` pairs — both pure functions of
+/// their arguments, so rebuilt copies are identical across sessions.
+struct SessionFixture {
+    spec: Arc<NetSpec>,
+    hier: Hierarchy,
+    partition: Partition,
+    params: Arc<NetParams>,
+}
+
+impl SessionFixture {
+    fn new() -> SessionFixture {
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, 80).unwrap());
+        let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+        let n_blocks = hier.fine().blocks(hier.coarsen).len();
+        let partition = Partition::contiguous(n_blocks, 2).unwrap();
+        SessionFixture { spec, hier, partition, params }
+    }
+
+    fn pool(&self) -> StreamPool<impl resnet_mgrit::solver::SolverFactory<Solver = HostSolver>>
+    {
+        let (s2, p2) = (self.spec.clone(), self.params.clone());
+        let factory = move |_w: usize| HostSolver::new(s2.clone(), p2.clone());
+        StreamPool::new(self.partition.n_devices(), factory).unwrap()
+    }
+
+    fn graph(&self, micro: usize) -> taskgraph::TaskGraph {
+        let groups = InstanceGroups::new(1, self.partition.n_devices()).unwrap();
+        taskgraph::mg_train_step_multi(
+            &self.spec,
+            &self.hier,
+            &self.partition,
+            &groups,
+            1,
+            2,
+            RelaxKind::FCF,
+            Granularity::PerStep,
+            micro,
+        )
+        .unwrap()
+    }
+
+    fn state(&self, micro: usize) -> MultiExecState {
+        let mut rng = Rng::new(81);
+        let inputs: Vec<(Tensor, Vec<i32>)> = (0..micro)
+            .map(|k| {
+                (Tensor::randn(&[1, 2, 6, 6], 0.8, &mut rng), vec![(k % 10) as i32])
+            })
+            .collect();
+        MultiExecState::initial_train(&self.hier, &inputs, self.params.clone(), 0.05).unwrap()
+    }
+}
+
+#[test]
+fn session_checkpoint_resume_finishes_bit_identically() {
+    let fx = SessionFixture::new();
+    let pool = fx.pool();
+    let micro = 2;
+
+    // the uninterrupted reference, through the same admit path
+    let mut s = ExecSession::new(&pool, &fx.hier);
+    s.admit_prebuilt(fx.graph(micro), fx.state(micro), None).unwrap();
+    s.run_to_end().unwrap();
+    let (st, _) = s.into_state();
+    let want = st.into_training_outputs().unwrap();
+
+    // interrupted a third of the way in, snapshotted THROUGH the JSON text
+    // format (what `SessionSnapshot::save` writes to disk)
+    let n = fx.graph(micro).tasks.len();
+    let mut s = ExecSession::new(&pool, &fx.hier);
+    s.admit_prebuilt(fx.graph(micro), fx.state(micro), None).unwrap();
+    let retired = s.run_to_frontier(n / 3).unwrap();
+    assert!(retired >= n / 3 && retired < n, "frontier {retired} of {n}");
+    let snap = s.checkpoint().unwrap();
+    drop(s);
+    let text = snap.to_json().to_string();
+    let snap = SessionSnapshot::from_json(
+        &resnet_mgrit::util::json::Json::parse(&text).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(snap.frontier.len(), retired);
+
+    let frontier: BTreeSet<usize> = snap.frontier.iter().copied().collect();
+    let mut r = ExecSession::resume(&pool, &fx.hier, fx.graph(micro), None, &snap, None).unwrap();
+    r.run_to_end().unwrap();
+    let (st, rep) = r.into_state();
+    for e in &rep.events {
+        assert!(!frontier.contains(&e.task), "retired task {} re-executed", e.task);
+    }
+    let got = st.into_training_outputs().unwrap();
+    assert_eq!(got.loss, want.loss, "resumed loss differs");
+    for (i, ((gw, gb), (ww, wb))) in got.trunk_grads.iter().zip(&want.trunk_grads).enumerate() {
+        assert!(gw.data() == ww.data() && gb.data() == wb.data(), "grad[{i}] differs");
+    }
+    for (i, ((gw, gb), (ww, wb))) in got.new_trunk.iter().zip(&want.new_trunk).enumerate() {
+        assert!(gw.data() == ww.data() && gb.data() == wb.data(), "trunk[{i}] differs");
+    }
+}
+
+#[test]
+fn prop_resume_executes_exactly_the_unretired_tasks() {
+    // for an arbitrary (graph, checkpoint cut): resume never re-executes a
+    // retired task and never skips an un-retired one — the resumed event
+    // trace is exactly the uninterrupted trace minus the frontier
+    let fx = SessionFixture::new();
+    let pool = fx.pool();
+    let cfg = proptest_lite::Config { cases: 10, ..Default::default() };
+    proptest_lite::check_with(cfg, "resume_partitions_the_task_set", |rng| {
+        let micro = gen_usize(rng, 1, 2);
+        let n = fx.graph(micro).tasks.len();
+        let cut = gen_usize(rng, 0, n);
+
+        let mut s = ExecSession::new(&pool, &fx.hier);
+        s.admit_prebuilt(fx.graph(micro), fx.state(micro), None).unwrap();
+        s.run_to_end().unwrap();
+        let (_, rep) = s.into_state();
+        let all: BTreeSet<usize> = rep.events.iter().map(|e| e.task).collect();
+
+        let mut s = ExecSession::new(&pool, &fx.hier);
+        s.admit_prebuilt(fx.graph(micro), fx.state(micro), None).unwrap();
+        s.run_to_frontier(cut).unwrap();
+        let snap = s.checkpoint().unwrap();
+        drop(s);
+        let frontier: BTreeSet<usize> = snap.frontier.iter().copied().collect();
+
+        let mut r =
+            ExecSession::resume(&pool, &fx.hier, fx.graph(micro), None, &snap, None).unwrap();
+        r.run_to_end().unwrap();
+        let (_, rep) = r.into_state();
+        let after: BTreeSet<usize> = rep.events.iter().map(|e| e.task).collect();
+
+        let expect: BTreeSet<usize> = all.difference(&frontier).copied().collect();
+        assert_eq!(
+            after, expect,
+            "micro {micro}, cut {cut}: resumed kernel set is not the frontier complement"
+        );
+        assert!(after.is_disjoint(&frontier), "micro {micro}, cut {cut}: re-execution");
+    });
+}
