@@ -20,7 +20,8 @@ use std::sync::Arc;
 use super::executor::{self, ExecEvent, MultiExecState};
 use super::partition::{InstanceGroups, Partition};
 use super::placement::{self, PlacementKind};
-use super::streams::StreamPool;
+use super::streams::{NodePools, RuntimePool, StreamPool};
+use super::transport::{InProc, TransportMode};
 use crate::mgrit::fas::{CycleStats, MgritOptions};
 use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{self, Collective, Granularity, PipeSync, ReduceStep, TaskGraph};
@@ -52,6 +53,11 @@ pub struct RunMetrics {
     /// Recovery re-dispatches absorbed over the run: failed or lost tasks
     /// re-enqueued onto surviving workers (0 on a fault-free run).
     pub retries: usize,
+    /// Messages that crossed the inter-node [`crate::coordinator::Transport`]
+    /// (0 on the shared single-pool substrate).
+    pub transport_msgs: usize,
+    /// Serialized wire bytes shipped over the transport.
+    pub transport_bytes: u64,
 }
 
 impl RunMetrics {
@@ -139,7 +145,7 @@ pub struct PipelineRunOutput {
 
 /// Dependency-driven parallel MGRIT over a stream pool.
 pub struct ParallelMgrit<F: SolverFactory> {
-    pool: StreamPool<F>,
+    pool: RuntimePool<F>,
     factory: F,
     spec: Arc<NetSpec>,
     batch: usize,
@@ -195,7 +201,8 @@ impl<F: SolverFactory> ParallelMgrit<F> {
         anyhow::ensure!(n_groups >= 1, "need at least one device group");
         let n_blocks = hier.fine().blocks(hier.coarsen).len();
         let partition = Partition::contiguous(n_blocks, devices_per_group)?;
-        let pool = StreamPool::new(partition.n_devices() * n_groups, factory.clone())?;
+        let pool =
+            RuntimePool::Shared(StreamPool::new(partition.n_devices() * n_groups, factory.clone())?);
         Ok(ParallelMgrit {
             pool,
             factory,
@@ -216,8 +223,40 @@ impl<F: SolverFactory> ParallelMgrit<F> {
     }
 
     /// The worker pool (its clock is the trace clock).
-    pub fn pool(&self) -> &StreamPool<F> {
+    pub fn pool(&self) -> &RuntimePool<F> {
         &self.pool
+    }
+
+    /// Switch the execution substrate (see [`TransportMode`]). `Shared` —
+    /// the default — keeps one pool over all `groups × devices` workers;
+    /// `InProc` shards it into one [`NodePools`] member pool per device
+    /// group, with every cross-group `Comm` edge shipped as serialized
+    /// bytes over the in-process [`super::transport::Transport`]. The
+    /// substrate only changes *where* dispatch queues live and *how*
+    /// cross-node edges move — outputs are bit-identical either way.
+    /// Rebuilds the pool, so any armed faults or recorded trace are reset.
+    pub fn set_transport(&mut self, mode: TransportMode) -> Result<()> {
+        self.pool = match mode {
+            TransportMode::Shared => RuntimePool::Shared(StreamPool::new(
+                self.partition.n_devices() * self.n_groups,
+                self.factory.clone(),
+            )?),
+            TransportMode::InProc => RuntimePool::Sharded(NodePools::new(
+                self.n_groups,
+                self.partition.n_devices(),
+                self.factory.clone(),
+                Box::new(InProc::new(self.n_groups)),
+            )?),
+        };
+        Ok(())
+    }
+
+    /// The active transport mode (derived from the substrate in use).
+    pub fn transport(&self) -> TransportMode {
+        match &self.pool {
+            RuntimePool::Shared(_) => TransportMode::Shared,
+            RuntimePool::Sharded(_) => TransportMode::InProc,
+        }
     }
 
     /// The MGRIT hierarchy this driver solves on.
@@ -407,6 +446,8 @@ where
         executor::merge_phases(&mut m.phases, &rep.phase_s);
         m.events.extend(rep.events.iter().cloned());
         m.retries += rep.retries.len();
+        m.transport_msgs += rep.transport_msgs;
+        m.transport_bytes += rep.transport_bytes as u64;
     }
 
     /// Full parallel MGRIT solve (same contract as `mgrit::solve_forward`):
@@ -1225,6 +1266,153 @@ mod tests {
         let hier = Hierarchy::two_level(8, spec.h(), 2).unwrap();
         for micro in [1usize, 2] {
             assert_pipeline_s0_parity(&spec, &hier, 93, 4, micro, 2, 2);
+        }
+    }
+
+    fn assert_params_bitwise(tag: &str, a: &NetParams, e: &NetParams) {
+        for (i, ((w, b), (w2, b2))) in a.trunk.iter().zip(&e.trunk).enumerate() {
+            assert!(
+                w.data() == w2.data() && b.data() == b2.data(),
+                "{tag}: trunk layer {i} differs"
+            );
+        }
+        assert!(a.w_open.data() == e.w_open.data(), "{tag}: w_open differs");
+        assert!(a.b_open.data() == e.b_open.data(), "{tag}: b_open differs");
+        assert!(a.w_fc.data() == e.w_fc.data(), "{tag}: w_fc differs");
+        assert!(a.b_fc.data() == e.b_fc.data(), "{tag}: b_fc differs");
+    }
+
+    fn assert_grads_bitwise(tag: &str, a: &crate::model::NetGrads, e: &crate::model::NetGrads) {
+        for (i, ((w, b), (w2, b2))) in a.trunk.iter().zip(&e.trunk).enumerate() {
+            assert!(
+                w.data() == w2.data() && b.data() == b2.data(),
+                "{tag}: trunk grad {i} differs"
+            );
+        }
+        assert!(a.w_open.data() == e.w_open.data(), "{tag}: opening grad differs");
+        assert!(a.b_open.data() == e.b_open.data(), "{tag}: opening bias grad differs");
+        assert!(a.w_fc.data() == e.w_fc.data(), "{tag}: head grad differs");
+        assert!(a.b_fc.data() == e.b_fc.data(), "{tag}: head bias grad differs");
+    }
+
+    #[test]
+    fn sharded_transport_training_is_bit_identical() {
+        // tentpole acceptance gate: the sharded NodePools substrate — one
+        // StreamPool per device group, every cross-node Comm serialized
+        // through the InProc transport — produces bit-identical hybrid
+        // training output to the shared single-pool executor at 1/2/4 nodes
+        let spec = Arc::new(NetSpec::micro());
+        let hier = Hierarchy::two_level(4, spec.h(), 2).unwrap();
+        let (batch, micro) = (4usize, 4usize);
+        let mut rng = crate::util::prng::Rng::new(95);
+        let y = Tensor::randn(
+            &[batch, spec.opening.in_channels, spec.opening.in_h, spec.opening.in_w],
+            0.8,
+            &mut rng,
+        );
+        let labels: Vec<i32> = (0..batch).map(|i| (i % 10) as i32).collect();
+        let opts = MgritOptions::early_stopping(1);
+        for groups in [1usize, 2, 4] {
+            let tag = format!("groups {groups}");
+            let shared = ParallelMgrit::new_grouped(
+                factory(spec.clone(), 94),
+                spec.clone(),
+                hier.clone(),
+                2,
+                groups,
+                batch,
+            )
+            .unwrap();
+            assert_eq!(shared.transport(), TransportMode::Shared);
+            let a = shared.train_step_micro(&y, &labels, &opts, 0.05, micro).unwrap();
+            let mut drv = ParallelMgrit::new_grouped(
+                factory(spec.clone(), 94),
+                spec.clone(),
+                hier.clone(),
+                2,
+                groups,
+                batch,
+            )
+            .unwrap();
+            drv.set_transport(TransportMode::InProc).unwrap();
+            assert_eq!(drv.transport(), TransportMode::InProc);
+            let e = drv.train_step_micro(&y, &labels, &opts, 0.05, micro).unwrap();
+            assert!(a.loss.to_bits() == e.loss.to_bits(), "{tag}: loss differs");
+            for (k, (ia, ie)) in a.per_instance.iter().zip(&e.per_instance).enumerate() {
+                assert!(
+                    ia.loss.to_bits() == ie.loss.to_bits(),
+                    "{tag}: instance {k} loss differs"
+                );
+                for (j, (ua, ue)) in ia.states.iter().zip(&ie.states).enumerate() {
+                    assert!(ua.data() == ue.data(), "{tag}: instance {k} state {j} differs");
+                }
+            }
+            assert_grads_bitwise(&tag, &a.grads, &e.grads);
+            assert_params_bitwise(&tag, &a.params, &e.params);
+            // the shared pool never ships; the sharded pool must ship real
+            // serialized traffic exactly when instances span >1 node
+            assert_eq!(a.metrics.transport_msgs, 0, "{tag}: shared pool shipped");
+            if groups > 1 {
+                assert!(
+                    e.metrics.transport_msgs > 0 && e.metrics.transport_bytes > 0,
+                    "{tag}: no traffic crossed the transport"
+                );
+            } else {
+                assert_eq!(e.metrics.transport_msgs, 0, "{tag}: loopback not elided");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_transport_pipeline_is_bit_identical() {
+        // cross-step pipelined parity on the sharded substrate, both at the
+        // sequential-equivalent staleness 0 and the genuinely-stale S = 1
+        let spec = Arc::new(NetSpec::micro());
+        let hier = Hierarchy::two_level(4, spec.h(), 2).unwrap();
+        let (k, batch, micro, groups) = (2usize, 2usize, 2usize, 2usize);
+        let mut rng = crate::util::prng::Rng::new(97);
+        let y = Tensor::randn(
+            &[k * batch, spec.opening.in_channels, spec.opening.in_h, spec.opening.in_w],
+            0.8,
+            &mut rng,
+        );
+        let labels: Vec<i32> = (0..k * batch).map(|i| (i % 10) as i32).collect();
+        let opts = MgritOptions::early_stopping(1);
+        for s in [0usize, 1] {
+            let tag = format!("staleness {s}");
+            let shared = ParallelMgrit::new_grouped(
+                factory(spec.clone(), 96),
+                spec.clone(),
+                hier.clone(),
+                2,
+                groups,
+                k * batch,
+            )
+            .unwrap();
+            let a = shared
+                .train_pipeline(&y, &labels, &opts, 0.05, micro, k, PipeSync::Staleness(s))
+                .unwrap();
+            let mut drv = ParallelMgrit::new_grouped(
+                factory(spec.clone(), 96),
+                spec.clone(),
+                hier.clone(),
+                2,
+                groups,
+                k * batch,
+            )
+            .unwrap();
+            drv.set_transport(TransportMode::InProc).unwrap();
+            let e = drv
+                .train_pipeline(&y, &labels, &opts, 0.05, micro, k, PipeSync::Staleness(s))
+                .unwrap();
+            assert_eq!(a.losses, e.losses, "{tag}: losses differ");
+            assert_eq!(a.grad_norms, e.grad_norms, "{tag}: grad norms differ");
+            assert_params_bitwise(&tag, &e.params, &a.params);
+            assert_eq!(a.metrics.transport_msgs, 0, "{tag}: shared pool shipped");
+            assert!(
+                e.metrics.transport_msgs > 0,
+                "{tag}: no traffic crossed the transport"
+            );
         }
     }
 }

@@ -26,8 +26,13 @@
 //!    instances get queue priority — the pipelining skew) and a
 //!    [`super::placement::Placement`]'s HEFT ranks advance the critical
 //!    path first;
-//! 2. ready **Comm** tasks retire immediately on the scheduler thread (local
-//!    execution only *accounts* the transfer — the tensors share memory);
+//! 2. ready **Comm** tasks retire immediately on the scheduler thread —
+//!    intra-node the tensors share memory and local execution only
+//!    *accounts* the transfer, while on a sharded
+//!    [`super::streams::NodePools`] substrate a cross-node edge additionally
+//!    ships the producer's slot bytes through the pool's
+//!    [`super::transport::Transport`] (serialize → send → deserialize,
+//!    verified bitwise — see `ship_comm`);
 //! 3. ready **Kernel** tasks take `Arc` handles on their input slots out of
 //!    their instance's [`ExecState`] (refcount bumps, not deep copies — the
 //!    scheduler thread is the only state owner, so no locks), and are
@@ -64,7 +69,8 @@ use super::checkpoint::{
     tensor_to_json, SessionSnapshot,
 };
 use super::placement::ReadyKey;
-use super::streams::{JobDone, StreamPool};
+use super::streams::{JobDone, StreamPool, WorkerPool};
+use super::transport::{decode_tensor, encode_tensor};
 use crate::util::json::{self, Json};
 use crate::mgrit::hierarchy::Hierarchy;
 use crate::mgrit::taskgraph::{op_param_slots, GradSrc, Sys, Task, TaskGraph, TaskKind, TaskOp};
@@ -1333,7 +1339,7 @@ impl Recovery {
     /// only when the completion channel is empty: a worker sends every
     /// completion before it can die on a later message, so dead worker +
     /// empty channel ⇒ its remaining in-flight tasks will never complete.
-    fn lost_tasks<F: SolverFactory>(&self, pool: &StreamPool<F>) -> Vec<(usize, usize)> {
+    fn lost_tasks<F: SolverFactory, P: WorkerPool<F>>(&self, pool: &P) -> Vec<(usize, usize)> {
         self.inflight_dev
             .iter()
             .filter(|(_, &dev)| !pool.worker_alive(dev))
@@ -1356,7 +1362,7 @@ impl Recovery {
 /// First alive device scanning cyclically from `from` (inclusive), so a
 /// task whose planned worker survives stays put and a dead worker's load
 /// spills deterministically onto its successor.
-fn pick_alive_device<F: SolverFactory>(pool: &StreamPool<F>, from: usize) -> Option<usize> {
+fn pick_alive_device<F: SolverFactory, P: WorkerPool<F>>(pool: &P, from: usize) -> Option<usize> {
     let n = pool.n_workers();
     (0..n).map(|k| (from + k) % n).find(|&d| pool.worker_alive(d))
 }
@@ -1384,6 +1390,14 @@ pub struct ExecReport {
     /// Recovery re-dispatches (failed task retried, dead worker rerouted),
     /// in occurrence order — empty on a fault-free run.
     pub retries: Vec<RetryEvent>,
+    /// Cross-node messages actually shipped through the live
+    /// [`super::transport::Transport`] (sharded [`NodePools`] substrate
+    /// only; always 0 on the shared single-pool path, where every device
+    /// maps to node 0).
+    pub transport_msgs: usize,
+    /// Wire bytes of those messages (encoded tensor payloads, header
+    /// included).
+    pub transport_bytes: f64,
 }
 
 impl ExecReport {
@@ -1404,24 +1418,24 @@ fn kernel_label(graph: &TaskGraph, id: usize) -> &'static str {
 /// Spend one retry and pick the surviving target for a failed task:
 /// `(to_device, attempt, backoff_s)`. [`ExecError::WorkerLost`] when the
 /// budget is spent or no worker survives.
-fn plan_retry<F: SolverFactory>(
-    pool: &StreamPool<F>,
+fn plan_retry<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
     rec: &mut Recovery,
     id: usize,
     from: usize,
 ) -> Result<(usize, usize, f64)> {
     let attempt =
         rec.next_attempt(id).ok_or(ExecError::WorkerLost { task: id, worker: from })?;
-    let to =
-        pick_alive_device(pool, from).ok_or(ExecError::WorkerLost { task: id, worker: from })?;
+    let to = pick_alive_device::<F, P>(pool, from)
+        .ok_or(ExecError::WorkerLost { task: id, worker: from })?;
     Ok((to, attempt, backoff_s(attempt)))
 }
 
 /// Resolve a task's dispatch device: its planned device if that worker is
 /// alive, else the deterministic reroute target (recorded as an attempt-0
 /// [`RetryEvent`] — no retry budget spent, the task never ran).
-fn route_dispatch<F: SolverFactory>(
-    pool: &StreamPool<F>,
+fn route_dispatch<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
     report: &mut ExecReport,
     id: usize,
     label: &'static str,
@@ -1430,8 +1444,8 @@ fn route_dispatch<F: SolverFactory>(
     if pool.worker_alive(want) {
         return Ok(want);
     }
-    let to =
-        pick_alive_device(pool, want).ok_or(ExecError::WorkerLost { task: id, worker: want })?;
+    let to = pick_alive_device::<F, P>(pool, want)
+        .ok_or(ExecError::WorkerLost { task: id, worker: want })?;
     report.retries.push(RetryEvent {
         task: id,
         label,
@@ -1503,11 +1517,185 @@ fn account_kernel(
     report.events.push(ExecEvent { task, instance, device, label, t_start, t_end });
 }
 
+/// Per-node ready heaps — the sharded counterpart of the single global
+/// ready heap. `push` routes a task by the node of its planned device, so
+/// building node A's frontier never touches node B's heap (the per-pool
+/// dispatch queues of the `NodePools` substrate); `pop` returns the
+/// globally best key (max priority, min-id ties) by comparing heap heads.
+/// [`ReadyKey`]s are unique per task, so the pop sequence is exactly the
+/// single-heap sequence and the executor's dispatch order — hence its
+/// output — is unchanged by sharding. With one node this degenerates to
+/// the legacy single heap.
+struct ReadyQueues {
+    heaps: Vec<BinaryHeap<ReadyKey>>,
+}
+
+impl ReadyQueues {
+    fn new(n_nodes: usize) -> ReadyQueues {
+        ReadyQueues { heaps: (0..n_nodes.max(1)).map(|_| BinaryHeap::new()).collect() }
+    }
+
+    fn push(&mut self, node: usize, key: ReadyKey) {
+        let last = self.heaps.len() - 1;
+        self.heaps[node.min(last)].push(key);
+    }
+
+    fn pop(&mut self) -> Option<ReadyKey> {
+        let best = self
+            .heaps
+            .iter()
+            .enumerate()
+            .filter_map(|(i, h)| h.peek().map(|k| (i, *k)))
+            .max_by(|(_, a), (_, b)| a.cmp(b))
+            .map(|(i, _)| i)?;
+        self.heaps[best].pop()
+    }
+}
+
+/// Ship one tensor across the live transport (encode → send → recv →
+/// decode), verifying the decoded copy bitwise against the original —
+/// corruption is a typed error, never a silent numeric drift. Returns the
+/// decoded tensor so cross-node state slots can be re-bound to the copy
+/// that actually crossed the wire.
+fn ship_slot<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
+    report: &mut ExecReport,
+    src_node: usize,
+    dst_node: usize,
+    t: &Tensor,
+) -> Result<Tensor> {
+    let wire = encode_tensor(t);
+    report.transport_msgs += 1;
+    report.transport_bytes += wire.len() as f64;
+    let back = pool.ship(src_node, dst_node, wire)?;
+    let got = decode_tensor(&back)?;
+    anyhow::ensure!(
+        got.dims() == t.dims()
+            && got.data().len() == t.data().len()
+            && got.data().iter().zip(t.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "transport corrupted a tensor shipped node {src_node} -> node {dst_node}"
+    );
+    Ok(got)
+}
+
+/// Materialize one retiring cross-node `Comm` edge as real transport
+/// messages. Intra-node edges (and co-located `src == dst` hops) stay
+/// `Arc` refcount bumps, exactly as before; a cross-node edge serializes
+/// the producer's output slot(s), ships the bytes through the pool's
+/// [`super::transport::Transport`], and re-binds the slot to the decoded
+/// copy — the explicit serialize → send → deserialize path the simulator
+/// prices as `message_time` per tier. Gradient edges (a `ReduceGrad`
+/// consumer) and seed outputs (`Head`/`Opening`, whose single output `Arc`
+/// aliases every adjoint/primal slot) ship verify-only: the bytes cross
+/// the wire and are checked bitwise, but the aliased slots keep their
+/// `Arc`s. On a shared single-pool substrate every device maps to node 0,
+/// so this is a no-op and the run is bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn ship_comm<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
+    report: &mut ExecReport,
+    hier: &Hierarchy,
+    st: &mut MultiExecState,
+    graph: &TaskGraph,
+    dependents: &[Vec<usize>],
+    producers: &[usize],
+    id: usize,
+) -> Result<()> {
+    let TaskKind::Comm { src, dst, .. } = &graph.tasks[id].kind else {
+        return Ok(());
+    };
+    let (sn, dn) = (pool.node_of(*src), pool.node_of(*dst));
+    if *src == *dst || sn == dn {
+        return Ok(()); // loopback / intra-node: the slot handoff stays local
+    }
+    let feeds_reduce = dependents[id]
+        .iter()
+        .any(|&d| matches!(graph.tasks[d].op, Some(TaskOp::ReduceGrad { .. })));
+    if feeds_reduce {
+        // gradient hop: ship the (w, b) pair the consumer will read — the
+        // exact operand `dispatch_kernel` resolves via `grad_src[_pipe]`.
+        // Gradient slots live in shared reduction-tree state, so the ship
+        // is verify-only (the consumer re-reads the same slot).
+        for &d in &dependents[id] {
+            let Some(TaskOp::ReduceGrad { layer, rhs, .. }) = graph.tasks[d].op else {
+                continue;
+            };
+            let (gw, gb) = if let Some(pipe) = &st.pipe {
+                let step = graph.tasks[d].instance / pipe.micro;
+                st.grad_src_pipe(step, layer, rhs)?
+            } else {
+                st.grad_src(layer, rhs)?
+            };
+            ship_slot::<F, P>(pool, report, sn, dn, &gw)?;
+            ship_slot::<F, P>(pool, report, sn, dn, &gb)?;
+        }
+        return Ok(());
+    }
+    // state hop: locate the producer's output slot(s) — the same slots
+    // `apply_output` wrote, which the WAR edges behind this Comm's
+    // consumers guarantee still hold exactly the producer's output — ship
+    // each, and re-bind the slot to the decoded copy.
+    let c = hier.coarsen;
+    for &p in producers {
+        let ki = graph.tasks[p].instance;
+        match graph.tasks[p].op {
+            Some(TaskOp::PointUpdate { sys, level, j }) => {
+                let t = st.inst(ki)?.sys(sys)?.u[level][j].clone();
+                let got = ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+                st.inst_mut(ki)?.sys_mut(sys)?.u[level][j] = Arc::new(got);
+            }
+            Some(TaskOp::BlockRun { sys, level, j_first, j_last }) => {
+                for j in j_first..=j_last {
+                    let t = st.inst(ki)?.sys(sys)?.u[level][j].clone();
+                    let got = ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+                    st.inst_mut(ki)?.sys_mut(sys)?.u[level][j] = Arc::new(got);
+                }
+            }
+            Some(TaskOp::Residual { sys, level, j }) => {
+                if let Some(t) = st.inst(ki)?.sys(sys)?.r[level][j].clone() {
+                    let got = ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+                    st.inst_mut(ki)?.sys_mut(sys)?.r[level][j] = Some(Arc::new(got));
+                }
+            }
+            Some(TaskOp::Restrict { sys, level, j }) => {
+                let t = st.inst(ki)?.sys(sys)?.g[level + 1].as_ref().map(|g| g[j].clone());
+                if let Some(t) = t {
+                    let got = ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+                    if let Some(g) = st.inst_mut(ki)?.sys_mut(sys)?.g[level + 1].as_mut() {
+                        g[j] = Arc::new(got);
+                    }
+                }
+            }
+            Some(TaskOp::Correct { sys, level, j }) => {
+                let t = st.inst(ki)?.sys(sys)?.u[level][j * c].clone();
+                let got = ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+                st.inst_mut(ki)?.sys_mut(sys)?.u[level][j * c] = Arc::new(got);
+            }
+            Some(TaskOp::Head) => {
+                // the head's ∂loss/∂u^N seed aliases every adjoint slot —
+                // ship verify-only to keep the aliasing intact
+                let t = st.inst(ki)?.sys(Sys::Adjoint)?.u[0][0].clone();
+                ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+            }
+            Some(TaskOp::Opening) => {
+                let t = st.inst(ki)?.sys(Sys::Primal)?.u[0][0].clone();
+                ship_slot::<F, P>(pool, report, sn, dn, &t)?;
+            }
+            _ => {
+                // gradient/parameter producers (shared slots, re-read by
+                // their consumers) and admission-seeded inputs (no producer
+                // task) are staged host-side — nothing to ship
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Execute `graph` on `pool`, mutating `st` in place. `st` must carry at
 /// least as many instances as the graph references. Dispatches in the
 /// legacy min-id order (equivalent to all-zero priorities).
-pub fn execute<F: SolverFactory>(
-    pool: &StreamPool<F>,
+pub fn execute<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
     hier: &Hierarchy,
     graph: &TaskGraph,
     st: &mut MultiExecState,
@@ -1515,15 +1703,15 @@ pub fn execute<F: SolverFactory>(
 where
     F::Solver: NetExecutor,
 {
-    execute_prioritized(pool, hier, graph, st, None)
+    execute_prioritized::<F, P>(pool, hier, graph, st, None)
 }
 
 /// [`execute`] under a placement policy's dispatch priorities (indexed by
 /// task id; higher dispatches first, ties by lowest id — the vector a
 /// `coordinator::placement::Placement` carries alongside its rewritten
 /// graph). `None` means all-zero: the legacy min-id order, bit-for-bit.
-pub fn execute_prioritized<F: SolverFactory>(
-    pool: &StreamPool<F>,
+pub fn execute_prioritized<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
     hier: &Hierarchy,
     graph: &TaskGraph,
     st: &mut MultiExecState,
@@ -1562,15 +1750,15 @@ where
     }
     let pri = |id: usize| priority.map_or(0.0, |p| p[id]);
     let (tx, rx) = channel::<JobDone<TaskOut>>();
-    // priority max-heap with min-id ties: without a placement pass this is
-    // the legacy min-id heap — ready tasks of earlier instances enter worker
-    // queues first, giving the micro-batch pipeline its forward skew
-    let mut ready: BinaryHeap<ReadyKey> = graph
-        .tasks
-        .iter()
-        .filter(|t| t.deps.is_empty())
-        .map(|t| ReadyKey { pri: pri(t.id), id: t.id })
-        .collect();
+    // per-node priority max-heaps with min-id ties: without a placement
+    // pass the global pop order is the legacy min-id order — ready tasks of
+    // earlier instances enter worker queues first, giving the micro-batch
+    // pipeline its forward skew. With one node (the shared pool) this IS
+    // the legacy single heap.
+    let mut ready = ReadyQueues::new(pool.n_nodes());
+    for t in graph.tasks.iter().filter(|t| t.deps.is_empty()) {
+        ready.push(pool.node_of(t.device), ReadyKey { pri: pri(t.id), id: t.id });
+    }
     let mut in_flight = 0usize;
     let mut retired = 0usize;
     let mut recovery = Recovery::default();
@@ -1582,17 +1770,30 @@ where
             match &task.kind {
                 TaskKind::Comm { .. } => {
                     account_comm(&mut report, graph, &dependents, id);
+                    ship_comm::<F, P>(
+                        pool,
+                        &mut report,
+                        hier,
+                        st,
+                        graph,
+                        &dependents,
+                        &graph.tasks[id].deps,
+                        id,
+                    )?;
                     retired += 1;
                     for &d in &dependents[id] {
                         indeg[d] -= 1;
                         if indeg[d] == 0 {
-                            ready.push(ReadyKey { pri: pri(d), id: d });
+                            ready.push(
+                                pool.node_of(graph.tasks[d].device),
+                                ReadyKey { pri: pri(d), id: d },
+                            );
                         }
                     }
                 }
                 TaskKind::Kernel { label, .. } => {
-                    let dev = route_dispatch(pool, &mut report, id, *label, task.device)?;
-                    dispatch_kernel(pool, hier, st, task, *label, dev, &tx)?;
+                    let dev = route_dispatch::<F, P>(pool, &mut report, id, *label, task.device)?;
+                    dispatch_kernel::<F, P>(pool, hier, st, task, *label, dev, &tx)?;
                     recovery.dispatched(id, dev);
                     in_flight += 1;
                 }
@@ -1611,7 +1812,7 @@ where
             match rx.recv_timeout(LIVENESS_POLL) {
                 Ok(d) => break d,
                 Err(RecvTimeoutError::Timeout) => {
-                    let lost = recovery.lost_tasks(pool);
+                    let lost = recovery.lost_tasks::<F, P>(pool);
                     if lost.is_empty() {
                         continue;
                     }
@@ -1626,7 +1827,7 @@ where
                                 recovery.completed(id);
                                 let label = kernel_label(graph, id);
                                 let (to, attempt, backoff) =
-                                    plan_retry(pool, &mut recovery, id, dev)?;
+                                    plan_retry::<F, P>(pool, &mut recovery, id, dev)?;
                                 std::thread::sleep(Duration::from_secs_f64(backoff));
                                 report.retries.push(RetryEvent {
                                     task: id,
@@ -1636,7 +1837,7 @@ where
                                     to_device: to,
                                     backoff_s: backoff,
                                 });
-                                dispatch_kernel(
+                                dispatch_kernel::<F, P>(
                                     pool, hier, st, &graph.tasks[id], label, to, &tx,
                                 )?;
                                 recovery.dispatched(id, to);
@@ -1661,7 +1862,7 @@ where
                 // failed jobs write no outputs and hazard edges admit any
                 // topological order, so a re-execution is bit-identical —
                 // retry on a surviving worker with exponential backoff
-                let (to, attempt, backoff) = plan_retry(pool, &mut recovery, done.id, from)
+                let (to, attempt, backoff) = plan_retry::<F, P>(pool, &mut recovery, done.id, from)
                     .map_err(|lost| lost.context(format!("task {} ({}): {e:#}", done.id, done.label)))?;
                 std::thread::sleep(Duration::from_secs_f64(backoff));
                 report.retries.push(RetryEvent {
@@ -1672,7 +1873,7 @@ where
                     to_device: to,
                     backoff_s: backoff,
                 });
-                dispatch_kernel(pool, hier, st, &graph.tasks[done.id], done.label, to, &tx)?;
+                dispatch_kernel::<F, P>(pool, hier, st, &graph.tasks[done.id], done.label, to, &tx)?;
                 recovery.dispatched(done.id, to);
                 in_flight += 1;
                 continue;
@@ -1697,7 +1898,7 @@ where
         for &d in &dependents[done.id] {
             indeg[d] -= 1;
             if indeg[d] == 0 {
-                ready.push(ReadyKey { pri: pri(d), id: d });
+                ready.push(pool.node_of(graph.tasks[d].device), ReadyKey { pri: pri(d), id: d });
             }
         }
     }
@@ -1737,11 +1938,11 @@ where
 /// agnostic — every op is elementwise in the batch dimension — and the
 /// caller fans [`ExecSession::final_state`] back out to per-request outputs
 /// with `Tensor::slice_batch` at retire time (`serving::runtime`).
-pub struct ExecSession<'a, F: SolverFactory>
+pub struct ExecSession<'a, F: SolverFactory, P: WorkerPool<F> = StreamPool<F>>
 where
     F::Solver: NetExecutor,
 {
-    pool: &'a StreamPool<F>,
+    pool: &'a P,
     hier: &'a Hierarchy,
     st: MultiExecState,
     graph: TaskGraph,
@@ -1750,7 +1951,12 @@ where
     /// Per-task dispatch priority over the union graph (zero unless the
     /// instance was admitted via [`ExecSession::admit_prioritized`]).
     priority: Vec<f64>,
-    ready: BinaryHeap<ReadyKey>,
+    ready: ReadyQueues,
+    /// Producer lists of unretired `Comm` tasks, captured before dependency
+    /// edges are moved into `indeg`/`dependents` at admission — the ship
+    /// path (`ship_comm`) needs them to locate the slots a cross-node edge
+    /// carries. Entries are removed as their Comm retires.
+    comm_deps: BTreeMap<usize, Vec<usize>>,
     in_flight: usize,
     /// Unretired task count per instance; 0 ⇒ the instance is finished.
     remaining: Vec<usize>,
@@ -1780,14 +1986,16 @@ where
     /// stay queued so in-flight work can drain to a checkpointable quiescent
     /// state (`in_flight == 0` with a well-defined retired frontier).
     dispatch_paused: bool,
+    // F appears only through the `P: WorkerPool<F>` bound, not in any field
+    _factory: std::marker::PhantomData<fn() -> F>,
 }
 
-impl<'a, F: SolverFactory> ExecSession<'a, F>
+impl<'a, F: SolverFactory, P: WorkerPool<F>> ExecSession<'a, F, P>
 where
     F::Solver: NetExecutor,
 {
     /// An idle session over `pool`: no instances, no tasks.
-    pub fn new(pool: &'a StreamPool<F>, hier: &'a Hierarchy) -> ExecSession<'a, F> {
+    pub fn new(pool: &'a P, hier: &'a Hierarchy) -> ExecSession<'a, F, P> {
         let (tx, rx) = channel::<JobDone<TaskOut>>();
         ExecSession {
             pool,
@@ -1797,7 +2005,8 @@ where
             indeg: Vec::new(),
             dependents: Vec::new(),
             priority: Vec::new(),
-            ready: BinaryHeap::new(),
+            ready: ReadyQueues::new(pool.n_nodes()),
+            comm_deps: BTreeMap::new(),
             in_flight: 0,
             remaining: Vec::new(),
             last_end: Vec::new(),
@@ -1811,6 +2020,7 @@ where
             done: Vec::new(),
             done_count: 0,
             dispatch_paused: false,
+            _factory: std::marker::PhantomData,
         }
     }
 
@@ -1885,8 +2095,13 @@ where
         for id in off..off + n_sub {
             // the deps move into indeg/dependents; the session never reads
             // them again, so retired requests hold no dependency heap memory
+            // (Comm producer lists alone are kept — the ship path reads
+            // them once, at the Comm's retirement)
             let deps = std::mem::take(&mut self.graph.tasks[id].deps);
             self.indeg[id] = deps.len();
+            if matches!(self.graph.tasks[id].kind, TaskKind::Comm { .. }) {
+                self.comm_deps.insert(id, deps.clone());
+            }
             for d in deps {
                 self.dependents[d].push(id);
             }
@@ -1897,7 +2112,8 @@ where
         }
         for id in off..off + n_sub {
             if self.indeg[id] == 0 {
-                self.ready.push(ReadyKey { pri: self.priority[id], id });
+                let node = self.pool.node_of(self.graph.tasks[id].device);
+                self.ready.push(node, ReadyKey { pri: self.priority[id], id });
             }
         }
         self.pump()?;
@@ -1914,20 +2130,31 @@ where
             let is_comm = matches!(self.graph.tasks[id].kind, TaskKind::Comm { .. });
             if is_comm {
                 account_comm(&mut self.report, &self.graph, &self.dependents, id);
+                let producers = self.comm_deps.remove(&id).unwrap_or_default();
+                ship_comm::<F, P>(
+                    self.pool,
+                    &mut self.report,
+                    self.hier,
+                    &mut self.st,
+                    &self.graph,
+                    &self.dependents,
+                    &producers,
+                    id,
+                )?;
                 self.retire(id);
             } else {
                 let label = match &self.graph.tasks[id].kind {
                     TaskKind::Kernel { label, .. } => *label,
                     TaskKind::Comm { .. } => unreachable!("checked above"),
                 };
-                let dev = route_dispatch(
+                let dev = route_dispatch::<F, P>(
                     self.pool,
                     &mut self.report,
                     id,
                     label,
                     self.graph.tasks[id].device,
                 )?;
-                dispatch_kernel(
+                dispatch_kernel::<F, P>(
                     self.pool,
                     self.hier,
                     &mut self.st,
@@ -1969,7 +2196,8 @@ where
         for d in deps {
             self.indeg[d] -= 1;
             if self.indeg[d] == 0 {
-                self.ready.push(ReadyKey { pri: self.priority[d], id: d });
+                let node = self.pool.node_of(self.graph.tasks[d].device);
+                self.ready.push(node, ReadyKey { pri: self.priority[d], id: d });
             }
         }
     }
@@ -2030,7 +2258,7 @@ where
                 // topological order, so re-execution is bit-identical —
                 // retry on a surviving worker with exponential backoff
                 let (to, attempt, backoff) =
-                    plan_retry(self.pool, &mut self.recovery, done.id, device).map_err(
+                    plan_retry::<F, P>(self.pool, &mut self.recovery, done.id, device).map_err(
                         |lost| lost.context(format!("task {} ({}): {e:#}", done.id, done.label)),
                     )?;
                 std::thread::sleep(Duration::from_secs_f64(backoff));
@@ -2042,7 +2270,7 @@ where
                     to_device: to,
                     backoff_s: backoff,
                 });
-                dispatch_kernel(
+                dispatch_kernel::<F, P>(
                     self.pool,
                     self.hier,
                     &mut self.st,
@@ -2095,7 +2323,7 @@ where
     /// the channel has been observed empty; a completion that races the
     /// observation is returned for normal processing instead of sweeping.
     fn sweep_lost(&mut self) -> Result<Option<JobDone<TaskOut>>> {
-        let lost = self.recovery.lost_tasks(self.pool);
+        let lost = self.recovery.lost_tasks::<F, P>(self.pool);
         if lost.is_empty() {
             return Ok(None);
         }
@@ -2114,7 +2342,7 @@ where
                 *c = c.saturating_sub(1);
             }
             let label = kernel_label(&self.graph, id);
-            let (to, attempt, backoff) = plan_retry(self.pool, &mut self.recovery, id, dev)?;
+            let (to, attempt, backoff) = plan_retry::<F, P>(self.pool, &mut self.recovery, id, dev)?;
             std::thread::sleep(Duration::from_secs_f64(backoff));
             self.report.retries.push(RetryEvent {
                 task: id,
@@ -2124,7 +2352,7 @@ where
                 to_device: to,
                 backoff_s: backoff,
             });
-            dispatch_kernel(
+            dispatch_kernel::<F, P>(
                 self.pool,
                 self.hier,
                 &mut self.st,
@@ -2266,6 +2494,9 @@ where
             let deps = std::mem::take(&mut self.graph.tasks[id].deps);
             self.indeg[id] = deps.len();
             self.remaining[self.graph.tasks[id].instance] += 1;
+            if matches!(self.graph.tasks[id].kind, TaskKind::Comm { .. }) {
+                self.comm_deps.insert(id, deps.clone());
+            }
             for d in deps {
                 self.dependents[d].push(id);
             }
@@ -2277,7 +2508,8 @@ where
         }
         for id in 0..n {
             if self.indeg[id] == 0 {
-                self.ready.push(ReadyKey { pri: self.priority[id], id });
+                let node = self.pool.node_of(self.graph.tasks[id].device);
+                self.ready.push(node, ReadyKey { pri: self.priority[id], id });
             }
         }
         self.pump()
@@ -2334,13 +2566,13 @@ where
     /// is never skipped ([`ExecSession::run_to_end`] finishes the graph).
     /// Dispatch starts paused-off: ready tasks launch immediately.
     pub fn resume(
-        pool: &'a StreamPool<F>,
+        pool: &'a P,
         hier: &'a Hierarchy,
         graph: TaskGraph,
         priority: Option<&[f64]>,
         snap: &SessionSnapshot,
         spec: Option<Arc<NetSpec>>,
-    ) -> Result<ExecSession<'a, F>> {
+    ) -> Result<ExecSession<'a, F, P>> {
         anyhow::ensure!(
             graph.tasks.len() == snap.n_tasks,
             "snapshot covers {} tasks, resumed graph has {}",
@@ -2394,6 +2626,13 @@ where
             if sess.done[id] {
                 continue; // retired: never re-executed, holds no edges
             }
+            if matches!(sess.graph.tasks[id].kind, TaskKind::Comm { .. }) {
+                // full (unfiltered) producer list: a producer retired before
+                // the checkpoint still owns its slot's value in the restored
+                // state (its overwriters are WAR-ordered behind this Comm's
+                // consumers), so the ship path reads the right tensors
+                sess.comm_deps.insert(id, deps.clone());
+            }
             let live: Vec<usize> = deps.into_iter().filter(|d| !sess.done[*d]).collect();
             sess.indeg[id] = live.len();
             for d in live {
@@ -2407,7 +2646,8 @@ where
         }
         for id in 0..n {
             if !sess.done[id] && sess.indeg[id] == 0 {
-                sess.ready.push(ReadyKey { pri: sess.priority[id], id });
+                let node = pool.node_of(sess.graph.tasks[id].device);
+                sess.ready.push(node, ReadyKey { pri: sess.priority[id], id });
             }
         }
         sess.pump()?;
@@ -2504,8 +2744,8 @@ fn phi_param_grad(
 /// guarantee every reader of the old coarse slots has already completed.
 /// Adjoint ops additionally take the forward fine state they linearize
 /// around (their RAW edges guarantee it is final).
-fn dispatch_kernel<F: SolverFactory>(
-    pool: &StreamPool<F>,
+fn dispatch_kernel<F: SolverFactory, P: WorkerPool<F>>(
+    pool: &P,
     hier: &Hierarchy,
     st: &mut MultiExecState,
     task: &Task,

@@ -10,6 +10,12 @@
 //!   built by a [`crate::solver::SolverFactory`] (PJRT contexts are not
 //!   `Send`, same as per-rank CuDNN handles). `submit_job` delivers typed
 //!   completions — the event/callback primitive the executor retires on.
+//!   [`streams::NodePools`] shards the substrate into one pool per modeled
+//!   cluster node behind [`streams::RuntimePool`] (`--transport`).
+//! - [`transport`] — the pluggable inter-node fabric of the sharded
+//!   substrate: every cross-node `Comm` edge becomes a serialized message
+//!   over a [`transport::Transport`] (`InProc` ships in-tree), paying live
+//!   the per-tier byte path `perfmodel::Topology` prices in the simulator.
 //! - [`partition::Partition`] — contiguous layer-block → device assignment
 //!   (the paper's MPI model partitioning); [`partition::InstanceGroups`]
 //!   maps micro-batch instances onto device groups.
@@ -71,6 +77,7 @@ pub mod executor;
 pub mod partition;
 pub mod placement;
 pub mod streams;
+pub mod transport;
 
 pub use checkpoint::{SessionSnapshot, TrainCheckpoint};
 pub use driver::{
@@ -83,4 +90,5 @@ pub use executor::{
 };
 pub use partition::{InstanceGroups, Partition};
 pub use placement::{GraphCosts, PlaceCtx, Placement, PlacementKind, PlacementPolicy};
-pub use streams::{JobDone, StreamPool, TraceEvent};
+pub use streams::{JobDone, NodePools, RuntimePool, StreamPool, TraceEvent, WorkerPool};
+pub use transport::{InProc, Transport, TransportMode, TransportStats};

@@ -3,6 +3,12 @@
 //! layer block". Each worker builds its own `BlockSolver` (PJRT contexts are
 //! single-threaded) and records begin/end timestamps per job so a real run
 //! can be rendered as a Fig 5-style concurrency timeline.
+//!
+//! The substrate comes in two shapes behind the [`WorkerPool`] trait: a flat
+//! [`StreamPool`] (one shared address space — the legacy substrate) and the
+//! sharded [`NodePools`] (one pool per modeled cluster node, cross-node
+//! edges carried by a pluggable [`super::transport::Transport`]);
+//! [`RuntimePool`] is the runtime's switch between them (`--transport`).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -11,6 +17,7 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
+use super::transport::{Transport, TransportStats};
 use crate::solver::SolverFactory;
 use crate::util::faultpoint::{FaultAction, FaultPlan, FaultState};
 use crate::Result;
@@ -72,7 +79,13 @@ impl<F: SolverFactory> StreamPool<F> {
     /// Spawn `n` workers; each constructs its solver via `factory(worker_id)`
     /// inside its own thread.
     pub fn new(n: usize, factory: F) -> Result<StreamPool<F>> {
-        let epoch = Instant::now();
+        StreamPool::with_epoch(n, factory, Instant::now())
+    }
+
+    /// Like [`StreamPool::new`] but with a caller-supplied clock epoch, so
+    /// several pools — one per modeled node in a [`NodePools`] — share ONE
+    /// comparable timeline for traces and `now()`.
+    pub fn with_epoch(n: usize, factory: F, epoch: Instant) -> Result<StreamPool<F>> {
         let trace = Arc::new(Mutex::new(Vec::new()));
         let trace_on = Arc::new(AtomicBool::new(true));
         let faults = Arc::new(FaultState::new(n));
@@ -254,6 +267,417 @@ impl<F: SolverFactory> Drop for StreamPool<F> {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// The executor-facing surface of an execution substrate. The DAG executor
+/// and `ExecSession` are generic over this trait, so the same scheduler
+/// drives a flat [`StreamPool`] (one shared address space), a sharded
+/// [`NodePools`] (one pool per modeled node behind a
+/// [`Transport`]), or the [`RuntimePool`] switch between them.
+///
+/// Workers are addressed by **global** index; `node_of` maps a worker to
+/// its owning node, matching `perfmodel::Topology::nodes` (contiguous
+/// ranges of `devices_per_node` workers). Single-node substrates keep the
+/// defaults: every worker on node 0 and `ship` a loopback no-op.
+pub trait WorkerPool<F: SolverFactory> {
+    /// Number of workers (devices) addressable by this pool.
+    fn n_workers(&self) -> usize;
+
+    /// Whether `worker`'s thread is still running (`false` out of range).
+    fn worker_alive(&self, worker: usize) -> bool;
+
+    /// Seconds since pool creation (the trace clock).
+    fn now(&self) -> f64;
+
+    /// The modeled node owning global `worker` (0 on single-node pools).
+    fn node_of(&self, _worker: usize) -> usize {
+        0
+    }
+
+    /// Number of modeled nodes behind this pool.
+    fn n_nodes(&self) -> usize {
+        1
+    }
+
+    /// Submit a value-returning job to a worker's queue; semantics of
+    /// [`StreamPool::submit_job`].
+    fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()>;
+
+    /// Carry one serialized inter-node message from `src_node` to
+    /// `dst_node`, returning the bytes as delivered. Single-node pools are
+    /// loopback-only: the payload comes back untouched without crossing any
+    /// fabric (the executor only ships when the nodes differ).
+    fn ship(&self, _src_node: usize, _dst_node: usize, payload: Vec<u8>) -> Result<Vec<u8>> {
+        Ok(payload)
+    }
+}
+
+impl<F: SolverFactory> WorkerPool<F> for StreamPool<F> {
+    fn n_workers(&self) -> usize {
+        StreamPool::n_workers(self)
+    }
+
+    fn worker_alive(&self, worker: usize) -> bool {
+        StreamPool::worker_alive(self, worker)
+    }
+
+    fn now(&self) -> f64 {
+        StreamPool::now(self)
+    }
+
+    fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()> {
+        StreamPool::submit_job(self, worker, label, id, tx, job)
+    }
+}
+
+/// The sharded execution substrate: one [`StreamPool`] per modeled cluster
+/// node, all sharing one clock epoch, joined by a pluggable
+/// [`Transport`]. Global worker `w` lives on node
+/// `w / devices_per_node` at local index `w % devices_per_node` — the same
+/// contiguous mapping `perfmodel::Topology::nodes` prices — so dispatch on
+/// one node's pool never touches another node's queues, and every
+/// cross-node `Comm` edge the executor retires pays an explicit
+/// serialize→send→deserialize hop over the transport.
+pub struct NodePools<F: SolverFactory> {
+    pools: Vec<StreamPool<F>>,
+    devices_per_node: usize,
+    transport: Box<dyn Transport>,
+}
+
+impl<F: SolverFactory> NodePools<F> {
+    /// Build `n_nodes` pools of `devices_per_node` workers each over
+    /// `transport` (which must span at least `n_nodes` endpoints).
+    pub fn new(
+        n_nodes: usize,
+        devices_per_node: usize,
+        factory: F,
+        transport: Box<dyn Transport>,
+    ) -> Result<NodePools<F>> {
+        anyhow::ensure!(n_nodes >= 1, "NodePools needs at least one node");
+        anyhow::ensure!(devices_per_node >= 1, "NodePools needs at least one device per node");
+        anyhow::ensure!(
+            transport.n_nodes() >= n_nodes,
+            "transport spans {} nodes, pool needs {n_nodes}",
+            transport.n_nodes()
+        );
+        let epoch = Instant::now();
+        let pools = (0..n_nodes)
+            .map(|_| StreamPool::with_epoch(devices_per_node, factory.clone(), epoch))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(NodePools { pools, devices_per_node, transport })
+    }
+
+    fn split(&self, worker: usize) -> (usize, usize) {
+        (worker / self.devices_per_node, worker % self.devices_per_node)
+    }
+
+    /// Number of modeled nodes (member pools).
+    pub fn n_nodes(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Total workers across all node pools.
+    pub fn n_workers(&self) -> usize {
+        self.pools.len() * self.devices_per_node
+    }
+
+    /// The node owning global `worker`.
+    pub fn node_of(&self, worker: usize) -> usize {
+        worker / self.devices_per_node
+    }
+
+    /// Liveness of global `worker` (`false` out of range).
+    pub fn worker_alive(&self, worker: usize) -> bool {
+        let (node, local) = self.split(worker);
+        self.pools.get(node).map(|p| p.worker_alive(local)).unwrap_or(false)
+    }
+
+    /// Seconds since pool creation — every member pool shares one epoch.
+    pub fn now(&self) -> f64 {
+        self.pools[0].now()
+    }
+
+    /// Enable or disable trace recording on every member pool.
+    pub fn set_trace_enabled(&self, on: bool) {
+        for p in &self.pools {
+            p.set_trace_enabled(on);
+        }
+    }
+
+    /// Merged trace of all member pools, worker ids translated to global
+    /// indices and events ordered by start time (the per-pool clocks share
+    /// one epoch, so timestamps are directly comparable).
+    pub fn trace(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> = Vec::new();
+        for (node, p) in self.pools.iter().enumerate() {
+            all.extend(p.trace().into_iter().map(|mut e| {
+                e.worker += node * self.devices_per_node;
+                e
+            }));
+        }
+        all.sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
+        all
+    }
+
+    /// Discard every member pool's trace.
+    pub fn clear_trace(&self) {
+        for p in &self.pools {
+            p.clear_trace();
+        }
+    }
+
+    /// Arm a deterministic [`FaultPlan`] across the shard: a
+    /// `kill_worker_at` global index is translated to the owning pool's
+    /// local index (other pools get no kill); `kill_task` arms everywhere
+    /// (a task id dispatches on exactly one pool, and the retry of a caught
+    /// panic redispatches to the same still-alive worker, so the one-shot
+    /// latch fires once); `fail_nth_dispatch` counts per member pool.
+    pub fn arm_faults(&self, plan: FaultPlan) {
+        for (node, pool) in self.pools.iter().enumerate() {
+            let mut local = plan.clone();
+            local.kill_worker_at = match plan.kill_worker_at {
+                Some((w, nth)) if w / self.devices_per_node == node => {
+                    Some((w % self.devices_per_node, nth))
+                }
+                _ => None,
+            };
+            pool.arm_faults(local);
+        }
+    }
+
+    /// Traffic counters of the inter-node transport.
+    pub fn transport_stats(&self) -> TransportStats {
+        self.transport.stats()
+    }
+
+    /// Submit a value-returning job to global `worker`'s node pool.
+    pub fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()> {
+        let (node, local) = self.split(worker);
+        self.pools
+            .get(node)
+            .ok_or_else(|| anyhow!("worker {worker} out of range ({} workers)", self.n_workers()))?
+            .submit_job(local, label, id, tx, job)
+    }
+
+    /// Carry one serialized message across the transport: enqueue on
+    /// `src_node`'s NIC, deliver from `dst_node`'s inbox.
+    pub fn ship(&self, src_node: usize, dst_node: usize, payload: Vec<u8>) -> Result<Vec<u8>> {
+        self.transport.send(src_node, dst_node, payload)?;
+        self.transport.recv(dst_node)
+    }
+}
+
+impl<F: SolverFactory> WorkerPool<F> for NodePools<F> {
+    fn n_workers(&self) -> usize {
+        NodePools::n_workers(self)
+    }
+
+    fn worker_alive(&self, worker: usize) -> bool {
+        NodePools::worker_alive(self, worker)
+    }
+
+    fn now(&self) -> f64 {
+        NodePools::now(self)
+    }
+
+    fn node_of(&self, worker: usize) -> usize {
+        NodePools::node_of(self, worker)
+    }
+
+    fn n_nodes(&self) -> usize {
+        NodePools::n_nodes(self)
+    }
+
+    fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()> {
+        NodePools::submit_job(self, worker, label, id, tx, job)
+    }
+
+    fn ship(&self, src_node: usize, dst_node: usize, payload: Vec<u8>) -> Result<Vec<u8>> {
+        NodePools::ship(self, src_node, dst_node, payload)
+    }
+}
+
+/// The runtime's execution substrate: either the legacy shared pool or the
+/// sharded per-node pools (the CLI `--transport` switch). Exposes the full
+/// pool admin surface by delegation so driver/serving call sites are
+/// substrate-agnostic.
+pub enum RuntimePool<F: SolverFactory> {
+    /// One shared [`StreamPool`], one address space.
+    Shared(StreamPool<F>),
+    /// One pool per modeled node behind a [`Transport`].
+    Sharded(NodePools<F>),
+}
+
+impl<F: SolverFactory> RuntimePool<F> {
+    /// Number of workers (devices).
+    pub fn n_workers(&self) -> usize {
+        match self {
+            RuntimePool::Shared(p) => p.n_workers(),
+            RuntimePool::Sharded(p) => p.n_workers(),
+        }
+    }
+
+    /// Liveness of global `worker`.
+    pub fn worker_alive(&self, worker: usize) -> bool {
+        match self {
+            RuntimePool::Shared(p) => p.worker_alive(worker),
+            RuntimePool::Sharded(p) => p.worker_alive(worker),
+        }
+    }
+
+    /// Seconds since pool creation.
+    pub fn now(&self) -> f64 {
+        match self {
+            RuntimePool::Shared(p) => p.now(),
+            RuntimePool::Sharded(p) => p.now(),
+        }
+    }
+
+    /// The modeled node owning `worker` (always 0 when shared).
+    pub fn node_of(&self, worker: usize) -> usize {
+        match self {
+            RuntimePool::Shared(_) => 0,
+            RuntimePool::Sharded(p) => p.node_of(worker),
+        }
+    }
+
+    /// Number of modeled nodes (1 when shared).
+    pub fn n_nodes(&self) -> usize {
+        match self {
+            RuntimePool::Shared(_) => 1,
+            RuntimePool::Sharded(p) => p.n_nodes(),
+        }
+    }
+
+    /// Arm a deterministic [`FaultPlan`] (see [`NodePools::arm_faults`] for
+    /// the sharded translation rules).
+    pub fn arm_faults(&self, plan: FaultPlan) {
+        match self {
+            RuntimePool::Shared(p) => p.arm_faults(plan),
+            RuntimePool::Sharded(p) => p.arm_faults(plan),
+        }
+    }
+
+    /// Enable or disable [`TraceEvent`] recording.
+    pub fn set_trace_enabled(&self, on: bool) {
+        match self {
+            RuntimePool::Shared(p) => p.set_trace_enabled(on),
+            RuntimePool::Sharded(p) => p.set_trace_enabled(on),
+        }
+    }
+
+    /// Snapshot of the trace so far (global worker indices).
+    pub fn trace(&self) -> Vec<TraceEvent> {
+        match self {
+            RuntimePool::Shared(p) => p.trace(),
+            RuntimePool::Sharded(p) => p.trace(),
+        }
+    }
+
+    /// Discard the trace recorded so far.
+    pub fn clear_trace(&self) {
+        match self {
+            RuntimePool::Shared(p) => p.clear_trace(),
+            RuntimePool::Sharded(p) => p.clear_trace(),
+        }
+    }
+
+    /// Inter-node traffic counters (`None` for the shared substrate, which
+    /// has no transport).
+    pub fn transport_stats(&self) -> Option<TransportStats> {
+        match self {
+            RuntimePool::Shared(_) => None,
+            RuntimePool::Sharded(p) => Some(p.transport_stats()),
+        }
+    }
+
+    /// Submit a value-returning job to global `worker`.
+    pub fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()> {
+        match self {
+            RuntimePool::Shared(p) => p.submit_job(worker, label, id, tx, job),
+            RuntimePool::Sharded(p) => NodePools::submit_job(p, worker, label, id, tx, job),
+        }
+    }
+
+    /// Carry one serialized inter-node message (loopback when shared).
+    pub fn ship(&self, src_node: usize, dst_node: usize, payload: Vec<u8>) -> Result<Vec<u8>> {
+        match self {
+            RuntimePool::Shared(_) => Ok(payload),
+            RuntimePool::Sharded(p) => NodePools::ship(p, src_node, dst_node, payload),
+        }
+    }
+}
+
+impl<F: SolverFactory> WorkerPool<F> for RuntimePool<F> {
+    fn n_workers(&self) -> usize {
+        RuntimePool::n_workers(self)
+    }
+
+    fn worker_alive(&self, worker: usize) -> bool {
+        RuntimePool::worker_alive(self, worker)
+    }
+
+    fn now(&self) -> f64 {
+        RuntimePool::now(self)
+    }
+
+    fn node_of(&self, worker: usize) -> usize {
+        RuntimePool::node_of(self, worker)
+    }
+
+    fn n_nodes(&self) -> usize {
+        RuntimePool::n_nodes(self)
+    }
+
+    fn submit_job<T: Send + 'static>(
+        &self,
+        worker: usize,
+        label: &'static str,
+        id: usize,
+        tx: Sender<JobDone<T>>,
+        job: impl FnOnce(&F::Solver) -> Result<T> + Send + 'static,
+    ) -> Result<()> {
+        RuntimePool::submit_job(self, worker, label, id, tx, job)
+    }
+
+    fn ship(&self, src_node: usize, dst_node: usize, payload: Vec<u8>) -> Result<Vec<u8>> {
+        RuntimePool::ship(self, src_node, dst_node, payload)
     }
 }
 
@@ -459,6 +883,104 @@ mod tests {
         // one-shot: the same id re-dispatched runs clean (the retry path)
         pool.submit_job(0, "job", 5, tx, move |_s: &HostSolver| Ok(1usize)).unwrap();
         assert_eq!(*rx.iter().next().unwrap().result.as_ref().unwrap(), 1);
+    }
+
+    fn node_pools(n_nodes: usize, dpn: usize) -> NodePools<impl SolverFactory<Solver = HostSolver>> {
+        NodePools::new(
+            n_nodes,
+            dpn,
+            host_factory(),
+            Box::new(crate::coordinator::transport::InProc::new(n_nodes)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn node_pools_route_global_workers_to_member_pools() {
+        let pools = node_pools(2, 2);
+        assert_eq!(pools.n_workers(), 4);
+        assert_eq!(pools.n_nodes(), 2);
+        assert_eq!((pools.node_of(0), pools.node_of(1)), (0, 0));
+        assert_eq!((pools.node_of(2), pools.node_of(3)), (1, 1));
+        let (tx, rx) = channel::<JobDone<usize>>();
+        for w in 0..4 {
+            pools
+                .submit_job(w, "probe", w, tx.clone(), move |s: &HostSolver| {
+                    let u = Tensor::zeros(&[1, 2, 6, 6]);
+                    Ok(s.step(0, 0.1, &u)?.len() + w)
+                })
+                .unwrap();
+        }
+        let mut got: Vec<usize> = rx.iter().take(4).map(|d| *d.result.as_ref().unwrap()).collect();
+        got.sort();
+        assert_eq!(got, vec![72, 73, 74, 75]);
+        assert!(pools.submit_job(4, "oob", 9, tx, |_s| Ok(0usize)).is_err());
+    }
+
+    #[test]
+    fn node_pools_trace_uses_global_worker_indices() {
+        let pools = node_pools(2, 2);
+        let (tx, rx) = channel::<JobDone<usize>>();
+        for w in 0..4 {
+            pools.submit_job(w, "traced", w, tx.clone(), move |_s| Ok(w)).unwrap();
+        }
+        let _: Vec<_> = rx.iter().take(4).collect();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while pools.trace().len() < 4 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        let mut workers: Vec<usize> = pools.trace().iter().map(|e| e.worker).collect();
+        workers.sort();
+        assert_eq!(workers, vec![0, 1, 2, 3], "trace must report GLOBAL worker ids");
+        // shared epoch: the merged trace is start-ordered
+        let tr = pools.trace();
+        assert!(tr.windows(2).all(|w| w[0].t_start <= w[1].t_start));
+        pools.clear_trace();
+        assert!(pools.trace().is_empty());
+    }
+
+    #[test]
+    fn node_pools_kill_worker_translates_to_owning_pool() {
+        let pools = node_pools(2, 2);
+        // global worker 2 = node 1, local 0
+        pools.arm_faults(crate::util::faultpoint::FaultPlan {
+            kill_worker_at: Some((2, 1)),
+            ..Default::default()
+        });
+        let (tx, _rx) = channel::<JobDone<usize>>();
+        pools.submit_job(2, "dropped", 0, tx, |_s| Ok(0usize)).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while pools.worker_alive(2) && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert!(!pools.worker_alive(2), "global worker 2 must die");
+        for w in [0usize, 1, 3] {
+            assert!(pools.worker_alive(w), "worker {w} must survive");
+        }
+        assert!(!pools.worker_alive(9), "out of range reads as dead");
+    }
+
+    #[test]
+    fn node_pools_ship_crosses_the_transport() {
+        let pools = node_pools(2, 1);
+        let back = pools.ship(0, 1, vec![1, 2, 3]).unwrap();
+        assert_eq!(back, vec![1, 2, 3]);
+        let st = pools.transport_stats();
+        assert_eq!((st.messages, st.bytes, st.loopback), (1, 3, 0));
+    }
+
+    #[test]
+    fn runtime_pool_delegates_both_substrates() {
+        let shared: RuntimePool<_> = RuntimePool::Shared(StreamPool::new(2, host_factory()).unwrap());
+        assert_eq!((shared.n_workers(), shared.n_nodes()), (2, 1));
+        assert_eq!(shared.node_of(1), 0);
+        assert!(shared.transport_stats().is_none());
+        assert_eq!(shared.ship(0, 0, vec![7]).unwrap(), vec![7]);
+        let sharded: RuntimePool<_> = RuntimePool::Sharded(node_pools(2, 1));
+        assert_eq!((sharded.n_workers(), sharded.n_nodes()), (2, 2));
+        assert_eq!(sharded.node_of(1), 1);
+        assert_eq!(sharded.ship(1, 0, vec![9]).unwrap(), vec![9]);
+        assert_eq!(sharded.transport_stats().unwrap().messages, 1);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! `cargo bench`-free perf snapshots: the `mgrit bench` subcommand calls
 //! these to emit the machine-readable `BENCH_hotpath.json` /
 //! `BENCH_fig6bc.json` / `BENCH_placement.json` / `BENCH_pipeline.json` /
-//! `BENCH_topology.json` / `BENCH_recovery.json` perf-trajectory records
+//! `BENCH_topology.json` / `BENCH_recovery.json` / `BENCH_transport.json`
+//! perf-trajectory records
 //! (median ns + iteration count per benchmark, tagged with the git
 //! revision) into a chosen directory — the repo root in CI, so the perf
 //! trajectory stays diffable across PRs without a bench runner.
@@ -365,6 +366,85 @@ pub fn emit_recovery(out_dir: &Path) -> Result<PathBuf> {
     Ok(out_dir.join("BENCH_recovery.json"))
 }
 
+/// Emit `BENCH_transport.json` into `out_dir`: the sharded-runtime
+/// dispatch/contention suite. The same M = 4 multi-instance training step
+/// runs on the shared single pool and on the 2-node sharded `NodePools`
+/// substrate (per-pool ready queues, cross-node gradients serialized through
+/// the in-process transport), so the two medians price exactly the
+/// contention and serialization the sharding moves; a codec row tracks the
+/// wire round-trip itself. The losses of the two substrates are asserted
+/// bit-identical before anything is recorded.
+pub fn emit_transport(out_dir: &Path) -> Result<PathBuf> {
+    use crate::coordinator::transport::{decode_tensor, encode_tensor};
+    use crate::coordinator::TransportMode;
+    use crate::util::json;
+
+    let mut suite = Suite::new_quick("transport");
+    suite.set_record_dir(out_dir);
+
+    let spec = Arc::new(NetSpec::micro());
+    let params = Arc::new(NetParams::init(&spec, 17)?);
+    let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2)?;
+    let (sp, pp) = (spec.clone(), params.clone());
+    let factory = move |_w: usize| HostSolver::new(sp.clone(), pp.clone());
+    let shared =
+        ParallelMgrit::new_grouped(factory.clone(), spec.clone(), hier.clone(), 2, 2, 4)?;
+    let mut sharded = ParallelMgrit::new_grouped(factory, spec.clone(), hier, 2, 2, 4)?;
+    sharded.set_transport(TransportMode::InProc)?;
+
+    let mut rng = Rng::new(18);
+    let o = &spec.opening;
+    let y = Tensor::randn(&[4, o.in_channels, o.in_h, o.in_w], 0.8, &mut rng);
+    let labels = [0i32, 1, 2, 3];
+    let topts = MgritOptions::early_stopping(2);
+
+    // parity gate before the clocks start: both substrates land on the
+    // bit-identical loss, and the sharded run really shipped bytes
+    let a = shared.train_step_micro(&y, &labels, &topts, 0.05, 4)?;
+    let e = sharded.train_step_micro(&y, &labels, &topts, 0.05, 4)?;
+    anyhow::ensure!(
+        a.loss == e.loss,
+        "sharded loss {} != shared loss {}",
+        e.loss,
+        a.loss
+    );
+    anyhow::ensure!(e.metrics.transport_msgs > 0, "sharded run shipped nothing");
+
+    suite.bench("train_step_micro4_shared_pool_2x2dev", || {
+        shared.pool().clear_trace();
+        black_box(shared.train_step_micro(&y, &labels, &topts, 0.05, 4).unwrap());
+    });
+    suite.bench("train_step_micro4_sharded_inproc_2x2dev", || {
+        sharded.pool().clear_trace();
+        black_box(sharded.train_step_micro(&y, &labels, &topts, 0.05, 4).unwrap());
+    });
+
+    let wire_t = Tensor::randn(&[4, 8, 14, 14], 0.7, &mut rng);
+    suite.bench("transport_codec_roundtrip_4x8x14x14", || {
+        black_box(decode_tensor(&encode_tensor(&wire_t)).unwrap());
+    });
+
+    suite.table(
+        "transport_rows",
+        vec![
+            json::obj(vec![
+                ("substrate", json::s("shared")),
+                ("transport_msgs", json::num(a.metrics.transport_msgs as f64)),
+                ("transport_bytes", json::num(a.metrics.transport_bytes as f64)),
+                ("loss", json::num(a.loss)),
+            ]),
+            json::obj(vec![
+                ("substrate", json::s("sharded_inproc_2node")),
+                ("transport_msgs", json::num(e.metrics.transport_msgs as f64)),
+                ("transport_bytes", json::num(e.metrics.transport_bytes as f64)),
+                ("loss", json::num(e.loss)),
+            ]),
+        ],
+    );
+    suite.finish();
+    Ok(out_dir.join("BENCH_transport.json"))
+}
+
 /// How much a median must grow over the previous record before the delta
 /// step flags it (10% — below that, quick-iteration noise dominates).
 pub const BENCH_REGRESSION_THRESHOLD: f64 = 0.10;
@@ -606,6 +686,17 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(text.trim()).unwrap();
         assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "hotpath");
+        assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn emit_transport_writes_record() {
+        let dir = std::path::Path::new("target/perf-transport-selftest");
+        let path = emit_transport(dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "transport");
         assert!(!j.get("benches").unwrap().as_arr().unwrap().is_empty());
         let _ = std::fs::remove_dir_all(dir);
     }

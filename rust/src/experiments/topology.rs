@@ -23,8 +23,11 @@ use crate::Result;
 
 use super::Table;
 
-/// The node counts the full sweep covers.
-pub const NODE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+/// The node counts the full sweep covers. The 16/32/64 tail is where the
+/// collective plans separate hardest: the flat tree's cross-node traffic is
+/// set by the instance round-robin while two-phase pays exactly one
+/// boundary crossing per non-root node per parameter slot.
+pub const NODE_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
 
 /// Simulated collective comparison: one row per (node count, collective).
 ///
@@ -153,6 +156,44 @@ mod tests {
         for r in &t.rows {
             let u = r[u_c].as_f64().unwrap();
             assert!(u > 0.0 && u <= 1.0 + 1e-12, "utilization {u} out of range");
+        }
+    }
+
+    #[test]
+    fn two_phase_cross_node_bytes_scale_linearly_past_eight_nodes() {
+        // the 16/32/64-node extension's acceptance property: under the
+        // hierarchical two-phase plan each non-root node crosses the fabric
+        // exactly once per parameter slot, so cross-node bytes grow as
+        // (G − 1) — cross(G)/cross(2) == G − 1 — all the way up the ladder,
+        // while the flat tree keeps paying strictly more at every size
+        let t = sweep(32, 2, &[2, 4, 8, 16]).unwrap();
+        let nodes_c = col(&t, "nodes");
+        let coll_c = col(&t, "collective");
+        let mb_c = col(&t, "cross_node_mb");
+        let cross = |nodes: f64, name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| {
+                    r[nodes_c].as_f64().unwrap() == nodes
+                        && r[coll_c].as_str().unwrap() == name
+                })
+                .unwrap()[mb_c]
+                .as_f64()
+                .unwrap()
+        };
+        let base = cross(2.0, "two-phase");
+        assert!(base > 0.0, "two-phase must cross at 2 nodes");
+        for nodes in [4.0, 8.0, 16.0] {
+            let ratio = cross(nodes, "two-phase") / base;
+            let expect = nodes - 1.0;
+            assert!(
+                (ratio - expect).abs() < 1e-6,
+                "two-phase cross bytes at {nodes} nodes: ratio {ratio}, expected {expect}"
+            );
+            assert!(
+                cross(nodes, "two-phase") < cross(nodes, "tree"),
+                "two-phase must stay under the flat tree at {nodes} nodes"
+            );
         }
     }
 }

@@ -6,7 +6,7 @@
 //!   serve       continuous-batching inference serving through the live multi-instance runtime
 //!   experiment  regenerate a paper figure: fig1|fig4|fig5|fig6a|fig6b|fig6c|fig7|hybrid|serve|placement|pipeline|topology|ablations
 //!   sim         one simulated MG/PM run at a given GPU count
-//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json / BENCH_topology.json / BENCH_recovery.json
+//!   bench       quick perf snapshot → BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json / BENCH_pipeline.json / BENCH_topology.json / BENCH_recovery.json / BENCH_transport.json
 //!   artifacts   check the AOT artifact manifest against the rust presets
 //!   help        this text
 
@@ -15,7 +15,7 @@ use std::sync::Arc;
 use anyhow::bail;
 
 use resnet_mgrit::config::RunConfig;
-use resnet_mgrit::coordinator::{ParallelMgrit, PlacementKind};
+use resnet_mgrit::coordinator::{ParallelMgrit, PlacementKind, TransportMode};
 use resnet_mgrit::data::mnist;
 use resnet_mgrit::experiments as exp;
 use resnet_mgrit::mgrit::hierarchy::Hierarchy;
@@ -39,7 +39,7 @@ USAGE: mgrit <subcommand> [options]
   train       --preset P --steps N --batch B --lr R --cycles C [--serial] [--backend host|pjrt]
               [--parallel N_DEVICES] [--granularity per_step|per_block] [--micro-batches M]
               [--pipeline-steps K] [--staleness S] [--placement min-id|heft|lookahead]
-              [--nodes G] [--collective tree|ring|two-phase]
+              [--nodes G] [--collective tree|ring|two-phase] [--transport shared|inproc]
               [--checkpoint-every N] [--checkpoint-path PATH] [--resume PATH]
                 --parallel routes every step through the whole-training-step
                 task graph (ParallelMgrit::train_step, host backend) and
@@ -65,6 +65,11 @@ USAGE: mgrit <subcommand> [options]
                 cross the inter-node fabric once — see `experiment
                 topology`); every collective is bit-identical to the
                 serial reference executing the same plan;
+                --transport inproc shards the live runtime into one worker
+                pool per node behind the in-process transport: every
+                cross-node transfer is serialized through per-NIC send
+                queues instead of an Arc handoff (bit-identical outputs;
+                default shared = the legacy single pool);
                 --checkpoint-every N writes a step-boundary TrainCheckpoint
                 to --checkpoint-path (default mgrit-checkpoint.json) every N
                 completed steps (the pipelined loop checkpoints at window
@@ -75,6 +80,7 @@ USAGE: mgrit <subcommand> [options]
               [--cycles C] [--inflight W] [--relax F|FC|FCF] [--granularity per_step|per_block]
               [--policy fifo|edf|shape-batch] [--max-queue Q] [--max-batch B]
               [--batch-window-ms W] [--seed S] [--placement min-id|heft|lookahead]
+              [--nodes G] [--transport shared|inproc]
               synthetic-load driver: N requests stream through the persistent
               multi-instance runtime as forward-only graph instances
               (continuous batching, window W; R = 0 [default] = all requests
@@ -84,7 +90,12 @@ USAGE: mgrit <subcommand> [options]
               deadline first, sheds hopeless requests), shape-batch (fuses
               up to B same-shape requests arriving within W ms into one
               batched instance); --max-queue bounds the admission queue
-              (overflow is shed). Prints per-request latency, p50/p95/p99 +
+              (overflow is shed); --nodes G serves on the sharded runtime
+              (one worker pool per node, layer partition spanning nodes,
+              cross-node transfers through the in-process transport; G must
+              divide the worker count) and --transport picks the substrate
+              explicitly (--nodes > 1 implies inproc).
+              Prints per-request latency, p50/p95/p99 +
               throughput + sheds, verifies every served output bit-for-bit
               against the serial per-request MGRIT reference, and asserts
               >= 2 instances overlapped in flight on the live ExecEvent
@@ -105,7 +116,7 @@ USAGE: mgrit <subcommand> [options]
   bench       [--out DIR] [--full]   quick perf snapshot; writes
               BENCH_hotpath.json + BENCH_fig6bc.json + BENCH_placement.json
               + BENCH_pipeline.json + BENCH_topology.json
-              + BENCH_recovery.json into DIR (default .)
+              + BENCH_recovery.json + BENCH_transport.json into DIR (default .)
   bench-delta --prev DIR [--cur DIR]   diff BENCH_*.json medians against a
               previous run's records; prints GitHub ::warning:: annotations
               for suites regressing > 10% (advisory, exit 0)
@@ -226,6 +237,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let placement = PlacementKind::parse(args.get_or("placement", "heft"))?;
     let nodes = args.usize_or("nodes", 1)?;
     let collective = Collective::parse(args.get_or("collective", "tree"))?;
+    let transport = TransportMode::parse(args.get_or("transport", "shared"))?;
     let method = if args.flag("serial") {
         train::Method::Serial
     } else {
@@ -276,6 +288,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if (nodes > 1 || collective != Collective::Tree) && parallel == 0 {
         bail!("--nodes / --collective require --parallel (the multi-instance graph runtime)");
     }
+    if transport != TransportMode::Shared && parallel == 0 {
+        bail!("--transport requires --parallel (the multi-instance graph runtime)");
+    }
     if parallel > 0 {
         // the layer-parallel path: every step is one whole-training-step
         // task graph over `parallel` worker streams (host numerics); with
@@ -296,11 +311,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "pipelined training: {parallel} devices x {nodes} nodes, \
                  K={pipeline_steps} steps/window, staleness {staleness}, \
                  granularity {granularity:?}, micro-batches {micro_batches}, \
-                 placement {}, collective {}",
+                 placement {}, collective {}, transport {}",
                 placement.name(),
-                collective.name()
+                collective.name(),
+                transport.name()
             );
-            let logs = train::train_parallel_pipelined_grouped_ckpt(
+            let logs = train::train_parallel_pipelined_sharded(
                 &spec,
                 &mut params,
                 &data,
@@ -314,6 +330,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 nodes,
                 collective,
                 &ckpt,
+                transport,
             )?;
             // |g| is harvested from each window's ReduceGrad roots — the
             // same reduced-gradient norm the per-step path reports
@@ -328,13 +345,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!(
             "parallel training: {parallel} devices x {nodes} nodes, \
              granularity {granularity:?}, micro-batches {micro_batches}, \
-             placement {}, collective {}",
+             placement {}, collective {}, transport {}",
             placement.name(),
-            collective.name()
+            collective.name(),
+            transport.name()
         );
-        let logs = train::train_parallel_grouped_ckpt(
+        let logs = train::train_parallel_sharded(
             &spec, &mut params, &data, &tc, parallel, granularity, micro_batches, placement,
-            nodes, collective, &ckpt,
+            nodes, collective, &ckpt, transport,
         )?;
         for l in logs.iter().step_by((cfg.steps / 20).max(1)) {
             println!("  step {:>4}  loss {:.4}  |g| {:.3}", l.step, l.loss, l.grad_norm);
@@ -413,6 +431,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         q => Some(q),
     };
     anyhow::ensure!(n_requests >= 1, "--requests must be at least 1");
+    let nodes = args.usize_or("nodes", 1)?;
+    anyhow::ensure!(nodes >= 1, "--nodes must be at least 1");
+    // --nodes > 1 implies the sharded substrate; --transport can also force
+    // it at 1 node (loopback elision only) or be stated explicitly
+    let transport = TransportMode::parse(
+        args.get_or("transport", if nodes > 1 { "inproc" } else { "shared" }),
+    )?;
+    if nodes > 1 && transport == TransportMode::Shared {
+        bail!("--nodes {nodes} requires --transport inproc (the sharded runtime)");
+    }
 
     let spec = Arc::new(NetSpec::by_name(&cfg.preset)?);
     let params = Arc::new(NetParams::init(&spec, cfg.seed)?);
@@ -445,12 +473,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue,
         placement,
     };
-    let mut rt = ServingRuntime::new(factory, spec.clone(), hier.clone(), cfg.devices, serve_cfg)?;
+    let mut rt = match transport {
+        TransportMode::Shared => {
+            ServingRuntime::new(factory, spec.clone(), hier.clone(), cfg.devices, serve_cfg)?
+        }
+        TransportMode::InProc => ServingRuntime::new_sharded(
+            factory,
+            spec.clone(),
+            hier.clone(),
+            cfg.devices,
+            nodes,
+            serve_cfg,
+        )?,
+    };
     println!(
-        "serving preset={} devices={} cycles={} inflight={inflight} policy={} placement={} \
-         requests={n_requests} arrival_rate={rate}/s deadline={} max_queue={} seed={}",
+        "serving preset={} devices={} nodes={nodes} transport={} cycles={} inflight={inflight} \
+         policy={} placement={} requests={n_requests} arrival_rate={rate}/s deadline={} \
+         max_queue={} seed={}",
         spec.name,
         rt.partition().n_devices(),
+        transport.name(),
         cfg.cycles,
         policy.name(),
         placement.name(),
@@ -509,6 +551,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.records.len(),
         report.sheds.len()
     );
+    if let Some(stats) = rt.pool().transport_stats() {
+        println!(
+            "transport: {} cross-node message(s), {} wire bytes, {} loopback elision(s)",
+            stats.messages, stats.bytes, stats.loopback
+        );
+    }
 
     // concurrency gate: the continuous-batching property on the live
     // ExecEvent trace. It is a HARD assertion for a FIFO burst load (rate 0
@@ -655,8 +703,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 /// Quick perf snapshot without `cargo bench`: emits the machine-readable
 /// BENCH_hotpath.json / BENCH_fig6bc.json / BENCH_placement.json /
-/// BENCH_pipeline.json / BENCH_topology.json perf-trajectory records into
-/// `--out` (default: the current directory — the repo root in CI).
+/// BENCH_pipeline.json / BENCH_topology.json / BENCH_recovery.json /
+/// BENCH_transport.json perf-trajectory records into `--out` (default: the
+/// current directory — the repo root in CI).
 fn cmd_bench(args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "."));
     if args.flag("full") {
@@ -668,14 +717,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let p4 = exp::perf::emit_pipeline(&out)?;
     let p5 = exp::perf::emit_topology(&out)?;
     let p6 = exp::perf::emit_recovery(&out)?;
+    let p7 = exp::perf::emit_transport(&out)?;
     println!(
-        "perf records: {} , {} , {} , {} , {} , {}",
+        "perf records: {} , {} , {} , {} , {} , {} , {}",
         p1.display(),
         p2.display(),
         p3.display(),
         p4.display(),
         p5.display(),
-        p6.display()
+        p6.display(),
+        p7.display()
     );
     Ok(())
 }

@@ -1,8 +1,10 @@
 //! The live serving runtime: a policy-driven continuous-batching scheduler
 //! over the multi-instance executor.
 //!
-//! A [`ServingRuntime`] owns a persistent [`StreamPool`] (the workers live
-//! across requests — nothing is rebuilt per request), an admission queue of
+//! A [`ServingRuntime`] owns a persistent [`RuntimePool`] (the workers live
+//! across requests — nothing is rebuilt per request; one shared
+//! [`StreamPool`], or [`NodePools`] sharded per node via
+//! [`ServingRuntime::new_sharded`]), an admission queue of
 //! [`InferRequest`]s, and a pluggable
 //! [`SchedulerPolicy`](super::policy::SchedulerPolicy)
 //! (`ServeConfig::policy`). [`ServingRuntime::run`] drives the scheduler
@@ -43,7 +45,8 @@ use anyhow::{anyhow, bail};
 use crate::coordinator::driver;
 use crate::coordinator::executor::ExecSession;
 use crate::coordinator::placement::{self, PlacementKind};
-use crate::coordinator::{ExecEvent, Partition, StreamPool};
+use crate::coordinator::transport::{InProc, TransportMode};
+use crate::coordinator::{ExecEvent, NodePools, Partition, RuntimePool, StreamPool};
 use crate::perfmodel::ClusterModel;
 use crate::mgrit::fas::{MgritOptions, RelaxKind};
 use crate::mgrit::hierarchy::Hierarchy;
@@ -175,7 +178,7 @@ pub struct ServingRuntime<F: SolverFactory>
 where
     F::Solver: NetExecutor,
 {
-    pool: StreamPool<F>,
+    pool: RuntimePool<F>,
     /// Scheduler-side executor for the host-side stages (opening, head).
     exec: F::Solver,
     spec: Arc<crate::model::NetSpec>,
@@ -206,16 +209,67 @@ where
         devices: usize,
         cfg: ServeConfig,
     ) -> Result<ServingRuntime<F>> {
+        Self::build(factory, spec, hier, devices, 1, TransportMode::Shared, cfg)
+    }
+
+    /// As [`ServingRuntime::new`], but sharded across `nodes` modeled
+    /// cluster nodes: the worker set splits into one [`NodePools`] pool per
+    /// node, the layer-block partition spans nodes, and every cross-node
+    /// boundary transfer is serialized through the [`InProc`] transport.
+    /// Outputs stay bit-identical to the shared single-pool runtime (and to
+    /// `serving::serial_reference`). `nodes` must evenly divide the worker
+    /// count or construction fails with a clear error — the worker count is
+    /// `devices` clamped to the layer-block count, exactly as in `new`.
+    pub fn new_sharded(
+        factory: F,
+        spec: Arc<crate::model::NetSpec>,
+        hier: Hierarchy,
+        devices: usize,
+        nodes: usize,
+        cfg: ServeConfig,
+    ) -> Result<ServingRuntime<F>> {
+        Self::build(factory, spec, hier, devices, nodes, TransportMode::InProc, cfg)
+    }
+
+    fn build(
+        factory: F,
+        spec: Arc<crate::model::NetSpec>,
+        hier: Hierarchy,
+        devices: usize,
+        nodes: usize,
+        mode: TransportMode,
+        cfg: ServeConfig,
+    ) -> Result<ServingRuntime<F>> {
         anyhow::ensure!(cfg.cycles >= 1, "need at least one MG cycle per request");
         anyhow::ensure!(cfg.max_inflight >= 1, "need an in-flight window of at least 1");
         anyhow::ensure!(
             cfg.max_queue.map(|q| q >= 1).unwrap_or(true),
             "a bounded queue needs at least one slot"
         );
+        anyhow::ensure!(nodes >= 1, "need at least one node");
         cfg.policy.build()?; // reject bad policy parameters up front
         let n_blocks = hier.fine().blocks(hier.coarsen).len();
         let partition = Partition::contiguous(n_blocks, devices)?;
-        let pool = StreamPool::new(partition.n_devices(), factory.clone())?;
+        let n_dev = partition.n_devices();
+        let pool = match mode {
+            TransportMode::Shared => {
+                RuntimePool::Shared(StreamPool::new(n_dev, factory.clone())?)
+            }
+            TransportMode::InProc => {
+                anyhow::ensure!(
+                    n_dev % nodes == 0,
+                    "--nodes {nodes} does not evenly divide the {n_dev} serving \
+                     worker(s) (the device count clamps to the layer-block count); \
+                     pick a node count that divides {n_dev}"
+                );
+                RuntimePool::Sharded(NodePools::new(
+                    nodes,
+                    n_dev / nodes,
+                    factory.clone(),
+                    Box::new(InProc::new(nodes)),
+                )?)
+            }
+        };
         // the session's instance-tagged ExecEvents are the serving record;
         // skip the pool's own per-job trace (mutex append per completion)
         pool.set_trace_enabled(false);
@@ -229,8 +283,16 @@ where
     }
 
     /// The persistent worker pool (its clock is the serving clock).
-    pub fn pool(&self) -> &StreamPool<F> {
+    pub fn pool(&self) -> &RuntimePool<F> {
         &self.pool
+    }
+
+    /// Which execution substrate this runtime serves on.
+    pub fn transport(&self) -> TransportMode {
+        match &self.pool {
+            RuntimePool::Shared(_) => TransportMode::Shared,
+            RuntimePool::Sharded(_) => TransportMode::InProc,
+        }
     }
 
     /// Requests queued but not yet admitted.
@@ -340,7 +402,7 @@ where
     F::Solver: NetExecutor,
 {
     rt: &'a ServingRuntime<F>,
-    session: ExecSession<'a, F>,
+    session: ExecSession<'a, F, RuntimePool<F>>,
     /// Submitted-but-not-arrived requests (taken from the runtime's queue).
     queue: VecDeque<InferRequest>,
     active: BTreeMap<usize, Pending>,
@@ -732,6 +794,66 @@ mod tests {
             assert_eq!(r.output.dims()[0], 1);
             assert_eq!(r.logits.dims()[0], 1);
         }
+    }
+
+    fn runtime_sharded(
+        cfg: ServeConfig,
+        devices: usize,
+        nodes: usize,
+    ) -> Result<ServingRuntime<impl SolverFactory<Solver = HostSolver>>> {
+        let spec = Arc::new(NetSpec::micro());
+        let params = Arc::new(NetParams::init(&spec, 40).unwrap());
+        let spec2 = spec.clone();
+        let factory = move |_w: usize| HostSolver::new(spec2.clone(), params.clone());
+        let hier = Hierarchy::two_level(spec.n_res(), spec.h(), 2).unwrap();
+        ServingRuntime::new_sharded(factory, spec, hier, devices, nodes, cfg)
+    }
+
+    #[test]
+    fn sharded_serving_is_bit_identical_to_shared() {
+        // tentpole acceptance gate, serving column: a 2-node sharded runtime
+        // (layer partition spanning nodes, boundary transfers serialized
+        // through the InProc transport) serves every request bitwise equal
+        // to the shared single-pool runtime
+        let spec = NetSpec::micro();
+        let mut shared = runtime(3, 2);
+        assert_eq!(shared.transport(), TransportMode::Shared);
+        let mut sharded =
+            runtime_sharded(ServeConfig { max_inflight: 3, ..Default::default() }, 2, 2)
+                .unwrap();
+        assert_eq!(sharded.transport(), TransportMode::InProc);
+        for k in 0..6u64 {
+            shared.submit(request(&spec, k, 0.0));
+            sharded.submit(request(&spec, k, 0.0));
+        }
+        let a = shared.run().unwrap();
+        let e = sharded.run().unwrap();
+        assert_eq!(a.records.len(), 6);
+        assert_eq!(e.records.len(), 6);
+        for k in 0..6u64 {
+            let ra = a.records.iter().find(|r| r.id == k).unwrap();
+            let re = e.records.iter().find(|r| r.id == k).unwrap();
+            assert!(ra.output.data() == re.output.data(), "request {k}: output differs");
+            assert!(ra.logits.data() == re.logits.data(), "request {k}: logits differ");
+            assert_eq!(ra.predicted, re.predicted, "request {k}: class differs");
+        }
+        // real serialized traffic crossed the node boundary on the sharded
+        // runtime; the shared pool has no transport at all
+        let stats = sharded.pool().transport_stats().unwrap();
+        assert!(stats.messages > 0 && stats.bytes > 0, "no cross-node traffic");
+        assert!(shared.pool().transport_stats().is_none());
+    }
+
+    #[test]
+    fn sharded_serving_rejects_non_dividing_node_count() {
+        // the --nodes validation contract: a node count that does not divide
+        // the (block-clamped) worker count is a clear error, not a panic
+        let err = runtime_sharded(ServeConfig::default(), 2, 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("does not evenly divide"),
+            "unhelpful divisibility error: {msg}"
+        );
     }
 
     #[test]

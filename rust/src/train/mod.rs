@@ -41,6 +41,7 @@ use std::sync::Arc;
 
 use anyhow::bail;
 
+use crate::coordinator::transport::TransportMode;
 use crate::coordinator::{PlacementKind, TrainCheckpoint};
 use crate::data::{Dataset, StepSampler};
 use crate::mgrit::taskgraph::PipeSync;
@@ -524,6 +525,43 @@ pub fn train_parallel_grouped_ckpt(
     collective: Collective,
     ckpt: &CheckpointConfig,
 ) -> Result<Vec<StepLog>> {
+    train_parallel_sharded(
+        spec,
+        params,
+        data,
+        cfg,
+        n_devices,
+        granularity,
+        micro_batches,
+        placement,
+        n_groups,
+        collective,
+        ckpt,
+        TransportMode::Shared,
+    )
+}
+
+/// As [`train_parallel_grouped_ckpt`] with the execution substrate exposed:
+/// [`TransportMode::InProc`] runs every step on the sharded
+/// [`crate::coordinator::NodePools`] runtime — one worker pool per device
+/// group, cross-node transfers serialized through the in-process transport —
+/// instead of the shared single pool. Bit-identical either way; only the
+/// substrate (and its contention/transfer costs) moves.
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_sharded(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    n_groups: usize,
+    collective: Collective,
+    ckpt: &CheckpointConfig,
+    transport: TransportMode,
+) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
     }
@@ -571,6 +609,9 @@ pub fn train_parallel_grouped_ckpt(
         drv.set_granularity(granularity);
         drv.set_placement(placement);
         drv.set_collective(collective);
+        if transport != TransportMode::Shared {
+            drv.set_transport(transport)?;
+        }
         let out = drv.train_step_micro(&y, &labels, &opts, cfg.lr, micro_batches)?;
         let grad_norm = out.grads.global_norm();
         *params = out.params;
@@ -689,6 +730,45 @@ pub fn train_parallel_pipelined_grouped_ckpt(
     collective: Collective,
     ckpt: &CheckpointConfig,
 ) -> Result<Vec<StepLog>> {
+    train_parallel_pipelined_sharded(
+        spec,
+        params,
+        data,
+        cfg,
+        n_devices,
+        granularity,
+        micro_batches,
+        placement,
+        k_steps,
+        sync,
+        n_groups,
+        collective,
+        ckpt,
+        TransportMode::Shared,
+    )
+}
+
+/// As [`train_parallel_pipelined_grouped_ckpt`] with the execution substrate
+/// exposed (see [`train_parallel_sharded`]): [`TransportMode::InProc`] runs
+/// every pipelined window on the sharded per-node-pool runtime, bit-identical
+/// to the shared pool at any staleness.
+#[allow(clippy::too_many_arguments)]
+pub fn train_parallel_pipelined_sharded(
+    spec: &Arc<NetSpec>,
+    params: &mut NetParams,
+    data: &Dataset,
+    cfg: &TrainConfig,
+    n_devices: usize,
+    granularity: Granularity,
+    micro_batches: usize,
+    placement: PlacementKind,
+    k_steps: usize,
+    sync: PipeSync,
+    n_groups: usize,
+    collective: Collective,
+    ckpt: &CheckpointConfig,
+    transport: TransportMode,
+) -> Result<Vec<StepLog>> {
     if data.is_empty() {
         bail!("empty dataset");
     }
@@ -743,6 +823,9 @@ pub fn train_parallel_pipelined_grouped_ckpt(
         drv.set_granularity(granularity);
         drv.set_placement(placement);
         drv.set_collective(collective);
+        if transport != TransportMode::Shared {
+            drv.set_transport(transport)?;
+        }
         let out = drv.train_pipeline(&y, &labels, &opts, cfg.lr, micro_batches, k, sync)?;
         *params = out.params;
         for (i, loss) in out.losses.iter().enumerate() {

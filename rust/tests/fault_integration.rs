@@ -19,8 +19,8 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use resnet_mgrit::coordinator::{
-    ExecError, ExecSession, InstanceGroups, MultiExecState, ParallelMgrit, Partition,
-    PlacementKind, SessionSnapshot, StreamPool,
+    ExecError, ExecSession, InProc, InstanceGroups, MultiExecState, NodePools, ParallelMgrit,
+    Partition, PlacementKind, RuntimePool, SessionSnapshot, StreamPool, TransportMode,
 };
 use resnet_mgrit::data::Dataset;
 use resnet_mgrit::mgrit::fas::RelaxKind;
@@ -405,6 +405,17 @@ impl SessionFixture {
         StreamPool::new(self.partition.n_devices(), factory).unwrap()
     }
 
+    /// The same two workers split one per node behind the in-process
+    /// transport, so the partition-boundary comms become real shipped
+    /// messages.
+    fn sharded_pool(
+        &self,
+    ) -> RuntimePool<impl resnet_mgrit::solver::SolverFactory<Solver = HostSolver>> {
+        let (s2, p2) = (self.spec.clone(), self.params.clone());
+        let factory = move |_w: usize| HostSolver::new(s2.clone(), p2.clone());
+        RuntimePool::Sharded(NodePools::new(2, 1, factory, Box::new(InProc::new(2))).unwrap())
+    }
+
     fn graph(&self, micro: usize) -> taskgraph::TaskGraph {
         let groups = InstanceGroups::new(1, self.partition.n_devices()).unwrap();
         taskgraph::mg_train_step_multi(
@@ -517,4 +528,187 @@ fn prop_resume_executes_exactly_the_unretired_tasks() {
         );
         assert!(after.is_disjoint(&frontier), "micro {micro}, cut {cut}: re-execution");
     });
+}
+
+// ---------------------------------------------------------------------------
+// sharded substrate: per-node pools behind the in-process transport
+// ---------------------------------------------------------------------------
+
+/// Driver fixture for the sharded scenarios: 2 instance groups × 2 devices,
+/// so the sharded variant runs two `NodePools` of two workers each with the
+/// gradient reduction crossing the transport.
+fn sharded_driver_fixture() -> (
+    Arc<NetSpec>,
+    Hierarchy,
+    Arc<NetParams>,
+    Tensor,
+    Vec<i32>,
+) {
+    let spec = Arc::new(NetSpec::micro());
+    let hier = Hierarchy::two_level(4, spec.h(), 2).unwrap();
+    let params = Arc::new(NetParams::init(&spec, 90).unwrap());
+    let o = &spec.opening;
+    let mut rng = Rng::new(91);
+    let y = Tensor::randn(&[4, o.in_channels, o.in_h, o.in_w], 0.8, &mut rng);
+    let labels: Vec<i32> = (0..4).map(|i| (i % 10) as i32).collect();
+    (spec, hier, params, y, labels)
+}
+
+fn sharded_driver(
+    spec: &Arc<NetSpec>,
+    hier: &Hierarchy,
+    params: &Arc<NetParams>,
+) -> ParallelMgrit<impl resnet_mgrit::solver::SolverFactory<Solver = HostSolver> + Clone> {
+    let (s2, p2) = (spec.clone(), params.clone());
+    let factory = move |_w: usize| HostSolver::new(s2.clone(), p2.clone());
+    ParallelMgrit::new_grouped(factory, spec.clone(), hier.clone(), 2, 2, 4).unwrap()
+}
+
+#[test]
+fn sharded_worker_death_recovers_bit_identically() {
+    // a worker dying INSIDE one node's pool must re-dispatch onto survivors
+    // and still land bit-identical to the clean shared-substrate run, with
+    // the surviving pools' cross-node traffic flowing throughout
+    let (spec, hier, params, y, labels) = sharded_driver_fixture();
+    let opts = MgritOptions::early_stopping(1);
+    let shared = sharded_driver(&spec, &hier, &params);
+    let want = shared.train_step_micro(&y, &labels, &opts, 0.05, 4).unwrap();
+    assert_eq!(want.metrics.transport_msgs, 0, "shared reference shipped");
+
+    // one death per worker index: both nodes, early and mid-stream receipts
+    for &(worker, msg) in &[(0usize, 1usize), (1, 2), (2, 1), (3, 2)] {
+        let mut drv = sharded_driver(&spec, &hier, &params);
+        drv.set_transport(TransportMode::InProc).unwrap();
+        drv.pool().arm_faults(FaultPlan {
+            kill_worker_at: Some((worker, msg)),
+            ..FaultPlan::none()
+        });
+        let out = drv.train_step_micro(&y, &labels, &opts, 0.05, 4).unwrap_or_else(|e| {
+            panic!("sharded: death of worker {worker} at msg {msg} not survived: {e:#}")
+        });
+        assert!(!drv.pool().worker_alive(worker), "doomed worker still reads alive");
+        assert!(
+            out.metrics.retries >= 1,
+            "worker {worker} died with no re-dispatch recorded"
+        );
+        assert_eq!(
+            out.loss.to_bits(),
+            want.loss.to_bits(),
+            "worker {worker} at msg {msg}: loss differs"
+        );
+        assert_params_bit_eq(
+            &out.params,
+            &want.params,
+            &format!("sharded, worker {worker} died at msg {msg}"),
+        );
+        assert!(
+            out.metrics.transport_msgs > 0,
+            "worker {worker}: recovery run shipped nothing over the transport"
+        );
+    }
+}
+
+#[test]
+fn sharded_session_checkpoint_resume_is_bit_identical() {
+    // mid-graph snapshot + resume on the sharded substrate: the resumed
+    // half re-ships its cross-node comms and the combined run equals the
+    // uninterrupted shared-pool reference bit for bit
+    let fx = SessionFixture::new();
+    let micro = 2;
+
+    let pool = fx.pool();
+    let mut s = ExecSession::new(&pool, &fx.hier);
+    s.admit_prebuilt(fx.graph(micro), fx.state(micro), None).unwrap();
+    s.run_to_end().unwrap();
+    let (st, _) = s.into_state();
+    let want = st.into_training_outputs().unwrap();
+
+    let sharded = fx.sharded_pool();
+    let n = fx.graph(micro).tasks.len();
+    let mut s = ExecSession::new(&sharded, &fx.hier);
+    s.admit_prebuilt(fx.graph(micro), fx.state(micro), None).unwrap();
+    let retired = s.run_to_frontier(n / 3).unwrap();
+    assert!(retired >= n / 3 && retired < n, "frontier {retired} of {n}");
+    let snap = s.checkpoint().unwrap();
+    drop(s);
+    // through the JSON text format, exactly as a real interrupt would
+    let text = snap.to_json().to_string();
+    let snap = SessionSnapshot::from_json(
+        &resnet_mgrit::util::json::Json::parse(&text).unwrap(),
+    )
+    .unwrap();
+
+    let frontier: BTreeSet<usize> = snap.frontier.iter().copied().collect();
+    let mut r =
+        ExecSession::resume(&sharded, &fx.hier, fx.graph(micro), None, &snap, None).unwrap();
+    r.run_to_end().unwrap();
+    let (st, rep) = r.into_state();
+    for e in &rep.events {
+        assert!(!frontier.contains(&e.task), "retired task {} re-executed", e.task);
+    }
+    let got = st.into_training_outputs().unwrap();
+    assert_eq!(got.loss, want.loss, "sharded resumed loss differs from shared reference");
+    for (i, ((gw, gb), (ww, wb))) in got.trunk_grads.iter().zip(&want.trunk_grads).enumerate() {
+        assert!(gw.data() == ww.data() && gb.data() == wb.data(), "grad[{i}] differs");
+    }
+    for (i, ((gw, gb), (ww, wb))) in got.new_trunk.iter().zip(&want.new_trunk).enumerate() {
+        assert!(gw.data() == ww.data() && gb.data() == wb.data(), "trunk[{i}] differs");
+    }
+    // the two workers live on different nodes, so the resumed half must
+    // have shipped real serialized traffic
+    let stats = sharded.transport_stats().expect("sharded pool exposes transport stats");
+    assert!(stats.messages > 0 && stats.bytes > 0, "resume shipped nothing: {stats:?}");
+}
+
+#[test]
+#[ignore = "nightly chaos soak; replay a red night with CHAOS_SEED=<logged value>"]
+fn chaos_soak_random_faults_on_the_sharded_substrate() {
+    // The nightly randomized counterpart to the fixed scenarios above: one
+    // fresh fault plan per iteration, every plan a pure function of
+    // CHAOS_SEED + iteration (the CI job derives CHAOS_SEED from the clock
+    // and logs it). Whatever fires — task panic, silent worker death inside
+    // a pool, injected dispatch failure — the sharded run must finish and
+    // land bit-identical to the clean shared-substrate reference. Failure
+    // messages carry the per-iteration seed, so any red night replays with
+    // `CHAOS_SEED=<value> cargo test --release --test fault_integration \
+    //  chaos_soak -- --ignored`.
+    let base: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let (spec, hier, params, y, labels) = sharded_driver_fixture();
+    let opts = MgritOptions::early_stopping(1);
+    let shared = sharded_driver(&spec, &hier, &params);
+    let want = shared.train_step_micro(&y, &labels, &opts, 0.05, 4).unwrap();
+    // highest graph task id actually dispatched bounds the kill_task range
+    let n_tasks = want.metrics.events.iter().map(|e| e.task).max().unwrap_or(0) + 1;
+
+    for i in 0..32u64 {
+        let seed = base.wrapping_add(i);
+        let plan = FaultPlan::from_seed(seed, 4, n_tasks);
+        // fresh driver per plan: a killed worker stays dead
+        let mut drv = sharded_driver(&spec, &hier, &params);
+        drv.set_transport(TransportMode::InProc).unwrap();
+        drv.pool().arm_faults(plan.clone());
+        let out = drv.train_step_micro(&y, &labels, &opts, 0.05, 4).unwrap_or_else(|e| {
+            panic!("CHAOS_SEED={seed}: plan {plan:?} not absorbed: {e:#}")
+        });
+        assert_eq!(
+            out.loss.to_bits(),
+            want.loss.to_bits(),
+            "CHAOS_SEED={seed}: plan {plan:?}: loss differs"
+        );
+        for (k, (oi, wi)) in out.per_instance.iter().zip(&want.per_instance).enumerate() {
+            assert_eq!(
+                oi.loss.to_bits(),
+                wi.loss.to_bits(),
+                "CHAOS_SEED={seed}: plan {plan:?}: instance {k} loss differs"
+            );
+        }
+        assert_params_bit_eq(
+            &out.params,
+            &want.params,
+            &format!("CHAOS_SEED={seed}, plan {plan:?}"),
+        );
+    }
 }
